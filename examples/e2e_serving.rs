@@ -1,0 +1,132 @@
+//! END-TO-END driver: the full three-layer stack on a realistic mixed
+//! workload.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serving`
+//!
+//! Layer 1 (Pallas bit-serial kernel) and Layer 2 (JAX batch-update
+//! model) were AOT-lowered to `artifacts/*.hlo.txt` at build time; this
+//! binary is pure Rust — Layer 3 loads the artifacts via PJRT and
+//! serves a mixed database+graph workload through the concurrent
+//! update engine, with the phase-accurate behavioural backend running
+//! shadow validation of every result. Reported in EXPERIMENTS.md §E2E.
+
+use std::time::{Duration, Instant};
+
+use fast_sram::apps::CsrGraph;
+use fast_sram::coordinator::{
+    EngineConfig, FastBackend, UpdateEngine, UpdateRequest, XlaBackend,
+};
+use fast_sram::metrics::render_table;
+use fast_sram::util::rng::Rng;
+
+fn main() -> fast_sram::Result<()> {
+    let rows = 1024;
+    let q = 16;
+
+    // --- Layer 3 engine on the Layer-1/2 XLA artifacts -------------------
+    let mut cfg = EngineConfig::new(rows, q);
+    cfg.flush_interval = Duration::from_micros(150);
+    cfg.queue_cap = 16_384;
+    let engine = UpdateEngine::start(cfg.clone(), move || {
+        Ok(Box::new(XlaBackend::new("artifacts", rows, q)?))
+    })?;
+    // Shadow engine on the behavioural model for end-to-end validation.
+    let shadow = UpdateEngine::start(cfg, move || {
+        Ok(Box::new(FastBackend::new(8, 128, q)))
+    })?;
+
+    println!("e2e: XLA-backed engine up ({} rows x {q} bits, backend {})", rows, engine.stats().backend);
+
+    // --- mixed workload ---------------------------------------------------
+    // Phase A: database-style skewed counter deltas.
+    let mut rng = Rng::new(7);
+    let n_db = 60_000;
+    let t0 = Instant::now();
+    for _ in 0..n_db {
+        let row = if rng.chance(0.8) {
+            rng.below(128) as usize
+        } else {
+            rng.below(rows as u64) as usize
+        };
+        let v = 1 + rng.below(999) as u32;
+        let req = if rng.chance(0.25) {
+            UpdateRequest::sub(row, v)
+        } else {
+            UpdateRequest::add(row, v)
+        };
+        engine.submit_blocking(req)?;
+        shadow.submit_blocking(req)?;
+    }
+    let db_wall = t0.elapsed();
+
+    // Phase B: graph feature propagation (messages through the batcher).
+    let graph = CsrGraph::random(1000, 6, 99);
+    let t1 = Instant::now();
+    let mut n_graph = 0u64;
+    for _round in 0..4 {
+        let snap = engine.snapshot()?;
+        for n in 0..graph.nodes() {
+            let m = (snap[n] >> 3) & 0xFFFF;
+            if m == 0 {
+                continue;
+            }
+            for &t in graph.out_neighbors(n) {
+                let req = UpdateRequest::add(t, m);
+                engine.submit_blocking(req)?;
+                shadow.submit_blocking(req)?;
+                n_graph += 1;
+            }
+        }
+        engine.flush()?;
+        shadow.flush()?;
+    }
+    let graph_wall = t1.elapsed();
+
+    // --- validation: XLA path == behavioural path bit-for-bit ------------
+    let got = engine.snapshot()?;
+    let want = shadow.snapshot()?;
+    assert_eq!(got, want, "XLA and behavioural stacks diverged");
+    println!("validation: XLA state == behavioural state over {} rows ✓", rows);
+
+    // --- report -----------------------------------------------------------
+    let s = engine.stats();
+    let total_updates = n_db as u64 + n_graph;
+    let total_wall = db_wall + graph_wall;
+    let rows_txt = vec![
+        ("backend".into(), s.backend.to_string()),
+        ("total updates".into(), format!("{total_updates}")),
+        ("  database phase".into(), format!("{n_db} ({:.1} ms)", db_wall.as_secs_f64() * 1e3)),
+        ("  graph phase".into(), format!("{n_graph} ({:.1} ms)", graph_wall.as_secs_f64() * 1e3)),
+        ("batches".into(), format!("{}", s.batches)),
+        ("rows/batch".into(), format!("{:.1}", s.rows_per_batch)),
+        (
+            "coalescing".into(),
+            format!("{:.1} req per touched row", s.completed as f64 / s.rows_updated.max(1) as f64),
+        ),
+        ("modeled macro time".into(), format!("{:.2} µs", s.modeled_ns / 1000.0)),
+        ("modeled energy".into(), format!("{:.2} nJ", s.modeled_energy_pj / 1000.0)),
+        (
+            "throughput".into(),
+            format!(
+                "{:.2} M updates/s wall",
+                total_updates as f64 / total_wall.as_secs_f64() / 1e6
+            ),
+        ),
+        ("apply p50 / p99".into(), format!("{} / {} ns", s.apply_wall.p50_ns, s.apply_wall.p99_ns)),
+    ];
+    print!("{}", render_table("e2e serving", &rows_txt));
+
+    // Modeled comparison against the row-by-row baseline at equal work:
+    let dig = fast_sram::energy::DigitalModel::default();
+    let per_batch_dig = dig.batch_update(rows, q);
+    let dig_ns = per_batch_dig.latency_ns * s.batches as f64;
+    println!(
+        "same batches on the digital baseline: {:.2} µs -> modeled speedup {:.1}x",
+        dig_ns / 1000.0,
+        dig_ns / s.modeled_ns
+    );
+
+    engine.shutdown()?;
+    shadow.shutdown()?;
+    Ok(())
+}

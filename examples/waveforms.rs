@@ -1,0 +1,26 @@
+//! Transient waveform demo (paper Figs. 7 and 8).
+//!
+//! Run: `cargo run --release --example waveforms`
+//!
+//! Drives the RC-level cell-chain simulator through shift and add
+//! operations at the 800 MHz silicon operating point and renders the
+//! node waveforms as ASCII oscillograms (CSV files are written to
+//! ./results for real plotting).
+
+use fast_sram::experiments::waveforms;
+
+fn main() -> fast_sram::Result<()> {
+    let period = 1.25; // ns, = 800 MHz @ 1.0 V
+
+    let f7 = waveforms::run_fig7(period);
+    print!("{}", waveforms::render_fig7(&f7, 72));
+    println!();
+    let f8 = waveforms::run_fig8(period, 0b0101, 0b0110);
+    print!("{}", waveforms::render_fig8(&f8, 72));
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig7_shift.csv", f7.set.to_csv())?;
+    std::fs::write("results/fig8_add.csv", f8.set.to_csv())?;
+    println!("\nfull traces: results/fig7_shift.csv, results/fig8_add.csv");
+    Ok(())
+}

@@ -1,0 +1,7 @@
+"""Build-time compile path for the FAST SRAM reproduction.
+
+Python exists ONLY at artifact-build time: `python -m compile.aot` lowers
+the Layer-2 JAX models (which call the Layer-1 Pallas kernels) to HLO
+text under artifacts/, and the Rust coordinator loads those via PJRT.
+Nothing in this package is imported on the request path.
+"""

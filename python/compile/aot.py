@@ -1,0 +1,67 @@
+"""AOT lowering: JAX models -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`). The HLO text parser reassigns ids, so text
+round-trips cleanly. Lowered with return_tuple=True; the Rust side
+unwraps with `to_tuple1()`.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import artifact_registry
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: str, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    registry = artifact_registry()
+    manifest = {"format": "hlo-text", "return_tuple": True, "artifacts": []}
+    for name, spec in sorted(registry.items()):
+        if only and only != name:
+            continue
+        lowered = jax.jit(spec["fn"]).lower(*spec["args"])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(spec["meta"])
+        entry["file"] = os.path.basename(path)
+        entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        manifest["artifacts"].append(entry)
+        print(f"[aot] {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts")
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--only", default=None, help="build a single artifact")
+    args = p.parse_args(argv)
+    build_all(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

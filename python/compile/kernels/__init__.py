@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for the FAST SRAM functional model.
+
+- fast_shift_add: bit-serial row-parallel add / subtract (the paper's FA
+  row-ALU, Figs. 3-5)
+- fast_logic: row-parallel AND/OR/XOR (the paper's reconfigurable 1-bit
+  ALU extension, Section III.E)
+- ref: pure-jnp oracle every kernel is tested against
+"""
+
+from . import fast_logic, fast_shift_add, ref  # noqa: F401
+from .fast_logic import LOGIC_OPS, fast_logic_bits  # noqa: F401
+from .fast_shift_add import (  # noqa: F401
+    ROW_BLOCK,
+    fast_shift_add_bits,
+    fast_shift_sub_bits,
+)

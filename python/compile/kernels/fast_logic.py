@@ -1,0 +1,82 @@
+"""Layer-1 Pallas kernel: FAST row-parallel bitwise logic update.
+
+Section III.E of the paper: "it can also realize more complex functions
+by replacing the 1-bit full adder into other 1-bit operation units."
+This kernel models that reconfiguration — the per-row ALU evaluates a
+1-bit logic function (AND / OR / XOR) instead of a full adder, and the
+row still takes q shift cycles to rotate every bit past the ALU.
+
+Same schedule and BlockSpec mapping as fast_shift_add (see that module's
+docstring); no carry latch is needed for logic ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fast_shift_add import ROW_BLOCK
+
+#: Supported 1-bit ALU configurations for the logic variant.
+LOGIC_OPS = ("and", "or", "xor")
+
+
+def _logic_kernel(bits_ref, op_ref, out_ref, *, q: int, op: str):
+    # Unrolled like _shift_add_kernel (§Perf L1): q is static and small,
+    # and straight-line elementwise code fuses where a `while` cannot.
+    bits = bits_ref[...]
+    for t in range(q):
+        a = bits[:, 0]
+        b = op_ref[:, t]
+        if op == "and":
+            s = a & b
+        elif op == "or":
+            s = a | b
+        else:  # xor
+            s = a ^ b
+        bits = jnp.roll(bits, -1, axis=1)
+        bits = bits.at[:, q - 1].set(s)
+    out_ref[...] = bits
+
+
+def fast_logic_bits(
+    bits: jnp.ndarray,
+    op_bits: jnp.ndarray,
+    *,
+    q: int,
+    op: str,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Row-parallel bitwise logic over bit-plane state.
+
+    Args:
+      bits:    [R, q] uint32 {0,1} — array contents, LSB at col 0.
+      op_bits: [R, q] uint32 {0,1} — per-row operand.
+      q:       bit width (static).
+      op:      one of LOGIC_OPS.
+
+    Returns [R, q] updated contents. R must be a multiple of ROW_BLOCK.
+    """
+    if op not in LOGIC_OPS:
+        raise ValueError(f"op must be one of {LOGIC_OPS}, got {op!r}")
+    r, qq = bits.shape
+    if qq != q:
+        raise ValueError(f"bits.shape[1]={qq} != q={q}")
+    if r % ROW_BLOCK != 0:
+        raise ValueError(f"R={r} must be a multiple of ROW_BLOCK={ROW_BLOCK}")
+    grid = (r // ROW_BLOCK,)
+    kernel = functools.partial(_logic_kernel, q=q, op=op)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, q), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_BLOCK, q), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, q), jnp.uint32),
+        interpret=interpret,
+    )(bits, op_bits)

@@ -1,0 +1,127 @@
+"""Layer-1 Pallas kernel: FAST bit-serial, row-parallel add/sub.
+
+This kernel is the functional model of the paper's compute hot-spot: the
+128-row FAST macro executing a q-bit add with write-back in q shift
+cycles, *concurrently in every row* (Figs. 3-5).
+
+Hardware -> kernel mapping (see DESIGN.md §Hardware-Adaptation):
+
+  SRAM row of q shiftable cells   -> one row of a [R, q] uint32 bit-plane
+                                     matrix held in VMEM
+  128 per-row 1-bit ALUs          -> one [R]-wide vector lane op per cycle
+                                     (the VPU's 8x128 vregs play the role
+                                     of the 128 row-ALUs)
+  q shift cycles                  -> jax.lax.fori_loop over q iterations;
+                                     each iteration does the cyclic right
+                                     shift (roll) + 1-bit full-adder slice
+  carry latch (node T1, Fig. 5a)  -> the loop-carried `carry` vector
+  macro height (128 rows)         -> BlockSpec row block of 128; taller
+                                     arrays tile the grid over row blocks,
+                                     exactly like stacking FAST macros
+
+The kernel MUST be lowered with interpret=True on this image: real-TPU
+Pallas lowering emits a Mosaic custom-call that the CPU PJRT plugin
+cannot execute. interpret=True lowers to plain HLO ops, which both jit
+execution here and the Rust PJRT runtime can run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's macro height: 128 rows per FAST subarray. Taller inputs are
+# tiled over a grid of row blocks (== stacking macros in a bank).
+ROW_BLOCK = 128
+
+
+def _shift_add_kernel(bits_ref, op_ref, cin_ref, out_ref, *, q: int):
+    """One FAST macro batch op: q shift cycles + per-row 1-bit FA.
+
+    bits_ref: [B, q]  stored word bit-planes, LSB at col 0
+    op_ref:   [B, q]  external operand bit-planes
+    cin_ref:  [B]     carry-in (0 for add, 1 for two's-complement sub)
+    out_ref:  [B, q]  updated word bit-planes (write-back)
+
+    The q-cycle schedule is UNROLLED (q is compile-time static and
+    small): a `fori_loop` lowers to an HLO `while` whose per-iteration
+    buffer round-trips dominate at these sizes — unrolling lets XLA fuse
+    the whole batch op into straight-line elementwise code (§Perf L1:
+    2.1× on the PJRT-CPU execution path).
+    """
+
+    carry = cin_ref[...]
+    bits = bits_ref[...]
+    for t in range(q):
+        a = bits[:, 0]          # LSB cell feeds the row ALU
+        b = op_ref[:, t]        # external operand bit for this cycle
+        s = a ^ b ^ carry       # FA sum
+        carry = (a & b) | (a & carry) | (b & carry)  # FA carry -> T1 latch
+        # Cyclic right shift: every cell hands its datum to the neighbour
+        # closer to the ALU; the FA sum re-enters the vacated MSB slot.
+        bits = jnp.roll(bits, -1, axis=1)
+        bits = bits.at[:, q - 1].set(s)
+    out_ref[...] = bits
+
+
+def fast_shift_add_bits(
+    bits: jnp.ndarray,
+    op_bits: jnp.ndarray,
+    carry_in: jnp.ndarray,
+    *,
+    q: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Row-parallel bit-serial add over bit-plane state.
+
+    Args:
+      bits:     [R, q] uint32 {0,1} — array contents, LSB at col 0.
+      op_bits:  [R, q] uint32 {0,1} — per-row external addend.
+      carry_in: [R] uint32 {0,1} — FA carry-in (two's-complement subtract
+                passes inverted op_bits with carry_in = 1).
+      q:        bit width (compile-time static; sets the cycle count).
+
+    Returns:
+      [R, q] uint32 {0,1} — updated contents, LSB back at col 0.
+
+    R must be a multiple of ROW_BLOCK (pad in the caller; the Layer-2
+    wrappers in model.py do this). Each grid step is one 128-row macro.
+    """
+    r, qq = bits.shape
+    if qq != q:
+        raise ValueError(f"bits.shape[1]={qq} != q={q}")
+    if r % ROW_BLOCK != 0:
+        raise ValueError(f"R={r} must be a multiple of ROW_BLOCK={ROW_BLOCK}")
+    grid = (r // ROW_BLOCK,)
+    kernel = functools.partial(_shift_add_kernel, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, q), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_BLOCK, q), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, q), jnp.uint32),
+        interpret=interpret,
+    )(bits, op_bits, carry_in)
+
+
+def fast_shift_sub_bits(
+    bits: jnp.ndarray,
+    op_bits: jnp.ndarray,
+    *,
+    q: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Row-parallel bit-serial subtract: add the one's complement of the
+    operand with carry-in 1 (two's complement), through the same FA path —
+    exactly how the hardware reuses the adder."""
+    ones = jnp.ones((bits.shape[0],), dtype=jnp.uint32)
+    return fast_shift_add_bits(
+        bits, op_bits ^ jnp.uint32(1), ones, q=q, interpret=interpret
+    )

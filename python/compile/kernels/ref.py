@@ -1,0 +1,111 @@
+"""Pure-jnp / numpy oracle for the FAST bit-serial kernels.
+
+This module is the *correctness ground truth* for Layer 1. Every Pallas
+kernel in this package is checked against these functions by pytest
+(python/tests/) before the AOT artifacts are built, and the Rust
+behavioural array model cross-checks against the AOT artifacts at
+`cargo test` time — so all three implementations share one semantics:
+
+    q-bit modular integer arithmetic per row, fully parallel over rows.
+
+Words are uint32 with only the low ``q`` bits significant.
+Bit-planes are uint32 {0,1} matrices of shape [R, q], LSB at column 0
+(column 0 is the cell adjacent to the row's 1-bit ALU; a "shift right"
+in the paper moves every bit one cell toward the ALU).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "mask",
+    "pack_bits",
+    "unpack_bits",
+    "add_words",
+    "sub_words",
+    "logic_words",
+    "bit_serial_add_reference",
+]
+
+
+def mask(q: int) -> jnp.ndarray:
+    """All-ones mask for a q-bit word, as uint32 (valid for 1 <= q <= 32)."""
+    if not 1 <= q <= 32:
+        raise ValueError(f"bit width q must be in [1, 32], got {q}")
+    # (1 << 32) would overflow a uint32 shift; derive by right-shifting.
+    if q == 32:
+        return jnp.uint32(0xFFFFFFFF)
+    return jnp.uint32(0xFFFFFFFF) >> jnp.uint32(32 - q)
+
+
+def unpack_bits(words: jnp.ndarray, q: int) -> jnp.ndarray:
+    """[R] uint32 words -> [R, q] uint32 bit-planes, LSB at column 0."""
+    words = words.astype(jnp.uint32)
+    shifts = jnp.arange(q, dtype=jnp.uint32)
+    return (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
+
+
+def pack_bits(bits: jnp.ndarray, q: int) -> jnp.ndarray:
+    """[R, q] uint32 bit-planes -> [R] uint32 words."""
+    shifts = jnp.arange(q, dtype=jnp.uint32)
+    return jnp.sum(
+        bits.astype(jnp.uint32) << shifts[None, :], axis=1, dtype=jnp.uint32
+    )
+
+
+def add_words(a: jnp.ndarray, b: jnp.ndarray, q: int) -> jnp.ndarray:
+    """Row-parallel q-bit modular addition: (a + b) mod 2^q."""
+    return (a.astype(jnp.uint32) + b.astype(jnp.uint32)) & mask(q)
+
+
+def sub_words(a: jnp.ndarray, b: jnp.ndarray, q: int) -> jnp.ndarray:
+    """Row-parallel q-bit modular subtraction: (a - b) mod 2^q.
+
+    The hardware realizes this as an add of the one's complement with
+    carry-in = 1 (two's complement) through the same 1-bit FA.
+    """
+    return (a.astype(jnp.uint32) - b.astype(jnp.uint32)) & mask(q)
+
+
+def logic_words(a: jnp.ndarray, b: jnp.ndarray, q: int, op: str) -> jnp.ndarray:
+    """Row-parallel bitwise logic — the paper's "replace the FA with other
+    1-bit operation units" extension (Section III.E)."""
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    if op == "and":
+        r = a & b
+    elif op == "or":
+        r = a | b
+    elif op == "xor":
+        r = a ^ b
+    else:
+        raise ValueError(f"unknown logic op {op!r}")
+    return r & mask(q)
+
+
+def bit_serial_add_reference(
+    bits: jnp.ndarray, op_bits: jnp.ndarray, carry_in: jnp.ndarray, q: int
+) -> jnp.ndarray:
+    """Step-by-step emulation of the hardware schedule (Fig. 4/5):
+
+    cycle t:  the LSB cell (col 0) feeds the FA together with external
+              operand bit t and the latched carry (node T1); the row
+              shifts right (col 1 -> col 0, ...); the FA sum re-enters
+              the vacated MSB slot (col q-1).
+
+    After q cycles the row holds (a + b + cin) mod 2^q with the LSB back
+    at column 0.  Deliberately a plain Python loop over cycles so it
+    reads like the paper's timing diagram; used only as a test oracle.
+    """
+    bits = bits.astype(jnp.uint32)
+    op_bits = op_bits.astype(jnp.uint32)
+    carry = carry_in.astype(jnp.uint32)
+    for t in range(q):
+        a = bits[:, 0]
+        b = op_bits[:, t]
+        s = a ^ b ^ carry
+        carry = (a & b) | (a & carry) | (b & carry)
+        bits = jnp.roll(bits, -1, axis=1)
+        bits = bits.at[:, q - 1].set(s)
+    return bits

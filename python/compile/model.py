@@ -1,0 +1,161 @@
+"""Layer-2 JAX models: word-level compute graphs over the FAST kernels.
+
+These are the functions that get AOT-lowered to HLO text and executed by
+the Rust runtime (rust/src/runtime/). The interface contract with Rust:
+
+  - all word I/O is uint32 vectors of static length R (row count);
+  - only the low q bits of each word are significant; results are
+    masked to q bits (q-bit modular arithmetic, like the hardware);
+  - outputs are 1-tuples (lowered with return_tuple=True), unwrapped on
+    the Rust side with `to_tuple1()`.
+
+The models wrap the Layer-1 Pallas kernels with pack/unpack interface
+logic — mirroring the chip, where the bitline/decoder periphery converts
+between word-oriented bus transactions and the in-array bit-plane state.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    LOGIC_OPS,
+    ROW_BLOCK,
+    fast_logic_bits,
+    fast_shift_add_bits,
+    ref,
+)
+
+# ---------------------------------------------------------------------------
+# Word-level batch operations (one FAST macro-bank batch op each)
+# ---------------------------------------------------------------------------
+
+
+def batch_add_words(
+    table: jnp.ndarray, deltas: jnp.ndarray, *, q: int, interpret: bool = True
+) -> Tuple[jnp.ndarray]:
+    """Fully-concurrent delta update: table[r] <- (table[r] + deltas[r]) mod 2^q
+    for every row r at once. One FAST batch op (q shift cycles)."""
+    bits = ref.unpack_bits(table, q)
+    op_bits = ref.unpack_bits(deltas, q)
+    cin = jnp.zeros((table.shape[0],), dtype=jnp.uint32)
+    out = fast_shift_add_bits(bits, op_bits, cin, q=q, interpret=interpret)
+    return (ref.pack_bits(out, q),)
+
+
+def batch_sub_words(
+    table: jnp.ndarray, deltas: jnp.ndarray, *, q: int, interpret: bool = True
+) -> Tuple[jnp.ndarray]:
+    """Fully-concurrent subtract: table[r] <- (table[r] - deltas[r]) mod 2^q.
+    Two's complement through the same FA path (invert + carry-in 1)."""
+    bits = ref.unpack_bits(table, q)
+    op_bits = ref.unpack_bits(deltas, q) ^ jnp.uint32(1)
+    cin = jnp.ones((table.shape[0],), dtype=jnp.uint32)
+    out = fast_shift_add_bits(bits, op_bits, cin, q=q, interpret=interpret)
+    return (ref.pack_bits(out, q),)
+
+
+def batch_logic_words(
+    table: jnp.ndarray,
+    operands: jnp.ndarray,
+    *,
+    q: int,
+    op: str,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray]:
+    """Fully-concurrent bitwise update with a reconfigured 1-bit ALU."""
+    bits = ref.unpack_bits(table, q)
+    op_bits = ref.unpack_bits(operands, q)
+    out = fast_logic_bits(bits, op_bits, q=q, op=op, interpret=interpret)
+    return (ref.pack_bits(out, q),)
+
+
+def accumulate_rounds(
+    table: jnp.ndarray, rounds: jnp.ndarray, *, q: int, interpret: bool = True
+) -> Tuple[jnp.ndarray]:
+    """T successive fully-concurrent batch adds (graph-computing pattern:
+    each round is one dense, row-disjoint message-delivery sweep prepared
+    by the Layer-3 coordinator).
+
+    table:  [R]    uint32
+    rounds: [T, R] uint32 per-round delta vectors
+    """
+
+    def step(tab, deltas):
+        (out,) = batch_add_words(tab, deltas, q=q, interpret=interpret)
+        return out, ()
+
+    out, _ = jax.lax.scan(step, table, rounds)
+    return (out,)
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry — everything aot.py lowers, with example args + metadata
+# ---------------------------------------------------------------------------
+
+ArtifactFn = Callable[..., Tuple[jnp.ndarray, ...]]
+
+
+def _u32(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def artifact_registry() -> Dict[str, Dict[str, Any]]:
+    """All AOT artifacts: name -> {fn, args (ShapeDtypeStructs), meta}.
+
+    The `meta` dict is written to artifacts/manifest.json so the Rust
+    runtime can discover shapes/semantics without parsing HLO.
+    """
+    reg: Dict[str, Dict[str, Any]] = {}
+
+    def add(name: str, fn: ArtifactFn, args, **meta):
+        reg[name] = {"fn": fn, "args": args, "meta": {"name": name, **meta}}
+
+    # The paper's showcase macro: 128 rows. q = 16 is Table I's OP width.
+    for q in (8, 16, 32):
+        add(
+            f"fast_add_128x{q}",
+            functools.partial(batch_add_words, q=q),
+            (_u32((128,)), _u32((128,))),
+            op="add", rows=128, q=q,
+            inputs=[["u32", [128]], ["u32", [128]]], outputs=[["u32", [128]]],
+        )
+    add(
+        "fast_sub_128x16",
+        functools.partial(batch_sub_words, q=16),
+        (_u32((128,)), _u32((128,))),
+        op="sub", rows=128, q=16,
+        inputs=[["u32", [128]], ["u32", [128]]], outputs=[["u32", [128]]],
+    )
+    for lop in LOGIC_OPS:
+        add(
+            f"fast_{lop}_128x16",
+            functools.partial(batch_logic_words, q=16, op=lop),
+            (_u32((128,)), _u32((128,))),
+            op=lop, rows=128, q=16,
+            inputs=[["u32", [128]], ["u32", [128]]], outputs=[["u32", [128]]],
+        )
+    # A bank of 8 stacked macros (1024 rows), the multi-macro grid path.
+    add(
+        "fast_add_1024x16",
+        functools.partial(batch_add_words, q=16),
+        (_u32((1024,)), _u32((1024,))),
+        op="add", rows=1024, q=16,
+        inputs=[["u32", [1024]], ["u32", [1024]]], outputs=[["u32", [1024]]],
+    )
+    # Multi-round accumulate (graph computing inner loop), T = 8 rounds.
+    add(
+        "fast_scan8_128x16",
+        functools.partial(accumulate_rounds, q=16),
+        (_u32((128,)), _u32((8, 128))),
+        op="scan_add", rows=128, q=16, rounds=8,
+        inputs=[["u32", [128]], ["u32", [8, 128]]], outputs=[["u32", [128]]],
+    )
+    return reg
+
+
+assert ROW_BLOCK == 128, "artifact registry assumes the paper's 128-row macro"

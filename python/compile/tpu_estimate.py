@@ -1,0 +1,95 @@
+"""TPU resource estimation for the Layer-1 Pallas kernels (§Perf L1).
+
+The image's CPU PJRT plugin can only run Pallas in interpret mode, so
+real-TPU performance is *estimated* analytically from the kernel's
+BlockSpec structure (DESIGN.md §Hardware-Adaptation): VMEM footprint,
+VPU lane utilization, and a roofline-style cycle estimate. These
+numbers justify the blocking choices; they are asserted by tests so a
+structural regression (e.g. a block that no longer fits VMEM) fails CI.
+
+Model (TPU v4-class, per core):
+  - VMEM: 16 MiB usable per core
+  - VPU: 8 sublanes x 128 lanes, one 32-bit op per lane per cycle
+  - the row dimension maps to lanes; ROW_BLOCK = 128 rows fills the
+    lane dimension exactly (the paper's 128 row-ALUs <-> 128 lanes)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .kernels.fast_shift_add import ROW_BLOCK
+
+VMEM_BYTES = 16 * 1024 * 1024
+VPU_LANES = 128
+VPU_SUBLANES = 8
+
+
+@dataclass(frozen=True)
+class KernelEstimate:
+    """Static resource estimate for one FAST batch-op kernel call."""
+
+    rows: int
+    q: int
+    # VMEM bytes for one grid step (bits, op_bits, carry, out blocks).
+    vmem_block_bytes: int
+    vmem_frac: float
+    # Lane utilization of the [ROW_BLOCK]-wide vector ops.
+    lane_utilization: float
+    # Vector ops per shift cycle (xor/and/or for sum+carry, shift, insert).
+    vector_ops_per_cycle: int
+    # Estimated VPU cycles per grid step (q cycles x ops, lanes-parallel).
+    est_cycles_per_block: int
+    grid_steps: int
+
+    @property
+    def est_total_cycles(self) -> int:
+        return self.est_cycles_per_block * self.grid_steps
+
+
+def estimate_shift_add(rows: int, q: int, dtype_bytes: int = 4) -> KernelEstimate:
+    """Estimate for fast_shift_add_bits at [rows, q]."""
+    if rows % ROW_BLOCK != 0:
+        raise ValueError(f"rows={rows} not a multiple of ROW_BLOCK={ROW_BLOCK}")
+    if not 1 <= q <= 32:
+        raise ValueError(f"q={q} out of range")
+    # Blocks resident per grid step: bits[128,q] in+out, op[128,q], cin[128].
+    block = ROW_BLOCK * q * dtype_bytes
+    vmem = 3 * block + ROW_BLOCK * dtype_bytes
+    # One shift cycle = FA (2 xor + 3 and + 2 or = 7 lane ops) + roll
+    # (register shuffle, ~1 op) + MSB insert (~1 op).
+    ops_per_cycle = 9
+    # Each lane op covers ROW_BLOCK rows; one sublane pass per op when
+    # the row block exactly fills the lane dim.
+    cycles_per_block = q * ops_per_cycle
+    return KernelEstimate(
+        rows=rows,
+        q=q,
+        vmem_block_bytes=vmem,
+        vmem_frac=vmem / VMEM_BYTES,
+        lane_utilization=min(1.0, ROW_BLOCK / VPU_LANES),
+        vector_ops_per_cycle=ops_per_cycle,
+        est_cycles_per_block=cycles_per_block,
+        grid_steps=rows // ROW_BLOCK,
+    )
+
+
+def render(est: KernelEstimate) -> str:
+    return (
+        f"fast_shift_add [{est.rows}x{est.q}]\n"
+        f"  VMEM per grid step : {est.vmem_block_bytes / 1024:.1f} KiB"
+        f" ({100 * est.vmem_frac:.3f}% of 16 MiB)\n"
+        f"  lane utilization   : {100 * est.lane_utilization:.0f}%"
+        f" (ROW_BLOCK={ROW_BLOCK} rows == {VPU_LANES} lanes)\n"
+        f"  est. VPU cycles    : {est.est_cycles_per_block}/block"
+        f" x {est.grid_steps} steps = {est.est_total_cycles}\n"
+    )
+
+
+def main() -> None:
+    for rows, q in [(128, 8), (128, 16), (128, 32), (1024, 16)]:
+        print(render(estimate_shift_add(rows, q)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Layer-2 model tests: word-level wrappers, scan, masking, registry."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(rng, shape, q):
+    return jnp.asarray(rng.integers(0, 2**q, size=shape, dtype=np.uint32))
+
+
+@pytest.mark.parametrize("q", [8, 16, 32])
+def test_batch_add_words(q):
+    rng = np.random.default_rng(q)
+    a, b = rand(rng, 128, q), rand(rng, 128, q)
+    (got,) = model.batch_add_words(a, b, q=q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.add_words(a, b, q)))
+
+
+@pytest.mark.parametrize("q", [8, 16])
+def test_batch_sub_words(q):
+    rng = np.random.default_rng(q + 1)
+    a, b = rand(rng, 128, q), rand(rng, 128, q)
+    (got,) = model.batch_sub_words(a, b, q=q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.sub_words(a, b, q)))
+
+
+@pytest.mark.parametrize("op", ["and", "or", "xor"])
+def test_batch_logic_words(op):
+    q = 16
+    rng = np.random.default_rng(3)
+    a, b = rand(rng, 128, q), rand(rng, 128, q)
+    (got,) = model.batch_logic_words(a, b, q=q, op=op)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.logic_words(a, b, q, op))
+    )
+
+
+def test_result_masked_to_q_bits():
+    """Inputs with junk above bit q-1 must not leak into results."""
+    q = 8
+    a = jnp.asarray(np.array([0xFFFFFF00 | 5] * 128, dtype=np.uint32))
+    b = jnp.asarray(np.array([0xABCDEF00 | 7] * 128, dtype=np.uint32))
+    (got,) = model.batch_add_words(a, b, q=q)
+    assert np.all(np.asarray(got) == 12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_accumulate_rounds(t, seed):
+    q = 16
+    rng = np.random.default_rng(seed)
+    table = rand(rng, 128, q)
+    rounds = rand(rng, (t, 128), q)
+    (got,) = model.accumulate_rounds(table, rounds, q=q)
+    want = np.asarray(table, dtype=np.uint64)
+    for i in range(t):
+        want = (want + np.asarray(rounds)[i]) % (1 << q)
+    np.testing.assert_array_equal(np.asarray(got), want.astype(np.uint32))
+
+
+def test_registry_complete_and_wellformed():
+    reg = model.artifact_registry()
+    # Everything the Rust runtime expects must be present.
+    for required in [
+        "fast_add_128x8", "fast_add_128x16", "fast_add_128x32",
+        "fast_sub_128x16", "fast_and_128x16", "fast_or_128x16",
+        "fast_xor_128x16", "fast_add_1024x16", "fast_scan8_128x16",
+    ]:
+        assert required in reg, required
+    for name, spec in reg.items():
+        meta = spec["meta"]
+        assert meta["name"] == name
+        assert meta["rows"] % 128 == 0
+        assert 1 <= meta["q"] <= 32
+        assert meta["inputs"] and meta["outputs"]
+
+
+def test_registry_fns_run():
+    """Every registered artifact fn executes on its example shapes."""
+    reg = model.artifact_registry()
+    rng = np.random.default_rng(0)
+    for name, spec in reg.items():
+        args = [
+            jnp.asarray(rng.integers(0, 2**16, size=a.shape, dtype=np.uint32))
+            for a in spec["args"]
+        ]
+        out = spec["fn"](*args)
+        assert isinstance(out, tuple) and len(out) == 1, name
+        assert out[0].dtype == jnp.uint32, name

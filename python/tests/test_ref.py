@@ -1,0 +1,102 @@
+"""Oracle self-consistency: ref.py vs plain numpy integer semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+QS = [1, 4, 7, 8, 13, 16, 24, 31, 32]
+
+
+def rand_words(rng, r, q):
+    return rng.integers(0, 2**q, size=r, dtype=np.uint32)
+
+
+@pytest.mark.parametrize("q", QS)
+def test_mask(q):
+    m = int(ref.mask(q))
+    assert m == (1 << q) - 1
+
+
+@pytest.mark.parametrize("q", QS)
+def test_pack_unpack_roundtrip(q):
+    rng = np.random.default_rng(q)
+    w = rand_words(rng, 64, q)
+    bits = ref.unpack_bits(jnp.asarray(w), q)
+    assert bits.shape == (64, q)
+    assert set(np.unique(np.asarray(bits))) <= {0, 1}
+    back = np.asarray(ref.pack_bits(bits, q))
+    np.testing.assert_array_equal(back, w)
+
+
+@pytest.mark.parametrize("q", QS)
+def test_add_words_matches_numpy(q):
+    rng = np.random.default_rng(q + 100)
+    a, b = rand_words(rng, 256, q), rand_words(rng, 256, q)
+    got = np.asarray(ref.add_words(jnp.asarray(a), jnp.asarray(b), q))
+    want = (a.astype(np.uint64) + b) % (1 << q)
+    np.testing.assert_array_equal(got, want.astype(np.uint32))
+
+
+@pytest.mark.parametrize("q", QS)
+def test_sub_words_matches_numpy(q):
+    rng = np.random.default_rng(q + 200)
+    a, b = rand_words(rng, 256, q), rand_words(rng, 256, q)
+    got = np.asarray(ref.sub_words(jnp.asarray(a), jnp.asarray(b), q))
+    want = (a.astype(np.int64) - b) % (1 << q)
+    np.testing.assert_array_equal(got, want.astype(np.uint32))
+
+
+@pytest.mark.parametrize("op", ["and", "or", "xor"])
+@pytest.mark.parametrize("q", [8, 16, 32])
+def test_logic_words(op, q):
+    rng = np.random.default_rng(q)
+    a, b = rand_words(rng, 128, q), rand_words(rng, 128, q)
+    got = np.asarray(ref.logic_words(jnp.asarray(a), jnp.asarray(b), q, op))
+    f = {"and": np.bitwise_and, "or": np.bitwise_or, "xor": np.bitwise_xor}[op]
+    np.testing.assert_array_equal(got, f(a, b) & np.uint32((1 << q) - 1))
+
+
+def test_logic_rejects_unknown_op():
+    a = jnp.zeros(4, jnp.uint32)
+    with pytest.raises(ValueError):
+        ref.logic_words(a, a, 8, "nand")
+
+
+@pytest.mark.parametrize("q", [0, 33, -1])
+def test_mask_rejects_bad_width(q):
+    with pytest.raises(ValueError):
+        ref.mask(q)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    q=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    cin=st.sampled_from([0, 1]),
+)
+def test_bit_serial_reference_is_modular_add(q, seed, cin):
+    """The cycle-by-cycle hardware schedule == q-bit modular add."""
+    rng = np.random.default_rng(seed)
+    a, b = rand_words(rng, 32, q), rand_words(rng, 32, q)
+    bits = ref.unpack_bits(jnp.asarray(a), q)
+    op_bits = ref.unpack_bits(jnp.asarray(b), q)
+    carry = jnp.full((32,), cin, dtype=jnp.uint32)
+    out = ref.bit_serial_add_reference(bits, op_bits, carry, q)
+    got = np.asarray(ref.pack_bits(out, q))
+    want = ((a.astype(np.uint64) + b + cin) % (1 << q)).astype(np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bit_serial_carry_chain():
+    """Worst-case ripple: 0xFFFF + 1 must wrap to 0 (full carry chain)."""
+    q = 16
+    a = jnp.asarray(np.full(8, (1 << q) - 1, dtype=np.uint32))
+    b = jnp.asarray(np.ones(8, dtype=np.uint32))
+    out = ref.bit_serial_add_reference(
+        ref.unpack_bits(a, q), ref.unpack_bits(b, q),
+        jnp.zeros(8, jnp.uint32), q,
+    )
+    np.testing.assert_array_equal(np.asarray(ref.pack_bits(out, q)), 0)

@@ -1,0 +1,58 @@
+"""Structural regression tests on the L1 TPU resource estimates."""
+
+import pytest
+
+from compile.tpu_estimate import (
+    VMEM_BYTES,
+    VPU_LANES,
+    estimate_shift_add,
+    render,
+)
+
+
+@pytest.mark.parametrize("q", [8, 16, 32])
+def test_block_fits_comfortably_in_vmem(q):
+    est = estimate_shift_add(128, q)
+    # The whole working set must stay far below VMEM so double-buffering
+    # and multiple concurrent blocks remain possible.
+    assert est.vmem_frac < 0.01, f"block uses {est.vmem_frac:.2%} of VMEM"
+
+
+def test_row_block_saturates_lanes():
+    est = estimate_shift_add(128, 16)
+    assert est.lane_utilization == 1.0
+    assert VPU_LANES == 128
+
+
+def test_cycles_scale_linearly_with_q():
+    c8 = estimate_shift_add(128, 8).est_cycles_per_block
+    c16 = estimate_shift_add(128, 16).est_cycles_per_block
+    c32 = estimate_shift_add(128, 32).est_cycles_per_block
+    assert c16 == 2 * c8
+    assert c32 == 2 * c16
+
+
+def test_grid_scales_with_rows_not_cycles():
+    small = estimate_shift_add(128, 16)
+    big = estimate_shift_add(1024, 16)
+    assert big.grid_steps == 8 * small.grid_steps
+    assert big.est_cycles_per_block == small.est_cycles_per_block
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        estimate_shift_add(100, 16)
+    with pytest.raises(ValueError):
+        estimate_shift_add(128, 0)
+    with pytest.raises(ValueError):
+        estimate_shift_add(128, 33)
+
+
+def test_render_mentions_key_figures():
+    s = render(estimate_shift_add(128, 16))
+    assert "VMEM" in s and "lane utilization" in s
+    assert "100%" in s
+
+
+def test_vmem_constant_sane():
+    assert VMEM_BYTES == 16 * 1024 * 1024

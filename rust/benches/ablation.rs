@@ -1,0 +1,124 @@
+//! Ablation bench: quantify each coordinator design choice that
+//! DESIGN.md calls out — coalescing, seal threshold, bank count, and
+//! word width (the Fig. 5c reconfiguration) — on the same workload.
+//!
+//! Run: `cargo bench --bench ablation`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use fast_sram::coordinator::{
+    Batcher, EngineConfig, FastBackend, UpdateEngine, UpdateRequest,
+};
+use fast_sram::energy::FastModel;
+use fast_sram::util::rng::Rng;
+
+/// Modeled macro time for a stream with a given seal threshold.
+fn run_with_seal(rows: usize, seal: Option<usize>, updates: usize) -> (u64, f64, f64) {
+    let mut cfg = EngineConfig::new(rows, 16);
+    cfg.seal_at_rows = seal;
+    cfg.flush_interval = Duration::from_micros(300);
+    cfg.queue_cap = 16_384;
+    let e = UpdateEngine::start(cfg, move || {
+        Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, 16)))
+    })
+    .unwrap();
+    let mut rng = Rng::new(5);
+    let mut chunk = Vec::with_capacity(2048);
+    for _ in 0..updates {
+        chunk.push(UpdateRequest::add(rng.below(rows as u64) as usize, 3));
+        if chunk.len() == 2048 {
+            e.submit_many(std::mem::take(&mut chunk)).unwrap();
+        }
+    }
+    e.submit_many(chunk).unwrap();
+    e.flush().unwrap();
+    let s = e.stats();
+    let out = (s.batches, s.modeled_ns, s.rows_per_batch);
+    e.shutdown().unwrap();
+    out
+}
+
+fn main() {
+    let rows = 1024;
+    let updates = 100_000;
+
+    harness::section("ablation 1 — coalescing batcher vs naive one-batch-per-request");
+    {
+        let (batches, modeled_ns, rpb) = run_with_seal(rows, Some(rows * 3 / 4), updates);
+        // Naive lower bound: every request becomes its own 16-cycle batch.
+        let per_batch = FastModel::default().batch_op(128, 16).latency_ns;
+        let naive_ns = per_batch * updates as f64;
+        println!(
+            "coalescing ON : {batches} batches, {rpb:.1} rows/batch, modeled {:.2} µs",
+            modeled_ns / 1000.0
+        );
+        println!(
+            "coalescing OFF (bound): {updates} batches, modeled {:.2} µs  -> {:.0}x worse",
+            naive_ns / 1000.0,
+            naive_ns / modeled_ns
+        );
+        assert!(naive_ns / modeled_ns > 50.0);
+    }
+
+    harness::section("ablation 2 — seal threshold sweep (batch size vs flush rate)");
+    for seal in [Some(64usize), Some(256), Some(768), None] {
+        let (batches, modeled_ns, rpb) = run_with_seal(rows, seal, updates);
+        println!(
+            "seal_at_rows {:>8}: {batches:>5} batches | {rpb:>7.1} rows/batch | modeled {:>9.2} µs",
+            seal.map(|s| s.to_string()).unwrap_or_else(|| "deadline".into()),
+            modeled_ns / 1000.0
+        );
+    }
+
+    harness::section("ablation 3 — bank count at fixed 1024-row capacity");
+    let model = FastModel::default();
+    for banks in [1usize, 2, 4, 8] {
+        let rows_per_bank = 1024 / banks;
+        let batch = model.batch_op(rows_per_bank, 16);
+        // One full-capacity update: all banks fire concurrently.
+        println!(
+            "{banks} x {rows_per_bank} rows: batch latency {:.2} ns, energy {:.1} pJ \
+             (tall banks pay shift-skew; more banks pay area)",
+            batch.latency_ns,
+            banks as f64 * batch.energy_fj / 1000.0
+        );
+    }
+
+    harness::section("ablation 4 — word width (Fig. 5c route reconfiguration)");
+    for q in [8usize, 16, 32] {
+        let c = model.batch_op(128, q);
+        let per_op = model.calc_per_op(128, q);
+        println!(
+            "q={q:>2}: batch {:>5.2} ns | {:>7.3} pJ/OP | words/row at 32 cols: {}",
+            c.latency_ns,
+            per_op.energy_pj(),
+            32 / q
+        );
+    }
+
+    harness::section("wall-clock: batcher with vs without coalescible traffic");
+    let mut rng = Rng::new(9);
+    let hot: Vec<UpdateRequest> = (0..50_000)
+        .map(|_| UpdateRequest::add(rng.below(32) as usize, 1))
+        .collect();
+    let cold: Vec<UpdateRequest> = (0..50_000)
+        .map(|_| UpdateRequest::add(rng.below(1024) as usize, 1))
+        .collect();
+    harness::bench("batcher 50k hot-row requests", 1, 10, || {
+        let mut b = Batcher::new(1024, 16, None);
+        for r in &hot {
+            let _ = b.push(*r);
+        }
+        b.force_flush()
+    });
+    harness::bench("batcher 50k uniform requests", 1, 10, || {
+        let mut b = Batcher::new(1024, 16, None);
+        for r in &cold {
+            let _ = b.push(*r);
+        }
+        b.force_flush()
+    });
+}

@@ -1,0 +1,39 @@
+//! Bench E-APP: application workloads through the full coordinator,
+//! FAST vs the digital near-memory baseline (Section III.C).
+//!
+//! Run: `cargo bench --bench apps`
+
+#[path = "harness.rs"]
+mod harness;
+
+use fast_sram::experiments::apps_bench::{compare, render, Workload};
+
+fn main() {
+    harness::section("E-APP — workload comparison (modeled macro time)");
+    let mut pairs = Vec::new();
+    for w in [
+        Workload::UniformDeltas { updates: 20_000 },
+        Workload::SkewedDeltas { updates: 20_000 },
+        Workload::GraphRounds { nodes: 128, avg_degree: 4, rounds: 4 },
+    ] {
+        pairs.push(compare(128, 16, w, 7).expect("workload run"));
+    }
+    print!("{}", render(&pairs));
+
+    for (f, d) in &pairs {
+        let speedup = d.modeled_ns / f.modeled_ns.max(1e-9);
+        assert!(
+            speedup > 2.0,
+            "FAST must beat digital on {}: {speedup:.1}x",
+            f.workload
+        );
+    }
+
+    harness::section("1024-row (8-bank) uniform deltas");
+    let (f, d) = compare(1024, 16, Workload::UniformDeltas { updates: 20_000 }, 9)
+        .expect("workload run");
+    print!("{}", render(&[(f.clone(), d.clone())]));
+    let speedup = d.modeled_ns / f.modeled_ns.max(1e-9);
+    println!("modeled speedup at 1024 rows: {speedup:.1}x");
+    assert!(speedup > 4.0);
+}

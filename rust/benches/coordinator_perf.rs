@@ -1,0 +1,117 @@
+//! L3 performance bench: wall-clock cost of the coordinator itself —
+//! batcher throughput, engine submit path, bank-parallel scaling, and
+//! XLA execution latency. This is the §Perf measurement target for
+//! Layer 3 (the coordinator must not be the bottleneck).
+//!
+//! Run: `cargo bench --bench coordinator_perf`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::{Duration, Instant};
+
+use fast_sram::coordinator::{
+    Batcher, EngineConfig, FastBackend, UpdateEngine, UpdateRequest, XlaBackend,
+};
+use fast_sram::util::rng::Rng;
+
+fn main() {
+    harness::section("batcher micro-benchmarks");
+    let mut rng = Rng::new(1);
+    let reqs: Vec<UpdateRequest> = (0..100_000)
+        .map(|_| UpdateRequest::add(rng.below(1024) as usize, rng.below(1 << 16) as u32))
+        .collect();
+    let s = harness::bench("batcher push+flush 100k reqs (1024 rows)", 1, 10, || {
+        let mut b = Batcher::new(1024, 16, None);
+        for r in &reqs {
+            let _ = b.push(*r);
+        }
+        b.force_flush()
+    });
+    println!(
+        "  -> batcher throughput: {:.1} M req/s",
+        harness::ops_per_sec(100_000, s.trimmed_mean_ns) / 1e6
+    );
+
+    harness::section("engine end-to-end submit throughput (wall-clock)");
+    for (label, rows) in [("1 bank / 128 rows", 128usize), ("8 banks / 1024 rows", 1024)] {
+        let mut cfg = EngineConfig::new(rows, 16);
+        cfg.flush_interval = Duration::from_micros(200);
+        cfg.queue_cap = 65_536;
+        let engine = UpdateEngine::start(cfg, move || {
+            Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, 16)))
+        })
+        .unwrap();
+        let n = 200_000u64;
+        let mut rng = Rng::new(7);
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let row = rng.below(rows as u64) as usize;
+            engine
+                .submit_blocking(UpdateRequest::add(row, 1))
+                .unwrap();
+        }
+        engine.flush().unwrap();
+        let dt = t0.elapsed();
+        let stats = engine.stats();
+        println!(
+            "engine[{label}]: {:.2} M updates/s wall | {} batches | {:.1} rows/batch | apply p99 {} ns",
+            n as f64 / dt.as_secs_f64() / 1e6,
+            stats.batches,
+            stats.rows_per_batch,
+            stats.apply_wall.p99_ns
+        );
+        engine.shutdown().unwrap();
+    }
+
+    harness::section("bulk submit (submit_many) throughput");
+    {
+        let rows = 1024usize;
+        let mut cfg = EngineConfig::new(rows, 16);
+        cfg.flush_interval = Duration::from_micros(200);
+        cfg.queue_cap = 1024;
+        let engine = UpdateEngine::start(cfg, move || {
+            Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, 16)))
+        })
+        .unwrap();
+        let n = 400_000u64;
+        let mut rng = Rng::new(13);
+        let t0 = Instant::now();
+        let mut chunk = Vec::with_capacity(4096);
+        for _ in 0..n {
+            chunk.push(UpdateRequest::add(rng.below(rows as u64) as usize, 1));
+            if chunk.len() == 4096 {
+                engine.submit_many(std::mem::take(&mut chunk)).unwrap();
+                chunk.reserve(4096);
+            }
+        }
+        engine.submit_many(chunk).unwrap();
+        engine.flush().unwrap();
+        let dt = t0.elapsed();
+        let stats = engine.stats();
+        println!(
+            "engine[bulk 1024 rows]: {:.2} M updates/s wall | {} batches | {:.1} rows/batch",
+            n as f64 / dt.as_secs_f64() / 1e6,
+            stats.batches,
+            stats.rows_per_batch
+        );
+        engine.shutdown().unwrap();
+    }
+
+    harness::section("XLA artifact execution latency");
+    match XlaBackend::new("artifacts", 128, 16) {
+        Ok(mut backend) => {
+            use fast_sram::coordinator::{Backend, BatchKind};
+            let deltas = vec![1u32; 128];
+            harness::bench("xla apply 128x16", 3, 50, || {
+                backend.apply(BatchKind::Add, &deltas).unwrap()
+            });
+            let mut big = XlaBackend::new("artifacts", 1024, 16).unwrap();
+            let deltas = vec![1u32; 1024];
+            harness::bench("xla apply 1024x16", 3, 50, || {
+                big.apply(BatchKind::Add, &deltas).unwrap()
+            });
+        }
+        Err(e) => println!("(skipping XLA benches: {e:#})"),
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench E-F10: regenerate Fig. 10 (energy and latency vs bit width)
+//! and time the behavioural array across the same width sweep.
+//!
+//! Run: `cargo bench --bench fig10`
+
+#[path = "harness.rs"]
+mod harness;
+
+use fast_sram::experiments::fig10;
+use fast_sram::fastmem::FastArray;
+use fast_sram::util::rng::Rng;
+
+fn main() {
+    harness::section("Fig. 10 — model sweep");
+    let pts = fig10::run();
+    print!("{}", fig10::render(&pts));
+
+    // Shape assertions (who wins, how it trends).
+    for p in &pts {
+        assert!(
+            p.speedup() > 1.0,
+            "FAST must win on batch latency at {}x{}",
+            p.rows,
+            p.q
+        );
+    }
+    let p512_8 = pts.iter().find(|p| p.rows == 512 && p.q == 8).unwrap();
+    assert!(p512_8.energy_ratio() > 4.0, "paper: >4x at 512 rows / 8-bit");
+
+    harness::section("behavioural array wall-clock across widths (128 rows)");
+    let mut rng = Rng::new(2);
+    for q in [4usize, 8, 16, 32] {
+        let mut a = FastArray::new(128, q);
+        let deltas: Vec<u32> = (0..128)
+            .map(|_| rng.below(1u64 << q) as u32)
+            .collect();
+        harness::bench(&format!("batch_add 128x{q}"), 2, 20, || a.batch_add(&deltas));
+    }
+}

@@ -1,0 +1,36 @@
+//! Bench E-F11: regenerate Fig. 11 (batch latency + area-normalized
+//! efficiency vs rows) and time multi-bank behavioural execution
+//! across the row sweep.
+//!
+//! Run: `cargo bench --bench fig11`
+
+#[path = "harness.rs"]
+mod harness;
+
+use fast_sram::coordinator::{BankSet, BatchKind};
+use fast_sram::experiments::fig11;
+use fast_sram::util::rng::Rng;
+
+fn main() {
+    harness::section("Fig. 11 — model sweep");
+    let pts = fig11::run();
+    print!("{}", fig11::render(&pts));
+
+    // Shape assertions.
+    let flat: Vec<_> = pts.iter().filter(|p| p.q == 16).collect();
+    let first = flat.first().unwrap();
+    let last = flat.last().unwrap();
+    assert!(last.fast_latency_ns < 1.2 * first.fast_latency_ns);
+    assert!(last.normalized_advantage() > first.normalized_advantage());
+
+    harness::section("bank-parallel wall-clock across row counts (q=16)");
+    let mut rng = Rng::new(4);
+    for banks in [1usize, 2, 4, 8] {
+        let rows = banks * 128;
+        let mut set = BankSet::new(banks, 128, 16);
+        let deltas: Vec<u32> = (0..rows).map(|_| rng.below(1 << 16) as u32).collect();
+        harness::bench(&format!("bankset apply {rows} rows ({banks} banks)"), 2, 15, || {
+            set.apply(BatchKind::Add, &deltas).unwrap()
+        });
+    }
+}

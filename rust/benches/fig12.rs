@@ -1,0 +1,27 @@
+//! Bench E-F12: regenerate Fig. 12 (noise tolerance / Monte Carlo eye
+//! pattern) and time the per-sample transient cost.
+//!
+//! Run: `cargo bench --bench fig12`
+
+#[path = "harness.rs"]
+mod harness;
+
+use fast_sram::analog::montecarlo::MonteCarlo;
+use fast_sram::experiments::fig12;
+
+fn main() {
+    harness::section("Fig. 12 — Monte Carlo noise margin (500 samples)");
+    let f = fig12::run(500, 42);
+    print!("{}", fig12::render(&f));
+    assert!(
+        (0.25..0.45).contains(&f.mc.worst_margin()),
+        "worst-case margin must sit near the paper's 300 mV"
+    );
+    assert_eq!(f.mc.yield_frac(), 1.0);
+
+    harness::section("transient sim cost");
+    let mc = MonteCarlo::default();
+    harness::bench("one MC sample (4-cell chain, 4 cycles)", 1, 10, || {
+        mc.run(1, 7)
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench E-F13: regenerate Fig. 13 (shmoo plot) and time the sweep.
+//!
+//! Run: `cargo bench --bench fig13`
+
+#[path = "harness.rs"]
+mod harness;
+
+use fast_sram::experiments::fig13;
+use fast_sram::timing::{ShmooConfig, ShmooModel};
+
+fn main() {
+    harness::section("Fig. 13 — shmoo plot");
+    let grid = fig13::run();
+    print!("{}", fig13::render(&grid));
+
+    let f10 = grid.max_pass_freq(1.0).unwrap();
+    let f12 = grid.max_pass_freq(1.2).unwrap();
+    assert!((f10 - 0.8).abs() < 0.11, "silicon anchor @1.0V drifted: {f10}");
+    assert!((f12 - 1.2).abs() < 0.11, "silicon anchor @1.2V drifted: {f12}");
+
+    harness::section("sweep cost");
+    let model = ShmooModel::default();
+    let mut cfg = ShmooConfig::default();
+    cfg.vdd_steps = 61;
+    cfg.freq_steps = 181; // fine grid
+    harness::bench("shmoo sweep 61x181", 2, 20, || model.sweep(&cfg));
+}

@@ -1,0 +1,31 @@
+//! Bench E-F14: regenerate Fig. 14 (area breakdown) across die sizes.
+//!
+//! Run: `cargo bench --bench fig14`
+
+#[path = "harness.rs"]
+mod harness;
+
+use fast_sram::energy::AreaModel;
+use fast_sram::experiments::fig14;
+
+fn main() {
+    harness::section("Fig. 14 — area breakdown (showcase die)");
+    let f = fig14::run(128, 16);
+    print!("{}", fig14::render(&f));
+    assert!((f.cell_overhead - 0.70).abs() < 0.01);
+    assert!((f.macro_overhead - 0.417).abs() < 0.02);
+
+    harness::section("overhead trend across die sizes");
+    let m = AreaModel::default();
+    println!("rows cols | FAST µm² | SRAM µm² | overhead");
+    println!("----------+----------+----------+---------");
+    for (rows, cols) in [(128usize, 16usize), (256, 16), (512, 16), (128, 32), (1024, 16)] {
+        let fa = m.fast_macro(rows, cols);
+        let sa = m.sram_macro(rows, cols);
+        println!(
+            "{rows:>4} {cols:>4} | {fa:>8.0} | {sa:>8.0} | {:>6.1}%",
+            100.0 * (fa / sa - 1.0)
+        );
+    }
+    harness::bench("area breakdown eval", 10, 1000, || m.fast_breakdown(128, 16));
+}

@@ -1,0 +1,55 @@
+//! Shared micro-bench harness for the `cargo bench` targets (criterion
+//! is not in the offline vendor set — DESIGN.md §7).
+//!
+//! Methodology: warmup iterations, then `iters` timed runs; report the
+//! 10%-trimmed mean ± stddev and min, which is robust to scheduler
+//! noise on shared machines. Black-box the result to defeat DCE.
+#![allow(dead_code)] // each bench binary uses a subset of the helpers
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use fast_sram::util::stats;
+
+/// One benchmark's timing summary (nanoseconds per iteration).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub trimmed_mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub iters: usize,
+}
+
+/// Time `f` and print a criterion-style line.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let s = BenchStats {
+        trimmed_mean_ns: stats::trimmed_mean(&samples, 0.1),
+        stddev_ns: stats::stddev(&samples),
+        min_ns: stats::min(&samples),
+        iters,
+    };
+    println!(
+        "bench {name:<44} {:>12.0} ns/iter (± {:>8.0}, min {:>10.0}, n={})",
+        s.trimmed_mean_ns, s.stddev_ns, s.min_ns, s.iters
+    );
+    s
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Simple throughput formatter.
+pub fn ops_per_sec(ops: u64, ns: f64) -> f64 {
+    ops as f64 / (ns / 1e9)
+}

@@ -1,0 +1,48 @@
+//! Bench E-T1: regenerate Table I and time the three execution paths
+//! of the 128-row / 16-bit batch op (behavioural, bank-parallel, XLA).
+//!
+//! Run: `cargo bench --bench table1`
+
+#[path = "harness.rs"]
+mod harness;
+
+use fast_sram::coordinator::BankSet;
+use fast_sram::coordinator::BatchKind;
+use fast_sram::experiments::table1;
+use fast_sram::fastmem::FastArray;
+use fast_sram::runtime::Runtime;
+use fast_sram::util::rng::Rng;
+
+fn main() {
+    harness::section("Table I — model regeneration");
+    let t = table1::run(128, 16);
+    print!("{}", table1::render(&t));
+    assert!((t.energy_ratio - 5.5).abs() < 0.3, "energy ratio drifted");
+    assert!((t.speed_ratio - 27.2).abs() < 1.5, "speed ratio drifted");
+
+    harness::section("wall-clock of one 128x16 batch op per path");
+    let mut rng = Rng::new(1);
+    let deltas: Vec<u32> = (0..128).map(|_| rng.below(1 << 16) as u32).collect();
+
+    let mut array = FastArray::new(128, 16);
+    harness::bench("behavioural/batch_add(128x16)", 3, 30, || {
+        array.batch_add(&deltas)
+    });
+
+    let mut banks = BankSet::new(1, 128, 16);
+    harness::bench("bankset/apply(1 bank)", 3, 30, || {
+        banks.apply(BatchKind::Add, &deltas).unwrap()
+    });
+
+    if let Ok(rt) = Runtime::load_filtered("artifacts", |n| n == "fast_add_128x16") {
+        let art = rt.get("fast_add_128x16").unwrap();
+        let mut state = vec![0u32; 128];
+        harness::bench("xla/exec2(fast_add_128x16)", 3, 30, || {
+            state = art.exec2(&state, &deltas).unwrap();
+        });
+    } else {
+        println!("(artifacts not built — skipping XLA path; run `make artifacts`)");
+    }
+
+    println!("\nmodeled macro batch time: {:.2} ns (16 cycles x 0.2 ns)", 16.0 * 0.2);
+}

@@ -1,0 +1,29 @@
+//! Bench E-F7/E-F8: regenerate the transient waveform figures and time
+//! the RC simulator.
+//!
+//! Run: `cargo bench --bench waveforms`
+
+#[path = "harness.rs"]
+mod harness;
+
+use fast_sram::experiments::waveforms;
+
+fn main() {
+    harness::section("Fig. 7 — shift transients (4 cells, 800 MHz)");
+    let f7 = waveforms::run_fig7(1.25);
+    print!("{}", waveforms::render_fig7(&f7, 72));
+    assert_eq!(f7.initial, f7.after_full_rotation);
+
+    harness::section("Fig. 8 — 4-bit add transients");
+    let f8 = waveforms::run_fig8(1.25, 0b0101, 0b0110);
+    print!("{}", waveforms::render_fig8(&f8, 72));
+    assert_eq!(f8.result, 0b1011);
+
+    harness::section("transient simulator cost");
+    harness::bench("fig7 sim (4 cells x 4 cycles + traces)", 1, 8, || {
+        waveforms::run_fig7(1.25)
+    });
+    harness::bench("fig8 sim (FA add, 4 cycles + traces)", 1, 8, || {
+        waveforms::run_fig8(1.25, 5, 6)
+    });
+}

@@ -1,0 +1,430 @@
+//! Transient simulation of a chain of shiftable cells driven by the
+//! three-phase clock — regenerates the waveforms of Fig. 7 (shift) and
+//! Fig. 8 (4-bit add through the row ALU).
+//!
+//! Each cell is the Fig. 3(a) netlist:
+//!
+//!   X ──invA──> Y ──sw(φ2)──> W ──invB──> Z ──sw(φ2d)──> X
+//!                     ▲ feedback loop closes progressively ▲
+//!   Z(left) ──TG(φ1)──> X(right)        (inter-cell transfer)
+//!
+//! During φ1 the loop is open at both intra switches; the remnant
+//! charge on W keeps invB driving the old datum on Z (the property the
+//! paper exploits), while X samples the upstream Z. φ2 then propagates
+//! the new X through the loop, and φ2d closes it for static restore.
+//!
+//! The row ALU is injected digitally (its analog behaviour is ordinary
+//! static CMOS, not the interesting dynamic part): the MSB cell's X is
+//! driven through the φ1 transmission gate by the ALU output computed
+//! from the LSB cell's Z.
+
+use super::circuit::{Circuit, Element};
+use super::waveform::{Waveform, WaveformSet};
+use crate::fastmem::alu::{AluOp, RowAlu};
+use crate::timing::{ClockConfig, ClockGen};
+
+/// Device parameters for the transient model (65 nm-class).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellDeviceParams {
+    pub vdd: f64,
+    /// Inverter trip point (V). Monte Carlo shifts this per instance.
+    pub trip: f64,
+    /// Inverter drive resistance (kΩ).
+    pub r_inv_kohm: f64,
+    /// Transmission-gate / NMOS switch on-resistance (kΩ).
+    pub r_sw_kohm: f64,
+    /// Node capacitances (fF).
+    pub c_x_ff: f64,
+    pub c_y_ff: f64,
+    pub c_w_ff: f64,
+    pub c_z_ff: f64,
+    /// Dynamic-node leakage (nA) on X and W.
+    pub i_leak_na: f64,
+}
+
+impl Default for CellDeviceParams {
+    fn default() -> Self {
+        CellDeviceParams {
+            vdd: 1.0,
+            trip: 0.5,
+            r_inv_kohm: 4.0,
+            r_sw_kohm: 2.0,
+            c_x_ff: 1.2,
+            c_y_ff: 1.0,
+            c_w_ff: 1.2,
+            c_z_ff: 1.6, // Z also drives the downstream TG
+            i_leak_na: 0.5,
+        }
+    }
+}
+
+/// Node handles for one simulated cell.
+#[derive(Debug, Clone, Copy)]
+pub struct CellNodes {
+    pub x: usize,
+    pub y: usize,
+    pub w: usize,
+    pub z: usize,
+    sw_phi2: usize,
+    sw_phi2d: usize,
+    tg_phi1: usize,
+}
+
+/// A transient-simulated chain of `n` cells with an optional row ALU
+/// closing the loop (LSB Z -> ALU -> MSB X).
+pub struct CellChain {
+    pub circuit: Circuit,
+    pub cells: Vec<CellNodes>,
+    /// Per-cell trip points (can be perturbed for Monte Carlo).
+    trips: Vec<f64>,
+    params: CellDeviceParams,
+    alu: Option<RowAlu>,
+    /// ALU-output driver element (drives MSB X during φ1).
+    alu_driver: usize,
+    clock: ClockGen,
+}
+
+impl CellChain {
+    /// Build an `n`-cell chain. `trip_offsets[i]` shifts cell i's
+    /// inverter trip points (mismatch); pass `&[]` for nominal.
+    pub fn new(
+        n: usize,
+        params: CellDeviceParams,
+        clock_cfg: ClockConfig,
+        alu_op: Option<AluOp>,
+        trip_offsets: &[f64],
+    ) -> Self {
+        assert!(n >= 2, "chain needs at least 2 cells");
+        assert!(trip_offsets.is_empty() || trip_offsets.len() == n);
+        let clock = ClockGen::new(clock_cfg).expect("valid clock config");
+        let mut circuit = Circuit::new();
+        let mut cells = Vec::with_capacity(n);
+        let mut trips = Vec::with_capacity(n);
+
+        for i in 0..n {
+            let trip = params.trip + trip_offsets.get(i).copied().unwrap_or(0.0);
+            trips.push(trip);
+            let x = circuit.add_node(format!("X{i}"), params.c_x_ff, 0.0);
+            let y = circuit.add_node(format!("Y{i}"), params.c_y_ff, params.vdd);
+            let w = circuit.add_node(format!("W{i}"), params.c_w_ff, params.vdd);
+            let z = circuit.add_node(format!("Z{i}"), params.c_z_ff, 0.0);
+            circuit.add_element(Element::Inverter {
+                input: x,
+                out: y,
+                vdd: params.vdd,
+                trip,
+                r_drive_kohm: params.r_inv_kohm,
+            });
+            circuit.add_element(Element::Inverter {
+                input: w,
+                out: z,
+                vdd: params.vdd,
+                trip,
+                r_drive_kohm: params.r_inv_kohm,
+            });
+            let sw_phi2 = circuit.add_element(Element::Switch {
+                a: y,
+                b: w,
+                r_on_kohm: params.r_sw_kohm,
+                closed: false,
+            });
+            // φ2d switch: Z back to X (loop closure).
+            let sw_phi2d = circuit.add_element(Element::Switch {
+                a: z,
+                b: x,
+                r_on_kohm: params.r_sw_kohm,
+                closed: false,
+            });
+            circuit.add_element(Element::Leak { node: x, i_na: params.i_leak_na });
+            circuit.add_element(Element::Leak { node: w, i_na: params.i_leak_na });
+            cells.push(CellNodes { x, y, w, z, sw_phi2, sw_phi2d, tg_phi1: usize::MAX });
+        }
+        // Inter-cell transmission gates: Z[i+1] -> X[i] (data moves
+        // toward the ALU at index 0; MSB slot is the last cell).
+        for i in 0..n {
+            let upstream_z = if i + 1 < n { Some(cells[i + 1].z) } else { None };
+            if let Some(zu) = upstream_z {
+                let tg = circuit.add_element(Element::Switch {
+                    a: zu,
+                    b: cells[i].x,
+                    r_on_kohm: params.r_sw_kohm,
+                    closed: false,
+                });
+                cells[i].tg_phi1 = tg;
+            }
+        }
+        // ALU output driver into the MSB cell's X (through the φ1 TG,
+        // modelled as an activatable driver).
+        let msb_x = cells[n - 1].x;
+        let alu_driver = circuit.add_element(Element::Driver {
+            node: msb_x,
+            v: 0.0,
+            r_kohm: params.r_sw_kohm,
+            active: false,
+        });
+        CellChain {
+            circuit,
+            cells,
+            trips,
+            params,
+            alu: alu_op.map(RowAlu::new),
+            alu_driver,
+            clock,
+        }
+    }
+
+    /// Load a word into the chain (bit i -> cell i, LSB at cell 0) by
+    /// forcing the static nodes.
+    pub fn load_word(&mut self, word: u32) {
+        for (i, cell) in self.cells.iter().enumerate() {
+            let bit = (word >> i) & 1;
+            let (vz, vx) = if bit == 1 {
+                (self.params.vdd, self.params.vdd)
+            } else {
+                (0.0, 0.0)
+            };
+            self.circuit.nodes[cell.x].v = vx;
+            self.circuit.nodes[cell.y].v = self.params.vdd - vx;
+            self.circuit.nodes[cell.w].v = self.params.vdd - vz;
+            self.circuit.nodes[cell.z].v = vz;
+        }
+    }
+
+    /// Digital readout: bit i from cell i's Z node.
+    pub fn read_word(&self) -> u32 {
+        let mut w = 0;
+        for (i, cell) in self.cells.iter().enumerate() {
+            if self.circuit.voltage(cell.z) > self.trips[i] {
+                w |= 1 << i;
+            }
+        }
+        w
+    }
+
+    /// Run `cycles` shift cycles feeding `operand` bits LSB-first into
+    /// the ALU (ignored without an ALU — pure rotation via pass-through
+    /// of the LSB Z). Captures the requested node voltages.
+    ///
+    /// Returns the waveform set (clock phases + selected nodes).
+    pub fn run_cycles(
+        &mut self,
+        cycles: usize,
+        operand: u32,
+        capture: &[(&str, usize)],
+        samples_per_cycle: usize,
+    ) -> WaveformSet {
+        let period = self.clock.config().period_ns;
+        let mut set = WaveformSet::new();
+        let mut phase_traces = [
+            Waveform::new("phi1"),
+            Waveform::new("phi2"),
+            Waveform::new("phi2d"),
+        ];
+        let mut node_traces: Vec<Waveform> =
+            capture.iter().map(|(n, _)| Waveform::new(*n)).collect();
+
+        // Stability: stay under 0.15 × the stiffest RC in the netlist
+        // (smallest on-resistance into the smallest capacitance).
+        let r_min = self.params.r_sw_kohm.min(self.params.r_inv_kohm);
+        let c_min = self
+            .params
+            .c_x_ff
+            .min(self.params.c_y_ff)
+            .min(self.params.c_w_ff)
+            .min(self.params.c_z_ff);
+        let dt_stable = 0.15 * r_min * c_min * 1e-3;
+        let dt = (period / samples_per_cycle as f64).min(dt_stable);
+        let mut t = 0.0;
+        for cycle in 0..cycles {
+            // ALU evaluation for this cycle, from the LSB cell's datum.
+            let a = if self.circuit.voltage(self.cells[0].z) > self.trips[0] {
+                1u8
+            } else {
+                0u8
+            };
+            let b = ((operand >> cycle) & 1) as u8;
+            let out_bit = match &mut self.alu {
+                Some(alu) => alu.eval(a, b),
+                None => a, // pure rotate
+            };
+            let v_alu = if out_bit == 1 { self.params.vdd } else { 0.0 };
+            self.circuit.set_driver(self.alu_driver, Some(v_alu), false);
+
+            let t_end = (cycle + 1) as f64 * period;
+            let mut prev_phi2d = self.clock.levels(t).phi2d;
+            while t < t_end - 1e-12 {
+                let lv = self.clock.levels(t);
+                for cell in &self.cells {
+                    self.circuit.set_switch(cell.sw_phi2, lv.phi2);
+                    self.circuit.set_switch(cell.sw_phi2d, lv.phi2d);
+                    if cell.tg_phi1 != usize::MAX {
+                        self.circuit.set_switch(cell.tg_phi1, lv.phi1);
+                    }
+                }
+                // ALU drives the MSB X only while φ1 is high.
+                self.circuit.set_driver(self.alu_driver, None, lv.phi1);
+                self.circuit.step(dt);
+                t += dt;
+                // Sample traces.
+                phase_traces[0].push(t, if lv.phi1 { self.params.vdd } else { 0.0 });
+                phase_traces[1].push(t, if lv.phi2 { self.params.vdd } else { 0.0 });
+                phase_traces[2].push(t, if lv.phi2d { self.params.vdd } else { 0.0 });
+                for (k, (_, node)) in capture.iter().enumerate() {
+                    node_traces[k].push(t, self.circuit.voltage(*node));
+                }
+                // Carry commits on φ2d falling edge (Fig. 5b).
+                let now_phi2d = lv.phi2d;
+                if prev_phi2d && !now_phi2d {
+                    if let Some(alu) = &mut self.alu {
+                        alu.commit_carry();
+                    }
+                }
+                prev_phi2d = now_phi2d;
+            }
+            // End-of-cycle safety: ensure carry committed even if the
+            // last φ2d falling edge landed exactly on the boundary.
+            if let Some(alu) = &mut self.alu {
+                alu.commit_carry();
+            }
+        }
+        for p in phase_traces {
+            set.add(p);
+        }
+        for n in node_traces {
+            set.add(n);
+        }
+        set
+    }
+
+    /// Node id of cell `i`'s X (dynamic) node.
+    pub fn x_node(&self, i: usize) -> usize {
+        self.cells[i].x
+    }
+
+    /// Node id of cell `i`'s Z (output) node.
+    pub fn z_node(&self, i: usize) -> usize {
+        self.cells[i].z
+    }
+}
+
+/// Convenience: the Fig. 7 experiment — a 4-cell chain doing a pure
+/// rotation, returning clock + per-cell Z waveforms.
+pub fn fig7_shift_waveforms(period_ns: f64) -> (WaveformSet, u32, u32) {
+    let mut chain = CellChain::new(
+        4,
+        CellDeviceParams::default(),
+        ClockConfig::nominal(period_ns),
+        None,
+        &[],
+    );
+    let init = 0b0101u32;
+    chain.load_word(init);
+    let capture: Vec<(String, usize)> = (0..4)
+        .map(|i| (format!("Z{i}"), chain.z_node(i)))
+        .collect();
+    let cap_refs: Vec<(&str, usize)> =
+        capture.iter().map(|(s, n)| (s.as_str(), *n)).collect();
+    let set = chain.run_cycles(4, 0, &cap_refs, 400);
+    (set, init, chain.read_word())
+}
+
+/// The Fig. 8 experiment — a 4-cell chain with an FA row-ALU executing
+/// a 4-bit add with write-back.
+pub fn fig8_add_waveforms(period_ns: f64, a: u32, b: u32) -> (WaveformSet, u32) {
+    let mut chain = CellChain::new(
+        4,
+        CellDeviceParams::default(),
+        ClockConfig::nominal(period_ns),
+        Some(AluOp::Add),
+        &[],
+    );
+    chain.load_word(a & 0xF);
+    let capture: Vec<(String, usize)> = (0..4)
+        .map(|i| (format!("Z{i}"), chain.z_node(i)))
+        .collect();
+    let cap_refs: Vec<(&str, usize)> =
+        capture.iter().map(|(s, n)| (s.as_str(), *n)).collect();
+    let set = chain.run_cycles(4, b & 0xF, &cap_refs, 400);
+    (set, chain.read_word())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_cycle_rotation_is_identity() {
+        let (_set, init, after) = fig7_shift_waveforms(1.25);
+        assert_eq!(after, init, "4 shifts of a 4-cell loop must restore 0b0101");
+    }
+
+    #[test]
+    fn single_cycle_rotates_by_one() {
+        let mut chain = CellChain::new(
+            4,
+            CellDeviceParams::default(),
+            ClockConfig::nominal(1.25),
+            None,
+            &[],
+        );
+        chain.load_word(0b0001);
+        chain.run_cycles(1, 0, &[], 400);
+        // LSB exits cell0, re-enters at MSB: 0b0001 -> 0b1000.
+        assert_eq!(chain.read_word(), 0b1000);
+    }
+
+    #[test]
+    fn analog_add_matches_arithmetic() {
+        for (a, b) in [(0b0011u32, 0b0001u32), (0b0101, 0b0110), (0b1111, 0b0001)] {
+            let (_set, result) = fig8_add_waveforms(1.25, a, b);
+            assert_eq!(result, (a + b) & 0xF, "a={a:#06b} b={b:#06b}");
+        }
+    }
+
+    #[test]
+    fn waveforms_capture_phases_and_nodes() {
+        let (set, _, _) = fig7_shift_waveforms(1.25);
+        assert!(set.get("phi1").is_some());
+        assert!(set.get("phi2d").is_some());
+        let z0 = set.get("Z0").unwrap();
+        assert!(z0.len() > 100);
+        // Signal must actually swing.
+        assert!(z0.max() > 0.8 && z0.min() < 0.2);
+    }
+
+    #[test]
+    fn remnant_charge_presents_old_datum_during_phi1() {
+        // Mid-φ1, the Z node of a cell holding 1 must still read high
+        // even though its loop is open — the paper's core mechanism.
+        let mut chain = CellChain::new(
+            4,
+            CellDeviceParams::default(),
+            ClockConfig::nominal(1.25),
+            None,
+            &[],
+        );
+        chain.load_word(0b1111);
+        // Run a quarter period (inside φ1).
+        let period = 1.25;
+        let dt = 3e-4;
+        let mut t = 0.0;
+        while t < 0.25 * period {
+            let lv = ClockGen::new(ClockConfig::nominal(period)).unwrap().levels(t);
+            for cell in &chain.cells {
+                chain.circuit.set_switch(cell.sw_phi2, lv.phi2);
+                chain.circuit.set_switch(cell.sw_phi2d, lv.phi2d);
+                if cell.tg_phi1 != usize::MAX {
+                    chain.circuit.set_switch(cell.tg_phi1, lv.phi1);
+                }
+            }
+            chain.circuit.step(dt);
+            t += dt;
+        }
+        for i in 0..4 {
+            assert!(
+                chain.circuit.voltage(chain.z_node(i)) > 0.8,
+                "cell {i} lost its datum during φ1"
+            );
+        }
+    }
+}

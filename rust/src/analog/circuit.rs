@@ -1,0 +1,280 @@
+//! Fixed-timestep RC network simulator — the SPICE stand-in.
+//!
+//! Scope: exactly what the paper's transient figures need. Nodes are
+//! capacitors to ground; elements are resistive switches, CMOS
+//! inverters (modelled as a trip-point comparator driving the output
+//! node toward VDD/GND through an on-resistance), ideal voltage
+//! drivers, and constant leakage sinks. Integration is explicit Euler
+//! with a timestep much smaller than any RC in the netlist (validated
+//! by construction: `Circuit::step` asserts dt < 0.2·min(RC)).
+//!
+//! Units: volts, nanoseconds, kilo-ohms, femto-farads ⇒ current in
+//! µA·(1e-3) … to keep it simple we work in (V, ns, kΩ, fF):
+//! I = V/R [V/kΩ = mA], dV = I·dt/C [mA·ns/fF = V·1e3] — so a factor
+//! of 1e3 applies; the constant is folded into `step`.
+
+/// Node index newtype for readability.
+pub type NodeId = usize;
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    /// Capacitance to ground (fF).
+    pub c_ff: f64,
+    /// Voltage (V).
+    pub v: f64,
+}
+
+/// Circuit elements.
+#[derive(Debug, Clone)]
+pub enum Element {
+    /// Resistive switch between two nodes; conducts when `closed`.
+    Switch {
+        a: NodeId,
+        b: NodeId,
+        r_on_kohm: f64,
+        closed: bool,
+    },
+    /// CMOS inverter: drives `out` toward (in < trip ? vdd : 0)
+    /// through `r_drive_kohm`.
+    Inverter {
+        input: NodeId,
+        out: NodeId,
+        vdd: f64,
+        /// Trip point (V) — mismatch shifts this in Monte Carlo runs.
+        trip: f64,
+        r_drive_kohm: f64,
+    },
+    /// Ideal driver pinning a node toward `v` through `r_kohm` while
+    /// `active`.
+    Driver {
+        node: NodeId,
+        v: f64,
+        r_kohm: f64,
+        active: bool,
+    },
+    /// Constant leakage sink (nA) pulling the node toward ground.
+    Leak { node: NodeId, i_na: f64 },
+}
+
+/// The RC network.
+#[derive(Debug, Clone, Default)]
+pub struct Circuit {
+    pub nodes: Vec<Node>,
+    pub elements: Vec<Element>,
+}
+
+impl Circuit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_node(&mut self, name: impl Into<String>, c_ff: f64, v0: f64) -> NodeId {
+        assert!(c_ff > 0.0, "node needs positive capacitance");
+        self.nodes.push(Node { name: name.into(), c_ff, v: v0 });
+        self.nodes.len() - 1
+    }
+
+    pub fn add_element(&mut self, e: Element) -> usize {
+        self.elements.push(e);
+        self.elements.len() - 1
+    }
+
+    pub fn set_switch(&mut self, idx: usize, closed: bool) {
+        match &mut self.elements[idx] {
+            Element::Switch { closed: c, .. } => *c = closed,
+            _ => panic!("element {idx} is not a switch"),
+        }
+    }
+
+    pub fn set_driver(&mut self, idx: usize, v: Option<f64>, active: bool) {
+        match &mut self.elements[idx] {
+            Element::Driver { v: dv, active: a, .. } => {
+                if let Some(nv) = v {
+                    *dv = nv;
+                }
+                *a = active;
+            }
+            _ => panic!("element {idx} is not a driver"),
+        }
+    }
+
+    pub fn voltage(&self, n: NodeId) -> f64 {
+        self.nodes[n].v
+    }
+
+    /// Smallest RC product (ns) across conducting paths — the stiffness
+    /// bound for the integrator.
+    pub fn min_rc_ns(&self) -> f64 {
+        let mut min_rc = f64::INFINITY;
+        let mut consider = |r_kohm: f64, n: NodeId| {
+            // kΩ·fF = 1e3·1e-15 s = 1e-12 s = 1e-3 ns.
+            let rc_ns = r_kohm * self.nodes[n].c_ff * 1e-3;
+            if rc_ns < min_rc {
+                min_rc = rc_ns;
+            }
+        };
+        for e in &self.elements {
+            match *e {
+                Element::Switch { a, b, r_on_kohm, closed } if closed => {
+                    consider(r_on_kohm, a);
+                    consider(r_on_kohm, b);
+                }
+                Element::Inverter { out, r_drive_kohm, .. } => consider(r_drive_kohm, out),
+                Element::Driver { node, r_kohm, active, .. } if active => consider(r_kohm, node),
+                _ => {}
+            }
+        }
+        min_rc
+    }
+
+    /// Advance one Euler step of `dt_ns`. Panics if dt is too large for
+    /// the stiffest conducting RC (guards against silent instability).
+    pub fn step(&mut self, dt_ns: f64) {
+        debug_assert!(
+            dt_ns <= 0.2 * self.min_rc_ns(),
+            "dt {dt_ns} ns too large for min RC {} ns",
+            self.min_rc_ns()
+        );
+        // Accumulate currents (mA) into each node.
+        let mut i_ma = vec![0.0f64; self.nodes.len()];
+        for e in &self.elements {
+            match *e {
+                Element::Switch { a, b, r_on_kohm, closed } => {
+                    if closed {
+                        let i = (self.nodes[a].v - self.nodes[b].v) / r_on_kohm;
+                        i_ma[a] -= i;
+                        i_ma[b] += i;
+                    }
+                }
+                Element::Inverter { input, out, vdd, trip, r_drive_kohm } => {
+                    let target = if self.nodes[input].v < trip { vdd } else { 0.0 };
+                    let i = (target - self.nodes[out].v) / r_drive_kohm;
+                    i_ma[out] += i;
+                }
+                Element::Driver { node, v, r_kohm, active } => {
+                    if active {
+                        let i = (v - self.nodes[node].v) / r_kohm;
+                        i_ma[node] += i;
+                    }
+                }
+                Element::Leak { node, i_na } => {
+                    // Subthreshold sink; stops at ground.
+                    if self.nodes[node].v > 0.0 {
+                        i_ma[node] -= i_na * 1e-6;
+                    }
+                }
+            }
+        }
+        // dV = I dt / C with unit factor: mA·ns/fF = 1e-3·1e-9/1e-15 V = 1e3 V.
+        for (n, node) in self.nodes.iter_mut().enumerate() {
+            node.v += i_ma[n] * dt_ns / node.c_ff * 1e3;
+        }
+    }
+
+    /// Run for `t_ns` with automatic step sizing (0.1·min RC, capped).
+    pub fn run(&mut self, t_ns: f64, mut on_sample: impl FnMut(f64, &Circuit)) {
+        let mut t = 0.0;
+        while t < t_ns {
+            let dt = (0.1 * self.min_rc_ns()).min(t_ns - t).min(0.01);
+            self.step(dt);
+            t += dt;
+            on_sample(t, self);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rc_charge_follows_exponential() {
+        // Driver (1V, 10kΩ) into a 10fF node: τ = 0.1 ns.
+        let mut c = Circuit::new();
+        let n = c.add_node("n", 10.0, 0.0);
+        c.add_element(Element::Driver { node: n, v: 1.0, r_kohm: 10.0, active: true });
+        let tau = 0.1;
+        let mut t = 0.0;
+        while t < tau {
+            c.step(1e-3);
+            t += 1e-3;
+        }
+        // After one τ the node should be at ~63.2%.
+        assert!((c.voltage(n) - 0.632).abs() < 0.02, "v = {}", c.voltage(n));
+    }
+
+    #[test]
+    fn switch_equalizes_charge() {
+        let mut c = Circuit::new();
+        let a = c.add_node("a", 10.0, 1.0);
+        let b = c.add_node("b", 10.0, 0.0);
+        let sw = c.add_element(Element::Switch { a, b, r_on_kohm: 5.0, closed: false });
+        // Open: nothing moves.
+        for _ in 0..100 {
+            c.step(1e-3);
+        }
+        assert_eq!(c.voltage(a), 1.0);
+        // Closed: equal caps converge to the midpoint.
+        c.set_switch(sw, true);
+        for _ in 0..10_000 {
+            c.step(1e-3);
+        }
+        assert!((c.voltage(a) - 0.5).abs() < 0.01);
+        assert!((c.voltage(b) - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn inverter_inverts() {
+        let mut c = Circuit::new();
+        let input = c.add_node("in", 1.0, 0.0);
+        let out = c.add_node("out", 5.0, 0.0);
+        c.add_element(Element::Inverter {
+            input,
+            out,
+            vdd: 1.0,
+            trip: 0.5,
+            r_drive_kohm: 5.0,
+        });
+        for _ in 0..20_000 {
+            c.step(5e-4);
+        }
+        assert!(c.voltage(out) > 0.95, "low in -> high out, got {}", c.voltage(out));
+        c.nodes[input].v = 1.0;
+        for _ in 0..20_000 {
+            c.step(5e-4);
+        }
+        assert!(c.voltage(out) < 0.05, "high in -> low out, got {}", c.voltage(out));
+    }
+
+    #[test]
+    fn leak_discharges_and_stops_at_ground() {
+        let mut c = Circuit::new();
+        let n = c.add_node("dyn", 1.0, 1.0);
+        c.add_element(Element::Leak { node: n, i_na: 0.5 });
+        // I = 0.5 nA on 1 fF: dV/dt = 0.5 V/µs ⇒ 0.5 V after 1 µs.
+        let mut t = 0.0;
+        while t < 1000.0 {
+            c.step(0.01);
+            t += 0.01;
+        }
+        let v = c.voltage(n);
+        assert!((v - 0.5).abs() < 0.02, "after 1µs leak: {v}");
+        while t < 10_000.0 {
+            c.step(0.01);
+            t += 0.01;
+        }
+        assert!(c.voltage(n) >= -0.01, "leak must stop at ground");
+    }
+
+    #[test]
+    fn min_rc_tracks_conducting_elements_only() {
+        let mut c = Circuit::new();
+        let a = c.add_node("a", 1.0, 0.0);
+        let b = c.add_node("b", 1.0, 0.0);
+        let sw = c.add_element(Element::Switch { a, b, r_on_kohm: 1.0, closed: false });
+        assert_eq!(c.min_rc_ns(), f64::INFINITY);
+        c.set_switch(sw, true);
+        assert!((c.min_rc_ns() - 1e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,20 @@
+//! Analog substrate: the SPICE stand-in for the paper's transient,
+//! noise-margin and Monte Carlo results (Figs. 7, 8, 12).
+//!
+//! - [`circuit`] — fixed-timestep RC network simulator
+//! - [`cellchain`] — the Fig. 3a cell netlist chained into a row
+//! - [`waveform`] — trace capture, CSV, ASCII rendering
+//! - [`leak`] — dynamic-node retention model
+//! - [`montecarlo`] — mismatch sampling, eye pattern, noise margin
+
+pub mod cellchain;
+pub mod circuit;
+pub mod leak;
+pub mod montecarlo;
+pub mod waveform;
+
+pub use cellchain::{fig7_shift_waveforms, fig8_add_waveforms, CellChain, CellDeviceParams};
+pub use circuit::{Circuit, Element};
+pub use leak::RetentionModel;
+pub use montecarlo::{McResult, McSample, MonteCarlo, VariationParams};
+pub use waveform::{Waveform, WaveformSet};

@@ -1,0 +1,193 @@
+//! Waveform capture and rendering for the transient figures
+//! (Figs. 7, 8, 12): CSV export for plotting and a terminal ASCII view.
+
+use std::fmt::Write as _;
+
+/// One named analog trace.
+#[derive(Debug, Clone, Default)]
+pub struct Waveform {
+    pub name: String,
+    pub t_ns: Vec<f64>,
+    pub v: Vec<f64>,
+}
+
+impl Waveform {
+    pub fn new(name: impl Into<String>) -> Self {
+        Waveform { name: name.into(), t_ns: Vec::new(), v: Vec::new() }
+    }
+
+    pub fn push(&mut self, t_ns: f64, v: f64) {
+        self.t_ns.push(t_ns);
+        self.v.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.t_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t_ns.is_empty()
+    }
+
+    /// Value at (or just before) time t, by binary search.
+    pub fn at(&self, t_ns: f64) -> Option<f64> {
+        if self.is_empty() || t_ns < self.t_ns[0] {
+            return None;
+        }
+        let idx = match self
+            .t_ns
+            .binary_search_by(|x| x.partial_cmp(&t_ns).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        };
+        Some(self.v[idx])
+    }
+
+    pub fn min(&self) -> f64 {
+        self.v.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.v.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// A bundle of traces sharing a time base.
+#[derive(Debug, Clone, Default)]
+pub struct WaveformSet {
+    pub traces: Vec<Waveform>,
+}
+
+impl WaveformSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, w: Waveform) {
+        self.traces.push(w);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Waveform> {
+        self.traces.iter().find(|w| w.name == name)
+    }
+
+    /// CSV: time column + one column per trace (sampled on the first
+    /// trace's time base).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str("t_ns");
+        for w in &self.traces {
+            out.push(',');
+            out.push_str(&w.name);
+        }
+        out.push('\n');
+        if self.traces.is_empty() {
+            return out;
+        }
+        let base = &self.traces[0];
+        for (i, &t) in base.t_ns.iter().enumerate() {
+            let _ = write!(out, "{t:.5}");
+            for w in &self.traces {
+                let v = if std::ptr::eq(w, base) {
+                    w.v[i]
+                } else {
+                    w.at(t).unwrap_or(f64::NAN)
+                };
+                let _ = write!(out, ",{v:.5}");
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Compact ASCII oscillogram: each trace rendered as a row of block
+    /// characters over `width` time bins (mean per bin, scaled to the
+    /// trace's own min/max).
+    pub fn render_ascii(&self, width: usize) -> String {
+        const LEVELS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let mut out = String::new();
+        for w in &self.traces {
+            if w.is_empty() {
+                continue;
+            }
+            let (lo, hi) = (w.min(), w.max());
+            let span = (hi - lo).max(1e-12);
+            let t0 = w.t_ns[0];
+            let t1 = *w.t_ns.last().unwrap();
+            let _ = write!(out, "{:>10} ", w.name);
+            for b in 0..width {
+                let ta = t0 + (t1 - t0) * b as f64 / width as f64;
+                let tb = t0 + (t1 - t0) * (b + 1) as f64 / width as f64;
+                let last = b == width - 1;
+                let mut sum = 0.0;
+                let mut n = 0;
+                for (i, &t) in w.t_ns.iter().enumerate() {
+                    if t >= ta && (t < tb || (last && t <= tb)) {
+                        sum += w.v[i];
+                        n += 1;
+                    }
+                }
+                let v = if n > 0 { sum / n as f64 } else { w.at(ta).unwrap_or(lo) };
+                let lvl = (((v - lo) / span) * (LEVELS.len() - 1) as f64).round() as usize;
+                out.push(LEVELS[lvl.min(LEVELS.len() - 1)]);
+            }
+            let _ = writeln!(out, "  [{lo:.2}V..{hi:.2}V]");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp() -> Waveform {
+        let mut w = Waveform::new("ramp");
+        for i in 0..=10 {
+            w.push(i as f64, i as f64 * 0.1);
+        }
+        w
+    }
+
+    #[test]
+    fn at_interpolates_step_style() {
+        let w = ramp();
+        assert_eq!(w.at(-1.0), None);
+        assert_eq!(w.at(0.0), Some(0.0));
+        assert_eq!(w.at(5.5), Some(0.5));
+        assert_eq!(w.at(100.0), Some(1.0));
+    }
+
+    #[test]
+    fn min_max() {
+        let w = ramp();
+        assert_eq!(w.min(), 0.0);
+        assert!((w.max() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut s = WaveformSet::new();
+        s.add(ramp());
+        let mut w2 = Waveform::new("const");
+        w2.push(0.0, 0.7);
+        w2.push(10.0, 0.7);
+        s.add(w2);
+        let csv = s.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "t_ns,ramp,const");
+        assert_eq!(lines.len(), 12); // header + 11 samples
+        assert!(lines[1].starts_with("0.00000,0.00000,0.7"));
+    }
+
+    #[test]
+    fn ascii_renders_all_traces() {
+        let mut s = WaveformSet::new();
+        s.add(ramp());
+        let art = s.render_ascii(20);
+        assert!(art.contains("ramp"));
+        assert!(art.contains('█'));
+        assert!(art.contains('▁'));
+    }
+}

@@ -1,0 +1,251 @@
+//! Graph feature updates — the paper's graph-computing motivation
+//! ("the parallel feature update in graph computing", refs [7][8]).
+//!
+//! A CSR graph whose per-node integer features live in FAST rows. One
+//! propagation round sends each node's contribution to its neighbours;
+//! the coordinator coalesces all messages per destination into one
+//! dense delta vector, so the whole round lands as O(1) fully-
+//! concurrent batch ops instead of |E| row-by-row read-modify-writes.
+
+use anyhow::ensure;
+
+use crate::coordinator::{UpdateEngine, UpdateRequest};
+use crate::util::bits;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Compressed-sparse-row directed graph.
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    /// offsets[n]..offsets[n+1] indexes `targets` for node n's out-edges.
+    pub offsets: Vec<usize>,
+    pub targets: Vec<usize>,
+}
+
+impl CsrGraph {
+    pub fn nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn out_neighbors(&self, n: usize) -> &[usize] {
+        &self.targets[self.offsets[n]..self.offsets[n + 1]]
+    }
+
+    /// Build from an edge list.
+    pub fn from_edges(nodes: usize, edges: &[(usize, usize)]) -> Self {
+        let mut deg = vec![0usize; nodes];
+        for &(s, t) in edges {
+            assert!(s < nodes && t < nodes, "edge ({s},{t}) out of range");
+            deg[s] += 1;
+        }
+        let mut offsets = Vec::with_capacity(nodes + 1);
+        offsets.push(0);
+        for n in 0..nodes {
+            offsets.push(offsets[n] + deg[n]);
+        }
+        let mut fill = offsets.clone();
+        let mut targets = vec![0usize; edges.len()];
+        for &(s, t) in edges {
+            targets[fill[s]] = t;
+            fill[s] += 1;
+        }
+        CsrGraph { offsets, targets }
+    }
+
+    /// Random graph: `nodes` nodes, ~`avg_degree` out-edges per node.
+    pub fn random(nodes: usize, avg_degree: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut edges = Vec::with_capacity(nodes * avg_degree);
+        for s in 0..nodes {
+            for _ in 0..avg_degree {
+                let t = rng.below(nodes as u64) as usize;
+                edges.push((s, t));
+            }
+        }
+        Self::from_edges(nodes, &edges)
+    }
+
+    /// A ring + chords graph (deterministic, connected).
+    pub fn ring_with_chords(nodes: usize, chord_stride: usize) -> Self {
+        let mut edges = Vec::with_capacity(nodes * 2);
+        for n in 0..nodes {
+            edges.push((n, (n + 1) % nodes));
+            if chord_stride > 1 {
+                edges.push((n, (n + chord_stride) % nodes));
+            }
+        }
+        Self::from_edges(nodes, &edges)
+    }
+}
+
+/// Graph engine: features in FAST rows, propagation via batch updates.
+pub struct GraphEngine {
+    graph: CsrGraph,
+    engine: UpdateEngine,
+    q: usize,
+}
+
+impl GraphEngine {
+    /// The engine must have at least `graph.nodes()` rows.
+    pub fn new(graph: CsrGraph, engine: UpdateEngine) -> Result<Self> {
+        ensure!(
+            engine.config().rows >= graph.nodes(),
+            "engine rows {} < graph nodes {}",
+            engine.config().rows,
+            graph.nodes()
+        );
+        let q = engine.config().q;
+        Ok(GraphEngine { graph, engine, q })
+    }
+
+    pub fn graph(&self) -> &CsrGraph {
+        &self.graph
+    }
+
+    /// Initialize node features.
+    pub fn set_features(&mut self, feats: &[u32]) -> Result<()> {
+        ensure!(feats.len() == self.graph.nodes(), "feature count mismatch");
+        for (n, &f) in feats.iter().enumerate() {
+            self.engine.write(n, f)?;
+        }
+        Ok(())
+    }
+
+    pub fn features(&mut self) -> Result<Vec<u32>> {
+        let snap = self.engine.snapshot()?;
+        Ok(snap[..self.graph.nodes()].to_vec())
+    }
+
+    /// One propagation round: every node n sends `msg(feature[n])` to
+    /// each out-neighbour; destinations accumulate mod 2^q. Message
+    /// generation reads a consistent snapshot (synchronous/Jacobi
+    /// semantics, as in GCN-style feature aggregation).
+    pub fn propagate_round(&mut self, msg: impl Fn(u32) -> u32) -> Result<()> {
+        let feats = self.features()?;
+        // Bulk-submit per round: one channel crossing per chunk instead
+        // of per edge (§Perf: ~3× on message-heavy graphs).
+        let mut reqs = Vec::with_capacity(self.graph.edges());
+        for (n, &f) in feats.iter().enumerate() {
+            let m = msg(f) & bits::mask(self.q);
+            if m == 0 {
+                continue;
+            }
+            for &t in self.graph.out_neighbors(n) {
+                reqs.push(UpdateRequest::add(t, m));
+            }
+        }
+        for chunk in reqs.chunks(8192) {
+            self.engine.submit_many(chunk.to_vec())?;
+        }
+        self.engine.flush()
+    }
+
+    /// Run `rounds` of degree-normalized-ish accumulate: each node sends
+    /// feature >> shift (integer attenuation) to neighbours.
+    pub fn run(&mut self, rounds: usize, attenuation_shift: u32) -> Result<()> {
+        for _ in 0..rounds {
+            self.propagate_round(|f| f >> attenuation_shift)?;
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> crate::coordinator::EngineStats {
+        self.engine.stats()
+    }
+
+    pub fn close(self) -> Result<()> {
+        self.engine.shutdown()
+    }
+}
+
+/// Reference implementation of `propagate_round` over plain vectors —
+/// the oracle the engine-backed version is tested against.
+pub fn reference_round(
+    graph: &CsrGraph,
+    feats: &[u32],
+    q: usize,
+    msg: impl Fn(u32) -> u32,
+) -> Vec<u32> {
+    let mut out = feats.to_vec();
+    for (n, &f) in feats.iter().enumerate() {
+        let m = msg(f) & bits::mask(q);
+        for &t in graph.out_neighbors(n) {
+            out[t] = bits::add_mod(out[t], m, q);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineConfig, FastBackend};
+
+    fn engine(rows: usize) -> UpdateEngine {
+        let cfg = EngineConfig::new(rows, 16);
+        UpdateEngine::start(cfg, move || {
+            Ok(Box::new(FastBackend::new(rows.div_ceil(128).max(1), rows.min(128), 16)))
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn csr_construction() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (3, 0)]);
+        assert_eq!(g.nodes(), 4);
+        assert_eq!(g.edges(), 4);
+        assert_eq!(g.out_neighbors(0), &[1, 2]);
+        assert_eq!(g.out_neighbors(2), &[] as &[usize]);
+    }
+
+    #[test]
+    fn ring_graph_shape() {
+        let g = CsrGraph::ring_with_chords(8, 3);
+        assert_eq!(g.nodes(), 8);
+        assert_eq!(g.edges(), 16);
+        assert_eq!(g.out_neighbors(7), &[0, 2]);
+    }
+
+    #[test]
+    fn one_round_matches_reference() {
+        let g = CsrGraph::ring_with_chords(16, 5);
+        let feats: Vec<u32> = (0..16).map(|i| (i * 100 + 7) as u32).collect();
+        let want = reference_round(&g, &feats, 16, |f| f >> 1);
+
+        let mut ge = GraphEngine::new(g, engine(128)).unwrap();
+        ge.set_features(&feats).unwrap();
+        ge.propagate_round(|f| f >> 1).unwrap();
+        assert_eq!(ge.features().unwrap(), want);
+        ge.close().unwrap();
+    }
+
+    #[test]
+    fn multi_round_random_graph_matches_reference() {
+        let g = CsrGraph::random(100, 4, 9);
+        let feats: Vec<u32> = (0..100).map(|i| (i * 13 % 997) as u32).collect();
+
+        let mut want = feats.clone();
+        for _ in 0..3 {
+            want = reference_round(&g, &want, 16, |f| f >> 2);
+        }
+
+        let mut ge = GraphEngine::new(g, engine(128)).unwrap();
+        ge.set_features(&feats).unwrap();
+        ge.run(3, 2).unwrap();
+        assert_eq!(ge.features().unwrap(), want);
+        let s = ge.stats();
+        // ~400 messages/round × 3 rounds collapse into few batches.
+        assert!(s.batches < 60, "batches = {}", s.batches);
+        ge.close().unwrap();
+    }
+
+    #[test]
+    fn rejects_graph_larger_than_engine() {
+        let g = CsrGraph::random(200, 2, 1);
+        assert!(GraphEngine::new(g, engine(128)).is_err());
+    }
+}

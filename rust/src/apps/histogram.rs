@@ -1,0 +1,120 @@
+//! Streaming histogram — the "high-concurrency access-intensive
+//! general cache" scenario (Section II.A): many independent counters
+//! receiving concurrent increments.
+
+use anyhow::ensure;
+
+use crate::coordinator::{UpdateEngine, UpdateRequest};
+use crate::Result;
+
+/// Fixed-bucket histogram over [lo, hi), counters in FAST rows.
+pub struct Histogram {
+    engine: UpdateEngine,
+    lo: f64,
+    hi: f64,
+    buckets: usize,
+}
+
+impl Histogram {
+    pub fn new(engine: UpdateEngine, lo: f64, hi: f64, buckets: usize) -> Result<Self> {
+        ensure!(hi > lo, "empty range");
+        ensure!(buckets >= 1 && buckets <= engine.config().rows,
+            "bucket count {} exceeds engine rows {}", buckets, engine.config().rows);
+        Ok(Histogram { engine, lo, hi, buckets })
+    }
+
+    pub fn buckets(&self) -> usize {
+        self.buckets
+    }
+
+    /// Bucket index for a value (clamped to the edge buckets).
+    pub fn bucket_of(&self, v: f64) -> usize {
+        if v < self.lo {
+            return 0;
+        }
+        let idx = ((v - self.lo) / (self.hi - self.lo) * self.buckets as f64) as usize;
+        idx.min(self.buckets - 1)
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, v: f64) -> Result<()> {
+        let b = self.bucket_of(v);
+        self.engine.submit_blocking(UpdateRequest::add(b, 1))
+    }
+
+    /// Record with a weight.
+    pub fn record_weighted(&mut self, v: f64, weight: u32) -> Result<()> {
+        let b = self.bucket_of(v);
+        self.engine.submit_blocking(UpdateRequest::add(b, weight))
+    }
+
+    /// Bucket counts (consistent snapshot).
+    pub fn counts(&mut self) -> Result<Vec<u32>> {
+        let snap = self.engine.snapshot()?;
+        Ok(snap[..self.buckets].to_vec())
+    }
+
+    pub fn total(&mut self) -> Result<u64> {
+        Ok(self.counts()?.iter().map(|&c| c as u64).sum())
+    }
+
+    pub fn stats(&self) -> crate::coordinator::EngineStats {
+        self.engine.stats()
+    }
+
+    pub fn close(self) -> Result<()> {
+        self.engine.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineConfig, FastBackend};
+    use crate::util::rng::Rng;
+
+    fn engine(rows: usize) -> UpdateEngine {
+        let cfg = EngineConfig::new(rows, 16);
+        UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(1, rows, 16)))).unwrap()
+    }
+
+    #[test]
+    fn bucket_mapping() {
+        let h = Histogram::new(engine(128), 0.0, 10.0, 10).unwrap();
+        assert_eq!(h.bucket_of(-5.0), 0);
+        assert_eq!(h.bucket_of(0.0), 0);
+        assert_eq!(h.bucket_of(5.0), 5);
+        assert_eq!(h.bucket_of(9.999), 9);
+        assert_eq!(h.bucket_of(50.0), 9);
+    }
+
+    #[test]
+    fn counts_match_reference() {
+        let mut h = Histogram::new(engine(128), 0.0, 1.0, 16).unwrap();
+        let mut rng = Rng::new(5);
+        let mut want = vec![0u32; 16];
+        for _ in 0..5000 {
+            let v = rng.f64();
+            want[h.bucket_of(v)] += 1;
+            h.record(v).unwrap();
+        }
+        assert_eq!(h.counts().unwrap(), want);
+        assert_eq!(h.total().unwrap(), 5000);
+        let s = h.stats();
+        assert!(s.rows_per_batch > 1.0);
+        h.close().unwrap();
+    }
+
+    #[test]
+    fn weighted_records() {
+        let mut h = Histogram::new(engine(128), 0.0, 4.0, 4).unwrap();
+        h.record_weighted(0.5, 10).unwrap();
+        h.record_weighted(3.5, 7).unwrap();
+        assert_eq!(h.counts().unwrap(), vec![10, 0, 0, 7]);
+    }
+
+    #[test]
+    fn rejects_too_many_buckets() {
+        assert!(Histogram::new(engine(128), 0.0, 1.0, 129).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Application workloads motivating the paper (Section I):
+//!
+//! - [`table`] — database-style delta-update key/counter table
+//! - [`graph`] — CSR graph with row-parallel feature propagation
+//! - [`histogram`] — high-concurrency streaming counters
+
+pub mod graph;
+pub mod histogram;
+pub mod table;
+
+pub use graph::{reference_round, CsrGraph, GraphEngine};
+pub use histogram::Histogram;
+pub use table::DeltaTable;

@@ -1,0 +1,200 @@
+//! Delta-update table store — the paper's database motivation ("the
+//! table update in a database", "delta update of a cache table").
+//!
+//! A fixed-capacity key→counter table: keys hash to rows of the FAST
+//! array (open addressing for collisions); counter mutations become
+//! row-update requests through the coordinator, so thousands of
+//! concurrent deltas collapse into a handful of fully-concurrent batch
+//! ops.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::coordinator::{UpdateEngine, UpdateRequest};
+use crate::Result;
+
+/// A key→counter table backed by the update engine.
+pub struct DeltaTable {
+    engine: UpdateEngine,
+    /// key → row assignment.
+    index: HashMap<u64, usize>,
+    /// row occupancy (open addressing).
+    occupied: Vec<bool>,
+    capacity: usize,
+}
+
+impl DeltaTable {
+    /// Wrap an engine; capacity = engine rows.
+    pub fn new(engine: UpdateEngine) -> Self {
+        let capacity = engine.config().rows;
+        DeltaTable {
+            engine,
+            index: HashMap::with_capacity(capacity),
+            occupied: vec![false; capacity],
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Row assigned to `key`, inserting if new. Errors when full.
+    fn row_for(&mut self, key: u64) -> Result<usize> {
+        if let Some(&row) = self.index.get(&key) {
+            return Ok(row);
+        }
+        if self.index.len() >= self.capacity {
+            bail!("table full ({} keys)", self.capacity);
+        }
+        // Open addressing: splitmix the key and probe linearly.
+        let mut h = key;
+        let hashed = crate::util::rng::splitmix64(&mut h) as usize;
+        let mut row = hashed % self.capacity;
+        while self.occupied[row] {
+            row = (row + 1) % self.capacity;
+        }
+        self.occupied[row] = true;
+        self.index.insert(key, row);
+        Ok(row)
+    }
+
+    /// key += delta (mod 2^q). Creates the key at 0 if absent.
+    pub fn increment(&mut self, key: u64, delta: u32) -> Result<()> {
+        let row = self.row_for(key)?;
+        self.engine.submit_blocking(UpdateRequest::add(row, delta))
+    }
+
+    /// key -= delta (mod 2^q). Creates the key at 0 if absent.
+    pub fn decrement(&mut self, key: u64, delta: u32) -> Result<()> {
+        let row = self.row_for(key)?;
+        self.engine.submit_blocking(UpdateRequest::sub(row, delta))
+    }
+
+    /// Current value (read-your-writes: flushes pending deltas).
+    pub fn get(&mut self, key: u64) -> Result<u32> {
+        let row = *self
+            .index
+            .get(&key)
+            .ok_or_else(|| anyhow!("key {key} not present"))?;
+        self.engine.read(row)
+    }
+
+    /// Set a key to an absolute value (conventional-port write).
+    pub fn put(&mut self, key: u64, value: u32) -> Result<()> {
+        let row = self.row_for(key)?;
+        self.engine.write(row, value)
+    }
+
+    /// All (key, value) pairs, via one consistent snapshot.
+    pub fn scan(&mut self) -> Result<Vec<(u64, u32)>> {
+        let snap = self.engine.snapshot()?;
+        let mut out: Vec<(u64, u32)> = self
+            .index
+            .iter()
+            .map(|(&k, &row)| (k, snap[row]))
+            .collect();
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Engine statistics (batching efficiency, modeled cost).
+    pub fn stats(&self) -> crate::coordinator::EngineStats {
+        self.engine.stats()
+    }
+
+    /// Shut the table down, flushing pending work.
+    pub fn close(self) -> Result<()> {
+        self.engine.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineConfig, FastBackend};
+
+    fn table(rows: usize) -> DeltaTable {
+        let cfg = EngineConfig::new(rows, 16);
+        let e = UpdateEngine::start(cfg, move || {
+            Ok(Box::new(FastBackend::new(rows.div_ceil(128).max(1), rows.min(128), 16)))
+        })
+        .unwrap();
+        DeltaTable::new(e)
+    }
+
+    #[test]
+    fn increment_get_roundtrip() {
+        let mut t = table(128);
+        t.increment(42, 10).unwrap();
+        t.increment(42, 5).unwrap();
+        t.increment(1000, 7).unwrap();
+        t.decrement(42, 3).unwrap();
+        assert_eq!(t.get(42).unwrap(), 12);
+        assert_eq!(t.get(1000).unwrap(), 7);
+        t.close().unwrap();
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let mut t = table(128);
+        assert!(t.get(99).is_err());
+    }
+
+    #[test]
+    fn put_overwrites() {
+        let mut t = table(128);
+        t.increment(5, 3).unwrap();
+        t.put(5, 1000).unwrap();
+        t.increment(5, 1).unwrap();
+        assert_eq!(t.get(5).unwrap(), 1001);
+    }
+
+    #[test]
+    fn collision_handling_many_keys() {
+        let mut t = table(128);
+        for k in 0..128u64 {
+            t.increment(k, (k + 1) as u32).unwrap();
+        }
+        for k in 0..128u64 {
+            assert_eq!(t.get(k).unwrap(), (k + 1) as u32, "key {k}");
+        }
+        assert_eq!(t.len(), 128);
+        // 129th key must fail.
+        assert!(t.increment(9999, 1).is_err());
+    }
+
+    #[test]
+    fn scan_returns_all_pairs() {
+        let mut t = table(128);
+        for k in [3u64, 1, 2] {
+            t.increment(k, k as u32 * 10).unwrap();
+        }
+        let pairs = t.scan().unwrap();
+        assert_eq!(pairs, vec![(1, 10), (2, 20), (3, 30)]);
+    }
+
+    #[test]
+    fn batching_amortizes_many_updates() {
+        let mut t = table(128);
+        for i in 0..10_000u64 {
+            t.increment(i % 64, 1).unwrap();
+        }
+        let _ = t.get(0).unwrap();
+        let s = t.stats();
+        assert!(
+            s.batches < 10_000 / 8,
+            "10k updates should collapse into few batches, got {}",
+            s.batches
+        );
+    }
+}

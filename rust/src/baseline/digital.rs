@@ -1,0 +1,165 @@
+//! The fully-digital near-memory computing baseline (paper Fig. 9):
+//! a general-purpose 6T SRAM assisted by standard-cell digital logic.
+//! Batch updates sweep the array **row by row** through a read → ALU →
+//! write-back pipeline — the serialization FAST eliminates.
+//!
+//! Functionally equivalent to `FastArray` batch ops (same q-bit modular
+//! semantics) so results can be diffed word-for-word; the difference is
+//! the cost profile, which `energy::DigitalModel` charges per row.
+
+use super::sram6t::Sram6T;
+use crate::energy::{Cost, DigitalModel};
+use crate::fastmem::AluOp;
+use crate::util::bits;
+
+/// Outcome of one baseline batch update.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepReport {
+    /// Rows processed (pipeline iterations).
+    pub rows: u64,
+    /// Port reads / writes issued.
+    pub reads: u64,
+    pub writes: u64,
+    /// Modeled cost of the sweep.
+    pub cost: Cost,
+}
+
+/// The near-memory digital engine wrapping a 6T SRAM.
+#[derive(Debug, Clone)]
+pub struct DigitalEngine {
+    sram: Sram6T,
+    model: DigitalModel,
+    q: usize,
+}
+
+impl DigitalEngine {
+    pub fn new(rows: usize, q: usize) -> Self {
+        DigitalEngine {
+            sram: Sram6T::new(rows, q),
+            model: DigitalModel::default(),
+            q,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.sram.rows()
+    }
+
+    pub fn width(&self) -> usize {
+        self.q
+    }
+
+    pub fn load(&mut self, words: &[u32]) {
+        self.sram.load(words);
+    }
+
+    pub fn snapshot(&self) -> Vec<u32> {
+        self.sram.snapshot()
+    }
+
+    pub fn read_row(&mut self, row: usize) -> u32 {
+        self.sram.read(row).expect("row in range")
+    }
+
+    pub fn write_row(&mut self, row: usize, word: u32) {
+        self.sram.write(row, word).expect("row in range, word in width")
+    }
+
+    /// Row-by-row batch update: for every row, read, apply the ALU op
+    /// with the row's operand, write back. One operand per row.
+    pub fn batch_apply(&mut self, op: AluOp, operands: &[u32]) -> SweepReport {
+        assert_eq!(operands.len(), self.sram.rows());
+        let rows = self.sram.rows();
+        let m = bits::mask(self.q);
+        for (r, &operand) in operands.iter().enumerate() {
+            let cur = self.sram.read(r).expect("in range");
+            let next = match op {
+                AluOp::Add => bits::add_mod(cur, operand, self.q),
+                AluOp::Sub => bits::sub_mod(cur, operand, self.q),
+                AluOp::And => cur & operand & m,
+                AluOp::Or => (cur | operand) & m,
+                AluOp::Xor => (cur ^ operand) & m,
+                AluOp::Pass => cur,
+            };
+            self.sram.write(r, next).expect("in range");
+        }
+        SweepReport {
+            rows: rows as u64,
+            reads: rows as u64,
+            writes: rows as u64,
+            cost: self.model.batch_update(rows, self.q),
+        }
+    }
+
+    pub fn batch_add(&mut self, operands: &[u32]) -> SweepReport {
+        self.batch_apply(AluOp::Add, operands)
+    }
+
+    pub fn batch_sub(&mut self, operands: &[u32]) -> SweepReport {
+        self.batch_apply(AluOp::Sub, operands)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastmem::FastArray;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batch_add_semantics() {
+        let mut e = DigitalEngine::new(8, 16);
+        e.load(&[10, 20, 30, 40, 50, 60, 70, 0xFFFF]);
+        let rep = e.batch_add(&[1, 2, 3, 4, 5, 6, 7, 1]);
+        assert_eq!(rep.rows, 8);
+        assert_eq!(
+            e.snapshot(),
+            vec![11, 22, 33, 44, 55, 66, 77, 0]
+        );
+    }
+
+    #[test]
+    fn same_function_as_fast_array() {
+        // The paper's requirement: "This baseline is built with the same
+        // function as the FAST SRAM."
+        let mut rng = Rng::new(17);
+        let init: Vec<u32> = (0..32).map(|_| rng.below(1 << 16) as u32).collect();
+        let deltas: Vec<u32> = (0..32).map(|_| rng.below(1 << 16) as u32).collect();
+
+        let mut fast = FastArray::new(32, 16);
+        fast.load(&init);
+        fast.batch_add(&deltas);
+
+        let mut dig = DigitalEngine::new(32, 16);
+        dig.load(&init);
+        dig.batch_add(&deltas);
+
+        assert_eq!(fast.snapshot(), dig.snapshot());
+    }
+
+    #[test]
+    fn sweep_cost_scales_with_rows() {
+        let mut small = DigitalEngine::new(32, 16);
+        let mut large = DigitalEngine::new(256, 16);
+        let r1 = small.batch_add(&vec![1; 32]);
+        let r2 = large.batch_add(&vec![1; 256]);
+        assert!(r2.cost.latency_ns > 7.0 * r1.cost.latency_ns);
+        assert!(r2.cost.energy_fj > 8.0 * r1.cost.energy_fj);
+    }
+
+    #[test]
+    fn logic_ops_match_host_semantics() {
+        for op in [AluOp::And, AluOp::Or, AluOp::Xor] {
+            let mut e = DigitalEngine::new(2, 8);
+            e.load(&[0xF0, 0x0F]);
+            e.batch_apply(op, &[0xAA, 0xAA]);
+            let want = |a: u32| match op {
+                AluOp::And => a & 0xAA,
+                AluOp::Or => (a | 0xAA) & 0xFF,
+                AluOp::Xor => (a ^ 0xAA) & 0xFF,
+                _ => unreachable!(),
+            };
+            assert_eq!(e.snapshot(), vec![want(0xF0), want(0x0F)], "{op:?}");
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Dual-port SRAM strawman (paper Fig. 1a): read port and write port
+//! operate concurrently, so a row update takes one access instead of
+//! two — but rows are still visited serially and the ALU lives in the
+//! periphery. This is the architecture the paper's introduction uses
+//! to illustrate the row-by-row bottleneck.
+
+use super::sram6t::Sram6T;
+use crate::energy::{Cost, DualPortModel};
+use crate::fastmem::AluOp;
+use crate::util::bits;
+
+/// A dual-port array: same storage, overlapped R/W scheduling.
+#[derive(Debug, Clone)]
+pub struct DualPortArray {
+    sram: Sram6T,
+    model: DualPortModel,
+    q: usize,
+}
+
+impl DualPortArray {
+    pub fn new(rows: usize, q: usize) -> Self {
+        DualPortArray { sram: Sram6T::new(rows, q), model: DualPortModel::default(), q }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.sram.rows()
+    }
+
+    pub fn load(&mut self, words: &[u32]) {
+        self.sram.load(words);
+    }
+
+    pub fn snapshot(&self) -> Vec<u32> {
+        self.sram.snapshot()
+    }
+
+    /// Row-serial update with overlapped read/write: while row r writes
+    /// back, row r+1 is being read (software pipeline of depth 2).
+    pub fn batch_apply(&mut self, op: AluOp, operands: &[u32]) -> Cost {
+        assert_eq!(operands.len(), self.sram.rows());
+        let m = bits::mask(self.q);
+        for (r, &operand) in operands.iter().enumerate() {
+            let cur = self.sram.read(r).expect("in range");
+            let next = match op {
+                AluOp::Add => bits::add_mod(cur, operand, self.q),
+                AluOp::Sub => bits::sub_mod(cur, operand, self.q),
+                AluOp::And => cur & operand & m,
+                AluOp::Or => (cur | operand) & m,
+                AluOp::Xor => (cur ^ operand) & m,
+                AluOp::Pass => cur,
+            };
+            self.sram.write(r, next).expect("in range");
+        }
+        self.model.batch_update(self.sram.rows(), self.q)
+    }
+
+    pub fn batch_add(&mut self, operands: &[u32]) -> Cost {
+        self.batch_apply(AluOp::Add, operands)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn semantics_match_modular_add() {
+        let mut a = DualPortArray::new(4, 8);
+        a.load(&[250, 1, 2, 3]);
+        a.batch_add(&[10, 10, 10, 10]);
+        assert_eq!(a.snapshot(), vec![4, 11, 12, 13]);
+    }
+
+    #[test]
+    fn latency_between_fast_and_nothing() {
+        // One access per row — faster than 2 serialized accesses, but
+        // still linear in rows (unlike FAST's q-cycle batch).
+        let mut a = DualPortArray::new(128, 16);
+        a.load(&vec![0; 128]);
+        let c = a.batch_add(&vec![1; 128]);
+        let per_row = c.latency_ns / 128.0;
+        assert!((per_row - 0.94).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,18 @@
+//! Baseline architectures the paper compares against (Fig. 1a, Fig. 9).
+//!
+//! - [`sram6t`] — conventional 6T SRAM array, row-by-row port access
+//! - [`digital`] — the fully-digital near-memory computing engine:
+//!   6T SRAM swept through a standard-cell ALU pipeline (Fig. 9)
+//! - [`dual_port`] — dual-port strawman with overlapped read/write
+//!
+//! The behavioural baselines implement the *same* batch-update
+//! semantics as [`crate::fastmem::FastArray`] so tests can diff results
+//! word-for-word, while their cost models charge row-serial latency.
+
+pub mod digital;
+pub mod dual_port;
+pub mod sram6t;
+
+pub use digital::DigitalEngine;
+pub use dual_port::DualPortArray;
+pub use sram6t::Sram6T;

@@ -1,0 +1,111 @@
+//! Conventional 6T SRAM array: word-oriented storage with a single
+//! read/write port; all multi-row work is serialized through the port.
+
+use thiserror::Error;
+
+use crate::util::bits;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum SramError {
+    #[error("row {0} out of range (rows = {1})")]
+    RowOutOfRange(usize, usize),
+    #[error("word {0:#x} exceeds {1}-bit width")]
+    WordTooWide(u32, usize),
+}
+
+/// A conventional 6T SRAM array of `rows` words of `q` bits.
+#[derive(Debug, Clone)]
+pub struct Sram6T {
+    words: Vec<u32>,
+    q: usize,
+    reads: u64,
+    writes: u64,
+}
+
+impl Sram6T {
+    pub fn new(rows: usize, q: usize) -> Self {
+        assert!(rows >= 1);
+        let _ = bits::mask(q); // validates q
+        Sram6T { words: vec![0; rows], q, reads: 0, writes: 0 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn width(&self) -> usize {
+        self.q
+    }
+
+    pub fn read(&mut self, row: usize) -> Result<u32, SramError> {
+        if row >= self.words.len() {
+            return Err(SramError::RowOutOfRange(row, self.words.len()));
+        }
+        self.reads += 1;
+        Ok(self.words[row])
+    }
+
+    pub fn write(&mut self, row: usize, word: u32) -> Result<(), SramError> {
+        if row >= self.words.len() {
+            return Err(SramError::RowOutOfRange(row, self.words.len()));
+        }
+        if word > bits::mask(self.q) {
+            return Err(SramError::WordTooWide(word, self.q));
+        }
+        self.writes += 1;
+        self.words[row] = word;
+        Ok(())
+    }
+
+    /// Port access counters (inputs to the energy model).
+    pub fn reads(&self) -> u64 {
+        self.reads
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Bulk load without port accounting (test setup convenience).
+    pub fn load(&mut self, words: &[u32]) {
+        assert_eq!(words.len(), self.words.len());
+        let m = bits::mask(self.q);
+        for (dst, &w) in self.words.iter_mut().zip(words) {
+            assert!(w <= m, "word {w:#x} exceeds width");
+            *dst = w;
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<u32> {
+        self.words.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut s = Sram6T::new(8, 16);
+        s.write(3, 0xBEEF).unwrap();
+        assert_eq!(s.read(3).unwrap(), 0xBEEF);
+        assert_eq!(s.reads(), 1);
+        assert_eq!(s.writes(), 1);
+    }
+
+    #[test]
+    fn bounds_and_width_checked() {
+        let mut s = Sram6T::new(4, 8);
+        assert_eq!(s.read(4), Err(SramError::RowOutOfRange(4, 4)));
+        assert_eq!(s.write(0, 0x100), Err(SramError::WordTooWide(0x100, 8)));
+    }
+
+    #[test]
+    fn load_and_snapshot() {
+        let mut s = Sram6T::new(3, 8);
+        s.load(&[1, 2, 3]);
+        assert_eq!(s.snapshot(), vec![1, 2, 3]);
+        assert_eq!(s.writes(), 0, "bulk load is not port traffic");
+    }
+}

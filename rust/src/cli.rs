@@ -1,0 +1,174 @@
+//! Minimal command-line argument parser (clap is not in the offline
+//! vendor set — DESIGN.md §7). Supports `cmd --flag value --switch
+//! positional` style with typed accessors and a usage renderer.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::Result;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand).
+    pub command: Option<String>,
+    /// `--key value` pairs; bare `--switch` maps to "true".
+    pub flags: BTreeMap<String, String>,
+    /// Remaining positional tokens after the command.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I, S>(tokens: I) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().map(Into::into).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                // --key=value or --key value or --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().expect("peeked");
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+/// Usage text for the `fast` binary.
+pub fn usage() -> String {
+    "\
+fast — FAST SRAM reproduction CLI (TCAS-II 2022)
+
+USAGE: fast <command> [--flags]
+
+experiment commands (regenerate the paper's tables/figures):
+  table1       [--rows 128] [--q 16]      Table I comparison
+  fig10                                   energy/latency vs bit width
+  fig11                                   latency + efficiency vs rows
+  fig12        [--samples 500] [--seed 42] Monte Carlo noise margin
+  fig13                                   shmoo plot (VDD x freq)
+  fig14        [--rows 128] [--cols 16]   area breakdown
+  waveforms    [--period 1.25] [--csv dir] Figs. 7-8 transients
+  apps         [--rows 128] [--q 16] [--updates 20000]
+                                          workload comparison (E-APP)
+
+system commands:
+  serve        [--rows 1024] [--q 16] [--banks 8] [--updates 100000]
+               [--backend fast|digital|xla] run the update engine demo
+  validate     [--artifacts artifacts] [--trials 3]
+               cross-check XLA artifacts vs host semantics
+  info         [--artifacts artifacts]   list loaded artifacts
+  help                                   this text
+"
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_command_flags_positional() {
+        // Note: a bare `--switch` followed by a non-flag token consumes
+        // it as a value (schema-less parsing) — put switches last or
+        // use `--switch=true`.
+        let a = Args::parse(["serve", "--rows", "256", "extra", "--verbose"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("rows", 0).unwrap(), 256);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(["x", "--q=32"]).unwrap();
+        assert_eq!(a.get_usize("q", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(["cmd"]).unwrap();
+        assert_eq!(a.get_usize("rows", 128).unwrap(), 128);
+        assert_eq!(a.get_f64("period", 1.25).unwrap(), 1.25);
+        assert_eq!(a.get_str("backend", "fast"), "fast");
+        assert!(!a.get_bool("missing"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(["cmd", "--rows", "abc"]).unwrap();
+        assert!(a.get_usize("rows", 1).is_err());
+    }
+
+    #[test]
+    fn switch_at_end() {
+        let a = Args::parse(["cmd", "--fast"]).unwrap();
+        assert!(a.get_bool("fast"));
+    }
+}

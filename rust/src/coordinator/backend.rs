@@ -1,0 +1,297 @@
+//! Execution backends for the update engine.
+//!
+//! The engine is generic over *what actually applies a batch*:
+//!
+//! - [`FastBackend`] — the behavioural FAST bank set (phase-accurate)
+//! - [`XlaBackend`] — the AOT-compiled Pallas/JAX artifact executed via
+//!   PJRT (the functional fast-path; cross-validates the behavioural
+//!   model at scale)
+//! - [`DigitalBackend`] — the paper's near-memory digital baseline, for
+//!   apples-to-apples workload comparisons through the same coordinator
+//!
+//! Backends are constructed *inside* the engine worker thread (see
+//! `engine.rs`) so non-`Send` resources like PJRT executables never
+//! cross threads.
+
+use anyhow::Context;
+
+use crate::baseline::DigitalEngine;
+use crate::energy::{Cost, FastModel};
+use crate::runtime::Runtime;
+use crate::Result;
+
+use super::bank::BankSet;
+use super::request::BatchKind;
+
+/// Result of applying one dense batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AppliedBatch {
+    pub cost: Cost,
+    pub cycles: u64,
+    pub banks_active: usize,
+}
+
+/// A batch executor over a logical row space.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn rows(&self) -> usize;
+    fn q(&self) -> usize;
+    fn apply(&mut self, kind: BatchKind, operands: &[u32]) -> Result<AppliedBatch>;
+    fn read_row(&mut self, row: usize) -> Result<u32>;
+    fn write_row(&mut self, row: usize, value: u32) -> Result<()>;
+    fn snapshot(&mut self) -> Result<Vec<u32>>;
+}
+
+// ---------------------------------------------------------------------------
+// Behavioural FAST backend
+// ---------------------------------------------------------------------------
+
+/// Phase-accurate FAST macro banks.
+pub struct FastBackend {
+    banks: BankSet,
+}
+
+impl FastBackend {
+    pub fn new(banks: usize, rows_per_bank: usize, q: usize) -> Self {
+        FastBackend { banks: BankSet::new(banks, rows_per_bank, q) }
+    }
+}
+
+impl Backend for FastBackend {
+    fn name(&self) -> &'static str {
+        "fast-behavioural"
+    }
+
+    fn rows(&self) -> usize {
+        self.banks.rows()
+    }
+
+    fn q(&self) -> usize {
+        self.banks.q()
+    }
+
+    fn apply(&mut self, kind: BatchKind, operands: &[u32]) -> Result<AppliedBatch> {
+        let rep = self.banks.apply(kind, operands)?;
+        Ok(AppliedBatch {
+            cost: rep.cost,
+            cycles: rep.cycles,
+            banks_active: rep.banks_active,
+        })
+    }
+
+    fn read_row(&mut self, row: usize) -> Result<u32> {
+        self.banks.read_row(row)
+    }
+
+    fn write_row(&mut self, row: usize, value: u32) -> Result<()> {
+        self.banks.write_row(row, value)
+    }
+
+    fn snapshot(&mut self) -> Result<Vec<u32>> {
+        Ok(self.banks.snapshot())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA (PJRT) backend
+// ---------------------------------------------------------------------------
+
+/// Functional FAST model: state lives host-side, batches execute through
+/// the AOT-compiled Pallas kernel artifacts. Costs are modeled with the
+/// same calibrated FastModel (the artifact computes *results*, the
+/// energy model computes *costs*).
+pub struct XlaBackend {
+    runtime: Runtime,
+    state: Vec<u32>,
+    q: usize,
+    rows: usize,
+    model: FastModel,
+    /// artifact name per batch kind, resolved at construction.
+    art_add: String,
+    art_and: String,
+    art_or: String,
+    art_xor: String,
+}
+
+impl XlaBackend {
+    /// Load artifacts for a `rows`-row, q-bit logical array. `rows` must
+    /// match an available artifact family (128 or 1024 for add; logic
+    /// artifacts exist at 128×16).
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>, rows: usize, q: usize) -> Result<Self> {
+        let runtime = Runtime::load_dir(&artifact_dir)?;
+        let art_add = format!("fast_add_{rows}x{q}");
+        runtime
+            .get(&art_add)
+            .with_context(|| format!("no add artifact for {rows}x{q}"))?;
+        let b = XlaBackend {
+            runtime,
+            state: vec![0; rows],
+            q,
+            rows,
+            model: FastModel::default(),
+            art_add,
+            art_and: format!("fast_and_{rows}x{q}"),
+            art_or: format!("fast_or_{rows}x{q}"),
+            art_xor: format!("fast_xor_{rows}x{q}"),
+        };
+        Ok(b)
+    }
+
+    fn artifact_for(&self, kind: BatchKind) -> &str {
+        match kind {
+            BatchKind::Add => &self.art_add,
+            BatchKind::And => &self.art_and,
+            BatchKind::Or => &self.art_or,
+            BatchKind::Xor => &self.art_xor,
+        }
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "fast-xla"
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn q(&self) -> usize {
+        self.q
+    }
+
+    fn apply(&mut self, kind: BatchKind, operands: &[u32]) -> Result<AppliedBatch> {
+        anyhow::ensure!(operands.len() == self.rows, "operand count mismatch");
+        let art = self.runtime.get(self.artifact_for(kind))?;
+        self.state = art.exec2(&self.state, operands)?;
+        Ok(AppliedBatch {
+            cost: self.model.batch_op(self.rows.min(128), self.q),
+            cycles: self.q as u64,
+            banks_active: self.rows.div_ceil(128),
+        })
+    }
+
+    fn read_row(&mut self, row: usize) -> Result<u32> {
+        anyhow::ensure!(row < self.rows, "row {row} out of range");
+        Ok(self.state[row])
+    }
+
+    fn write_row(&mut self, row: usize, value: u32) -> Result<()> {
+        anyhow::ensure!(row < self.rows, "row {row} out of range");
+        self.state[row] = value & crate::util::bits::mask(self.q);
+        Ok(())
+    }
+
+    fn snapshot(&mut self) -> Result<Vec<u32>> {
+        Ok(self.state.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Digital baseline backend
+// ---------------------------------------------------------------------------
+
+/// The near-memory digital baseline behind the same coordinator API.
+/// (Costs come from the `DigitalEngine`'s own sweep reports.)
+pub struct DigitalBackend {
+    engine: DigitalEngine,
+}
+
+impl DigitalBackend {
+    pub fn new(rows: usize, q: usize) -> Self {
+        DigitalBackend { engine: DigitalEngine::new(rows, q) }
+    }
+}
+
+impl Backend for DigitalBackend {
+    fn name(&self) -> &'static str {
+        "digital-baseline"
+    }
+
+    fn rows(&self) -> usize {
+        self.engine.rows()
+    }
+
+    fn q(&self) -> usize {
+        self.engine.width()
+    }
+
+    fn apply(&mut self, kind: BatchKind, operands: &[u32]) -> Result<AppliedBatch> {
+        let rep = self.engine.batch_apply(kind.alu_op(), operands);
+        Ok(AppliedBatch {
+            cost: rep.cost,
+            cycles: rep.rows, // one pipeline slot per row
+            banks_active: 1,
+        })
+    }
+
+    fn read_row(&mut self, row: usize) -> Result<u32> {
+        anyhow::ensure!(row < self.engine.rows(), "row {row} out of range");
+        Ok(self.engine.read_row(row))
+    }
+
+    fn write_row(&mut self, row: usize, value: u32) -> Result<()> {
+        anyhow::ensure!(row < self.engine.rows(), "row {row} out of range");
+        self.engine.write_row(row, value);
+        Ok(())
+    }
+
+    fn snapshot(&mut self) -> Result<Vec<u32>> {
+        Ok(self.engine.snapshot())
+    }
+
+    // Note: the digital baseline has no clock gating — `batch_apply`
+    // sweeps every row even for sparse batches, which is exactly the
+    // cost asymmetry the paper exploits.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits;
+    use crate::util::rng::Rng;
+
+    fn exercise(backend: &mut dyn Backend) {
+        let rows = backend.rows();
+        let q = backend.q();
+        let mut rng = Rng::new(11);
+        let init: Vec<u32> = (0..rows)
+            .map(|_| rng.below(bits::mask(q) as u64 + 1) as u32)
+            .collect();
+        for (r, &v) in init.iter().enumerate() {
+            backend.write_row(r, v).unwrap();
+        }
+        let deltas: Vec<u32> = (0..rows)
+            .map(|_| rng.below(bits::mask(q) as u64 + 1) as u32)
+            .collect();
+        let rep = backend.apply(BatchKind::Add, &deltas).unwrap();
+        assert!(rep.cost.latency_ns > 0.0);
+        let snap = backend.snapshot().unwrap();
+        for r in 0..rows {
+            assert_eq!(snap[r], bits::add_mod(init[r], deltas[r], q), "row {r}");
+        }
+    }
+
+    #[test]
+    fn fast_backend_semantics() {
+        let mut b = FastBackend::new(2, 32, 16);
+        exercise(&mut b);
+        assert_eq!(b.name(), "fast-behavioural");
+    }
+
+    #[test]
+    fn digital_backend_semantics() {
+        let mut b = DigitalBackend::new(64, 16);
+        exercise(&mut b);
+    }
+
+    #[test]
+    fn digital_costs_more_latency_than_fast() {
+        let mut f = FastBackend::new(1, 128, 16);
+        let mut d = DigitalBackend::new(128, 16);
+        let deltas = vec![1u32; 128];
+        let cf = f.apply(BatchKind::Add, &deltas).unwrap();
+        let cd = d.apply(BatchKind::Add, &deltas).unwrap();
+        assert!(cd.cost.latency_ns > 20.0 * cf.cost.latency_ns);
+    }
+}

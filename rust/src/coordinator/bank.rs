@@ -1,0 +1,239 @@
+//! Bank management: a logical row space striped over 128-row FAST
+//! macros, executed concurrently.
+//!
+//! The chip showcases one 128×16 macro; a deployment stacks many.
+//! The bank manager slices a dense batch into per-macro sub-batches,
+//! *skips banks whose slice is all-identity* (their shift clock is
+//! gated — no cycles, no energy), and runs the touched banks on worker
+//! threads. Latency of a multi-bank batch is the max over banks, since
+//! banks are physically independent arrays.
+
+use crate::energy::{Cost, FastModel};
+use crate::fastmem::{BatchReport, FastArray};
+use crate::Result;
+
+use super::request::BatchKind;
+
+/// Outcome of applying one dense batch across the bank set.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BankApply {
+    /// Banks that actually executed (non-identity slices).
+    pub banks_active: usize,
+    /// Shift cycles of the slowest active bank.
+    pub cycles: u64,
+    /// Modeled cost (energy summed, latency = max over banks).
+    pub cost: Cost,
+}
+
+/// A set of identical FAST macros forming one logical array.
+pub struct BankSet {
+    arrays: Vec<FastArray>,
+    rows_per_bank: usize,
+    q: usize,
+    model: FastModel,
+}
+
+impl BankSet {
+    /// `banks` macros of `rows_per_bank` rows × `q` columns.
+    pub fn new(banks: usize, rows_per_bank: usize, q: usize) -> Self {
+        assert!(banks >= 1);
+        BankSet {
+            arrays: (0..banks).map(|_| FastArray::new(rows_per_bank, q)).collect(),
+            rows_per_bank,
+            q,
+            model: FastModel::default(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.arrays.len() * self.rows_per_bank
+    }
+
+    pub fn banks(&self) -> usize {
+        self.arrays.len()
+    }
+
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    #[inline]
+    fn locate(&self, row: usize) -> (usize, usize) {
+        (row / self.rows_per_bank, row % self.rows_per_bank)
+    }
+
+    pub fn read_row(&mut self, row: usize) -> Result<u32> {
+        let (b, r) = self.locate(row);
+        anyhow::ensure!(b < self.arrays.len(), "row {row} out of range");
+        Ok(self.arrays[b].read_word(r, 0)?)
+    }
+
+    pub fn write_row(&mut self, row: usize, value: u32) -> Result<()> {
+        let (b, r) = self.locate(row);
+        anyhow::ensure!(b < self.arrays.len(), "row {row} out of range");
+        Ok(self.arrays[b].write_word(r, 0, value)?)
+    }
+
+    pub fn snapshot(&mut self) -> Vec<u32> {
+        let mut v = Vec::with_capacity(self.rows());
+        for a in &mut self.arrays {
+            v.extend(a.snapshot());
+        }
+        v
+    }
+
+    pub fn load(&mut self, words: &[u32]) {
+        assert_eq!(words.len(), self.rows());
+        for (i, a) in self.arrays.iter_mut().enumerate() {
+            a.load(&words[i * self.rows_per_bank..(i + 1) * self.rows_per_bank]);
+        }
+    }
+
+    /// Apply one dense batch (one operand per logical row). Banks whose
+    /// slice is entirely the identity are clock-gated. Touched banks run
+    /// concurrently on scoped threads.
+    pub fn apply(&mut self, kind: BatchKind, operands: &[u32]) -> Result<BankApply> {
+        anyhow::ensure!(
+            operands.len() == self.rows(),
+            "operand count {} != rows {}",
+            operands.len(),
+            self.rows()
+        );
+        let ident = kind.identity(self.q);
+        let rpb = self.rows_per_bank;
+        let alu = kind.alu_op();
+
+        // Partition: (bank index, slice) for banks with work. Touched
+        // banks run on scoped threads when the host has spare cores;
+        // on a single-core host thread spawn is pure overhead, so run
+        // inline (the banks are still *architecturally* concurrent —
+        // latency is max(), not sum()).
+        let mut reports: Vec<Option<BatchReport>> = vec![None; self.arrays.len()];
+        let parallel = std::thread::available_parallelism()
+            .map(|n| n.get() > 1)
+            .unwrap_or(false);
+        let mut jobs: Vec<(&mut FastArray, &mut Option<BatchReport>, &[u32])> = Vec::new();
+        for (bi, (array, out)) in self
+            .arrays
+            .iter_mut()
+            .zip(reports.iter_mut())
+            .enumerate()
+        {
+            let slice = &operands[bi * rpb..(bi + 1) * rpb];
+            if slice.iter().all(|&o| o == ident) {
+                continue; // clock-gated bank
+            }
+            jobs.push((array, out, slice));
+        }
+        let run = |array: &mut FastArray, slice: &[u32]| match alu {
+            crate::fastmem::AluOp::Add => array.batch_add(slice),
+            op => array.batch_logic(op, slice),
+        };
+        if parallel && jobs.len() > 1 {
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (array, out, slice) in jobs {
+                    handles.push(scope.spawn(move || {
+                        *out = Some(run(array, slice));
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("bank worker panicked");
+                }
+            });
+        } else {
+            for (array, out, slice) in jobs {
+                *out = Some(run(array, slice));
+            }
+        }
+
+        let mut out = BankApply::default();
+        for report in reports.into_iter().flatten() {
+            out.banks_active += 1;
+            out.cycles = out.cycles.max(report.cycles);
+            let c = self.model.batch_op(rpb, self.q);
+            out.cost.energy_fj += c.energy_fj;
+            out.cost.latency_ns = out.cost.latency_ns.max(c.latency_ns);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn striping_roundtrip() {
+        let mut b = BankSet::new(4, 128, 16);
+        assert_eq!(b.rows(), 512);
+        b.write_row(0, 1).unwrap();
+        b.write_row(127, 2).unwrap();
+        b.write_row(128, 3).unwrap(); // first row of bank 1
+        b.write_row(511, 4).unwrap(); // last row of bank 3
+        assert_eq!(b.read_row(0).unwrap(), 1);
+        assert_eq!(b.read_row(127).unwrap(), 2);
+        assert_eq!(b.read_row(128).unwrap(), 3);
+        assert_eq!(b.read_row(511).unwrap(), 4);
+    }
+
+    #[test]
+    fn apply_spans_banks_correctly() {
+        let mut b = BankSet::new(2, 16, 16);
+        let mut rng = Rng::new(3);
+        let init: Vec<u32> = (0..32).map(|_| rng.below(1 << 16) as u32).collect();
+        let deltas: Vec<u32> = (0..32).map(|_| rng.below(1 << 16) as u32).collect();
+        b.load(&init);
+        let rep = b.apply(BatchKind::Add, &deltas).unwrap();
+        assert_eq!(rep.banks_active, 2);
+        for r in 0..32 {
+            assert_eq!(b.read_row(r).unwrap(), bits::add_mod(init[r], deltas[r], 16));
+        }
+    }
+
+    #[test]
+    fn identity_banks_are_clock_gated() {
+        let mut b = BankSet::new(4, 16, 16);
+        let mut deltas = vec![0u32; 64];
+        deltas[5] = 9; // only bank 0 touched
+        let rep = b.apply(BatchKind::Add, &deltas).unwrap();
+        assert_eq!(rep.banks_active, 1);
+        assert_eq!(rep.cycles, 16);
+        // Energy charged for one bank only.
+        let one_bank = FastModel::default().batch_op(16, 16).energy_fj;
+        assert!((rep.cost.energy_fj - one_bank).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_identity_batch_is_free() {
+        let mut b = BankSet::new(2, 16, 16);
+        let rep = b.apply(BatchKind::Add, &vec![0; 32]).unwrap();
+        assert_eq!(rep.banks_active, 0);
+        assert_eq!(rep.cost.energy_fj, 0.0);
+    }
+
+    #[test]
+    fn and_identity_is_mask() {
+        let mut b = BankSet::new(2, 16, 8);
+        b.load(&vec![0xAB; 32]);
+        let mut ops = vec![0xFFu32; 32]; // AND identity
+        ops[20] = 0x0F;
+        let rep = b.apply(BatchKind::And, &ops).unwrap();
+        assert_eq!(rep.banks_active, 1); // only bank 1 touched
+        assert_eq!(b.read_row(20).unwrap(), 0xAB & 0x0F);
+        assert_eq!(b.read_row(0).unwrap(), 0xAB);
+    }
+
+    #[test]
+    fn multi_bank_latency_is_max_not_sum() {
+        let mut b = BankSet::new(8, 128, 16);
+        let deltas = vec![1u32; 1024];
+        let rep = b.apply(BatchKind::Add, &deltas).unwrap();
+        let single = FastModel::default().batch_op(128, 16);
+        assert_eq!(rep.banks_active, 8);
+        assert!((rep.cost.latency_ns - single.latency_ns).abs() < 1e-9);
+        assert!((rep.cost.energy_fj - 8.0 * single.energy_fj).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,240 @@
+//! The coalescing batcher: turns a stream of single-row updates into
+//! dense, fully-concurrent FAST batch operations.
+//!
+//! Invariants (property-tested in rust/tests/):
+//!   1. *Semantics*: applying the flushed batches in order is
+//!      equivalent to applying every accepted request in arrival order.
+//!   2. *One kind per batch*: a FAST batch op configures all row ALUs
+//!      identically, so a batch holds only one [`BatchKind`]; a request
+//!      of a different kind seals the current batch.
+//!   3. *Coalescing*: same-kind updates to the same row merge
+//!      algebraically (Add sums, And intersects, ...), so a batch never
+//!      carries more than one operand per row.
+
+use super::request::{BatchKind, UpdateRequest};
+use crate::util::bits;
+
+/// A sealed, dense batch ready for execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Batch {
+    pub kind: BatchKind,
+    /// Dense operand vector, identity-filled for untouched rows.
+    pub operands: Vec<u32>,
+    /// Number of distinct rows carrying a non-identity update.
+    pub rows_touched: usize,
+    /// Number of requests folded into this batch.
+    pub requests: usize,
+}
+
+/// Why the batcher sealed a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SealReason {
+    /// A request of a different kind arrived.
+    KindChange,
+    /// The touched-row threshold was reached.
+    Full,
+    /// The caller forced a flush (deadline or shutdown).
+    Forced,
+}
+
+/// The batcher over a logical row space of `rows` rows.
+#[derive(Debug)]
+pub struct Batcher {
+    rows: usize,
+    q: usize,
+    /// Seal when this many distinct rows are touched (None = only on
+    /// kind change / force).
+    seal_at_rows: Option<usize>,
+    current: Option<OpenBatch>,
+}
+
+#[derive(Debug)]
+struct OpenBatch {
+    kind: BatchKind,
+    operands: Vec<u32>,
+    touched: Vec<bool>,
+    rows_touched: usize,
+    requests: usize,
+}
+
+impl OpenBatch {
+    fn new(kind: BatchKind, rows: usize, q: usize) -> Self {
+        OpenBatch {
+            kind,
+            operands: vec![kind.identity(q); rows],
+            touched: vec![false; rows],
+            rows_touched: 0,
+            requests: 0,
+        }
+    }
+
+    fn seal(self) -> Batch {
+        Batch {
+            kind: self.kind,
+            operands: self.operands,
+            rows_touched: self.rows_touched,
+            requests: self.requests,
+        }
+    }
+}
+
+impl Batcher {
+    pub fn new(rows: usize, q: usize, seal_at_rows: Option<usize>) -> Self {
+        assert!(rows >= 1);
+        let _ = bits::mask(q);
+        if let Some(n) = seal_at_rows {
+            assert!(n >= 1, "seal threshold must be positive");
+        }
+        Batcher { rows, q, seal_at_rows, current: None }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Rows touched in the open batch (0 if none).
+    pub fn pending_rows(&self) -> usize {
+        self.current.as_ref().map_or(0, |b| b.rows_touched)
+    }
+
+    /// Requests folded into the open batch.
+    pub fn pending_requests(&self) -> usize {
+        self.current.as_ref().map_or(0, |b| b.requests)
+    }
+
+    /// Feed one request. Returns a sealed batch if this request forced
+    /// a seal (the request itself is always absorbed — into the next
+    /// batch when the current one seals).
+    pub fn push(&mut self, req: UpdateRequest) -> Option<(Batch, SealReason)> {
+        assert!(req.row < self.rows, "row {} out of range {}", req.row, self.rows);
+        let kind = req.op.kind();
+        let operand = req.op.normalized_operand(req.operand, self.q);
+
+        let mut sealed = None;
+        if let Some(cur) = &self.current {
+            if cur.kind != kind {
+                sealed = Some((self.force_flush().expect("open batch"), SealReason::KindChange));
+            }
+        }
+        let cur = self
+            .current
+            .get_or_insert_with(|| OpenBatch::new(kind, self.rows, self.q));
+        debug_assert_eq!(cur.kind, kind);
+        cur.operands[req.row] = kind.coalesce(cur.operands[req.row], operand, self.q);
+        if !cur.touched[req.row] {
+            cur.touched[req.row] = true;
+            cur.rows_touched += 1;
+        }
+        cur.requests += 1;
+
+        if sealed.is_none() {
+            if let Some(limit) = self.seal_at_rows {
+                if cur.rows_touched >= limit {
+                    return self
+                        .force_flush()
+                        .map(|b| (b, SealReason::Full));
+                }
+            }
+        }
+        sealed
+    }
+
+    /// Seal and return the open batch, if any.
+    pub fn force_flush(&mut self) -> Option<Batch> {
+        self.current.take().map(OpenBatch::seal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::UpdateOp;
+
+    #[test]
+    fn coalesces_same_row_adds() {
+        let mut b = Batcher::new(8, 16, None);
+        assert!(b.push(UpdateRequest::add(3, 10)).is_none());
+        assert!(b.push(UpdateRequest::add(3, 5)).is_none());
+        assert!(b.push(UpdateRequest::add(1, 7)).is_none());
+        let batch = b.force_flush().unwrap();
+        assert_eq!(batch.kind, BatchKind::Add);
+        assert_eq!(batch.operands[3], 15);
+        assert_eq!(batch.operands[1], 7);
+        assert_eq!(batch.operands[0], 0);
+        assert_eq!(batch.rows_touched, 2);
+        assert_eq!(batch.requests, 3);
+    }
+
+    #[test]
+    fn sub_folds_into_add_batch() {
+        let mut b = Batcher::new(4, 16, None);
+        b.push(UpdateRequest::add(0, 10));
+        b.push(UpdateRequest::sub(0, 3));
+        let batch = b.force_flush().unwrap();
+        assert_eq!(batch.operands[0], 7);
+        assert_eq!(batch.requests, 2);
+    }
+
+    #[test]
+    fn kind_change_seals() {
+        let mut b = Batcher::new(4, 8, None);
+        b.push(UpdateRequest::add(0, 1));
+        let (sealed, reason) = b
+            .push(UpdateRequest { row: 1, op: UpdateOp::Xor, operand: 0xFF })
+            .expect("kind change must seal");
+        assert_eq!(reason, SealReason::KindChange);
+        assert_eq!(sealed.kind, BatchKind::Add);
+        assert_eq!(sealed.rows_touched, 1);
+        // The xor landed in the new open batch.
+        assert_eq!(b.pending_rows(), 1);
+        let next = b.force_flush().unwrap();
+        assert_eq!(next.kind, BatchKind::Xor);
+        assert_eq!(next.operands[1], 0xFF);
+    }
+
+    #[test]
+    fn seals_when_full() {
+        let mut b = Batcher::new(8, 8, Some(2));
+        assert!(b.push(UpdateRequest::add(0, 1)).is_none());
+        let (sealed, reason) = b.push(UpdateRequest::add(5, 2)).expect("full");
+        assert_eq!(reason, SealReason::Full);
+        assert_eq!(sealed.rows_touched, 2);
+        assert_eq!(b.pending_rows(), 0);
+    }
+
+    #[test]
+    fn same_row_repeat_does_not_advance_fullness() {
+        let mut b = Batcher::new(8, 8, Some(2));
+        assert!(b.push(UpdateRequest::add(0, 1)).is_none());
+        assert!(b.push(UpdateRequest::add(0, 1)).is_none());
+        assert!(b.push(UpdateRequest::add(0, 1)).is_none());
+        assert_eq!(b.pending_rows(), 1);
+        assert_eq!(b.pending_requests(), 3);
+    }
+
+    #[test]
+    fn and_batch_identity_fill() {
+        let mut b = Batcher::new(4, 8, None);
+        b.push(UpdateRequest { row: 2, op: UpdateOp::And, operand: 0x0F });
+        let batch = b.force_flush().unwrap();
+        assert_eq!(batch.kind, BatchKind::And);
+        assert_eq!(batch.operands, vec![0xFF, 0xFF, 0x0F, 0xFF]);
+    }
+
+    #[test]
+    fn empty_flush_is_none() {
+        let mut b = Batcher::new(4, 8, None);
+        assert!(b.force_flush().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range_row() {
+        let mut b = Batcher::new(4, 8, None);
+        b.push(UpdateRequest::add(4, 1));
+    }
+}

@@ -1,0 +1,560 @@
+//! The concurrent update engine — the Layer-3 system around the FAST
+//! macro: admission control, coalescing batcher, flush policy, worker
+//! thread, metrics.
+//!
+//! Lifecycle: `UpdateEngine::start(config, backend_factory)` spawns a
+//! worker thread that *constructs the backend inside the thread* (PJRT
+//! executables are not `Send`), then consumes commands from a bounded
+//! channel. Updates flow through the [`Batcher`]; batches flush when
+//! full (`seal_at_rows`), on a kind change, on the flush deadline, or
+//! when a read needs read-your-writes consistency.
+//!
+//! Tokio is not in the offline vendor set (DESIGN.md §7) —
+//! `std::thread` + `mpsc::sync_channel` provide the same bounded-queue
+//! backpressure semantics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail};
+
+use crate::metrics::{Counters, EnergyAccount, LatencyRecorder, LatencySummary};
+use crate::Result;
+
+use super::backend::Backend;
+use super::batcher::Batcher;
+use super::request::UpdateRequest;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Logical rows (must match the backend).
+    pub rows: usize,
+    /// Word width q.
+    pub q: usize,
+    /// Seal a batch once this many distinct rows are touched.
+    /// `None` = seal only on kind change / deadline / read.
+    pub seal_at_rows: Option<usize>,
+    /// Flush deadline for a non-empty open batch.
+    pub flush_interval: Duration,
+    /// Bounded command-queue depth (admission control).
+    pub queue_cap: usize,
+}
+
+impl EngineConfig {
+    /// A sensible default for an R-row, q-bit array: seal at 75% of the
+    /// row space, 100 µs deadline, 4096-deep queue.
+    pub fn new(rows: usize, q: usize) -> Self {
+        EngineConfig {
+            rows,
+            q,
+            seal_at_rows: Some((rows * 3 / 4).max(1)),
+            flush_interval: Duration::from_micros(100),
+            queue_cap: 4096,
+        }
+    }
+}
+
+enum Command {
+    Submit(UpdateRequest),
+    /// Amortizes channel crossings for bulk producers (one message per
+    /// chunk instead of per request).
+    SubmitMany(Vec<UpdateRequest>),
+    Read(usize, SyncSender<Result<u32>>),
+    Write(usize, u32, SyncSender<Result<()>>),
+    Flush(SyncSender<()>),
+    Snapshot(SyncSender<Result<Vec<u32>>>),
+    Shutdown,
+}
+
+/// Shared metrics handle.
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    pub counters: Counters,
+    pub energy: EnergyAccount,
+    /// Wall-clock time spent applying batches.
+    pub apply_wall: LatencyRecorder,
+    /// Modeled macro time in femtoseconds (ns × 1e6, atomically summed).
+    modeled_fs: AtomicU64,
+}
+
+impl EngineMetrics {
+    pub fn add_modeled_ns(&self, ns: f64) {
+        self.modeled_fs
+            .fetch_add((ns * 1e6).round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn modeled_ns(&self) -> f64 {
+        self.modeled_fs.load(Ordering::Relaxed) as f64 / 1e6
+    }
+}
+
+/// Point-in-time engine statistics.
+#[derive(Debug, Clone)]
+pub struct EngineStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub rows_updated: u64,
+    pub rows_per_batch: f64,
+    pub modeled_ns: f64,
+    pub modeled_energy_pj: f64,
+    pub apply_wall: LatencySummary,
+    pub backend: &'static str,
+}
+
+/// Handle to a running update engine.
+pub struct UpdateEngine {
+    tx: SyncSender<Command>,
+    worker: Option<JoinHandle<Result<()>>>,
+    metrics: Arc<EngineMetrics>,
+    backend_name: std::sync::OnceLock<&'static str>,
+    cfg: EngineConfig,
+}
+
+impl UpdateEngine {
+    /// Start the engine. `backend_factory` runs on the worker thread.
+    pub fn start<F>(cfg: EngineConfig, backend_factory: F) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
+        let metrics = Arc::new(EngineMetrics::default());
+        let worker_metrics = Arc::clone(&metrics);
+        let worker_cfg = cfg.clone();
+        // Report the backend name back once it is constructed.
+        let (name_tx, name_rx) = mpsc::sync_channel(1);
+        let worker = std::thread::Builder::new()
+            .name("fast-update-engine".into())
+            .spawn(move || worker_loop(worker_cfg, rx, worker_metrics, backend_factory, name_tx))
+            .expect("spawning engine worker");
+        let backend_name = std::sync::OnceLock::new();
+        match name_rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(Ok(name)) => {
+                let _ = backend_name.set(name);
+            }
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                return Err(e);
+            }
+            Err(_) => bail!("engine worker failed to start within 120 s"),
+        }
+        Ok(UpdateEngine { tx, worker: Some(worker), metrics, backend_name, cfg })
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Non-blocking submit. `Err` = queue full (backpressure) or engine
+    /// shut down; the request was NOT accepted.
+    pub fn submit(&self, req: UpdateRequest) -> Result<()> {
+        Counters::inc(&self.metrics.counters.requests_submitted, 1);
+        match self.tx.try_send(Command::Submit(req)) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                Counters::inc(&self.metrics.counters.requests_rejected, 1);
+                Err(anyhow!("queue full: request rejected (backpressure)"))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("engine is shut down")),
+        }
+    }
+
+    /// Blocking submit: waits for queue space (no rejection).
+    pub fn submit_blocking(&self, req: UpdateRequest) -> Result<()> {
+        Counters::inc(&self.metrics.counters.requests_submitted, 1);
+        self.tx
+            .send(Command::Submit(req))
+            .map_err(|_| anyhow!("engine is shut down"))
+    }
+
+    /// Bulk blocking submit: one channel crossing for the whole chunk —
+    /// the fast path for high-rate producers (apps, benches).
+    pub fn submit_many(&self, reqs: Vec<UpdateRequest>) -> Result<()> {
+        if reqs.is_empty() {
+            return Ok(());
+        }
+        Counters::inc(&self.metrics.counters.requests_submitted, reqs.len() as u64);
+        self.tx
+            .send(Command::SubmitMany(reqs))
+            .map_err(|_| anyhow!("engine is shut down"))
+    }
+
+    /// Read a row with read-your-writes consistency (flushes first).
+    pub fn read(&self, row: usize) -> Result<u32> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Command::Read(row, tx))
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
+    }
+
+    /// Direct row write (conventional port; flushes pending batch first).
+    pub fn write(&self, row: usize, value: u32) -> Result<()> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Command::Write(row, value, tx))
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
+    }
+
+    /// Force a flush and wait for it.
+    pub fn flush(&self) -> Result<()> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Command::Flush(tx))
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the reply"))
+    }
+
+    /// Consistent snapshot of all rows (flushes first).
+    pub fn snapshot(&self) -> Result<Vec<u32>> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Command::Snapshot(tx))
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        let c = self.metrics.counters.snapshot();
+        EngineStats {
+            submitted: c.requests_submitted,
+            completed: c.requests_completed,
+            rejected: c.requests_rejected,
+            batches: c.batches_flushed,
+            rows_updated: c.rows_updated,
+            rows_per_batch: c.rows_per_batch(),
+            modeled_ns: self.metrics.modeled_ns(),
+            modeled_energy_pj: self.metrics.energy.total_pj(),
+            apply_wall: self.metrics.apply_wall.summary(),
+            backend: self.backend_name.get().copied().unwrap_or("unknown"),
+        }
+    }
+
+    /// Graceful shutdown: flush, stop the worker, join.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutdown_inner()
+    }
+
+    fn shutdown_inner(&mut self) -> Result<()> {
+        if let Some(worker) = self.worker.take() {
+            let _ = self.tx.send(Command::Shutdown);
+            match worker.join() {
+                Ok(r) => r?,
+                Err(_) => bail!("engine worker panicked"),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for UpdateEngine {
+    fn drop(&mut self) {
+        let _ = self.shutdown_inner();
+    }
+}
+
+fn worker_loop<F>(
+    cfg: EngineConfig,
+    rx: Receiver<Command>,
+    metrics: Arc<EngineMetrics>,
+    backend_factory: F,
+    name_tx: SyncSender<Result<&'static str>>,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<Box<dyn Backend>>,
+{
+    let mut backend = match backend_factory() {
+        Ok(b) => {
+            let _ = name_tx.send(Ok(b.name()));
+            b
+        }
+        Err(e) => {
+            let _ = name_tx.send(Err(anyhow!("backend construction failed: {e:#}")));
+            return Ok(());
+        }
+    };
+    anyhow::ensure!(
+        backend.rows() == cfg.rows,
+        "backend rows {} != config rows {}",
+        backend.rows(),
+        cfg.rows
+    );
+    let mut batcher = Batcher::new(cfg.rows, cfg.q, cfg.seal_at_rows);
+    let mut deadline: Option<Instant> = None;
+
+    let apply_sealed = |batch: super::batcher::Batch,
+                        backend: &mut Box<dyn Backend>|
+     -> Result<()> {
+        let applied = metrics
+            .apply_wall
+            .time(|| backend.apply(batch.kind, &batch.operands))?;
+        Counters::inc(&metrics.counters.batches_flushed, 1);
+        Counters::inc(&metrics.counters.rows_updated, batch.rows_touched as u64);
+        Counters::inc(&metrics.counters.requests_completed, batch.requests as u64);
+        Counters::inc(
+            &metrics.counters.requests_coalesced,
+            (batch.requests - batch.rows_touched) as u64,
+        );
+        Counters::inc(&metrics.counters.shift_cycles, applied.cycles);
+        metrics.energy.add_fj(applied.cost.energy_fj);
+        metrics.add_modeled_ns(applied.cost.latency_ns);
+        Ok(())
+    };
+    let flush =
+        |batcher: &mut Batcher, backend: &mut Box<dyn Backend>| -> Result<()> {
+            if let Some(batch) = batcher.force_flush() {
+                apply_sealed(batch, backend)?;
+            }
+            Ok(())
+        };
+
+    loop {
+        let cmd = match deadline {
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    flush(&mut batcher, &mut backend)?;
+                    deadline = None;
+                    continue;
+                }
+                match rx.recv_timeout(d - now) {
+                    Ok(c) => c,
+                    Err(RecvTimeoutError::Timeout) => {
+                        flush(&mut batcher, &mut backend)?;
+                        deadline = None;
+                        continue;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            None => match rx.recv() {
+                Ok(c) => c,
+                Err(_) => break,
+            },
+        };
+
+        match cmd {
+            Command::Submit(req) => {
+                if batcher.pending_rows() == 0 {
+                    deadline = Some(Instant::now() + cfg.flush_interval);
+                }
+                if let Some((batch, _reason)) = batcher.push(req) {
+                    apply_sealed(batch, &mut backend)?;
+                    deadline = if batcher.pending_rows() > 0 {
+                        Some(Instant::now() + cfg.flush_interval)
+                    } else {
+                        None
+                    };
+                }
+            }
+            Command::SubmitMany(reqs) => {
+                for req in reqs {
+                    if let Some((batch, _reason)) = batcher.push(req) {
+                        apply_sealed(batch, &mut backend)?;
+                        deadline = None; // re-anchored below if still pending
+                    }
+                }
+                // Anchor the deadline at the first pending request; do
+                // not extend it on later arrivals (bounded staleness).
+                if batcher.pending_rows() > 0 {
+                    if deadline.is_none() {
+                        deadline = Some(Instant::now() + cfg.flush_interval);
+                    }
+                } else {
+                    deadline = None;
+                }
+            }
+            Command::Read(row, reply) => {
+                flush(&mut batcher, &mut backend)?;
+                deadline = None;
+                let _ = reply.send(backend.read_row(row));
+            }
+            Command::Write(row, value, reply) => {
+                flush(&mut batcher, &mut backend)?;
+                deadline = None;
+                let _ = reply.send(backend.write_row(row, value));
+            }
+            Command::Flush(reply) => {
+                flush(&mut batcher, &mut backend)?;
+                deadline = None;
+                let _ = reply.send(());
+            }
+            Command::Snapshot(reply) => {
+                flush(&mut batcher, &mut backend)?;
+                deadline = None;
+                let _ = reply.send(backend.snapshot());
+            }
+            Command::Shutdown => {
+                flush(&mut batcher, &mut backend)?;
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::FastBackend;
+    use crate::util::bits;
+    use crate::util::rng::Rng;
+
+    fn engine(rows: usize, q: usize) -> UpdateEngine {
+        let cfg = EngineConfig::new(rows, q);
+        UpdateEngine::start(cfg, move || {
+            Ok(Box::new(FastBackend::new(rows.div_ceil(128).max(1), rows.min(128), q)))
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn submit_read_roundtrip() {
+        let e = engine(128, 16);
+        e.submit_blocking(UpdateRequest::add(5, 100)).unwrap();
+        e.submit_blocking(UpdateRequest::add(5, 23)).unwrap();
+        e.submit_blocking(UpdateRequest::sub(5, 3)).unwrap();
+        assert_eq!(e.read(5).unwrap(), 120);
+        let stats = e.stats();
+        assert_eq!(stats.submitted, 3);
+        assert_eq!(stats.completed, 3);
+        assert!(stats.batches >= 1);
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn random_stream_matches_host_semantics() {
+        let rows = 128;
+        let q = 16;
+        let e = engine(rows, q);
+        let mut rng = Rng::new(77);
+        let mut expect = vec![0u32; rows];
+        for _ in 0..2000 {
+            let row = rng.below(rows as u64) as usize;
+            let v = rng.below(1 << q) as u32;
+            if rng.chance(0.3) {
+                e.submit_blocking(UpdateRequest::sub(row, v)).unwrap();
+                expect[row] = bits::sub_mod(expect[row], v, q);
+            } else {
+                e.submit_blocking(UpdateRequest::add(row, v)).unwrap();
+                expect[row] = bits::add_mod(expect[row], v, q);
+            }
+        }
+        assert_eq!(e.snapshot().unwrap(), expect);
+        let stats = e.stats();
+        assert_eq!(stats.completed, 2000);
+        assert!(stats.rows_per_batch > 1.0, "coalescing should batch rows");
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn submit_many_matches_individual_submits() {
+        let rows = 128;
+        let q = 16;
+        let bulk = engine(rows, q);
+        let single = engine(rows, q);
+        let mut rng = Rng::new(9);
+        let reqs: Vec<UpdateRequest> = (0..3000)
+            .map(|_| {
+                let row = rng.below(rows as u64) as usize;
+                let v = rng.below(1 << q) as u32;
+                if rng.chance(0.3) {
+                    UpdateRequest::sub(row, v)
+                } else {
+                    UpdateRequest::add(row, v)
+                }
+            })
+            .collect();
+        for chunk in reqs.chunks(256) {
+            bulk.submit_many(chunk.to_vec()).unwrap();
+        }
+        for r in &reqs {
+            single.submit_blocking(*r).unwrap();
+        }
+        assert_eq!(bulk.snapshot().unwrap(), single.snapshot().unwrap());
+        assert_eq!(bulk.stats().completed, 3000);
+        bulk.shutdown().unwrap();
+        single.shutdown().unwrap();
+    }
+
+    #[test]
+    fn deadline_flushes_without_reads() {
+        let mut cfg = EngineConfig::new(128, 16);
+        cfg.flush_interval = Duration::from_millis(5);
+        cfg.seal_at_rows = None; // only the deadline can flush
+        let e = UpdateEngine::start(cfg, || Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
+        e.submit_blocking(UpdateRequest::add(0, 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(e.stats().batches, 1, "deadline flush did not fire");
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn write_is_consistent_with_pending_updates() {
+        let e = engine(128, 16);
+        e.submit_blocking(UpdateRequest::add(7, 5)).unwrap();
+        e.write(7, 1000).unwrap(); // flushes the +5 first, then overwrites
+        e.submit_blocking(UpdateRequest::add(7, 1)).unwrap();
+        assert_eq!(e.read(7).unwrap(), 1001);
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn stats_report_energy_and_modeled_time() {
+        let e = engine(128, 16);
+        for r in 0..128 {
+            e.submit_blocking(UpdateRequest::add(r, 1)).unwrap();
+        }
+        e.flush().unwrap();
+        let s = e.stats();
+        assert!(s.modeled_energy_pj > 0.0);
+        assert!(s.modeled_ns > 0.0);
+        assert_eq!(s.backend, "fast-behavioural");
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let mut cfg = EngineConfig::new(128, 16);
+        cfg.seal_at_rows = None;
+        cfg.flush_interval = Duration::from_secs(3600); // never by deadline
+        let e = UpdateEngine::start(cfg, || Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
+        e.submit_blocking(UpdateRequest::add(0, 42)).unwrap();
+        // give the worker a moment to drain the queue
+        std::thread::sleep(Duration::from_millis(20));
+        e.shutdown().unwrap();
+        // Batch applied at shutdown — verified via a fresh engine not
+        // possible (state dropped); instead assert via stats path in
+        // the deadline test. Here we just assert clean shutdown.
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut cfg = EngineConfig::new(128, 16);
+        cfg.queue_cap = 2;
+        cfg.seal_at_rows = None;
+        cfg.flush_interval = Duration::from_secs(3600);
+        // A slow backend would be needed to reliably fill the queue; we
+        // simulate by pausing the worker with a flood from this thread.
+        let e = UpdateEngine::start(cfg, || Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
+        let mut rejected = 0;
+        for i in 0..10_000 {
+            if e.submit(UpdateRequest::add((i % 128) as usize, 1)).is_err() {
+                rejected += 1;
+            }
+        }
+        // With a 2-deep queue and a busy worker some rejections are
+        // overwhelmingly likely, but not guaranteed — accept either,
+        // the accounting must be consistent.
+        let s = e.stats();
+        assert_eq!(s.rejected, rejected);
+        assert_eq!(s.submitted, 10_000);
+        e.shutdown().unwrap();
+    }
+}

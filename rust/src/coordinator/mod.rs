@@ -1,0 +1,24 @@
+//! Layer-3 coordinator: the concurrent update engine in front of the
+//! FAST macros (the system half of the paper's contribution).
+//!
+//! Pipeline: requests → admission (bounded queue) → [`Batcher`]
+//! (coalesce per row, one kind per batch) → [`BankSet`] / backend
+//! (fully-concurrent batch execution, per-bank clock gating) → metrics.
+//!
+//! - [`request`] — update ops, batch kinds, coalescing algebra
+//! - [`batcher`] — the coalescing batcher and its seal policy
+//! - [`bank`] — striping across 128-row macros, parallel execution
+//! - [`backend`] — behavioural / XLA-PJRT / digital-baseline executors
+//! - [`engine`] — worker thread, flush policy, backpressure, stats
+
+pub mod backend;
+pub mod bank;
+pub mod batcher;
+pub mod engine;
+pub mod request;
+
+pub use backend::{AppliedBatch, Backend, DigitalBackend, FastBackend, XlaBackend};
+pub use bank::{BankApply, BankSet};
+pub use batcher::{Batch, Batcher, SealReason};
+pub use engine::{EngineConfig, EngineMetrics, EngineStats, UpdateEngine};
+pub use request::{BatchKind, UpdateOp, UpdateRequest};

@@ -1,0 +1,160 @@
+//! Request types for the concurrent update engine.
+//!
+//! The paper motivates FAST with streams of small row updates (database
+//! delta updates, graph feature updates). A request is one q-bit update
+//! to one logical row; the coordinator's job is to pack many of them
+//! into fully-concurrent FAST batch ops.
+
+use crate::fastmem::AluOp;
+use crate::util::bits;
+
+/// The update operation carried by a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UpdateOp {
+    /// row += operand (mod 2^q)
+    Add,
+    /// row -= operand (mod 2^q)
+    Sub,
+    And,
+    Or,
+    Xor,
+}
+
+impl UpdateOp {
+    /// The ALU configuration implementing this op. `Sub` is executed as
+    /// `Add` of the negated operand so Add/Sub share batches.
+    pub fn alu_op(self) -> AluOp {
+        match self {
+            UpdateOp::Add | UpdateOp::Sub => AluOp::Add,
+            UpdateOp::And => AluOp::And,
+            UpdateOp::Or => AluOp::Or,
+            UpdateOp::Xor => AluOp::Xor,
+        }
+    }
+
+    /// Batch *kind*: requests of the same kind can share one FAST batch.
+    pub fn kind(self) -> BatchKind {
+        match self {
+            UpdateOp::Add | UpdateOp::Sub => BatchKind::Add,
+            UpdateOp::And => BatchKind::And,
+            UpdateOp::Or => BatchKind::Or,
+            UpdateOp::Xor => BatchKind::Xor,
+        }
+    }
+
+    /// Normalize the operand for batching: Sub becomes Add of the
+    /// two's complement.
+    pub fn normalized_operand(self, operand: u32, q: usize) -> u32 {
+        match self {
+            UpdateOp::Sub => bits::sub_mod(0, operand, q),
+            _ => operand & bits::mask(q),
+        }
+    }
+}
+
+/// Kind of a coalesced batch (one kind per FAST batch op).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BatchKind {
+    Add,
+    And,
+    Or,
+    Xor,
+}
+
+impl BatchKind {
+    pub fn alu_op(self) -> AluOp {
+        match self {
+            BatchKind::Add => AluOp::Add,
+            BatchKind::And => AluOp::And,
+            BatchKind::Or => AluOp::Or,
+            BatchKind::Xor => AluOp::Xor,
+        }
+    }
+
+    /// Identity operand: a row carrying the identity is unaffected by
+    /// the batch (used to fill untouched rows of a dense batch).
+    pub fn identity(self, q: usize) -> u32 {
+        match self {
+            BatchKind::Add | BatchKind::Or | BatchKind::Xor => 0,
+            BatchKind::And => bits::mask(q),
+        }
+    }
+
+    /// Coalesce two operands targeting the same row within one batch.
+    pub fn coalesce(self, a: u32, b: u32, q: usize) -> u32 {
+        match self {
+            BatchKind::Add => bits::add_mod(a, b, q),
+            BatchKind::And => a & b,
+            BatchKind::Or => (a | b) & bits::mask(q),
+            BatchKind::Xor => (a ^ b) & bits::mask(q),
+        }
+    }
+}
+
+/// One row-update request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UpdateRequest {
+    /// Logical row across all banks.
+    pub row: usize,
+    pub op: UpdateOp,
+    pub operand: u32,
+}
+
+impl UpdateRequest {
+    pub fn add(row: usize, operand: u32) -> Self {
+        UpdateRequest { row, op: UpdateOp::Add, operand }
+    }
+
+    pub fn sub(row: usize, operand: u32) -> Self {
+        UpdateRequest { row, op: UpdateOp::Sub, operand }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sub_normalizes_to_add_complement() {
+        let op = UpdateOp::Sub;
+        assert_eq!(op.normalized_operand(1, 16), 0xFFFF);
+        assert_eq!(op.normalized_operand(0, 16), 0);
+        assert_eq!(op.kind(), BatchKind::Add);
+    }
+
+    #[test]
+    fn identities_are_neutral() {
+        for kind in [BatchKind::Add, BatchKind::And, BatchKind::Or, BatchKind::Xor] {
+            let id = kind.identity(8);
+            for v in [0u32, 1, 0x7F, 0xFF] {
+                let out = match kind {
+                    BatchKind::Add => bits::add_mod(v, id, 8),
+                    BatchKind::And => v & id,
+                    BatchKind::Or => (v | id) & 0xFF,
+                    BatchKind::Xor => (v ^ id) & 0xFF,
+                };
+                assert_eq!(out, v, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn coalescing_matches_sequential_application() {
+        // Applying two coalesced operands in one batch == applying them
+        // in two batches, for every kind.
+        let q = 8;
+        for kind in [BatchKind::Add, BatchKind::And, BatchKind::Or, BatchKind::Xor] {
+            for (v, a, b) in [(0x5Au32, 0x0Fu32, 0x33u32), (0xFF, 0x01, 0x80)] {
+                let apply = |x: u32, o: u32| match kind {
+                    BatchKind::Add => bits::add_mod(x, o, q),
+                    BatchKind::And => x & o,
+                    BatchKind::Or => (x | o) & 0xFF,
+                    BatchKind::Xor => (x ^ o) & 0xFF,
+                };
+                let sequential = apply(apply(v, a), b);
+                let coalesced = apply(v, kind.coalesce(a, b, q));
+                assert_eq!(sequential, coalesced, "{kind:?} v={v:#x}");
+            }
+        }
+    }
+}

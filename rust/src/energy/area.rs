@@ -1,0 +1,160 @@
+//! Area model: cell-level and macro-level area of FAST vs conventional
+//! SRAM, and the die breakdown of Fig. 14.
+//!
+//! Paper anchors (Section III.E):
+//!   - 10T cell ⇒ ~70% cell-level overhead over 6T
+//!   - shift-control generation ≈ 10% of the cell array at 16 columns
+//!   - full macro ≈ 41.7% larger than the general-purpose SRAM macro
+
+use super::tech::TechParams;
+
+/// Area breakdown of one macro (µm²).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AreaBreakdown {
+    pub cell_array: f64,
+    pub shift_ctrl: f64,
+    pub row_alus: f64,
+    pub decoder_precharge_sa: f64,
+    pub total: f64,
+}
+
+impl AreaBreakdown {
+    /// Percentages in the order: cells, shift control, row ALUs,
+    /// shared peripherals (Fig. 14 pie slices).
+    pub fn percentages(&self) -> Vec<(&'static str, f64)> {
+        let pct = |x: f64| 100.0 * x / self.total;
+        vec![
+            ("cell array", pct(self.cell_array)),
+            ("shift control", pct(self.shift_ctrl)),
+            ("row ALUs + route", pct(self.row_alus)),
+            ("decoder/precharge/SA/ctrl", pct(self.decoder_precharge_sa)),
+        ]
+    }
+}
+
+/// Area model over the shared technology parameters.
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    pub p: TechParams,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel { p: TechParams::default() }
+    }
+}
+
+impl AreaModel {
+    pub fn new(p: TechParams) -> Self {
+        AreaModel { p }
+    }
+
+    /// FAST 10T cell area (µm²).
+    pub fn fast_cell(&self) -> f64 {
+        self.p.area_cell_6t * (1.0 + self.p.fast_cell_overhead)
+    }
+
+    /// Conventional SRAM macro area: 6T array + shared peripherals.
+    pub fn sram_macro(&self, rows: usize, cols: usize) -> f64 {
+        let cells = rows as f64 * cols as f64 * self.p.area_cell_6t;
+        // Peripheral area scales with the fitted fraction of a 128×16
+        // reference array, with a perimeter-ish split: decoder scales
+        // with rows, column circuitry with cols.
+        let ref_cells = 128.0 * 16.0 * self.p.area_cell_6t;
+        let periph_ref = self.p.periph_frac_of_6t_array * ref_cells;
+        let periph = periph_ref * (0.5 * rows as f64 / 128.0 + 0.5 * cols as f64 / 16.0);
+        cells + periph
+    }
+
+    /// FAST macro breakdown (Fig. 14).
+    pub fn fast_breakdown(&self, rows: usize, cols: usize) -> AreaBreakdown {
+        let cell_array = rows as f64 * cols as f64 * self.fast_cell();
+        let shift_ctrl = self.p.shift_ctrl_frac * cell_array * (16.0 / cols as f64).min(1.0)
+            + self.p.shift_ctrl_frac * cell_array * (1.0 - (16.0 / cols as f64).min(1.0)) * 0.5;
+        let row_alus = rows as f64 * self.p.alu_area_cells * self.p.area_cell_6t;
+        // Same shared peripherals as the conventional macro.
+        let ref_cells = 128.0 * 16.0 * self.p.area_cell_6t;
+        let periph_ref = self.p.periph_frac_of_6t_array * ref_cells;
+        let periph = periph_ref * (0.5 * rows as f64 / 128.0 + 0.5 * cols as f64 / 16.0);
+        let total = cell_array + shift_ctrl + row_alus + periph;
+        AreaBreakdown {
+            cell_array,
+            shift_ctrl,
+            row_alus,
+            decoder_precharge_sa: periph,
+            total,
+        }
+    }
+
+    /// FAST macro total area.
+    pub fn fast_macro(&self, rows: usize, cols: usize) -> f64 {
+        self.fast_breakdown(rows, cols).total
+    }
+
+    /// Macro-level overhead of FAST vs conventional SRAM (paper: ~41.7%
+    /// for 128×16).
+    pub fn macro_overhead(&self, rows: usize, cols: usize) -> f64 {
+        self.fast_macro(rows, cols) / self.sram_macro(rows, cols) - 1.0
+    }
+
+    /// Area-normalization factor for efficiency comparisons (Fig. 11):
+    /// ops/J/area — FAST packs fewer rows into the same silicon.
+    pub fn area_norm(&self, rows: usize, cols: usize) -> f64 {
+        self.sram_macro(rows, cols) / self.fast_macro(rows, cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_overhead_is_70_percent() {
+        let m = AreaModel::default();
+        let ratio = m.fast_cell() / m.p.area_cell_6t;
+        assert!((ratio - 1.70).abs() < 1e-9);
+    }
+
+    #[test]
+    fn macro_overhead_near_41_7_percent() {
+        let m = AreaModel::default();
+        let ovh = m.macro_overhead(128, 16);
+        assert!(
+            (ovh - 0.417).abs() < 0.02,
+            "macro overhead {:.1}% vs paper 41.7%",
+            100.0 * ovh
+        );
+    }
+
+    #[test]
+    fn shift_ctrl_near_10_percent_of_cells_at_16_cols() {
+        let m = AreaModel::default();
+        let b = m.fast_breakdown(128, 16);
+        let frac = b.shift_ctrl / b.cell_array;
+        assert!((frac - 0.10).abs() < 0.01, "shift ctrl frac {frac}");
+    }
+
+    #[test]
+    fn breakdown_sums_to_total_and_percentages_to_100() {
+        let m = AreaModel::default();
+        let b = m.fast_breakdown(128, 16);
+        let sum = b.cell_array + b.shift_ctrl + b.row_alus + b.decoder_precharge_sa;
+        assert!((sum - b.total).abs() < 1e-9);
+        let pct_sum: f64 = b.percentages().iter().map(|(_, p)| p).sum();
+        assert!((pct_sum - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_grows_with_rows() {
+        let m = AreaModel::default();
+        assert!(m.fast_macro(256, 16) > m.fast_macro(128, 16));
+        assert!(m.sram_macro(256, 16) > m.sram_macro(128, 16));
+    }
+
+    #[test]
+    fn area_norm_below_one() {
+        let m = AreaModel::default();
+        let n = m.area_norm(128, 16);
+        assert!(n < 1.0 && n > 0.5, "norm {n}");
+    }
+}

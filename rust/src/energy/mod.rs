@@ -1,0 +1,15 @@
+//! Calibrated energy / latency / area models (paper Section III).
+//!
+//! - [`tech`] — technology primitives recovered from Table I and the
+//!   measured shmoo points (DESIGN.md §6 derives each constant)
+//! - [`model`] — per-op and per-batch cost functions for FAST, the
+//!   fully-digital near-memory baseline, and the dual-port strawman
+//! - [`area`] — cell/macro area and the Fig. 14 die breakdown
+
+pub mod area;
+pub mod model;
+pub mod tech;
+
+pub use area::{AreaBreakdown, AreaModel};
+pub use model::{Cost, DigitalModel, DualPortModel, FastModel};
+pub use tech::TechParams;

@@ -1,0 +1,230 @@
+//! Technology calibration constants (65 nm CMOS, 1.0 V nominal).
+//!
+//! Every constant is recovered from the paper's published aggregates
+//! (Table I, Section III.E, and the measured shmoo points) — see
+//! DESIGN.md §6 for the derivations. All other datapoints in the
+//! reproduction (Figs. 10, 11, 13, 14) are *derived* from these
+//! primitives; there is no per-figure tuning.
+//!
+//! Units: energies in fJ, times in ns, areas in µm², voltages in V.
+
+/// Technology + calibration parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TechParams {
+    // --- SRAM access energies at the reference 128-row bitline ---
+    /// 6T SRAM read energy per bit at R = 128 (Table I: 68.4 fJ/bit).
+    pub e_read_6t_128: f64,
+    /// 6T SRAM write energy per bit at R = 128 (Table I: 72.4 fJ/bit).
+    pub e_write_6t_128: f64,
+    /// FAST cell read energy per bit at R = 128 (Table I: 74.8 fJ/bit —
+    /// 6T cost + ~9% switch-transistor parasitics on the bitline).
+    pub e_read_fast_128: f64,
+    /// FAST cell write energy per bit at R = 128 (Table I: 76.2 fJ/bit).
+    pub e_write_fast_128: f64,
+    /// Fraction of bitline energy that is row-independent (sense amp,
+    /// drivers, decoder). The rest scales linearly with rows-on-bitline.
+    pub bitline_fixed_frac: f64,
+
+    // --- FAST shift datapath ---
+    /// Energy per shiftable cell per shift cycle (local TG + inverter
+    /// toggle at 50% activity). Calibrated so a 16-bit add with
+    /// write-back costs 0.38 pJ/OP (Table I): 16·(16·e + e_fa) = 380 fJ.
+    pub e_shift_cell: f64,
+    /// Energy per 1-bit FA evaluation (the row ALU).
+    pub e_fa: f64,
+    /// Shift cycle period at 1.0 V. Table I's 0.025 ns/OP at 128-row
+    /// parallelism ⇒ 16 · t_shift / 128 = 0.025 ⇒ t_shift = 0.2 ns
+    /// (the post-layout critical path of the inverter→TG→inverter hop).
+    pub t_shift: f64,
+    /// Shift-control skew penalty per doubling of rows beyond 128
+    /// (clock-tree depth growth for taller macros).
+    pub shift_skew_per_doubling: f64,
+
+    // --- conventional SRAM timing ---
+    /// Row access (read or write) time at R = 128 (Table I: 0.94 ns).
+    pub t_access_128: f64,
+    /// Fraction of access time that is row-independent.
+    pub access_fixed_frac: f64,
+
+    // --- fully-digital near-memory baseline (Fig. 9) ---
+    /// Register (DFF) write energy per bit in the digital engine
+    /// (Table I "Digital" column: 219.7 fJ/bit).
+    pub e_write_dff: f64,
+    /// Register access time (Table I: 0.09 ns).
+    pub t_access_dff: f64,
+    /// Burst-pipelining amortization of bitline energy when the digital
+    /// engine sweeps rows sequentially (shared precharge, open-page
+    /// bursts). Fitted so the 16-bit/128-row op costs 2.09 pJ (Table I):
+    /// 16 · (68.4 + 72.4) · η = 2090 ⇒ η ≈ 0.928.
+    pub eta_digital_burst: f64,
+    /// Digital per-row pipeline throughput as a fraction of the access
+    /// time (read/add/write stages overlapped). Fitted to Table I's
+    /// 0.68 ns/OP at R = 128: 0.68 / 0.94 ≈ 0.723.
+    pub digital_pipe_frac: f64,
+
+    // --- transistor counts (Table I "Cell Structure") ---
+    pub transistors_6t: u32,
+    pub transistors_fast: u32,
+    pub transistors_digital: u32,
+
+    // --- area (65 nm) ---
+    /// 6T SRAM cell area (µm²), typical published 65 nm value.
+    pub area_cell_6t: f64,
+    /// FAST 10T cell area overhead vs 6T (paper: "about 70%").
+    pub fast_cell_overhead: f64,
+    /// Shift-control generation area as a fraction of the FAST cell
+    /// array at 16 columns (paper: "about 10%").
+    pub shift_ctrl_frac: f64,
+    /// Row-ALU + carry latch + route unit area per row, in units of 6T
+    /// cell areas (a ~20T datapath per row).
+    pub alu_area_cells: f64,
+    /// Shared peripherals (decoders, precharge, sense amps, control
+    /// decoder) as a multiple of the 6T cell-array area for a 128×16
+    /// macro. Fitted so the full FAST macro is ~41.7% larger than the
+    /// general-purpose SRAM macro (Section III.E).
+    pub periph_frac_of_6t_array: f64,
+
+    // --- supply / shmoo calibration (Fig. 13, Section abstract) ---
+    /// Nominal supply.
+    pub vdd_nominal: f64,
+    /// NMOS/PMOS threshold magnitude used by the alpha-power model.
+    pub v_th: f64,
+    /// Alpha-power-law velocity-saturation exponent. Fitted to the two
+    /// measured shmoo points (800 MHz @ 1.0 V, 1.2 GHz @ 1.2 V).
+    pub alpha_power: f64,
+    /// f_max(vdd_nominal) of the fabricated macro: 0.8 GHz.
+    pub f_max_nominal_ghz: f64,
+}
+
+impl Default for TechParams {
+    fn default() -> Self {
+        TechParams {
+            e_read_6t_128: 68.4,
+            e_write_6t_128: 72.4,
+            e_read_fast_128: 74.8,
+            e_write_fast_128: 76.2,
+            bitline_fixed_frac: 0.10,
+
+            // 16·(16·1.17 + 4.88) = 377.6 fJ ≈ 0.38 pJ (Table I)
+            e_shift_cell: 1.17,
+            e_fa: 4.88,
+            t_shift: 0.2,
+            shift_skew_per_doubling: 0.02,
+
+            t_access_128: 0.94,
+            access_fixed_frac: 0.30,
+
+            e_write_dff: 219.7,
+            t_access_dff: 0.09,
+            eta_digital_burst: 0.9278,
+            digital_pipe_frac: 0.7234,
+
+            transistors_6t: 6,
+            transistors_fast: 10,
+            transistors_digital: 20,
+
+            area_cell_6t: 0.525,
+            fast_cell_overhead: 0.70,
+            shift_ctrl_frac: 0.10,
+            alu_area_cells: 2.0,
+            periph_frac_of_6t_array: 1.386,
+
+            vdd_nominal: 1.0,
+            v_th: 0.45,
+            alpha_power: 1.8952,
+            f_max_nominal_ghz: 0.8,
+        }
+    }
+}
+
+impl TechParams {
+    /// Bitline energy scale factor for an R-row column relative to the
+    /// 128-row reference: fixed fraction + linear-in-R wire/cell load.
+    pub fn bitline_scale(&self, rows: usize) -> f64 {
+        assert!(rows >= 1);
+        self.bitline_fixed_frac + (1.0 - self.bitline_fixed_frac) * rows as f64 / 128.0
+    }
+
+    /// Access-time scale factor for an R-row array relative to 128 rows.
+    pub fn access_scale(&self, rows: usize) -> f64 {
+        assert!(rows >= 1);
+        self.access_fixed_frac + (1.0 - self.access_fixed_frac) * rows as f64 / 128.0
+    }
+
+    /// Shift-cycle period for an R-row macro (control skew grows with
+    /// the log of the row count beyond the reference height).
+    pub fn t_shift_at(&self, rows: usize) -> f64 {
+        let doublings = if rows > 128 {
+            (rows as f64 / 128.0).log2()
+        } else {
+            0.0
+        };
+        self.t_shift * (1.0 + self.shift_skew_per_doubling * doublings)
+    }
+
+    /// Max shift-clock frequency at a given supply (alpha-power law):
+    /// f ∝ (V − Vth)^α / V, normalized to the measured nominal point.
+    pub fn f_max_ghz(&self, vdd: f64) -> f64 {
+        if vdd <= self.v_th {
+            return 0.0;
+        }
+        let drive = |v: f64| (v - self.v_th).powf(self.alpha_power) / v;
+        self.f_max_nominal_ghz * drive(vdd) / drive(self.vdd_nominal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_recover_table1_fast_calc_energy() {
+        let p = TechParams::default();
+        // 16-bit add + write-back, per word: q·(q·e_shift + e_fa)
+        let e = 16.0 * (16.0 * p.e_shift_cell + p.e_fa);
+        assert!((e - 380.0).abs() < 5.0, "calc energy {e} fJ vs 0.38 pJ");
+    }
+
+    #[test]
+    fn defaults_recover_table1_digital_calc_energy() {
+        let p = TechParams::default();
+        let e = 16.0 * (p.e_read_6t_128 + p.e_write_6t_128) * p.eta_digital_burst;
+        assert!((e - 2090.0).abs() < 5.0, "digital calc energy {e} fJ vs 2.09 pJ");
+    }
+
+    #[test]
+    fn defaults_recover_table1_latencies() {
+        let p = TechParams::default();
+        // FAST: 16 cycles / 128 rows = 0.025 ns/OP
+        assert!((16.0 * p.t_shift / 128.0 - 0.025).abs() < 1e-9);
+        // Digital: 0.68 ns/OP pipelined
+        let t = p.digital_pipe_frac * p.t_access_128;
+        assert!((t - 0.68).abs() < 0.001, "digital op time {t}");
+    }
+
+    #[test]
+    fn bitline_scale_monotonic() {
+        let p = TechParams::default();
+        assert!((p.bitline_scale(128) - 1.0).abs() < 1e-12);
+        assert!(p.bitline_scale(32) < 1.0);
+        assert!(p.bitline_scale(512) > 2.0);
+    }
+
+    #[test]
+    fn shift_period_grows_slowly_with_rows() {
+        let p = TechParams::default();
+        assert_eq!(p.t_shift_at(128), p.t_shift);
+        assert_eq!(p.t_shift_at(64), p.t_shift);
+        let t1024 = p.t_shift_at(1024);
+        assert!(t1024 > p.t_shift && t1024 < 1.2 * p.t_shift);
+    }
+
+    #[test]
+    fn fmax_matches_measured_shmoo_points() {
+        let p = TechParams::default();
+        assert!((p.f_max_ghz(1.0) - 0.8).abs() < 1e-9);
+        let f12 = p.f_max_ghz(1.2);
+        assert!((f12 - 1.2).abs() < 0.01, "f_max(1.2V) = {f12} GHz vs 1.2");
+        assert_eq!(p.f_max_ghz(0.4), 0.0); // below threshold
+    }
+}

@@ -1,0 +1,151 @@
+//! Experiment E-F10: **Fig. 10** — per-word update energy (a) and
+//! batch-update latency (b) versus bit width, FAST vs the digital
+//! near-memory baseline.
+//!
+//! Paper claims to preserve:
+//!  - (a) FAST wins on energy when rows sufficiently exceed the bit
+//!    width; the advantage grows as rows/width grows (e.g. "4.4× with
+//!    8-bit width and 512 rows").
+//!  - (b) FAST latency depends on the bit width only; the baseline's
+//!    depends on the row count — "hundreds of times speedup" for
+//!    large row counts.
+
+use crate::energy::{DigitalModel, FastModel};
+
+/// One sweep point.
+#[derive(Debug, Clone, Copy)]
+pub struct Point {
+    pub rows: usize,
+    pub q: usize,
+    /// Energy per word update (fJ).
+    pub fast_energy_fj: f64,
+    pub digital_energy_fj: f64,
+    /// Batch-update latency for the whole array (ns).
+    pub fast_latency_ns: f64,
+    pub digital_latency_ns: f64,
+}
+
+impl Point {
+    pub fn energy_ratio(&self) -> f64 {
+        self.digital_energy_fj / self.fast_energy_fj
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.digital_latency_ns / self.fast_latency_ns
+    }
+}
+
+/// Sweep bit widths at fixed row counts.
+pub fn sweep(row_counts: &[usize], widths: &[usize]) -> Vec<Point> {
+    let fast = FastModel::default();
+    let dig = DigitalModel::default();
+    let mut out = Vec::with_capacity(row_counts.len() * widths.len());
+    for &rows in row_counts {
+        for &q in widths {
+            let f_op = fast.calc_per_op(rows, q);
+            let d_op = dig.calc_per_op(rows, q);
+            let f_batch = fast.batch_op(rows, q);
+            let d_batch = dig.batch_update(rows, q);
+            out.push(Point {
+                rows,
+                q,
+                fast_energy_fj: f_op.energy_fj,
+                digital_energy_fj: d_op.energy_fj,
+                fast_latency_ns: f_batch.latency_ns,
+                digital_latency_ns: d_batch.latency_ns,
+            });
+        }
+    }
+    out
+}
+
+/// Default sweep matching the paper's axes.
+pub fn run() -> Vec<Point> {
+    sweep(&[128, 512], &[4, 8, 16, 32])
+}
+
+pub fn render(points: &[Point]) -> String {
+    let mut s = String::new();
+    s.push_str("Fig. 10(a) — energy per word update (fJ/OP)\n");
+    s.push_str("rows  q  |  FAST fJ | Digital fJ |  ratio\n");
+    s.push_str("---------+----------+------------+-------\n");
+    for p in points {
+        s.push_str(&format!(
+            "{:>4} {:>3} | {:>8.1} | {:>10.1} | {:>5.1}x\n",
+            p.rows,
+            p.q,
+            p.fast_energy_fj,
+            p.digital_energy_fj,
+            p.energy_ratio()
+        ));
+    }
+    s.push_str("\nFig. 10(b) — whole-array batch update latency (ns)\n");
+    s.push_str("rows  q  |  FAST ns | Digital ns | speedup\n");
+    s.push_str("---------+----------+------------+--------\n");
+    for p in points {
+        s.push_str(&format!(
+            "{:>4} {:>3} | {:>8.2} | {:>10.1} | {:>6.1}x\n",
+            p.rows,
+            p.q,
+            p.fast_latency_ns,
+            p.digital_latency_ns,
+            p.speedup()
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_latency_depends_only_on_width() {
+        let pts = sweep(&[128, 512], &[16]);
+        // Same q ⇒ nearly same FAST batch latency (skew adds a few %)...
+        let ratio = pts[1].fast_latency_ns / pts[0].fast_latency_ns;
+        assert!(ratio < 1.1, "FAST latency grew {ratio}x with rows");
+        // ...while the baseline scales ~4×.
+        let dratio = pts[1].digital_latency_ns / pts[0].digital_latency_ns;
+        assert!(dratio > 3.0, "digital latency ratio {dratio}");
+    }
+
+    #[test]
+    fn speedup_grows_with_rows_over_width() {
+        let pts = sweep(&[32, 128, 512], &[16]);
+        assert!(pts[0].speedup() < pts[1].speedup());
+        assert!(pts[1].speedup() < pts[2].speedup());
+        // "hundreds of times" at 512 rows vs 16-bit.
+        assert!(pts[2].speedup() > 100.0, "speedup {}", pts[2].speedup());
+    }
+
+    #[test]
+    fn energy_advantage_grows_with_rows() {
+        let pts = sweep(&[128, 512], &[8]);
+        assert!(pts[1].energy_ratio() > pts[0].energy_ratio());
+        // Paper's datapoint shape: >4× at (512 rows, 8-bit).
+        assert!(pts[1].energy_ratio() > 4.0);
+    }
+
+    #[test]
+    fn energy_advantage_shrinks_with_width_at_fixed_rows() {
+        // FAST energy grows ~q² (q cycles × q cells) while the baseline
+        // grows ~q, so the ratio must shrink as q rises.
+        let pts = sweep(&[128], &[4, 8, 16, 32]);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].energy_ratio() < w[0].energy_ratio(),
+                "ratio did not shrink: {} -> {}",
+                w[0].energy_ratio(),
+                w[1].energy_ratio()
+            );
+        }
+    }
+
+    #[test]
+    fn table1_point_is_on_the_sweep() {
+        let pts = sweep(&[128], &[16]);
+        assert!((pts[0].energy_ratio() - 5.5).abs() < 0.3);
+        assert!((pts[0].speedup() - 27.0).abs() < 2.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Experiment E-F11: **Fig. 11** — batch-update latency and
+//! area-normalized energy efficiency versus row count at several bit
+//! widths ("normalized into the same area").
+//!
+//! Shape to preserve: latency of the FAST batch update is flat in the
+//! row count (vs linear for the baseline), and the area-normalized
+//! efficiency advantage grows with rows and shrinks with bit width.
+
+use crate::energy::{AreaModel, DigitalModel, FastModel};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Point {
+    pub rows: usize,
+    pub q: usize,
+    /// Whole-array batch-update latency (ns).
+    pub fast_latency_ns: f64,
+    pub digital_latency_ns: f64,
+    /// Energy efficiency in OPs per nJ.
+    pub fast_ops_per_nj: f64,
+    pub digital_ops_per_nj: f64,
+    /// Same, normalized by macro area (OPs / nJ / mm² × 1e-6 —
+    /// arbitrary consistent unit, FAST divided by its area overhead).
+    pub fast_ops_per_nj_per_area: f64,
+    pub digital_ops_per_nj_per_area: f64,
+}
+
+impl Point {
+    pub fn normalized_advantage(&self) -> f64 {
+        self.fast_ops_per_nj_per_area / self.digital_ops_per_nj_per_area
+    }
+}
+
+pub fn sweep(row_counts: &[usize], widths: &[usize]) -> Vec<Point> {
+    let fast = FastModel::default();
+    let dig = DigitalModel::default();
+    let area = AreaModel::default();
+    let mut out = Vec::new();
+    for &q in widths {
+        for &rows in row_counts {
+            let f_batch = fast.batch_op(rows, q);
+            let d_batch = dig.batch_update(rows, q);
+            let f_eff = f_batch.ops_per_nj(rows as u64);
+            let d_eff = d_batch.ops_per_nj(rows as u64);
+            let f_area = area.fast_macro(rows, q);
+            let d_area = area.sram_macro(rows, q);
+            out.push(Point {
+                rows,
+                q,
+                fast_latency_ns: f_batch.latency_ns,
+                digital_latency_ns: d_batch.latency_ns,
+                fast_ops_per_nj: f_eff,
+                digital_ops_per_nj: d_eff,
+                fast_ops_per_nj_per_area: f_eff / f_area,
+                digital_ops_per_nj_per_area: d_eff / d_area,
+            });
+        }
+    }
+    out
+}
+
+/// Default sweep matching the paper's axes.
+pub fn run() -> Vec<Point> {
+    sweep(&[32, 64, 128, 256, 512, 1024], &[8, 16, 32])
+}
+
+pub fn render(points: &[Point]) -> String {
+    let mut s = String::new();
+    s.push_str("Fig. 11 — batch-update latency + area-normalized efficiency\n");
+    s.push_str(
+        "   q rows | FAST ns | Dig ns  | FAST OP/nJ | Dig OP/nJ | norm adv\n",
+    );
+    s.push_str(
+        "----------+---------+---------+------------+-----------+---------\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{:>4} {:>4} | {:>7.2} | {:>7.1} | {:>10.1} | {:>9.1} | {:>7.2}x\n",
+            p.q,
+            p.rows,
+            p.fast_latency_ns,
+            p.digital_latency_ns,
+            p.fast_ops_per_nj,
+            p.digital_ops_per_nj,
+            p.normalized_advantage()
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_batch_latency_flat_in_rows() {
+        let pts = sweep(&[32, 1024], &[16]);
+        let ratio = pts[1].fast_latency_ns / pts[0].fast_latency_ns;
+        assert!(ratio < 1.1, "FAST latency must be ~flat in rows, got {ratio}x");
+        let dratio = pts[1].digital_latency_ns / pts[0].digital_latency_ns;
+        assert!(dratio > 20.0, "digital must scale with rows, got {dratio}x");
+    }
+
+    #[test]
+    fn normalized_advantage_grows_with_rows() {
+        let pts = sweep(&[64, 256, 1024], &[16]);
+        assert!(pts[0].normalized_advantage() < pts[1].normalized_advantage());
+        assert!(pts[1].normalized_advantage() < pts[2].normalized_advantage());
+    }
+
+    #[test]
+    fn advantage_shrinks_with_width() {
+        let narrow = sweep(&[512], &[8]);
+        let wide = sweep(&[512], &[32]);
+        assert!(narrow[0].normalized_advantage() > wide[0].normalized_advantage());
+    }
+
+    #[test]
+    fn area_normalization_costs_fast_roughly_the_overhead() {
+        let pts = sweep(&[128], &[16]);
+        let p = pts[0];
+        let raw_adv = p.fast_ops_per_nj / p.digital_ops_per_nj;
+        let norm_adv = p.normalized_advantage();
+        // The normalized advantage must be lower by about the ~1.4x
+        // area overhead.
+        let penalty = raw_adv / norm_adv;
+        assert!((1.3..1.6).contains(&penalty), "area penalty {penalty}");
+    }
+}

@@ -1,0 +1,54 @@
+//! Experiment E-F13: **Fig. 13** — shmoo plot of the FAST macro
+//! (supply voltage × clock frequency pass/fail region).
+//!
+//! Anchors from the abstract/measurement: 800 MHz @ 1.0 V and
+//! 1.2 GHz @ 1.2 V must pass; the boundary follows the alpha-power
+//! critical-path model calibrated to those two silicon points.
+
+use crate::timing::{ShmooConfig, ShmooGrid, ShmooModel};
+
+pub fn run() -> ShmooGrid {
+    ShmooModel::default().sweep(&ShmooConfig::default())
+}
+
+pub fn run_with(cfg: &ShmooConfig) -> ShmooGrid {
+    ShmooModel::default().sweep(cfg)
+}
+
+pub fn render(grid: &ShmooGrid) -> String {
+    let mut s = String::new();
+    s.push_str("Fig. 13 — shmoo plot (supply × frequency)\n");
+    s.push_str(&grid.render());
+    if let Some(f) = grid.max_pass_freq(1.0) {
+        s.push_str(&format!("max pass @1.0V: {f:.2} GHz (silicon: 0.80 GHz)\n"));
+    }
+    if let Some(f) = grid.max_pass_freq(1.2) {
+        s.push_str(&format!("max pass @1.2V: {f:.2} GHz (silicon: 1.20 GHz)\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silicon_anchor_points_in_pass_region() {
+        let grid = run();
+        let f10 = grid.max_pass_freq(1.0).unwrap();
+        let f12 = grid.max_pass_freq(1.2).unwrap();
+        assert!((f10 - 0.8).abs() < 0.11, "f_max@1.0V {f10}");
+        assert!((f12 - 1.2).abs() < 0.11, "f_max@1.2V {f12}");
+    }
+
+    #[test]
+    fn pass_region_monotone_in_vdd() {
+        let grid = run();
+        let mut last = 0.0;
+        for &v in &grid.vdds {
+            let f = grid.max_pass_freq(v).unwrap_or(0.0);
+            assert!(f + 1e-9 >= last, "pass region shrank at {v} V");
+            last = f;
+        }
+    }
+}

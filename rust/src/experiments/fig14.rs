@@ -1,0 +1,83 @@
+//! Experiment E-F14: **Fig. 14** — area breakdown of the 128-row FAST
+//! die, plus the Section III.E overhead anchors: ~70% cell-level
+//! overhead, ~10% shift-control overhead at 16 columns, ~41.7% total
+//! macro overhead vs general-purpose SRAM.
+
+use crate::energy::{AreaBreakdown, AreaModel};
+
+#[derive(Debug, Clone)]
+pub struct Fig14 {
+    pub rows: usize,
+    pub cols: usize,
+    pub breakdown: AreaBreakdown,
+    pub cell_overhead: f64,
+    pub macro_overhead: f64,
+    pub sram_macro_um2: f64,
+}
+
+pub fn run(rows: usize, cols: usize) -> Fig14 {
+    let m = AreaModel::default();
+    Fig14 {
+        rows,
+        cols,
+        breakdown: m.fast_breakdown(rows, cols),
+        cell_overhead: m.fast_cell() / m.p.area_cell_6t - 1.0,
+        macro_overhead: m.macro_overhead(rows, cols),
+        sram_macro_um2: m.sram_macro(rows, cols),
+    }
+}
+
+pub fn render(f: &Fig14) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Fig. 14 — area breakdown, {}x{} FAST die\n",
+        f.rows, f.cols
+    ));
+    for (name, pct) in f.breakdown.percentages() {
+        let bar = "#".repeat((pct / 2.0).round() as usize);
+        s.push_str(&format!("  {name:<26} {pct:>5.1}%  {bar}\n"));
+    }
+    s.push_str(&format!(
+        "  total                      {:>8.0} µm²\n",
+        f.breakdown.total
+    ));
+    s.push_str(&format!(
+        "cell-level overhead : {:>5.1}%  (paper: ~70%)\n",
+        100.0 * f.cell_overhead
+    ));
+    s.push_str(&format!(
+        "macro-level overhead: {:>5.1}%  (paper: ~41.7%)\n",
+        100.0 * f.macro_overhead
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_match_paper() {
+        let f = run(128, 16);
+        assert!((f.cell_overhead - 0.70).abs() < 0.01);
+        assert!((f.macro_overhead - 0.417).abs() < 0.02);
+        let shift_frac = f.breakdown.shift_ctrl / f.breakdown.cell_array;
+        assert!((shift_frac - 0.10).abs() < 0.01);
+    }
+
+    #[test]
+    fn percentages_sum_to_100() {
+        let f = run(128, 16);
+        let sum: f64 = f.breakdown.percentages().iter().map(|(_, p)| p).sum();
+        assert!((sum - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_has_all_slices() {
+        let s = render(&run(128, 16));
+        assert!(s.contains("cell array"));
+        assert!(s.contains("shift control"));
+        assert!(s.contains("row ALUs"));
+        assert!(s.contains("41.7%"));
+    }
+}

@@ -1,0 +1,24 @@
+//! Experiment drivers — one module per table/figure in the paper's
+//! evaluation (Section III). Each exposes `run(...)` returning plain
+//! data plus `render(...)` producing the text artifact; the CLI
+//! (`fast <experiment>`) and the benches (`cargo bench`) share these.
+//!
+//! | module        | paper artifact | claim it reproduces                    |
+//! |---------------|----------------|----------------------------------------|
+//! | [`table1`]    | Table I        | energies/latencies; 5.5× / 27.2×       |
+//! | [`fig10`]     | Fig. 10        | energy & latency vs bit width          |
+//! | [`fig11`]     | Fig. 11        | latency + area-norm efficiency vs rows |
+//! | [`fig12`]     | Fig. 12        | leakage, eye pattern, 300 mV margin    |
+//! | [`fig13`]     | Fig. 13        | shmoo: 800 MHz @1.0 V, 1.2 GHz @1.2 V  |
+//! | [`fig14`]     | Fig. 14        | area breakdown; 70% / 10% / 41.7%      |
+//! | [`waveforms`] | Figs. 7–8      | shift / add transients                 |
+//! | [`apps_bench`]| §III.C         | workload-level FAST vs digital         |
+
+pub mod apps_bench;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod table1;
+pub mod waveforms;

@@ -1,0 +1,182 @@
+//! Experiment E-T1: regenerate **Table I** — "Comparison between SRAM
+//! cache and processing in memory".
+//!
+//! Paper values (65 nm, 1.0 V, 128 rows, 16-bit OP):
+//!
+//! |                | FAST SRAM   | SRAM        | Digital      |
+//! | Cell Structure | 10T         | 6T          | 20T          |
+//! | Write Energy   | 76.2 fJ/bit | 72.4 fJ/bit | 219.7 fJ/bit |
+//! | Read Energy    | 74.8 fJ/bit | 68.4 fJ/bit | /            |
+//! | Access Time    | 0.94 ns     | 0.94 ns     | 0.09 ns      |
+//! | Calc. Energy   | 0.38 pJ/OP  | /           | 2.09 pJ/OP   |
+//! | Calc. Time     | 0.025 ns/OP | /           | 0.68 ns/OP   |
+//!
+//! Headline: 5.5× energy saving, 27.2× speedup.
+
+use crate::energy::{DigitalModel, FastModel, TechParams};
+
+/// One regenerated Table I with paper-vs-model columns.
+#[derive(Debug, Clone)]
+pub struct Table1 {
+    pub rows: usize,
+    pub q: usize,
+    // (metric, fast, sram, digital) — NaN for "/" entries.
+    pub fast_write_fj_bit: f64,
+    pub sram_write_fj_bit: f64,
+    pub digital_write_fj_bit: f64,
+    pub fast_read_fj_bit: f64,
+    pub sram_read_fj_bit: f64,
+    pub fast_access_ns: f64,
+    pub sram_access_ns: f64,
+    pub digital_access_ns: f64,
+    pub fast_calc_pj_op: f64,
+    pub digital_calc_pj_op: f64,
+    pub fast_calc_ns_op: f64,
+    pub digital_calc_ns_op: f64,
+    pub energy_ratio: f64,
+    pub speed_ratio: f64,
+}
+
+/// Paper reference values for the same cells.
+pub struct Table1Paper;
+
+impl Table1Paper {
+    pub const FAST_WRITE: f64 = 76.2;
+    pub const SRAM_WRITE: f64 = 72.4;
+    pub const DIGITAL_WRITE: f64 = 219.7;
+    pub const FAST_READ: f64 = 74.8;
+    pub const SRAM_READ: f64 = 68.4;
+    pub const ACCESS_NS: f64 = 0.94;
+    pub const DIGITAL_ACCESS_NS: f64 = 0.09;
+    pub const FAST_CALC_PJ: f64 = 0.38;
+    pub const DIGITAL_CALC_PJ: f64 = 2.09;
+    pub const FAST_CALC_NS: f64 = 0.025;
+    pub const DIGITAL_CALC_NS: f64 = 0.68;
+    pub const ENERGY_RATIO: f64 = 5.5;
+    pub const SPEED_RATIO: f64 = 27.2;
+}
+
+/// Regenerate Table I from the calibrated models.
+pub fn run(rows: usize, q: usize) -> Table1 {
+    let p = TechParams::default();
+    let fast = FastModel::new(p.clone());
+    let dig = DigitalModel::new(p.clone());
+
+    let fast_calc = fast.calc_per_op(rows, q);
+    let dig_calc = dig.calc_per_op(rows, q);
+    Table1 {
+        rows,
+        q,
+        fast_write_fj_bit: fast.write_word(rows, 1).energy_fj,
+        sram_write_fj_bit: dig.write_word_sram(rows, 1).energy_fj,
+        digital_write_fj_bit: dig.write_word_reg(1).energy_fj,
+        fast_read_fj_bit: fast.read_word(rows, 1).energy_fj,
+        sram_read_fj_bit: dig.read_word_sram(rows, 1).energy_fj,
+        fast_access_ns: fast.read_word(rows, 1).latency_ns,
+        sram_access_ns: dig.read_word_sram(rows, 1).latency_ns,
+        digital_access_ns: dig.write_word_reg(1).latency_ns,
+        fast_calc_pj_op: fast_calc.energy_pj(),
+        digital_calc_pj_op: dig_calc.energy_pj(),
+        fast_calc_ns_op: fast_calc.latency_ns,
+        digital_calc_ns_op: dig_calc.latency_ns,
+        energy_ratio: dig_calc.energy_fj / fast_calc.energy_fj,
+        speed_ratio: dig_calc.latency_ns / fast_calc.latency_ns,
+    }
+}
+
+/// Render the regenerated table with paper deltas.
+pub fn render(t: &Table1) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Table I — {} rows, {}-bit OP (model vs paper)\n",
+        t.rows, t.q
+    ));
+    s.push_str(
+        "metric                 |      FAST |      SRAM |   Digital |  paper(FAST/SRAM/Dig)\n",
+    );
+    s.push_str(
+        "-----------------------+-----------+-----------+-----------+----------------------\n",
+    );
+    s.push_str(&format!(
+        "cell structure         |       10T |        6T |       20T |  10T / 6T / 20T\n"
+    ));
+    s.push_str(&format!(
+        "write energy (fJ/bit)  | {:>9.1} | {:>9.1} | {:>9.1} |  {} / {} / {}\n",
+        t.fast_write_fj_bit,
+        t.sram_write_fj_bit,
+        t.digital_write_fj_bit,
+        Table1Paper::FAST_WRITE,
+        Table1Paper::SRAM_WRITE,
+        Table1Paper::DIGITAL_WRITE
+    ));
+    s.push_str(&format!(
+        "read energy (fJ/bit)   | {:>9.1} | {:>9.1} |         / |  {} / {} / -\n",
+        t.fast_read_fj_bit,
+        t.sram_read_fj_bit,
+        Table1Paper::FAST_READ,
+        Table1Paper::SRAM_READ
+    ));
+    s.push_str(&format!(
+        "access time (ns)       | {:>9.2} | {:>9.2} | {:>9.2} |  {} / {} / {}\n",
+        t.fast_access_ns,
+        t.sram_access_ns,
+        t.digital_access_ns,
+        Table1Paper::ACCESS_NS,
+        Table1Paper::ACCESS_NS,
+        Table1Paper::DIGITAL_ACCESS_NS
+    ));
+    s.push_str(&format!(
+        "calc energy (pJ/OP)    | {:>9.2} |         / | {:>9.2} |  {} / - / {}\n",
+        t.fast_calc_pj_op,
+        t.digital_calc_pj_op,
+        Table1Paper::FAST_CALC_PJ,
+        Table1Paper::DIGITAL_CALC_PJ
+    ));
+    s.push_str(&format!(
+        "calc time (ns/OP)      | {:>9.3} |         / | {:>9.2} |  {} / - / {}\n",
+        t.fast_calc_ns_op,
+        t.digital_calc_ns_op,
+        Table1Paper::FAST_CALC_NS,
+        Table1Paper::DIGITAL_CALC_NS
+    ));
+    s.push_str(&format!(
+        "headline: energy {:.1}x (paper {:.1}x), speed {:.1}x (paper {:.1}x)\n",
+        t.energy_ratio,
+        Table1Paper::ENERGY_RATIO,
+        t.speed_ratio,
+        Table1Paper::SPEED_RATIO
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regenerated_values_match_paper_within_tolerance() {
+        let t = run(128, 16);
+        let close = |a: f64, b: f64, tol: f64| (a - b).abs() / b < tol;
+        assert!(close(t.fast_write_fj_bit, Table1Paper::FAST_WRITE, 0.01));
+        assert!(close(t.sram_write_fj_bit, Table1Paper::SRAM_WRITE, 0.01));
+        assert!(close(t.digital_write_fj_bit, Table1Paper::DIGITAL_WRITE, 0.01));
+        assert!(close(t.fast_read_fj_bit, Table1Paper::FAST_READ, 0.01));
+        assert!(close(t.sram_read_fj_bit, Table1Paper::SRAM_READ, 0.01));
+        assert!(close(t.fast_access_ns, Table1Paper::ACCESS_NS, 0.01));
+        assert!(close(t.digital_access_ns, Table1Paper::DIGITAL_ACCESS_NS, 0.01));
+        assert!(close(t.fast_calc_pj_op, Table1Paper::FAST_CALC_PJ, 0.02));
+        assert!(close(t.digital_calc_pj_op, Table1Paper::DIGITAL_CALC_PJ, 0.02));
+        assert!(close(t.fast_calc_ns_op, Table1Paper::FAST_CALC_NS, 0.02));
+        assert!(close(t.digital_calc_ns_op, Table1Paper::DIGITAL_CALC_NS, 0.02));
+        assert!(close(t.energy_ratio, Table1Paper::ENERGY_RATIO, 0.05));
+        assert!(close(t.speed_ratio, Table1Paper::SPEED_RATIO, 0.05));
+    }
+
+    #[test]
+    fn render_mentions_headline() {
+        let t = run(128, 16);
+        let s = render(&t);
+        assert!(s.contains("Table I"));
+        assert!(s.contains("headline"));
+    }
+}

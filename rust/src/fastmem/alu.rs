@@ -1,0 +1,181 @@
+//! The per-row 1-bit ALU (paper Figs. 4–5) spliced between the row's
+//! LSB cell output and MSB cell input.
+//!
+//! The showcase configuration is a full adder with a dynamic carry latch
+//! (node T1, Fig. 5a): in phase 1 the FA evaluates and the carry-out is
+//! parked on T1; in phase 3 the carry transmits through the φ2d switch
+//! and becomes the carry-in of the *next* shift cycle. Section III.E
+//! generalises the ALU to other 1-bit operators; we model AND/OR/XOR
+//! (logic update), PASS (pure rotate) and the FA.
+
+use crate::util::bits::full_adder;
+
+/// 1-bit ALU operating mode — the paper's reconfigurable operation unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    /// Full adder with carry latch: multi-bit add over q cycles.
+    Add,
+    /// Full adder fed with inverted operand, carry-in seeded to 1:
+    /// two's-complement subtract through the same FA path.
+    Sub,
+    /// Bitwise AND with the external operand bit.
+    And,
+    /// Bitwise OR.
+    Or,
+    /// Bitwise XOR.
+    Xor,
+    /// Pass-through: pure cyclic rotation (no external operand).
+    Pass,
+}
+
+impl AluOp {
+    /// Carry-in value the latch is seeded with at batch start.
+    pub fn initial_carry(self) -> u8 {
+        match self {
+            AluOp::Sub => 1,
+            _ => 0,
+        }
+    }
+
+    /// Whether this op consumes the external operand bit.
+    pub fn uses_operand(self) -> bool {
+        !matches!(self, AluOp::Pass)
+    }
+}
+
+/// One row's 1-bit ALU with its carry latch (node T1).
+#[derive(Debug, Clone)]
+pub struct RowAlu {
+    op: AluOp,
+    /// Dynamic carry latch (T1). Valid only for Add/Sub.
+    carry: u8,
+    /// Carry evaluated this cycle, parked during φ1, committed at φ3 —
+    /// models the two-stage latch timing of Fig. 5(a)/(b).
+    carry_next: u8,
+    /// Evaluation counter (activity input for the energy model).
+    evals: u64,
+}
+
+impl RowAlu {
+    pub fn new(op: AluOp) -> Self {
+        RowAlu { op, carry: op.initial_carry(), carry_next: op.initial_carry(), evals: 0 }
+    }
+
+    pub fn op(&self) -> AluOp {
+        self.op
+    }
+
+    /// Reset the carry latch for a new batch operation.
+    pub fn reset(&mut self) {
+        self.carry = self.op.initial_carry();
+        self.carry_next = self.carry;
+    }
+
+    /// Reconfigure the operation unit (Section III.E). Resets the latch.
+    pub fn reconfigure(&mut self, op: AluOp) {
+        self.op = op;
+        self.reset();
+    }
+
+    /// Phase-1 evaluation: combine the LSB-cell output `a` with the
+    /// external operand bit `b`; returns the sum/result bit that will be
+    /// shifted into the MSB slot. Carry-out is parked on T1.
+    pub fn eval(&mut self, a: u8, b: u8) -> u8 {
+        self.evals += 1;
+        let a = a & 1;
+        let b = b & 1;
+        match self.op {
+            AluOp::Add => {
+                let (s, c) = full_adder(a, b, self.carry);
+                self.carry_next = c;
+                s
+            }
+            AluOp::Sub => {
+                // Invert the operand; carry latch was seeded with 1.
+                let (s, c) = full_adder(a, b ^ 1, self.carry);
+                self.carry_next = c;
+                s
+            }
+            AluOp::And => a & b,
+            AluOp::Or => a | b,
+            AluOp::Xor => a ^ b,
+            AluOp::Pass => a,
+        }
+    }
+
+    /// Phase-3 commit: the parked carry transmits through the φ2d switch
+    /// and becomes next cycle's carry-in (Fig. 5b).
+    pub fn commit_carry(&mut self) {
+        self.carry = self.carry_next;
+    }
+
+    /// Current latched carry (next cycle's carry-in).
+    pub fn carry(&self) -> u8 {
+        self.carry
+    }
+
+    pub fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_ripples_carry_across_cycles() {
+        // 1 + 1 bit-serially over 2 cycles: LSBs 1+1 = 0 carry 1;
+        // next bits 0+0+carry = 1.
+        let mut alu = RowAlu::new(AluOp::Add);
+        let s0 = alu.eval(1, 1);
+        alu.commit_carry();
+        assert_eq!(s0, 0);
+        assert_eq!(alu.carry(), 1);
+        let s1 = alu.eval(0, 0);
+        alu.commit_carry();
+        assert_eq!(s1, 1);
+        assert_eq!(alu.carry(), 0);
+    }
+
+    #[test]
+    fn carry_commits_only_at_phase3() {
+        let mut alu = RowAlu::new(AluOp::Add);
+        alu.eval(1, 1); // carry parked on T1, not yet committed
+        assert_eq!(alu.carry(), 0);
+        alu.commit_carry();
+        assert_eq!(alu.carry(), 1);
+    }
+
+    #[test]
+    fn sub_is_twos_complement() {
+        // a - b computed bit-serially: 0 - 1 over 2 bits = 0b11 (-1 mod 4).
+        let mut alu = RowAlu::new(AluOp::Sub);
+        let s0 = alu.eval(0, 1);
+        alu.commit_carry();
+        let s1 = alu.eval(0, 0);
+        alu.commit_carry();
+        assert_eq!((s1 << 1) | s0, 0b11);
+    }
+
+    #[test]
+    fn logic_ops() {
+        assert_eq!(RowAlu::new(AluOp::And).eval(1, 1), 1);
+        assert_eq!(RowAlu::new(AluOp::And).eval(1, 0), 0);
+        assert_eq!(RowAlu::new(AluOp::Or).eval(0, 1), 1);
+        assert_eq!(RowAlu::new(AluOp::Xor).eval(1, 1), 0);
+        assert_eq!(RowAlu::new(AluOp::Pass).eval(1, 0), 1);
+    }
+
+    #[test]
+    fn reconfigure_resets_latch() {
+        let mut alu = RowAlu::new(AluOp::Add);
+        alu.eval(1, 1);
+        alu.commit_carry();
+        assert_eq!(alu.carry(), 1);
+        alu.reconfigure(AluOp::Sub);
+        assert_eq!(alu.carry(), 1); // Sub seeds carry-in = 1
+        alu.reconfigure(AluOp::Add);
+        assert_eq!(alu.carry(), 0);
+    }
+}

@@ -1,0 +1,555 @@
+//! The FAST macro: R rows × C columns of shiftable cells with per-row
+//! (per-segment) 1-bit ALUs — the paper's showcase is 128×16.
+//!
+//! The defining property: a *batch operation* applies one q-bit op with
+//! write-back to **every enabled row simultaneously** in q shift cycles,
+//! independent of the row count (Fig. 1b). Conventional access (read/
+//! write through the bitlines) is still available row by row, exactly
+//! like a normal SRAM.
+//!
+//! The model is phase-accurate: batch ops step all rows through the
+//! φ1/φ2/φ2d protocol cell by cell, so protocol bugs (hazards, carry
+//! timing) surface as errors rather than silently producing word-level
+//! arithmetic. Tests cross-check results against `util::bits` word
+//! semantics, and `cargo test` integration tests cross-check against
+//! the XLA-executed Pallas artifacts.
+
+use thiserror::Error;
+
+use super::alu::AluOp;
+use super::cell::CellError;
+use super::route::{RouteError, RouteFabric};
+use super::row::{CycleStats, Row};
+
+#[derive(Debug, Error)]
+pub enum ArrayError {
+    #[error("row index {0} out of range (rows = {1})")]
+    RowOutOfRange(usize, usize),
+    #[error("segment index {0} out of range (segments = {1})")]
+    SegmentOutOfRange(usize, usize),
+    #[error("operand count {0} != enabled word count {1}")]
+    OperandCount(usize, usize),
+    #[error("cell protocol error: {0}")]
+    Cell(#[from] CellError),
+    #[error("routing error: {0}")]
+    Route(#[from] RouteError),
+}
+
+/// Aggregate report for one batch operation (energy-model inputs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchReport {
+    /// Shift cycles executed (== max segment width).
+    pub cycles: u64,
+    /// Rows that participated.
+    pub rows_active: u64,
+    /// Total cell toggles across the batch.
+    pub cell_toggles: u64,
+    /// Total 1-bit ALU evaluations across the batch.
+    pub alu_evals: u64,
+}
+
+/// The FAST macro model.
+#[derive(Debug, Clone)]
+pub struct FastArray {
+    rows: Vec<Row>,
+    fabric: RouteFabric,
+    /// Current uniform logical word width.
+    word_width: usize,
+    op: AluOp,
+    /// Lifetime counters for conventional-port accesses (energy model).
+    port_reads: u64,
+    port_writes: u64,
+    /// Lifetime batch-op counters.
+    batch_ops: u64,
+    batch_cycles: u64,
+}
+
+impl FastArray {
+    /// A macro with `rows` rows of `width` cells, one word per row
+    /// (the paper's configuration: 128 rows × 16 columns, Add ALU).
+    pub fn new(rows: usize, width: usize) -> Self {
+        Self::with_fabric(rows, RouteFabric::new(width, width), width, AluOp::Add)
+            .expect("trivial fabric plan cannot fail")
+    }
+
+    /// Full control: routing fabric, initial word width and ALU op.
+    pub fn with_fabric(
+        rows: usize,
+        fabric: RouteFabric,
+        word_width: usize,
+        op: AluOp,
+    ) -> Result<Self, ArrayError> {
+        assert!(rows >= 1, "array needs at least one row");
+        let widths = fabric.plan(word_width)?;
+        let rows_v = (0..rows)
+            .map(|_| Row::with_segments(&widths, op))
+            .collect();
+        Ok(FastArray {
+            rows: rows_v,
+            fabric,
+            word_width,
+            op,
+            port_reads: 0,
+            port_writes: 0,
+            batch_ops: 0,
+            batch_cycles: 0,
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Physical columns per row.
+    pub fn cols(&self) -> usize {
+        self.fabric.row_width
+    }
+
+    /// Current logical word width q.
+    pub fn word_width(&self) -> usize {
+        self.word_width
+    }
+
+    /// Logical words per row at the current width.
+    pub fn words_per_row(&self) -> usize {
+        self.fabric.row_width / self.word_width
+    }
+
+    pub fn op(&self) -> AluOp {
+        self.op
+    }
+
+    pub fn fabric(&self) -> RouteFabric {
+        self.fabric
+    }
+
+    /// Reconfigure the ALU operation on every row (Section III.E).
+    pub fn set_op(&mut self, op: AluOp) {
+        self.op = op;
+        for r in &mut self.rows {
+            r.set_op(op);
+        }
+    }
+
+    /// Reconfigure the logical word width via the routing unit
+    /// (Fig. 5c). Data is preserved bit-wise. Returns control cycles
+    /// spent re-latching routes.
+    pub fn reconfigure_width(&mut self, width: usize) -> Result<u64, ArrayError> {
+        let widths = self.fabric.plan(width)?;
+        let cost = self.fabric.reconfig_cycles(self.word_width, width)?;
+        for r in &mut self.rows {
+            r.reconfigure_segments(&widths, self.op)?;
+        }
+        self.word_width = width;
+        Ok(cost)
+    }
+
+    fn check_row(&self, row: usize) -> Result<(), ArrayError> {
+        if row >= self.rows.len() {
+            return Err(ArrayError::RowOutOfRange(row, self.rows.len()));
+        }
+        Ok(())
+    }
+
+    fn check_seg(&self, seg: usize) -> Result<(), ArrayError> {
+        let n = self.words_per_row();
+        if seg >= n {
+            return Err(ArrayError::SegmentOutOfRange(seg, n));
+        }
+        Ok(())
+    }
+
+    /// Conventional-port read of word `seg` in `row`.
+    pub fn read_word(&mut self, row: usize, seg: usize) -> Result<u32, ArrayError> {
+        self.check_row(row)?;
+        self.check_seg(seg)?;
+        self.port_reads += 1;
+        Ok(self.rows[row].read_word(seg)?)
+    }
+
+    /// Conventional-port write of word `seg` in `row`.
+    pub fn write_word(&mut self, row: usize, seg: usize, word: u32) -> Result<(), ArrayError> {
+        self.check_row(row)?;
+        self.check_seg(seg)?;
+        self.port_writes += 1;
+        Ok(self.rows[row].write_word(seg, word)?)
+    }
+
+    /// Convenience single-word-per-row accessors (seg 0).
+    pub fn read_row(&mut self, row: usize) -> u32 {
+        self.read_word(row, 0).expect("row in range")
+    }
+
+    pub fn write_row(&mut self, row: usize, word: u32) {
+        self.write_word(row, 0, word).expect("row in range")
+    }
+
+    /// Fully-concurrent batch op over **all** rows, one operand word per
+    /// row (seg 0 of each row). The paper's headline operation.
+    pub fn batch_add(&mut self, operands: &[u32]) -> BatchReport {
+        self.set_op(AluOp::Add);
+        self.batch_apply_all(operands).expect("uniform batch cannot fail")
+    }
+
+    pub fn batch_sub(&mut self, operands: &[u32]) -> BatchReport {
+        self.set_op(AluOp::Sub);
+        self.batch_apply_all(operands).expect("uniform batch cannot fail")
+    }
+
+    pub fn batch_logic(&mut self, op: AluOp, operands: &[u32]) -> BatchReport {
+        assert!(matches!(op, AluOp::And | AluOp::Or | AluOp::Xor));
+        self.set_op(op);
+        self.batch_apply_all(operands).expect("uniform batch cannot fail")
+    }
+
+    /// Fully-concurrent batch multiply: `row[r] <- row[r] * m[r] mod 2^q`.
+    ///
+    /// The paper's Section III.E future work ("integer multiplier")
+    /// realized with the *existing* datapath: shift-and-add. The stored
+    /// value is first moved out as the multiplicand (one rotate-read),
+    /// the accumulator is cleared, then q conditional batch adds feed
+    /// `multiplicand << t` into rows whose multiplier bit t is set.
+    /// Cost: q + 1 batch ops = q·(q+1) shift cycles — quadratic, as
+    /// bit-serial multiply must be, but still row-parallel.
+    pub fn batch_mul(&mut self, multipliers: &[u32]) -> Result<BatchReport, ArrayError> {
+        if multipliers.len() != self.rows.len() {
+            return Err(ArrayError::OperandCount(multipliers.len(), self.rows.len()));
+        }
+        let q = self.word_width;
+        let m = crate::util::bits::mask(q);
+        // Read out multiplicands (conventional port, counted).
+        let multiplicands: Vec<u32> = (0..self.rows())
+            .map(|r| self.read_row(r))
+            .collect();
+        // Clear accumulators: one XOR batch with the value itself
+        // (x ^ x = 0) — stays on the shift datapath, no bitline writes.
+        self.set_op(AluOp::Xor);
+        let mut total = self.batch_apply_all(&multiplicands)?;
+        // q conditional adds of the shifted multiplicand.
+        self.set_op(AluOp::Add);
+        for t in 0..q {
+            let addends: Vec<u32> = multiplicands
+                .iter()
+                .zip(multipliers)
+                .map(|(&mc, &mult)| {
+                    if (mult >> t) & 1 == 1 {
+                        (mc << t) & m
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let rep = self.batch_apply_all(&addends)?;
+            total.cycles += rep.cycles;
+            total.cell_toggles += rep.cell_toggles;
+            total.alu_evals += rep.alu_evals;
+        }
+        total.rows_active = self.rows() as u64;
+        Ok(total)
+    }
+
+    /// Batch op where each row receives one operand per word segment:
+    /// `operands[row * words_per_row + seg]`.
+    ///
+    /// Uses the word-level fast path (differential-tested against the
+    /// phase-accurate path — see `batch_apply_segmented_exact`).
+    pub fn batch_apply_segmented(&mut self, operands: &[u32]) -> Result<BatchReport, ArrayError> {
+        let wpr = self.words_per_row();
+        let expected = self.rows.len() * wpr;
+        if operands.len() != expected {
+            return Err(ArrayError::OperandCount(operands.len(), expected));
+        }
+        let mut report = BatchReport::default();
+        // All rows advance in lockstep: the hardware drives one shared
+        // 3-phase clock into every row. We iterate rows in the model,
+        // but cycle counts reflect the concurrent schedule.
+        for (ri, row) in self.rows.iter_mut().enumerate() {
+            let ops = &operands[ri * wpr..(ri + 1) * wpr];
+            let (cycles, toggles, evals) = row.apply_words_fast(ops);
+            report.rows_active += 1;
+            report.cycles = report.cycles.max(cycles);
+            report.cell_toggles += toggles;
+            report.alu_evals += evals;
+        }
+        self.batch_ops += 1;
+        self.batch_cycles += report.cycles;
+        Ok(report)
+    }
+
+    /// Phase-accurate variant of [`Self::batch_apply_segmented`]: steps
+    /// every cell through φ1/φ2/φ2d. ~100× slower; used for protocol
+    /// validation and differential testing of the fast path.
+    pub fn batch_apply_segmented_exact(
+        &mut self,
+        operands: &[u32],
+    ) -> Result<BatchReport, ArrayError> {
+        let wpr = self.words_per_row();
+        let expected = self.rows.len() * wpr;
+        if operands.len() != expected {
+            return Err(ArrayError::OperandCount(operands.len(), expected));
+        }
+        let mut report = BatchReport::default();
+        for (ri, row) in self.rows.iter_mut().enumerate() {
+            let ops = &operands[ri * wpr..(ri + 1) * wpr];
+            let stats: Vec<CycleStats> = row.apply_words(ops)?;
+            report.rows_active += 1;
+            report.cycles = report.cycles.max(stats.len() as u64);
+            for s in &stats {
+                report.cell_toggles += s.cell_toggles;
+                report.alu_evals += s.alu_evals;
+            }
+        }
+        self.batch_ops += 1;
+        self.batch_cycles += report.cycles;
+        Ok(report)
+    }
+
+    fn batch_apply_all(&mut self, operands: &[u32]) -> Result<BatchReport, ArrayError> {
+        let wpr = self.words_per_row();
+        if wpr == 1 {
+            return self.batch_apply_segmented(operands);
+        }
+        if operands.len() != self.rows.len() {
+            return Err(ArrayError::OperandCount(operands.len(), self.rows.len()));
+        }
+        // One operand per row: apply to segment 0, identity on the rest.
+        // Identity for Add/Sub/Xor is operand 0; for And it is all-ones;
+        // for Or it is 0.
+        let ident = match self.op {
+            AluOp::And => crate::util::bits::mask(self.word_width),
+            _ => 0,
+        };
+        let mut full = Vec::with_capacity(self.rows.len() * wpr);
+        for &op in operands {
+            full.push(op);
+            for _ in 1..wpr {
+                full.push(ident);
+            }
+        }
+        self.batch_apply_segmented(&full)
+    }
+
+    /// Snapshot every row's word 0 (conventional reads, counted).
+    pub fn snapshot(&mut self) -> Vec<u32> {
+        (0..self.rows()).map(|r| self.read_row(r)).collect()
+    }
+
+    /// Load every row's word 0 (conventional writes, counted).
+    pub fn load(&mut self, words: &[u32]) {
+        assert_eq!(words.len(), self.rows());
+        for (r, &w) in words.iter().enumerate() {
+            self.write_row(r, w);
+        }
+    }
+
+    // --- lifetime counters (energy accounting) ---
+
+    pub fn port_reads(&self) -> u64 {
+        self.port_reads
+    }
+
+    pub fn port_writes(&self) -> u64 {
+        self.port_writes
+    }
+
+    pub fn batch_ops(&self) -> u64 {
+        self.batch_ops
+    }
+
+    pub fn batch_cycles(&self) -> u64 {
+        self.batch_cycles
+    }
+
+    /// Total cell toggles across the array (activity factor).
+    pub fn toggles(&self) -> u64 {
+        self.rows.iter().map(Row::toggles).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn showcase_dimensions() {
+        let a = FastArray::new(128, 16);
+        assert_eq!(a.rows(), 128);
+        assert_eq!(a.cols(), 16);
+        assert_eq!(a.word_width(), 16);
+        assert_eq!(a.words_per_row(), 1);
+    }
+
+    #[test]
+    fn batch_add_all_rows_concurrently() {
+        let mut a = FastArray::new(128, 16);
+        let mut rng = Rng::new(1);
+        let init: Vec<u32> = (0..128).map(|_| rng.below(1 << 16) as u32).collect();
+        let deltas: Vec<u32> = (0..128).map(|_| rng.below(1 << 16) as u32).collect();
+        a.load(&init);
+        let report = a.batch_add(&deltas);
+        // q cycles regardless of 128 rows — the paper's headline property.
+        assert_eq!(report.cycles, 16);
+        assert_eq!(report.rows_active, 128);
+        for r in 0..128 {
+            assert_eq!(a.read_row(r), bits::add_mod(init[r], deltas[r], 16));
+        }
+    }
+
+    #[test]
+    fn batch_sub_and_logic() {
+        let mut a = FastArray::new(8, 16);
+        let init: Vec<u32> = (0..8).map(|i| (i * 1000) as u32).collect();
+        let ops: Vec<u32> = (0..8).map(|i| (i * 77 + 3) as u32).collect();
+
+        a.load(&init);
+        a.batch_sub(&ops);
+        for r in 0..8 {
+            assert_eq!(a.read_row(r), bits::sub_mod(init[r], ops[r], 16));
+        }
+
+        a.load(&init);
+        a.batch_logic(AluOp::Xor, &ops);
+        for r in 0..8 {
+            assert_eq!(a.read_row(r), (init[r] ^ ops[r]) & 0xFFFF);
+        }
+    }
+
+    #[test]
+    fn segmented_batch_two_words_per_row() {
+        let fabric = RouteFabric::new(16, 8);
+        let mut a = FastArray::with_fabric(4, fabric, 8, AluOp::Add).unwrap();
+        assert_eq!(a.words_per_row(), 2);
+        for r in 0..4 {
+            a.write_word(r, 0, r as u32).unwrap();
+            a.write_word(r, 1, 100 + r as u32).unwrap();
+        }
+        let ops: Vec<u32> = (0..8).map(|i| i as u32).collect(); // row-major
+        a.batch_apply_segmented(&ops).unwrap();
+        for r in 0..4 {
+            assert_eq!(a.read_word(r, 0).unwrap(), r as u32 + (2 * r) as u32);
+            assert_eq!(a.read_word(r, 1).unwrap(), 100 + r as u32 + (2 * r + 1) as u32);
+        }
+    }
+
+    #[test]
+    fn width_reconfiguration_preserves_data() {
+        let fabric = RouteFabric::new(16, 8);
+        let mut a = FastArray::with_fabric(2, fabric, 8, AluOp::Add).unwrap();
+        a.write_word(0, 0, 0xFF).unwrap();
+        a.write_word(0, 1, 0x01).unwrap();
+        a.reconfigure_width(16).unwrap();
+        assert_eq!(a.read_word(0, 0).unwrap(), 0x01FF);
+        a.batch_add(&[1, 0]);
+        assert_eq!(a.read_word(0, 0).unwrap(), 0x0200);
+    }
+
+    #[test]
+    fn one_operand_per_row_with_multiword_rows_is_identity_on_rest() {
+        let fabric = RouteFabric::new(16, 8);
+        let mut a = FastArray::with_fabric(2, fabric, 8, AluOp::Add).unwrap();
+        a.write_word(0, 1, 42).unwrap();
+        a.batch_add(&[5, 7]); // applies to word 0 of each row
+        assert_eq!(a.read_word(0, 0).unwrap(), 5);
+        assert_eq!(a.read_word(0, 1).unwrap(), 42); // untouched
+    }
+
+    #[test]
+    fn operand_count_mismatch_rejected() {
+        let mut a = FastArray::new(4, 16);
+        let err = a.batch_apply_segmented(&[1, 2, 3]).unwrap_err();
+        assert!(matches!(err, ArrayError::OperandCount(3, 4)));
+    }
+
+    #[test]
+    fn out_of_range_access_rejected() {
+        let mut a = FastArray::new(4, 16);
+        assert!(matches!(
+            a.read_word(4, 0),
+            Err(ArrayError::RowOutOfRange(4, 4))
+        ));
+        assert!(matches!(
+            a.read_word(0, 1),
+            Err(ArrayError::SegmentOutOfRange(1, 1))
+        ));
+    }
+
+    #[test]
+    fn counters_track_usage() {
+        let mut a = FastArray::new(4, 8);
+        a.load(&[1, 2, 3, 4]);
+        a.batch_add(&[1, 1, 1, 1]);
+        a.snapshot();
+        assert_eq!(a.port_writes(), 4);
+        assert_eq!(a.port_reads(), 4);
+        assert_eq!(a.batch_ops(), 1);
+        assert_eq!(a.batch_cycles(), 8);
+        assert!(a.toggles() > 0);
+    }
+
+    #[test]
+    fn batch_mul_matches_host_math() {
+        let mut rng = Rng::new(77);
+        for q in [8usize, 16] {
+            let mut a = FastArray::new(32, q);
+            let init: Vec<u32> = (0..32).map(|_| rng.below(1u64 << q) as u32).collect();
+            let mults: Vec<u32> = (0..32).map(|_| rng.below(1u64 << q) as u32).collect();
+            a.load(&init);
+            let rep = a.batch_mul(&mults).unwrap();
+            // q+1 batch ops of q cycles each.
+            assert_eq!(rep.cycles, ((q + 1) * q) as u64);
+            for r in 0..32 {
+                let want = (init[r] as u64 * mults[r] as u64) as u32 & bits::mask(q);
+                assert_eq!(a.read_row(r), want, "q={q} row={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_mul_edge_cases() {
+        let mut a = FastArray::new(4, 16);
+        a.load(&[0, 1, 0xFFFF, 1234]);
+        a.batch_mul(&[5, 0xFFFF, 2, 1]).unwrap();
+        assert_eq!(a.read_row(0), 0); // 0 * x
+        assert_eq!(a.read_row(1), 0xFFFF); // 1 * x
+        assert_eq!(a.read_row(2), (0xFFFFu32 * 2) & 0xFFFF);
+        assert_eq!(a.read_row(3), 1234); // x * 1
+    }
+
+    #[test]
+    fn fast_and_exact_batch_paths_agree() {
+        let mut rng = Rng::new(41);
+        let mut fast = FastArray::new(32, 16);
+        let mut exact = FastArray::new(32, 16);
+        let init: Vec<u32> = (0..32).map(|_| rng.below(1 << 16) as u32).collect();
+        fast.load(&init);
+        exact.load(&init);
+        for _ in 0..4 {
+            let deltas: Vec<u32> = (0..32).map(|_| rng.below(1 << 16) as u32).collect();
+            let rf = fast.batch_apply_segmented(&deltas).unwrap();
+            let re = exact.batch_apply_segmented_exact(&deltas).unwrap();
+            assert_eq!(rf, re, "reports must match exactly");
+        }
+        assert_eq!(fast.snapshot(), exact.snapshot());
+        assert_eq!(fast.toggles(), exact.toggles());
+    }
+
+    #[test]
+    fn random_cross_check_vs_word_semantics() {
+        let mut rng = Rng::new(99);
+        for q in [4usize, 8, 16] {
+            let mut a = FastArray::new(16, q);
+            let init: Vec<u32> = (0..16).map(|_| rng.below(1u64 << q) as u32).collect();
+            let d1: Vec<u32> = (0..16).map(|_| rng.below(1u64 << q) as u32).collect();
+            let d2: Vec<u32> = (0..16).map(|_| rng.below(1u64 << q) as u32).collect();
+            a.load(&init);
+            a.batch_add(&d1);
+            a.batch_sub(&d2);
+            for r in 0..16 {
+                let want = bits::sub_mod(bits::add_mod(init[r], d1[r], q), d2[r], q);
+                assert_eq!(a.read_row(r), want, "q={q} row={r}");
+            }
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! The 10T shiftable SRAM cell (paper Fig. 3a): a conventional 6T cell
+//! plus one CMOS transmission gate (inter-cell switch, controlled by φ1)
+//! and two NMOS switches (intra-cell switches, controlled by φ2 / φ2d).
+//!
+//! Shift protocol (Fig. 3c):
+//!   Phase 1 (φ1):  intra-cell switches OFF, inter-cell switch ON. The
+//!                  inverter loop is broken; the remnant charge at node X
+//!                  keeps driving the pair, so the cell still presents its
+//!                  old datum downstream while its X node is being charged
+//!                  by the upstream neighbour.
+//!   Phase 2 (φ2):  inter-cell OFF, first intra-cell switch ON — the
+//!                  sampled value at X enters the inverter loop.
+//!   Phase 3 (φ2d): second intra-cell switch ON (φ2 delayed) — the loop
+//!                  closes fully and the datum is statically restored.
+//!
+//! φ1 and φ2 are non-overlapping; turning both on simultaneously shorts
+//! the upstream driver into a half-open loop and loses data. The model
+//! enforces this as a hard error ([`CellError::SwitchHazard`]).
+//!
+//! This is the *digital, phase-accurate* model used by the array/
+//! coordinator layers; the charge/leakage physics of the same cell live
+//! in [`crate::analog`].
+
+use thiserror::Error;
+
+/// The three shift phases of Fig. 3c.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// φ1 high: transfer upstream datum onto node X.
+    P1,
+    /// φ2 high: sample X into the inverter loop.
+    P2,
+    /// φ2d high: close the loop, restore statically.
+    P3,
+}
+
+/// Errors raised by protocol violations in the cell model.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum CellError {
+    /// φ1 and φ2/φ2d asserted together (non-overlap violation).
+    #[error("switch hazard: φ1 overlaps φ2/φ2d — data would be lost")]
+    SwitchHazard,
+    /// Phase sequence violated (e.g. P2 without a preceding P1).
+    #[error("phase order violation: {0:?} after {1:?}")]
+    PhaseOrder(Phase, Option<Phase>),
+    /// Static read attempted while the loop is open (mid-shift).
+    #[error("read while inverter loop open (mid-shift datum is dynamic)")]
+    DynamicRead,
+}
+
+/// Digital state of one 10T shiftable cell.
+#[derive(Debug, Clone)]
+pub struct ShiftCell {
+    /// Datum on the inverter pair (node Q). 0 or 1.
+    q: u8,
+    /// Dynamic node X (input of the inverter pair, valid after P1).
+    x: u8,
+    /// True when the loop is closed (datum statically held).
+    loop_closed: bool,
+    /// Last phase applied, for order checking.
+    last_phase: Option<Phase>,
+    /// Toggle counter for activity-based energy accounting.
+    toggles: u64,
+}
+
+impl ShiftCell {
+    /// A new cell holding `bit`.
+    pub fn new(bit: u8) -> Self {
+        ShiftCell {
+            q: bit & 1,
+            x: bit & 1,
+            loop_closed: true,
+            last_phase: None,
+            toggles: 0,
+        }
+    }
+
+    /// Datum currently driven downstream. During a shift (loop open) the
+    /// remnant charge keeps presenting the pre-shift datum — exactly the
+    /// property the paper exploits in phase 1.
+    #[inline]
+    pub fn output(&self) -> u8 {
+        self.q
+    }
+
+    /// Statically-held datum. Errors if the loop is open (dynamic state).
+    pub fn read_static(&self) -> Result<u8, CellError> {
+        if !self.loop_closed {
+            return Err(CellError::DynamicRead);
+        }
+        Ok(self.q)
+    }
+
+    /// Direct (bitline) write, as in a conventional SRAM access. Only
+    /// legal when the loop is closed.
+    pub fn write_static(&mut self, bit: u8) -> Result<(), CellError> {
+        if !self.loop_closed {
+            return Err(CellError::DynamicRead);
+        }
+        let b = bit & 1;
+        if b != self.q {
+            self.toggles += 1;
+        }
+        self.q = b;
+        self.x = b;
+        Ok(())
+    }
+
+    /// Phase 1: the inter-cell switch is on; `upstream` is the datum
+    /// presented by the left neighbour (or the row ALU for the MSB slot).
+    pub fn phase1(&mut self, upstream: u8) -> Result<(), CellError> {
+        // Legal predecessors: fresh cell, or a completed P3.
+        match self.last_phase {
+            None | Some(Phase::P3) => {}
+            Some(p) => return Err(CellError::PhaseOrder(Phase::P1, Some(p))),
+        }
+        self.loop_closed = false; // intra switches off
+        if (upstream & 1) != self.x {
+            self.toggles += 1;
+        }
+        self.x = upstream & 1;
+        self.last_phase = Some(Phase::P1);
+        Ok(())
+    }
+
+    /// Phase 2: sample node X into the loop.
+    pub fn phase2(&mut self) -> Result<(), CellError> {
+        match self.last_phase {
+            Some(Phase::P1) => {}
+            p => return Err(CellError::PhaseOrder(Phase::P2, p)),
+        }
+        if self.x != self.q {
+            self.toggles += 1;
+        }
+        self.q = self.x;
+        self.last_phase = Some(Phase::P2);
+        Ok(())
+    }
+
+    /// Phase 3: close the loop (φ2d). The datum becomes static.
+    pub fn phase3(&mut self) -> Result<(), CellError> {
+        match self.last_phase {
+            Some(Phase::P2) => {}
+            p => return Err(CellError::PhaseOrder(Phase::P3, p)),
+        }
+        self.loop_closed = true;
+        self.last_phase = Some(Phase::P3);
+        Ok(())
+    }
+
+    /// Total internal node toggles since construction (activity factor
+    /// input for the energy model).
+    pub fn toggles(&self) -> u64 {
+        self.toggles
+    }
+
+    /// Set the cell to a post-cycle steady state without touching the
+    /// toggle counter — used by the word-level fast path in
+    /// [`super::row::Row`], which accounts toggles in aggregate. The
+    /// resulting state is exactly what a completed φ1→φ2→φ2d cycle
+    /// leaves behind.
+    pub(crate) fn force_state(&mut self, bit: u8) {
+        self.q = bit & 1;
+        self.x = self.q;
+        self.loop_closed = true;
+        self.last_phase = Some(Phase::P3);
+    }
+
+    /// True when the datum is statically held.
+    pub fn is_static(&self) -> bool {
+        self.loop_closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_cell_is_static() {
+        let c = ShiftCell::new(1);
+        assert!(c.is_static());
+        assert_eq!(c.read_static().unwrap(), 1);
+        assert_eq!(c.output(), 1);
+    }
+
+    #[test]
+    fn full_shift_cycle_moves_datum() {
+        let mut c = ShiftCell::new(0);
+        c.phase1(1).unwrap();
+        // During P1 the old datum is still presented downstream.
+        assert_eq!(c.output(), 0);
+        assert!(!c.is_static());
+        c.phase2().unwrap();
+        assert_eq!(c.output(), 1); // sampled
+        c.phase3().unwrap();
+        assert!(c.is_static());
+        assert_eq!(c.read_static().unwrap(), 1);
+    }
+
+    #[test]
+    fn dynamic_read_rejected() {
+        let mut c = ShiftCell::new(0);
+        c.phase1(1).unwrap();
+        assert_eq!(c.read_static(), Err(CellError::DynamicRead));
+        assert_eq!(c.write_static(1), Err(CellError::DynamicRead));
+    }
+
+    #[test]
+    fn phase_order_enforced() {
+        let mut c = ShiftCell::new(0);
+        assert!(matches!(c.phase2(), Err(CellError::PhaseOrder(_, _))));
+        c.phase1(1).unwrap();
+        assert!(matches!(c.phase3(), Err(CellError::PhaseOrder(_, _))));
+        // P1 twice in a row is also a violation (φ1 re-asserted before φ2).
+        assert!(matches!(c.phase1(0), Err(CellError::PhaseOrder(_, _))));
+    }
+
+    #[test]
+    fn toggle_accounting() {
+        let mut c = ShiftCell::new(0);
+        c.phase1(1).unwrap(); // x: 0->1, toggle
+        c.phase2().unwrap(); // q: 0->1, toggle
+        c.phase3().unwrap();
+        assert_eq!(c.toggles(), 2);
+        // Shifting the same value in causes no toggles.
+        c.phase1(1).unwrap();
+        c.phase2().unwrap();
+        c.phase3().unwrap();
+        assert_eq!(c.toggles(), 2);
+    }
+
+    #[test]
+    fn static_write() {
+        let mut c = ShiftCell::new(0);
+        c.write_static(1).unwrap();
+        assert_eq!(c.read_static().unwrap(), 1);
+        assert_eq!(c.toggles(), 1);
+    }
+}

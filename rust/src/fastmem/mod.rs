@@ -1,0 +1,19 @@
+//! Phase-accurate behavioural model of the FAST SRAM (paper Section II).
+//!
+//! - [`cell`] — the 10T shiftable cell and its φ1/φ2/φ2d protocol
+//! - [`alu`] — the per-row 1-bit ALU with dynamic carry latch
+//! - [`row`] — a cell chain partitioned into word segments
+//! - [`route`] — bit-width reconfiguration planning (Fig. 5c)
+//! - [`array`] — the R×C macro with fully-concurrent batch operations
+
+pub mod alu;
+pub mod array;
+pub mod cell;
+pub mod route;
+pub mod row;
+
+pub use alu::{AluOp, RowAlu};
+pub use array::{ArrayError, BatchReport, FastArray};
+pub use cell::{CellError, Phase, ShiftCell};
+pub use route::{RouteError, RouteFabric};
+pub use row::{CycleStats, Row};

@@ -1,0 +1,149 @@
+//! Bit-width reconfiguration planning (paper Fig. 5c).
+//!
+//! A physical row of C cells is built from base words of width `base`
+//! (8 in the 16-cell example of Fig. 5c). The routing unit can connect
+//! the shift lines of adjacent base words, cascading their ALUs, to
+//! form wider logical words. This module computes valid segment layouts
+//! and the reconfiguration cost the coordinator charges for switching.
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum RouteError {
+    #[error("requested width {0} is not a multiple of the base word width {1}")]
+    NotMultipleOfBase(usize, usize),
+    #[error("requested width {0} exceeds the row width {1}")]
+    TooWide(usize, usize),
+    #[error("requested width {0} outside supported range [1, 32]")]
+    Unsupported(usize),
+    #[error("row width {0} is not a multiple of requested width {1}")]
+    DoesNotTile(usize, usize),
+}
+
+/// Static description of a macro's routing fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteFabric {
+    /// Physical cells per row.
+    pub row_width: usize,
+    /// Base (hardware) word width; logical words are multiples of this.
+    pub base_width: usize,
+}
+
+impl RouteFabric {
+    pub fn new(row_width: usize, base_width: usize) -> Self {
+        assert!(base_width >= 1 && row_width >= base_width);
+        assert!(
+            row_width % base_width == 0,
+            "row width must be a multiple of the base word width"
+        );
+        RouteFabric { row_width, base_width }
+    }
+
+    /// Plan a uniform segment layout for logical words of `width` bits.
+    /// Returns the per-row segment widths (all equal).
+    pub fn plan(&self, width: usize) -> Result<Vec<usize>, RouteError> {
+        if !(1..=32).contains(&width) {
+            return Err(RouteError::Unsupported(width));
+        }
+        if width % self.base_width != 0 {
+            return Err(RouteError::NotMultipleOfBase(width, self.base_width));
+        }
+        if width > self.row_width {
+            return Err(RouteError::TooWide(width, self.row_width));
+        }
+        if self.row_width % width != 0 {
+            return Err(RouteError::DoesNotTile(self.row_width, width));
+        }
+        Ok(vec![width; self.row_width / width])
+    }
+
+    /// Number of logical words per row at the given width.
+    pub fn words_per_row(&self, width: usize) -> Result<usize, RouteError> {
+        Ok(self.plan(width)?.len())
+    }
+
+    /// Widths this fabric supports.
+    pub fn supported_widths(&self) -> Vec<usize> {
+        (1..=self.row_width / self.base_width)
+            .map(|k| k * self.base_width)
+            .filter(|&w| w <= 32 && self.row_width % w == 0)
+            .collect()
+    }
+
+    /// Reconfiguration cost in control cycles: one route-latch update per
+    /// base-word boundary whose connectivity changes between layouts.
+    pub fn reconfig_cycles(&self, from_width: usize, to_width: usize) -> Result<u64, RouteError> {
+        let from = self.plan(from_width)?;
+        let to = self.plan(to_width)?;
+        // Boundary b (between base word b and b+1) is "connected" when it
+        // falls inside a logical word.
+        let boundaries = self.row_width / self.base_width - 1;
+        let connected = |widths: &[usize]| -> Vec<bool> {
+            let mut v = Vec::with_capacity(boundaries);
+            let mut pos = 0;
+            let mut seg_end = widths[0];
+            let mut seg_idx = 0;
+            for b in 0..boundaries {
+                pos += self.base_width;
+                while pos > seg_end {
+                    seg_idx += 1;
+                    seg_end += widths[seg_idx];
+                }
+                v.push(pos != seg_end || b == boundaries); // inside a word?
+            }
+            // simpler: boundary connected iff pos is not a segment edge
+            v
+        };
+        let a = connected(&from);
+        let b = connected(&to);
+        Ok(a.iter().zip(&b).filter(|(x, y)| x != y).count() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_valid_widths() {
+        let f = RouteFabric::new(16, 8);
+        assert_eq!(f.plan(8).unwrap(), vec![8, 8]);
+        assert_eq!(f.plan(16).unwrap(), vec![16]);
+    }
+
+    #[test]
+    fn plan_rejects_bad_widths() {
+        let f = RouteFabric::new(16, 8);
+        assert_eq!(f.plan(12), Err(RouteError::NotMultipleOfBase(12, 8)));
+        assert_eq!(f.plan(24), Err(RouteError::TooWide(24, 16)));
+        assert_eq!(f.plan(0), Err(RouteError::Unsupported(0)));
+    }
+
+    #[test]
+    fn supported_widths_enumerates() {
+        let f = RouteFabric::new(32, 8);
+        assert_eq!(f.supported_widths(), vec![8, 16, 32]);
+        let g = RouteFabric::new(16, 4);
+        assert_eq!(g.supported_widths(), vec![4, 8, 16]);
+    }
+
+    #[test]
+    fn words_per_row() {
+        let f = RouteFabric::new(32, 8);
+        assert_eq!(f.words_per_row(8).unwrap(), 4);
+        assert_eq!(f.words_per_row(32).unwrap(), 1);
+    }
+
+    #[test]
+    fn reconfig_cost_zero_for_same_layout() {
+        let f = RouteFabric::new(16, 8);
+        assert_eq!(f.reconfig_cycles(8, 8).unwrap(), 0);
+        assert!(f.reconfig_cycles(8, 16).unwrap() > 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fabric_rejects_untiled_base() {
+        RouteFabric::new(20, 8);
+    }
+}

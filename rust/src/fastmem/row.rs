@@ -1,0 +1,450 @@
+//! One FAST row: a chain of shiftable cells partitioned into one or
+//! more word *segments*, each closed into a cyclic shift loop through
+//! its own 1-bit ALU (Figs. 4 and 5c).
+//!
+//! Cell index == bit significance within a segment: the cell at the
+//! segment's low end holds the LSB and feeds the ALU; the ALU output
+//! re-enters at the segment's high end (cyclic right shift toward the
+//! ALU). The physical layout folds the row back on itself (Fig. 6b) so
+//! the ALU-to-MSB wire stays short — layout is modelled in
+//! [`crate::energy::area`]; here only the logical loop matters.
+
+use super::alu::{AluOp, RowAlu};
+use super::cell::{CellError, ShiftCell};
+
+/// One word segment: `width` cells plus a dedicated 1-bit ALU.
+#[derive(Debug, Clone)]
+struct Segment {
+    /// Index of the segment's LSB cell within the row.
+    start: usize,
+    /// Number of cells (== word bit width).
+    width: usize,
+    alu: RowAlu,
+}
+
+/// Statistics for one shift cycle across a row (energy-model inputs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleStats {
+    /// Internal node toggles across all cells this cycle.
+    pub cell_toggles: u64,
+    /// ALU evaluations this cycle (one per segment).
+    pub alu_evals: u64,
+}
+
+/// A row of shiftable cells with per-segment ALUs.
+#[derive(Debug, Clone)]
+pub struct Row {
+    cells: Vec<ShiftCell>,
+    segments: Vec<Segment>,
+    /// Toggles accounted by the word-level fast path (the cells' own
+    /// counters only see phase-path activity).
+    fast_toggles: u64,
+}
+
+impl Row {
+    /// A row of `width` cells as a single segment with the given ALU op.
+    pub fn new(width: usize, op: AluOp) -> Self {
+        Self::with_segments(&[width], op)
+    }
+
+    /// A row partitioned into word segments of the given widths
+    /// (Fig. 5c multi-word configuration). Total cell count is the sum.
+    pub fn with_segments(widths: &[usize], op: AluOp) -> Self {
+        assert!(!widths.is_empty(), "row needs at least one segment");
+        assert!(widths.iter().all(|&w| (1..=32).contains(&w)),
+            "segment widths must be in [1,32], got {widths:?}");
+        let total: usize = widths.iter().sum();
+        let cells = (0..total).map(|_| ShiftCell::new(0)).collect();
+        let mut segments = Vec::with_capacity(widths.len());
+        let mut start = 0;
+        for &w in widths {
+            segments.push(Segment { start, width: w, alu: RowAlu::new(op) });
+            start += w;
+        }
+        Row { cells, segments, fast_toggles: 0 }
+    }
+
+    /// Total cell count.
+    pub fn width(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Segment widths, LSB-side first.
+    pub fn segment_widths(&self) -> Vec<usize> {
+        self.segments.iter().map(|s| s.width).collect()
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Re-partition the row into new segment widths (the Fig. 5c routing
+    /// unit reconnecting shift lines). Cell data is preserved bit-wise;
+    /// total width must be unchanged. ALU latches reset.
+    pub fn reconfigure_segments(&mut self, widths: &[usize], op: AluOp) -> Result<(), CellError> {
+        assert!(!widths.is_empty());
+        assert_eq!(
+            widths.iter().sum::<usize>(),
+            self.cells.len(),
+            "new segment widths must cover the row exactly"
+        );
+        assert!(widths.iter().all(|&w| (1..=32).contains(&w)));
+        // All cells must be statically held before rerouting.
+        for c in &self.cells {
+            c.read_static()?;
+        }
+        let mut segments = Vec::with_capacity(widths.len());
+        let mut start = 0;
+        for &w in widths {
+            segments.push(Segment { start, width: w, alu: RowAlu::new(op) });
+            start += w;
+        }
+        self.segments = segments;
+        Ok(())
+    }
+
+    /// Reconfigure every segment's ALU operation (Section III.E).
+    pub fn set_op(&mut self, op: AluOp) {
+        for s in &mut self.segments {
+            s.alu.reconfigure(op);
+        }
+    }
+
+    /// Reset all ALU carry latches (start of a batch op).
+    pub fn reset_alus(&mut self) {
+        for s in &mut self.segments {
+            s.alu.reset();
+        }
+    }
+
+    /// Read segment `seg` as a word (LSB = segment's first cell).
+    /// Errors if any cell is mid-shift.
+    pub fn read_word(&self, seg: usize) -> Result<u32, CellError> {
+        let s = &self.segments[seg];
+        let mut w = 0u32;
+        for i in 0..s.width {
+            w |= (self.cells[s.start + i].read_static()? as u32) << i;
+        }
+        Ok(w)
+    }
+
+    /// Bitline write of segment `seg` (conventional SRAM port).
+    pub fn write_word(&mut self, seg: usize, word: u32) -> Result<(), CellError> {
+        let s = &self.segments[seg];
+        let (start, width) = (s.start, s.width);
+        for i in 0..width {
+            self.cells[start + i].write_static(((word >> i) & 1) as u8)?;
+        }
+        Ok(())
+    }
+
+    /// One shift cycle (phases 1–3), feeding each segment's ALU its
+    /// external operand bit for this cycle.
+    ///
+    /// `operand_bits[k]` is `Some(bit)` for active segments and `None`
+    /// for clock-gated ones: the controller gates the shift clock of a
+    /// word group once its own width is reached in a mixed-width batch,
+    /// so gated segments neither shift nor burn energy.
+    pub fn shift_cycle(&mut self, operand_bits: &[Option<u8>]) -> Result<CycleStats, CellError> {
+        assert_eq!(
+            operand_bits.len(),
+            self.segments.len(),
+            "one operand bit per segment"
+        );
+        let toggles_before: u64 = self.cells.iter().map(|c| c.toggles()).sum();
+
+        // ALU evaluation uses each segment's LSB-cell *output* (remnant
+        // charge keeps presenting it during φ1).
+        let mut alu_out = vec![0u8; self.segments.len()];
+        let mut alu_evals = 0u64;
+        for (k, (s, &b)) in self.segments.iter_mut().zip(operand_bits).enumerate() {
+            if let Some(bit) = b {
+                let a = self.cells[s.start].output();
+                alu_out[k] = s.alu.eval(a, bit);
+                alu_evals += 1;
+            }
+        }
+
+        // Phase 1: every active cell's X node samples its upstream
+        // neighbour; the segment's MSB slot samples the ALU output.
+        // Upstream values are the *current* outputs (φ1 is simultaneous
+        // across the row — remnant charge guarantees old data is
+        // presented), so capture them before mutating.
+        let outputs: Vec<u8> = self.cells.iter().map(|c| c.output()).collect();
+        for (k, s) in self.segments.iter().enumerate() {
+            if operand_bits[k].is_none() {
+                continue; // clock-gated
+            }
+            for i in 0..s.width {
+                let idx = s.start + i;
+                let upstream = if i == s.width - 1 {
+                    alu_out[k]
+                } else {
+                    outputs[idx + 1]
+                };
+                self.cells[idx].phase1(upstream)?;
+            }
+        }
+        // Phase 2 / Phase 3 on active segments only.
+        for (k, s) in self.segments.iter().enumerate() {
+            if operand_bits[k].is_none() {
+                continue;
+            }
+            for i in 0..s.width {
+                self.cells[s.start + i].phase2()?;
+            }
+        }
+        for (k, s) in self.segments.iter_mut().enumerate() {
+            if operand_bits[k].is_none() {
+                continue;
+            }
+            for i in 0..s.width {
+                self.cells[s.start + i].phase3()?;
+            }
+            s.alu.commit_carry();
+        }
+
+        let toggles_after: u64 = self.cells.iter().map(|c| c.toggles()).sum();
+        Ok(CycleStats {
+            cell_toggles: toggles_after - toggles_before,
+            alu_evals,
+        })
+    }
+
+    /// Apply a full multi-bit operation to segment words: for each
+    /// segment k, rotate `width_k` cycles feeding `operands[k]` LSB-first.
+    /// All segments run in lockstep for `max(width)` cycles; shorter
+    /// segments keep rotating with Pass semantics once done.
+    ///
+    /// In the showcase chip all segments share one width, so the common
+    /// case is uniform. Returns per-cycle stats.
+    pub fn apply_words(&mut self, operands: &[u32]) -> Result<Vec<CycleStats>, CellError> {
+        assert_eq!(operands.len(), self.segments.len());
+        self.reset_alus();
+        let cycles = self
+            .segments
+            .iter()
+            .map(|s| s.width)
+            .max()
+            .expect("row has segments");
+        let mut stats = Vec::with_capacity(cycles);
+        for t in 0..cycles {
+            // Segments that already completed their own width are
+            // clock-gated (None) — they neither shift nor burn energy.
+            let bits: Vec<Option<u8>> = self
+                .segments
+                .iter()
+                .enumerate()
+                .map(|(k, s)| {
+                    if t < s.width {
+                        Some(((operands[k] >> t) & 1) as u8)
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            stats.push(self.shift_cycle(&bits)?);
+        }
+        Ok(stats)
+    }
+
+    /// Total cell toggles since construction.
+    pub fn toggles(&self) -> u64 {
+        self.fast_toggles + self.cells.iter().map(|c| c.toggles()).sum::<u64>()
+    }
+
+    /// Word-level fast path: same semantics, ALU usage and toggle
+    /// accounting as [`Row::apply_words`], but computed with bitwise
+    /// arithmetic instead of stepping every cell through the three
+    /// phases. ~100× faster; differential-tested against the
+    /// phase-accurate path (`fast_path_matches_phase_path` below and in
+    /// the array tests).
+    ///
+    /// Returns (cycles, cell_toggles, alu_evals).
+    pub fn apply_words_fast(&mut self, operands: &[u32]) -> (u64, u64, u64) {
+        assert_eq!(operands.len(), self.segments.len());
+        self.reset_alus();
+        let mut max_cycles = 0u64;
+        let mut toggles = 0u64;
+        let mut alu_evals = 0u64;
+        for (k, s) in self.segments.iter_mut().enumerate() {
+            let width = s.width;
+            let m = crate::util::bits::mask(width);
+            // Pack the segment's current bits (LSB = cell at s.start).
+            let mut w = 0u32;
+            for i in 0..width {
+                w |= (self.cells[s.start + i].output() as u32) << i;
+            }
+            for t in 0..width {
+                let a = (w & 1) as u8;
+                let b = ((operands[k] >> t) & 1) as u8;
+                // Same ALU object as the phase path: identical carry
+                // behaviour and eval counters.
+                let out = s.alu.eval(a, b);
+                s.alu.commit_carry();
+                let incoming = ((w >> 1) | ((out as u32) << (width - 1))) & m;
+                // Phase 1 toggles X where the incoming bit differs from
+                // the held bit; phase 2 toggles Q under the same
+                // condition — 2 node toggles per differing cell.
+                toggles += 2 * (incoming ^ w).count_ones() as u64;
+                w = incoming;
+            }
+            // Leave the cells in the exact post-cycle steady state.
+            for i in 0..width {
+                self.cells[s.start + i].force_state(((w >> i) & 1) as u8);
+            }
+            max_cycles = max_cycles.max(width as u64);
+            alu_evals += width as u64;
+        }
+        self.fast_toggles += toggles;
+        (max_cycles, toggles, alu_evals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits;
+
+    #[test]
+    fn single_segment_add() {
+        let mut row = Row::new(16, AluOp::Add);
+        row.write_word(0, 41).unwrap();
+        row.apply_words(&[1]).unwrap();
+        assert_eq!(row.read_word(0).unwrap(), 42);
+    }
+
+    #[test]
+    fn add_wraps_mod_2q() {
+        let mut row = Row::new(8, AluOp::Add);
+        row.write_word(0, 200).unwrap();
+        row.apply_words(&[100]).unwrap();
+        assert_eq!(row.read_word(0).unwrap(), bits::add_mod(200, 100, 8));
+    }
+
+    #[test]
+    fn full_carry_chain() {
+        let mut row = Row::new(16, AluOp::Add);
+        row.write_word(0, 0xFFFF).unwrap();
+        row.apply_words(&[1]).unwrap();
+        assert_eq!(row.read_word(0).unwrap(), 0);
+    }
+
+    #[test]
+    fn sub_via_twos_complement() {
+        let mut row = Row::new(16, AluOp::Sub);
+        row.write_word(0, 10).unwrap();
+        row.apply_words(&[25]).unwrap();
+        assert_eq!(row.read_word(0).unwrap(), bits::sub_mod(10, 25, 16));
+    }
+
+    #[test]
+    fn pass_rotates_identity_after_width_cycles() {
+        let mut row = Row::new(8, AluOp::Pass);
+        row.write_word(0, 0xA5).unwrap();
+        row.apply_words(&[0]).unwrap(); // 8 pass cycles = full rotation
+        assert_eq!(row.read_word(0).unwrap(), 0xA5);
+    }
+
+    #[test]
+    fn logic_segment_ops() {
+        for (op, a, b, want) in [
+            (AluOp::And, 0xF0F0u32, 0xFF00u32, 0xF000u32),
+            (AluOp::Or, 0xF0F0, 0xFF00, 0xFFF0),
+            (AluOp::Xor, 0xF0F0, 0xFF00, 0x0FF0),
+        ] {
+            let mut row = Row::new(16, op);
+            row.write_word(0, a).unwrap();
+            row.apply_words(&[b]).unwrap();
+            assert_eq!(row.read_word(0).unwrap(), want, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn two_segment_row_independent_words() {
+        let mut row = Row::with_segments(&[8, 8], AluOp::Add);
+        row.write_word(0, 250).unwrap();
+        row.write_word(1, 3).unwrap();
+        row.apply_words(&[10, 20]).unwrap();
+        assert_eq!(row.read_word(0).unwrap(), bits::add_mod(250, 10, 8));
+        assert_eq!(row.read_word(1).unwrap(), 23);
+    }
+
+    #[test]
+    fn reconfigure_merges_words() {
+        // Two 8-bit words hold the halves of a 16-bit value; after the
+        // routing unit merges them, a single 16-bit add crosses the
+        // old word boundary (the cascaded-ALU case of Fig. 5c).
+        let mut row = Row::with_segments(&[8, 8], AluOp::Add);
+        let v: u32 = 0x01FF; // low byte 0xFF, high byte 0x01
+        row.write_word(0, v & 0xFF).unwrap();
+        row.write_word(1, v >> 8).unwrap();
+        row.reconfigure_segments(&[16], AluOp::Add).unwrap();
+        assert_eq!(row.read_word(0).unwrap(), v);
+        row.apply_words(&[1]).unwrap();
+        assert_eq!(row.read_word(0).unwrap(), 0x0200);
+    }
+
+    #[test]
+    fn reconfigure_rejects_wrong_total() {
+        let mut row = Row::with_segments(&[8, 8], AluOp::Add);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            row.reconfigure_segments(&[8, 4], AluOp::Add)
+        }));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn mixed_width_segments_lockstep() {
+        let mut row = Row::with_segments(&[4, 12], AluOp::Add);
+        row.write_word(0, 0xF).unwrap();
+        row.write_word(1, 100).unwrap();
+        row.apply_words(&[1, 200]).unwrap();
+        // 4-bit word wraps: (15 + 1) mod 16 = 0. It must survive the
+        // extra 8 lockstep cycles unchanged (pure rotation).
+        assert_eq!(row.read_word(0).unwrap(), 0);
+        assert_eq!(row.read_word(1).unwrap(), 300);
+    }
+
+    #[test]
+    fn fast_path_matches_phase_path() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        for widths in [vec![16usize], vec![8, 8], vec![4, 12]] {
+            for op in [AluOp::Add, AluOp::Sub, AluOp::Xor, AluOp::And, AluOp::Or] {
+                let mut slow = Row::with_segments(&widths, op);
+                let mut fast = Row::with_segments(&widths, op);
+                // Random init + three consecutive batches.
+                for _ in 0..3 {
+                    let ops: Vec<u32> = widths
+                        .iter()
+                        .map(|&w| rng.below(1u64 << w) as u32)
+                        .collect();
+                    let stats = slow.apply_words(&ops).unwrap();
+                    let slow_toggles: u64 = stats.iter().map(|s| s.cell_toggles).sum();
+                    let slow_evals: u64 = stats.iter().map(|s| s.alu_evals).sum();
+                    let (cycles, fast_toggles, fast_evals) = fast.apply_words_fast(&ops);
+                    assert_eq!(cycles as usize, *widths.iter().max().unwrap());
+                    assert_eq!(fast_toggles, slow_toggles, "{widths:?} {op:?}");
+                    assert_eq!(fast_evals, slow_evals);
+                    for seg in 0..widths.len() {
+                        assert_eq!(
+                            slow.read_word(seg).unwrap(),
+                            fast.read_word(seg).unwrap(),
+                            "{widths:?} {op:?} seg {seg}"
+                        );
+                    }
+                }
+                assert_eq!(slow.toggles(), fast.toggles(), "{widths:?} {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_stats_counts_alu_evals() {
+        let mut row = Row::with_segments(&[8, 8], AluOp::Add);
+        let stats = row.apply_words(&[1, 2]).unwrap();
+        assert_eq!(stats.len(), 8);
+        assert!(stats.iter().all(|s| s.alu_evals == 2));
+    }
+}

@@ -1,0 +1,70 @@
+//! # fast-sram — FAST: Fully-Concurrent Access SRAM Topology (reproduction)
+//!
+//! Production-grade reproduction of *"FAST: A Fully-Concurrent Access
+//! SRAM Topology for High Row-wise Parallelism Applications Based on
+//! Dynamic Shift Operations"* (Chen et al., IEEE TCAS-II 2022).
+//!
+//! The paper proposes a 10T shiftable SRAM cell + per-row 1-bit ALU so
+//! that *all rows of an array update concurrently*: a q-bit add with
+//! write-back takes q shift cycles regardless of the row count. This
+//! crate contains every system needed to reproduce the paper without
+//! its silicon:
+//!
+//! - [`fastmem`] — phase-accurate behavioural model of the shiftable
+//!   cell, row, ALU and 128-row macro (Figs. 3–6).
+//! - [`analog`] — RC transient simulator + Monte Carlo variation for the
+//!   dynamic-node waveform, noise-margin and eye-pattern results
+//!   (Figs. 7, 8, 12).
+//! - [`timing`] — two-phase non-overlapping clock generation and the
+//!   VDD-vs-frequency shmoo model (Fig. 13).
+//! - [`energy`] — calibrated energy / latency / area model reproducing
+//!   Table I and Figs. 10, 11, 14.
+//! - [`baseline`] — the conventional 6T SRAM + near-memory digital
+//!   baseline the paper compares against (Fig. 9), plus a dual-port
+//!   row-by-row variant (Fig. 1a).
+//! - [`coordinator`] — the Layer-3 system contribution: a concurrent
+//!   update engine (router, batcher, bank manager, width planner) that
+//!   turns sparse update streams into fully-concurrent FAST batch ops.
+//! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   functional artifacts (Layer 1/2).
+//! - [`apps`] — the workloads that motivate the paper: delta-update
+//!   table store (database), graph feature updates, histograms.
+//! - [`metrics`], [`util`] — supporting substrates.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fast_sram::fastmem::FastArray;
+//!
+//! // A 128-row, 16-bit FAST macro (the paper's showcase chip).
+//! let mut array = FastArray::new(128, 16);
+//! array.write_row(0, 41);
+//! // One fully-concurrent batch op: every row adds its delta in
+//! // q = 16 shift cycles, regardless of the row count.
+//! let mut deltas = vec![0u32; 128];
+//! deltas[0] = 1;
+//! array.batch_add(&deltas);
+//! assert_eq!(array.read_row(0), 42);
+//! ```
+
+pub mod analog;
+pub mod apps;
+pub mod baseline;
+pub mod cli;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod fastmem;
+pub mod metrics;
+pub mod runtime;
+pub mod timing;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// The paper's macro height: 128 rows per FAST subarray.
+pub const MACRO_ROWS: usize = 128;
+
+/// The paper's showcase column count / Table I operand width.
+pub const MACRO_COLS: usize = 16;

@@ -1,0 +1,233 @@
+//! `fast` — leader entrypoint for the FAST SRAM reproduction.
+//!
+//! Experiment commands regenerate the paper's tables and figures;
+//! system commands run the Layer-3 update engine (optionally on the
+//! AOT-compiled XLA artifacts) and validate artifacts against host
+//! semantics. See `fast help`.
+
+use std::time::Duration;
+
+use anyhow::bail;
+
+use fast_sram::cli::{usage, Args};
+use fast_sram::coordinator::{
+    DigitalBackend, EngineConfig, FastBackend, UpdateEngine, UpdateRequest, XlaBackend,
+};
+use fast_sram::experiments::{apps_bench, fig10, fig11, fig12, fig13, fig14, table1, waveforms};
+use fast_sram::metrics::render_table;
+use fast_sram::runtime::{default_artifact_dir, validate, Runtime};
+use fast_sram::util::rng::Rng;
+use fast_sram::Result;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("table1") => cmd_table1(&args),
+        Some("fig10") => cmd_fig10(),
+        Some("fig11") => cmd_fig11(),
+        Some("fig12") => cmd_fig12(&args),
+        Some("fig13") => cmd_fig13(),
+        Some("fig14") => cmd_fig14(&args),
+        Some("waveforms") => cmd_waveforms(&args),
+        Some("apps") => cmd_apps(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("info") => cmd_info(&args),
+        Some("help") | None => {
+            print!("{}", usage());
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?}; try `fast help`"),
+    }
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let rows = args.get_usize("rows", 128)?;
+    let q = args.get_usize("q", 16)?;
+    print!("{}", table1::render(&table1::run(rows, q)));
+    Ok(())
+}
+
+fn cmd_fig10() -> Result<()> {
+    print!("{}", fig10::render(&fig10::run()));
+    Ok(())
+}
+
+fn cmd_fig11() -> Result<()> {
+    print!("{}", fig11::render(&fig11::run()));
+    Ok(())
+}
+
+fn cmd_fig12(args: &Args) -> Result<()> {
+    let samples = args.get_usize("samples", 500)?;
+    let seed = args.get_u64("seed", 42)?;
+    print!("{}", fig12::render(&fig12::run(samples, seed)));
+    Ok(())
+}
+
+fn cmd_fig13() -> Result<()> {
+    print!("{}", fig13::render(&fig13::run()));
+    Ok(())
+}
+
+fn cmd_fig14(args: &Args) -> Result<()> {
+    let rows = args.get_usize("rows", 128)?;
+    let cols = args.get_usize("cols", 16)?;
+    print!("{}", fig14::render(&fig14::run(rows, cols)));
+    Ok(())
+}
+
+fn cmd_waveforms(args: &Args) -> Result<()> {
+    let period = args.get_f64("period", 1.25)?;
+    let f7 = waveforms::run_fig7(period);
+    let f8 = waveforms::run_fig8(period, 0b0101, 0b0110);
+    print!("{}", waveforms::render_fig7(&f7, 72));
+    println!();
+    print!("{}", waveforms::render_fig8(&f8, 72));
+    if let Some(dir) = args.get("csv") {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/fig7.csv"), f7.set.to_csv())?;
+        std::fs::write(format!("{dir}/fig8.csv"), f8.set.to_csv())?;
+        println!("\nCSV traces written to {dir}/fig7.csv and {dir}/fig8.csv");
+    }
+    Ok(())
+}
+
+fn cmd_apps(args: &Args) -> Result<()> {
+    let rows = args.get_usize("rows", 128)?;
+    let q = args.get_usize("q", 16)?;
+    let updates = args.get_usize("updates", 20_000)?;
+    let seed = args.get_u64("seed", 7)?;
+    let mut pairs = Vec::new();
+    pairs.push(apps_bench::compare(
+        rows,
+        q,
+        apps_bench::Workload::UniformDeltas { updates },
+        seed,
+    )?);
+    pairs.push(apps_bench::compare(
+        rows,
+        q,
+        apps_bench::Workload::SkewedDeltas { updates },
+        seed,
+    )?);
+    pairs.push(apps_bench::compare(
+        rows,
+        q,
+        apps_bench::Workload::GraphRounds { nodes: rows.min(128), avg_degree: 4, rounds: 4 },
+        seed,
+    )?);
+    print!("{}", apps_bench::render(&pairs));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let banks = args.get_usize("banks", 8)?;
+    let rows = args.get_usize("rows", banks * 128)?;
+    let q = args.get_usize("q", 16)?;
+    let updates = args.get_usize("updates", 100_000)?;
+    let backend = args.get_str("backend", "fast").to_string();
+    let artifact_dir = args.get_str("artifacts", "").to_string();
+
+    let mut cfg = EngineConfig::new(rows, q);
+    cfg.flush_interval = Duration::from_micros(args.get_u64("flush-us", 100)?);
+    let engine = match backend.as_str() {
+        "fast" => UpdateEngine::start(cfg, move || {
+            Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, q)))
+        })?,
+        "digital" => {
+            UpdateEngine::start(cfg, move || Ok(Box::new(DigitalBackend::new(rows, q))))?
+        }
+        "xla" => {
+            let dir = if artifact_dir.is_empty() {
+                default_artifact_dir()
+            } else {
+                artifact_dir.into()
+            };
+            UpdateEngine::start(cfg, move || Ok(Box::new(XlaBackend::new(dir, rows, q)?)))?
+        }
+        other => bail!("unknown backend {other:?} (fast|digital|xla)"),
+    };
+
+    println!("serving {updates} updates on {rows} rows x {q} bits (backend: {backend})");
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(args.get_u64("seed", 1)?);
+    let mut rejected = 0u64;
+    for _ in 0..updates {
+        let row = rng.below(rows as u64) as usize;
+        let v = rng.below(1 << q.min(16)) as u32;
+        let req = if rng.chance(0.25) {
+            UpdateRequest::sub(row, v)
+        } else {
+            UpdateRequest::add(row, v)
+        };
+        if engine.submit(req).is_err() {
+            rejected += 1;
+        }
+    }
+    engine.flush()?;
+    let wall = t0.elapsed();
+    let s = engine.stats();
+    let rows_txt = vec![
+        ("backend".to_string(), s.backend.to_string()),
+        ("accepted".to_string(), format!("{}", s.completed)),
+        ("rejected (backpressure)".to_string(), format!("{rejected}")),
+        ("batches".to_string(), format!("{}", s.batches)),
+        ("rows/batch".to_string(), format!("{:.1}", s.rows_per_batch)),
+        ("modeled macro time".to_string(), format!("{:.2} µs", s.modeled_ns / 1000.0)),
+        ("modeled energy".to_string(), format!("{:.2} nJ", s.modeled_energy_pj / 1000.0)),
+        ("wall time".to_string(), format!("{:.1} ms", wall.as_secs_f64() * 1e3)),
+        (
+            "throughput".to_string(),
+            format!("{:.2} M updates/s", s.completed as f64 / wall.as_secs_f64() / 1e6),
+        ),
+        ("apply p99".to_string(), format!("{} ns", s.apply_wall.p99_ns)),
+    ];
+    print!("{}", render_table("serve", &rows_txt));
+    engine.shutdown()?;
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(default_artifact_dir);
+    let trials = args.get_usize("trials", 3)?;
+    let rt = Runtime::load_dir(&dir)?;
+    println!("platform: {} | artifacts: {}", rt.platform(), rt.len());
+    let mut total = 0usize;
+    for name in rt.names() {
+        let art = rt.get(name)?;
+        let checked = if art.meta.op == "scan_add" {
+            validate::validate_scan(art, trials, 0xFA57)?
+        } else {
+            validate::validate2(art, trials, 0xFA57)?
+        };
+        println!("  {name:<22} OK ({checked} words checked)");
+        total += checked;
+    }
+    println!("all artifacts consistent with host semantics ({total} words)");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(default_artifact_dir);
+    let rt = Runtime::load_dir(&dir)?;
+    println!(
+        "artifact dir: {} | platform: {}",
+        rt.artifact_dir().display(),
+        rt.platform()
+    );
+    for name in rt.names() {
+        let a = rt.get(name)?;
+        println!(
+            "  {:<22} op={:<8} rows={:<5} q={:<2} rounds={:?}",
+            name, a.meta.op, a.meta.rows, a.meta.q, a.meta.rounds
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,209 @@
+//! Metrics: throughput counters, latency histograms, energy accounting
+//! and plain-text report rendering for the coordinator and benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::stats::LatencyHistogram;
+
+/// Lock-free counters shared across coordinator workers.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub requests_coalesced: AtomicU64,
+    pub batches_flushed: AtomicU64,
+    pub rows_updated: AtomicU64,
+    pub shift_cycles: AtomicU64,
+    pub reconfigs: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(counter: &AtomicU64, by: u64) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            requests_submitted: Self::get(&self.requests_submitted),
+            requests_completed: Self::get(&self.requests_completed),
+            requests_rejected: Self::get(&self.requests_rejected),
+            requests_coalesced: Self::get(&self.requests_coalesced),
+            batches_flushed: Self::get(&self.batches_flushed),
+            rows_updated: Self::get(&self.rows_updated),
+            shift_cycles: Self::get(&self.shift_cycles),
+            reconfigs: Self::get(&self.reconfigs),
+        }
+    }
+}
+
+/// Plain-data snapshot of the counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub requests_rejected: u64,
+    pub requests_coalesced: u64,
+    pub batches_flushed: u64,
+    pub rows_updated: u64,
+    pub shift_cycles: u64,
+    pub reconfigs: u64,
+}
+
+impl CounterSnapshot {
+    /// Mean rows per flushed batch — the coordinator's key efficiency
+    /// figure (FAST amortizes one q-cycle batch over many rows).
+    pub fn rows_per_batch(&self) -> f64 {
+        if self.batches_flushed == 0 {
+            return 0.0;
+        }
+        self.rows_updated as f64 / self.batches_flushed as f64
+    }
+}
+
+/// Modeled energy accumulator (fJ) — fed from `energy::Cost` values.
+#[derive(Debug, Default)]
+pub struct EnergyAccount {
+    total_fj: AtomicU64, // stored as millis of fJ for atomic adds
+}
+
+impl EnergyAccount {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_fj(&self, fj: f64) {
+        debug_assert!(fj >= 0.0);
+        self.total_fj
+            .fetch_add((fj * 1000.0).round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn total_fj(&self) -> f64 {
+        self.total_fj.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.total_fj() / 1000.0
+    }
+}
+
+/// Wall-clock stopwatch with a latency histogram.
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    hist: std::sync::Mutex<LatencyHistogram>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record_ns(t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.hist.lock().expect("recorder poisoned").record(ns);
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        let h = self.hist.lock().expect("recorder poisoned");
+        LatencySummary {
+            count: h.count(),
+            mean_ns: h.mean_ns(),
+            p50_ns: h.percentile_ns(50.0),
+            p99_ns: h.percentile_ns(99.0),
+            max_ns: h.max_ns(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+/// Render a two-column report table (used by the CLI and benches).
+pub fn render_table(title: &str, rows: &[(String, String)]) -> String {
+    let key_w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0).max(8);
+    let val_w = rows.iter().map(|(_, v)| v.len()).max().unwrap_or(0).max(8);
+    let mut out = String::new();
+    out.push_str(&format!("┌─ {title} {}┐\n", "─".repeat((key_w + val_w + 5).saturating_sub(title.len() + 3))));
+    for (k, v) in rows {
+        out.push_str(&format!("│ {k:<key_w$} │ {v:>val_w$} │\n"));
+    }
+    out.push_str(&format!("└{}┘\n", "─".repeat(key_w + val_w + 6)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_roundtrip() {
+        let c = Counters::new();
+        Counters::inc(&c.requests_submitted, 5);
+        Counters::inc(&c.batches_flushed, 2);
+        Counters::inc(&c.rows_updated, 200);
+        let s = c.snapshot();
+        assert_eq!(s.requests_submitted, 5);
+        assert_eq!(s.rows_per_batch(), 100.0);
+    }
+
+    #[test]
+    fn rows_per_batch_empty_is_zero() {
+        assert_eq!(CounterSnapshot::default().rows_per_batch(), 0.0);
+    }
+
+    #[test]
+    fn energy_account_accumulates() {
+        let e = EnergyAccount::new();
+        e.add_fj(380.0);
+        e.add_fj(0.5);
+        assert!((e.total_fj() - 380.5).abs() < 1e-9);
+        assert!((e.total_pj() - 0.3805).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_recorder_times_closures() {
+        let r = LatencyRecorder::new();
+        let v = r.time(|| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            42
+        });
+        assert_eq!(v, 42);
+        let s = r.summary();
+        assert_eq!(s.count, 1);
+        assert!(s.mean_ns >= 1_000_000.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            "demo",
+            &[("alpha".into(), "1".into()), ("beta".into(), "22".into())],
+        );
+        assert!(t.contains("alpha"));
+        assert!(t.contains("22"));
+        assert!(t.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,234 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! This is the only place the process touches XLA. Artifacts are HLO
+//! *text* (see python/compile/aot.py for why text, not serialized
+//! protos), compiled once at load time on the CPU PJRT client, and
+//! executed from the hot path with u32 word vectors.
+//!
+//! The manifest (artifacts/manifest.json, authored by aot.py) describes
+//! every artifact's shapes and semantics so the coordinator can pick
+//! executables without parsing HLO.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub mod validate;
+
+/// Metadata for one AOT artifact, parsed from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Semantic op: "add" | "sub" | "and" | "or" | "xor" | "scan_add".
+    pub op: String,
+    /// Row count R (multiple of the 128-row macro height).
+    pub rows: usize,
+    /// Bit width q of each word (1..=32).
+    pub q: usize,
+    /// For scan artifacts: number of accumulate rounds T.
+    pub rounds: Option<usize>,
+    /// HLO text file name within the artifact directory.
+    pub file: String,
+    /// sha256 of the HLO text, for integrity checking.
+    pub sha256: String,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<ArtifactMeta> {
+        let field = |k: &str| {
+            v.get(k)
+                .ok_or_else(|| anyhow!("manifest artifact missing field {k:?}"))
+        };
+        Ok(ArtifactMeta {
+            name: field("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("name not a string"))?
+                .to_string(),
+            op: field("op")?
+                .as_str()
+                .ok_or_else(|| anyhow!("op not a string"))?
+                .to_string(),
+            rows: field("rows")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("rows not a non-negative integer"))?,
+            q: field("q")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("q not a non-negative integer"))?,
+            rounds: v.get("rounds").and_then(Json::as_usize),
+            file: field("file")?
+                .as_str()
+                .ok_or_else(|| anyhow!("file not a string"))?
+                .to_string(),
+            sha256: field("sha256")?
+                .as_str()
+                .ok_or_else(|| anyhow!("sha256 not a string"))?
+                .to_string(),
+        })
+    }
+}
+
+/// One compiled artifact: metadata + a PJRT loaded executable.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute a two-input artifact (add/sub/logic): `table` and
+    /// `operand` must each have exactly `meta.rows` words.
+    pub fn exec2(&self, table: &[u32], operand: &[u32]) -> Result<Vec<u32>> {
+        if table.len() != self.meta.rows || operand.len() != self.meta.rows {
+            bail!(
+                "artifact {} expects {} rows, got table={} operand={}",
+                self.meta.name,
+                self.meta.rows,
+                table.len(),
+                operand.len()
+            );
+        }
+        let a = xla::Literal::vec1(table);
+        let b = xla::Literal::vec1(operand);
+        self.run(&[a, b])
+    }
+
+    /// Execute a scan artifact: `table` is [rows], `rounds_flat` is
+    /// row-major [t, rows].
+    pub fn exec_scan(&self, table: &[u32], rounds_flat: &[u32]) -> Result<Vec<u32>> {
+        let t = self
+            .meta
+            .rounds
+            .ok_or_else(|| anyhow!("artifact {} is not a scan artifact", self.meta.name))?;
+        if table.len() != self.meta.rows {
+            bail!(
+                "artifact {} expects {} rows, got {}",
+                self.meta.name,
+                self.meta.rows,
+                table.len()
+            );
+        }
+        if rounds_flat.len() != t * self.meta.rows {
+            bail!(
+                "artifact {} expects {}x{} round deltas, got {}",
+                self.meta.name,
+                t,
+                self.meta.rows,
+                rounds_flat.len()
+            );
+        }
+        let a = xla::Literal::vec1(table);
+        let b = xla::Literal::vec1(rounds_flat)
+            .reshape(&[t as i64, self.meta.rows as i64])
+            .context("reshaping scan rounds")?;
+        self.run(&[a, b])
+    }
+
+    fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<u32>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact {}", self.meta.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+        let out = lit.to_tuple1().context("unwrapping result tuple")?;
+        Ok(out.to_vec::<u32>()?)
+    }
+}
+
+/// Runtime holding the PJRT client and every compiled artifact.
+pub struct Runtime {
+    platform: String,
+    dir: PathBuf,
+    artifacts: HashMap<String, LoadedArtifact>,
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `dir/manifest.json`.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        Self::load_filtered(dir, |_| true)
+    }
+
+    /// Load a subset (predicate over artifact names) — faster startup
+    /// when the caller needs only one executable.
+    pub fn load_filtered(
+        dir: impl AsRef<Path>,
+        keep: impl Fn(&str) -> bool,
+    ) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        if manifest.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("manifest format is not hlo-text");
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let platform = client.platform_name();
+        let mut artifacts = HashMap::new();
+        for entry in manifest
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?
+        {
+            let meta = ArtifactMeta::from_json(entry)?;
+            if !keep(&meta.name) {
+                continue;
+            }
+            let hlo_path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", meta.name))?;
+            artifacts.insert(meta.name.clone(), LoadedArtifact { meta, exe });
+        }
+        Ok(Runtime { platform, dir, artifacts })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn get(&self, name: &str) -> Result<&LoadedArtifact> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not loaded (have: {:?})",
+                self.names()
+            )
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+}
+
+/// Default artifact directory: `$FAST_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("FAST_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,98 @@
+//! Cross-validation of the XLA artifacts against pure-Rust semantics.
+//!
+//! The reproduction has three implementations of the FAST batch-op
+//! semantics: the Pallas kernel (checked against ref.py by pytest), the
+//! Rust behavioural array model, and the host-side word arithmetic in
+//! `util::bits`. This module checks a loaded artifact against the host
+//! arithmetic on random vectors — run at coordinator startup (optional)
+//! and by `cargo test` integration tests.
+
+use anyhow::{bail, Result};
+
+use super::LoadedArtifact;
+use crate::util::bits;
+use crate::util::rng::Rng;
+
+/// Expected result of a two-input artifact according to `meta.op`.
+pub fn expected2(op: &str, a: u32, b: u32, q: usize) -> Result<u32> {
+    Ok(match op {
+        "add" => bits::add_mod(a, b, q),
+        "sub" => bits::sub_mod(a, b, q),
+        "and" => a & b & bits::mask(q),
+        "or" => (a | b) & bits::mask(q),
+        "xor" => (a ^ b) & bits::mask(q),
+        other => bail!("unknown artifact op {other:?}"),
+    })
+}
+
+/// Run `trials` random vectors through a two-input artifact and compare
+/// element-wise with the host arithmetic. Returns the number of words
+/// checked.
+pub fn validate2(art: &LoadedArtifact, trials: usize, seed: u64) -> Result<usize> {
+    let rows = art.meta.rows;
+    let q = art.meta.q;
+    let m = bits::mask(q) as u64 + 1;
+    let mut rng = Rng::new(seed);
+    let mut checked = 0;
+    for trial in 0..trials {
+        let a: Vec<u32> = (0..rows).map(|_| rng.below(m) as u32).collect();
+        let b: Vec<u32> = (0..rows).map(|_| rng.below(m) as u32).collect();
+        let got = art.exec2(&a, &b)?;
+        if got.len() != rows {
+            bail!(
+                "artifact {} returned {} words, expected {rows}",
+                art.meta.name,
+                got.len()
+            );
+        }
+        for r in 0..rows {
+            let want = expected2(&art.meta.op, a[r], b[r], q)?;
+            if got[r] != want {
+                bail!(
+                    "artifact {} mismatch (trial {trial}, row {r}): \
+                     {} {} {} -> got {:#x}, want {:#x}",
+                    art.meta.name,
+                    a[r],
+                    art.meta.op,
+                    b[r],
+                    got[r],
+                    want
+                );
+            }
+            checked += 1;
+        }
+    }
+    Ok(checked)
+}
+
+/// Validate a scan artifact: T successive batch adds.
+pub fn validate_scan(art: &LoadedArtifact, trials: usize, seed: u64) -> Result<usize> {
+    let rows = art.meta.rows;
+    let q = art.meta.q;
+    let t = match art.meta.rounds {
+        Some(t) => t,
+        None => bail!("artifact {} is not a scan artifact", art.meta.name),
+    };
+    let m = bits::mask(q) as u64 + 1;
+    let mut rng = Rng::new(seed);
+    let mut checked = 0;
+    for trial in 0..trials {
+        let table: Vec<u32> = (0..rows).map(|_| rng.below(m) as u32).collect();
+        let rounds: Vec<u32> = (0..t * rows).map(|_| rng.below(m) as u32).collect();
+        let got = art.exec_scan(&table, &rounds)?;
+        let mut want = table.clone();
+        for ti in 0..t {
+            for r in 0..rows {
+                want[r] = bits::add_mod(want[r], rounds[ti * rows + r], q);
+            }
+        }
+        if got != want {
+            bail!(
+                "scan artifact {} mismatch on trial {trial}",
+                art.meta.name
+            );
+        }
+        checked += rows;
+    }
+    Ok(checked)
+}

@@ -1,0 +1,10 @@
+//! Clocking and timing analysis (paper Figs. 3b and 13).
+//!
+//! - [`clocks`] — two-phase non-overlapping clock + φ2d delayer
+//! - [`shmoo`] — VDD × frequency pass/fail sweep of the shift protocol
+
+pub mod clocks;
+pub mod shmoo;
+
+pub use clocks::{ClockConfig, ClockError, ClockGen, Edge, PhaseLevels, Signal};
+pub use shmoo::{ShmooConfig, ShmooGrid, ShmooModel};

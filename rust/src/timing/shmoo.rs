@@ -1,0 +1,201 @@
+//! Shmoo plot generation (paper Fig. 13): sweep supply voltage ×
+//! clock frequency and mark pass/fail of the shift protocol.
+//!
+//! Pass criteria (both must hold):
+//!  1. *Speed*: the requested clock period must exceed the critical
+//!     path at that VDD — the alpha-power-law `f_max` calibrated to the
+//!     two measured silicon points (800 MHz @ 1.0 V, 1.2 GHz @ 1.2 V).
+//!  2. *Retention*: the dynamic node must hold its charge above the
+//!     inverter trip point for the open-loop window (phase 1 + phase 2
+//!     margins). At very low frequencies the φ1 window grows and the
+//!     remnant charge leaks away — the classic dynamic-logic *minimum*
+//!     frequency, taken from the analog leakage model.
+
+use crate::analog::leak::RetentionModel;
+use crate::energy::TechParams;
+
+/// One shmoo sweep configuration.
+#[derive(Debug, Clone)]
+pub struct ShmooConfig {
+    pub vdd_min: f64,
+    pub vdd_max: f64,
+    pub vdd_steps: usize,
+    pub freq_min_ghz: f64,
+    pub freq_max_ghz: f64,
+    pub freq_steps: usize,
+}
+
+impl Default for ShmooConfig {
+    fn default() -> Self {
+        ShmooConfig {
+            vdd_min: 0.7,
+            vdd_max: 1.3,
+            vdd_steps: 13,
+            freq_min_ghz: 0.2,
+            freq_max_ghz: 2.0,
+            freq_steps: 19,
+        }
+    }
+}
+
+/// Result grid: `pass[vi][fi]` for voltage index vi, frequency index fi.
+#[derive(Debug, Clone)]
+pub struct ShmooGrid {
+    pub vdds: Vec<f64>,
+    pub freqs_ghz: Vec<f64>,
+    pub pass: Vec<Vec<bool>>,
+}
+
+impl ShmooGrid {
+    /// ASCII render, voltage rows (high at top), frequency columns.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("  VDD \\ f(GHz)  ");
+        for f in &self.freqs_ghz {
+            out.push_str(&format!("{f:>5.2}"));
+        }
+        out.push('\n');
+        for (vi, v) in self.vdds.iter().enumerate().rev() {
+            out.push_str(&format!("  {v:>6.2} V     "));
+            for p in &self.pass[vi] {
+                out.push_str(if *p { "    +" } else { "    ." });
+            }
+            out.push('\n');
+        }
+        out.push_str("  ('+' pass, '.' fail)\n");
+        out
+    }
+
+    /// Max passing frequency at the given VDD (linear scan).
+    pub fn max_pass_freq(&self, vdd: f64) -> Option<f64> {
+        let vi = self
+            .vdds
+            .iter()
+            .position(|v| (v - vdd).abs() < 1e-9)?;
+        self.freqs_ghz
+            .iter()
+            .zip(&self.pass[vi])
+            .filter(|(_, &p)| p)
+            .map(|(f, _)| *f)
+            .fold(None, |acc, f| Some(acc.map_or(f, |a: f64| a.max(f))))
+    }
+}
+
+/// The shmoo model: speed limit from TechParams, retention limit from
+/// the analog leakage model.
+#[derive(Debug, Clone)]
+pub struct ShmooModel {
+    pub tech: TechParams,
+    pub retention: RetentionModel,
+}
+
+impl Default for ShmooModel {
+    fn default() -> Self {
+        ShmooModel {
+            tech: TechParams::default(),
+            retention: RetentionModel::default(),
+        }
+    }
+}
+
+impl ShmooModel {
+    /// Does the shift protocol pass at (vdd, freq)?
+    pub fn passes(&self, vdd: f64, freq_ghz: f64) -> bool {
+        if freq_ghz <= 0.0 {
+            return false;
+        }
+        // Speed: requested frequency under the critical-path limit
+        // (tiny tolerance so the calibrated silicon points sit exactly
+        // on the boundary).
+        if freq_ghz > self.tech.f_max_ghz(vdd) * (1.0 + 1e-9) {
+            return false;
+        }
+        // Retention: open-loop window (≈ half period) must not exceed
+        // the retention time at this supply.
+        let half_period_ns = 0.5 / freq_ghz;
+        let t_ret_ns = self.retention.retention_ns(vdd);
+        half_period_ns < t_ret_ns
+    }
+
+    /// Sweep the full grid.
+    pub fn sweep(&self, cfg: &ShmooConfig) -> ShmooGrid {
+        let lin = |lo: f64, hi: f64, n: usize| -> Vec<f64> {
+            if n == 1 {
+                return vec![lo];
+            }
+            (0..n)
+                .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+                .collect()
+        };
+        let vdds = lin(cfg.vdd_min, cfg.vdd_max, cfg.vdd_steps);
+        let freqs = lin(cfg.freq_min_ghz, cfg.freq_max_ghz, cfg.freq_steps);
+        let pass = vdds
+            .iter()
+            .map(|&v| freqs.iter().map(|&f| self.passes(v, f)).collect())
+            .collect();
+        ShmooGrid { vdds, freqs_ghz: freqs, pass }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silicon_points_pass() {
+        let m = ShmooModel::default();
+        // Measured: 800 MHz @ 1.0 V and 1.2 GHz @ 1.2 V.
+        assert!(m.passes(1.0, 0.8));
+        assert!(m.passes(1.2, 1.2));
+    }
+
+    #[test]
+    fn beyond_silicon_points_fail() {
+        let m = ShmooModel::default();
+        assert!(!m.passes(1.0, 0.9));
+        assert!(!m.passes(1.2, 1.3));
+    }
+
+    #[test]
+    fn higher_vdd_passes_higher_freq() {
+        let m = ShmooModel::default();
+        let cfg = ShmooConfig::default();
+        let grid = m.sweep(&cfg);
+        let f10 = grid.max_pass_freq(1.0).unwrap();
+        let f12 = grid.max_pass_freq(1.2).unwrap();
+        assert!(f12 > f10, "f_max(1.2V)={f12} <= f_max(1.0V)={f10}");
+    }
+
+    #[test]
+    fn pass_region_is_contiguous_in_freq() {
+        // For each VDD row, passes form a contiguous band (no holes):
+        // fail — pass — fail as frequency rises.
+        let m = ShmooModel::default();
+        let grid = m.sweep(&ShmooConfig::default());
+        for row in &grid.pass {
+            let mut transitions = 0;
+            for w in row.windows(2) {
+                if w[0] != w[1] {
+                    transitions += 1;
+                }
+            }
+            assert!(transitions <= 2, "non-contiguous pass band: {row:?}");
+        }
+    }
+
+    #[test]
+    fn render_contains_markers() {
+        let m = ShmooModel::default();
+        let grid = m.sweep(&ShmooConfig::default());
+        let s = grid.render();
+        assert!(s.contains('+') && s.contains('.'));
+    }
+
+    #[test]
+    fn very_low_vdd_fails_everything() {
+        let m = ShmooModel::default();
+        for f in [0.2, 0.5, 1.0] {
+            assert!(!m.passes(0.4, f));
+        }
+    }
+}

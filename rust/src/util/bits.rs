@@ -1,0 +1,108 @@
+//! Word/bit helpers shared by the behavioural array model, the
+//! coordinator and the tests. Semantics identical to
+//! `python/compile/kernels/ref.py` (one semantics, three impls).
+
+/// All-ones mask for a q-bit word. Panics if q ∉ [1, 32].
+#[inline]
+pub fn mask(q: usize) -> u32 {
+    assert!((1..=32).contains(&q), "bit width q must be in [1,32], got {q}");
+    if q == 32 {
+        u32::MAX
+    } else {
+        (1u32 << q) - 1
+    }
+}
+
+/// (a + b) mod 2^q.
+#[inline]
+pub fn add_mod(a: u32, b: u32, q: usize) -> u32 {
+    a.wrapping_add(b) & mask(q)
+}
+
+/// (a - b) mod 2^q.
+#[inline]
+pub fn sub_mod(a: u32, b: u32, q: usize) -> u32 {
+    a.wrapping_sub(b) & mask(q)
+}
+
+/// Unpack a word into q bits, LSB first (col 0 = cell next to the ALU).
+pub fn unpack(word: u32, q: usize) -> Vec<u8> {
+    (0..q).map(|t| ((word >> t) & 1) as u8).collect()
+}
+
+/// Pack LSB-first bits back into a word.
+pub fn pack(bits: &[u8]) -> u32 {
+    assert!(bits.len() <= 32);
+    bits.iter()
+        .enumerate()
+        .fold(0u32, |acc, (t, &b)| acc | ((b as u32 & 1) << t))
+}
+
+/// 1-bit full adder: returns (sum, carry_out).
+#[inline]
+pub fn full_adder(a: u8, b: u8, cin: u8) -> (u8, u8) {
+    let s = a ^ b ^ cin;
+    let c = (a & b) | (a & cin) | (b & cin);
+    (s, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_values() {
+        assert_eq!(mask(1), 1);
+        assert_eq!(mask(8), 0xFF);
+        assert_eq!(mask(16), 0xFFFF);
+        assert_eq!(mask(32), u32::MAX);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mask_rejects_zero() {
+        mask(0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mask_rejects_33() {
+        mask(33);
+    }
+
+    #[test]
+    fn add_sub_wrap() {
+        assert_eq!(add_mod(0xFFFF, 1, 16), 0);
+        assert_eq!(sub_mod(0, 1, 16), 0xFFFF);
+        assert_eq!(add_mod(200, 100, 8), 44); // 300 mod 256
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for &w in &[0u32, 1, 0xAB, 0xFFFF, 0xDEADBEEF] {
+            for q in [8usize, 16, 32] {
+                let bits = unpack(w, q);
+                assert_eq!(bits.len(), q);
+                assert_eq!(pack(&bits), w & mask(q));
+            }
+        }
+    }
+
+    #[test]
+    fn full_adder_truth_table() {
+        // (a, b, cin) -> (sum, carry)
+        let cases = [
+            (0, 0, 0, 0, 0),
+            (0, 0, 1, 1, 0),
+            (0, 1, 0, 1, 0),
+            (0, 1, 1, 0, 1),
+            (1, 0, 0, 1, 0),
+            (1, 0, 1, 0, 1),
+            (1, 1, 0, 0, 1),
+            (1, 1, 1, 1, 1),
+        ];
+        for (a, b, c, s, co) in cases {
+            assert_eq!(full_adder(a, b, c), (s, co), "a={a} b={b} c={c}");
+        }
+    }
+}

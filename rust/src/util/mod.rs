@@ -1,0 +1,8 @@
+//! Shared utilities: JSON parsing, deterministic PRNG, property testing,
+//! bit/word helpers, timing helpers.
+
+pub mod bits;
+pub mod json;
+pub mod quickprop;
+pub mod rng;
+pub mod stats;

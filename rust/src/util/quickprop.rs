@@ -1,0 +1,197 @@
+//! Mini property-testing framework (proptest is not in the offline
+//! vendor set — DESIGN.md §7). Provides seeded random-case generation
+//! with greedy input shrinking for the coordinator/array invariant tests.
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath flags
+//! on this image — the property itself runs in unit tests below):
+//! ```no_run
+//! use fast_sram::util::bits::add_mod;
+//! use fast_sram::util::quickprop::{check, Gen};
+//!
+//! check("add commutes", 200, |g: &mut Gen| {
+//!     let a = g.u32_below(1 << 16);
+//!     let b = g.u32_below(1 << 16);
+//!     add_mod(a, b, 16) == add_mod(b, a, 16)
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to each property invocation. Records the draws
+/// so failures can be replayed/shrunk.
+pub struct Gen {
+    rng: Rng,
+    /// Scale factor in (0, 1]; shrinking re-runs with smaller scales so
+    /// size-like draws get smaller.
+    scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Gen { rng: Rng::new(seed), scale }
+    }
+
+    /// Uniform u32 in [0, n), scaled down during shrinking.
+    pub fn u32_below(&mut self, n: u32) -> u32 {
+        let eff = ((n as f64 * self.scale).ceil() as u64).clamp(1, n as u64);
+        self.rng.below(eff) as u32
+    }
+
+    /// Uniform usize in [lo, hi], scaled toward lo during shrinking.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        let eff = ((span as f64 * self.scale).ceil() as u64).clamp(1, span);
+        lo + self.rng.below(eff) as usize
+    }
+
+    /// Arbitrary u32 (full range; not scaled — for value-semantics draws).
+    pub fn u32_any(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn u64_any(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        let i = self.rng.below(xs.len() as u64) as usize;
+        &xs[i]
+    }
+
+    /// Vec of length in [0, max_len] with elements from f.
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of a property check run.
+#[derive(Debug)]
+pub struct Failure {
+    pub name: String,
+    pub seed: u64,
+    pub scale: f64,
+    pub case: usize,
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property '{}' failed: case #{} seed={} scale={:.3} \
+             (replay with Gen::replay({}, {:.3}))",
+            self.name, self.case, self.seed, self.scale, self.seed, self.scale
+        )
+    }
+}
+
+impl Gen {
+    /// Rebuild the exact generator of a reported failure.
+    pub fn replay(seed: u64, scale: f64) -> Self {
+        Gen::new(seed, scale)
+    }
+}
+
+/// Run `cases` random cases of `prop`. On failure, greedily shrink by
+/// re-running the same seed at smaller scales and report the smallest
+/// failing configuration. Panics with a replayable message on failure.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> bool) {
+    // Fixed base seed for reproducible CI; vary per-case.
+    let base = 0xFA57_5EEDu64;
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed, 1.0);
+        if prop(&mut g) {
+            continue;
+        }
+        // Shrink: find the smallest scale that still fails.
+        let mut failing_scale = 1.0;
+        for &scale in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+            let mut g = Gen::new(seed, scale);
+            if !prop(&mut g) {
+                failing_scale = scale;
+            }
+        }
+        panic!(
+            "{}",
+            Failure { name: name.to_string(), seed, scale: failing_scale, case }
+        );
+    }
+}
+
+/// Like `check` but the property returns Result with a diagnostic.
+pub fn check_diag(
+    name: &str,
+    cases: usize,
+    mut prop: impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    check(name, cases, |g| match prop(g) {
+        Ok(()) => true,
+        Err(msg) => {
+            eprintln!("[quickprop:{name}] {msg}");
+            false
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u32_below bound", 500, |g| {
+            let n = 1 + g.u32_below(1000);
+            g.u32_below(n) < n
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-false")]
+    fn failing_property_panics_with_replay_info() {
+        check("always-false", 10, |_| false);
+    }
+
+    #[test]
+    fn usize_in_respects_bounds() {
+        check("usize_in bounds", 500, |g| {
+            let x = g.usize_in(3, 17);
+            (3..=17).contains(&x)
+        });
+    }
+
+    #[test]
+    fn vec_of_bounded() {
+        check("vec_of len", 200, |g| {
+            let v = g.vec_of(32, |g| g.u32_any());
+            v.len() <= 32
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_draws() {
+        let mut a = Gen::replay(99, 1.0);
+        let mut b = Gen::replay(99, 1.0);
+        for _ in 0..50 {
+            assert_eq!(a.u64_any(), b.u64_any());
+        }
+    }
+
+    #[test]
+    fn choose_picks_members() {
+        let xs = [1, 2, 3];
+        check("choose member", 100, |g| xs.contains(g.choose(&xs)));
+    }
+}

@@ -1,0 +1,193 @@
+//! Small statistics helpers for benches and metrics: trimmed means,
+//! percentiles, and a streaming histogram. Criterion is not in the
+//! offline vendor set, so the bench harness builds on these.
+
+/// Mean of a slice; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation; 0.0 for n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Mean after dropping the lowest and highest `trim_frac` of samples —
+/// robust to scheduler noise in wall-clock benches.
+pub fn trimmed_mean(xs: &[f64], trim_frac: f64) -> f64 {
+    assert!((0.0..0.5).contains(&trim_frac));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = (v.len() as f64 * trim_frac).floor() as usize;
+    let kept = &v[k..v.len() - k];
+    mean(kept)
+}
+
+/// Linear-interpolated percentile, p ∈ [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.len() == 1 {
+        return v[0];
+    }
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// Min of a slice (NaN-free input assumed).
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+/// Max of a slice (NaN-free input assumed).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Fixed-bucket latency histogram (power-of-two nanosecond buckets),
+/// allocation-free on the record path — used by coordinator metrics.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// buckets[i] counts samples in [2^i, 2^(i+1)) ns; bucket 0 is [0,2).
+    buckets: [u64; 48],
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: [0; 48], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        let idx = (64 - ns.max(1).leading_zeros() as usize - 1).min(47);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Upper bound of the bucket containing the p-th percentile sample.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_outliers() {
+        let mut xs: Vec<f64> = (0..100).map(|i| 10.0 + i as f64 * 0.01).collect();
+        xs.push(10_000.0); // wild outlier
+        let t = trimmed_mean(&xs, 0.05);
+        assert!(t < 11.0, "trimmed mean {t}");
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket() {
+        let mut h = LatencyHistogram::new();
+        for ns in [100u64, 200, 300, 400, 50_000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_ns() > 0.0);
+        // p50 bucket upper bound must be >= 200 and well below the outlier.
+        let p50 = h.percentile_ns(50.0);
+        assert!((256..=512).contains(&p50), "p50 {p50}");
+        assert!(h.percentile_ns(100.0) >= 50_000 / 2);
+        assert_eq!(h.max_ns(), 50_000);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(100);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_ns(), 1000);
+    }
+}

@@ -1,0 +1,274 @@
+//! Integration + property tests for the coordinator stack: batcher
+//! semantics, engine end-to-end equivalence, bank striping, and the
+//! width-reconfiguration planner. Uses the in-crate quickprop
+//! framework (proptest is not in the offline vendor set).
+
+use fast_sram::coordinator::{
+    Batcher, DigitalBackend, EngineConfig, FastBackend, UpdateEngine, UpdateOp, UpdateRequest,
+};
+use fast_sram::fastmem::{AluOp, FastArray, RouteFabric};
+use fast_sram::util::bits;
+use fast_sram::util::quickprop::{check, Gen};
+
+/// Host-side oracle applying requests one by one.
+fn apply_reference(state: &mut [u32], req: &UpdateRequest, q: usize) {
+    let m = bits::mask(q);
+    let cur = state[req.row];
+    state[req.row] = match req.op {
+        UpdateOp::Add => bits::add_mod(cur, req.operand, q),
+        UpdateOp::Sub => bits::sub_mod(cur, req.operand, q),
+        UpdateOp::And => cur & req.operand & m,
+        UpdateOp::Or => (cur | req.operand) & m,
+        UpdateOp::Xor => (cur ^ req.operand) & m,
+    };
+}
+
+fn random_request(g: &mut Gen, rows: usize, q: usize) -> UpdateRequest {
+    let ops = [UpdateOp::Add, UpdateOp::Sub, UpdateOp::And, UpdateOp::Or, UpdateOp::Xor];
+    UpdateRequest {
+        row: g.usize_in(0, rows - 1),
+        op: *g.choose(&ops),
+        operand: g.u32_any() & bits::mask(q),
+    }
+}
+
+/// PROPERTY: flushing the batcher and applying its batches to a FAST
+/// array is equivalent to applying every request sequentially.
+#[test]
+fn prop_batcher_preserves_request_semantics() {
+    check("batcher semantics", 60, |g| {
+        let rows = 16;
+        let q = *g.choose(&[8usize, 16]);
+        let n_reqs = g.usize_in(1, 120);
+        let seal = if g.bool() { Some(g.usize_in(1, rows)) } else { None };
+
+        let mut array = FastArray::new(rows, q);
+        let mut reference = vec![0u32; rows];
+        let mut batcher = Batcher::new(rows, q, seal);
+
+        let apply_batch = |array: &mut FastArray, batch: fast_sram::coordinator::Batch| {
+            match batch.kind.alu_op() {
+                AluOp::Add => array.batch_add(&batch.operands),
+                op => array.batch_logic(op, &batch.operands),
+            };
+        };
+
+        for _ in 0..n_reqs {
+            let req = random_request(g, rows, q);
+            apply_reference(&mut reference, &req, q);
+            if let Some((batch, _)) = batcher.push(req) {
+                apply_batch(&mut array, batch);
+            }
+        }
+        if let Some(batch) = batcher.force_flush() {
+            apply_batch(&mut array, batch);
+        }
+        array.snapshot() == reference
+    });
+}
+
+/// PROPERTY: coalescing never changes the number of *completed*
+/// requests, and rows_touched <= requests.
+#[test]
+fn prop_batch_accounting_consistent() {
+    check("batch accounting", 60, |g| {
+        let rows = 32;
+        let q = 16;
+        let mut batcher = Batcher::new(rows, q, None);
+        let n = g.usize_in(1, 200);
+        let mut pushed = 0usize;
+        let mut flushed_requests = 0usize;
+        let mut ok = true;
+        for _ in 0..n {
+            let req = random_request(g, rows, q);
+            pushed += 1;
+            if let Some((b, _)) = batcher.push(req) {
+                flushed_requests += b.requests;
+                ok &= b.rows_touched <= b.requests;
+                ok &= b.operands.len() == rows;
+            }
+        }
+        if let Some(b) = batcher.force_flush() {
+            flushed_requests += b.requests;
+            ok &= b.rows_touched <= b.requests;
+        }
+        ok && flushed_requests == pushed
+    });
+}
+
+/// PROPERTY: the engine (async worker + batcher + banks) matches the
+/// sequential oracle for arbitrary request streams.
+#[test]
+fn prop_engine_end_to_end_equivalence() {
+    check("engine equivalence", 12, |g| {
+        let rows = 256; // 2 banks
+        let q = 16;
+        let cfg = EngineConfig::new(rows, q);
+        let engine =
+            UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(2, 128, q)))).unwrap();
+        let mut reference = vec![0u32; rows];
+        let n = g.usize_in(1, 400);
+        for _ in 0..n {
+            let req = random_request(g, rows, q);
+            apply_reference(&mut reference, &req, q);
+            engine.submit_blocking(req).unwrap();
+        }
+        let got = engine.snapshot().unwrap();
+        engine.shutdown().unwrap();
+        got == reference
+    });
+}
+
+/// Engine on the digital baseline must produce identical state ("same
+/// function as the FAST SRAM").
+#[test]
+fn engine_fast_and_digital_agree() {
+    let rows = 128;
+    let q = 16;
+    let make = |fast: bool| {
+        let cfg = EngineConfig::new(rows, q);
+        if fast {
+            UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(1, 128, q)))).unwrap()
+        } else {
+            UpdateEngine::start(cfg, move || Ok(Box::new(DigitalBackend::new(rows, q)))).unwrap()
+        }
+    };
+    let ef = make(true);
+    let ed = make(false);
+    let mut rng = fast_sram::util::rng::Rng::new(123);
+    for _ in 0..3000 {
+        let row = rng.below(rows as u64) as usize;
+        let v = rng.below(1 << 16) as u32;
+        let req = if rng.chance(0.5) {
+            UpdateRequest::add(row, v)
+        } else {
+            UpdateRequest::sub(row, v)
+        };
+        ef.submit_blocking(req).unwrap();
+        ed.submit_blocking(req).unwrap();
+    }
+    assert_eq!(ef.snapshot().unwrap(), ed.snapshot().unwrap());
+    // And the modeled cost asymmetry is the paper's whole point:
+    let sf = ef.stats();
+    let sd = ed.stats();
+    assert!(sf.modeled_ns < sd.modeled_ns, "FAST must be faster in macro time");
+    ef.shutdown().unwrap();
+    ed.shutdown().unwrap();
+}
+
+/// Width reconfiguration (Fig. 5c) through the array: merge two 8-bit
+/// words into a 16-bit word and verify cross-boundary carries.
+#[test]
+fn width_reconfig_cross_boundary_carry() {
+    let fabric = RouteFabric::new(16, 8);
+    let mut a = FastArray::with_fabric(8, fabric, 8, AluOp::Add).unwrap();
+    for r in 0..8 {
+        a.write_word(r, 0, 0xFF).unwrap(); // low byte all-ones
+        a.write_word(r, 1, r as u32).unwrap(); // high byte
+    }
+    a.reconfigure_width(16).unwrap();
+    let deltas = vec![1u32; 8];
+    a.batch_add(&deltas);
+    for r in 0..8 {
+        // 0x__FF + 1 must carry into the high byte.
+        assert_eq!(
+            a.read_word(r, 0).unwrap(),
+            ((r as u32) << 8 | 0xFF) + 1,
+            "row {r}"
+        );
+    }
+    // Back to 8-bit: words split again (bit-preserving).
+    a.reconfigure_width(8).unwrap();
+    for r in 0..8 {
+        assert_eq!(a.read_word(r, 0).unwrap(), 0x00);
+        assert_eq!(a.read_word(r, 1).unwrap(), r as u32 + 1);
+    }
+}
+
+/// PROPERTY: batch ops on a segmented array match per-word host math.
+#[test]
+fn prop_segmented_batches_match_word_math() {
+    check("segmented batch math", 20, |g| {
+        let widths = [4usize, 8, 16];
+        let base = *g.choose(&widths);
+        let words = g.usize_in(1, 32 / base.max(4)).max(1);
+        let row_width = base * words;
+        if row_width > 32 {
+            return true; // skip invalid combos
+        }
+        let rows = g.usize_in(1, 8);
+        let fabric = RouteFabric::new(row_width, base);
+        let mut a = match FastArray::with_fabric(rows, fabric, base, AluOp::Add) {
+            Ok(a) => a,
+            Err(_) => return true,
+        };
+        let wpr = a.words_per_row();
+        let mut init = vec![0u32; rows * wpr];
+        for (i, v) in init.iter_mut().enumerate() {
+            *v = (g.u32_any()) & bits::mask(base);
+            let (r, s) = (i / wpr, i % wpr);
+            a.write_word(r, s, *v).unwrap();
+        }
+        let ops: Vec<u32> = (0..rows * wpr)
+            .map(|_| g.u32_any() & bits::mask(base))
+            .collect();
+        a.batch_apply_segmented(&ops).unwrap();
+        (0..rows * wpr).all(|i| {
+            let (r, s) = (i / wpr, i % wpr);
+            a.read_word(r, s).unwrap() == bits::add_mod(init[i], ops[i], base)
+        })
+    });
+}
+
+/// PROPERTY: the §III.E multiply extension matches host arithmetic and
+/// composes with adds (distributivity under mod 2^q).
+#[test]
+fn prop_batch_mul_matches_host_and_distributes() {
+    check("batch mul", 20, |g| {
+        let q = *g.choose(&[8usize, 16]);
+        let rows = 8;
+        let mut a = FastArray::new(rows, q);
+        let init: Vec<u32> = (0..rows).map(|_| g.u32_any() & bits::mask(q)).collect();
+        let mults: Vec<u32> = (0..rows).map(|_| g.u32_any() & bits::mask(q)).collect();
+        let deltas: Vec<u32> = (0..rows).map(|_| g.u32_any() & bits::mask(q)).collect();
+
+        // (init + delta) * mult, computed on the array...
+        a.load(&init);
+        a.batch_add(&deltas);
+        a.batch_mul(&mults).unwrap();
+        let got = a.snapshot();
+
+        // ...must equal host math.
+        (0..rows).all(|r| {
+            let sum = bits::add_mod(init[r], deltas[r], q) as u64;
+            let want = ((sum * mults[r] as u64) as u32) & bits::mask(q);
+            got[r] == want
+        })
+    });
+}
+
+/// Backpressure: rejected + completed == submitted after drain.
+#[test]
+fn backpressure_accounting_invariant() {
+    let rows = 128;
+    let q = 16;
+    let mut cfg = EngineConfig::new(rows, q);
+    cfg.queue_cap = 4;
+    let engine =
+        UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(1, 128, q)))).unwrap();
+    let mut accepted = 0u64;
+    for i in 0..50_000u64 {
+        if engine
+            .submit(UpdateRequest::add((i % 128) as usize, 1))
+            .is_ok()
+        {
+            accepted += 1;
+        }
+    }
+    engine.flush().unwrap();
+    let s = engine.stats();
+    assert_eq!(s.submitted, 50_000);
+    assert_eq!(s.completed, accepted);
+    assert_eq!(s.rejected, 50_000 - accepted);
+    engine.shutdown().unwrap();
+}

@@ -1,0 +1,153 @@
+//! End-to-end integration: full application workloads through the
+//! coordinator on multiple backends, checked against host-semantics
+//! replays; plus whole-experiment smoke checks (every table/figure
+//! driver runs and asserts its own paper anchors).
+
+use std::collections::HashMap;
+
+use fast_sram::apps::{reference_round, CsrGraph, DeltaTable, GraphEngine, Histogram};
+use fast_sram::coordinator::{DigitalBackend, EngineConfig, FastBackend, UpdateEngine};
+use fast_sram::experiments::{fig10, fig11, fig12, fig13, fig14, table1, waveforms};
+use fast_sram::util::rng::Rng;
+
+fn fast_engine(rows: usize, q: usize) -> UpdateEngine {
+    let cfg = EngineConfig::new(rows, q);
+    UpdateEngine::start(cfg, move || {
+        Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, q)))
+    })
+    .unwrap()
+}
+
+#[test]
+fn database_workload_matches_hashmap_reference() {
+    let mut table = DeltaTable::new(fast_engine(256, 16));
+    let mut reference: HashMap<u64, u32> = HashMap::new();
+    let mut rng = Rng::new(42);
+    for _ in 0..20_000 {
+        let key = rng.below(200);
+        let delta = rng.below(100) as u32;
+        if rng.chance(0.3) {
+            table.decrement(key, delta).unwrap();
+            let e = reference.entry(key).or_insert(0);
+            *e = e.wrapping_sub(delta) & 0xFFFF;
+        } else {
+            table.increment(key, delta).unwrap();
+            let e = reference.entry(key).or_insert(0);
+            *e = e.wrapping_add(delta) & 0xFFFF;
+        }
+    }
+    let mut want: Vec<(u64, u32)> = reference.into_iter().collect();
+    want.sort_unstable();
+    assert_eq!(table.scan().unwrap(), want);
+    let s = table.stats();
+    assert!(
+        s.rows_per_batch > 10.0,
+        "20k updates over 200 keys must coalesce heavily, got {:.1} rows/batch",
+        s.rows_per_batch
+    );
+    table.close().unwrap();
+}
+
+#[test]
+fn graph_engine_on_digital_backend_matches_fast() {
+    let g = CsrGraph::random(120, 5, 7);
+    let feats: Vec<u32> = (0..120).map(|i| (i * 31 + 5) as u32).collect();
+
+    let run = |engine: UpdateEngine| {
+        let mut ge = GraphEngine::new(g.clone(), engine).unwrap();
+        ge.set_features(&feats).unwrap();
+        ge.run(4, 1).unwrap();
+        let out = ge.features().unwrap();
+        let stats = ge.stats();
+        ge.close().unwrap();
+        (out, stats)
+    };
+
+    let (fast_out, fast_stats) = run(fast_engine(128, 16));
+    let digital_cfg = EngineConfig::new(128, 16);
+    let digital_engine =
+        UpdateEngine::start(digital_cfg, || Ok(Box::new(DigitalBackend::new(128, 16)))).unwrap();
+    let (dig_out, dig_stats) = run(digital_engine);
+
+    // Same results, asymmetric modeled cost.
+    assert_eq!(fast_out, dig_out);
+    assert!(fast_stats.modeled_ns < dig_stats.modeled_ns / 3.0);
+
+    // And both match the pure reference.
+    let mut want = feats.clone();
+    for _ in 0..4 {
+        want = reference_round(&g, &want, 16, |f| f >> 1);
+    }
+    assert_eq!(fast_out, want);
+}
+
+#[test]
+fn histogram_of_normal_samples() {
+    let mut h = Histogram::new(fast_engine(128, 16), -4.0, 4.0, 64).unwrap();
+    let mut rng = Rng::new(11);
+    for _ in 0..20_000 {
+        h.record(rng.normal()).unwrap();
+    }
+    let counts = h.counts().unwrap();
+    assert_eq!(counts.iter().map(|&c| c as u64).sum::<u64>(), 20_000);
+    // Bell shape: the middle bins outweigh the tails.
+    let mid: u64 = counts[24..40].iter().map(|&c| c as u64).sum();
+    let tails: u64 =
+        counts[..8].iter().map(|&c| c as u64).sum::<u64>()
+            + counts[56..].iter().map(|&c| c as u64).sum::<u64>();
+    assert!(mid > 50 * tails.max(1) / 10, "mid {mid} vs tails {tails}");
+    h.close().unwrap();
+}
+
+// --- experiment smoke checks: every driver runs and self-validates ---
+
+#[test]
+fn all_figure_drivers_run() {
+    let t1 = table1::run(128, 16);
+    assert!((t1.energy_ratio - 5.5).abs() < 0.3);
+    assert!((t1.speed_ratio - 27.2).abs() < 1.5);
+
+    let f10 = fig10::run();
+    assert!(!f10.is_empty());
+
+    let f11 = fig11::run();
+    assert!(!f11.is_empty());
+
+    let f12 = fig12::run(50, 42);
+    assert!((0.2..0.5).contains(&f12.mc.worst_margin()));
+
+    let f13 = fig13::run();
+    assert!(f13.max_pass_freq(1.0).is_some());
+
+    let f14 = fig14::run(128, 16);
+    assert!((f14.macro_overhead - 0.417).abs() < 0.02);
+
+    let f7 = waveforms::run_fig7(1.25);
+    assert_eq!(f7.initial, f7.after_full_rotation);
+    let f8 = waveforms::run_fig8(1.25, 9, 8);
+    assert_eq!(f8.result, 1); // (9+8) mod 16
+}
+
+#[test]
+fn multi_bank_scaling_preserves_semantics() {
+    // 1024 logical rows over 8 banks with a high-churn workload.
+    let rows = 1024;
+    let engine = fast_engine(rows, 16);
+    let mut rng = Rng::new(3);
+    let mut reference = vec![0u32; rows];
+    for _ in 0..10_000 {
+        let row = rng.below(rows as u64) as usize;
+        let v = rng.below(1 << 16) as u32;
+        engine
+            .submit_blocking(fast_sram::coordinator::UpdateRequest::add(row, v))
+            .unwrap();
+        reference[row] = (reference[row].wrapping_add(v)) & 0xFFFF;
+    }
+    assert_eq!(engine.snapshot().unwrap(), reference);
+    let s = engine.stats();
+    assert!(s.batches > 0);
+    // Amortization: many requests per fully-concurrent batch. The exact
+    // figure depends on drain timing; require a healthy floor.
+    assert!(s.rows_per_batch > 5.0, "rows/batch {:.1}", s.rows_per_batch);
+    engine.shutdown().unwrap();
+}

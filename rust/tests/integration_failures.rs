@@ -1,0 +1,137 @@
+//! Failure injection: the engine and its callers must degrade cleanly
+//! when the backend errors, when construction fails, and under
+//! protocol violations in the cell model.
+
+use fast_sram::coordinator::{
+    AppliedBatch, Backend, BatchKind, EngineConfig, FastBackend, UpdateEngine, UpdateRequest,
+};
+use fast_sram::fastmem::{CellError, ShiftCell};
+use fast_sram::Result;
+
+/// A backend that fails after N successful batches.
+struct FlakyBackend {
+    inner: FastBackend,
+    remaining_ok: usize,
+}
+
+impl Backend for FlakyBackend {
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+
+    fn q(&self) -> usize {
+        self.inner.q()
+    }
+
+    fn apply(&mut self, kind: BatchKind, operands: &[u32]) -> Result<AppliedBatch> {
+        if self.remaining_ok == 0 {
+            anyhow::bail!("injected backend fault");
+        }
+        self.remaining_ok -= 1;
+        self.inner.apply(kind, operands)
+    }
+
+    fn read_row(&mut self, row: usize) -> Result<u32> {
+        self.inner.read_row(row)
+    }
+
+    fn write_row(&mut self, row: usize, value: u32) -> Result<()> {
+        self.inner.write_row(row, value)
+    }
+
+    fn snapshot(&mut self) -> Result<Vec<u32>> {
+        self.inner.snapshot()
+    }
+}
+
+#[test]
+fn backend_construction_failure_propagates_to_start() {
+    let cfg = EngineConfig::new(128, 16);
+    let err = match UpdateEngine::start(cfg, || anyhow::bail!("no device")) {
+        Err(e) => e,
+        Ok(_) => panic!("start must fail when the backend cannot be built"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no device"), "got: {msg}");
+}
+
+#[test]
+fn backend_fault_surfaces_on_shutdown_and_stops_worker() {
+    let cfg = EngineConfig::new(128, 16);
+    let engine = UpdateEngine::start(cfg, || {
+        Ok(Box::new(FlakyBackend {
+            inner: FastBackend::new(1, 128, 16),
+            remaining_ok: 1,
+        }))
+    })
+    .unwrap();
+    // First flush succeeds, second hits the injected fault.
+    engine.submit_blocking(UpdateRequest::add(0, 1)).unwrap();
+    engine.flush().unwrap();
+    engine.submit_blocking(UpdateRequest::add(1, 1)).unwrap();
+    // The worker dies on the fault; subsequent API calls must error
+    // (not hang), and shutdown must report the fault.
+    let mut saw_error = false;
+    for _ in 0..100 {
+        if engine.flush().is_err() {
+            saw_error = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(saw_error, "engine kept accepting after backend fault");
+    let err = engine.shutdown().unwrap_err();
+    assert!(format!("{err:#}").contains("injected backend fault"));
+}
+
+#[test]
+fn rows_mismatch_between_config_and_backend_fails_fast() {
+    let cfg = EngineConfig::new(256, 16);
+    let engine = UpdateEngine::start(cfg, || Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
+    // Worker detects the mismatch and exits; first interaction errors.
+    let mut errored = false;
+    for _ in 0..100 {
+        if engine.flush().is_err() {
+            errored = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(errored, "rows mismatch must not go unnoticed");
+}
+
+#[test]
+fn cell_protocol_violations_are_hard_errors() {
+    let mut c = ShiftCell::new(1);
+    // φ2 without φ1:
+    assert!(matches!(c.phase2(), Err(CellError::PhaseOrder(_, _))));
+    // Mid-shift static access:
+    c.phase1(0).unwrap();
+    assert_eq!(c.read_static(), Err(CellError::DynamicRead));
+    assert_eq!(c.write_static(1), Err(CellError::DynamicRead));
+    // Recover by completing the protocol.
+    c.phase2().unwrap();
+    c.phase3().unwrap();
+    assert_eq!(c.read_static().unwrap(), 0);
+}
+
+#[test]
+fn engine_read_out_of_range_errors_without_poisoning() {
+    let cfg = EngineConfig::new(128, 16);
+    let engine = UpdateEngine::start(cfg, || Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
+    assert!(engine.read(500).is_err());
+    // Engine still healthy afterwards.
+    engine.submit_blocking(UpdateRequest::add(3, 9)).unwrap();
+    assert_eq!(engine.read(3).unwrap(), 9);
+    engine.shutdown().unwrap();
+}
+
+#[test]
+fn xla_backend_missing_artifacts_is_a_clean_error() {
+    let res = fast_sram::coordinator::XlaBackend::new("/nonexistent/dir", 128, 16);
+    assert!(res.is_err());
+}

@@ -1,0 +1,159 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts,
+//! validate them against host semantics, and cross-check the XLA
+//! backend against the phase-accurate behavioural model — the "two
+//! implementations, one semantics" guarantee of the reproduction.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use fast_sram::coordinator::{
+    BatchKind, EngineConfig, FastBackend, UpdateEngine, UpdateRequest, XlaBackend,
+};
+use fast_sram::coordinator::Backend;
+use fast_sram::runtime::{validate, Runtime};
+use fast_sram::util::bits;
+use fast_sram::util::rng::Rng;
+
+fn artifact_dir() -> std::path::PathBuf {
+    // Tests run with CWD = package root.
+    let dir = std::path::PathBuf::from("artifacts");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+#[test]
+fn manifest_loads_and_lists_expected_artifacts() {
+    let rt = Runtime::load_dir(artifact_dir()).unwrap();
+    assert!(rt.len() >= 9, "expected >= 9 artifacts, got {}", rt.len());
+    for required in [
+        "fast_add_128x8",
+        "fast_add_128x16",
+        "fast_add_128x32",
+        "fast_sub_128x16",
+        "fast_and_128x16",
+        "fast_or_128x16",
+        "fast_xor_128x16",
+        "fast_add_1024x16",
+        "fast_scan8_128x16",
+    ] {
+        assert!(rt.get(required).is_ok(), "missing artifact {required}");
+    }
+    assert_eq!(rt.get("fast_add_128x16").unwrap().meta.q, 16);
+    assert_eq!(rt.get("fast_add_1024x16").unwrap().meta.rows, 1024);
+}
+
+#[test]
+fn filtered_load_compiles_subset() {
+    let rt = Runtime::load_filtered(artifact_dir(), |n| n == "fast_add_128x16").unwrap();
+    assert_eq!(rt.len(), 1);
+    assert!(rt.get("fast_xor_128x16").is_err());
+}
+
+#[test]
+fn all_two_input_artifacts_validate_against_host_semantics() {
+    let rt = Runtime::load_dir(artifact_dir()).unwrap();
+    for name in rt.names() {
+        let art = rt.get(name).unwrap();
+        if art.meta.op == "scan_add" {
+            let checked = validate::validate_scan(art, 2, 99).unwrap();
+            assert!(checked > 0);
+        } else {
+            let checked = validate::validate2(art, 2, 99).unwrap();
+            assert!(checked > 0, "{name}");
+        }
+    }
+}
+
+#[test]
+fn artifact_rejects_wrong_shapes() {
+    let rt = Runtime::load_dir(artifact_dir()).unwrap();
+    let art = rt.get("fast_add_128x16").unwrap();
+    assert!(art.exec2(&[0u32; 64], &[0u32; 128]).is_err());
+    assert!(art.exec2(&[0u32; 128], &[0u32; 129]).is_err());
+    assert!(art.exec_scan(&[0u32; 128], &[0u32; 128]).is_err()); // not a scan
+}
+
+#[test]
+fn scan_artifact_accumulates_rounds() {
+    let rt = Runtime::load_dir(artifact_dir()).unwrap();
+    let art = rt.get("fast_scan8_128x16").unwrap();
+    let t = art.meta.rounds.unwrap();
+    assert_eq!(t, 8);
+    let table = vec![1u32; 128];
+    let rounds = vec![2u32; 8 * 128];
+    let out = art.exec_scan(&table, &rounds).unwrap();
+    assert!(out.iter().all(|&v| v == 1 + 16));
+}
+
+/// The centrepiece: the XLA (Pallas-kernel) backend and the
+/// phase-accurate behavioural backend process the same request stream
+/// through identical engines and must agree bit-for-bit.
+#[test]
+fn xla_and_behavioural_backends_agree_on_random_streams() {
+    let rows = 128;
+    let q = 16;
+    let dir = artifact_dir();
+    let cfg = EngineConfig::new(rows, q);
+    let xla = UpdateEngine::start(cfg.clone(), move || {
+        Ok(Box::new(XlaBackend::new(dir, rows, q)?))
+    })
+    .unwrap();
+    let beh =
+        UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(1, 128, q)))).unwrap();
+
+    let mut rng = Rng::new(2024);
+    for _ in 0..1500 {
+        let row = rng.below(rows as u64) as usize;
+        let v = rng.below(1 << q) as u32;
+        let req = match rng.below(4) {
+            0 => UpdateRequest::sub(row, v),
+            1 => UpdateRequest { row, op: fast_sram::coordinator::UpdateOp::Xor, operand: v },
+            _ => UpdateRequest::add(row, v),
+        };
+        xla.submit_blocking(req).unwrap();
+        beh.submit_blocking(req).unwrap();
+    }
+    let a = xla.snapshot().unwrap();
+    let b = beh.snapshot().unwrap();
+    assert_eq!(a, b, "XLA artifact and behavioural model diverged");
+    assert_eq!(xla.stats().backend, "fast-xla");
+    xla.shutdown().unwrap();
+    beh.shutdown().unwrap();
+}
+
+#[test]
+fn xla_backend_multi_macro_1024() {
+    let dir = artifact_dir();
+    let mut backend = XlaBackend::new(dir, 1024, 16).unwrap();
+    let mut rng = Rng::new(5);
+    let init: Vec<u32> = (0..1024).map(|_| rng.below(1 << 16) as u32).collect();
+    for (r, &v) in init.iter().enumerate() {
+        backend.write_row(r, v).unwrap();
+    }
+    let deltas: Vec<u32> = (0..1024).map(|_| rng.below(1 << 16) as u32).collect();
+    backend.apply(BatchKind::Add, &deltas).unwrap();
+    let snap = backend.snapshot().unwrap();
+    for r in 0..1024 {
+        assert_eq!(snap[r], bits::add_mod(init[r], deltas[r], 16));
+    }
+}
+
+#[test]
+fn logic_artifacts_match_host_ops() {
+    let rt = Runtime::load_dir(artifact_dir()).unwrap();
+    let mut rng = Rng::new(3);
+    let a: Vec<u32> = (0..128).map(|_| rng.below(1 << 16) as u32).collect();
+    let b: Vec<u32> = (0..128).map(|_| rng.below(1 << 16) as u32).collect();
+    for (name, f) in [
+        ("fast_and_128x16", (|x: u32, y: u32| x & y) as fn(u32, u32) -> u32),
+        ("fast_or_128x16", |x, y| x | y),
+        ("fast_xor_128x16", |x, y| x ^ y),
+    ] {
+        let got = rt.get(name).unwrap().exec2(&a, &b).unwrap();
+        for r in 0..128 {
+            assert_eq!(got[r], f(a[r], b[r]) & 0xFFFF, "{name} row {r}");
+        }
+    }
+}
