@@ -15,8 +15,8 @@ use fast_sram::util::rng::Rng;
 fn main() -> fast_sram::Result<()> {
     let rows = 1024; // 8 stacked macros
     let cfg = EngineConfig::new(rows, 16);
-    let engine = UpdateEngine::start(cfg, move || {
-        Ok(Box::new(FastBackend::new(8, 128, 16)))
+    let engine = UpdateEngine::start(cfg, move |plan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
     })?;
     let mut table = DeltaTable::new(engine);
 

@@ -25,14 +25,14 @@ fn main() -> fast_sram::Result<()> {
 
     // --- Layer 3 engine on the Layer-1/2 XLA artifacts -------------------
     let mut cfg = EngineConfig::new(rows, q);
-    cfg.flush_interval = Duration::from_micros(150);
+    cfg.seal_deadline = Duration::from_micros(150);
     cfg.queue_cap = 16_384;
-    let engine = UpdateEngine::start(cfg.clone(), move || {
-        Ok(Box::new(XlaBackend::new("artifacts", rows, q)?))
+    let engine = UpdateEngine::start(cfg.clone(), move |plan| {
+        Ok(Box::new(XlaBackend::new("artifacts", plan.rows, plan.q)?))
     })?;
     // Shadow engine on the behavioural model for end-to-end validation.
-    let shadow = UpdateEngine::start(cfg, move || {
-        Ok(Box::new(FastBackend::new(8, 128, q)))
+    let shadow = UpdateEngine::start(cfg, move |plan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
     })?;
 
     println!("e2e: XLA-backed engine up ({} rows x {q} bits, backend {})", rows, engine.stats().backend);

@@ -21,9 +21,13 @@ fn run(
     let rows = 1024;
     let cfg = EngineConfig::new(rows, 16);
     let engine = if fast {
-        UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(8, 128, 16))))?
+        UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+        })?
     } else {
-        UpdateEngine::start(cfg, move || Ok(Box::new(DigitalBackend::new(rows, 16))))?
+        UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(DigitalBackend::new(plan.rows, plan.q)))
+        })?
     };
     let mut ge = GraphEngine::new(graph, engine)?;
     ge.set_features(feats)?;

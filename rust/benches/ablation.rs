@@ -19,10 +19,10 @@ use fast_sram::util::rng::Rng;
 fn run_with_seal(rows: usize, seal: Option<usize>, updates: usize) -> (u64, f64, f64) {
     let mut cfg = EngineConfig::new(rows, 16);
     cfg.seal_at_rows = seal;
-    cfg.flush_interval = Duration::from_micros(300);
+    cfg.seal_deadline = Duration::from_micros(300);
     cfg.queue_cap = 16_384;
-    let e = UpdateEngine::start(cfg, move || {
-        Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, 16)))
+    let e = UpdateEngine::start(cfg, move |plan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
     })
     .unwrap();
     let mut rng = Rng::new(5);

@@ -36,10 +36,10 @@ fn main() {
     harness::section("engine end-to-end submit throughput (wall-clock)");
     for (label, rows) in [("1 bank / 128 rows", 128usize), ("8 banks / 1024 rows", 1024)] {
         let mut cfg = EngineConfig::new(rows, 16);
-        cfg.flush_interval = Duration::from_micros(200);
+        cfg.seal_deadline = Duration::from_micros(200);
         cfg.queue_cap = 65_536;
-        let engine = UpdateEngine::start(cfg, move || {
-            Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, 16)))
+        let engine = UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
         })
         .unwrap();
         let n = 200_000u64;
@@ -68,10 +68,10 @@ fn main() {
     {
         let rows = 1024usize;
         let mut cfg = EngineConfig::new(rows, 16);
-        cfg.flush_interval = Duration::from_micros(200);
+        cfg.seal_deadline = Duration::from_micros(200);
         cfg.queue_cap = 1024;
-        let engine = UpdateEngine::start(cfg, move || {
-            Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, 16)))
+        let engine = UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
         })
         .unwrap();
         let n = 400_000u64;

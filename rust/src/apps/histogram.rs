@@ -75,7 +75,10 @@ mod tests {
 
     fn engine(rows: usize) -> UpdateEngine {
         let cfg = EngineConfig::new(rows, 16);
-        UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(1, rows, 16)))).unwrap()
+        UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+        })
+        .unwrap()
     }
 
     #[test]

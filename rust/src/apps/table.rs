@@ -125,8 +125,8 @@ mod tests {
 
     fn table(rows: usize) -> DeltaTable {
         let cfg = EngineConfig::new(rows, 16);
-        let e = UpdateEngine::start(cfg, move || {
-            Ok(Box::new(FastBackend::new(rows.div_ceil(128).max(1), rows.min(128), 16)))
+        let e = UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
         })
         .unwrap();
         DeltaTable::new(e)

@@ -1,17 +1,32 @@
 //! Conventional 6T SRAM array: word-oriented storage with a single
 //! read/write port; all multi-row work is serialized through the port.
 
-use thiserror::Error;
+use std::fmt;
 
 use crate::util::bits;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum SramError {
-    #[error("row {0} out of range (rows = {1})")]
+    /// Row index out of range (index, rows).
     RowOutOfRange(usize, usize),
-    #[error("word {0:#x} exceeds {1}-bit width")]
+    /// Word value exceeds the array's bit width (word, width).
     WordTooWide(u32, usize),
 }
+
+impl fmt::Display for SramError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SramError::RowOutOfRange(r, rows) => {
+                write!(f, "row {r} out of range (rows = {rows})")
+            }
+            SramError::WordTooWide(w, q) => {
+                write!(f, "word {w:#x} exceeds {q}-bit width")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SramError {}
 
 /// A conventional 6T SRAM array of `rows` words of `q` bits.
 #[derive(Debug, Clone)]

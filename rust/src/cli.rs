@@ -120,7 +120,11 @@ experiment commands (regenerate the paper's tables/figures):
 
 system commands:
   serve        [--rows 1024] [--q 16] [--banks 8] [--updates 100000]
-               [--backend fast|digital|xla] run the update engine demo
+               [--backend fast|digital|xla]
+               [--shards 1]            worker shards (power of two; rows % shards == 0)
+               [--seal-deadline-us 100] group-commit deadline for open batches
+               [--seal-rows N]         size seal: batch seals at N touched rows
+               run the update engine demo
   validate     [--artifacts artifacts] [--trials 3]
                cross-check XLA artifacts vs host semantics
   info         [--artifacts artifacts]   list loaded artifacts

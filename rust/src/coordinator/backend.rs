@@ -55,6 +55,23 @@ impl FastBackend {
     pub fn new(banks: usize, rows_per_bank: usize, q: usize) -> Self {
         FastBackend { banks: BankSet::new(banks, rows_per_bank, q) }
     }
+
+    /// Size a bank set to an arbitrary logical row count (the shape a
+    /// shard of a striped row space gets): the fewest equal banks such
+    /// that no bank exceeds the 128-row macro height. Powers of two
+    /// and multiples of 128 get the natural layout (e.g. 1024 → 8×128,
+    /// 32 → 1×32); awkward counts split further (e.g. 1025 → 25×41)
+    /// rather than ever modeling an impossible >128-row macro.
+    pub fn with_rows(rows: usize, q: usize) -> Self {
+        assert!(rows >= 1);
+        // Starting at ceil(rows/128) guarantees rows/banks <= 128; the
+        // loop terminates because banks == rows always divides.
+        let mut banks = rows.div_ceil(crate::MACRO_ROWS);
+        while rows % banks != 0 {
+            banks += 1;
+        }
+        FastBackend::new(banks, rows / banks, q)
+    }
 }
 
 impl Backend for FastBackend {

@@ -26,14 +26,17 @@ pub struct Batch {
     pub requests: usize,
 }
 
-/// Why the batcher sealed a batch.
+/// Why a batch was sealed (group-commit accounting).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SealReason {
     /// A request of a different kind arrived.
     KindChange,
-    /// The touched-row threshold was reached.
+    /// The touched-row threshold was reached (size seal).
     Full,
-    /// The caller forced a flush (deadline or shutdown).
+    /// The group-commit deadline expired (bounded staleness).
+    Deadline,
+    /// The caller forced a flush (read, write, explicit flush,
+    /// shutdown).
     Forced,
 }
 

@@ -1,13 +1,39 @@
-//! The concurrent update engine — the Layer-3 system around the FAST
-//! macro: admission control, coalescing batcher, flush policy, worker
-//! thread, metrics.
+//! The sharded concurrent update engine — the Layer-3 system around
+//! the FAST macros: admission control, per-shard coalescing batchers,
+//! group-commit seal policy, worker threads, metrics.
 //!
-//! Lifecycle: `UpdateEngine::start(config, backend_factory)` spawns a
-//! worker thread that *constructs the backend inside the thread* (PJRT
-//! executables are not `Send`), then consumes commands from a bounded
-//! channel. Updates flow through the [`Batcher`]; batches flush when
-//! full (`seal_at_rows`), on a kind change, on the flush deadline, or
-//! when a read needs read-your-writes consistency.
+//! ## Sharding
+//!
+//! The paper's hardware updates *all 128 rows of a macro concurrently*;
+//! a single coordinator worker would serialize in software exactly what
+//! the array parallelizes. The engine therefore stripes the logical row
+//! space over `shards` independent shards (power of two). A row is
+//! routed by its low bits — `shard = row & (shards - 1)`, `local_row =
+//! row >> log2(shards)` — so contiguous and uniform workloads both
+//! spread evenly. Each shard owns:
+//!
+//! - a bounded command queue (admission control / backpressure),
+//! - a [`Batcher`] coalescing same-row deltas,
+//! - a worker thread,
+//! - a [`Backend`] instance over the shard's rows.
+//!
+//! Same-row requests always land on the same shard, so per-row order is
+//! program order. Cross-row ordering between shards is relaxed — the
+//! same contract a multi-bank memory gives the hardware.
+//!
+//! ## Group commit
+//!
+//! Each shard seals batches like a write-ahead log groups commits: a
+//! batch is sealed when it is *full* (`seal_at_rows` distinct rows),
+//! when a request of a different batch kind arrives, when the
+//! *seal deadline* expires (bounded staleness), or when a read needs
+//! read-your-writes consistency. One backend dispatch then applies the
+//! whole batch, amortizing dispatch cost the way group commit
+//! amortizes fsync.
+//!
+//! Lifecycle: `UpdateEngine::start(config, backend_factory)` spawns one
+//! worker per shard; each worker *constructs its backend inside the
+//! thread* (PJRT executables are not `Send`).
 //!
 //! Tokio is not in the offline vendor set (DESIGN.md §7) —
 //! `std::thread` + `mpsc::sync_channel` provide the same bounded-queue
@@ -19,49 +45,112 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail};
+use anyhow::{anyhow, ensure};
 
-use crate::metrics::{Counters, EnergyAccount, LatencyRecorder, LatencySummary};
+use crate::metrics::{
+    Counters, EnergyAccount, LatencyRecorder, LatencySummary, ShardCounters, ShardSnapshot,
+};
 use crate::Result;
 
 use super::backend::Backend;
-use super::batcher::Batcher;
+use super::batcher::{Batcher, SealReason};
 use super::request::UpdateRequest;
 
-/// Engine configuration.
+/// Engine configuration. All knobs have CLI flags on `fast serve`.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    /// Logical rows (must match the backend).
+    /// Logical rows across all shards (must match the summed backend
+    /// rows). Unit: rows. Must be divisible by `shards`.
     pub rows: usize,
-    /// Word width q.
+    /// Word width q. Unit: bits (1..=32).
     pub q: usize,
-    /// Seal a batch once this many distinct rows are touched.
-    /// `None` = seal only on kind change / deadline / read.
+    /// Worker shards. Unit: count; must be a power of two and divide
+    /// `rows`. Default 1 (single-worker, the pre-sharding behaviour).
+    /// Each shard owns the rows whose low bits equal its index.
+    pub shards: usize,
+    /// Group-commit size seal: seal a shard's batch once this many
+    /// distinct rows of the *logical* space are touched (each shard
+    /// seals at `max(1, seal_at_rows / shards)` of its own rows).
+    /// Unit: rows. `None` = seal only on kind change / deadline / read.
+    /// Default: 75% of the row space.
     pub seal_at_rows: Option<usize>,
-    /// Flush deadline for a non-empty open batch.
-    pub flush_interval: Duration,
-    /// Bounded command-queue depth (admission control).
+    /// Group-commit deadline seal: a non-empty open batch is flushed
+    /// this long after its first pending request (bounded staleness).
+    /// Unit: duration (CLI flag `--seal-deadline-us`). Default 100 µs.
+    pub seal_deadline: Duration,
+    /// Bounded per-shard command-queue depth (admission control).
+    /// Unit: commands. Default 4096.
     pub queue_cap: usize,
 }
 
 impl EngineConfig {
-    /// A sensible default for an R-row, q-bit array: seal at 75% of the
-    /// row space, 100 µs deadline, 4096-deep queue.
+    /// A sensible default for an R-row, q-bit array: one shard, seal at
+    /// 75% of the row space, 100 µs seal deadline, 4096-deep queue.
     pub fn new(rows: usize, q: usize) -> Self {
         EngineConfig {
             rows,
             q,
+            shards: 1,
             seal_at_rows: Some((rows * 3 / 4).max(1)),
-            flush_interval: Duration::from_micros(100),
+            seal_deadline: Duration::from_micros(100),
             queue_cap: 4096,
         }
     }
+
+    /// Default config striped over `shards` worker shards.
+    pub fn sharded(rows: usize, q: usize, shards: usize) -> Self {
+        let mut cfg = Self::new(rows, q);
+        cfg.shards = shards;
+        cfg
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(self.rows >= 1, "rows must be >= 1");
+        ensure!(self.shards >= 1, "shards must be >= 1, got {}", self.shards);
+        ensure!(
+            self.shards.is_power_of_two(),
+            "shards must be a power of two, got {}",
+            self.shards
+        );
+        ensure!(
+            self.rows % self.shards == 0,
+            "rows {} not divisible by shards {}",
+            self.rows,
+            self.shards
+        );
+        ensure!(self.queue_cap >= 1, "queue_cap must be >= 1");
+        Ok(())
+    }
+
+    /// log2(shards); valid after `validate`.
+    fn shard_bits(&self) -> u32 {
+        self.shards.trailing_zeros()
+    }
 }
+
+/// Identity of one engine shard, handed to the backend factory so it
+/// can size the backend to the shard's slice of the row space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Shard index in `0..shards`.
+    pub shard: usize,
+    /// Total shard count (power of two).
+    pub shards: usize,
+    /// Rows owned by this shard (`config.rows / shards`).
+    pub rows: usize,
+    /// Word width q (bits).
+    pub q: usize,
+}
+
+/// The factory that builds one backend per shard, invoked *on the
+/// shard's worker thread* (PJRT executables are not `Send`).
+pub type BackendFactory =
+    dyn Fn(&ShardPlan) -> Result<Box<dyn Backend>> + Send + Sync + 'static;
 
 enum Command {
     Submit(UpdateRequest),
     /// Amortizes channel crossings for bulk producers (one message per
-    /// chunk instead of per request).
+    /// chunk instead of per request). Rows are shard-local.
     SubmitMany(Vec<UpdateRequest>),
     Read(usize, SyncSender<Result<u32>>),
     Write(usize, u32, SyncSender<Result<()>>),
@@ -75,13 +164,22 @@ enum Command {
 pub struct EngineMetrics {
     pub counters: Counters,
     pub energy: EnergyAccount,
-    /// Wall-clock time spent applying batches.
+    /// Wall-clock time spent applying batches (all shards).
     pub apply_wall: LatencyRecorder,
+    /// Per-shard counters (group-commit seal reasons, queue depth, …).
+    pub shards: Vec<ShardCounters>,
     /// Modeled macro time in femtoseconds (ns × 1e6, atomically summed).
     modeled_fs: AtomicU64,
 }
 
 impl EngineMetrics {
+    fn new(shards: usize) -> Self {
+        EngineMetrics {
+            shards: (0..shards).map(|_| ShardCounters::default()).collect(),
+            ..Default::default()
+        }
+    }
+
     pub fn add_modeled_ns(&self, ns: f64) {
         self.modeled_fs
             .fetch_add((ns * 1e6).round() as u64, Ordering::Relaxed);
@@ -105,123 +203,285 @@ pub struct EngineStats {
     pub modeled_energy_pj: f64,
     pub apply_wall: LatencySummary,
     pub backend: &'static str,
+    /// Requests admitted but not yet drained by workers (all shards).
+    pub queue_depth: u64,
+    /// Per-shard breakdown (seal reasons, coalesce hits, queue depth).
+    pub shards: Vec<ShardSnapshot>,
 }
 
-/// Handle to a running update engine.
-pub struct UpdateEngine {
+struct ShardHandle {
     tx: SyncSender<Command>,
     worker: Option<JoinHandle<Result<()>>>,
+}
+
+/// Handle to a running update engine. Shareable across producer
+/// threads (`Arc<UpdateEngine>`): every submit path is `&self`.
+pub struct UpdateEngine {
+    shards: Vec<ShardHandle>,
+    shard_bits: u32,
     metrics: Arc<EngineMetrics>,
     backend_name: std::sync::OnceLock<&'static str>,
     cfg: EngineConfig,
 }
 
 impl UpdateEngine {
-    /// Start the engine. `backend_factory` runs on the worker thread.
+    /// Start the engine: one worker thread per shard, each building its
+    /// own backend via `backend_factory` (called on the worker thread
+    /// with that shard's [`ShardPlan`]).
     pub fn start<F>(cfg: EngineConfig, backend_factory: F) -> Result<Self>
     where
-        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+        F: Fn(&ShardPlan) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
-        let metrics = Arc::new(EngineMetrics::default());
-        let worker_metrics = Arc::clone(&metrics);
-        let worker_cfg = cfg.clone();
-        // Report the backend name back once it is constructed.
-        let (name_tx, name_rx) = mpsc::sync_channel(1);
-        let worker = std::thread::Builder::new()
-            .name("fast-update-engine".into())
-            .spawn(move || worker_loop(worker_cfg, rx, worker_metrics, backend_factory, name_tx))
-            .expect("spawning engine worker");
-        let backend_name = std::sync::OnceLock::new();
-        match name_rx.recv_timeout(Duration::from_secs(120)) {
-            Ok(Ok(name)) => {
-                let _ = backend_name.set(name);
-            }
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                return Err(e);
-            }
-            Err(_) => bail!("engine worker failed to start within 120 s"),
+        cfg.validate()?;
+        let factory: Arc<BackendFactory> = Arc::new(backend_factory);
+        let metrics = Arc::new(EngineMetrics::new(cfg.shards));
+        let shard_rows = cfg.rows / cfg.shards;
+        // Per-shard seal threshold: the config knob is expressed over
+        // the logical row space.
+        let seal_at_rows = cfg.seal_at_rows.map(|n| (n / cfg.shards).max(1));
+
+        let mut shards = Vec::with_capacity(cfg.shards);
+        let mut name_rxs = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
+            let (name_tx, name_rx) = mpsc::sync_channel(1);
+            let plan = ShardPlan { shard, shards: cfg.shards, rows: shard_rows, q: cfg.q };
+            let scfg = ShardConfig { seal_at_rows, seal_deadline: cfg.seal_deadline };
+            let worker_metrics = Arc::clone(&metrics);
+            let worker_factory = Arc::clone(&factory);
+            let worker = std::thread::Builder::new()
+                .name(format!("fast-shard-{shard}"))
+                .spawn(move || {
+                    worker_loop(plan, scfg, rx, worker_metrics, worker_factory, name_tx)
+                })
+                .expect("spawning engine shard worker");
+            shards.push(ShardHandle { tx, worker: Some(worker) });
+            name_rxs.push(name_rx);
         }
-        Ok(UpdateEngine { tx, worker: Some(worker), metrics, backend_name, cfg })
+
+        let mut engine = UpdateEngine {
+            shards,
+            shard_bits: cfg.shard_bits(),
+            metrics,
+            backend_name: std::sync::OnceLock::new(),
+            cfg,
+        };
+
+        // Collect every shard's construction outcome before going live.
+        for name_rx in name_rxs {
+            let outcome = match name_rx.recv_timeout(Duration::from_secs(120)) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => {
+                    Err(anyhow!("engine shard failed to start within 120 s"))
+                }
+                Err(RecvTimeoutError::Disconnected) => Err(anyhow!(
+                    "engine shard worker panicked during backend construction"
+                )),
+            };
+            match outcome {
+                Ok(name) => {
+                    let _ = engine.backend_name.set(name);
+                }
+                Err(e) => {
+                    // Tear the other shards down before reporting.
+                    let _ = engine.shutdown_inner();
+                    return Err(e);
+                }
+            }
+        }
+        Ok(engine)
     }
 
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
     }
 
-    /// Non-blocking submit. `Err` = queue full (backpressure) or engine
-    /// shut down; the request was NOT accepted.
+    /// Route a logical row to (shard, local row).
+    #[inline]
+    fn route(&self, row: usize) -> Result<(usize, usize)> {
+        ensure!(
+            row < self.cfg.rows,
+            "row {row} out of range (rows = {})",
+            self.cfg.rows
+        );
+        Ok((row & (self.cfg.shards - 1), row >> self.shard_bits))
+    }
+
+    /// Raise the queue gauge BEFORE sending, so the worker's decrement
+    /// (which may race ahead of us) can never underflow the counter.
+    /// Returns the raised depth; record it as a high-water mark only
+    /// once the send is admitted (rejected requests must not inflate
+    /// the mark past `queue_cap`).
+    #[inline]
+    fn gauge_add(&self, shard: usize, n: u64) -> u64 {
+        self.metrics.shards[shard]
+            .queue_depth
+            .fetch_add(n, Ordering::Relaxed)
+            + n
+    }
+
+    #[inline]
+    fn note_admitted(&self, shard: usize, n: u64, depth: u64) {
+        let sc = &self.metrics.shards[shard];
+        sc.queue_high_water.fetch_max(depth, Ordering::Relaxed);
+        Counters::inc(&sc.requests, n);
+    }
+
+    /// Roll the gauge back after a failed send.
+    #[inline]
+    fn gauge_sub(&self, shard: usize, n: u64) {
+        self.metrics.shards[shard]
+            .queue_depth
+            .fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Non-blocking submit. `Err` = queue full (backpressure), row out
+    /// of range, or engine shut down; the request was NOT accepted.
     pub fn submit(&self, req: UpdateRequest) -> Result<()> {
+        let (shard, local) = self.route(req.row)?;
         Counters::inc(&self.metrics.counters.requests_submitted, 1);
-        match self.tx.try_send(Command::Submit(req)) {
-            Ok(()) => Ok(()),
+        let mut req = req;
+        req.row = local;
+        let depth = self.gauge_add(shard, 1);
+        match self.shards[shard].tx.try_send(Command::Submit(req)) {
+            Ok(()) => {
+                self.note_admitted(shard, 1, depth);
+                Ok(())
+            }
             Err(TrySendError::Full(_)) => {
+                self.gauge_sub(shard, 1);
                 Counters::inc(&self.metrics.counters.requests_rejected, 1);
                 Err(anyhow!("queue full: request rejected (backpressure)"))
             }
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("engine is shut down")),
+            Err(TrySendError::Disconnected(_)) => {
+                self.gauge_sub(shard, 1);
+                Err(anyhow!("engine is shut down"))
+            }
         }
     }
 
     /// Blocking submit: waits for queue space (no rejection).
     pub fn submit_blocking(&self, req: UpdateRequest) -> Result<()> {
+        let (shard, local) = self.route(req.row)?;
         Counters::inc(&self.metrics.counters.requests_submitted, 1);
-        self.tx
-            .send(Command::Submit(req))
-            .map_err(|_| anyhow!("engine is shut down"))
+        let mut req = req;
+        req.row = local;
+        let depth = self.gauge_add(shard, 1);
+        if self.shards[shard].tx.send(Command::Submit(req)).is_err() {
+            self.gauge_sub(shard, 1);
+            return Err(anyhow!("engine is shut down"));
+        }
+        self.note_admitted(shard, 1, depth);
+        Ok(())
     }
 
-    /// Bulk blocking submit: one channel crossing for the whole chunk —
-    /// the fast path for high-rate producers (apps, benches).
+    /// Bulk blocking submit: requests are partitioned by shard and sent
+    /// as one chunk per shard — the fast path for high-rate producers.
+    ///
+    /// Failure contract: if a shard has died (backend fault) while
+    /// others are alive, chunks sent to healthy shards BEFORE the dead
+    /// one are already admitted when this returns `Err`. Do NOT retry
+    /// the same vector — that would double-apply the admitted updates;
+    /// treat the engine as failed and drain via [`Self::shutdown`].
     pub fn submit_many(&self, reqs: Vec<UpdateRequest>) -> Result<()> {
         if reqs.is_empty() {
             return Ok(());
         }
-        Counters::inc(&self.metrics.counters.requests_submitted, reqs.len() as u64);
-        self.tx
-            .send(Command::SubmitMany(reqs))
-            .map_err(|_| anyhow!("engine is shut down"))
+        let total = reqs.len() as u64;
+        let mut buckets: Vec<Vec<UpdateRequest>> = Vec::new();
+        buckets.resize_with(self.cfg.shards, Vec::new);
+        for mut req in reqs {
+            let (shard, local) = self.route(req.row)?;
+            req.row = local;
+            buckets[shard].push(req);
+        }
+        Counters::inc(&self.metrics.counters.requests_submitted, total);
+        for (shard, bucket) in buckets.into_iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let n = bucket.len() as u64;
+            let depth = self.gauge_add(shard, n);
+            if self.shards[shard].tx.send(Command::SubmitMany(bucket)).is_err() {
+                self.gauge_sub(shard, n);
+                return Err(anyhow!(
+                    "engine shard {shard} is down (earlier chunks of this bulk \
+                     submit may already be admitted — do not retry the batch)"
+                ));
+            }
+            self.note_admitted(shard, n, depth);
+        }
+        Ok(())
     }
 
-    /// Read a row with read-your-writes consistency (flushes first).
+    /// Read a row with read-your-writes consistency (flushes the
+    /// owning shard first; other shards keep batching).
     pub fn read(&self, row: usize) -> Result<u32> {
+        let (shard, local) = self.route(row)?;
         let (tx, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Command::Read(row, tx))
+        self.shards[shard]
+            .tx
+            .send(Command::Read(local, tx))
             .map_err(|_| anyhow!("engine is shut down"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
     }
 
-    /// Direct row write (conventional port; flushes pending batch first).
+    /// Direct row write (conventional port; flushes the owning shard's
+    /// pending batch first).
     pub fn write(&self, row: usize, value: u32) -> Result<()> {
+        let (shard, local) = self.route(row)?;
         let (tx, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Command::Write(row, value, tx))
+        self.shards[shard]
+            .tx
+            .send(Command::Write(local, value, tx))
             .map_err(|_| anyhow!("engine is shut down"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
     }
 
-    /// Force a flush and wait for it.
+    /// Force a flush on every shard and wait for all of them.
     pub fn flush(&self) -> Result<()> {
-        let (tx, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Command::Flush(tx))
-            .map_err(|_| anyhow!("engine is shut down"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped the reply"))
+        let mut waits = Vec::with_capacity(self.shards.len());
+        for h in &self.shards {
+            let (tx, rx) = mpsc::sync_channel(1);
+            h.tx
+                .send(Command::Flush(tx))
+                .map_err(|_| anyhow!("engine is shut down"))?;
+            waits.push(rx);
+        }
+        for rx in waits {
+            rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?;
+        }
+        Ok(())
     }
 
-    /// Consistent snapshot of all rows (flushes first).
+    /// Consistent snapshot of all rows (flushes every shard first).
+    /// "Consistent" = contains every request admitted before the call;
+    /// it does not serialize against concurrent producers.
     pub fn snapshot(&self) -> Result<Vec<u32>> {
-        let (tx, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Command::Snapshot(tx))
-            .map_err(|_| anyhow!("engine is shut down"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
+        let mut waits = Vec::with_capacity(self.shards.len());
+        for h in &self.shards {
+            let (tx, rx) = mpsc::sync_channel(1);
+            h.tx
+                .send(Command::Snapshot(tx))
+                .map_err(|_| anyhow!("engine is shut down"))?;
+            waits.push(rx);
+        }
+        let mut out = vec![0u32; self.cfg.rows];
+        for (shard, rx) in waits.into_iter().enumerate() {
+            let snap = rx
+                .recv()
+                .map_err(|_| anyhow!("engine dropped the reply"))??;
+            for (local, v) in snap.into_iter().enumerate() {
+                out[(local << self.shard_bits) | shard] = v;
+            }
+        }
+        Ok(out)
     }
 
     pub fn stats(&self) -> EngineStats {
         let c = self.metrics.counters.snapshot();
+        let shards: Vec<ShardSnapshot> =
+            self.metrics.shards.iter().map(ShardCounters::snapshot).collect();
         EngineStats {
             submitted: c.requests_submitted,
             completed: c.requests_completed,
@@ -233,23 +493,44 @@ impl UpdateEngine {
             modeled_energy_pj: self.metrics.energy.total_pj(),
             apply_wall: self.metrics.apply_wall.summary(),
             backend: self.backend_name.get().copied().unwrap_or("unknown"),
+            queue_depth: shards.iter().map(|s| s.queue_depth).sum(),
+            shards,
         }
     }
 
-    /// Graceful shutdown: flush, stop the worker, join.
+    /// Graceful shutdown: flush every shard, stop the workers, join.
     pub fn shutdown(mut self) -> Result<()> {
         self.shutdown_inner()
     }
 
     fn shutdown_inner(&mut self) -> Result<()> {
-        if let Some(worker) = self.worker.take() {
-            let _ = self.tx.send(Command::Shutdown);
-            match worker.join() {
-                Ok(r) => r?,
-                Err(_) => bail!("engine worker panicked"),
+        let mut first_err = None;
+        for h in &self.shards {
+            let _ = h.tx.send(Command::Shutdown);
+        }
+        for h in &mut self.shards {
+            if let Some(worker) = h.worker.take() {
+                match worker.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                    Err(_) => {
+                        first_err =
+                            first_err.or(Some(anyhow!("engine shard worker panicked")))
+                    }
+                }
             }
         }
-        Ok(())
+        // All workers are joined and `&mut self` excludes concurrent
+        // producers, so any depth left over from the worker-death race
+        // (a send landing between a dead worker's drain and its
+        // receiver drop) is now provably stale — zero the gauges.
+        for sc in &self.metrics.shards {
+            sc.queue_depth.store(0, Ordering::Relaxed);
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -259,17 +540,25 @@ impl Drop for UpdateEngine {
     }
 }
 
-fn worker_loop<F>(
-    cfg: EngineConfig,
+/// Per-shard slice of the engine config.
+#[derive(Debug, Clone, Copy)]
+struct ShardConfig {
+    /// Shard-local size seal (already divided by the shard count).
+    seal_at_rows: Option<usize>,
+    seal_deadline: Duration,
+}
+
+fn worker_loop(
+    plan: ShardPlan,
+    cfg: ShardConfig,
     rx: Receiver<Command>,
     metrics: Arc<EngineMetrics>,
-    backend_factory: F,
+    factory: Arc<BackendFactory>,
     name_tx: SyncSender<Result<&'static str>>,
-) -> Result<()>
-where
-    F: FnOnce() -> Result<Box<dyn Backend>>,
-{
-    let mut backend = match backend_factory() {
+) -> Result<()> {
+    // `&dyn Fn` is callable; `Arc<dyn Fn>` is not (no Fn impl on Arc).
+    let factory = factory.as_ref();
+    let mut backend = match factory(&plan) {
         Ok(b) => {
             let _ = name_tx.send(Ok(b.name()));
             b
@@ -279,16 +568,12 @@ where
             return Ok(());
         }
     };
-    anyhow::ensure!(
-        backend.rows() == cfg.rows,
-        "backend rows {} != config rows {}",
-        backend.rows(),
-        cfg.rows
-    );
-    let mut batcher = Batcher::new(cfg.rows, cfg.q, cfg.seal_at_rows);
+    let mut batcher = Batcher::new(plan.rows, plan.q, cfg.seal_at_rows);
     let mut deadline: Option<Instant> = None;
+    let shard_counters = &metrics.shards[plan.shard];
 
     let apply_sealed = |batch: super::batcher::Batch,
+                        reason: SealReason,
                         backend: &mut Box<dyn Backend>|
      -> Result<()> {
         let applied = metrics
@@ -304,29 +589,44 @@ where
         Counters::inc(&metrics.counters.shift_cycles, applied.cycles);
         metrics.energy.add_fj(applied.cost.energy_fj);
         metrics.add_modeled_ns(applied.cost.latency_ns);
+        shard_counters.note_sealed(reason, batch.rows_touched as u64, batch.requests as u64);
         Ok(())
     };
-    let flush =
-        |batcher: &mut Batcher, backend: &mut Box<dyn Backend>| -> Result<()> {
-            if let Some(batch) = batcher.force_flush() {
-                apply_sealed(batch, backend)?;
-            }
-            Ok(())
-        };
+    let flush = |batcher: &mut Batcher,
+                 reason: SealReason,
+                 backend: &mut Box<dyn Backend>|
+     -> Result<()> {
+        if let Some(batch) = batcher.force_flush() {
+            apply_sealed(batch, reason, backend)?;
+        }
+        Ok(())
+    };
 
+    // The command loop runs inside a closure so that every exit path
+    // (clean shutdown, backend fault) falls through to the queue-gauge
+    // drain below.
+    let result = (|| -> Result<()> {
+    ensure!(
+        backend.rows() == plan.rows,
+        "backend rows {} != shard rows {} (shard {} of {})",
+        backend.rows(),
+        plan.rows,
+        plan.shard,
+        plan.shards
+    );
     loop {
         let cmd = match deadline {
             Some(d) => {
                 let now = Instant::now();
                 if now >= d {
-                    flush(&mut batcher, &mut backend)?;
+                    flush(&mut batcher, SealReason::Deadline, &mut backend)?;
                     deadline = None;
                     continue;
                 }
                 match rx.recv_timeout(d - now) {
                     Ok(c) => c,
                     Err(RecvTimeoutError::Timeout) => {
-                        flush(&mut batcher, &mut backend)?;
+                        flush(&mut batcher, SealReason::Deadline, &mut backend)?;
                         deadline = None;
                         continue;
                     }
@@ -341,22 +641,26 @@ where
 
         match cmd {
             Command::Submit(req) => {
+                shard_counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
                 if batcher.pending_rows() == 0 {
-                    deadline = Some(Instant::now() + cfg.flush_interval);
+                    deadline = Some(Instant::now() + cfg.seal_deadline);
                 }
-                if let Some((batch, _reason)) = batcher.push(req) {
-                    apply_sealed(batch, &mut backend)?;
+                if let Some((batch, reason)) = batcher.push(req) {
+                    apply_sealed(batch, reason, &mut backend)?;
                     deadline = if batcher.pending_rows() > 0 {
-                        Some(Instant::now() + cfg.flush_interval)
+                        Some(Instant::now() + cfg.seal_deadline)
                     } else {
                         None
                     };
                 }
             }
             Command::SubmitMany(reqs) => {
+                shard_counters
+                    .queue_depth
+                    .fetch_sub(reqs.len() as u64, Ordering::Relaxed);
                 for req in reqs {
-                    if let Some((batch, _reason)) = batcher.push(req) {
-                        apply_sealed(batch, &mut backend)?;
+                    if let Some((batch, reason)) = batcher.push(req) {
+                        apply_sealed(batch, reason, &mut backend)?;
                         deadline = None; // re-anchored below if still pending
                     }
                 }
@@ -364,39 +668,61 @@ where
                 // not extend it on later arrivals (bounded staleness).
                 if batcher.pending_rows() > 0 {
                     if deadline.is_none() {
-                        deadline = Some(Instant::now() + cfg.flush_interval);
+                        deadline = Some(Instant::now() + cfg.seal_deadline);
                     }
                 } else {
                     deadline = None;
                 }
             }
             Command::Read(row, reply) => {
-                flush(&mut batcher, &mut backend)?;
+                flush(&mut batcher, SealReason::Forced, &mut backend)?;
                 deadline = None;
                 let _ = reply.send(backend.read_row(row));
             }
             Command::Write(row, value, reply) => {
-                flush(&mut batcher, &mut backend)?;
+                flush(&mut batcher, SealReason::Forced, &mut backend)?;
                 deadline = None;
                 let _ = reply.send(backend.write_row(row, value));
             }
             Command::Flush(reply) => {
-                flush(&mut batcher, &mut backend)?;
+                flush(&mut batcher, SealReason::Forced, &mut backend)?;
                 deadline = None;
                 let _ = reply.send(());
             }
             Command::Snapshot(reply) => {
-                flush(&mut batcher, &mut backend)?;
+                flush(&mut batcher, SealReason::Forced, &mut backend)?;
                 deadline = None;
                 let _ = reply.send(backend.snapshot());
             }
             Command::Shutdown => {
-                flush(&mut batcher, &mut backend)?;
+                flush(&mut batcher, SealReason::Forced, &mut backend)?;
                 break;
             }
         }
     }
     Ok(())
+    })();
+
+    // Narrow the depth-gauge error window when the worker dies early
+    // (backend fault, rows mismatch): decrement for every queued
+    // submit this worker will never process. Producers whose send
+    // fails after the receiver drops roll their own increment back; a
+    // send that lands between this drain and the receiver drop leaks
+    // transiently and is zeroed by `shutdown_inner` after joins.
+    while let Ok(cmd) = rx.try_recv() {
+        match cmd {
+            Command::Submit(_) => {
+                shard_counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            }
+            Command::SubmitMany(reqs) => {
+                shard_counters
+                    .queue_depth
+                    .fetch_sub(reqs.len() as u64, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+    }
+    result
 }
 
 #[cfg(test)]
@@ -407,9 +733,13 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn engine(rows: usize, q: usize) -> UpdateEngine {
-        let cfg = EngineConfig::new(rows, q);
-        UpdateEngine::start(cfg, move || {
-            Ok(Box::new(FastBackend::new(rows.div_ceil(128).max(1), rows.min(128), q)))
+        sharded_engine(rows, q, 1)
+    }
+
+    fn sharded_engine(rows: usize, q: usize, shards: usize) -> UpdateEngine {
+        let cfg = EngineConfig::sharded(rows, q, shards);
+        UpdateEngine::start(cfg, move |plan: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
         })
         .unwrap()
     }
@@ -454,6 +784,61 @@ mod tests {
     }
 
     #[test]
+    fn sharded_stream_matches_host_semantics() {
+        for shards in [2usize, 4, 8] {
+            let rows = 256;
+            let q = 16;
+            let e = sharded_engine(rows, q, shards);
+            let mut rng = Rng::new(1000 + shards as u64);
+            let mut expect = vec![0u32; rows];
+            for _ in 0..4000 {
+                let row = rng.below(rows as u64) as usize;
+                let v = rng.below(1 << q) as u32;
+                if rng.chance(0.3) {
+                    e.submit_blocking(UpdateRequest::sub(row, v)).unwrap();
+                    expect[row] = bits::sub_mod(expect[row], v, q);
+                } else {
+                    e.submit_blocking(UpdateRequest::add(row, v)).unwrap();
+                    expect[row] = bits::add_mod(expect[row], v, q);
+                }
+            }
+            assert_eq!(e.snapshot().unwrap(), expect, "shards = {shards}");
+            let stats = e.stats();
+            assert_eq!(stats.completed, 4000);
+            assert_eq!(stats.shards.len(), shards);
+            let per_shard_batches: u64 = stats.shards.iter().map(|s| s.batches_sealed).sum();
+            assert_eq!(per_shard_batches, stats.batches);
+            e.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn sharded_reads_and_writes_route_correctly() {
+        let e = sharded_engine(256, 16, 4);
+        for row in [0usize, 1, 2, 3, 4, 127, 128, 255] {
+            e.write(row, (row as u32) + 7).unwrap();
+        }
+        for row in [0usize, 1, 2, 3, 4, 127, 128, 255] {
+            assert_eq!(e.read(row).unwrap(), (row as u32) + 7, "row {row}");
+        }
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn invalid_shard_configs_are_rejected() {
+        let factory =
+            |plan: &ShardPlan| -> Result<Box<dyn crate::coordinator::Backend>> {
+                Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+            };
+        // Not a power of two.
+        assert!(UpdateEngine::start(EngineConfig::sharded(128, 16, 3), factory).is_err());
+        // Does not divide the row space.
+        assert!(UpdateEngine::start(EngineConfig::sharded(100, 16, 8), factory).is_err());
+        // Zero shards.
+        assert!(UpdateEngine::start(EngineConfig::sharded(128, 16, 0), factory).is_err());
+    }
+
+    #[test]
     fn submit_many_matches_individual_submits() {
         let rows = 128;
         let q = 16;
@@ -484,14 +869,38 @@ mod tests {
     }
 
     #[test]
+    fn sharded_submit_many_partitions_by_shard() {
+        let rows = 256;
+        let q = 16;
+        let sharded = sharded_engine(rows, q, 4);
+        let single = engine(rows, q);
+        let mut rng = Rng::new(21);
+        let reqs: Vec<UpdateRequest> = (0..5000)
+            .map(|_| UpdateRequest::add(rng.below(rows as u64) as usize, rng.below(1 << q) as u32))
+            .collect();
+        for chunk in reqs.chunks(512) {
+            sharded.submit_many(chunk.to_vec()).unwrap();
+            single.submit_many(chunk.to_vec()).unwrap();
+        }
+        assert_eq!(sharded.snapshot().unwrap(), single.snapshot().unwrap());
+        sharded.shutdown().unwrap();
+        single.shutdown().unwrap();
+    }
+
+    #[test]
     fn deadline_flushes_without_reads() {
         let mut cfg = EngineConfig::new(128, 16);
-        cfg.flush_interval = Duration::from_millis(5);
+        cfg.seal_deadline = Duration::from_millis(5);
         cfg.seal_at_rows = None; // only the deadline can flush
-        let e = UpdateEngine::start(cfg, || Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
+        let e = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+        })
+        .unwrap();
         e.submit_blocking(UpdateRequest::add(0, 1)).unwrap();
         std::thread::sleep(Duration::from_millis(60));
-        assert_eq!(e.stats().batches, 1, "deadline flush did not fire");
+        let s = e.stats();
+        assert_eq!(s.batches, 1, "deadline flush did not fire");
+        assert_eq!(s.shards[0].sealed_deadline, 1, "seal reason must be Deadline");
         e.shutdown().unwrap();
     }
 
@@ -520,18 +929,31 @@ mod tests {
     }
 
     #[test]
+    fn queue_depth_gauge_drains_to_zero() {
+        let e = sharded_engine(256, 16, 2);
+        for r in 0..256 {
+            e.submit_blocking(UpdateRequest::add(r, 1)).unwrap();
+        }
+        e.flush().unwrap();
+        let s = e.stats();
+        assert_eq!(s.queue_depth, 0, "queue must drain after flush");
+        assert!(s.shards.iter().any(|sc| sc.queue_high_water > 0));
+        e.shutdown().unwrap();
+    }
+
+    #[test]
     fn shutdown_flushes_pending() {
         let mut cfg = EngineConfig::new(128, 16);
         cfg.seal_at_rows = None;
-        cfg.flush_interval = Duration::from_secs(3600); // never by deadline
-        let e = UpdateEngine::start(cfg, || Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
+        cfg.seal_deadline = Duration::from_secs(3600); // never by deadline
+        let e = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+        })
+        .unwrap();
         e.submit_blocking(UpdateRequest::add(0, 42)).unwrap();
         // give the worker a moment to drain the queue
         std::thread::sleep(Duration::from_millis(20));
         e.shutdown().unwrap();
-        // Batch applied at shutdown — verified via a fresh engine not
-        // possible (state dropped); instead assert via stats path in
-        // the deadline test. Here we just assert clean shutdown.
     }
 
     #[test]
@@ -539,10 +961,13 @@ mod tests {
         let mut cfg = EngineConfig::new(128, 16);
         cfg.queue_cap = 2;
         cfg.seal_at_rows = None;
-        cfg.flush_interval = Duration::from_secs(3600);
+        cfg.seal_deadline = Duration::from_secs(3600);
         // A slow backend would be needed to reliably fill the queue; we
         // simulate by pausing the worker with a flood from this thread.
-        let e = UpdateEngine::start(cfg, || Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
+        let e = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+        })
+        .unwrap();
         let mut rejected = 0;
         for i in 0..10_000 {
             if e.submit(UpdateRequest::add((i % 128) as usize, 1)).is_err() {
@@ -555,6 +980,20 @@ mod tests {
         let s = e.stats();
         assert_eq!(s.rejected, rejected);
         assert_eq!(s.submitted, 10_000);
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_submit_is_a_clean_error() {
+        let e = sharded_engine(256, 16, 4);
+        // Row 300 is out of range but would alias into shard space if
+        // unvalidated — must be rejected at admission instead.
+        assert!(e.submit(UpdateRequest::add(300, 1)).is_err());
+        assert!(e.submit_blocking(UpdateRequest::add(300, 1)).is_err());
+        assert!(e.submit_many(vec![UpdateRequest::add(300, 1)]).is_err());
+        // Engine still healthy.
+        e.submit_blocking(UpdateRequest::add(255, 2)).unwrap();
+        assert_eq!(e.read(255).unwrap(), 2);
         e.shutdown().unwrap();
     }
 }

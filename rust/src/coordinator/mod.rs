@@ -1,15 +1,17 @@
-//! Layer-3 coordinator: the concurrent update engine in front of the
-//! FAST macros (the system half of the paper's contribution).
+//! Layer-3 coordinator: the sharded concurrent update engine in front
+//! of the FAST macros (the system half of the paper's contribution).
 //!
-//! Pipeline: requests → admission (bounded queue) → [`Batcher`]
-//! (coalesce per row, one kind per batch) → [`BankSet`] / backend
-//! (fully-concurrent batch execution, per-bank clock gating) → metrics.
+//! Pipeline: requests → shard router (`row & (shards-1)`) → per-shard
+//! admission (bounded queue) → per-shard [`Batcher`] (coalesce per row,
+//! one kind per batch, group-commit seal policy) → [`BankSet`] /
+//! backend (fully-concurrent batch execution, per-bank clock gating)
+//! → metrics.
 //!
 //! - [`request`] — update ops, batch kinds, coalescing algebra
-//! - [`batcher`] — the coalescing batcher and its seal policy
+//! - [`batcher`] — the coalescing batcher and its seal reasons
 //! - [`bank`] — striping across 128-row macros, parallel execution
 //! - [`backend`] — behavioural / XLA-PJRT / digital-baseline executors
-//! - [`engine`] — worker thread, flush policy, backpressure, stats
+//! - [`engine`] — shard workers, seal policy, backpressure, stats
 
 pub mod backend;
 pub mod bank;
@@ -20,5 +22,7 @@ pub mod request;
 pub use backend::{AppliedBatch, Backend, DigitalBackend, FastBackend, XlaBackend};
 pub use bank::{BankApply, BankSet};
 pub use batcher::{Batch, Batcher, SealReason};
-pub use engine::{EngineConfig, EngineMetrics, EngineStats, UpdateEngine};
+pub use engine::{
+    BackendFactory, EngineConfig, EngineMetrics, EngineStats, ShardPlan, UpdateEngine,
+};
 pub use request::{BatchKind, UpdateOp, UpdateRequest};

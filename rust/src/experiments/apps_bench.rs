@@ -44,13 +44,15 @@ pub struct AppRun {
 
 fn engine(rows: usize, q: usize, fast: bool) -> Result<UpdateEngine> {
     let mut cfg = EngineConfig::new(rows, q);
-    cfg.flush_interval = Duration::from_micros(200);
+    cfg.seal_deadline = Duration::from_micros(200);
     if fast {
-        UpdateEngine::start(cfg, move || {
-            Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, q)))
+        UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
         })
     } else {
-        UpdateEngine::start(cfg, move || Ok(Box::new(DigitalBackend::new(rows, q))))
+        UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(DigitalBackend::new(plan.rows, plan.q)))
+        })
     }
 }
 

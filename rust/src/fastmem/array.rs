@@ -14,25 +14,65 @@
 //! semantics, and `cargo test` integration tests cross-check against
 //! the XLA-executed Pallas artifacts.
 
-use thiserror::Error;
+use std::fmt;
 
 use super::alu::AluOp;
 use super::cell::CellError;
 use super::route::{RouteError, RouteFabric};
 use super::row::{CycleStats, Row};
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ArrayError {
-    #[error("row index {0} out of range (rows = {1})")]
+    /// Row index out of range (index, rows).
     RowOutOfRange(usize, usize),
-    #[error("segment index {0} out of range (segments = {1})")]
+    /// Segment index out of range (index, segments).
     SegmentOutOfRange(usize, usize),
-    #[error("operand count {0} != enabled word count {1}")]
+    /// Operand count != enabled word count.
     OperandCount(usize, usize),
-    #[error("cell protocol error: {0}")]
-    Cell(#[from] CellError),
-    #[error("routing error: {0}")]
-    Route(#[from] RouteError),
+    /// A cell-level protocol violation surfaced through a batch op.
+    Cell(CellError),
+    /// A width-reconfiguration request was invalid.
+    Route(RouteError),
+}
+
+impl fmt::Display for ArrayError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArrayError::RowOutOfRange(r, rows) => {
+                write!(f, "row index {r} out of range (rows = {rows})")
+            }
+            ArrayError::SegmentOutOfRange(s, n) => {
+                write!(f, "segment index {s} out of range (segments = {n})")
+            }
+            ArrayError::OperandCount(got, want) => {
+                write!(f, "operand count {got} != enabled word count {want}")
+            }
+            ArrayError::Cell(e) => write!(f, "cell protocol error: {e}"),
+            ArrayError::Route(e) => write!(f, "routing error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ArrayError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArrayError::Cell(e) => Some(e),
+            ArrayError::Route(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<CellError> for ArrayError {
+    fn from(e: CellError) -> Self {
+        ArrayError::Cell(e)
+    }
+}
+
+impl From<RouteError> for ArrayError {
+    fn from(e: RouteError) -> Self {
+        ArrayError::Route(e)
+    }
 }
 
 /// Aggregate report for one batch operation (energy-model inputs).

@@ -21,7 +21,7 @@
 //! coordinator layers; the charge/leakage physics of the same cell live
 //! in [`crate::analog`].
 
-use thiserror::Error;
+use std::fmt;
 
 /// The three shift phases of Fig. 3c.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,18 +35,35 @@ pub enum Phase {
 }
 
 /// Errors raised by protocol violations in the cell model.
-#[derive(Debug, Error, PartialEq, Eq)]
+/// (thiserror is not in the offline vendor set — Display/Error are
+/// hand-written, same messages.)
+#[derive(Debug, PartialEq, Eq)]
 pub enum CellError {
     /// φ1 and φ2/φ2d asserted together (non-overlap violation).
-    #[error("switch hazard: φ1 overlaps φ2/φ2d — data would be lost")]
     SwitchHazard,
     /// Phase sequence violated (e.g. P2 without a preceding P1).
-    #[error("phase order violation: {0:?} after {1:?}")]
     PhaseOrder(Phase, Option<Phase>),
     /// Static read attempted while the loop is open (mid-shift).
-    #[error("read while inverter loop open (mid-shift datum is dynamic)")]
     DynamicRead,
 }
+
+impl fmt::Display for CellError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CellError::SwitchHazard => {
+                write!(f, "switch hazard: φ1 overlaps φ2/φ2d — data would be lost")
+            }
+            CellError::PhaseOrder(now, prev) => {
+                write!(f, "phase order violation: {now:?} after {prev:?}")
+            }
+            CellError::DynamicRead => {
+                write!(f, "read while inverter loop open (mid-shift datum is dynamic)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CellError {}
 
 /// Digital state of one 10T shiftable cell.
 #[derive(Debug, Clone)]

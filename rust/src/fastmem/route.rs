@@ -6,19 +6,40 @@
 //! form wider logical words. This module computes valid segment layouts
 //! and the reconfiguration cost the coordinator charges for switching.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum RouteError {
-    #[error("requested width {0} is not a multiple of the base word width {1}")]
+    /// Requested width is not a multiple of the base word width.
     NotMultipleOfBase(usize, usize),
-    #[error("requested width {0} exceeds the row width {1}")]
+    /// Requested width exceeds the row width.
     TooWide(usize, usize),
-    #[error("requested width {0} outside supported range [1, 32]")]
+    /// Requested width outside the supported range [1, 32].
     Unsupported(usize),
-    #[error("row width {0} is not a multiple of requested width {1}")]
+    /// Row width is not a multiple of the requested width.
     DoesNotTile(usize, usize),
 }
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::NotMultipleOfBase(w, base) => {
+                write!(f, "requested width {w} is not a multiple of the base word width {base}")
+            }
+            RouteError::TooWide(w, row) => {
+                write!(f, "requested width {w} exceeds the row width {row}")
+            }
+            RouteError::Unsupported(w) => {
+                write!(f, "requested width {w} outside supported range [1, 32]")
+            }
+            RouteError::DoesNotTile(row, w) => {
+                write!(f, "row width {row} is not a multiple of requested width {w}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
 
 /// Static description of a macro's routing fabric.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -22,18 +22,24 @@
 //! - [`baseline`] — the conventional 6T SRAM + near-memory digital
 //!   baseline the paper compares against (Fig. 9), plus a dual-port
 //!   row-by-row variant (Fig. 1a).
-//! - [`coordinator`] — the Layer-3 system contribution: a concurrent
-//!   update engine (router, batcher, bank manager, width planner) that
-//!   turns sparse update streams into fully-concurrent FAST batch ops.
+//! - [`coordinator`] — the Layer-3 system contribution: a *sharded*
+//!   concurrent update engine (shard router, per-shard coalescing
+//!   batchers with a group-commit seal policy, bank manager, width
+//!   planner) that turns sparse update streams into fully-concurrent
+//!   FAST batch ops without serializing them behind one worker.
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
-//!   functional artifacts (Layer 1/2).
+//!   functional artifacts (Layer 1/2); compiles against a clean-failing
+//!   stub unless built with `--features pjrt`.
 //! - [`apps`] — the workloads that motivate the paper: delta-update
 //!   table store (database), graph feature updates, histograms.
 //! - [`metrics`], [`util`] — supporting substrates.
 //!
-//! ## Quickstart
+//! See `docs/ARCHITECTURE.md` for the module → paper-artifact map and
+//! the dataflow diagram of the sharded pipeline.
 //!
-//! ```no_run
+//! ## Quickstart: the macro itself
+//!
+//! ```
 //! use fast_sram::fastmem::FastArray;
 //!
 //! // A 128-row, 16-bit FAST macro (the paper's showcase chip).
@@ -45,6 +51,26 @@
 //! deltas[0] = 1;
 //! array.batch_add(&deltas);
 //! assert_eq!(array.read_row(0), 42);
+//! ```
+//!
+//! ## Quickstart: the sharded update engine
+//!
+//! ```
+//! use fast_sram::coordinator::{EngineConfig, FastBackend, UpdateEngine, UpdateRequest};
+//!
+//! # fn main() -> fast_sram::Result<()> {
+//! // 256 logical rows striped over 4 worker shards; each shard gets
+//! // its own batcher, bounded queue and backend instance.
+//! let cfg = EngineConfig::sharded(256, 16, 4);
+//! let engine = UpdateEngine::start(cfg, |plan| {
+//!     Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+//! })?;
+//! engine.submit_blocking(UpdateRequest::add(7, 35))?;
+//! engine.submit_blocking(UpdateRequest::add(7, 7))?;
+//! assert_eq!(engine.read(7)?, 42); // read-your-writes: flushes shard 3
+//! engine.shutdown()?;
+//! # Ok(())
+//! # }
 //! ```
 
 pub mod analog;

