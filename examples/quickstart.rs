@@ -31,7 +31,9 @@ fn main() {
 
     // Subtract and logic ops ride the same datapath (Section III.E)...
     array.batch_sub(&deltas);
-    assert_eq!(array.snapshot(), init);
+    // peek_rows: verification read that does not touch the modeled
+    // conventional port (snapshot would count 128 port reads).
+    assert_eq!(array.peek_rows(), init);
     array.batch_logic(AluOp::Xor, &vec![0xFFFF; 128]);
     assert_eq!(array.read_row(0), !init[0] & 0xFFFF);
     array.batch_logic(AluOp::Xor, &vec![0xFFFF; 128]); // undo

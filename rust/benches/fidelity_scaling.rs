@@ -1,0 +1,185 @@
+//! Fidelity-scaling bench: batch-op throughput of the three model
+//! tiers (phase-accurate / word-fast / bit-plane) as the row count
+//! sweeps 128 / 1024 / 8192 — the acceptance bar for the bit-plane
+//! tier (≥ 20× the word-fast tier's row-ops/s at 8192 rows).
+//!
+//! Before timing anything, every size runs a short cross-tier
+//! equivalence check (values + lifetime toggle counters), so a tier
+//! that got fast by getting wrong fails here, not in the plot.
+//!
+//! Run: `cargo bench --bench fidelity_scaling`
+//! Writes: ../BENCH_fidelity_scaling.json (relative to rust/)
+//! Env: FAST_BENCH_SMOKE=1 shrinks iteration counts for CI smoke runs
+//! (sizes are unchanged so the acceptance ratio stays meaningful).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use fast_sram::fastmem::{FastArray, Fidelity};
+use fast_sram::util::rng::Rng;
+
+const Q: usize = 16;
+const SIZES: [usize; 3] = [128, 1024, 8192];
+
+/// Timed batches per (tier, rows) — scaled so each tier's run stays in
+/// sensible wall-clock territory while remaining measurable.
+fn batches_for(f: Fidelity, rows: usize, smoke: bool) -> usize {
+    let full = match f {
+        Fidelity::PhaseAccurate => match rows {
+            128 => 30,
+            1024 => 8,
+            _ => 3,
+        },
+        Fidelity::WordFast => match rows {
+            128 => 2000,
+            1024 => 400,
+            _ => 100,
+        },
+        Fidelity::BitPlane => match rows {
+            128 => 20_000,
+            1024 => 4000,
+            _ => 1000,
+        },
+    };
+    if smoke { (full / 10).max(1) } else { full }
+}
+
+/// Identical pseudo-random operand streams for every tier at a size.
+fn streams(rows: usize) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let mut rng = Rng::new(0xF1DE + rows as u64);
+    let init: Vec<u32> = (0..rows).map(|_| rng.below(1 << Q) as u32).collect();
+    let deltas = (0..4)
+        .map(|_| (0..rows).map(|_| rng.below(1 << Q) as u32).collect())
+        .collect();
+    (init, deltas)
+}
+
+/// Cross-tier equivalence check: same short batch sequence on all
+/// three tiers must yield identical state and toggle counters.
+fn verify(rows: usize) {
+    let (init, deltas) = streams(rows);
+    let mut arrays: Vec<FastArray> = [
+        Fidelity::PhaseAccurate,
+        Fidelity::WordFast,
+        Fidelity::BitPlane,
+    ]
+    .into_iter()
+    .map(|f| FastArray::with_fidelity(rows, Q, f))
+    .collect();
+    for a in &mut arrays {
+        a.load(&init);
+        for d in &deltas {
+            a.batch_add(d);
+        }
+    }
+    let want = arrays[0].peek_rows();
+    let want_toggles = arrays[0].toggles();
+    for a in &arrays[1..] {
+        assert_eq!(a.peek_rows(), want, "tier state diverged at {rows} rows");
+        assert_eq!(
+            a.toggles(),
+            want_toggles,
+            "tier toggle accounting diverged at {rows} rows"
+        );
+    }
+    println!("verify {rows:>5} rows: all tiers agree (values + toggles)");
+}
+
+struct TierResult {
+    rows: usize,
+    /// Tier label from `Fidelity`'s Display impl (single source of truth).
+    tier: String,
+    batches: usize,
+    wall_ms: f64,
+    row_ops_per_sec: f64,
+}
+
+fn bench_tier(rows: usize, fidelity: Fidelity, batches: usize) -> TierResult {
+    let (init, deltas) = streams(rows);
+    let mut a = FastArray::with_fidelity(rows, Q, fidelity);
+    a.load(&init);
+    a.batch_add(&deltas[0]); // warmup: allocator, lazy transpose
+    let t0 = Instant::now();
+    for i in 0..batches {
+        a.batch_add(&deltas[i % deltas.len()]);
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    // Defeat dead-code elimination through the result state.
+    assert!(std::hint::black_box(a.peek_word(0, 0).unwrap()) <= 0xFFFF);
+    TierResult {
+        rows,
+        tier: fidelity.to_string(),
+        batches,
+        wall_ms: wall * 1e3,
+        row_ops_per_sec: (rows * batches) as f64 / wall,
+    }
+}
+
+fn main() {
+    let smoke = harness::smoke_mode();
+    harness::section(&format!(
+        "fidelity scaling: rows {SIZES:?} x q={Q}, tiers phase/word/bitplane{}",
+        if smoke { " [smoke]" } else { "" }
+    ));
+
+    // Equivalence first: a fast-but-wrong tier must fail loudly.
+    for rows in SIZES {
+        verify(rows);
+    }
+
+    let mut results: Vec<TierResult> = Vec::new();
+    for rows in SIZES {
+        for f in [Fidelity::PhaseAccurate, Fidelity::WordFast, Fidelity::BitPlane] {
+            let r = bench_tier(rows, f, batches_for(f, rows, smoke));
+            println!(
+                "{:>5} rows | {:<8} | {:>6} batches | {:>9.2} ms | {:>14.0} row-ops/s",
+                r.rows, r.tier, r.batches, r.wall_ms, r.row_ops_per_sec
+            );
+            results.push(r);
+        }
+    }
+
+    let ops = |rows: usize, tier: &str| {
+        results
+            .iter()
+            .find(|r| r.rows == rows && r.tier == tier)
+            .expect("result present")
+            .row_ops_per_sec
+    };
+    let speedup = ops(8192, "bitplane") / ops(8192, "word");
+    let pass = speedup >= 20.0;
+    println!(
+        "\nacceptance: bitplane {:.0} vs word {:.0} row-ops/s at 8192 rows \
+         -> {:.1}x ({})",
+        ops(8192, "bitplane"),
+        ops(8192, "word"),
+        speedup,
+        if pass { "PASS" } else { "FAIL (need >= 20x)" }
+    );
+
+    let mut rows_json = String::new();
+    for r in &results {
+        if !rows_json.is_empty() {
+            rows_json.push_str(",\n");
+        }
+        rows_json.push_str(&format!(
+            "    {{\"rows\": {}, \"tier\": \"{}\", \"batches\": {}, \"wall_ms\": {:.3}, \"row_ops_per_sec\": {:.0}}}",
+            r.rows, r.tier, r.batches, r.wall_ms, r.row_ops_per_sec
+        ));
+    }
+    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let json = format!(
+        "{{\n  \"bench\": \"fidelity_scaling\",\n  \"status\": \"measured\",\n  \"mode\": \"{}\",\n  \"q\": {Q},\n  \"host_parallelism\": {host_threads},\n  \"results\": [\n{rows_json}\n  ],\n  \"acceptance\": {{\"criterion\": \"row_ops_per_sec(bitplane) >= 20 * row_ops_per_sec(word) at 8192 rows\", \"speedup\": {speedup:.1}, \"pass\": {pass}}}\n}}\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fidelity_scaling.json");
+    std::fs::write(out_path, json).expect("writing BENCH_fidelity_scaling.json");
+    println!("results written to {out_path}");
+
+    assert!(
+        pass,
+        "bit-plane tier must be >= 20x the word-fast tier at 8192 rows, got {speedup:.1}x"
+    );
+}

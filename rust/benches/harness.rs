@@ -49,6 +49,12 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// True when CI asked for the reduced-size smoke run
+/// (`FAST_BENCH_SMOKE=1`; any value other than "0" enables it).
+pub fn smoke_mode() -> bool {
+    std::env::var("FAST_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
 /// Simple throughput formatter.
 pub fn ops_per_sec(ops: u64, ns: f64) -> f64 {
     ops as f64 / (ns / 1e9)

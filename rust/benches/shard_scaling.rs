@@ -9,6 +9,7 @@
 //!
 //! Run: `cargo bench --bench shard_scaling`
 //! Writes: ../BENCH_shard_scaling.json (relative to rust/)
+//! Env: FAST_BENCH_SMOKE=1 shrinks the offered load for CI smoke runs.
 
 #[path = "harness.rs"]
 mod harness;
@@ -21,8 +22,11 @@ use fast_sram::util::rng::Rng;
 const ROWS: usize = 1024;
 const Q: usize = 16;
 const PRODUCERS: usize = 4;
-const UPDATES_PER_PRODUCER: usize = 100_000;
 const CHUNK: usize = 2048;
+
+fn updates_per_producer() -> usize {
+    if harness::smoke_mode() { 20_000 } else { 100_000 }
+}
 
 struct RunResult {
     shards: usize,
@@ -46,10 +50,11 @@ fn run(shards: usize) -> RunResult {
 
     // Pre-generate identical streams so every configuration sees the
     // same offered load.
+    let updates = updates_per_producer();
     let streams: Vec<Vec<UpdateRequest>> = (0..PRODUCERS)
         .map(|t| {
             let mut rng = Rng::new(7700 + t as u64);
-            (0..UPDATES_PER_PRODUCER)
+            (0..updates)
                 .map(|_| UpdateRequest::add(rng.below(ROWS as u64) as usize, 1 + rng.below(99) as u32))
                 .collect()
         })
@@ -70,7 +75,7 @@ fn run(shards: usize) -> RunResult {
     let wall = t0.elapsed();
 
     let s = engine.stats();
-    let total = (PRODUCERS * UPDATES_PER_PRODUCER) as u64;
+    let total = (PRODUCERS * updates) as u64;
     assert_eq!(s.completed, total, "no request may be dropped");
     let out = RunResult {
         shards,
@@ -88,8 +93,9 @@ fn run(shards: usize) -> RunResult {
 
 fn main() {
     let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let updates = updates_per_producer();
     harness::section(&format!(
-        "shard scaling: {ROWS} rows x {Q} bits, {PRODUCERS} producers x {UPDATES_PER_PRODUCER} updates (host parallelism {host_threads})"
+        "shard scaling: {ROWS} rows x {Q} bits, {PRODUCERS} producers x {updates} updates (host parallelism {host_threads})"
     ));
 
     let mut results = Vec::new();
@@ -126,8 +132,9 @@ fn main() {
         ));
     }
     let json = format!(
-        "{{\n  \"bench\": \"shard_scaling\",\n  \"status\": \"measured\",\n  \"rows\": {ROWS},\n  \"q\": {Q},\n  \"producers\": {PRODUCERS},\n  \"updates_total\": {},\n  \"host_parallelism\": {host_threads},\n  \"results\": [\n{rows_json}\n  ],\n  \"acceptance\": {{\"criterion\": \"ops_per_sec(shards=4) >= ops_per_sec(shards=1)\", \"pass\": {pass}}}\n}}\n",
-        PRODUCERS * UPDATES_PER_PRODUCER
+        "{{\n  \"bench\": \"shard_scaling\",\n  \"status\": \"measured\",\n  \"mode\": \"{}\",\n  \"rows\": {ROWS},\n  \"q\": {Q},\n  \"producers\": {PRODUCERS},\n  \"updates_total\": {},\n  \"host_parallelism\": {host_threads},\n  \"results\": [\n{rows_json}\n  ],\n  \"acceptance\": {{\"criterion\": \"ops_per_sec(shards=4) >= ops_per_sec(shards=1)\", \"pass\": {pass}}}\n}}\n",
+        if harness::smoke_mode() { "smoke" } else { "full" },
+        PRODUCERS * updates
     );
     let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_shard_scaling.json");
     std::fs::write(out_path, json).expect("writing BENCH_shard_scaling.json");

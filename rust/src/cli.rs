@@ -121,6 +121,10 @@ experiment commands (regenerate the paper's tables/figures):
 system commands:
   serve        [--rows 1024] [--q 16] [--banks 8] [--updates 100000]
                [--backend fast|digital|xla]
+               [--fidelity phase|word|bitplane]
+                                       model tier for --backend fast: phase-accurate,
+                                       word-fast (default), or bit-plane (bit-sliced,
+                                       64 rows per machine word)
                [--shards 1]            worker shards (power of two; rows % shards == 0)
                [--seal-deadline-us 100] group-commit deadline for open batches
                [--seal-rows N]         size seal: batch seals at N touched rows

@@ -2,7 +2,12 @@
 //!
 //! The engine is generic over *what actually applies a batch*:
 //!
-//! - [`FastBackend`] — the behavioural FAST bank set (phase-accurate)
+//! - [`FastBackend`] — the behavioural FAST bank set (word-fast by
+//!   default; phase-accurate per [`Fidelity`])
+//! - [`BitPlaneBackend`] — the bit-sliced tier: one transposed
+//!   [`BitPlaneArray`] spanning every bank, applying a batch to all
+//!   enabled rows in O(width · rows/64) word ops with per-bank
+//!   clock gating expressed as lane masks
 //! - [`XlaBackend`] — the AOT-compiled Pallas/JAX artifact executed via
 //!   PJRT (the functional fast-path; cross-validates the behavioural
 //!   model at scale)
@@ -17,11 +22,25 @@ use anyhow::Context;
 
 use crate::baseline::DigitalEngine;
 use crate::energy::{Cost, FastModel};
+use crate::fastmem::{BitPlaneArray, Fidelity};
 use crate::runtime::Runtime;
 use crate::Result;
 
 use super::bank::BankSet;
 use super::request::BatchKind;
+
+/// Split a logical row count into the fewest equal banks that fit the
+/// 128-row macro height (shared by every FAST-shaped backend).
+fn bank_split(rows: usize) -> (usize, usize) {
+    assert!(rows >= 1);
+    // Starting at ceil(rows/128) guarantees rows/banks <= 128; the
+    // loop terminates because banks == rows always divides.
+    let mut banks = rows.div_ceil(crate::MACRO_ROWS);
+    while rows % banks != 0 {
+        banks += 1;
+    }
+    (banks, rows / banks)
+}
 
 /// Result of applying one dense batch.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -46,14 +65,30 @@ pub trait Backend {
 // Behavioural FAST backend
 // ---------------------------------------------------------------------------
 
-/// Phase-accurate FAST macro banks.
+/// Behavioural FAST macro banks (word-fast or phase-accurate tier).
 pub struct FastBackend {
     banks: BankSet,
+    fidelity: Fidelity,
 }
 
 impl FastBackend {
     pub fn new(banks: usize, rows_per_bank: usize, q: usize) -> Self {
-        FastBackend { banks: BankSet::new(banks, rows_per_bank, q) }
+        Self::with_fidelity(banks, rows_per_bank, q, Fidelity::WordFast)
+    }
+
+    /// Bank set executing batches at the given fidelity tier. (For the
+    /// bit-plane tier prefer [`BitPlaneBackend`], which transposes the
+    /// *whole* bank set into one plane stack instead of per-bank.)
+    pub fn with_fidelity(
+        banks: usize,
+        rows_per_bank: usize,
+        q: usize,
+        fidelity: Fidelity,
+    ) -> Self {
+        FastBackend {
+            banks: BankSet::with_fidelity(banks, rows_per_bank, q, fidelity),
+            fidelity,
+        }
     }
 
     /// Size a bank set to an arbitrary logical row count (the shape a
@@ -63,20 +98,24 @@ impl FastBackend {
     /// 32 → 1×32); awkward counts split further (e.g. 1025 → 25×41)
     /// rather than ever modeling an impossible >128-row macro.
     pub fn with_rows(rows: usize, q: usize) -> Self {
-        assert!(rows >= 1);
-        // Starting at ceil(rows/128) guarantees rows/banks <= 128; the
-        // loop terminates because banks == rows always divides.
-        let mut banks = rows.div_ceil(crate::MACRO_ROWS);
-        while rows % banks != 0 {
-            banks += 1;
-        }
-        FastBackend::new(banks, rows / banks, q)
+        Self::with_rows_fidelity(rows, q, Fidelity::WordFast)
+    }
+
+    /// [`Self::with_rows`] at an explicit fidelity tier.
+    pub fn with_rows_fidelity(rows: usize, q: usize, fidelity: Fidelity) -> Self {
+        let (banks, rows_per_bank) = bank_split(rows);
+        FastBackend::with_fidelity(banks, rows_per_bank, q, fidelity)
     }
 }
 
 impl Backend for FastBackend {
     fn name(&self) -> &'static str {
-        "fast-behavioural"
+        match self.fidelity {
+            Fidelity::PhaseAccurate => "fast-phase-accurate",
+            // Historical name, kept stable for stats consumers.
+            Fidelity::WordFast => "fast-behavioural",
+            Fidelity::BitPlane => "fast-behavioural-bitplane",
+        }
     }
 
     fn rows(&self) -> usize {
@@ -106,6 +145,121 @@ impl Backend for FastBackend {
 
     fn snapshot(&mut self) -> Result<Vec<u32>> {
         Ok(self.banks.snapshot())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-plane (bit-sliced) backend
+// ---------------------------------------------------------------------------
+
+/// The bit-plane fidelity tier behind the coordinator API: the whole
+/// logical row space lives in one transposed [`BitPlaneArray`], and a
+/// dense batch commits to every enabled row in O(q · rows/64) word
+/// ops. Banks whose operand slice is all-identity are clock-gated
+/// exactly like [`super::bank::BankSet`] gates them — expressed here
+/// as cleared bits in the enabled-row lane mask — and the modeled cost
+/// is accounted identically (per active bank), so swapping tiers never
+/// changes the energy numbers.
+pub struct BitPlaneBackend {
+    plane: BitPlaneArray,
+    banks: usize,
+    rows_per_bank: usize,
+    q: usize,
+    model: FastModel,
+    /// Scratch lane mask rebuilt per batch (no per-call allocation).
+    enable: Vec<u64>,
+}
+
+impl BitPlaneBackend {
+    pub fn new(banks: usize, rows_per_bank: usize, q: usize) -> Self {
+        assert!(banks >= 1 && rows_per_bank >= 1);
+        let rows = banks * rows_per_bank;
+        BitPlaneBackend {
+            plane: BitPlaneArray::new(rows, &[q]),
+            banks,
+            rows_per_bank,
+            q,
+            model: FastModel::default(),
+            enable: vec![0u64; rows.div_ceil(64)],
+        }
+    }
+
+    /// Same bank-splitting policy as [`FastBackend::with_rows`].
+    pub fn with_rows(rows: usize, q: usize) -> Self {
+        let (banks, rows_per_bank) = bank_split(rows);
+        BitPlaneBackend::new(banks, rows_per_bank, q)
+    }
+}
+
+impl Backend for BitPlaneBackend {
+    fn name(&self) -> &'static str {
+        "fast-bitplane"
+    }
+
+    fn rows(&self) -> usize {
+        self.plane.rows()
+    }
+
+    fn q(&self) -> usize {
+        self.q
+    }
+
+    fn apply(&mut self, kind: BatchKind, operands: &[u32]) -> Result<AppliedBatch> {
+        anyhow::ensure!(
+            operands.len() == self.plane.rows(),
+            "operand count {} != rows {}",
+            operands.len(),
+            self.plane.rows()
+        );
+        let ident = kind.identity(self.q);
+        let rpb = self.rows_per_bank;
+        self.enable.fill(0);
+        let mut banks_active = 0usize;
+        for b in 0..self.banks {
+            let slice = &operands[b * rpb..(b + 1) * rpb];
+            if slice.iter().all(|&o| o == ident) {
+                continue; // clock-gated bank
+            }
+            banks_active += 1;
+            for r in b * rpb..(b + 1) * rpb {
+                self.enable[r / 64] |= 1u64 << (r % 64);
+            }
+        }
+        if banks_active == 0 {
+            return Ok(AppliedBatch::default());
+        }
+        let rep = self
+            .plane
+            .apply_masked(kind.alu_op(), operands, &self.enable);
+        // Cost accounting mirrors BankSet::apply term by term (summed
+        // per active bank, latency = max) so the downstream energy
+        // numbers are bit-identical across tiers.
+        let mut cost = Cost::default();
+        for _ in 0..banks_active {
+            let c = self.model.batch_op(rpb, self.q);
+            cost.energy_fj += c.energy_fj;
+            cost.latency_ns = cost.latency_ns.max(c.latency_ns);
+        }
+        Ok(AppliedBatch { cost, cycles: rep.cycles, banks_active })
+    }
+
+    fn read_row(&mut self, row: usize) -> Result<u32> {
+        anyhow::ensure!(row < self.plane.rows(), "row {row} out of range");
+        Ok(self.plane.read_word(row, 0))
+    }
+
+    fn write_row(&mut self, row: usize, value: u32) -> Result<()> {
+        anyhow::ensure!(row < self.plane.rows(), "row {row} out of range");
+        self.plane.write_word(row, 0, value & crate::util::bits::mask(self.q));
+        Ok(())
+    }
+
+    fn snapshot(&mut self) -> Result<Vec<u32>> {
+        // Block transpose-out: O(q · rows/64) instead of per-row
+        // single-bit probing.
+        let mut out = vec![0u32; self.plane.rows()];
+        self.plane.export_to(|r, _s, w| out[r] = w);
+        Ok(out)
     }
 }
 
@@ -294,6 +448,65 @@ mod tests {
         let mut b = FastBackend::new(2, 32, 16);
         exercise(&mut b);
         assert_eq!(b.name(), "fast-behavioural");
+    }
+
+    #[test]
+    fn bitplane_backend_semantics() {
+        let mut b = BitPlaneBackend::new(2, 32, 16);
+        exercise(&mut b);
+        assert_eq!(b.name(), "fast-bitplane");
+    }
+
+    #[test]
+    fn phase_fidelity_backend_semantics() {
+        let mut b = FastBackend::with_rows_fidelity(64, 16, Fidelity::PhaseAccurate);
+        exercise(&mut b);
+        assert_eq!(b.name(), "fast-phase-accurate");
+    }
+
+    #[test]
+    fn bitplane_backend_matches_fast_backend_costs_and_state() {
+        let mut fast = FastBackend::new(4, 32, 16);
+        let mut plane = BitPlaneBackend::new(4, 32, 16);
+        let mut rng = Rng::new(55);
+        for round in 0..6 {
+            // Rounds 0/1 dense, later rounds sparse (bank gating).
+            let ops: Vec<u32> = (0..128)
+                .map(|r| {
+                    if round < 2 || r % 37 == 0 {
+                        rng.below(1 << 16) as u32
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let kind = if round % 2 == 0 { BatchKind::Add } else { BatchKind::Xor };
+            let rf = fast.apply(kind, &ops).unwrap();
+            let rp = plane.apply(kind, &ops).unwrap();
+            assert_eq!(rf.banks_active, rp.banks_active, "round {round}");
+            assert_eq!(rf.cycles, rp.cycles, "round {round}");
+            assert_eq!(rf.cost, rp.cost, "costs must be bit-identical");
+            assert_eq!(
+                fast.snapshot().unwrap(),
+                plane.snapshot().unwrap(),
+                "round {round}"
+            );
+        }
+    }
+
+    #[test]
+    fn bitplane_backend_gates_identity_banks() {
+        let mut b = BitPlaneBackend::new(4, 16, 16);
+        let mut ops = vec![0u32; 64];
+        ops[5] = 9; // only bank 0 touched
+        let rep = b.apply(BatchKind::Add, &ops).unwrap();
+        assert_eq!(rep.banks_active, 1);
+        assert_eq!(rep.cycles, 16);
+        let one_bank = FastModel::default().batch_op(16, 16).energy_fj;
+        assert!((rep.cost.energy_fj - one_bank).abs() < 1e-9);
+        // All-identity batches are free.
+        let rep = b.apply(BatchKind::Add, &[0u32; 64]).unwrap();
+        assert_eq!(rep, AppliedBatch::default());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! banks are physically independent arrays.
 
 use crate::energy::{Cost, FastModel};
-use crate::fastmem::{BatchReport, FastArray};
+use crate::fastmem::{BatchReport, FastArray, Fidelity};
 use crate::Result;
 
 use super::request::BatchKind;
@@ -34,15 +34,40 @@ pub struct BankSet {
 }
 
 impl BankSet {
-    /// `banks` macros of `rows_per_bank` rows × `q` columns.
+    /// `banks` macros of `rows_per_bank` rows × `q` columns on the
+    /// word-fast tier.
     pub fn new(banks: usize, rows_per_bank: usize, q: usize) -> Self {
+        Self::with_fidelity(banks, rows_per_bank, q, Fidelity::WordFast)
+    }
+
+    /// Bank set whose macros execute batches at the given fidelity
+    /// tier (each bank is its own [`FastArray`], so the tier applies
+    /// per bank).
+    pub fn with_fidelity(
+        banks: usize,
+        rows_per_bank: usize,
+        q: usize,
+        fidelity: Fidelity,
+    ) -> Self {
         assert!(banks >= 1);
         BankSet {
-            arrays: (0..banks).map(|_| FastArray::new(rows_per_bank, q)).collect(),
+            arrays: (0..banks)
+                .map(|_| FastArray::with_fidelity(rows_per_bank, q, fidelity))
+                .collect(),
             rows_per_bank,
             q,
             model: FastModel::default(),
         }
+    }
+
+    /// Non-counting snapshot of every row (cf. [`Self::snapshot`],
+    /// which models real conventional-port reads).
+    pub fn peek_rows(&self) -> Vec<u32> {
+        let mut v = Vec::with_capacity(self.rows());
+        for a in &self.arrays {
+            v.extend(a.peek_rows());
+        }
+        v
     }
 
     pub fn rows(&self) -> usize {

@@ -10,7 +10,8 @@
 //! - [`request`] — update ops, batch kinds, coalescing algebra
 //! - [`batcher`] — the coalescing batcher and its seal reasons
 //! - [`bank`] — striping across 128-row macros, parallel execution
-//! - [`backend`] — behavioural / XLA-PJRT / digital-baseline executors
+//! - [`backend`] — behavioural / bit-plane / XLA-PJRT / digital-baseline
+//!   executors (fidelity tier selectable per shard)
 //! - [`engine`] — shard workers, seal policy, backpressure, stats
 
 pub mod backend;
@@ -19,7 +20,9 @@ pub mod batcher;
 pub mod engine;
 pub mod request;
 
-pub use backend::{AppliedBatch, Backend, DigitalBackend, FastBackend, XlaBackend};
+pub use backend::{
+    AppliedBatch, Backend, BitPlaneBackend, DigitalBackend, FastBackend, XlaBackend,
+};
 pub use bank::{BankApply, BankSet};
 pub use batcher::{Batch, Batcher, SealReason};
 pub use engine::{

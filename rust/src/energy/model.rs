@@ -317,6 +317,28 @@ mod tests {
     }
 
     #[test]
+    fn measured_cost_identical_across_fidelity_tiers() {
+        // The activity-scaled energy model consumes BatchReports; the
+        // bit-plane tier derives its toggle/eval counts analytically
+        // from plane popcounts, so the resulting Costs must be
+        // bit-identical to the word-fast tier's, not just close.
+        use crate::fastmem::{FastArray, Fidelity};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(12);
+        let init: Vec<u32> = (0..128).map(|_| rng.below(1 << 16) as u32).collect();
+        let deltas: Vec<u32> = (0..128).map(|_| rng.below(1 << 16) as u32).collect();
+        let m = FastModel::default();
+        let mut costs = Vec::new();
+        for f in [Fidelity::WordFast, Fidelity::BitPlane] {
+            let mut a = FastArray::with_fidelity(128, 16, f);
+            a.load(&init);
+            let report = a.batch_add(&deltas);
+            costs.push(m.batch_op_measured(&report, 128, 16));
+        }
+        assert_eq!(costs[0], costs[1], "tier change must not move energy numbers");
+    }
+
+    #[test]
     fn measured_report_close_to_analytic_at_half_activity() {
         use crate::fastmem::FastArray;
         use crate::util::rng::Rng;

@@ -1,0 +1,505 @@
+//! Bit-plane (bit-sliced) representation of a FAST array — the third
+//! fidelity tier beneath the phase-accurate and word-fast paths.
+//!
+//! The paper's headline property is that one q-bit batch op commits to
+//! **all enabled rows concurrently**; the phase-accurate and word-fast
+//! software models still pay O(rows) scalar work per batch. This module
+//! transposes the array: each word segment is stored as `width`
+//! *bitplanes* of `ceil(rows/64)` u64 lanes, so bit `t` of row `j`
+//! lives in bit `j % 64` of `planes[t][j / 64]`. A batch op then runs
+//! as SIMD-within-a-register bitwise/ripple-carry arithmetic over
+//! planes — O(width · rows/64) word ops — which is exactly the
+//! transposed-layout trick bit-parallel SRAM CiM designs use to get
+//! row-wise concurrency in the digital domain (Lee et al.,
+//! arXiv:2008.03378; rCiM exploration, arXiv:2411.09546).
+//!
+//! Enabled-row sets are u64 lane masks, mirroring the hardware's
+//! per-row shift-clock gates: disabled rows neither change state nor
+//! burn modeled energy.
+//!
+//! ## Energy accounting survives the transposition
+//!
+//! [`BatchReport`] numbers must be *bit-identical* to the word-fast
+//! path so the downstream [`crate::energy::model`] sees the same
+//! activity factors. The word path counts, per shift cycle `t`,
+//! `2 · popcount(w_{t+1} XOR w_t)` cell toggles where
+//! `w_{t+1} = (w_t >> 1) | (out_t << (width-1))`. Writing `v` for the
+//! pre-batch word and `r` for the result word (`out_t` is always
+//! result bit `t` — ripple-carry adders and bitwise ALUs both emit the
+//! final bit the cycle they consume it), the per-cycle XOR telescopes
+//! into three families of plane differences:
+//!
+//! - `v_j XOR v_{j+1}` appears in cycles `t ≤ j` → weight `j+1`;
+//! - the ALU boundary `v_{w-1} XOR r_0` appears every cycle → weight `w`;
+//! - `r_k XOR r_{k+1}` appears in cycles `t > k` → weight `w-1-k`.
+//!
+//! So `cell_toggles = 2 · [Σ_j (j+1)·cnt(V_j ⊕ V_{j+1})
+//! + w·cnt(V_{w-1} ⊕ R_0) + Σ_k (w-1-k)·cnt(R_k ⊕ R_{k+1})]` where
+//! `cnt` is a masked popcount over the enabled-row lanes — derived
+//! analytically from plane popcounts, no per-cycle state needed.
+//! `alu_evals` is `width · enabled_rows` per segment, as in the word
+//! path. The equivalence (values *and* reports) is enforced by
+//! `rust/tests/integration_fidelity.rs` property tests.
+
+use super::alu::AluOp;
+use super::array::BatchReport;
+use crate::util::bits::transpose64;
+
+/// Bit-sliced storage for one segment: `width` planes × `lanes` u64s.
+#[derive(Debug, Clone)]
+struct SegPlanes {
+    width: usize,
+    /// `planes[t][l]`: bit `j` of lane word `l` is row `64·l + j`'s
+    /// bit `t`.
+    planes: Vec<Vec<u64>>,
+}
+
+/// A bit-sliced FAST array: the same logical state as a `rows`-high
+/// stack of [`super::row::Row`]s, stored transposed for row-parallel
+/// software execution.
+#[derive(Debug, Clone)]
+pub struct BitPlaneArray {
+    rows: usize,
+    lanes: usize,
+    segs: Vec<SegPlanes>,
+    /// Per-lane validity mask (all-ones except the partial last lane).
+    valid: Vec<u64>,
+    /// Total cell toggles accounted by plane ops (activity factor).
+    toggles: u64,
+    // Scratch reused across batch ops so the hot path never allocates.
+    scratch_ops: Vec<Vec<u64>>,
+    scratch_res: Vec<Vec<u64>>,
+    scratch_carry: Vec<u64>,
+}
+
+impl BitPlaneArray {
+    /// An all-zero array of `rows` rows where each row is partitioned into
+    /// word segments of the given widths (LSB-side first), matching
+    /// [`super::row::Row::with_segments`].
+    pub fn new(rows: usize, seg_widths: &[usize]) -> Self {
+        assert!(rows >= 1, "array needs at least one row");
+        assert!(!seg_widths.is_empty(), "row needs at least one segment");
+        assert!(
+            seg_widths.iter().all(|&w| (1..=32).contains(&w)),
+            "segment widths must be in [1,32], got {seg_widths:?}"
+        );
+        let lanes = rows.div_ceil(64);
+        let mut valid = vec![u64::MAX; lanes];
+        if rows % 64 != 0 {
+            valid[lanes - 1] = (1u64 << (rows % 64)) - 1;
+        }
+        let max_w = *seg_widths.iter().max().expect("non-empty");
+        BitPlaneArray {
+            rows,
+            lanes,
+            segs: seg_widths
+                .iter()
+                .map(|&w| SegPlanes { width: w, planes: vec![vec![0u64; lanes]; w] })
+                .collect(),
+            valid,
+            toggles: 0,
+            scratch_ops: vec![vec![0u64; lanes]; max_w],
+            scratch_res: vec![vec![0u64; lanes]; max_w],
+            scratch_carry: vec![0u64; lanes],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// u64 lanes per plane (`ceil(rows/64)`).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn segment_widths(&self) -> Vec<usize> {
+        self.segs.iter().map(|s| s.width).collect()
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Lane mask with every row enabled (the full-batch case).
+    pub fn full_mask(&self) -> Vec<u64> {
+        self.valid.clone()
+    }
+
+    /// Total cell toggles accounted by plane batch ops.
+    pub fn toggles(&self) -> u64 {
+        self.toggles
+    }
+
+    /// Read segment `seg` of `row` as a word (LSB = plane 0).
+    pub fn read_word(&self, row: usize, seg: usize) -> u32 {
+        assert!(row < self.rows, "row {row} out of range ({})", self.rows);
+        let (l, off) = (row / 64, row % 64);
+        let s = &self.segs[seg];
+        let mut w = 0u32;
+        for (t, plane) in s.planes.iter().enumerate() {
+            w |= (((plane[l] >> off) & 1) as u32) << t;
+        }
+        w
+    }
+
+    /// Write segment `seg` of `row` (masked to the segment width).
+    pub fn write_word(&mut self, row: usize, seg: usize, word: u32) {
+        assert!(row < self.rows, "row {row} out of range ({})", self.rows);
+        let (l, off) = (row / 64, row % 64);
+        let s = &mut self.segs[seg];
+        for (t, plane) in s.planes.iter_mut().enumerate() {
+            if (word >> t) & 1 == 1 {
+                plane[l] |= 1u64 << off;
+            } else {
+                plane[l] &= !(1u64 << off);
+            }
+        }
+    }
+
+    /// Bulk transpose-in: overwrite the whole array from a word getter
+    /// (`get(row, seg)`), 64 rows per [`transpose64`] call.
+    pub fn fill_from(&mut self, mut get: impl FnMut(usize, usize) -> u32) {
+        let mut buf = [0u64; 64];
+        for (si, s) in self.segs.iter_mut().enumerate() {
+            for l in 0..self.lanes {
+                let base = l * 64;
+                let take = 64.min(self.rows - base);
+                for (k, slot) in buf.iter_mut().enumerate() {
+                    *slot = if k < take { get(base + k, si) as u64 } else { 0 };
+                }
+                transpose64(&mut buf);
+                for (t, plane) in s.planes.iter_mut().enumerate() {
+                    plane[l] = buf[t] & self.valid[l];
+                }
+            }
+        }
+    }
+
+    /// Bulk transpose-out: present every row word to `put(row, seg, w)`.
+    pub fn export_to(&self, mut put: impl FnMut(usize, usize, u32)) {
+        let mut buf = [0u64; 64];
+        for (si, s) in self.segs.iter().enumerate() {
+            for l in 0..self.lanes {
+                let base = l * 64;
+                let take = 64.min(self.rows - base);
+                for (t, slot) in buf.iter_mut().enumerate() {
+                    *slot = if t < s.width { s.planes[t][l] } else { 0 };
+                }
+                transpose64(&mut buf);
+                for (k, &w) in buf.iter().enumerate().take(take) {
+                    put(base + k, si, w as u32);
+                }
+            }
+        }
+    }
+
+    /// Batch op over **all** rows: one operand per (row, segment),
+    /// row-major (`operands[row * segments + seg]`). Semantics and
+    /// [`BatchReport`] accounting are bit-identical to
+    /// [`super::array::FastArray::batch_apply_segmented`] on the
+    /// word-fast tier.
+    pub fn apply(&mut self, op: AluOp, operands: &[u32]) -> BatchReport {
+        self.apply_inner(op, operands, None)
+    }
+
+    /// Batch op restricted to an enabled-row set, given as a u64 lane
+    /// mask (bit `j` of `enable[l]` enables row `64·l + j`). Disabled
+    /// rows keep their state and contribute neither toggles nor ALU
+    /// evaluations — the software mirror of per-row shift-clock gating.
+    pub fn apply_masked(&mut self, op: AluOp, operands: &[u32], enable: &[u64]) -> BatchReport {
+        assert_eq!(enable.len(), self.lanes, "one enable word per lane");
+        self.apply_inner(op, operands, Some(enable))
+    }
+
+    fn apply_inner(
+        &mut self,
+        op: AluOp,
+        operands: &[u32],
+        enable: Option<&[u64]>,
+    ) -> BatchReport {
+        let nsegs = self.segs.len();
+        assert_eq!(
+            operands.len(),
+            self.rows * nsegs,
+            "one operand per (row, segment)"
+        );
+        // Effective per-lane mask: requested enables, clipped to rows
+        // that exist (the partial last lane).
+        let lane_mask = |l: usize| match enable {
+            Some(e) => e[l] & self.valid[l],
+            None => self.valid[l],
+        };
+
+        let mut report = BatchReport::default();
+        let enabled_rows: u64 = (0..self.lanes)
+            .map(|l| lane_mask(l).count_ones() as u64)
+            .sum();
+        report.rows_active = enabled_rows;
+
+        let mut buf = [0u64; 64];
+        for (si, seg) in self.segs.iter_mut().enumerate() {
+            let w = seg.width;
+            report.cycles = report.cycles.max(w as u64);
+            report.alu_evals += w as u64 * enabled_rows;
+
+            // 1. Transpose the operand column for this segment into
+            //    the operand planes (scratch). Fully-gated lanes are
+            //    skipped here and in steps 2/4 — their results are
+            //    never read (step 3 skips them too), mirroring the
+            //    clock-gated banks doing no work in hardware.
+            for l in 0..self.lanes {
+                if lane_mask(l) == 0 {
+                    continue;
+                }
+                let base = l * 64;
+                let take = 64.min(self.rows - base);
+                for (k, slot) in buf.iter_mut().enumerate() {
+                    *slot = if k < take {
+                        operands[(base + k) * nsegs + si] as u64
+                    } else {
+                        0
+                    };
+                }
+                transpose64(&mut buf);
+                for (t, plane) in self.scratch_ops.iter_mut().enumerate().take(w) {
+                    plane[l] = buf[t];
+                }
+            }
+
+            // 2. Result planes, O(width · lanes) word ops.
+            match op {
+                AluOp::Add | AluOp::Sub => {
+                    // Ripple carry across bit positions; every lane
+                    // word carries 64 independent row adders. Sub is
+                    // the same FA with the operand inverted and the
+                    // carry latch seeded to 1 (two's complement).
+                    let inv = op == AluOp::Sub;
+                    let seed = if inv { u64::MAX } else { 0 };
+                    self.scratch_carry.fill(seed);
+                    for t in 0..w {
+                        let vp = &seg.planes[t];
+                        let bp = &self.scratch_ops[t];
+                        let rp = &mut self.scratch_res[t];
+                        for l in 0..self.lanes {
+                            if lane_mask(l) == 0 {
+                                continue; // gated lane: carry unused
+                            }
+                            let v = vp[l];
+                            let b = if inv { !bp[l] } else { bp[l] };
+                            let c = self.scratch_carry[l];
+                            rp[l] = v ^ b ^ c;
+                            self.scratch_carry[l] = (v & b) | (c & (v | b));
+                        }
+                    }
+                }
+                AluOp::And | AluOp::Or | AluOp::Xor => {
+                    for t in 0..w {
+                        let vp = &seg.planes[t];
+                        let bp = &self.scratch_ops[t];
+                        let rp = &mut self.scratch_res[t];
+                        for l in 0..self.lanes {
+                            if lane_mask(l) == 0 {
+                                continue;
+                            }
+                            rp[l] = match op {
+                                AluOp::And => vp[l] & bp[l],
+                                AluOp::Or => vp[l] | bp[l],
+                                _ => vp[l] ^ bp[l],
+                            };
+                        }
+                    }
+                }
+                AluOp::Pass => {
+                    // Pure rotation: the result equals the stored word.
+                    for t in 0..w {
+                        self.scratch_res[t].copy_from_slice(&seg.planes[t]);
+                    }
+                }
+            }
+
+            // 3. Analytic toggle count from plane popcounts (see the
+            //    module docs for the derivation).
+            let mut tog = 0u64;
+            for l in 0..self.lanes {
+                let m = lane_mask(l);
+                if m == 0 {
+                    continue;
+                }
+                for j in 0..w - 1 {
+                    let d = (seg.planes[j][l] ^ seg.planes[j + 1][l]) & m;
+                    tog += (j as u64 + 1) * d.count_ones() as u64;
+                }
+                let boundary = (seg.planes[w - 1][l] ^ self.scratch_res[0][l]) & m;
+                tog += w as u64 * boundary.count_ones() as u64;
+                for k in 0..w - 1 {
+                    let d = (self.scratch_res[k][l] ^ self.scratch_res[k + 1][l]) & m;
+                    tog += (w as u64 - 1 - k as u64) * d.count_ones() as u64;
+                }
+            }
+            report.cell_toggles += 2 * tog;
+
+            // 4. Commit result bits on enabled rows only.
+            for t in 0..w {
+                let rp = &self.scratch_res[t];
+                let vp = &mut seg.planes[t];
+                for l in 0..self.lanes {
+                    let m = lane_mask(l);
+                    if m == 0 {
+                        continue;
+                    }
+                    vp[l] = (rp[l] & m) | (vp[l] & !m);
+                }
+            }
+        }
+        self.toggles += report.cell_toggles;
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn word_roundtrip_and_partial_lane() {
+        for rows in [1usize, 63, 64, 65, 130] {
+            let mut a = BitPlaneArray::new(rows, &[16]);
+            assert_eq!(a.lanes(), rows.div_ceil(64));
+            for r in 0..rows {
+                a.write_word(r, 0, (r as u32).wrapping_mul(2654435761) & 0xFFFF);
+            }
+            for r in 0..rows {
+                let want = (r as u32).wrapping_mul(2654435761) & 0xFFFF;
+                assert_eq!(a.read_word(r, 0), want, "rows={rows} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_and_export_are_inverse() {
+        let rows = 100;
+        let mut a = BitPlaneArray::new(rows, &[8, 8]);
+        let word = |r: usize, s: usize| ((r * 37 + s * 101 + 5) as u32) & 0xFF;
+        a.fill_from(word);
+        for r in 0..rows {
+            assert_eq!(a.read_word(r, 0), word(r, 0));
+            assert_eq!(a.read_word(r, 1), word(r, 1));
+        }
+        let mut seen = vec![0u32; rows * 2];
+        a.export_to(|r, s, w| seen[r * 2 + s] = w);
+        for r in 0..rows {
+            assert_eq!(seen[r * 2], word(r, 0), "r={r}");
+            assert_eq!(seen[r * 2 + 1], word(r, 1), "r={r}");
+        }
+    }
+
+    #[test]
+    fn apply_matches_host_word_semantics() {
+        let mut rng = Rng::new(31);
+        for rows in [5usize, 64, 129] {
+            for op in [AluOp::Add, AluOp::Sub, AluOp::And, AluOp::Or, AluOp::Xor] {
+                let q = 16;
+                let mut a = BitPlaneArray::new(rows, &[q]);
+                let init: Vec<u32> = (0..rows).map(|_| rng.below(1 << q) as u32).collect();
+                let ops: Vec<u32> = (0..rows).map(|_| rng.below(1 << q) as u32).collect();
+                a.fill_from(|r, _| init[r]);
+                let rep = a.apply(op, &ops);
+                assert_eq!(rep.cycles, q as u64);
+                assert_eq!(rep.rows_active, rows as u64);
+                assert_eq!(rep.alu_evals, (q * rows) as u64);
+                for r in 0..rows {
+                    let want = match op {
+                        AluOp::Add => bits::add_mod(init[r], ops[r], q),
+                        AluOp::Sub => bits::sub_mod(init[r], ops[r], q),
+                        AluOp::And => init[r] & ops[r],
+                        AluOp::Or => (init[r] | ops[r]) & bits::mask(q),
+                        AluOp::Xor => (init[r] ^ ops[r]) & bits::mask(q),
+                        AluOp::Pass => init[r],
+                    };
+                    assert_eq!(a.read_word(r, 0), want, "{op:?} rows={rows} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_apply_gates_rows() {
+        let rows = 130;
+        let q = 8;
+        let mut a = BitPlaneArray::new(rows, &[q]);
+        let init: Vec<u32> = (0..rows).map(|r| (r as u32 * 7) & 0xFF).collect();
+        a.fill_from(|r, _| init[r]);
+        // Enable only rows whose index bit 0 is set.
+        let mut enable = vec![0u64; a.lanes()];
+        for r in (1..rows).step_by(2) {
+            enable[r / 64] |= 1u64 << (r % 64);
+        }
+        let ops: Vec<u32> = (0..rows).map(|r| (r as u32 + 3) & 0xFF).collect();
+        let rep = a.apply_masked(AluOp::Add, &ops, &enable);
+        assert_eq!(rep.rows_active, (rows / 2) as u64);
+        assert_eq!(rep.alu_evals, (q * (rows / 2)) as u64);
+        for r in 0..rows {
+            let want = if r % 2 == 1 {
+                bits::add_mod(init[r], ops[r], q)
+            } else {
+                init[r]
+            };
+            assert_eq!(a.read_word(r, 0), want, "r={r}");
+        }
+    }
+
+    #[test]
+    fn masked_toggles_sum_like_independent_runs() {
+        // Toggles of a masked run over set S plus a masked run over the
+        // complement of S equals one full run, because per-row activity
+        // is independent.
+        let rows = 96;
+        let q = 16;
+        let mut rng = Rng::new(77);
+        let init: Vec<u32> = (0..rows).map(|_| rng.below(1 << q) as u32).collect();
+        let ops: Vec<u32> = (0..rows).map(|_| rng.below(1 << q) as u32).collect();
+
+        let mut full = BitPlaneArray::new(rows, &[q]);
+        full.fill_from(|r, _| init[r]);
+        let rep_full = full.apply(AluOp::Add, &ops);
+
+        let mut half = BitPlaneArray::new(rows, &[q]);
+        half.fill_from(|r, _| init[r]);
+        let mut lo = vec![0u64; half.lanes()];
+        let mut hi = vec![0u64; half.lanes()];
+        for r in 0..rows {
+            if r < rows / 2 {
+                lo[r / 64] |= 1u64 << (r % 64);
+            } else {
+                hi[r / 64] |= 1u64 << (r % 64);
+            }
+        }
+        let rep_lo = half.apply_masked(AluOp::Add, &ops, &lo);
+        let rep_hi = half.apply_masked(AluOp::Add, &ops, &hi);
+        assert_eq!(rep_lo.cell_toggles + rep_hi.cell_toggles, rep_full.cell_toggles);
+        assert_eq!(rep_lo.alu_evals + rep_hi.alu_evals, rep_full.alu_evals);
+        for r in 0..rows {
+            assert_eq!(half.read_word(r, 0), full.read_word(r, 0), "r={r}");
+        }
+    }
+
+    #[test]
+    fn segmented_apply_is_per_segment() {
+        let rows = 10;
+        let mut a = BitPlaneArray::new(rows, &[4, 12]);
+        a.fill_from(|r, s| if s == 0 { r as u32 & 0xF } else { (100 + r as u32) & 0xFFF });
+        let ops: Vec<u32> = (0..rows * 2)
+            .map(|i| if i % 2 == 0 { 1 } else { 200 })
+            .collect();
+        let rep = a.apply(AluOp::Add, &ops);
+        assert_eq!(rep.cycles, 12); // max segment width
+        assert_eq!(rep.alu_evals, ((4 + 12) * rows) as u64);
+        for r in 0..rows {
+            assert_eq!(a.read_word(r, 0), (r as u32 + 1) & 0xF);
+            assert_eq!(a.read_word(r, 1), (100 + r as u32 + 200) & 0xFFF);
+        }
+    }
+}

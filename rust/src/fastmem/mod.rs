@@ -5,15 +5,19 @@
 //! - [`row`] — a cell chain partitioned into word segments
 //! - [`route`] — bit-width reconfiguration planning (Fig. 5c)
 //! - [`array`] — the R×C macro with fully-concurrent batch operations
+//! - [`bitplane`] — the bit-sliced (SIMD-within-a-register) fidelity
+//!   tier: 64 rows per machine word, O(width · rows/64) batch ops
 
 pub mod alu;
 pub mod array;
+pub mod bitplane;
 pub mod cell;
 pub mod route;
 pub mod row;
 
 pub use alu::{AluOp, RowAlu};
-pub use array::{ArrayError, BatchReport, FastArray};
+pub use array::{ArrayError, BatchReport, FastArray, Fidelity};
+pub use bitplane::BitPlaneArray;
 pub use cell::{CellError, Phase, ShiftCell};
 pub use route::{RouteError, RouteFabric};
 pub use row::{CycleStats, Row};

@@ -138,6 +138,18 @@ impl Row {
         Ok(())
     }
 
+    /// Overwrite segment `seg` with `word` without touching the toggle
+    /// counters — the transpose-out path of the bit-plane tier, which
+    /// accounts toggles in aggregate (same contract as the cells'
+    /// `force_state`). The cells end statically held.
+    pub(crate) fn force_word(&mut self, seg: usize, word: u32) {
+        let s = &self.segments[seg];
+        let (start, width) = (s.start, s.width);
+        for i in 0..width {
+            self.cells[start + i].force_state(((word >> i) & 1) as u8);
+        }
+    }
+
     /// One shift cycle (phases 1–3), feeding each segment's ALU its
     /// external operand bit for this cycle.
     ///

@@ -10,8 +10,11 @@
 //! crate contains every system needed to reproduce the paper without
 //! its silicon:
 //!
-//! - [`fastmem`] — phase-accurate behavioural model of the shiftable
-//!   cell, row, ALU and 128-row macro (Figs. 3–6).
+//! - [`fastmem`] — behavioural model of the shiftable cell, row, ALU
+//!   and 128-row macro (Figs. 3–6), at three differential-tested
+//!   fidelity tiers: phase-accurate, word-fast, and bit-plane
+//!   (bit-sliced, 64 rows per machine word — the software mirror of
+//!   the hardware's row-parallelism).
 //! - [`analog`] — RC transient simulator + Monte Carlo variation for the
 //!   dynamic-node waveform, noise-margin and eye-pattern results
 //!   (Figs. 7, 8, 12).

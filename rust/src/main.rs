@@ -11,8 +11,10 @@ use anyhow::bail;
 
 use fast_sram::cli::{usage, Args};
 use fast_sram::coordinator::{
-    DigitalBackend, EngineConfig, FastBackend, UpdateEngine, UpdateRequest, XlaBackend,
+    BitPlaneBackend, DigitalBackend, EngineConfig, FastBackend, UpdateEngine, UpdateRequest,
+    XlaBackend,
 };
+use fast_sram::fastmem::Fidelity;
 use fast_sram::experiments::{apps_bench, fig10, fig11, fig12, fig13, fig14, table1, waveforms};
 use fast_sram::metrics::render_table;
 use fast_sram::runtime::{default_artifact_dir, validate, Runtime};
@@ -141,10 +143,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .map_err(|_| anyhow::anyhow!("--seal-rows expects an integer, got {n:?}"))?,
         );
     }
+    let fidelity_str = args.get_str("fidelity", "word").to_string();
+    let fidelity = Fidelity::parse(&fidelity_str)
+        .ok_or_else(|| anyhow::anyhow!("unknown fidelity {fidelity_str:?} (phase|word|bitplane)"))?;
+    if backend != "fast" && fidelity != Fidelity::WordFast {
+        bail!("--fidelity applies to --backend fast only");
+    }
     let engine = match backend.as_str() {
-        "fast" => UpdateEngine::start(cfg, move |plan| {
-            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
-        })?,
+        "fast" => match fidelity {
+            // The bit-plane tier transposes the shard's whole bank set
+            // into one plane stack — the dedicated backend.
+            Fidelity::BitPlane => UpdateEngine::start(cfg, move |plan| {
+                Ok(Box::new(BitPlaneBackend::with_rows(plan.rows, plan.q)))
+            })?,
+            f => UpdateEngine::start(cfg, move |plan| {
+                Ok(Box::new(FastBackend::with_rows_fidelity(plan.rows, plan.q, f)))
+            })?,
+        },
         "digital" => UpdateEngine::start(cfg, move |plan| {
             Ok(Box::new(DigitalBackend::new(plan.rows, plan.q)))
         })?,
@@ -168,7 +183,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     println!(
         "serving {updates} updates on {rows} rows x {q} bits \
-         (backend: {backend}, shards: {shards}, seal deadline: {deadline_us} µs)"
+         (backend: {backend}, fidelity: {fidelity}, shards: {shards}, \
+         seal deadline: {deadline_us} µs)"
     );
     let t0 = std::time::Instant::now();
     let mut rng = Rng::new(args.get_u64("seed", 1)?);
