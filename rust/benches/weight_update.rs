@@ -1,0 +1,118 @@
+//! Weight-update bench: the VGG-7 8-bit weight-update task swept over
+//! row counts, each size replaying one recorded trace on the word-fast
+//! FAST backend, the bit-plane backend and the digital baseline via
+//! `experiments::weight_update::run` — which refuses to report unless
+//! every backend's final weights are bit-identical to the host oracle,
+//! so a backend that got fast by getting wrong fails here, not in the
+//! table. The acceptance bar is the paper-anchored pair at the 128×8
+//! acceptance config: modeled speedup ≥ 50× and energy efficiency
+//! ≥ 3× for FAST vs the digital baseline (paper: 96.0× / 4.4×).
+//!
+//! Run: `cargo bench --bench weight_update`
+//! Writes: ../BENCH_weight_update.json (relative to rust/)
+//! Env: FAST_BENCH_SMOKE=1 shrinks step counts for CI smoke runs
+//! (sizes are unchanged so the acceptance ratios stay meaningful).
+
+#[path = "harness.rs"]
+mod harness;
+
+use fast_sram::apps::trainer::{TrainerConfig, MIN_ENERGY_EFF_X, MIN_SPEEDUP_X};
+use fast_sram::experiments::weight_update;
+
+const Q: usize = 8;
+const SIZES: [usize; 3] = [128, 512, 1024];
+
+fn config(rows: usize, smoke: bool) -> TrainerConfig {
+    let mut cfg = TrainerConfig::vgg7(rows, Q);
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = if smoke { 2 } else { 16 };
+    cfg
+}
+
+struct RunResult {
+    rows: usize,
+    backend: &'static str,
+    updates: u64,
+    wall_ms: f64,
+    modeled_us_per_epoch: f64,
+    modeled_nj_per_epoch: f64,
+}
+
+fn main() {
+    let smoke = harness::smoke_mode();
+    harness::section(&format!(
+        "VGG-7 weight update: rows {SIZES:?} x q={Q}, backends word/bitplane/digital{}",
+        if smoke { " [smoke]" } else { "" }
+    ));
+
+    let mut results: Vec<RunResult> = Vec::new();
+    let mut acceptance: Option<(f64, f64)> = None;
+    for rows in SIZES {
+        let cfg = config(rows, smoke);
+        // run() replays one recorded trace on all three backends and
+        // errors out if any diverges from the host-semantics oracle.
+        let report = weight_update::run(&cfg).expect("cross-backend weight-update run");
+        for r in &report.runs {
+            println!(
+                "{:>5} rows | {:<20} | {:>6} updates | {:>9.2} ms wall | {:>9.3} µs/epoch | {:>9.2} nJ/epoch",
+                rows,
+                r.backend,
+                r.updates,
+                r.wall_us / 1000.0,
+                r.ns_per_epoch() / 1000.0,
+                r.pj_per_epoch() / 1000.0,
+            );
+            results.push(RunResult {
+                rows,
+                backend: r.backend,
+                updates: r.updates,
+                wall_ms: r.wall_us / 1000.0,
+                modeled_us_per_epoch: r.ns_per_epoch() / 1000.0,
+                modeled_nj_per_epoch: r.pj_per_epoch() / 1000.0,
+            });
+        }
+        println!(
+            "{rows:>5} rows | FAST vs digital: {:.1}x speed, {:.1}x energy",
+            report.speedup, report.energy_eff
+        );
+        if rows == 128 {
+            acceptance = Some((report.speedup, report.energy_eff));
+        }
+    }
+
+    let (speedup, energy_eff) = acceptance.expect("128-row acceptance point present");
+    let pass = speedup >= MIN_SPEEDUP_X && energy_eff >= MIN_ENERGY_EFF_X;
+    println!(
+        "\nacceptance @128x8: {speedup:.1}x speed (need >= {MIN_SPEEDUP_X}), \
+         {energy_eff:.1}x energy (need >= {MIN_ENERGY_EFF_X}) -> {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    let mut rows_json = String::new();
+    for r in &results {
+        if !rows_json.is_empty() {
+            rows_json.push_str(",\n");
+        }
+        rows_json.push_str(&format!(
+            "    {{\"rows\": {}, \"backend\": \"{}\", \"updates\": {}, \"wall_ms\": {:.3}, \
+             \"modeled_us_per_epoch\": {:.4}, \"modeled_nj_per_epoch\": {:.4}}}",
+            r.rows, r.backend, r.updates, r.wall_ms, r.modeled_us_per_epoch, r.modeled_nj_per_epoch
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"weight_update\",\n  \"status\": \"measured\",\n  \"mode\": \"{}\",\n  \
+         \"q\": {Q},\n  \"results\": [\n{rows_json}\n  ],\n  \"acceptance\": {{\"criterion\": \
+         \"modeled speedup >= {MIN_SPEEDUP_X}x and energy efficiency >= {MIN_ENERGY_EFF_X}x for FAST vs \
+         digital at 128 rows x 8 bits (paper anchors: 96.0x / 4.4x)\", \"speedup\": {speedup:.1}, \
+         \"energy_eff\": {energy_eff:.1}, \"pass\": {pass}}}\n}}\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_weight_update.json");
+    std::fs::write(out_path, json).expect("writing BENCH_weight_update.json");
+    println!("results written to {out_path}");
+
+    assert!(
+        pass,
+        "paper-anchored bars not met at 128x8: {speedup:.1}x speed / {energy_eff:.1}x energy"
+    );
+}

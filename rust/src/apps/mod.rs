@@ -1,13 +1,23 @@
-//! Application workloads motivating the paper (Section I):
+//! Application workloads motivating the paper (Section I) plus the
+//! headline evaluation task (Section III):
 //!
 //! - [`table`] — database-style delta-update key/counter table
 //! - [`graph`] — CSR graph with row-parallel feature propagation
 //! - [`histogram`] — high-concurrency streaming counters
+//! - [`trainer`] — the VGG-7-shaped 8-bit parallel weight-update task
+//!   (the paper's 96.0× / 4.4× comparison, asserted programmatically)
+//! - [`trace`] — deterministic workload traces: record an update
+//!   stream once, replay it bit-identically onto any backend /
+//!   fidelity tier / shard configuration
 
 pub mod graph;
 pub mod histogram;
 pub mod table;
+pub mod trace;
+pub mod trainer;
 
 pub use graph::{reference_round, CsrGraph, GraphEngine};
 pub use histogram::Histogram;
 pub use table::DeltaTable;
+pub use trace::{state_digest, BackendKind, ReplayReport, Trace, TraceEvent};
+pub use trainer::{LayerSlice, LayerSpec, TrainRun, TrainerConfig, VGG7};

@@ -1,0 +1,585 @@
+//! Deterministic workload traces: record an [`UpdateRequest`] stream
+//! once, replay it bit-identically onto any backend / fidelity tier /
+//! shard configuration.
+//!
+//! Every app, test and bench that wants to diff engines needs the same
+//! three things: a pinned request stream, a deterministic batching
+//! structure, and a host-semantics oracle. A [`Trace`] provides all
+//! three:
+//!
+//! - **Format** — one JSON object per line (parsed with the in-repo
+//!   [`crate::util::json`] parser; serde is not in the offline vendor
+//!   set). The writer is canonical — fixed key order, no floats — so
+//!   `serialize → parse → serialize` is byte-identical.
+//! - **Determinism** — [`BackendKind::start`] builds engines with the
+//!   group-commit deadline and size seals disabled, so batches seal
+//!   *only* at the trace's explicit `Flush` barriers (plus forced
+//!   flushes on reads/writes). The batch structure, and therefore the
+//!   modeled energy/latency accounting, is a pure function of the
+//!   trace — never of wall-clock timing.
+//! - **Oracle** — [`Trace::reference_state`] folds the events over a
+//!   plain `Vec<u32>` with `util::bits` host arithmetic.
+//!
+//! Invariances this substrate guarantees (and the differential tests
+//! in `rust/tests/integration_trace.rs` enforce): the final state is
+//! bit-identical across backends, fidelity tiers and shard counts; the
+//! modeled energy report is bit-identical across fidelity tiers, and
+//! across shard counts for traces whose flush groups touch every
+//! shard (dense traces, e.g. the VGG-7 trainer's).
+//!
+//! ## Wire format (`fast-trace-v1`)
+//!
+//! ```text
+//! {"trace":"fast-trace-v1","name":"vgg7-128x8","rows":128,"q":8,"seed":"66"}
+//! {"t":"w","r":0,"v":17}            # conventional-port write
+//! {"t":"u","o":"add","r":5,"v":3}   # update request (add|sub|and|or|xor)
+//! {"t":"f"}                         # flush barrier (seals every shard)
+//! ```
+//!
+//! The seed is a decimal *string* because the in-repo JSON parser
+//! stores numbers as `f64`, which would silently corrupt u64 seeds
+//! above 2⁵³ and break the byte-identity of the round trip.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context};
+
+use crate::coordinator::{
+    BitPlaneBackend, DigitalBackend, EngineConfig, EngineStats, FastBackend, UpdateEngine,
+    UpdateOp, UpdateRequest,
+};
+use crate::fastmem::Fidelity;
+use crate::util::bits;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Format tag on the header line; bump on breaking changes.
+pub const TRACE_FORMAT: &str = "fast-trace-v1";
+
+/// Which executor family a trace (or the trainer) runs against.
+///
+/// `Fast(Fidelity::BitPlane)` and `BitPlane` are the same tier spelled
+/// two ways; both construct the dedicated whole-shard
+/// [`BitPlaneBackend`] (never the per-bank `FastBackend` bit-plane
+/// variant), so label and engine can never disagree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Behavioural FAST banks at a fidelity tier (phase or word; the
+    /// bit-plane tier routes to the dedicated [`BitPlaneBackend`]).
+    Fast(Fidelity),
+    /// The bit-sliced tier: one plane stack per shard.
+    BitPlane,
+    /// The paper's memory-computing-separated digital baseline.
+    Digital,
+}
+
+impl BackendKind {
+    /// Resolve the CLI flag pair (`--backend`, `--fidelity`) exactly
+    /// like `fast serve` does: `--fidelity` applies to the fast
+    /// backend only, and the bit-plane tier selects the dedicated
+    /// whole-shard plane backend.
+    pub fn from_flags(backend: &str, fidelity: Fidelity) -> Result<BackendKind> {
+        match backend {
+            "fast" => Ok(match fidelity {
+                Fidelity::BitPlane => BackendKind::BitPlane,
+                f => BackendKind::Fast(f),
+            }),
+            "bitplane" => {
+                ensure!(
+                    matches!(fidelity, Fidelity::WordFast | Fidelity::BitPlane),
+                    "--fidelity applies to --backend fast only"
+                );
+                Ok(BackendKind::BitPlane)
+            }
+            "digital" => {
+                ensure!(
+                    fidelity == Fidelity::WordFast,
+                    "--fidelity applies to --backend fast only"
+                );
+                Ok(BackendKind::Digital)
+            }
+            other => bail!("unknown backend {other:?} (fast|bitplane|digital)"),
+        }
+    }
+
+    /// Human label matching the backend's `Backend::name`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Fast(Fidelity::PhaseAccurate) => "fast-phase-accurate",
+            BackendKind::Fast(Fidelity::WordFast) => "fast-behavioural",
+            BackendKind::Fast(Fidelity::BitPlane) | BackendKind::BitPlane => "fast-bitplane",
+            BackendKind::Digital => "digital-baseline",
+        }
+    }
+
+    /// Start an update engine for deterministic replay: group-commit
+    /// deadline and size seals are disabled, so batches seal only at
+    /// explicit flush barriers and the batch structure (hence the
+    /// modeled cost accounting) is reproducible bit for bit.
+    pub fn start(&self, rows: usize, q: usize, shards: usize) -> Result<UpdateEngine> {
+        let mut cfg = EngineConfig::sharded(rows, q, shards);
+        cfg.seal_at_rows = None;
+        cfg.seal_deadline = Duration::from_secs(3600);
+        match *self {
+            BackendKind::Fast(f) if f != Fidelity::BitPlane => {
+                UpdateEngine::start(cfg, move |plan| {
+                    Ok(Box::new(FastBackend::with_rows_fidelity(plan.rows, plan.q, f)))
+                })
+            }
+            BackendKind::Fast(_) | BackendKind::BitPlane => UpdateEngine::start(cfg, move |plan| {
+                Ok(Box::new(BitPlaneBackend::with_rows(plan.rows, plan.q)))
+            }),
+            BackendKind::Digital => UpdateEngine::start(cfg, move |plan| {
+                Ok(Box::new(DigitalBackend::new(plan.rows, plan.q)))
+            }),
+        }
+    }
+}
+
+/// One recorded event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// A coalescible row update.
+    Update(UpdateRequest),
+    /// A conventional-port absolute write (flushes the owning shard).
+    Write { row: usize, value: u32 },
+    /// Barrier: seal and apply every shard's open batch.
+    Flush,
+}
+
+/// A recorded workload: header metadata plus the event stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Workload label (free-form, no newlines).
+    pub name: String,
+    /// Logical row space the trace addresses.
+    pub rows: usize,
+    /// Word width the operands were drawn for.
+    pub q: usize,
+    /// Seed of the generator that produced the trace (provenance).
+    pub seed: u64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>, rows: usize, q: usize, seed: u64) -> Self {
+        let name = name.into();
+        assert!(!name.contains(['\n', '"', '\\']), "trace name must be plain");
+        assert!(rows >= 1 && (1..=32).contains(&q));
+        Trace { name, rows, q, seed, events: Vec::new() }
+    }
+
+    /// Append an update request (row must be in range, operand in q bits).
+    pub fn push_update(&mut self, req: UpdateRequest) {
+        assert!(req.row < self.rows, "row {} out of range {}", req.row, self.rows);
+        assert_eq!(req.operand & !bits::mask(self.q), 0, "operand exceeds q bits");
+        self.events.push(TraceEvent::Update(req));
+    }
+
+    pub fn push_write(&mut self, row: usize, value: u32) {
+        assert!(row < self.rows, "row {row} out of range {}", self.rows);
+        assert_eq!(value & !bits::mask(self.q), 0, "value exceeds q bits");
+        self.events.push(TraceEvent::Write { row, value });
+    }
+
+    pub fn push_flush(&mut self) {
+        self.events.push(TraceEvent::Flush);
+    }
+
+    /// Number of update events (the workload size).
+    pub fn updates(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Update(_)))
+            .count()
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    /// Canonical JSON-lines serialization (fixed key order, integers
+    /// only) — the round-trip `to_jsonl ∘ parse_jsonl` is the identity
+    /// on bytes.
+    pub fn to_jsonl(&self) -> String {
+        // ~34 bytes per event line is the dense-trace average.
+        let mut out = String::with_capacity(64 + self.events.len() * 34);
+        out.push_str(&format!(
+            "{{\"trace\":\"{}\",\"name\":\"{}\",\"rows\":{},\"q\":{},\"seed\":\"{}\"}}\n",
+            TRACE_FORMAT, self.name, self.rows, self.q, self.seed
+        ));
+        for e in &self.events {
+            match *e {
+                TraceEvent::Update(req) => out.push_str(&format!(
+                    "{{\"t\":\"u\",\"o\":\"{}\",\"r\":{},\"v\":{}}}\n",
+                    req.op.name(),
+                    req.row,
+                    req.operand
+                )),
+                TraceEvent::Write { row, value } => {
+                    out.push_str(&format!("{{\"t\":\"w\",\"r\":{row},\"v\":{value}}}\n"))
+                }
+                TraceEvent::Flush => out.push_str("{\"t\":\"f\"}\n"),
+            }
+        }
+        out
+    }
+
+    /// Parse a serialized trace, validating rows/q bounds per event.
+    pub fn parse_jsonl(s: &str) -> Result<Trace> {
+        let mut lines = s.lines().enumerate();
+        let (_, header) = lines
+            .next()
+            .ok_or_else(|| anyhow!("empty trace: missing header line"))?;
+        let h = Json::parse(header).context("trace header")?;
+        ensure!(
+            h.get("trace").and_then(Json::as_str) == Some(TRACE_FORMAT),
+            "not a {TRACE_FORMAT} trace (header {header:?})"
+        );
+        let field = |key: &str| {
+            h.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("header field {key:?} missing or not an integer"))
+        };
+        let name = h
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("header field \"name\" missing"))?;
+        ensure!(
+            !name.contains(['\n', '"', '\\']),
+            "trace name {name:?} contains forbidden characters"
+        );
+        let (rows, q) = (field("rows")?, field("q")?);
+        ensure!(rows >= 1, "header rows must be >= 1");
+        ensure!((1..=32).contains(&q), "header q {q} out of range 1..=32");
+        let seed: u64 = h
+            .get("seed")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("header field \"seed\" missing or not a decimal string"))?
+            .parse()
+            .map_err(|_| anyhow!("header seed is not a u64"))?;
+        let mut trace = Trace::new(name, rows, q, seed);
+        let word = move |v: &Json, line: usize| -> Result<u32> {
+            let n = v
+                .as_usize()
+                .ok_or_else(|| anyhow!("line {}: value is not an integer", line + 1))?;
+            ensure!(
+                n as u64 <= bits::mask(q) as u64,
+                "line {}: value {n} exceeds q={q} bits",
+                line + 1
+            );
+            Ok(n as u32)
+        };
+        let row_of = move |v: &Json, line: usize| -> Result<usize> {
+            let r = v
+                .get("r")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("line {}: missing row", line + 1))?;
+            ensure!(r < rows, "line {}: row {r} out of range {rows}", line + 1);
+            Ok(r)
+        };
+        for (i, line) in lines {
+            if line.is_empty() {
+                continue; // tolerate a trailing newline
+            }
+            let v = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+            let value_field = |v: &Json| {
+                v.get("v").ok_or_else(|| anyhow!("line {}: missing value", i + 1))
+            };
+            let event = match v.get("t").and_then(Json::as_str) {
+                Some("u") => {
+                    let op = v
+                        .get("o")
+                        .and_then(Json::as_str)
+                        .and_then(UpdateOp::parse)
+                        .ok_or_else(|| anyhow!("line {}: bad or missing op", i + 1))?;
+                    TraceEvent::Update(UpdateRequest {
+                        row: row_of(&v, i)?,
+                        op,
+                        operand: word(value_field(&v)?, i)?,
+                    })
+                }
+                Some("w") => TraceEvent::Write {
+                    row: row_of(&v, i)?,
+                    value: word(value_field(&v)?, i)?,
+                },
+                Some("f") => TraceEvent::Flush,
+                other => bail!("line {}: unknown event type {other:?}", i + 1),
+            };
+            trace.events.push(event);
+        }
+        Ok(trace)
+    }
+
+    /// Write the trace to a file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(&path, self.to_jsonl())
+            .with_context(|| format!("writing trace to {}", path.as_ref().display()))
+    }
+
+    /// Load a trace from a file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Trace> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading trace from {}", path.as_ref().display()))?;
+        Self::parse_jsonl(&text)
+    }
+
+    // -- replay -------------------------------------------------------------
+
+    /// Replay onto a running engine (must match the trace's rows/q; any
+    /// shard count). Consecutive updates are bulk-submitted in order,
+    /// writes and flush barriers interleave exactly as recorded, and a
+    /// final flush + snapshot closes the run. The caller keeps engine
+    /// ownership (and shuts it down).
+    pub fn replay(&self, engine: &UpdateEngine) -> Result<ReplayReport> {
+        ensure!(
+            engine.config().rows == self.rows && engine.config().q == self.q,
+            "engine shape {}x{} != trace shape {}x{}",
+            engine.config().rows,
+            engine.config().q,
+            self.rows,
+            self.q
+        );
+        let t0 = std::time::Instant::now();
+        let mut pending: Vec<UpdateRequest> = Vec::new();
+        let drain = |pending: &mut Vec<UpdateRequest>| -> Result<()> {
+            if !pending.is_empty() {
+                engine.submit_many(std::mem::take(pending))?;
+            }
+            Ok(())
+        };
+        for e in &self.events {
+            match *e {
+                TraceEvent::Update(req) => pending.push(req),
+                TraceEvent::Write { row, value } => {
+                    drain(&mut pending)?;
+                    engine.write(row, value)?;
+                }
+                TraceEvent::Flush => {
+                    drain(&mut pending)?;
+                    engine.flush()?;
+                }
+            }
+        }
+        drain(&mut pending)?;
+        engine.flush()?;
+        let final_state = engine.snapshot()?;
+        Ok(ReplayReport {
+            final_state,
+            stats: engine.stats(),
+            wall_us: t0.elapsed().as_secs_f64() * 1e6,
+        })
+    }
+
+    /// Convenience: build a deterministic engine for `kind`, replay,
+    /// shut it down, return the report.
+    pub fn replay_on(&self, kind: BackendKind, shards: usize) -> Result<ReplayReport> {
+        let engine = kind.start(self.rows, self.q, shards)?;
+        let report = self.replay(&engine)?;
+        engine.shutdown()?;
+        Ok(report)
+    }
+
+    /// Host-semantics oracle: fold the events over a plain vector.
+    pub fn reference_state(&self) -> Vec<u32> {
+        let m = bits::mask(self.q);
+        let mut state = vec![0u32; self.rows];
+        for e in &self.events {
+            match *e {
+                TraceEvent::Update(req) => {
+                    let cur = state[req.row];
+                    state[req.row] = match req.op {
+                        UpdateOp::Add => bits::add_mod(cur, req.operand, self.q),
+                        UpdateOp::Sub => bits::sub_mod(cur, req.operand, self.q),
+                        UpdateOp::And => cur & req.operand & m,
+                        UpdateOp::Or => (cur | req.operand) & m,
+                        UpdateOp::Xor => (cur ^ req.operand) & m,
+                    };
+                }
+                TraceEvent::Write { row, value } => state[row] = value & m,
+                TraceEvent::Flush => {}
+            }
+        }
+        state
+    }
+}
+
+/// Outcome of one replay.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub final_state: Vec<u32>,
+    pub stats: EngineStats,
+    pub wall_us: f64,
+}
+
+/// FNV-1a digest of a row-state vector — a compact fingerprint for
+/// replay reports and cross-run diffing.
+pub fn state_digest(state: &[u32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &w in state {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// A seeded uniform-random add/sub trace with periodic flush barriers
+/// — the generic smoke workload for `fast trace record --workload
+/// uniform` and the round-trip tests.
+pub fn uniform_trace(rows: usize, q: usize, updates: usize, seed: u64) -> Trace {
+    let mut trace = Trace::new(format!("uniform-{rows}x{q}"), rows, q, seed);
+    let mut rng = Rng::new(seed);
+    let flush_every = rows.max(64);
+    for i in 0..updates {
+        let row = rng.below(rows as u64) as usize;
+        let v = 1 + rng.below(bits::mask(q) as u64) as u32;
+        let req = if rng.chance(0.25) {
+            UpdateRequest::sub(row, v)
+        } else {
+            UpdateRequest::add(row, v)
+        };
+        trace.push_update(req);
+        if (i + 1) % flush_every == 0 {
+            trace.push_flush();
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> Trace {
+        let mut t = Trace::new("tiny", 8, 8, 1);
+        t.push_write(0, 0xAB);
+        t.push_update(UpdateRequest::add(0, 4));
+        t.push_update(UpdateRequest::sub(1, 1));
+        t.push_update(UpdateRequest { row: 2, op: UpdateOp::Or, operand: 0x0F });
+        t.push_flush();
+        t.push_update(UpdateRequest { row: 0, op: UpdateOp::And, operand: 0xF0 });
+        t.push_update(UpdateRequest { row: 3, op: UpdateOp::Xor, operand: 0x55 });
+        t
+    }
+
+    #[test]
+    fn serialization_round_trips_byte_identically() {
+        let t = tiny_trace();
+        let s1 = t.to_jsonl();
+        let parsed = Trace::parse_jsonl(&s1).unwrap();
+        assert_eq!(parsed, t);
+        assert_eq!(parsed.to_jsonl(), s1, "canonical writer must be stable");
+    }
+
+    #[test]
+    fn reference_state_applies_all_ops() {
+        let t = tiny_trace();
+        let s = t.reference_state();
+        assert_eq!(s[0], (0xAB + 4) & 0xF0);
+        assert_eq!(s[1], 0xFF); // 0 - 1 mod 256
+        assert_eq!(s[2], 0x0F);
+        assert_eq!(s[3], 0x55);
+        assert_eq!(s[4], 0);
+    }
+
+    #[test]
+    fn replay_matches_reference() {
+        let t = uniform_trace(32, 8, 500, 7);
+        let rep = t.replay_on(BackendKind::Fast(Fidelity::WordFast), 1).unwrap();
+        assert_eq!(rep.final_state, t.reference_state());
+        assert_eq!(rep.stats.completed, 500);
+        assert!(rep.stats.modeled_energy_pj > 0.0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_traces() {
+        assert!(Trace::parse_jsonl("").is_err());
+        assert!(Trace::parse_jsonl("{\"trace\":\"other-v9\"}\n").is_err());
+        // Malformed headers must be clean errors, never panics: numeric
+        // seed (f64 would corrupt u64 seeds), out-of-range q/rows,
+        // forbidden name characters.
+        for bad in [
+            "{\"trace\":\"fast-trace-v1\",\"name\":\"x\",\"rows\":4,\"q\":8,\"seed\":0}\n",
+            "{\"trace\":\"fast-trace-v1\",\"name\":\"x\",\"rows\":4,\"q\":33,\"seed\":\"0\"}\n",
+            "{\"trace\":\"fast-trace-v1\",\"name\":\"x\",\"rows\":0,\"q\":8,\"seed\":\"0\"}\n",
+            "{\"trace\":\"fast-trace-v1\",\"name\":\"a\\\"b\",\"rows\":4,\"q\":8,\"seed\":\"0\"}\n",
+        ] {
+            assert!(Trace::parse_jsonl(bad).is_err(), "{bad:?}");
+        }
+        let hdr = "{\"trace\":\"fast-trace-v1\",\"name\":\"x\",\"rows\":4,\"q\":8,\"seed\":\"0\"}\n";
+        // Row out of range.
+        assert!(Trace::parse_jsonl(&format!("{hdr}{{\"t\":\"w\",\"r\":4,\"v\":0}}\n")).is_err());
+        // Operand exceeds q bits.
+        assert!(Trace::parse_jsonl(&format!(
+            "{hdr}{{\"t\":\"u\",\"o\":\"add\",\"r\":0,\"v\":256}}\n"
+        ))
+        .is_err());
+        // Unknown op / event type.
+        assert!(Trace::parse_jsonl(&format!(
+            "{hdr}{{\"t\":\"u\",\"o\":\"nand\",\"r\":0,\"v\":1}}\n"
+        ))
+        .is_err());
+        assert!(Trace::parse_jsonl(&format!("{hdr}{{\"t\":\"z\"}}\n")).is_err());
+        // Valid minimal trace parses.
+        assert!(Trace::parse_jsonl(hdr).is_ok());
+    }
+
+    #[test]
+    fn seeds_above_f64_precision_round_trip() {
+        // 2^53 + 1 is not representable as f64 — the string encoding
+        // must carry it exactly.
+        let t = Trace::new("big-seed", 4, 8, (1u64 << 53) + 1);
+        let s = t.to_jsonl();
+        let parsed = Trace::parse_jsonl(&s).unwrap();
+        assert_eq!(parsed.seed, (1u64 << 53) + 1);
+        assert_eq!(parsed.to_jsonl(), s);
+    }
+
+    #[test]
+    fn replay_rejects_shape_mismatch() {
+        let t = tiny_trace();
+        let engine = BackendKind::Fast(Fidelity::WordFast).start(16, 8, 1).unwrap();
+        assert!(t.replay(&engine).is_err(), "rows mismatch must be rejected");
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn backend_kind_flag_resolution() {
+        assert_eq!(
+            BackendKind::from_flags("fast", Fidelity::WordFast).unwrap(),
+            BackendKind::Fast(Fidelity::WordFast)
+        );
+        assert_eq!(
+            BackendKind::from_flags("fast", Fidelity::BitPlane).unwrap(),
+            BackendKind::BitPlane
+        );
+        assert_eq!(
+            BackendKind::from_flags("digital", Fidelity::WordFast).unwrap(),
+            BackendKind::Digital
+        );
+        assert!(BackendKind::from_flags("digital", Fidelity::BitPlane).is_err());
+        assert!(BackendKind::from_flags("bitplane", Fidelity::PhaseAccurate).is_err());
+        assert!(BackendKind::from_flags("tpu", Fidelity::WordFast).is_err());
+    }
+
+    #[test]
+    fn both_bitplane_spellings_run_the_dedicated_backend() {
+        let t = uniform_trace(32, 8, 300, 3);
+        let a = t.replay_on(BackendKind::Fast(Fidelity::BitPlane), 1).unwrap();
+        let b = t.replay_on(BackendKind::BitPlane, 1).unwrap();
+        assert_eq!(a.stats.backend, "fast-bitplane");
+        assert_eq!(a.stats.backend, b.stats.backend, "label and engine must agree");
+        assert_eq!(a.final_state, b.final_state);
+        assert_eq!(a.stats.modeled_energy_pj, b.stats.modeled_energy_pj);
+    }
+
+    #[test]
+    fn state_digest_discriminates() {
+        let a = state_digest(&[1, 2, 3]);
+        let b = state_digest(&[1, 2, 4]);
+        let c = state_digest(&[1, 2, 3]);
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+    }
+}

@@ -4,12 +4,22 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail};
+use anyhow::anyhow;
 
 use crate::Result;
 
 /// Parsed command line.
-#[derive(Debug, Clone, Default)]
+///
+/// Semantics (schema-less, so fully deterministic from the tokens):
+/// the first non-flag token is the subcommand, later non-flag tokens
+/// are positional; `--key=value` and `--key value` set flags (a `=` in
+/// the value survives: only the first `=` splits); a bare `--switch`
+/// maps to `"true"` unless the next token is a non-flag, which it
+/// consumes as its value — put switches last or use `--switch=true`;
+/// a repeated flag keeps the **last** value; a bare `--` ends flag
+/// parsing — every later token is treated as a plain operand even if
+/// it starts with `--`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Args {
     /// First non-flag token (the subcommand).
     pub command: Option<String>,
@@ -20,7 +30,9 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of tokens (excluding argv[0]).
+    /// Parse from an iterator of tokens (excluding argv[0]). Never
+    /// fails — the grammar above covers every token sequence — but
+    /// stays `Result` so typed accessors and callers share one shape.
     pub fn parse<I, S>(tokens: I) -> Result<Args>
     where
         I: IntoIterator<Item = S>,
@@ -28,10 +40,24 @@ impl Args {
     {
         let mut out = Args::default();
         let mut it = tokens.into_iter().map(Into::into).peekable();
+        let mut operands_only = false;
+        let operand = |out: &mut Args, tok: String| {
+            if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        };
         while let Some(tok) = it.next() {
+            if operands_only {
+                operand(&mut out, tok);
+                continue;
+            }
             if let Some(name) = tok.strip_prefix("--") {
                 if name.is_empty() {
-                    bail!("bare '--' is not supported");
+                    // Bare `--`: conventional end-of-flags terminator.
+                    operands_only = true;
+                    continue;
                 }
                 // --key=value or --key value or --switch
                 if let Some((k, v)) = name.split_once('=') {
@@ -46,10 +72,8 @@ impl Args {
                 } else {
                     out.flags.insert(name.to_string(), "true".to_string());
                 }
-            } else if out.command.is_none() {
-                out.command = Some(tok);
             } else {
-                out.positional.push(tok);
+                operand(&mut out, tok);
             }
         }
         Ok(out)
@@ -117,6 +141,13 @@ experiment commands (regenerate the paper's tables/figures):
   waveforms    [--period 1.25] [--csv dir] Figs. 7-8 transients
   apps         [--rows 128] [--q 16] [--updates 20000]
                                           workload comparison (E-APP)
+  train        [--rows 128] [--q 8] [--epochs 2] [--steps 4] [--shards 1]
+               [--seed 30311] [--density 1.0] [--no-assert]
+                                       VGG-7-shaped 8-bit weight-update task on
+                                       FAST vs the digital baseline through the
+                                       same coordinator; asserts the paper-anchored
+                                       bars (speed >= 50x, energy >= 3x) unless
+                                       --no-assert
 
 system commands:
   serve        [--rows 1024] [--q 16] [--banks 8] [--updates 100000]
@@ -129,6 +160,15 @@ system commands:
                [--seal-deadline-us 100] group-commit deadline for open batches
                [--seal-rows N]         size seal: batch seals at N touched rows
                run the update engine demo
+  trace record --out FILE [--workload vgg7|uniform] [--rows 128] [--q 8]
+               vgg7 (default): the train flags apply — [--epochs 2]
+                 [--steps 4] [--density 1.0] [--seed 30311]
+               uniform: [--updates 5000] [--seed 66]
+                                       record a deterministic workload trace
+  trace replay --in FILE [--backend fast|bitplane|digital]
+               [--fidelity phase|word|bitplane] [--shards 1] [--verify]
+                                       replay a trace bit-identically onto any
+                                       backend / fidelity / shard configuration
   validate     [--artifacts artifacts] [--trials 3]
                cross-check XLA artifacts vs host semantics
   info         [--artifacts artifacts]   list loaded artifacts
@@ -178,5 +218,149 @@ mod tests {
     fn switch_at_end() {
         let a = Args::parse(["cmd", "--fast"]).unwrap();
         assert!(a.get_bool("fast"));
+    }
+
+    #[test]
+    fn equals_in_value_survives() {
+        // Only the FIRST '=' splits key from value.
+        let a = Args::parse(["c", "--expr=a=b=c", "--empty="]).unwrap();
+        assert_eq!(a.get("expr"), Some("a=b=c"));
+        assert_eq!(a.get("empty"), Some(""));
+    }
+
+    #[test]
+    fn repeated_flag_last_wins() {
+        let a = Args::parse(["c", "--k", "1", "--k=2", "--k", "3"]).unwrap();
+        assert_eq!(a.get("k"), Some("3"));
+    }
+
+    #[test]
+    fn bare_double_dash_ends_flag_parsing() {
+        // The defect this satellite fixed: `--` used to be a hard
+        // error; it now terminates flag parsing like getopt.
+        let a = Args::parse(["serve", "--rows", "8", "--", "--not-a-flag", "x"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("rows", 0).unwrap(), 8);
+        assert_eq!(a.positional, vec!["--not-a-flag", "x"]);
+        // Before any operand, the first post-`--` token is the command.
+        let b = Args::parse(["--", "serve", "extra"]).unwrap();
+        assert_eq!(b.command.as_deref(), Some("serve"));
+        assert_eq!(b.positional, vec!["extra"]);
+        assert!(b.flags.is_empty());
+        // A switch immediately before `--` stays a switch.
+        let c = Args::parse(["c", "--verbose", "--", "pos"]).unwrap();
+        assert!(c.get_bool("verbose"));
+        assert_eq!(c.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn switch_before_positional_consumes_it() {
+        // Documented schema-less behaviour, pinned down: a bare flag
+        // followed by a non-flag token takes it as a value.
+        let a = Args::parse(["c", "--switch", "positional"]).unwrap();
+        assert_eq!(a.get("switch"), Some("positional"));
+        assert!(a.positional.is_empty());
+    }
+
+    // ---- property tests (in-repo quickprop; satellite: cli parsing) ----
+
+    use crate::util::quickprop::{check, Gen};
+
+    /// A flag key with no '=', '-' or whitespace.
+    fn gen_key(g: &mut Gen, i: usize) -> String {
+        format!("k{}{}", i, g.u32_below(1000))
+    }
+
+    /// A value from an alphabet that stresses the parser: '=', '-',
+    /// digits, letters — but never a leading "--" (values are only
+    /// ambiguous in `--key value` form, which round-trip avoids).
+    fn gen_value(g: &mut Gen) -> String {
+        let alphabet = ['a', 'Z', '0', '9', '=', '-', '.', '_', '%'];
+        let len = g.usize_in(0, 6);
+        (0..len).map(|_| *g.choose(&alphabet)).collect()
+    }
+
+    fn gen_operand(g: &mut Gen, i: usize) -> String {
+        format!("p{}{}", i, g.u32_below(1000))
+    }
+
+    #[test]
+    fn prop_parse_never_fails() {
+        // Any token soup — flags, values, bare dashes, `--`, unicode —
+        // must parse without error (the grammar is total).
+        check("parse is total", 400, |g| {
+            let pool = [
+                "--", "--k", "--k=v", "-x", "x", "=", "--=", "--a=b=c", "héllo", "--9",
+            ];
+            let tokens = g.vec_of(12, |g| g.choose(&pool).to_string());
+            Args::parse(tokens).is_ok()
+        });
+    }
+
+    #[test]
+    fn prop_structured_command_lines_round_trip() {
+        // command + `--key=value` flags + `--` + operands reparses to
+        // exactly the structure it was built from.
+        check("args round-trip", 300, |g| {
+            let command = format!("cmd{}", g.u32_below(100));
+            let nflags = g.usize_in(0, 4);
+            let flags: BTreeMap<String, String> =
+                (0..nflags).map(|i| (gen_key(g, i), gen_value(g))).collect();
+            let npos = g.usize_in(0, 3);
+            let positional: Vec<String> = (0..npos).map(|i| gen_operand(g, i)).collect();
+
+            let mut tokens = vec![command.clone()];
+            for (k, v) in &flags {
+                tokens.push(format!("--{k}={v}"));
+            }
+            tokens.push("--".to_string());
+            tokens.extend(positional.iter().cloned());
+
+            let parsed = Args::parse(tokens).unwrap();
+            parsed
+                == Args {
+                    command: Some(command),
+                    flags,
+                    positional,
+                }
+        });
+    }
+
+    #[test]
+    fn prop_space_form_equals_equals_form() {
+        // `--key value` and `--key=value` parse identically whenever
+        // the value is not flag-shaped.
+        check("space form == equals form", 300, |g| {
+            let key = gen_key(g, 0);
+            let mut value = gen_value(g);
+            if value.starts_with("--") || value.is_empty() {
+                value = format!("v{value}");
+            }
+            let a = Args::parse(["c".to_string(), format!("--{key}"), value.clone()]).unwrap();
+            let b = Args::parse(["c".to_string(), format!("--{key}={value}")]).unwrap();
+            a == b && a.get(&key) == Some(value.as_str())
+        });
+    }
+
+    #[test]
+    fn prop_tokens_after_double_dash_are_never_flags() {
+        check("post-`--` tokens are operands", 300, |g| {
+            let n = g.usize_in(1, 6);
+            let tail: Vec<String> = (0..n)
+                .map(|i| {
+                    if g.bool() {
+                        format!("--flag{i}")
+                    } else {
+                        gen_operand(g, i)
+                    }
+                })
+                .collect();
+            let mut tokens = vec!["cmd".to_string(), "--".to_string()];
+            tokens.extend(tail.iter().cloned());
+            let parsed = Args::parse(tokens).unwrap();
+            parsed.flags.is_empty()
+                && parsed.command.as_deref() == Some("cmd")
+                && parsed.positional == tail
+        });
     }
 }

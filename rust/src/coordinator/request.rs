@@ -50,6 +50,29 @@ impl UpdateOp {
             _ => operand & bits::mask(q),
         }
     }
+
+    /// Stable wire spelling (used by the trace format and reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            UpdateOp::Add => "add",
+            UpdateOp::Sub => "sub",
+            UpdateOp::And => "and",
+            UpdateOp::Or => "or",
+            UpdateOp::Xor => "xor",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn parse(s: &str) -> Option<UpdateOp> {
+        match s {
+            "add" => Some(UpdateOp::Add),
+            "sub" => Some(UpdateOp::Sub),
+            "and" => Some(UpdateOp::And),
+            "or" => Some(UpdateOp::Or),
+            "xor" => Some(UpdateOp::Xor),
+            _ => None,
+        }
+    }
 }
 
 /// Kind of a coalesced batch (one kind per FAST batch op).
@@ -120,6 +143,15 @@ mod tests {
         assert_eq!(op.normalized_operand(1, 16), 0xFFFF);
         assert_eq!(op.normalized_operand(0, 16), 0);
         assert_eq!(op.kind(), BatchKind::Add);
+    }
+
+    #[test]
+    fn op_names_round_trip() {
+        for op in [UpdateOp::Add, UpdateOp::Sub, UpdateOp::And, UpdateOp::Or, UpdateOp::Xor] {
+            assert_eq!(UpdateOp::parse(op.name()), Some(op));
+        }
+        assert_eq!(UpdateOp::parse("nand"), None);
+        assert_eq!(UpdateOp::parse(""), None);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! | [`fig14`]     | Fig. 14        | area breakdown; 70% / 10% / 41.7%      |
 //! | [`waveforms`] | Figs. 7–8      | shift / add transients                 |
 //! | [`apps_bench`]| §III.C         | workload-level FAST vs digital         |
+//! | [`weight_update`] | §III headline | VGG-7 8-bit weight update; 96.0× / 4.4× |
 
 pub mod apps_bench;
 pub mod fig10;
@@ -22,3 +23,4 @@ pub mod fig13;
 pub mod fig14;
 pub mod table1;
 pub mod waveforms;
+pub mod weight_update;

@@ -52,6 +52,18 @@ impl Fidelity {
             _ => None,
         }
     }
+
+    /// Tier selected by the `FAST_TEST_FIDELITY` env var (the CI test
+    /// matrix runs the suite once per tier), falling back to `default`
+    /// when unset or unparseable. Tests that are not explicitly
+    /// tier-parametric use this for their engines so the matrix leg
+    /// exercises every tier end to end.
+    pub fn from_env_or(default: Fidelity) -> Fidelity {
+        std::env::var("FAST_TEST_FIDELITY")
+            .ok()
+            .and_then(|s| Self::parse(&s))
+            .unwrap_or(default)
+    }
 }
 
 impl fmt::Display for Fidelity {

@@ -34,7 +34,10 @@
 //!   functional artifacts (Layer 1/2); compiles against a clean-failing
 //!   stub unless built with `--features pjrt`.
 //! - [`apps`] — the workloads that motivate the paper: delta-update
-//!   table store (database), graph feature updates, histograms.
+//!   table store (database), graph feature updates, histograms, the
+//!   VGG-7-shaped 8-bit weight-update trainer (the paper's headline
+//!   96.0× / 4.4× task), and the deterministic trace record/replay
+//!   substrate every workload, test and bench can pin engines against.
 //! - [`metrics`], [`util`] — supporting substrates.
 //!
 //! See `docs/ARCHITECTURE.md` for the module → paper-artifact map and

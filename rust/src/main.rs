@@ -9,13 +9,17 @@ use std::time::Duration;
 
 use anyhow::bail;
 
+use fast_sram::apps::trace::{state_digest, BackendKind, Trace};
+use fast_sram::apps::trainer::{self, TrainerConfig};
 use fast_sram::cli::{usage, Args};
 use fast_sram::coordinator::{
     BitPlaneBackend, DigitalBackend, EngineConfig, FastBackend, UpdateEngine, UpdateRequest,
     XlaBackend,
 };
 use fast_sram::fastmem::Fidelity;
-use fast_sram::experiments::{apps_bench, fig10, fig11, fig12, fig13, fig14, table1, waveforms};
+use fast_sram::experiments::{
+    apps_bench, fig10, fig11, fig12, fig13, fig14, table1, waveforms, weight_update,
+};
 use fast_sram::metrics::render_table;
 use fast_sram::runtime::{default_artifact_dir, validate, Runtime};
 use fast_sram::util::rng::Rng;
@@ -32,6 +36,8 @@ fn main() -> Result<()> {
         Some("fig14") => cmd_fig14(&args),
         Some("waveforms") => cmd_waveforms(&args),
         Some("apps") => cmd_apps(&args),
+        Some("train") => cmd_train(&args),
+        Some("trace") => cmd_trace(&args),
         Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
@@ -121,6 +127,112 @@ fn cmd_apps(args: &Args) -> Result<()> {
     )?);
     print!("{}", apps_bench::render(&pairs));
     Ok(())
+}
+
+/// Build a trainer config from the shared CLI flags.
+fn trainer_config(args: &Args) -> Result<TrainerConfig> {
+    let mut cfg = TrainerConfig::vgg7(args.get_usize("rows", 128)?, args.get_usize("q", 8)?);
+    cfg.epochs = args.get_usize("epochs", cfg.epochs)?;
+    cfg.steps_per_epoch = args.get_usize("steps", cfg.steps_per_epoch)?;
+    cfg.shards = args.get_usize("shards", cfg.shards)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.density = args.get_f64("density", cfg.density)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = trainer_config(args)?;
+    let report = weight_update::run(&cfg)?;
+    print!("{}", weight_update::render(&report));
+    if !args.get_bool("no-assert") && !report.passes_bars() {
+        bail!(
+            "paper-anchored bars not met: speed {:.1}x (need >= {}x), \
+             energy {:.1}x (need >= {}x)",
+            report.speedup,
+            trainer::MIN_SPEEDUP_X,
+            report.energy_eff,
+            trainer::MIN_ENERGY_EFF_X
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("record") => {
+            let out = args
+                .get("out")
+                .ok_or_else(|| anyhow::anyhow!("trace record needs --out FILE"))?;
+            let trace = match args.get_str("workload", "vgg7") {
+                "vgg7" => trainer::record_trace(&trainer_config(args)?)?,
+                "uniform" => {
+                    let rows = args.get_usize("rows", 128)?;
+                    let q = args.get_usize("q", 8)?;
+                    anyhow::ensure!(rows >= 1, "--rows must be >= 1");
+                    anyhow::ensure!((1..=32).contains(&q), "--q must be in 1..=32");
+                    fast_sram::apps::trace::uniform_trace(
+                        rows,
+                        q,
+                        args.get_usize("updates", 5000)?,
+                        args.get_u64("seed", 66)?,
+                    )
+                }
+                other => bail!("unknown workload {other:?} (vgg7|uniform)"),
+            };
+            trace.save(out)?;
+            println!(
+                "recorded {:?}: {} events ({} updates) over {} rows x {} bits -> {out}",
+                trace.name,
+                trace.events.len(),
+                trace.updates(),
+                trace.rows,
+                trace.q
+            );
+            Ok(())
+        }
+        Some("replay") => {
+            let path = args
+                .get("in")
+                .ok_or_else(|| anyhow::anyhow!("trace replay needs --in FILE"))?;
+            let trace = Trace::load(path)?;
+            let fidelity_str = args.get_str("fidelity", "word");
+            let fidelity = Fidelity::parse(fidelity_str).ok_or_else(|| {
+                anyhow::anyhow!("unknown fidelity {fidelity_str:?} (phase|word|bitplane)")
+            })?;
+            let kind = BackendKind::from_flags(args.get_str("backend", "fast"), fidelity)?;
+            let shards = args.get_usize("shards", 1)?;
+            let rep = trace.replay_on(kind, shards)?;
+            let s = &rep.stats;
+            let shape = format!("{} ({} rows x {} bits)", trace.name, trace.rows, trace.q);
+            let digest = format!("{:016x}", state_digest(&rep.final_state));
+            let mut rows_txt = vec![
+                ("trace".to_string(), shape),
+                ("backend".to_string(), s.backend.to_string()),
+                ("shards".to_string(), format!("{shards}")),
+                ("updates applied".to_string(), format!("{}", s.completed)),
+                ("batches".to_string(), format!("{}", s.batches)),
+                ("rows/batch".to_string(), format!("{:.1}", s.rows_per_batch)),
+                ("modeled macro time".to_string(), format!("{:.3} µs", s.modeled_ns / 1000.0)),
+                (
+                    "modeled energy".to_string(),
+                    format!("{:.3} nJ", s.modeled_energy_pj / 1000.0),
+                ),
+                ("wall time".to_string(), format!("{:.2} ms", rep.wall_us / 1000.0)),
+                ("state digest".to_string(), digest),
+            ];
+            if args.get_bool("verify") {
+                let want = trace.reference_state();
+                if rep.final_state != want {
+                    bail!("replay diverged from host semantics");
+                }
+                let verdict = "bit-identical to host semantics".to_string();
+                rows_txt.push(("verified".to_string(), verdict));
+            }
+            print!("{}", render_table("trace replay", &rows_txt));
+            Ok(())
+        }
+        _ => bail!("usage: fast trace record --out FILE | fast trace replay --in FILE"),
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

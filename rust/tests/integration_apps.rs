@@ -1,0 +1,230 @@
+//! Differential coverage for the whole `apps` layer: `DeltaTable`,
+//! `GraphEngine` and `Histogram` each run the same scripted, seeded
+//! workload across every fidelity tier (phase-accurate, word-fast,
+//! bit-plane) plus the digital baseline, and must produce results
+//! bit-identical to a host-semantics reference. The three FAST tiers
+//! must additionally agree on the modeled energy account *exactly* —
+//! the tier is a speed knob, never a semantics or accounting change.
+//!
+//! Engines are built through `BackendKind::start`, which disables the
+//! group-commit deadline and size seals, so batch structure (and
+//! therefore the energy report) is a pure function of the scripted
+//! workload — deterministic across runs and hosts.
+
+use std::collections::HashMap;
+
+use fast_sram::apps::BackendKind;
+use fast_sram::apps::{reference_round, CsrGraph, DeltaTable, GraphEngine, Histogram};
+use fast_sram::fastmem::Fidelity;
+use fast_sram::util::bits;
+use fast_sram::util::rng::Rng;
+
+/// Every executor the apps must agree across.
+const KINDS: [BackendKind; 4] = [
+    BackendKind::Fast(Fidelity::PhaseAccurate),
+    BackendKind::Fast(Fidelity::WordFast),
+    BackendKind::BitPlane,
+    BackendKind::Digital,
+];
+
+fn is_fast(kind: BackendKind) -> bool {
+    !matches!(kind, BackendKind::Digital)
+}
+
+// ---------------------------------------------------------------------------
+// DeltaTable
+// ---------------------------------------------------------------------------
+
+/// Scripted table workload: returns (scan result, modeled energy pJ).
+fn run_table(kind: BackendKind) -> (Vec<(u64, u32)>, f64) {
+    const ROWS: usize = 128;
+    const Q: usize = 16;
+    let mut t = DeltaTable::new(kind.start(ROWS, Q, 1).unwrap());
+    let mut rng = Rng::new(0xDE17A);
+    for _ in 0..3000 {
+        let key = rng.below(100);
+        let delta = 1 + rng.below(500) as u32;
+        match rng.below(10) {
+            0 => t.put(key, delta).unwrap(),
+            1 | 2 => t.decrement(key, delta).unwrap(),
+            _ => t.increment(key, delta).unwrap(),
+        }
+    }
+    let pairs = t.scan().unwrap();
+    let energy = t.stats().modeled_energy_pj;
+    t.close().unwrap();
+    (pairs, energy)
+}
+
+/// The same workload on a plain HashMap with host modular arithmetic.
+fn reference_table() -> Vec<(u64, u32)> {
+    const Q: usize = 16;
+    let mut map: HashMap<u64, u32> = HashMap::new();
+    let mut rng = Rng::new(0xDE17A);
+    for _ in 0..3000 {
+        let key = rng.below(100);
+        let delta = 1 + rng.below(500) as u32;
+        let slot = map.entry(key).or_insert(0);
+        match rng.below(10) {
+            0 => *slot = delta,
+            1 | 2 => *slot = bits::sub_mod(*slot, delta, Q),
+            _ => *slot = bits::add_mod(*slot, delta, Q),
+        }
+    }
+    let mut out: Vec<(u64, u32)> = map.into_iter().collect();
+    out.sort_unstable();
+    out
+}
+
+#[test]
+fn delta_table_is_bit_identical_across_tiers_and_backends() {
+    let want = reference_table();
+    let mut fast_energy: Option<f64> = None;
+    for kind in KINDS {
+        let (pairs, energy) = run_table(kind);
+        assert_eq!(pairs, want, "{}", kind.label());
+        assert!(energy > 0.0, "{}", kind.label());
+        if is_fast(kind) {
+            match fast_energy {
+                None => fast_energy = Some(energy),
+                Some(e) => assert_eq!(
+                    energy,
+                    e,
+                    "{}: FAST tiers must agree on energy exactly",
+                    kind.label()
+                ),
+            }
+        } else {
+            // The digital baseline sweeps every row per batch — it must
+            // cost measurably more than FAST on the same workload.
+            assert!(
+                energy > fast_energy.unwrap(),
+                "digital {energy} pJ must exceed fast {} pJ",
+                fast_energy.unwrap()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GraphEngine
+// ---------------------------------------------------------------------------
+
+fn run_graph(kind: BackendKind) -> (Vec<u32>, f64) {
+    const Q: usize = 16;
+    let g = CsrGraph::ring_with_chords(96, 7);
+    let feats: Vec<u32> = (0..96).map(|i| (i as u32 * 131 + 17) & bits::mask(Q)).collect();
+    let mut ge = GraphEngine::new(g, kind.start(128, Q, 1).unwrap()).unwrap();
+    ge.set_features(&feats).unwrap();
+    ge.run(3, 1).unwrap();
+    let out = ge.features().unwrap();
+    let energy = ge.stats().modeled_energy_pj;
+    ge.close().unwrap();
+    (out, energy)
+}
+
+#[test]
+fn graph_propagation_is_bit_identical_across_tiers_and_backends() {
+    const Q: usize = 16;
+    let g = CsrGraph::ring_with_chords(96, 7);
+    let feats: Vec<u32> = (0..96).map(|i| (i as u32 * 131 + 17) & bits::mask(Q)).collect();
+    let mut want = feats;
+    for _ in 0..3 {
+        want = reference_round(&g, &want, Q, |f| f >> 1);
+    }
+    let mut fast_energy: Option<f64> = None;
+    for kind in KINDS {
+        let (out, energy) = run_graph(kind);
+        assert_eq!(out, want, "{}", kind.label());
+        if is_fast(kind) {
+            match fast_energy {
+                None => fast_energy = Some(energy),
+                Some(e) => assert_eq!(energy, e, "{}", kind.label()),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram
+// ---------------------------------------------------------------------------
+
+fn run_histogram(kind: BackendKind) -> (Vec<u32>, f64) {
+    let mut h = Histogram::new(kind.start(64, 16, 1).unwrap(), 0.0, 1.0, 48).unwrap();
+    let mut rng = Rng::new(0x415706);
+    for _ in 0..4000 {
+        let v = rng.f64();
+        if rng.chance(0.1) {
+            h.record_weighted(v, 1 + rng.below(9) as u32).unwrap();
+        } else {
+            h.record(v).unwrap();
+        }
+    }
+    let counts = h.counts().unwrap();
+    let energy = h.stats().modeled_energy_pj;
+    h.close().unwrap();
+    (counts, energy)
+}
+
+#[test]
+fn histogram_is_bit_identical_across_tiers_and_backends() {
+    // Host reference: same seeded stream, same bucket function.
+    let probe = Histogram::new(
+        BackendKind::Fast(Fidelity::WordFast).start(64, 16, 1).unwrap(),
+        0.0,
+        1.0,
+        48,
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x415706);
+    let mut want = vec![0u32; 48];
+    for _ in 0..4000 {
+        let v = rng.f64();
+        let w = if rng.chance(0.1) { 1 + rng.below(9) as u32 } else { 1 };
+        want[probe.bucket_of(v)] += w;
+    }
+    probe.close().unwrap();
+
+    let mut fast_energy: Option<f64> = None;
+    for kind in KINDS {
+        let (counts, energy) = run_histogram(kind);
+        assert_eq!(counts, want, "{}", kind.label());
+        if is_fast(kind) {
+            match fast_energy {
+                None => fast_energy = Some(energy),
+                Some(e) => assert_eq!(energy, e, "{}", kind.label()),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded apps stay on the reference too (env-selectable tier so the
+// CI fidelity matrix exercises every tier through the apps layer).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_app_engines_match_single_shard_results() {
+    let tier = Fidelity::from_env_or(Fidelity::WordFast);
+    let kind = BackendKind::Fast(tier);
+    let single = run_table_sharded(kind, 1);
+    for shards in [2usize, 4] {
+        assert_eq!(run_table_sharded(kind, shards), single, "shards = {shards}");
+    }
+}
+
+fn run_table_sharded(kind: BackendKind, shards: usize) -> Vec<(u64, u32)> {
+    let mut t = DeltaTable::new(kind.start(128, 16, shards).unwrap());
+    let mut rng = Rng::new(0x5A4D);
+    for _ in 0..1500 {
+        let key = rng.below(90);
+        if rng.chance(0.25) {
+            t.decrement(key, 1 + rng.below(100) as u32).unwrap();
+        } else {
+            t.increment(key, 1 + rng.below(100) as u32).unwrap();
+        }
+    }
+    let pairs = t.scan().unwrap();
+    t.close().unwrap();
+    pairs
+}

@@ -9,6 +9,7 @@ use std::time::Duration;
 use fast_sram::coordinator::{
     EngineConfig, FastBackend, UpdateEngine, UpdateOp, UpdateRequest,
 };
+use fast_sram::fastmem::Fidelity;
 use fast_sram::util::bits;
 use fast_sram::util::rng::Rng;
 
@@ -196,6 +197,132 @@ fn same_row_deltas_keep_program_order_within_shard() {
         "mixed-kind traffic must seal on kind change"
     );
     engine.shutdown().unwrap();
+}
+
+/// Deterministic randomized stress sweep: every trial draws a shard
+/// count, seal policy (deadline and/or size seal), queue depth, row
+/// space, op mix, and per-producer submission strategy (blocking
+/// singles vs bulk chunks of random size) from a seeded meta-RNG, then
+/// runs ≥ 4 producers with disjoint row ownership against a sequential
+/// reference. Disjoint ownership keeps the per-row reference exact
+/// under non-commutative op mixes no matter how threads interleave;
+/// the seeded draws make every trial replayable from its printed seed.
+/// After the flush the engine must match the reference exactly and the
+/// books must balance; a post-flush tail of updates is then read back
+/// through the read-your-writes path (forcing the final seals) before
+/// shutdown, so a shutdown that dropped sealed batches would surface
+/// as a failed read or a failed join.
+#[test]
+fn randomized_stress_matches_reference_across_configs() {
+    // The CI fidelity matrix points this test's backends at each tier;
+    // phase-accurate is ~100× word-fast per batch, so trim the load.
+    let tier = Fidelity::from_env_or(Fidelity::WordFast);
+    let per_thread = if tier == Fidelity::PhaseAccurate { 250 } else { 2000 };
+
+    for trial in 0..6u64 {
+        let seed = 0x5EED_0000 + trial;
+        let mut meta = Rng::new(seed);
+        let shards = 1usize << meta.below(4); // 1 | 2 | 4 | 8
+        let producers = 8; // ≥ 4, and every shard sees ≥ 1 producer
+        let rows = [64usize, 128, 256][meta.below(3) as usize]; // all divide by 8
+        let q = [8usize, 16][meta.below(2) as usize];
+        let ops = [UpdateOp::Add, UpdateOp::Sub, UpdateOp::And, UpdateOp::Or, UpdateOp::Xor];
+
+        let mut cfg = EngineConfig::sharded(rows, q, shards);
+        cfg.seal_deadline = Duration::from_micros(1 + meta.below(400));
+        cfg.seal_at_rows = if meta.chance(0.5) {
+            None
+        } else {
+            Some(1 + meta.below(rows as u64) as usize)
+        };
+        cfg.queue_cap = 64 << meta.below(5); // 64 .. 1024
+
+        // (stream, bulk chunk size or None) per producer.
+        let streams: Vec<(Vec<UpdateRequest>, Option<usize>)> = (0..producers)
+            .map(|t| {
+                let mut rng = Rng::new(seed ^ (0xA0 + t as u64));
+                let stream = (0..per_thread)
+                    .map(|_| {
+                        let slot = rng.below((rows / producers) as u64) as usize;
+                        UpdateRequest {
+                            row: slot * producers + t,
+                            op: ops[rng.below(ops.len() as u64) as usize],
+                            operand: rng.below(1 << q) as u32,
+                        }
+                    })
+                    .collect();
+                let chunking = if rng.chance(0.5) {
+                    Some(1 + rng.below(256) as usize)
+                } else {
+                    None
+                };
+                (stream, chunking)
+            })
+            .collect();
+
+        let mut reference = vec![0u32; rows];
+        for (stream, _) in &streams {
+            for req in stream {
+                apply_reference(&mut reference, req, q);
+            }
+        }
+
+        let engine = UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows_fidelity(plan.rows, plan.q, tier)))
+        })
+        .unwrap();
+        std::thread::scope(|scope| {
+            for (stream, chunking) in &streams {
+                let engine = &engine;
+                scope.spawn(move || match chunking {
+                    Some(n) => {
+                        for chunk in stream.chunks(*n) {
+                            engine.submit_many(chunk.to_vec()).unwrap();
+                        }
+                    }
+                    None => {
+                        for req in stream {
+                            engine.submit_blocking(*req).unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        engine.flush().unwrap();
+
+        let ctx = format!(
+            "trial {trial} (seed {seed:#x}): rows={rows} q={q} shards={shards} tier={tier}"
+        );
+        assert_eq!(engine.snapshot().unwrap(), reference, "{ctx}");
+        let s = engine.stats();
+        let total = (producers * per_thread) as u64;
+        assert_eq!(s.submitted, total, "{ctx}");
+        assert_eq!(s.completed, total, "{ctx}: flush must drain every request");
+        assert_eq!(s.rejected, 0, "{ctx}: blocking paths never reject");
+        assert_eq!(s.queue_depth, 0, "{ctx}: queues must drain");
+        assert_eq!(s.shards.len(), shards, "{ctx}");
+        assert_eq!(s.shards.iter().map(|sc| sc.requests).sum::<u64>(), total, "{ctx}");
+        assert_eq!(
+            s.shards.iter().map(|sc| sc.batches_sealed).sum::<u64>(),
+            s.batches,
+            "{ctx}"
+        );
+
+        // Tail: updates submitted after the big flush must survive the
+        // seal-on-read path right up to shutdown (no dropped batches).
+        let mut tail_reference = reference;
+        for i in 0..16usize {
+            let row = (i * 7) % rows;
+            let req = UpdateRequest::add(row, 3);
+            apply_reference(&mut tail_reference, &req, q);
+            engine.submit_blocking(req).unwrap();
+        }
+        for i in 0..16usize {
+            let row = (i * 7) % rows;
+            assert_eq!(engine.read(row).unwrap(), tail_reference[row], "{ctx} tail row {row}");
+        }
+        engine.shutdown().unwrap();
+    }
 }
 
 /// The group-commit deadline seals throughput-starved shards: with a
