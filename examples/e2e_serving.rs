@@ -77,8 +77,10 @@ fn main() -> fast_sram::Result<()> {
                 n_graph += 1;
             }
         }
-        engine.flush()?;
-        shadow.flush()?;
+        // Commit the round: per-shard drains (single-shard engines
+        // here, so one drain each — no whole-engine flush anymore).
+        engine.drain_shard(0)?;
+        shadow.drain_shard(0)?;
     }
     let graph_wall = t1.elapsed();
 

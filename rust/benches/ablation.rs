@@ -34,7 +34,7 @@ fn run_with_seal(rows: usize, seal: Option<usize>, updates: usize) -> (u64, f64,
         }
     }
     e.submit_many(chunk).unwrap();
-    e.flush().unwrap();
+    e.drain_shard(0).unwrap(); // single-shard config: one per-shard drain
     let s = e.stats();
     let out = (s.batches, s.modeled_ns, s.rows_per_batch);
     e.shutdown().unwrap();

@@ -51,7 +51,7 @@ fn main() {
                 .submit_blocking(UpdateRequest::add(row, 1))
                 .unwrap();
         }
-        engine.flush().unwrap();
+        engine.drain_shard(0).unwrap();
         let dt = t0.elapsed();
         let stats = engine.stats();
         println!(
@@ -86,7 +86,7 @@ fn main() {
             }
         }
         engine.submit_many(chunk).unwrap();
-        engine.flush().unwrap();
+        engine.drain_shard(0).unwrap();
         let dt = t0.elapsed();
         let stats = engine.stats();
         println!(

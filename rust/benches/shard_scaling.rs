@@ -71,7 +71,7 @@ fn run(shards: usize) -> RunResult {
             });
         }
     });
-    engine.flush().unwrap();
+    engine.drain_all().unwrap();
     let wall = t0.elapsed();
 
     let s = engine.stats();

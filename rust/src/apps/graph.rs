@@ -138,10 +138,17 @@ impl GraphEngine {
                 reqs.push(UpdateRequest::add(t, m));
             }
         }
+        let mut tickets = Vec::new();
         for chunk in reqs.chunks(8192) {
-            self.engine.submit_many(chunk.to_vec())?;
+            tickets.extend(self.engine.submit_many_ticketed(chunk.to_vec())?);
         }
-        self.engine.flush()
+        // Commit the round (explicit barrier, built from per-shard
+        // drains), then wait for every chunk's commit ack.
+        self.engine.drain_all()?;
+        for t in tickets {
+            t.wait()?;
+        }
+        Ok(())
     }
 
     /// Run `rounds` of degree-normalized-ish accumulate: each node sends

@@ -11,7 +11,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail};
 
-use crate::coordinator::{UpdateEngine, UpdateRequest};
+use crate::coordinator::{Ticket, UpdateEngine, UpdateRequest};
 use crate::Result;
 
 /// A key→counter table backed by the update engine.
@@ -80,7 +80,36 @@ impl DeltaTable {
         self.engine.submit_blocking(UpdateRequest::sub(row, delta))
     }
 
-    /// Current value (read-your-writes: flushes pending deltas).
+    /// key += delta with a completion [`Ticket`]: the ticket resolves
+    /// (with the shard's commit_seq and modeled latency) once the
+    /// delta's batch is applied — a durable ack without flushing
+    /// anything.
+    pub fn increment_acked(&mut self, key: u64, delta: u32) -> Result<Ticket> {
+        let row = self.row_for(key)?;
+        self.engine.submit_blocking_ticketed(UpdateRequest::add(row, delta))
+    }
+
+    /// key -= delta with a completion [`Ticket`].
+    pub fn decrement_acked(&mut self, key: u64, delta: u32) -> Result<Ticket> {
+        let row = self.row_for(key)?;
+        self.engine.submit_blocking_ticketed(UpdateRequest::sub(row, delta))
+    }
+
+    /// Commit every pending delta for the shard owning `key`'s row
+    /// (per-shard drain; other shards keep batching). Returns that
+    /// shard's last commit sequence number.
+    pub fn commit_key(&mut self, key: u64) -> Result<u64> {
+        let row = *self
+            .index
+            .get(&key)
+            .ok_or_else(|| anyhow!("key {key} not present"))?;
+        let shard = self.engine.shard_of(row)?;
+        self.engine.drain_shard(shard)
+    }
+
+    /// Current value. Read-your-writes without a global flush: only
+    /// the owning shard — and only when it actually pends a delta for
+    /// this key's row — seals its open batch.
     pub fn get(&mut self, key: u64) -> Result<u32> {
         let row = *self
             .index
@@ -141,6 +170,21 @@ mod tests {
         t.decrement(42, 3).unwrap();
         assert_eq!(t.get(42).unwrap(), 12);
         assert_eq!(t.get(1000).unwrap(), 7);
+        t.close().unwrap();
+    }
+
+    #[test]
+    fn acked_increments_resolve_and_read_back() {
+        let mut t = table(128);
+        let t1 = t.increment_acked(7, 40).unwrap();
+        let t2 = t.decrement_acked(7, 1).unwrap();
+        let seq = t.commit_key(7).unwrap();
+        let c1 = t1.wait().unwrap();
+        let c2 = t2.wait().unwrap();
+        assert!(c1.commit_seq <= seq && c2.commit_seq <= seq);
+        assert!(c1.modeled_ns > 0.0);
+        assert_eq!(t.get(7).unwrap(), 39);
+        assert!(t.stats().tickets_resolved >= 2);
         t.close().unwrap();
     }
 

@@ -13,10 +13,11 @@
 //!   `serialize → parse → serialize` is byte-identical.
 //! - **Determinism** — [`BackendKind::start`] builds engines with the
 //!   group-commit deadline and size seals disabled, so batches seal
-//!   *only* at the trace's explicit `Flush` barriers (plus forced
-//!   flushes on reads/writes). The batch structure, and therefore the
-//!   modeled energy/latency accounting, is a pure function of the
-//!   trace — never of wall-clock timing.
+//!   *only* at the trace's explicit `Flush` barriers (spelled as
+//!   per-shard drains — there is no whole-engine flush) plus the
+//!   forced seal a write triggers when its row is pending. The batch
+//!   structure, and therefore the modeled energy/latency accounting,
+//!   is a pure function of the trace — never of wall-clock timing.
 //! - **Oracle** — [`Trace::reference_state`] folds the events over a
 //!   plain `Vec<u32>` with `util::bits` host arithmetic.
 //!
@@ -45,8 +46,8 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, ensure, Context};
 
 use crate::coordinator::{
-    BitPlaneBackend, DigitalBackend, EngineConfig, EngineStats, FastBackend, UpdateEngine,
-    UpdateOp, UpdateRequest,
+    BitPlaneBackend, DigitalBackend, EngineConfig, EngineStats, FastBackend, Ticket,
+    UpdateEngine, UpdateOp, UpdateRequest,
 };
 use crate::fastmem::Fidelity;
 use crate::util::bits;
@@ -148,6 +149,71 @@ pub enum TraceEvent {
     Flush,
 }
 
+impl TraceEvent {
+    /// Parse one canonical `fast-trace-v1` event line, validating the
+    /// row against `rows` and the operand/value against `q` bits.
+    /// Shared by [`Trace::parse_jsonl`] and the `fast serve` protocol
+    /// (`crate::serve`), which speaks exactly these lines on the wire.
+    pub fn parse_line(line: &str, rows: usize, q: usize) -> Result<TraceEvent> {
+        let v = Json::parse(line).context("trace event")?;
+        let word = |v: &Json| -> Result<u32> {
+            let n = v
+                .get("v")
+                .ok_or_else(|| anyhow!("missing value"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("value is not an integer"))?;
+            ensure!(
+                n as u64 <= bits::mask(q) as u64,
+                "value {n} exceeds q={q} bits"
+            );
+            Ok(n as u32)
+        };
+        let row_of = |v: &Json| -> Result<usize> {
+            let r = v
+                .get("r")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing row"))?;
+            ensure!(r < rows, "row {r} out of range {rows}");
+            Ok(r)
+        };
+        match v.get("t").and_then(Json::as_str) {
+            Some("u") => {
+                let op = v
+                    .get("o")
+                    .and_then(Json::as_str)
+                    .and_then(UpdateOp::parse)
+                    .ok_or_else(|| anyhow!("bad or missing op"))?;
+                Ok(TraceEvent::Update(UpdateRequest {
+                    row: row_of(&v)?,
+                    op,
+                    operand: word(&v)?,
+                }))
+            }
+            Some("w") => Ok(TraceEvent::Write { row: row_of(&v)?, value: word(&v)? }),
+            Some("f") => Ok(TraceEvent::Flush),
+            other => bail!("unknown event type {other:?}"),
+        }
+    }
+
+    /// Canonical one-line serialization (no trailing newline) — the
+    /// inverse of [`Self::parse_line`] and the per-event body of
+    /// [`Trace::to_jsonl`].
+    pub fn to_json_line(&self) -> String {
+        match *self {
+            TraceEvent::Update(req) => format!(
+                "{{\"t\":\"u\",\"o\":\"{}\",\"r\":{},\"v\":{}}}",
+                req.op.name(),
+                req.row,
+                req.operand
+            ),
+            TraceEvent::Write { row, value } => {
+                format!("{{\"t\":\"w\",\"r\":{row},\"v\":{value}}}")
+            }
+            TraceEvent::Flush => "{\"t\":\"f\"}".to_string(),
+        }
+    }
+}
+
 /// A recorded workload: header metadata plus the event stream.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Trace {
@@ -208,18 +274,8 @@ impl Trace {
             TRACE_FORMAT, self.name, self.rows, self.q, self.seed
         ));
         for e in &self.events {
-            match *e {
-                TraceEvent::Update(req) => out.push_str(&format!(
-                    "{{\"t\":\"u\",\"o\":\"{}\",\"r\":{},\"v\":{}}}\n",
-                    req.op.name(),
-                    req.row,
-                    req.operand
-                )),
-                TraceEvent::Write { row, value } => {
-                    out.push_str(&format!("{{\"t\":\"w\",\"r\":{row},\"v\":{value}}}\n"))
-                }
-                TraceEvent::Flush => out.push_str("{\"t\":\"f\"}\n"),
-            }
+            out.push_str(&e.to_json_line());
+            out.push('\n');
         }
         out
     }
@@ -258,53 +314,12 @@ impl Trace {
             .parse()
             .map_err(|_| anyhow!("header seed is not a u64"))?;
         let mut trace = Trace::new(name, rows, q, seed);
-        let word = move |v: &Json, line: usize| -> Result<u32> {
-            let n = v
-                .as_usize()
-                .ok_or_else(|| anyhow!("line {}: value is not an integer", line + 1))?;
-            ensure!(
-                n as u64 <= bits::mask(q) as u64,
-                "line {}: value {n} exceeds q={q} bits",
-                line + 1
-            );
-            Ok(n as u32)
-        };
-        let row_of = move |v: &Json, line: usize| -> Result<usize> {
-            let r = v
-                .get("r")
-                .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("line {}: missing row", line + 1))?;
-            ensure!(r < rows, "line {}: row {r} out of range {rows}", line + 1);
-            Ok(r)
-        };
         for (i, line) in lines {
             if line.is_empty() {
                 continue; // tolerate a trailing newline
             }
-            let v = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
-            let value_field = |v: &Json| {
-                v.get("v").ok_or_else(|| anyhow!("line {}: missing value", i + 1))
-            };
-            let event = match v.get("t").and_then(Json::as_str) {
-                Some("u") => {
-                    let op = v
-                        .get("o")
-                        .and_then(Json::as_str)
-                        .and_then(UpdateOp::parse)
-                        .ok_or_else(|| anyhow!("line {}: bad or missing op", i + 1))?;
-                    TraceEvent::Update(UpdateRequest {
-                        row: row_of(&v, i)?,
-                        op,
-                        operand: word(value_field(&v)?, i)?,
-                    })
-                }
-                Some("w") => TraceEvent::Write {
-                    row: row_of(&v, i)?,
-                    value: word(value_field(&v)?, i)?,
-                },
-                Some("f") => TraceEvent::Flush,
-                other => bail!("line {}: unknown event type {other:?}", i + 1),
-            };
+            let event = TraceEvent::parse_line(line, rows, q)
+                .with_context(|| format!("trace line {}", i + 1))?;
             trace.events.push(event);
         }
         Ok(trace)
@@ -326,9 +341,13 @@ impl Trace {
     // -- replay -------------------------------------------------------------
 
     /// Replay onto a running engine (must match the trace's rows/q; any
-    /// shard count). Consecutive updates are bulk-submitted in order,
-    /// writes and flush barriers interleave exactly as recorded, and a
-    /// final flush + snapshot closes the run. The caller keeps engine
+    /// shard count). Consecutive updates are bulk-submitted in order
+    /// *with completion tickets*; each flush barrier drains every shard
+    /// individually (per-shard drain — there is no whole-engine flush
+    /// anymore) and waits for the step's tickets, so the engine's
+    /// per-shard commit-latency histograms record one sample per shard
+    /// per step. Writes interleave exactly as recorded, and a final
+    /// barrier + snapshot closes the run. The caller keeps engine
     /// ownership (and shuts it down).
     pub fn replay(&self, engine: &UpdateEngine) -> Result<ReplayReport> {
         ensure!(
@@ -341,32 +360,44 @@ impl Trace {
         );
         let t0 = std::time::Instant::now();
         let mut pending: Vec<UpdateRequest> = Vec::new();
-        let drain = |pending: &mut Vec<UpdateRequest>| -> Result<()> {
-            if !pending.is_empty() {
-                engine.submit_many(std::mem::take(pending))?;
-            }
-            Ok(())
-        };
+        let mut tickets: Vec<Ticket> = Vec::new();
+        let mut tickets_waited = 0u64;
         for e in &self.events {
             match *e {
                 TraceEvent::Update(req) => pending.push(req),
                 TraceEvent::Write { row, value } => {
-                    drain(&mut pending)?;
+                    // Per-shard FIFO orders the write after the chunk.
+                    if !pending.is_empty() {
+                        tickets.extend(engine.submit_many_ticketed(std::mem::take(&mut pending))?);
+                    }
                     engine.write(row, value)?;
                 }
                 TraceEvent::Flush => {
-                    drain(&mut pending)?;
-                    engine.flush()?;
+                    if !pending.is_empty() {
+                        tickets.extend(engine.submit_many_ticketed(std::mem::take(&mut pending))?);
+                    }
+                    engine.drain_all()?;
+                    for t in tickets.drain(..) {
+                        t.wait()?;
+                        tickets_waited += 1;
+                    }
                 }
             }
         }
-        drain(&mut pending)?;
-        engine.flush()?;
+        if !pending.is_empty() {
+            tickets.extend(engine.submit_many_ticketed(std::mem::take(&mut pending))?);
+        }
+        engine.drain_all()?;
+        for t in tickets.drain(..) {
+            t.wait()?;
+            tickets_waited += 1;
+        }
         let final_state = engine.snapshot()?;
         Ok(ReplayReport {
             final_state,
             stats: engine.stats(),
             wall_us: t0.elapsed().as_secs_f64() * 1e6,
+            tickets_waited,
         })
     }
 
@@ -409,6 +440,9 @@ pub struct ReplayReport {
     pub final_state: Vec<u32>,
     pub stats: EngineStats,
     pub wall_us: f64,
+    /// Completion tickets the replay waited on (one per shard touched
+    /// per step — every one resolved, or the replay errored).
+    pub tickets_waited: u64,
 }
 
 /// FNV-1a digest of a row-state vector — a compact fingerprint for
@@ -490,6 +524,24 @@ mod tests {
         assert_eq!(rep.final_state, t.reference_state());
         assert_eq!(rep.stats.completed, 500);
         assert!(rep.stats.modeled_energy_pj > 0.0);
+        // The ticketed replay path resolved one ack per shard per step.
+        assert!(rep.tickets_waited > 0);
+        assert_eq!(rep.stats.tickets_resolved, rep.tickets_waited);
+        assert!(rep.stats.shards[0].commit_wall.count > 0);
+        assert!(rep.stats.shards[0].commit_modeled.count > 0);
+    }
+
+    #[test]
+    fn event_lines_round_trip_through_parse_line() {
+        let t = tiny_trace();
+        for e in &t.events {
+            let line = e.to_json_line();
+            assert_eq!(TraceEvent::parse_line(&line, t.rows, t.q).unwrap(), *e, "{line}");
+        }
+        // Validation still applies per line.
+        assert!(TraceEvent::parse_line("{\"t\":\"w\",\"r\":99,\"v\":0}", 8, 8).is_err());
+        assert!(TraceEvent::parse_line("{\"t\":\"u\",\"o\":\"add\",\"r\":0,\"v\":256}", 8, 8).is_err());
+        assert!(TraceEvent::parse_line("not json", 8, 8).is_err());
     }
 
     #[test]

@@ -240,6 +240,12 @@ pub struct TrainRun {
     pub modeled_pj: f64,
     /// Host wall-clock of the replay (µs).
     pub wall_us: f64,
+    /// Completion tickets the ticketed replay waited on (one per shard
+    /// per training step; all resolved or the run errored).
+    pub tickets: u64,
+    /// Per-shard submit→commit wall-clock latency over the run's steps
+    /// — the per-step latency the ticket refactor makes measurable.
+    pub commit_wall: Vec<crate::metrics::LatencySummary>,
     /// Final weight state (for cross-backend bit-identity checks).
     pub final_state: Vec<u32>,
 }
@@ -291,6 +297,8 @@ pub fn run_trace(cfg: &TrainerConfig, trace: &Trace, kind: BackendKind) -> Resul
         modeled_ns: report.stats.modeled_ns,
         modeled_pj: report.stats.modeled_energy_pj,
         wall_us: report.wall_us,
+        tickets: report.tickets_waited,
+        commit_wall: report.stats.shards.iter().map(|s| s.commit_wall).collect(),
         final_state: report.final_state,
     })
 }
@@ -430,6 +438,12 @@ mod tests {
             cfg.shards = shards;
             let sharded = run_trace(&cfg, &trace, BackendKind::Fast(Fidelity::WordFast)).unwrap();
             assert_eq!(sharded.final_state, one.final_state, "shards = {shards}");
+            // Ticketed replay: one ack per shard per step, and the
+            // per-shard commit histograms saw every step.
+            let steps = (cfg.epochs * cfg.steps_per_epoch) as u64;
+            assert_eq!(sharded.tickets, steps * shards as u64, "shards = {shards}");
+            assert_eq!(sharded.commit_wall.len(), shards);
+            assert!(sharded.commit_wall.iter().all(|s| s.count == steps));
             // Dense flush groups touch every shard, so the per-bank
             // energy accounting sums to the same total.
             assert!(

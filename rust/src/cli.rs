@@ -122,6 +122,40 @@ impl Args {
     pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
+
+    /// Resolve a renamed flag: prefer the `new` spelling, fall back to
+    /// the deprecated `old` one. The second field reports how the old
+    /// spelling was used, so callers can emit a one-line deprecation
+    /// warning (see `--flush-us` → `--seal-deadline-us` on
+    /// `fast serve`).
+    pub fn get_renamed(&self, new: &str, old: &str) -> (Option<&str>, RenamedUse) {
+        let new_v = self.get(new);
+        let old_v = self.get(old);
+        match (new_v, old_v) {
+            (Some(v), Some(_)) => (Some(v), RenamedUse::Both),
+            (Some(v), None) => (Some(v), RenamedUse::NewOnly),
+            (None, Some(v)) => (Some(v), RenamedUse::LegacyOnly),
+            (None, None) => (None, RenamedUse::Neither),
+        }
+    }
+}
+
+/// How a renamed flag pair was spelled on the command line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RenamedUse {
+    Neither,
+    NewOnly,
+    /// Only the deprecated spelling appeared (warn, honour it).
+    LegacyOnly,
+    /// Both appeared: the new spelling wins (warn about the loser).
+    Both,
+}
+
+impl RenamedUse {
+    /// Should the caller print a deprecation warning?
+    pub fn deprecated(self) -> bool {
+        matches!(self, RenamedUse::LegacyOnly | RenamedUse::Both)
+    }
 }
 
 /// Usage text for the `fast` binary.
@@ -150,7 +184,8 @@ experiment commands (regenerate the paper's tables/figures):
                                        --no-assert
 
 system commands:
-  serve        [--rows 1024] [--q 16] [--banks 8] [--updates 100000]
+  serve        [--listen 127.0.0.1:4750 | --stdio] [--stats-json]
+               [--rows 1024] [--q 16] [--banks 8]
                [--backend fast|digital|xla]
                [--fidelity phase|word|bitplane]
                                        model tier for --backend fast: phase-accurate,
@@ -158,8 +193,20 @@ system commands:
                                        64 rows per machine word)
                [--shards 1]            worker shards (power of two; rows % shards == 0)
                [--seal-deadline-us 100] group-commit deadline for open batches
+                                       (--flush-us is the deprecated spelling; kept
+                                       as an alias, --seal-deadline-us wins)
                [--seal-rows N]         size seal: batch seals at N touched rows
-               run the update engine demo
+               run the fast-serve-v1 front-end: a line protocol speaking
+               fast-trace-v1 events over TCP (multi-client) or stdio, with
+               per-connection MODE SUB (fire-and-forget) / MODE CMT
+               (wait-for-ticket: replies carry shard, commit_seq, seal
+               reason, modeled ns), READ/WAIT/DRAIN/DIGEST/STATS, ERR-busy
+               backpressure, and a clean per-shard drain on SHUTDOWN
+  client       --connect HOST:PORT [--in TRACE] [--mode sub|cmt]
+               [--digest] [--shutdown]
+               drive a running `fast serve`: stream a recorded trace through
+               the protocol, print the final state digest, optionally shut
+               the server down
   trace record --out FILE [--workload vgg7|uniform] [--rows 128] [--q 8]
                vgg7 (default): the train flags apply — [--epochs 2]
                  [--steps 4] [--density 1.0] [--seed 30311]
@@ -167,6 +214,7 @@ system commands:
                                        record a deterministic workload trace
   trace replay --in FILE [--backend fast|bitplane|digital]
                [--fidelity phase|word|bitplane] [--shards 1] [--verify]
+               [--digest-only]         print just the final-state digest
                                        replay a trace bit-identically onto any
                                        backend / fidelity / shard configuration
   validate     [--artifacts artifacts] [--trials 3]
@@ -339,6 +387,66 @@ mod tests {
             let a = Args::parse(["c".to_string(), format!("--{key}"), value.clone()]).unwrap();
             let b = Args::parse(["c".to_string(), format!("--{key}={value}")]).unwrap();
             a == b && a.get(&key) == Some(value.as_str())
+        });
+    }
+
+    // ---- renamed-flag resolution (satellite: --flush-us deprecation) ----
+
+    #[test]
+    fn renamed_flag_resolution_cases() {
+        let neither = Args::parse(["serve"]).unwrap();
+        assert_eq!(
+            neither.get_renamed("seal-deadline-us", "flush-us"),
+            (None, RenamedUse::Neither)
+        );
+        let new_only = Args::parse(["serve", "--seal-deadline-us", "250"]).unwrap();
+        assert_eq!(
+            new_only.get_renamed("seal-deadline-us", "flush-us"),
+            (Some("250"), RenamedUse::NewOnly)
+        );
+        let legacy = Args::parse(["serve", "--flush-us", "99"]).unwrap();
+        let (v, used) = legacy.get_renamed("seal-deadline-us", "flush-us");
+        assert_eq!((v, used), (Some("99"), RenamedUse::LegacyOnly));
+        assert!(used.deprecated());
+        // Conflict: the new spelling wins regardless of order.
+        for tokens in [
+            ["serve", "--flush-us", "99", "--seal-deadline-us", "250"],
+            ["serve", "--seal-deadline-us", "250", "--flush-us", "99"],
+        ] {
+            let both = Args::parse(tokens).unwrap();
+            let (v, used) = both.get_renamed("seal-deadline-us", "flush-us");
+            assert_eq!((v, used), (Some("250"), RenamedUse::Both));
+            assert!(used.deprecated());
+        }
+        assert!(!RenamedUse::NewOnly.deprecated());
+        assert!(!RenamedUse::Neither.deprecated());
+    }
+
+    #[test]
+    fn prop_renamed_flag_prefers_new_and_flags_legacy() {
+        // For any pair of values and any spelling combination, the
+        // resolution is total, the new spelling wins when present, and
+        // `deprecated()` fires iff the old spelling appeared.
+        check("renamed flag resolution", 300, |g| {
+            let new_val = format!("n{}", g.u32_below(1000));
+            let old_val = format!("o{}", g.u32_below(1000));
+            let use_new = g.bool();
+            let use_old = g.bool();
+            let mut tokens = vec!["serve".to_string()];
+            if use_old {
+                tokens.push(format!("--flush-us={old_val}"));
+            }
+            if use_new {
+                tokens.push(format!("--seal-deadline-us={new_val}"));
+            }
+            let args = Args::parse(tokens).unwrap();
+            let (v, used) = args.get_renamed("seal-deadline-us", "flush-us");
+            let want_v = match (use_new, use_old) {
+                (true, _) => Some(new_val.as_str()),
+                (false, true) => Some(old_val.as_str()),
+                (false, false) => None,
+            };
+            v == want_v && used.deprecated() == use_old
         });
     }
 

@@ -42,12 +42,22 @@ fn bank_split(rows: usize) -> (usize, usize) {
     (banks, rows / banks)
 }
 
-/// Result of applying one dense batch.
+/// Result of applying one dense batch — the per-batch apply metadata
+/// the engine stamps onto completion tickets (`request::Commit`).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct AppliedBatch {
     pub cost: Cost,
     pub cycles: u64,
     pub banks_active: usize,
+    /// Rows carrying a non-identity operand, as the backend saw them
+    /// (its clock-gating scan counts these anyway).
+    pub rows_active: usize,
+}
+
+/// Count of non-identity operands (shared by backends that don't scan
+/// per bank).
+fn count_active(operands: &[u32], ident: u32) -> usize {
+    operands.iter().filter(|&&o| o != ident).count()
 }
 
 /// A batch executor over a logical row space.
@@ -132,6 +142,7 @@ impl Backend for FastBackend {
             cost: rep.cost,
             cycles: rep.cycles,
             banks_active: rep.banks_active,
+            rows_active: rep.rows_active,
         })
     }
 
@@ -215,12 +226,15 @@ impl Backend for BitPlaneBackend {
         let rpb = self.rows_per_bank;
         self.enable.fill(0);
         let mut banks_active = 0usize;
+        let mut rows_active = 0usize;
         for b in 0..self.banks {
             let slice = &operands[b * rpb..(b + 1) * rpb];
-            if slice.iter().all(|&o| o == ident) {
+            let active = count_active(slice, ident);
+            if active == 0 {
                 continue; // clock-gated bank
             }
             banks_active += 1;
+            rows_active += active;
             for r in b * rpb..(b + 1) * rpb {
                 self.enable[r / 64] |= 1u64 << (r % 64);
             }
@@ -240,7 +254,7 @@ impl Backend for BitPlaneBackend {
             cost.energy_fj += c.energy_fj;
             cost.latency_ns = cost.latency_ns.max(c.latency_ns);
         }
-        Ok(AppliedBatch { cost, cycles: rep.cycles, banks_active })
+        Ok(AppliedBatch { cost, cycles: rep.cycles, banks_active, rows_active })
     }
 
     fn read_row(&mut self, row: usize) -> Result<u32> {
@@ -339,6 +353,7 @@ impl Backend for XlaBackend {
             cost: self.model.batch_op(self.rows.min(128), self.q),
             cycles: self.q as u64,
             banks_active: self.rows.div_ceil(128),
+            rows_active: count_active(operands, kind.identity(self.q)),
         })
     }
 
@@ -393,6 +408,7 @@ impl Backend for DigitalBackend {
             cost: rep.cost,
             cycles: rep.rows, // one pipeline slot per row
             banks_active: 1,
+            rows_active: count_active(operands, kind.identity(self.q())),
         })
     }
 

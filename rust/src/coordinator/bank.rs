@@ -14,11 +14,17 @@ use crate::Result;
 
 use super::request::BatchKind;
 
-/// Outcome of applying one dense batch across the bank set.
+/// Outcome of applying one dense batch across the bank set — the
+/// per-batch apply metadata completion tickets surface (see
+/// `coordinator::request::Commit`).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct BankApply {
     /// Banks that actually executed (non-identity slices).
     pub banks_active: usize,
+    /// Rows carrying a non-identity operand (the rows the active
+    /// banks' row-ALUs effectively updated; identity-filled rows ride
+    /// along for free).
+    pub rows_active: usize,
     /// Shift cycles of the slowest active bank.
     pub cycles: u64,
     /// Modeled cost (energy summed, latency = max over banks).
@@ -137,6 +143,7 @@ impl BankSet {
         let parallel = std::thread::available_parallelism()
             .map(|n| n.get() > 1)
             .unwrap_or(false);
+        let mut rows_active = 0usize;
         let mut jobs: Vec<(&mut FastArray, &mut Option<BatchReport>, &[u32])> = Vec::new();
         for (bi, (array, out)) in self
             .arrays
@@ -145,9 +152,11 @@ impl BankSet {
             .enumerate()
         {
             let slice = &operands[bi * rpb..(bi + 1) * rpb];
-            if slice.iter().all(|&o| o == ident) {
+            let active = slice.iter().filter(|&&o| o != ident).count();
+            if active == 0 {
                 continue; // clock-gated bank
             }
+            rows_active += active;
             jobs.push((array, out, slice));
         }
         let run = |array: &mut FastArray, slice: &[u32]| match alu {
@@ -172,7 +181,7 @@ impl BankSet {
             }
         }
 
-        let mut out = BankApply::default();
+        let mut out = BankApply { rows_active, ..BankApply::default() };
         for report in reports.into_iter().flatten() {
             out.banks_active += 1;
             out.cycles = out.cycles.max(report.cycles);
@@ -225,6 +234,7 @@ mod tests {
         deltas[5] = 9; // only bank 0 touched
         let rep = b.apply(BatchKind::Add, &deltas).unwrap();
         assert_eq!(rep.banks_active, 1);
+        assert_eq!(rep.rows_active, 1, "one non-identity operand");
         assert_eq!(rep.cycles, 16);
         // Energy charged for one bank only.
         let one_bank = FastModel::default().batch_op(16, 16).energy_fj;

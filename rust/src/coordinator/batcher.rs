@@ -11,11 +11,11 @@
 //!      algebraically (Add sums, And intersects, ...), so a batch never
 //!      carries more than one operand per row.
 
-use super::request::{BatchKind, UpdateRequest};
+use super::request::{BatchKind, TicketNotifier, UpdateRequest};
 use crate::util::bits;
 
 /// A sealed, dense batch ready for execution.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug)]
 pub struct Batch {
     pub kind: BatchKind,
     /// Dense operand vector, identity-filled for untouched rows.
@@ -24,6 +24,12 @@ pub struct Batch {
     pub rows_touched: usize,
     /// Number of requests folded into this batch.
     pub requests: usize,
+    /// Completion tickets riding this batch: one notifier per ticketed
+    /// request absorbed (coalescing merges waiter lists — same-row
+    /// merges keep every waiter). The engine resolves them after the
+    /// backend applies; if the batch is dropped instead, the notifier
+    /// `Drop` impl wakes the waiters with an error.
+    pub waiters: Vec<TicketNotifier>,
 }
 
 /// Why a batch was sealed (group-commit accounting).
@@ -58,6 +64,7 @@ struct OpenBatch {
     touched: Vec<bool>,
     rows_touched: usize,
     requests: usize,
+    waiters: Vec<TicketNotifier>,
 }
 
 impl OpenBatch {
@@ -68,6 +75,7 @@ impl OpenBatch {
             touched: vec![false; rows],
             rows_touched: 0,
             requests: 0,
+            waiters: Vec::new(),
         }
     }
 
@@ -77,6 +85,7 @@ impl OpenBatch {
             operands: self.operands,
             rows_touched: self.rows_touched,
             requests: self.requests,
+            waiters: self.waiters,
         }
     }
 }
@@ -109,10 +118,31 @@ impl Batcher {
         self.current.as_ref().map_or(0, |b| b.requests)
     }
 
+    /// Is `row` touched by the open batch? A read of an untouched row
+    /// already sees the backend's current value, so the engine only
+    /// seals for read-your-writes when this is true.
+    pub fn touches(&self, row: usize) -> bool {
+        assert!(row < self.rows, "row {row} out of range {}", self.rows);
+        self.current.as_ref().is_some_and(|b| b.touched[row])
+    }
+
     /// Feed one request. Returns a sealed batch if this request forced
     /// a seal (the request itself is always absorbed — into the next
     /// batch when the current one seals).
     pub fn push(&mut self, req: UpdateRequest) -> Option<(Batch, SealReason)> {
+        self.push_ticketed(req, None)
+    }
+
+    /// [`Self::push`] with an optional completion ticket. The waiter
+    /// attaches to whichever batch absorbs the request: the open batch
+    /// (possibly freshly opened after a kind-change seal), or — when
+    /// this very request trips the size seal — the sealed batch
+    /// returned from this call.
+    pub fn push_ticketed(
+        &mut self,
+        req: UpdateRequest,
+        waiter: Option<TicketNotifier>,
+    ) -> Option<(Batch, SealReason)> {
         assert!(req.row < self.rows, "row {} out of range {}", req.row, self.rows);
         let kind = req.op.kind();
         let operand = req.op.normalized_operand(req.operand, self.q);
@@ -133,6 +163,9 @@ impl Batcher {
             cur.rows_touched += 1;
         }
         cur.requests += 1;
+        if let Some(w) = waiter {
+            cur.waiters.push(w);
+        }
 
         if sealed.is_none() {
             if let Some(limit) = self.seal_at_rows {
@@ -239,5 +272,69 @@ mod tests {
     fn rejects_out_of_range_row() {
         let mut b = Batcher::new(4, 8, None);
         b.push(UpdateRequest::add(4, 1));
+    }
+
+    #[test]
+    fn touches_tracks_only_open_batch_rows() {
+        let mut b = Batcher::new(8, 8, None);
+        assert!(!b.touches(3));
+        b.push(UpdateRequest::add(3, 1));
+        assert!(b.touches(3));
+        assert!(!b.touches(4));
+        b.force_flush();
+        assert!(!b.touches(3), "sealed batches no longer pend");
+    }
+
+    #[test]
+    fn coalescing_merges_waiter_lists() {
+        use crate::coordinator::request::ticket;
+        let mut b = Batcher::new(8, 8, None);
+        let (t1, n1) = ticket();
+        let (t2, n2) = ticket();
+        // Two ticketed requests coalesce onto the same row: the sealed
+        // batch must carry BOTH waiters.
+        b.push_ticketed(UpdateRequest::add(2, 1), Some(n1));
+        b.push_ticketed(UpdateRequest::add(2, 4), Some(n2));
+        let batch = b.force_flush().unwrap();
+        assert_eq!(batch.rows_touched, 1);
+        assert_eq!(batch.waiters.len(), 2);
+        // Dropping the un-resolved batch must wake both waiters with
+        // an error (never hang).
+        drop(batch);
+        assert!(t1.wait().is_err());
+        assert!(t2.wait().is_err());
+    }
+
+    #[test]
+    fn size_seal_carries_the_tripping_requests_waiter() {
+        use crate::coordinator::request::ticket;
+        let mut b = Batcher::new(8, 8, Some(2));
+        let (_t1, n1) = ticket();
+        let (_t2, n2) = ticket();
+        assert!(b.push_ticketed(UpdateRequest::add(0, 1), Some(n1)).is_none());
+        let (sealed, reason) = b
+            .push_ticketed(UpdateRequest::add(5, 2), Some(n2))
+            .expect("size seal");
+        assert_eq!(reason, SealReason::Full);
+        assert_eq!(sealed.waiters.len(), 2, "the sealing request rides the sealed batch");
+        assert_eq!(b.pending_rows(), 0);
+    }
+
+    #[test]
+    fn kind_change_seal_splits_waiters_between_batches() {
+        use crate::coordinator::request::ticket;
+        let mut b = Batcher::new(8, 8, None);
+        let (_ta, na) = ticket();
+        let (_tb, nb) = ticket();
+        b.push_ticketed(UpdateRequest::add(0, 1), Some(na));
+        let (sealed, _) = b
+            .push_ticketed(
+                UpdateRequest { row: 1, op: UpdateOp::Xor, operand: 0x1 },
+                Some(nb),
+            )
+            .expect("kind change seals");
+        assert_eq!(sealed.waiters.len(), 1, "old batch keeps its own waiters");
+        let next = b.force_flush().unwrap();
+        assert_eq!(next.waiters.len(), 1, "new batch holds the xor's waiter");
     }
 }

@@ -31,6 +31,22 @@
 //! whole batch, amortizing dispatch cost the way group commit
 //! amortizes fsync.
 //!
+//! ## Commit sequencing and completion tickets
+//!
+//! The engine is a request/response pipeline. Every sealed batch gets
+//! a per-shard **commit sequence number** at seal time (1, 2, 3, …);
+//! after the backend applies, the worker resolves every completion
+//! ticket riding the batch with a [`Commit`] (`{shard, commit_seq,
+//! seal_reason, modeled_ns, …}`) and publishes the committed seq for
+//! [`UpdateEngine::wait_seq`]. Read-your-writes is per shard *and per
+//! row*: a read at row `r` seals the owning shard's open batch only
+//! when that batch actually pends an update for `r` — no global
+//! flush, and an untouched read leaves even the owning shard's batch
+//! open. The only whole-engine barriers left are
+//! [`UpdateEngine::snapshot`] and [`UpdateEngine::shutdown`]; callers
+//! that need "my work landed" use tickets, `wait_seq`, or
+//! [`UpdateEngine::drain_shard`].
+//!
 //! Lifecycle: `UpdateEngine::start(config, backend_factory)` spawns one
 //! worker per shard; each worker *constructs its backend inside the
 //! thread* (PJRT executables are not `Send`).
@@ -41,7 +57,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -53,8 +69,8 @@ use crate::metrics::{
 use crate::Result;
 
 use super::backend::Backend;
-use super::batcher::{Batcher, SealReason};
-use super::request::UpdateRequest;
+use super::batcher::{Batch, Batcher, SealReason};
+use super::request::{ticket, Commit, Ticket, TicketNotifier, UpdateRequest};
 
 /// Engine configuration. All knobs have CLI flags on `fast serve`.
 #[derive(Debug, Clone)]
@@ -128,6 +144,23 @@ impl EngineConfig {
     }
 }
 
+/// Typed admission-rejection error: the target shard's bounded queue
+/// is full (transient backpressure — retry later). Carried as the
+/// root cause of the `anyhow` error the non-blocking submit paths
+/// return, so protocol layers can distinguish retryable backpressure
+/// from terminal errors:
+/// `err.root_cause().downcast_ref::<EngineBusy>().is_some()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineBusy;
+
+impl std::fmt::Display for EngineBusy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "queue full: request rejected (backpressure)")
+    }
+}
+
+impl std::error::Error for EngineBusy {}
+
 /// Identity of one engine shard, handed to the backend factory so it
 /// can size the backend to the shard's slice of the row space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -148,15 +181,52 @@ pub type BackendFactory =
     dyn Fn(&ShardPlan) -> Result<Box<dyn Backend>> + Send + Sync + 'static;
 
 enum Command {
-    Submit(UpdateRequest),
+    /// One request, with an optional completion ticket.
+    Submit(UpdateRequest, Option<TicketNotifier>),
     /// Amortizes channel crossings for bulk producers (one message per
-    /// chunk instead of per request). Rows are shard-local.
-    SubmitMany(Vec<UpdateRequest>),
+    /// chunk instead of per request). Rows are shard-local. The
+    /// optional waiter acks the chunk's LAST request — per-shard FIFO
+    /// means its commit implies every earlier request of the chunk on
+    /// this shard committed too.
+    SubmitMany(Vec<UpdateRequest>, Option<TicketNotifier>),
     Read(usize, SyncSender<Result<u32>>),
     Write(usize, u32, SyncSender<Result<()>>),
-    Flush(SyncSender<()>),
+    /// Force-seal the open batch (per-shard drain); replies with the
+    /// shard's last committed sequence number once applied.
+    Drain(SyncSender<u64>),
     Snapshot(SyncSender<Result<Vec<u32>>>),
     Shutdown,
+}
+
+/// Per-shard committed-sequence latch: workers publish after every
+/// apply, `wait_seq` blocks on it, shutdown closes it so waiters can
+/// never hang on a sequence that will no longer arrive.
+#[derive(Debug, Default)]
+struct ShardSeq {
+    state: Mutex<SeqState>,
+    cv: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct SeqState {
+    committed: u64,
+    closed: bool,
+}
+
+impl ShardSeq {
+    fn publish(&self, seq: u64) {
+        if let Ok(mut g) = self.state.lock() {
+            g.committed = g.committed.max(seq);
+        }
+        self.cv.notify_all();
+    }
+
+    fn close(&self) {
+        if let Ok(mut g) = self.state.lock() {
+            g.closed = true;
+        }
+        self.cv.notify_all();
+    }
 }
 
 /// Shared metrics handle.
@@ -205,7 +275,10 @@ pub struct EngineStats {
     pub backend: &'static str,
     /// Requests admitted but not yet drained by workers (all shards).
     pub queue_depth: u64,
-    /// Per-shard breakdown (seal reasons, coalesce hits, queue depth).
+    /// Completion tickets resolved across all shards.
+    pub tickets_resolved: u64,
+    /// Per-shard breakdown (seal reasons, coalesce hits, queue depth,
+    /// commit sequence, submit→commit latency histograms).
     pub shards: Vec<ShardSnapshot>,
 }
 
@@ -218,6 +291,7 @@ struct ShardHandle {
 /// threads (`Arc<UpdateEngine>`): every submit path is `&self`.
 pub struct UpdateEngine {
     shards: Vec<ShardHandle>,
+    seqs: Vec<Arc<ShardSeq>>,
     shard_bits: u32,
     metrics: Arc<EngineMetrics>,
     backend_name: std::sync::OnceLock<&'static str>,
@@ -241,26 +315,31 @@ impl UpdateEngine {
         let seal_at_rows = cfg.seal_at_rows.map(|n| (n / cfg.shards).max(1));
 
         let mut shards = Vec::with_capacity(cfg.shards);
+        let mut seqs = Vec::with_capacity(cfg.shards);
         let mut name_rxs = Vec::with_capacity(cfg.shards);
         for shard in 0..cfg.shards {
             let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
             let (name_tx, name_rx) = mpsc::sync_channel(1);
             let plan = ShardPlan { shard, shards: cfg.shards, rows: shard_rows, q: cfg.q };
             let scfg = ShardConfig { seal_at_rows, seal_deadline: cfg.seal_deadline };
+            let seq = Arc::new(ShardSeq::default());
+            let worker_seq = Arc::clone(&seq);
             let worker_metrics = Arc::clone(&metrics);
             let worker_factory = Arc::clone(&factory);
             let worker = std::thread::Builder::new()
                 .name(format!("fast-shard-{shard}"))
                 .spawn(move || {
-                    worker_loop(plan, scfg, rx, worker_metrics, worker_factory, name_tx)
+                    worker_loop(plan, scfg, rx, worker_metrics, worker_factory, worker_seq, name_tx)
                 })
                 .expect("spawning engine shard worker");
             shards.push(ShardHandle { tx, worker: Some(worker) });
+            seqs.push(seq);
             name_rxs.push(name_rx);
         }
 
         let mut engine = UpdateEngine {
             shards,
+            seqs,
             shard_bits: cfg.shard_bits(),
             metrics,
             backend_name: std::sync::OnceLock::new(),
@@ -338,12 +417,26 @@ impl UpdateEngine {
     /// Non-blocking submit. `Err` = queue full (backpressure), row out
     /// of range, or engine shut down; the request was NOT accepted.
     pub fn submit(&self, req: UpdateRequest) -> Result<()> {
+        self.submit_inner(req, None).map(|_| ())
+    }
+
+    /// Non-blocking submit returning a completion [`Ticket`]. Same
+    /// admission control as [`Self::submit`]: `Err` means the request
+    /// was NOT accepted (backpressure maps to an error, never to an
+    /// unresolved ticket).
+    pub fn submit_ticketed(&self, req: UpdateRequest) -> Result<Ticket> {
+        let (t, n) = ticket();
+        self.submit_inner(req, Some(n))?;
+        Ok(t)
+    }
+
+    fn submit_inner(&self, req: UpdateRequest, waiter: Option<TicketNotifier>) -> Result<()> {
         let (shard, local) = self.route(req.row)?;
         Counters::inc(&self.metrics.counters.requests_submitted, 1);
         let mut req = req;
         req.row = local;
         let depth = self.gauge_add(shard, 1);
-        match self.shards[shard].tx.try_send(Command::Submit(req)) {
+        match self.shards[shard].tx.try_send(Command::Submit(req, waiter)) {
             Ok(()) => {
                 self.note_admitted(shard, 1, depth);
                 Ok(())
@@ -351,7 +444,7 @@ impl UpdateEngine {
             Err(TrySendError::Full(_)) => {
                 self.gauge_sub(shard, 1);
                 Counters::inc(&self.metrics.counters.requests_rejected, 1);
-                Err(anyhow!("queue full: request rejected (backpressure)"))
+                Err(anyhow::Error::new(EngineBusy))
             }
             Err(TrySendError::Disconnected(_)) => {
                 self.gauge_sub(shard, 1);
@@ -362,12 +455,27 @@ impl UpdateEngine {
 
     /// Blocking submit: waits for queue space (no rejection).
     pub fn submit_blocking(&self, req: UpdateRequest) -> Result<()> {
+        self.submit_blocking_inner(req, None).map(|_| ())
+    }
+
+    /// Blocking submit returning a completion [`Ticket`].
+    pub fn submit_blocking_ticketed(&self, req: UpdateRequest) -> Result<Ticket> {
+        let (t, n) = ticket();
+        self.submit_blocking_inner(req, Some(n))?;
+        Ok(t)
+    }
+
+    fn submit_blocking_inner(
+        &self,
+        req: UpdateRequest,
+        waiter: Option<TicketNotifier>,
+    ) -> Result<()> {
         let (shard, local) = self.route(req.row)?;
         Counters::inc(&self.metrics.counters.requests_submitted, 1);
         let mut req = req;
         req.row = local;
         let depth = self.gauge_add(shard, 1);
-        if self.shards[shard].tx.send(Command::Submit(req)).is_err() {
+        if self.shards[shard].tx.send(Command::Submit(req, waiter)).is_err() {
             self.gauge_sub(shard, 1);
             return Err(anyhow!("engine is shut down"));
         }
@@ -384,8 +492,21 @@ impl UpdateEngine {
     /// the same vector — that would double-apply the admitted updates;
     /// treat the engine as failed and drain via [`Self::shutdown`].
     pub fn submit_many(&self, reqs: Vec<UpdateRequest>) -> Result<()> {
+        self.submit_many_inner(reqs, false).map(|_| ())
+    }
+
+    /// Bulk blocking submit with completion tickets: one [`Ticket`]
+    /// per shard the chunk touches, resolving when that shard commits
+    /// the chunk's LAST request (per-shard FIFO makes that an ack for
+    /// every earlier request of the chunk on the shard). Same failure
+    /// contract as [`Self::submit_many`].
+    pub fn submit_many_ticketed(&self, reqs: Vec<UpdateRequest>) -> Result<Vec<Ticket>> {
+        self.submit_many_inner(reqs, true)
+    }
+
+    fn submit_many_inner(&self, reqs: Vec<UpdateRequest>, ticketed: bool) -> Result<Vec<Ticket>> {
         if reqs.is_empty() {
-            return Ok(());
+            return Ok(Vec::new());
         }
         let total = reqs.len() as u64;
         let mut buckets: Vec<Vec<UpdateRequest>> = Vec::new();
@@ -396,13 +517,21 @@ impl UpdateEngine {
             buckets[shard].push(req);
         }
         Counters::inc(&self.metrics.counters.requests_submitted, total);
+        let mut tickets = Vec::new();
         for (shard, bucket) in buckets.into_iter().enumerate() {
             if bucket.is_empty() {
                 continue;
             }
             let n = bucket.len() as u64;
+            let waiter = if ticketed {
+                let (t, w) = ticket();
+                tickets.push(t);
+                Some(w)
+            } else {
+                None
+            };
             let depth = self.gauge_add(shard, n);
-            if self.shards[shard].tx.send(Command::SubmitMany(bucket)).is_err() {
+            if self.shards[shard].tx.send(Command::SubmitMany(bucket, waiter)).is_err() {
                 self.gauge_sub(shard, n);
                 return Err(anyhow!(
                     "engine shard {shard} is down (earlier chunks of this bulk \
@@ -411,11 +540,14 @@ impl UpdateEngine {
             }
             self.note_admitted(shard, n, depth);
         }
-        Ok(())
+        Ok(tickets)
     }
 
-    /// Read a row with read-your-writes consistency (flushes the
-    /// owning shard first; other shards keep batching).
+    /// Read a row with read-your-writes consistency. Per-shard AND
+    /// per-row: the owning shard seals its open batch only if that
+    /// batch pends an update for this very row; other shards — and an
+    /// owning shard with no pending write to the row — keep batching
+    /// undisturbed.
     pub fn read(&self, row: usize) -> Result<u32> {
         let (shard, local) = self.route(row)?;
         let (tx, rx) = mpsc::sync_channel(1);
@@ -426,8 +558,9 @@ impl UpdateEngine {
         rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
     }
 
-    /// Direct row write (conventional port; flushes the owning shard's
-    /// pending batch first).
+    /// Direct row write (conventional port; seals the owning shard's
+    /// open batch first, but only if it pends an update to this row —
+    /// program order per row is preserved, unrelated batching is not).
     pub fn write(&self, row: usize, value: u32) -> Result<()> {
         let (shard, local) = self.route(row)?;
         let (tx, rx) = mpsc::sync_channel(1);
@@ -438,23 +571,128 @@ impl UpdateEngine {
         rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
     }
 
-    /// Force a flush on every shard and wait for all of them.
-    pub fn flush(&self) -> Result<()> {
-        let mut waits = Vec::with_capacity(self.shards.len());
-        for h in &self.shards {
-            let (tx, rx) = mpsc::sync_channel(1);
-            h.tx
-                .send(Command::Flush(tx))
-                .map_err(|_| anyhow!("engine is shut down"))?;
-            waits.push(rx);
-        }
-        for rx in waits {
-            rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?;
-        }
-        Ok(())
+    /// Which shard owns a logical row (for targeting
+    /// [`Self::drain_shard`] / [`Self::wait_seq`]).
+    pub fn shard_of(&self, row: usize) -> Result<usize> {
+        self.route(row).map(|(shard, _)| shard)
     }
 
-    /// Consistent snapshot of all rows (flushes every shard first).
+    /// Drain ONE shard: force-seal its open batch (if any), wait until
+    /// the backend applied it, and return the shard's last committed
+    /// sequence number. This is the per-shard replacement for the old
+    /// whole-engine `flush()` — other shards keep batching.
+    pub fn drain_shard(&self, shard: usize) -> Result<u64> {
+        ensure!(
+            shard < self.shards.len(),
+            "shard {shard} out of range (shards = {})",
+            self.shards.len()
+        );
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.shards[shard]
+            .tx
+            .send(Command::Drain(tx))
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the reply"))
+    }
+
+    /// Explicit whole-engine barrier, spelled as per-shard drains:
+    /// force-seal and apply every shard's open batch, returning each
+    /// shard's last committed seq. For *semantic* barriers only (a
+    /// trace's Flush event, an app's round boundary, server shutdown)
+    /// — data access never needs it: reads/writes are read-your-writes
+    /// per shard and per row.
+    pub fn drain_all(&self) -> Result<Vec<u64>> {
+        (0..self.shards.len()).map(|s| self.drain_shard(s)).collect()
+    }
+
+    /// Block until `shard` has committed sequence number `seq` (or
+    /// higher); returns the committed seq observed. Errors if the
+    /// shard stops before reaching `seq` — it never hangs on a
+    /// sequence that can no longer arrive. Note that an open batch
+    /// seals only by policy (size/kind/deadline) or an explicit
+    /// [`Self::drain_shard`]; pair `wait_seq` with one of those (or
+    /// use [`Self::wait_seq_timeout`] to bound the wait).
+    pub fn wait_seq(&self, shard: usize, seq: u64) -> Result<u64> {
+        // An unbounded wait only returns on commit (or errors).
+        Ok(self
+            .wait_seq_until(shard, seq, None)?
+            .expect("unbounded wait resolves"))
+    }
+
+    /// [`Self::wait_seq`] with a bounded wait: `Ok(Some(committed))`
+    /// once `seq` is reached, `Ok(None)` if `timeout` elapses first,
+    /// `Err` if the shard stops before reaching `seq`. Lets callers
+    /// interleave the wait with their own cancellation checks (the
+    /// serve protocol's `WAIT` does, so a waiting client cannot block
+    /// server shutdown).
+    pub fn wait_seq_timeout(
+        &self,
+        shard: usize,
+        seq: u64,
+        timeout: Duration,
+    ) -> Result<Option<u64>> {
+        self.wait_seq_until(shard, seq, Some(Instant::now() + timeout))
+    }
+
+    /// Shared seq-wait loop: `deadline = None` blocks until commit.
+    fn wait_seq_until(
+        &self,
+        shard: usize,
+        seq: u64,
+        deadline: Option<Instant>,
+    ) -> Result<Option<u64>> {
+        ensure!(
+            shard < self.seqs.len(),
+            "shard {shard} out of range (shards = {})",
+            self.seqs.len()
+        );
+        let s = &self.seqs[shard];
+        let mut g = s.state.lock().map_err(|_| anyhow!("seq state poisoned"))?;
+        loop {
+            if g.committed >= seq {
+                return Ok(Some(g.committed));
+            }
+            ensure!(
+                !g.closed,
+                "engine shard {shard} stopped at commit_seq {} (< requested {seq})",
+                g.committed
+            );
+            match deadline {
+                None => {
+                    g = s.cv.wait(g).map_err(|_| anyhow!("seq state poisoned"))?;
+                }
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Ok(None);
+                    }
+                    let (guard, _timed_out) = s
+                        .cv
+                        .wait_timeout(g, d - now)
+                        .map_err(|_| anyhow!("seq state poisoned"))?;
+                    g = guard;
+                }
+            }
+        }
+    }
+
+    /// The shard's last committed sequence number (non-blocking gauge).
+    pub fn committed_seq(&self, shard: usize) -> Result<u64> {
+        ensure!(
+            shard < self.seqs.len(),
+            "shard {shard} out of range (shards = {})",
+            self.seqs.len()
+        );
+        let g = self.seqs[shard]
+            .state
+            .lock()
+            .map_err(|_| anyhow!("seq state poisoned"))?;
+        Ok(g.committed)
+    }
+
+    /// Consistent snapshot of all rows. This is one of the two
+    /// remaining whole-engine barriers (the other is shutdown): every
+    /// shard force-seals its open batch before reporting its rows.
     /// "Consistent" = contains every request admitted before the call;
     /// it does not serialize against concurrent producers.
     pub fn snapshot(&self) -> Result<Vec<u32>> {
@@ -494,6 +732,7 @@ impl UpdateEngine {
             apply_wall: self.metrics.apply_wall.summary(),
             backend: self.backend_name.get().copied().unwrap_or("unknown"),
             queue_depth: shards.iter().map(|s| s.queue_depth).sum(),
+            tickets_resolved: shards.iter().map(|s| s.tickets_resolved).sum(),
             shards,
         }
     }
@@ -548,160 +787,234 @@ struct ShardConfig {
     seal_deadline: Duration,
 }
 
+/// Worker-side state of one shard: the backend, the coalescing
+/// batcher, the deadline anchor, and the commit-sequence counter.
+struct ShardWorker<'a> {
+    plan: ShardPlan,
+    cfg: ShardConfig,
+    metrics: &'a EngineMetrics,
+    seq: &'a ShardSeq,
+    backend: Box<dyn Backend>,
+    batcher: Batcher,
+    deadline: Option<Instant>,
+    /// Next commit sequence number to assign at seal time (starts at
+    /// 1; `next_seq - 1` is the last committed seq).
+    next_seq: u64,
+}
+
+impl ShardWorker<'_> {
+    /// Apply one sealed batch: assign its commit_seq, run the backend,
+    /// account metrics, resolve the riding tickets with the commit
+    /// metadata, and publish the committed seq for `wait_seq`.
+    fn apply_sealed(&mut self, batch: Batch, reason: SealReason) -> Result<()> {
+        let m = self.metrics;
+        let backend = &mut self.backend;
+        let applied = m
+            .apply_wall
+            .time(|| backend.apply(batch.kind, &batch.operands))?;
+        let commit_seq = self.next_seq;
+        self.next_seq += 1;
+        Counters::inc(&m.counters.batches_flushed, 1);
+        Counters::inc(&m.counters.rows_updated, batch.rows_touched as u64);
+        Counters::inc(&m.counters.requests_completed, batch.requests as u64);
+        Counters::inc(
+            &m.counters.requests_coalesced,
+            (batch.requests - batch.rows_touched) as u64,
+        );
+        Counters::inc(&m.counters.shift_cycles, applied.cycles);
+        m.energy.add_fj(applied.cost.energy_fj);
+        m.add_modeled_ns(applied.cost.latency_ns);
+        let sc = &m.shards[self.plan.shard];
+        sc.note_sealed(reason, batch.rows_touched as u64, batch.requests as u64);
+        sc.commit_seq.store(commit_seq, Ordering::Relaxed);
+        let commit = Commit {
+            shard: self.plan.shard,
+            commit_seq,
+            seal_reason: reason,
+            rows: batch.rows_touched,
+            requests: batch.requests,
+            rows_active: applied.rows_active,
+            modeled_ns: applied.cost.latency_ns,
+            cycles: applied.cycles,
+            banks_active: applied.banks_active,
+        };
+        let modeled_ns_u64 = applied.cost.latency_ns.max(0.0).round() as u64;
+        for waiter in batch.waiters {
+            sc.commit_wall
+                .record_ns(waiter.submitted_at().elapsed().as_nanos() as u64);
+            sc.commit_modeled.record_ns(modeled_ns_u64);
+            Counters::inc(&sc.tickets_resolved, 1);
+            waiter.resolve(commit);
+        }
+        self.seq.publish(commit_seq);
+        Ok(())
+    }
+
+    fn flush(&mut self, reason: SealReason) -> Result<()> {
+        if let Some(batch) = self.batcher.force_flush() {
+            self.apply_sealed(batch, reason)?;
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, rx: &Receiver<Command>) -> Result<()> {
+        ensure!(
+            self.backend.rows() == self.plan.rows,
+            "backend rows {} != shard rows {} (shard {} of {})",
+            self.backend.rows(),
+            self.plan.rows,
+            self.plan.shard,
+            self.plan.shards
+        );
+        // Copy the `&'a EngineMetrics` out of self so this borrow is
+        // independent of the `&mut self` calls below.
+        let metrics: &EngineMetrics = self.metrics;
+        let shard_counters = &metrics.shards[self.plan.shard];
+        loop {
+            let cmd = match self.deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        self.flush(SealReason::Deadline)?;
+                        self.deadline = None;
+                        continue;
+                    }
+                    match rx.recv_timeout(d - now) {
+                        Ok(c) => c,
+                        Err(RecvTimeoutError::Timeout) => {
+                            self.flush(SealReason::Deadline)?;
+                            self.deadline = None;
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                None => match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => break,
+                },
+            };
+
+            match cmd {
+                Command::Submit(req, waiter) => {
+                    shard_counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    if self.batcher.pending_rows() == 0 {
+                        self.deadline = Some(Instant::now() + self.cfg.seal_deadline);
+                    }
+                    if let Some((batch, reason)) = self.batcher.push_ticketed(req, waiter) {
+                        self.apply_sealed(batch, reason)?;
+                        self.deadline = if self.batcher.pending_rows() > 0 {
+                            Some(Instant::now() + self.cfg.seal_deadline)
+                        } else {
+                            None
+                        };
+                    }
+                }
+                Command::SubmitMany(reqs, mut waiter) => {
+                    shard_counters
+                        .queue_depth
+                        .fetch_sub(reqs.len() as u64, Ordering::Relaxed);
+                    let last = reqs.len().saturating_sub(1);
+                    for (i, req) in reqs.into_iter().enumerate() {
+                        // The chunk waiter acks the LAST request.
+                        let w = if i == last { waiter.take() } else { None };
+                        if let Some((batch, reason)) = self.batcher.push_ticketed(req, w) {
+                            self.apply_sealed(batch, reason)?;
+                            self.deadline = None; // re-anchored below if still pending
+                        }
+                    }
+                    // Anchor the deadline at the first pending request; do
+                    // not extend it on later arrivals (bounded staleness).
+                    if self.batcher.pending_rows() > 0 {
+                        if self.deadline.is_none() {
+                            self.deadline = Some(Instant::now() + self.cfg.seal_deadline);
+                        }
+                    } else {
+                        self.deadline = None;
+                    }
+                }
+                Command::Read(row, reply) => {
+                    // Read-your-writes, per row: seal only if the open
+                    // batch pends an update for THIS row; otherwise the
+                    // backend already holds the row's current value and
+                    // the batch stays open.
+                    if self.batcher.touches(row) {
+                        self.flush(SealReason::Forced)?;
+                        self.deadline = None;
+                    }
+                    let _ = reply.send(self.backend.read_row(row));
+                }
+                Command::Write(row, value, reply) => {
+                    // Pending updates to this row must land before the
+                    // overwrite (program order per row); unrelated rows
+                    // keep batching.
+                    if self.batcher.touches(row) {
+                        self.flush(SealReason::Forced)?;
+                        self.deadline = None;
+                    }
+                    let _ = reply.send(self.backend.write_row(row, value));
+                }
+                Command::Drain(reply) => {
+                    self.flush(SealReason::Forced)?;
+                    self.deadline = None;
+                    let _ = reply.send(self.next_seq - 1);
+                }
+                Command::Snapshot(reply) => {
+                    self.flush(SealReason::Forced)?;
+                    self.deadline = None;
+                    let _ = reply.send(self.backend.snapshot());
+                }
+                Command::Shutdown => {
+                    self.flush(SealReason::Forced)?;
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     plan: ShardPlan,
     cfg: ShardConfig,
     rx: Receiver<Command>,
     metrics: Arc<EngineMetrics>,
     factory: Arc<BackendFactory>,
+    seq: Arc<ShardSeq>,
     name_tx: SyncSender<Result<&'static str>>,
 ) -> Result<()> {
     // `&dyn Fn` is callable; `Arc<dyn Fn>` is not (no Fn impl on Arc).
     let factory = factory.as_ref();
-    let mut backend = match factory(&plan) {
+    let backend = match factory(&plan) {
         Ok(b) => {
             let _ = name_tx.send(Ok(b.name()));
             b
         }
         Err(e) => {
             let _ = name_tx.send(Err(anyhow!("backend construction failed: {e:#}")));
+            seq.close();
             return Ok(());
         }
     };
-    let mut batcher = Batcher::new(plan.rows, plan.q, cfg.seal_at_rows);
-    let mut deadline: Option<Instant> = None;
-    let shard_counters = &metrics.shards[plan.shard];
-
-    let apply_sealed = |batch: super::batcher::Batch,
-                        reason: SealReason,
-                        backend: &mut Box<dyn Backend>|
-     -> Result<()> {
-        let applied = metrics
-            .apply_wall
-            .time(|| backend.apply(batch.kind, &batch.operands))?;
-        Counters::inc(&metrics.counters.batches_flushed, 1);
-        Counters::inc(&metrics.counters.rows_updated, batch.rows_touched as u64);
-        Counters::inc(&metrics.counters.requests_completed, batch.requests as u64);
-        Counters::inc(
-            &metrics.counters.requests_coalesced,
-            (batch.requests - batch.rows_touched) as u64,
-        );
-        Counters::inc(&metrics.counters.shift_cycles, applied.cycles);
-        metrics.energy.add_fj(applied.cost.energy_fj);
-        metrics.add_modeled_ns(applied.cost.latency_ns);
-        shard_counters.note_sealed(reason, batch.rows_touched as u64, batch.requests as u64);
-        Ok(())
-    };
-    let flush = |batcher: &mut Batcher,
-                 reason: SealReason,
-                 backend: &mut Box<dyn Backend>|
-     -> Result<()> {
-        if let Some(batch) = batcher.force_flush() {
-            apply_sealed(batch, reason, backend)?;
-        }
-        Ok(())
+    let batcher = Batcher::new(plan.rows, plan.q, cfg.seal_at_rows);
+    let mut worker = ShardWorker {
+        plan,
+        cfg,
+        metrics: &*metrics,
+        seq: &*seq,
+        backend,
+        batcher,
+        deadline: None,
+        next_seq: 1,
     };
 
-    // The command loop runs inside a closure so that every exit path
-    // (clean shutdown, backend fault) falls through to the queue-gauge
-    // drain below.
-    let result = (|| -> Result<()> {
-    ensure!(
-        backend.rows() == plan.rows,
-        "backend rows {} != shard rows {} (shard {} of {})",
-        backend.rows(),
-        plan.rows,
-        plan.shard,
-        plan.shards
-    );
-    loop {
-        let cmd = match deadline {
-            Some(d) => {
-                let now = Instant::now();
-                if now >= d {
-                    flush(&mut batcher, SealReason::Deadline, &mut backend)?;
-                    deadline = None;
-                    continue;
-                }
-                match rx.recv_timeout(d - now) {
-                    Ok(c) => c,
-                    Err(RecvTimeoutError::Timeout) => {
-                        flush(&mut batcher, SealReason::Deadline, &mut backend)?;
-                        deadline = None;
-                        continue;
-                    }
-                    Err(RecvTimeoutError::Disconnected) => break,
-                }
-            }
-            None => match rx.recv() {
-                Ok(c) => c,
-                Err(_) => break,
-            },
-        };
+    // Every exit path (clean shutdown, backend fault) falls through to
+    // the close + queue-gauge drain below.
+    let result = worker.run(&rx);
 
-        match cmd {
-            Command::Submit(req) => {
-                shard_counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                if batcher.pending_rows() == 0 {
-                    deadline = Some(Instant::now() + cfg.seal_deadline);
-                }
-                if let Some((batch, reason)) = batcher.push(req) {
-                    apply_sealed(batch, reason, &mut backend)?;
-                    deadline = if batcher.pending_rows() > 0 {
-                        Some(Instant::now() + cfg.seal_deadline)
-                    } else {
-                        None
-                    };
-                }
-            }
-            Command::SubmitMany(reqs) => {
-                shard_counters
-                    .queue_depth
-                    .fetch_sub(reqs.len() as u64, Ordering::Relaxed);
-                for req in reqs {
-                    if let Some((batch, reason)) = batcher.push(req) {
-                        apply_sealed(batch, reason, &mut backend)?;
-                        deadline = None; // re-anchored below if still pending
-                    }
-                }
-                // Anchor the deadline at the first pending request; do
-                // not extend it on later arrivals (bounded staleness).
-                if batcher.pending_rows() > 0 {
-                    if deadline.is_none() {
-                        deadline = Some(Instant::now() + cfg.seal_deadline);
-                    }
-                } else {
-                    deadline = None;
-                }
-            }
-            Command::Read(row, reply) => {
-                flush(&mut batcher, SealReason::Forced, &mut backend)?;
-                deadline = None;
-                let _ = reply.send(backend.read_row(row));
-            }
-            Command::Write(row, value, reply) => {
-                flush(&mut batcher, SealReason::Forced, &mut backend)?;
-                deadline = None;
-                let _ = reply.send(backend.write_row(row, value));
-            }
-            Command::Flush(reply) => {
-                flush(&mut batcher, SealReason::Forced, &mut backend)?;
-                deadline = None;
-                let _ = reply.send(());
-            }
-            Command::Snapshot(reply) => {
-                flush(&mut batcher, SealReason::Forced, &mut backend)?;
-                deadline = None;
-                let _ = reply.send(backend.snapshot());
-            }
-            Command::Shutdown => {
-                flush(&mut batcher, SealReason::Forced, &mut backend)?;
-                break;
-            }
-        }
-    }
-    Ok(())
-    })();
+    // Wake any `wait_seq` caller: no further commits will arrive.
+    seq.close();
 
     // Narrow the depth-gauge error window when the worker dies early
     // (backend fault, rows mismatch): decrement for every queued
@@ -709,12 +1022,15 @@ fn worker_loop(
     // fails after the receiver drops roll their own increment back; a
     // send that lands between this drain and the receiver drop leaks
     // transiently and is zeroed by `shutdown_inner` after joins.
+    // Dropped Submit commands drop their ticket notifiers, which wakes
+    // the waiters with an error.
+    let shard_counters = &metrics.shards[plan.shard];
     while let Ok(cmd) = rx.try_recv() {
         match cmd {
-            Command::Submit(_) => {
+            Command::Submit(_, _) => {
                 shard_counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
             }
-            Command::SubmitMany(reqs) => {
+            Command::SubmitMany(reqs, _) => {
                 shard_counters
                     .queue_depth
                     .fetch_sub(reqs.len() as u64, Ordering::Relaxed);
@@ -920,7 +1236,7 @@ mod tests {
         for r in 0..128 {
             e.submit_blocking(UpdateRequest::add(r, 1)).unwrap();
         }
-        e.flush().unwrap();
+        e.drain_shard(0).unwrap();
         let s = e.stats();
         assert!(s.modeled_energy_pj > 0.0);
         assert!(s.modeled_ns > 0.0);
@@ -934,11 +1250,159 @@ mod tests {
         for r in 0..256 {
             e.submit_blocking(UpdateRequest::add(r, 1)).unwrap();
         }
-        e.flush().unwrap();
+        e.drain_all().unwrap();
         let s = e.stats();
-        assert_eq!(s.queue_depth, 0, "queue must drain after flush");
+        assert_eq!(s.queue_depth, 0, "queue must drain after per-shard drains");
         assert!(s.shards.iter().any(|sc| sc.queue_high_water > 0));
         e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn ticketed_submit_resolves_with_commit_metadata() {
+        let mut cfg = EngineConfig::new(128, 16);
+        cfg.seal_at_rows = None;
+        cfg.seal_deadline = Duration::from_secs(3600); // only the drain seals
+        let e = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+        })
+        .unwrap();
+        let t1 = e.submit_blocking_ticketed(UpdateRequest::add(5, 7)).unwrap();
+        let t2 = e.submit_blocking_ticketed(UpdateRequest::add(9, 1)).unwrap();
+        let seq = e.drain_shard(0).unwrap();
+        let c1 = t1.wait().unwrap();
+        let c2 = t2.wait().unwrap();
+        // Both requests rode the same batch → identical commit.
+        assert_eq!(c1, c2);
+        assert_eq!(c1.shard, 0);
+        assert_eq!(c1.commit_seq, seq);
+        assert_eq!(c1.rows, 2);
+        assert_eq!(c1.requests, 2);
+        assert_eq!(c1.rows_active, 2);
+        assert_eq!(c1.seal_reason, SealReason::Forced);
+        assert!(c1.modeled_ns > 0.0);
+        assert!(c1.cycles > 0);
+        let s = e.stats();
+        assert_eq!(s.tickets_resolved, 2);
+        assert!(s.shards[0].commit_wall.count == 2);
+        assert!(s.shards[0].commit_modeled.count == 2);
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn commit_seqs_increase_per_shard_and_wait_seq_observes_them() {
+        let e = sharded_engine(256, 16, 2);
+        assert_eq!(e.committed_seq(0).unwrap(), 0);
+        // Two sealed batches on shard 0 (rows with low bit 0).
+        e.submit_blocking(UpdateRequest::add(0, 1)).unwrap();
+        let s1 = e.drain_shard(0).unwrap();
+        e.submit_blocking(UpdateRequest::add(2, 1)).unwrap();
+        let s2 = e.drain_shard(0).unwrap();
+        assert_eq!((s1, s2), (1, 2));
+        assert_eq!(e.wait_seq(0, 2).unwrap(), 2);
+        assert_eq!(e.committed_seq(0).unwrap(), 2);
+        // Shard 1 is untouched: its seq is still 0, and an empty drain
+        // does not mint a commit.
+        assert_eq!(e.committed_seq(1).unwrap(), 0);
+        assert_eq!(e.drain_shard(1).unwrap(), 0);
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn wait_seq_blocks_until_a_concurrent_drain_commits() {
+        let e = std::sync::Arc::new(engine(128, 16));
+        e.submit_blocking(UpdateRequest::add(3, 9)).unwrap();
+        let waiter = {
+            let e = std::sync::Arc::clone(&e);
+            std::thread::spawn(move || e.wait_seq(0, 1))
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        e.drain_shard(0).unwrap();
+        assert_eq!(waiter.join().unwrap().unwrap(), 1);
+        std::sync::Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
+    }
+
+    #[test]
+    fn submit_many_ticketed_acks_once_per_touched_shard() {
+        let e = sharded_engine(256, 16, 4);
+        // Rows 0..8 touch all four shards, twice each.
+        let reqs: Vec<UpdateRequest> =
+            (0..8).map(|r| UpdateRequest::add(r, 1 + r as u32)).collect();
+        let tickets = e.submit_many_ticketed(reqs).unwrap();
+        assert_eq!(tickets.len(), 4, "one ticket per shard touched");
+        for shard in 0..4 {
+            e.drain_shard(shard).unwrap();
+        }
+        let mut shards_seen: Vec<usize> =
+            tickets.iter().map(|t| t.wait().unwrap().shard).collect();
+        shards_seen.sort_unstable();
+        assert_eq!(shards_seen, vec![0, 1, 2, 3]);
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn read_of_untouched_row_leaves_the_open_batch_alone() {
+        let mut cfg = EngineConfig::sharded(64, 16, 2);
+        cfg.seal_at_rows = None;
+        cfg.seal_deadline = Duration::from_secs(3600); // only forced seals
+        let e = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+        })
+        .unwrap();
+        e.submit_blocking(UpdateRequest::add(0, 5)).unwrap(); // shard 0, pending
+        // Row 2 is shard 0 but NOT pending: the read must not seal.
+        assert_eq!(e.read(2).unwrap(), 0);
+        assert_eq!(e.stats().batches, 0, "untouched read must not seal");
+        // Reading the pending row seals (read-your-writes)…
+        assert_eq!(e.read(0).unwrap(), 5);
+        assert_eq!(e.stats().batches, 1);
+        // …and a later drain finds nothing new.
+        assert_eq!(e.drain_shard(0).unwrap(), 1);
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dropped_tickets_error_when_engine_shuts_down_uncommitted() {
+        // A worker that dies on a backend fault must fail pending
+        // tickets rather than hang them.
+        struct FailingBackend;
+        impl crate::coordinator::Backend for FailingBackend {
+            fn name(&self) -> &'static str {
+                "failing"
+            }
+            fn rows(&self) -> usize {
+                128
+            }
+            fn q(&self) -> usize {
+                16
+            }
+            fn apply(
+                &mut self,
+                _kind: crate::coordinator::BatchKind,
+                _operands: &[u32],
+            ) -> Result<crate::coordinator::AppliedBatch> {
+                anyhow::bail!("injected apply fault")
+            }
+            fn read_row(&mut self, _row: usize) -> Result<u32> {
+                Ok(0)
+            }
+            fn write_row(&mut self, _row: usize, _value: u32) -> Result<()> {
+                Ok(())
+            }
+            fn snapshot(&mut self) -> Result<Vec<u32>> {
+                Ok(vec![0; 128])
+            }
+        }
+        let cfg = EngineConfig::new(128, 16);
+        let e = UpdateEngine::start(cfg, |_p: &ShardPlan| Ok(Box::new(FailingBackend))).unwrap();
+        let t = e.submit_blocking_ticketed(UpdateRequest::add(0, 1)).unwrap();
+        // The drain trips the fault; the worker dies.
+        assert!(e.drain_shard(0).is_err());
+        assert!(t.wait().is_err(), "uncommitted ticket must error, not hang");
+        assert!(e.wait_seq(0, 1).is_err(), "seq latch must close on worker death");
+        let _ = e.shutdown();
     }
 
     #[test]
@@ -970,7 +1434,11 @@ mod tests {
         .unwrap();
         let mut rejected = 0;
         for i in 0..10_000 {
-            if e.submit(UpdateRequest::add((i % 128) as usize, 1)).is_err() {
+            if let Err(err) = e.submit(UpdateRequest::add((i % 128) as usize, 1)) {
+                assert!(
+                    err.root_cause().downcast_ref::<EngineBusy>().is_some(),
+                    "rejections must carry the typed EngineBusy cause: {err:#}"
+                );
                 rejected += 1;
             }
         }

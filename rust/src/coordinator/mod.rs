@@ -3,16 +3,19 @@
 //!
 //! Pipeline: requests → shard router (`row & (shards-1)`) → per-shard
 //! admission (bounded queue) → per-shard [`Batcher`] (coalesce per row,
-//! one kind per batch, group-commit seal policy) → [`BankSet`] /
-//! backend (fully-concurrent batch execution, per-bank clock gating)
-//! → metrics.
+//! one kind per batch, group-commit seal policy, per-shard commit
+//! sequence numbers at seal time) → [`BankSet`] / backend
+//! (fully-concurrent batch execution, per-bank clock gating) →
+//! completion-[`Ticket`] resolution + metrics.
 //!
-//! - [`request`] — update ops, batch kinds, coalescing algebra
-//! - [`batcher`] — the coalescing batcher and its seal reasons
+//! - [`request`] — update ops, batch kinds, coalescing algebra,
+//!   completion tickets ([`Ticket`] / [`Commit`])
+//! - [`batcher`] — the coalescing batcher, seal reasons, waiter lists
 //! - [`bank`] — striping across 128-row macros, parallel execution
 //! - [`backend`] — behavioural / bit-plane / XLA-PJRT / digital-baseline
 //!   executors (fidelity tier selectable per shard)
-//! - [`engine`] — shard workers, seal policy, backpressure, stats
+//! - [`engine`] — shard workers, seal policy, backpressure, commit
+//!   sequencing (`wait_seq`, `drain_shard`), stats
 
 pub mod backend;
 pub mod bank;
@@ -26,6 +29,7 @@ pub use backend::{
 pub use bank::{BankApply, BankSet};
 pub use batcher::{Batch, Batcher, SealReason};
 pub use engine::{
-    BackendFactory, EngineConfig, EngineMetrics, EngineStats, ShardPlan, UpdateEngine,
+    BackendFactory, EngineBusy, EngineConfig, EngineMetrics, EngineStats, ShardPlan,
+    UpdateEngine,
 };
-pub use request::{BatchKind, UpdateOp, UpdateRequest};
+pub use request::{ticket, BatchKind, Commit, Ticket, TicketNotifier, UpdateOp, UpdateRequest};

@@ -1,12 +1,36 @@
-//! Request types for the concurrent update engine.
+//! Request types and completion tickets for the concurrent update
+//! engine.
 //!
 //! The paper motivates FAST with streams of small row updates (database
 //! delta updates, graph feature updates). A request is one q-bit update
 //! to one logical row; the coordinator's job is to pack many of them
 //! into fully-concurrent FAST batch ops.
+//!
+//! ## Completion tickets
+//!
+//! The engine is a request/response pipeline, not fire-and-forget: a
+//! ticketed submit hands back a [`Ticket`] that resolves to a
+//! [`Commit`] once the backend has applied the batch carrying the
+//! request. Coalescing merges waiter lists — every ticket attached to
+//! a batch (whatever row it landed on, coalesced or not) resolves with
+//! that batch's commit metadata. The two halves:
+//!
+//! - [`Ticket`] — held by the submitter; [`Ticket::wait`] blocks until
+//!   the commit (or errors if the engine dropped the batch).
+//! - [`TicketNotifier`] — threaded through the batcher into the sealed
+//!   batch; the shard worker resolves it after the backend apply.
+//!   Dropping an unresolved notifier (worker death, rejected command)
+//!   wakes the waiter with an error — a ticket can never hang.
 
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail};
+
+use super::batcher::SealReason;
 use crate::fastmem::AluOp;
 use crate::util::bits;
+use crate::Result;
 
 /// The update operation carried by a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -133,6 +157,187 @@ impl UpdateRequest {
     }
 }
 
+/// What a sealed batch committed as — the payload a [`Ticket`]
+/// resolves to. One `Commit` is shared by every request folded into
+/// the batch (coalescing merges waiter lists, so commit metadata is
+/// per batch, not per request).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Commit {
+    /// Shard that sealed and applied the batch.
+    pub shard: usize,
+    /// Per-shard commit sequence number, assigned at seal time.
+    /// Starts at 1 and increases by 1 per sealed batch; tickets for
+    /// one shard therefore resolve in nondecreasing `commit_seq`
+    /// order (per-shard FIFO).
+    pub commit_seq: u64,
+    /// Why the batch sealed (size / kind change / deadline / forced).
+    pub seal_reason: SealReason,
+    /// Distinct rows the batch's requests touched.
+    pub rows: usize,
+    /// Requests folded into the batch (>= `rows` when coalescing hit).
+    pub requests: usize,
+    /// Rows that carried a non-identity operand, as measured by the
+    /// backend during the apply (bank clock gating sees these).
+    pub rows_active: usize,
+    /// Modeled macro latency of the batch apply (ns).
+    pub modeled_ns: f64,
+    /// Shift cycles of the slowest active bank.
+    pub cycles: u64,
+    /// Banks that actually executed (the rest were clock-gated).
+    pub banks_active: usize,
+}
+
+#[derive(Debug)]
+enum TicketSlot {
+    Pending,
+    Done(Commit),
+    /// The notifier was dropped without resolving: the batch (or the
+    /// command carrying the request) died before the backend applied.
+    Dropped,
+}
+
+#[derive(Debug)]
+struct TicketShared {
+    slot: Mutex<TicketSlot>,
+    cv: Condvar,
+}
+
+/// Waiter half of a completion ticket (see the module docs).
+#[derive(Debug)]
+pub struct Ticket {
+    shared: Arc<TicketShared>,
+}
+
+impl Ticket {
+    /// Block until the request's batch commits. Errors if the engine
+    /// dropped the batch before applying it (shutdown race, backend
+    /// fault) — never hangs, because dropping the notifier resolves
+    /// the ticket too.
+    pub fn wait(&self) -> Result<Commit> {
+        // An unbounded wait_until only returns on resolution.
+        Ok(self.wait_until(None)?.expect("unbounded wait resolves"))
+    }
+
+    /// [`Self::wait`] with a bounded wait: `Ok(Some(commit))` once the
+    /// batch commits, `Ok(None)` if `timeout` elapses first, `Err` if
+    /// the engine dropped the batch. Lets callers interleave the wait
+    /// with cancellation checks.
+    pub fn wait_timeout(&self, timeout: std::time::Duration) -> Result<Option<Commit>> {
+        self.wait_until(Some(Instant::now() + timeout))
+    }
+
+    /// Shared wait loop: `deadline = None` blocks until resolution.
+    fn wait_until(&self, deadline: Option<Instant>) -> Result<Option<Commit>> {
+        let mut slot = self
+            .shared
+            .slot
+            .lock()
+            .map_err(|_| anyhow!("ticket state poisoned"))?;
+        loop {
+            match *slot {
+                TicketSlot::Done(c) => return Ok(Some(c)),
+                TicketSlot::Dropped => {
+                    bail!("ticket dropped: the engine never committed the request's batch")
+                }
+                TicketSlot::Pending => match deadline {
+                    None => {
+                        slot = self
+                            .shared
+                            .cv
+                            .wait(slot)
+                            .map_err(|_| anyhow!("ticket state poisoned"))?;
+                    }
+                    Some(d) => {
+                        let now = Instant::now();
+                        if now >= d {
+                            return Ok(None);
+                        }
+                        let (guard, _timed_out) = self
+                            .shared
+                            .cv
+                            .wait_timeout(slot, d - now)
+                            .map_err(|_| anyhow!("ticket state poisoned"))?;
+                        slot = guard;
+                    }
+                },
+            }
+        }
+    }
+
+    /// Non-blocking probe: `Some(commit)` once resolved, `None` while
+    /// the batch is still open or in flight.
+    pub fn try_get(&self) -> Option<Commit> {
+        match *self.shared.slot.lock().ok()? {
+            TicketSlot::Done(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Has the ticket reached a terminal state (committed or dropped)?
+    pub fn is_resolved(&self) -> bool {
+        self.shared
+            .slot
+            .lock()
+            .map(|s| !matches!(*s, TicketSlot::Pending))
+            .unwrap_or(true)
+    }
+}
+
+/// Resolver half of a completion ticket. Created by [`ticket`], rides
+/// the open batch through the batcher, resolved exactly once by the
+/// shard worker after the backend applies the sealed batch.
+#[derive(Debug)]
+pub struct TicketNotifier {
+    shared: Arc<TicketShared>,
+    submitted_at: Instant,
+    resolved: bool,
+}
+
+impl TicketNotifier {
+    /// When the ticketed request was submitted (for submit→resolve
+    /// wall-clock latency accounting).
+    pub fn submitted_at(&self) -> Instant {
+        self.submitted_at
+    }
+
+    /// Resolve the ticket with its batch's commit metadata. Consumes
+    /// the notifier, so a ticket resolves exactly once.
+    pub fn resolve(mut self, commit: Commit) {
+        if let Ok(mut slot) = self.shared.slot.lock() {
+            *slot = TicketSlot::Done(commit);
+        }
+        self.resolved = true;
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for TicketNotifier {
+    fn drop(&mut self) {
+        if self.resolved {
+            return;
+        }
+        if let Ok(mut slot) = self.shared.slot.lock() {
+            if matches!(*slot, TicketSlot::Pending) {
+                *slot = TicketSlot::Dropped;
+            }
+        }
+        self.shared.cv.notify_all();
+    }
+}
+
+/// Create a connected (waiter, resolver) ticket pair. The submit
+/// timestamp is taken now.
+pub fn ticket() -> (Ticket, TicketNotifier) {
+    let shared = Arc::new(TicketShared {
+        slot: Mutex::new(TicketSlot::Pending),
+        cv: Condvar::new(),
+    });
+    (
+        Ticket { shared: Arc::clone(&shared) },
+        TicketNotifier { shared, submitted_at: Instant::now(), resolved: false },
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +373,65 @@ mod tests {
                 assert_eq!(out, v, "{kind:?}");
             }
         }
+    }
+
+    fn demo_commit(seq: u64) -> Commit {
+        Commit {
+            shard: 0,
+            commit_seq: seq,
+            seal_reason: SealReason::Forced,
+            rows: 1,
+            requests: 1,
+            rows_active: 1,
+            modeled_ns: 20.0,
+            cycles: 16,
+            banks_active: 1,
+        }
+    }
+
+    #[test]
+    fn ticket_resolves_with_commit() {
+        let (t, n) = ticket();
+        assert!(!t.is_resolved());
+        assert!(t.try_get().is_none());
+        n.resolve(demo_commit(7));
+        assert!(t.is_resolved());
+        assert_eq!(t.try_get().unwrap().commit_seq, 7);
+        assert_eq!(t.wait().unwrap().commit_seq, 7);
+        // wait() is idempotent — the commit stays readable.
+        assert_eq!(t.wait().unwrap().commit_seq, 7);
+    }
+
+    #[test]
+    fn dropped_notifier_errors_instead_of_hanging() {
+        let (t, n) = ticket();
+        drop(n);
+        assert!(t.is_resolved());
+        assert!(t.try_get().is_none());
+        assert!(t.wait().is_err());
+    }
+
+    #[test]
+    fn ticket_wait_timeout_bounds_the_wait() {
+        let (t, n) = ticket();
+        let dt = std::time::Duration::from_millis(5);
+        assert_eq!(t.wait_timeout(dt).unwrap(), None, "pending times out");
+        n.resolve(demo_commit(9));
+        assert_eq!(t.wait_timeout(dt).unwrap().unwrap().commit_seq, 9);
+        let (t2, n2) = ticket();
+        drop(n2);
+        assert!(t2.wait_timeout(dt).is_err(), "dropped errors immediately");
+    }
+
+    #[test]
+    fn ticket_wait_blocks_until_cross_thread_resolve() {
+        let (t, n) = ticket();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            n.resolve(demo_commit(3));
+        });
+        assert_eq!(t.wait().unwrap().commit_seq, 3);
+        h.join().unwrap();
     }
 
     #[test]

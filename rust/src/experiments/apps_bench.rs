@@ -101,11 +101,11 @@ pub fn run_workload(rows: usize, q: usize, fast: bool, w: Workload, seed: u64) -
                         e.submit_blocking(UpdateRequest::add(t, m))?;
                     }
                 }
-                e.flush()?;
+                e.drain_all()?;
             }
         }
     }
-    e.flush()?;
+    e.drain_all()?;
     let wall_us = t0.elapsed().as_secs_f64() * 1e6;
     let s = e.stats();
     let run = AppRun {

@@ -27,9 +27,15 @@
 //!   row-by-row variant (Fig. 1a).
 //! - [`coordinator`] — the Layer-3 system contribution: a *sharded*
 //!   concurrent update engine (shard router, per-shard coalescing
-//!   batchers with a group-commit seal policy, bank manager, width
-//!   planner) that turns sparse update streams into fully-concurrent
-//!   FAST batch ops without serializing them behind one worker.
+//!   batchers with a group-commit seal policy and per-shard commit
+//!   sequence numbers, completion tickets, bank manager) that turns
+//!   sparse update streams into fully-concurrent FAST batch ops
+//!   without serializing them behind one worker — a request/response
+//!   pipeline, not fire-and-forget.
+//! - [`serve`] — the `fast serve` service front-end: the std-only
+//!   `fast-serve-v1` line protocol (TCP multi-client or stdio)
+//!   speaking `fast-trace-v1` events on the wire, with per-connection
+//!   SUB (fire-and-forget) / CMT (wait-for-ticket) modes.
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   functional artifacts (Layer 1/2); compiles against a clean-failing
 //!   stub unless built with `--features pjrt`.
@@ -72,8 +78,14 @@
 //!     Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
 //! })?;
 //! engine.submit_blocking(UpdateRequest::add(7, 35))?;
-//! engine.submit_blocking(UpdateRequest::add(7, 7))?;
-//! assert_eq!(engine.read(7)?, 42); // read-your-writes: flushes shard 3
+//! // A ticketed submit is a request/response round trip: the ticket
+//! // resolves with the commit (shard, commit_seq, modeled ns) once
+//! // the backend applies the batch.
+//! let ticket = engine.submit_blocking_ticketed(UpdateRequest::add(7, 7))?;
+//! assert_eq!(engine.read(7)?, 42); // read-your-writes, per shard + row
+//! let commit = ticket.wait()?;
+//! assert_eq!(commit.shard, 3);
+//! assert!(commit.commit_seq >= 1);
 //! engine.shutdown()?;
 //! # Ok(())
 //! # }
@@ -89,6 +101,7 @@ pub mod experiments;
 pub mod fastmem;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod timing;
 pub mod util;
 

@@ -13,8 +13,7 @@ use fast_sram::apps::trace::{state_digest, BackendKind, Trace};
 use fast_sram::apps::trainer::{self, TrainerConfig};
 use fast_sram::cli::{usage, Args};
 use fast_sram::coordinator::{
-    BitPlaneBackend, DigitalBackend, EngineConfig, FastBackend, UpdateEngine, UpdateRequest,
-    XlaBackend,
+    BitPlaneBackend, DigitalBackend, EngineConfig, FastBackend, UpdateEngine, XlaBackend,
 };
 use fast_sram::fastmem::Fidelity;
 use fast_sram::experiments::{
@@ -22,7 +21,7 @@ use fast_sram::experiments::{
 };
 use fast_sram::metrics::render_table;
 use fast_sram::runtime::{default_artifact_dir, validate, Runtime};
-use fast_sram::util::rng::Rng;
+use fast_sram::serve;
 use fast_sram::Result;
 
 fn main() -> Result<()> {
@@ -39,6 +38,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
@@ -205,6 +205,15 @@ fn cmd_trace(args: &Args) -> Result<()> {
             let s = &rep.stats;
             let shape = format!("{} ({} rows x {} bits)", trace.name, trace.rows, trace.q);
             let digest = format!("{:016x}", state_digest(&rep.final_state));
+            if args.get_bool("digest-only") {
+                // Machine-readable mode for the CI serve smoke job:
+                // verify (if asked), then print just the digest.
+                if args.get_bool("verify") && rep.final_state != trace.reference_state() {
+                    bail!("replay diverged from host semantics");
+                }
+                println!("{digest}");
+                return Ok(());
+            }
             let mut rows_txt = vec![
                 ("trace".to_string(), shape),
                 ("backend".to_string(), s.backend.to_string()),
@@ -235,19 +244,37 @@ fn cmd_trace(args: &Args) -> Result<()> {
     }
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// Build the update engine `fast serve` fronts, from the shared CLI
+/// flags (`--rows/--q/--shards/--backend/--fidelity/--seal-*`).
+fn build_engine(args: &Args) -> Result<UpdateEngine> {
     let banks = args.get_usize("banks", 8)?;
     let rows = args.get_usize("rows", banks * 128)?;
     let q = args.get_usize("q", 16)?;
-    let updates = args.get_usize("updates", 100_000)?;
     let shards = args.get_usize("shards", 1)?;
     let backend = args.get_str("backend", "fast").to_string();
     let artifact_dir = args.get_str("artifacts", "").to_string();
 
     let mut cfg = EngineConfig::sharded(rows, q, shards);
-    // `--flush-us` is the legacy spelling of the group-commit deadline.
-    let deadline_us =
-        args.get_u64("seal-deadline-us", args.get_u64("flush-us", 100)?)?;
+    // `--flush-us` is the deprecated spelling of `--seal-deadline-us`
+    // (kept as an alias; the new spelling wins when both are given).
+    let (deadline_str, renamed) = args.get_renamed("seal-deadline-us", "flush-us");
+    if renamed.deprecated() {
+        eprintln!(
+            "warning: --flush-us is deprecated; use --seal-deadline-us \
+             (legacy alias honoured{})",
+            if deadline_str == args.get("flush-us") {
+                ""
+            } else {
+                " — --seal-deadline-us takes precedence"
+            }
+        );
+    }
+    let deadline_us: u64 = match deadline_str {
+        None => 100,
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--seal-deadline-us expects an integer, got {v:?}"))?,
+    };
     cfg.seal_deadline = Duration::from_micros(deadline_us);
     if let Some(n) = args.get("seal-rows") {
         cfg.seal_at_rows = Some(
@@ -292,66 +319,109 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         other => bail!("unknown backend {other:?} (fast|digital|xla)"),
     };
+    Ok(engine)
+}
 
-    println!(
-        "serving {updates} updates on {rows} rows x {q} bits \
-         (backend: {backend}, fidelity: {fidelity}, shards: {shards}, \
-         seal deadline: {deadline_us} µs)"
-    );
-    let t0 = std::time::Instant::now();
-    let mut rng = Rng::new(args.get_u64("seed", 1)?);
-    let mut rejected = 0u64;
-    for _ in 0..updates {
-        let row = rng.below(rows as u64) as usize;
-        let v = rng.below(1 << q.min(16)) as u32;
-        let req = if rng.chance(0.25) {
-            UpdateRequest::sub(row, v)
-        } else {
-            UpdateRequest::add(row, v)
-        };
-        if engine.submit(req).is_err() {
-            rejected += 1;
-        }
-    }
-    engine.flush()?;
-    let wall = t0.elapsed();
-    let s = engine.stats();
-    let rows_txt = vec![
-        ("backend".to_string(), s.backend.to_string()),
-        ("accepted".to_string(), format!("{}", s.completed)),
-        ("rejected (backpressure)".to_string(), format!("{rejected}")),
-        ("batches".to_string(), format!("{}", s.batches)),
-        ("rows/batch".to_string(), format!("{:.1}", s.rows_per_batch)),
-        ("modeled macro time".to_string(), format!("{:.2} µs", s.modeled_ns / 1000.0)),
-        ("modeled energy".to_string(), format!("{:.2} nJ", s.modeled_energy_pj / 1000.0)),
-        ("wall time".to_string(), format!("{:.1} ms", wall.as_secs_f64() * 1e3)),
-        (
-            "throughput".to_string(),
-            format!("{:.2} M updates/s", s.completed as f64 / wall.as_secs_f64() / 1e6),
-        ),
-        ("apply p99".to_string(), format!("{} ns", s.apply_wall.p99_ns)),
-    ];
-    print!("{}", render_table("serve", &rows_txt));
-    if shards > 1 {
-        let mut shard_rows = Vec::new();
+/// `fast serve` — run the fast-serve-v1 front-end until a client sends
+/// SHUTDOWN (TCP) or stdin closes (`--stdio`). Prints the final engine
+/// stats on shutdown (a table, or one JSON line with `--stats-json`).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let cfg = engine.config().clone();
+    let stats_json = args.get_bool("stats-json");
+
+    let report = if args.get_bool("stdio") {
+        eprintln!(
+            "fast-serve-v1 on stdio: {} rows x {} bits, {} shard(s), backend {}",
+            cfg.rows,
+            cfg.q,
+            cfg.shards,
+            engine.stats().backend
+        );
+        serve::serve_stdio(engine)?
+    } else {
+        let listen = args.get_str("listen", "127.0.0.1:4750").to_string();
+        let listener = std::net::TcpListener::bind(&listen)
+            .map_err(|e| anyhow::anyhow!("binding {listen}: {e}"))?;
+        eprintln!(
+            "fast-serve-v1 listening on {} ({} rows x {} bits, {} shard(s), backend {}) — \
+             drive it with `fast client --connect {listen}` or any line client; \
+             SHUTDOWN drains and exits",
+            listener.local_addr()?,
+            cfg.rows,
+            cfg.q,
+            cfg.shards,
+            engine.stats().backend
+        );
+        serve::serve_tcp(engine, listener)?
+    };
+
+    // Clean drain happened inside serve_*; report it.
+    let s = &report.stats;
+    if stats_json {
+        println!("{}", serve::stats_json(s));
+    } else {
+        let mut rows_txt = vec![
+            ("backend".to_string(), s.backend.to_string()),
+            ("submitted".to_string(), format!("{}", s.submitted)),
+            ("completed".to_string(), format!("{}", s.completed)),
+            ("rejected (backpressure)".to_string(), format!("{}", s.rejected)),
+            ("tickets resolved".to_string(), format!("{}", s.tickets_resolved)),
+            ("batches".to_string(), format!("{}", s.batches)),
+            ("rows/batch".to_string(), format!("{:.1}", s.rows_per_batch)),
+            ("modeled macro time".to_string(), format!("{:.2} µs", s.modeled_ns / 1000.0)),
+            ("modeled energy".to_string(), format!("{:.2} nJ", s.modeled_energy_pj / 1000.0)),
+            ("apply p99".to_string(), format!("{} ns", s.apply_wall.p99_ns)),
+        ];
         for (i, sh) in s.shards.iter().enumerate() {
-            shard_rows.push((
+            rows_txt.push((
                 format!("shard {i}"),
                 format!(
-                    "{} batches (full {}, kind {}, deadline {}, forced {}) | {} coalesce hits | hw {}",
+                    "commit_seq {} | {} batches | commit wall p50/p95/p99 {}/{}/{} ns",
+                    sh.commit_seq,
                     sh.batches_sealed,
-                    sh.sealed_full,
-                    sh.sealed_kind_change,
-                    sh.sealed_deadline,
-                    sh.sealed_forced,
-                    sh.coalesce_hits,
-                    sh.queue_high_water
+                    sh.commit_wall.p50_ns,
+                    sh.commit_wall.p95_ns,
+                    sh.commit_wall.p99_ns,
                 ),
             ));
         }
-        print!("{}", render_table("shards", &shard_rows));
+        print!("{}", render_table("serve (drained)", &rows_txt));
     }
-    engine.shutdown()?;
+    Ok(())
+}
+
+/// `fast client` — protocol client for a running `fast serve`: streams
+/// a fast-trace-v1 file through the wire, optionally prints the final
+/// state digest, optionally shuts the server down.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_str("connect", "127.0.0.1:4750").to_string();
+    let trace = match args.get("in") {
+        Some(path) => Some(Trace::load(path)?),
+        None => None,
+    };
+    let mode = match args.get_str("mode", "cmt") {
+        "cmt" => serve::Mode::Cmt,
+        "sub" => serve::Mode::Sub,
+        other => bail!("unknown mode {other:?} (sub|cmt)"),
+    };
+    let want_digest = args.get_bool("digest");
+    let report = serve::run_client(
+        &addr,
+        trace.as_ref(),
+        mode,
+        want_digest,
+        args.get_bool("shutdown"),
+    )?;
+    if let Some(digest) = report.digest {
+        println!("{digest}");
+    }
+    eprintln!(
+        "client done: {} event(s) acked, {} busy retr{}",
+        report.acked,
+        report.busy_retries,
+        if report.busy_retries == 1 { "y" } else { "ies" }
+    );
     Ok(())
 }
 

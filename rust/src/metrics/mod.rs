@@ -100,6 +100,17 @@ pub struct ShardCounters {
     pub queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
     pub queue_high_water: AtomicU64,
+    /// Last commit sequence number this shard applied (gauge; seqs
+    /// start at 1, 0 = nothing committed yet).
+    pub commit_seq: AtomicU64,
+    /// Completion tickets resolved by this shard's worker.
+    pub tickets_resolved: AtomicU64,
+    /// Submit→ticket-resolve latency, wall-clock (one sample per
+    /// resolved ticket).
+    pub commit_wall: LatencyRecorder,
+    /// Modeled macro latency of the committing batch, one sample per
+    /// resolved ticket (the modeled analogue of `commit_wall`).
+    pub commit_modeled: LatencyRecorder,
 }
 
 impl ShardCounters {
@@ -129,12 +140,16 @@ impl ShardCounters {
             rows_updated: Counters::get(&self.rows_updated),
             queue_depth: Counters::get(&self.queue_depth),
             queue_high_water: Counters::get(&self.queue_high_water),
+            commit_seq: Counters::get(&self.commit_seq),
+            tickets_resolved: Counters::get(&self.tickets_resolved),
+            commit_wall: self.commit_wall.summary(),
+            commit_modeled: self.commit_modeled.summary(),
         }
     }
 }
 
 /// Plain-data snapshot of one shard's counters.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ShardSnapshot {
     pub requests: u64,
     pub batches_sealed: u64,
@@ -146,6 +161,12 @@ pub struct ShardSnapshot {
     pub rows_updated: u64,
     pub queue_depth: u64,
     pub queue_high_water: u64,
+    pub commit_seq: u64,
+    pub tickets_resolved: u64,
+    /// Submit→ticket-resolve wall-clock latency (p50/p95/p99).
+    pub commit_wall: LatencySummary,
+    /// Modeled commit latency distribution (p50/p95/p99).
+    pub commit_modeled: LatencySummary,
 }
 
 /// Modeled energy accumulator (fJ) — fed from `energy::Cost` values.
@@ -202,6 +223,7 @@ impl LatencyRecorder {
             count: h.count(),
             mean_ns: h.mean_ns(),
             p50_ns: h.percentile_ns(50.0),
+            p95_ns: h.percentile_ns(95.0),
             p99_ns: h.percentile_ns(99.0),
             max_ns: h.max_ns(),
         }
@@ -213,6 +235,7 @@ pub struct LatencySummary {
     pub count: u64,
     pub mean_ns: f64,
     pub p50_ns: u64,
+    pub p95_ns: u64,
     pub p99_ns: u64,
     pub max_ns: u64,
 }
@@ -266,6 +289,24 @@ mod tests {
     #[test]
     fn rows_per_batch_empty_is_zero() {
         assert_eq!(CounterSnapshot::default().rows_per_batch(), 0.0);
+    }
+
+    #[test]
+    fn shard_commit_histograms_snapshot() {
+        let s = ShardCounters::default();
+        s.commit_wall.record_ns(1_000);
+        s.commit_wall.record_ns(2_000);
+        s.commit_modeled.record_ns(20);
+        s.commit_seq.store(7, Ordering::Relaxed);
+        Counters::inc(&s.tickets_resolved, 2);
+        let snap = s.snapshot();
+        assert_eq!(snap.commit_seq, 7);
+        assert_eq!(snap.tickets_resolved, 2);
+        assert_eq!(snap.commit_wall.count, 2);
+        assert!(snap.commit_wall.p50_ns >= 1_000);
+        assert!(snap.commit_wall.p95_ns >= snap.commit_wall.p50_ns);
+        assert!(snap.commit_wall.p99_ns >= snap.commit_wall.p95_ns);
+        assert_eq!(snap.commit_modeled.count, 1);
     }
 
     #[test]

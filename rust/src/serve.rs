@@ -1,0 +1,846 @@
+//! `fast serve` — the service front-end over the update engine: a
+//! std-only, newline-delimited request/response protocol
+//! (`fast-serve-v1`) served over TCP (multiple concurrent clients) or
+//! stdio (one session, handy for pipes and CI).
+//!
+//! ## Protocol (`fast-serve-v1`)
+//!
+//! Every non-empty request line gets exactly one response line,
+//! `OK …` or `ERR …`. Data-plane lines ARE `fast-trace-v1` event
+//! objects (parsed by [`TraceEvent::parse_line`] — the serve wire
+//! format and the trace file format are the same grammar):
+//!
+//! ```text
+//! {"t":"u","o":"add","r":5,"v":3}   update  → SUB: OK on admission
+//!                                             CMT: OK shard=.. seq=.. after commit
+//! {"t":"w","r":0,"v":17}            absolute write → OK
+//! {"t":"f"}                         barrier: drain every shard → OK drained seq=..
+//! ```
+//!
+//! Control-plane lines are plain words:
+//!
+//! ```text
+//! HELLO                 → OK fast-serve-v1 rows=R q=Q shards=S backend=B
+//! MODE SUB | MODE CMT   per-connection submission mode (default CMT):
+//!                       SUB  = fire-and-forget (ack on admission),
+//!                       CMT  = wait-for-ticket (ack carries the commit:
+//!                              shard, commit_seq, seal reason, rows,
+//!                              modeled ns)
+//! READ <row>            → OK <value>      (read-your-writes, per shard+row)
+//! WAIT <shard> <seq>    → OK <committed>  (blocks via UpdateEngine::wait_seq)
+//! DRAIN <shard>         → OK <seq>        (per-shard drain)
+//! DIGEST                → OK <fnv64-hex of the row state snapshot>
+//! STATS                 → OK <one-line JSON engine stats>
+//! QUIT                  → OK bye          (closes this connection)
+//! SHUTDOWN              → OK draining     (server drains every shard and exits)
+//! ```
+//!
+//! Backpressure maps to protocol errors: when a shard's admission
+//! queue is full, the update line answers `ERR busy …` and the client
+//! retries — the server never buffers unboundedly on behalf of a
+//! client. Engine errors (bad row, shut-down engine) answer `ERR …`
+//! on the offending line; the connection stays usable.
+//!
+//! Shutdown is a clean drain: new connections stop being accepted,
+//! open sessions wind down, every shard is drained (per-shard — the
+//! engine has no whole-engine flush), and the final [`EngineStats`]
+//! (including per-shard submit→commit latency histograms) is returned
+//! to the caller, which `fast serve --stats-json` prints as JSON.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context};
+
+use crate::apps::trace::{state_digest, Trace, TraceEvent};
+use crate::coordinator::{EngineBusy, EngineStats, SealReason, UpdateEngine};
+use crate::metrics::LatencySummary;
+use crate::Result;
+
+/// Is this submit error transient backpressure (retry) rather than a
+/// terminal engine failure?
+fn is_busy(e: &anyhow::Error) -> bool {
+    e.root_cause().downcast_ref::<EngineBusy>().is_some()
+}
+
+/// How often blocked protocol waits (`WAIT`, CMT commits) re-check the
+/// server-wide stop flag, so a waiting client can never block shutdown.
+const WAIT_POLL: Duration = Duration::from_millis(200);
+
+/// Cap on a blocked wait in a session with no server stop flag (stdio,
+/// tests). Those transports are lockstep — the blocked handler is the
+/// same thread that would read the input able to satisfy the wait — so
+/// only background seal policy can release it; past this cap, fail the
+/// wait instead of hanging the session forever.
+const LONE_SESSION_WAIT_CAP: Duration = Duration::from_secs(30);
+
+/// Protocol tag answered by `HELLO`; bump on breaking changes.
+pub const PROTOCOL: &str = "fast-serve-v1";
+
+/// Per-connection submission mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Fire-and-forget: an update line is acked on admission.
+    Sub,
+    /// Wait-for-ticket: an update line is acked after its batch
+    /// commits, with the commit metadata.
+    Cmt,
+}
+
+/// What the connection loop should do after answering one line.
+#[derive(Debug)]
+pub enum Action {
+    /// Send the reply, keep the session open.
+    Reply(String),
+    /// Send the reply, close this connection.
+    Quit(String),
+    /// Send the reply, then drain and stop the whole server.
+    Shutdown(String),
+}
+
+fn seal_reason_name(r: SealReason) -> &'static str {
+    match r {
+        SealReason::Full => "full",
+        SealReason::KindChange => "kind-change",
+        SealReason::Deadline => "deadline",
+        SealReason::Forced => "forced",
+    }
+}
+
+/// One protocol session (per connection). Pure request→response logic;
+/// transports (TCP, stdio, tests) feed it lines.
+pub struct Session {
+    engine: Arc<UpdateEngine>,
+    mode: Mode,
+    /// Server-wide shutdown flag (TCP sessions): blocked waits poll it
+    /// so a client parked in `WAIT`/CMT cannot deadlock the shutdown
+    /// join. `None` for stdio/test sessions, whose blocked waits are
+    /// instead capped at [`LONE_SESSION_WAIT_CAP`] (lockstep transport
+    /// — later input cannot satisfy a blocked wait).
+    stop: Option<Arc<AtomicBool>>,
+}
+
+impl Session {
+    pub fn new(engine: Arc<UpdateEngine>) -> Self {
+        Session { engine, mode: Mode::Cmt, stop: None }
+    }
+
+    /// A session that aborts blocked waits once `stop` is set.
+    pub fn with_stop(engine: Arc<UpdateEngine>, stop: Arc<AtomicBool>) -> Self {
+        Session { engine, mode: Mode::Cmt, stop: Some(stop) }
+    }
+
+    /// Abort a blocked wait when the server is shutting down (TCP), or
+    /// when a stop-less session has waited past the lockstep cap.
+    fn check_wait(&self, started: Instant, what: &str) -> Result<()> {
+        match &self.stop {
+            Some(stop) => ensure!(
+                !stop.load(Ordering::SeqCst),
+                "server shutting down before {what}"
+            ),
+            None => ensure!(
+                started.elapsed() < LONE_SESSION_WAIT_CAP,
+                "wait for {what} timed out after {}s (single-session transport: \
+                 later input cannot satisfy a blocked wait)",
+                LONE_SESSION_WAIT_CAP.as_secs()
+            ),
+        }
+        Ok(())
+    }
+
+    /// Handle one non-empty request line.
+    pub fn handle(&mut self, line: &str) -> Action {
+        match self.dispatch(line.trim()) {
+            Ok(action) => action,
+            // One response line per request line: flatten the error.
+            Err(e) => Action::Reply(format!("ERR {}", one_line(&format!("{e:#}")))),
+        }
+    }
+
+    fn dispatch(&mut self, line: &str) -> Result<Action> {
+        if line.starts_with('{') {
+            return self.handle_event(line);
+        }
+        let mut parts = line.split_whitespace();
+        let cmd = parts.next().unwrap_or("");
+        let reply = match cmd {
+            "HELLO" => {
+                let cfg = self.engine.config();
+                format!(
+                    "OK {PROTOCOL} rows={} q={} shards={} backend={}",
+                    cfg.rows,
+                    cfg.q,
+                    cfg.shards,
+                    self.engine.stats().backend
+                )
+            }
+            "MODE" => match parts.next() {
+                Some("SUB") => {
+                    self.mode = Mode::Sub;
+                    "OK mode=SUB".to_string()
+                }
+                Some("CMT") => {
+                    self.mode = Mode::Cmt;
+                    "OK mode=CMT".to_string()
+                }
+                other => bail!("MODE expects SUB or CMT, got {other:?}"),
+            },
+            "READ" => {
+                let row = int_arg(parts.next(), "READ <row>")?;
+                format!("OK {}", self.engine.read(row)?)
+            }
+            "WAIT" => {
+                let shard = int_arg(parts.next(), "WAIT <shard> <seq>")?;
+                let seq = int_arg(parts.next(), "WAIT <shard> <seq>")? as u64;
+                let started = Instant::now();
+                loop {
+                    if let Some(committed) =
+                        self.engine.wait_seq_timeout(shard, seq, WAIT_POLL)?
+                    {
+                        break format!("OK {committed}");
+                    }
+                    self.check_wait(started, &format!("shard {shard} reaches commit_seq {seq}"))?;
+                }
+            }
+            "DRAIN" => {
+                let shard = int_arg(parts.next(), "DRAIN <shard>")?;
+                format!("OK {}", self.engine.drain_shard(shard)?)
+            }
+            "DIGEST" => {
+                let snap = self.engine.snapshot()?;
+                format!("OK {:016x}", state_digest(&snap))
+            }
+            "STATS" => format!("OK {}", stats_json(&self.engine.stats())),
+            "QUIT" => return Ok(Action::Quit("OK bye".to_string())),
+            "SHUTDOWN" => return Ok(Action::Shutdown("OK draining".to_string())),
+            other => bail!("unknown command {other:?} (try HELLO)"),
+        };
+        Ok(Action::Reply(reply))
+    }
+
+    fn handle_event(&mut self, line: &str) -> Result<Action> {
+        let cfg = self.engine.config();
+        let (rows, q) = (cfg.rows, cfg.q);
+        let reply = match TraceEvent::parse_line(line, rows, q)? {
+            TraceEvent::Update(req) => match self.mode {
+                // Backpressure (queue full) is a retryable protocol
+                // error; anything else (engine shut down, dead shard)
+                // is terminal and reported as a plain ERR so clients
+                // fail fast instead of retrying.
+                Mode::Sub => match self.engine.submit(req) {
+                    Ok(()) => "OK".to_string(),
+                    Err(e) if is_busy(&e) => {
+                        format!("ERR busy {}", one_line(&format!("{e:#}")))
+                    }
+                    Err(e) => return Err(e),
+                },
+                Mode::Cmt => match self.engine.submit_ticketed(req) {
+                    Ok(ticket) => {
+                        let started = Instant::now();
+                        loop {
+                            if let Some(c) = ticket.wait_timeout(WAIT_POLL)? {
+                                break format!(
+                                    "OK shard={} seq={} reason={} rows={} ns={:.1}",
+                                    c.shard,
+                                    c.commit_seq,
+                                    seal_reason_name(c.seal_reason),
+                                    c.rows,
+                                    c.modeled_ns
+                                );
+                            }
+                            self.check_wait(started, "the update commits")?;
+                        }
+                    }
+                    Err(e) if is_busy(&e) => {
+                        format!("ERR busy {}", one_line(&format!("{e:#}")))
+                    }
+                    Err(e) => return Err(e),
+                },
+            },
+            TraceEvent::Write { row, value } => {
+                self.engine.write(row, value)?;
+                "OK".to_string()
+            }
+            TraceEvent::Flush => {
+                // Barrier: the engine's explicit whole-engine barrier,
+                // built from per-shard drains.
+                let seqs: Vec<String> =
+                    self.engine.drain_all()?.iter().map(u64::to_string).collect();
+                format!("OK drained seq={}", seqs.join(","))
+            }
+        };
+        Ok(Action::Reply(reply))
+    }
+}
+
+fn int_arg(tok: Option<&str>, usage: &str) -> Result<usize> {
+    tok.ok_or_else(|| anyhow!("usage: {usage}"))?
+        .parse()
+        .map_err(|_| anyhow!("usage: {usage}"))
+}
+
+fn one_line(s: &str) -> String {
+    s.replace(['\n', '\r'], " ")
+}
+
+/// Outcome of a serve run, returned after the clean drain.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Final engine statistics (commit histograms included).
+    pub stats: EngineStats,
+    /// Last committed seq per shard after the shutdown drain.
+    pub drained_seq: Vec<u64>,
+}
+
+/// Drain every shard, collect stats, shut the engine down. Errors here
+/// (a shard worker died, a drain failed) propagate to the caller so
+/// `fast serve` exits nonzero on an unclean drain.
+fn finish(engine: Arc<UpdateEngine>) -> Result<ServeReport> {
+    let engine = Arc::try_unwrap(engine)
+        .map_err(|_| anyhow!("connection threads still hold the engine at shutdown"))?;
+    let drained_seq = engine
+        .drain_all()
+        .context("draining the shards at shutdown")?;
+    let stats = engine.stats();
+    engine.shutdown()?;
+    Ok(ServeReport { stats, drained_seq })
+}
+
+/// Serve one session over stdin/stdout (EOF = clean shutdown).
+pub fn serve_stdio(engine: UpdateEngine) -> Result<ServeReport> {
+    let engine = Arc::new(engine);
+    let mut session = Session::new(Arc::clone(&engine));
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    for line in stdin.lock().lines() {
+        let line = line.context("reading stdin")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let action = session.handle(&line);
+        let mut out = stdout.lock();
+        match action {
+            Action::Reply(r) => {
+                writeln!(out, "{r}")?;
+                out.flush()?;
+            }
+            Action::Quit(r) | Action::Shutdown(r) => {
+                writeln!(out, "{r}")?;
+                out.flush()?;
+                break;
+            }
+        }
+    }
+    drop(session);
+    finish(engine)
+}
+
+/// Serve the protocol on an already-bound listener until a client
+/// sends `SHUTDOWN`. Accepts any number of concurrent connections
+/// (thread per connection; the engine's shard workers are the
+/// concurrency bottleneck by design, not the session threads).
+pub fn serve_tcp(engine: UpdateEngine, listener: TcpListener) -> Result<ServeReport> {
+    let engine = Arc::new(engine);
+    let addr = listener.local_addr().context("listener address")?;
+    // Address the SHUTDOWN handler can actually reach to wake the
+    // blocking accept below: an unspecified bind (0.0.0.0 / ::) is not
+    // connectable on every platform, so wake via loopback instead.
+    let wake_addr = {
+        let ip = match addr.ip() {
+            std::net::IpAddr::V4(v4) if v4.is_unspecified() => {
+                std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+            }
+            std::net::IpAddr::V6(v6) if v6.is_unspecified() => {
+                std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+            }
+            other => other,
+        };
+        SocketAddr::new(ip, addr.port())
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // Reap finished connection threads as we go, so a long-running
+        // server under connection churn does not accumulate unjoined
+        // thread handles.
+        handles = handles
+            .into_iter()
+            .filter_map(|h| {
+                if h.is_finished() {
+                    let _ = h.join();
+                    None
+                } else {
+                    Some(h)
+                }
+            })
+            .collect();
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // The wake-up connection a SHUTDOWN handler makes lands here.
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let engine = Arc::clone(&engine);
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || serve_conn(stream, engine, stop, wake_addr)));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    finish(engine)
+}
+
+/// One TCP connection: read lines, answer lines. A short read timeout
+/// lets idle connections notice a server-wide shutdown. `wake_addr` is
+/// the connectable form of the listener address, used to wake the
+/// blocking accept loop after SHUTDOWN.
+fn serve_conn(
+    stream: TcpStream,
+    engine: Arc<UpdateEngine>,
+    stop: Arc<AtomicBool>,
+    wake_addr: SocketAddr,
+) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let _ = stream.set_nodelay(true);
+    let reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader);
+    let mut out = stream;
+    let mut session = Session::with_stop(engine, Arc::clone(&stop));
+    let mut buf = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match reader.read_line(&mut buf) {
+            Ok(0) => return, // client hung up
+            Ok(_) => {
+                let action = if buf.trim().is_empty() {
+                    buf.clear();
+                    continue;
+                } else {
+                    session.handle(&buf)
+                };
+                buf.clear();
+                let alive = match action {
+                    Action::Reply(r) => writeln!(out, "{r}").is_ok(),
+                    Action::Quit(r) => {
+                        let _ = writeln!(out, "{r}");
+                        false
+                    }
+                    Action::Shutdown(r) => {
+                        let _ = writeln!(out, "{r}");
+                        stop.store(true, Ordering::SeqCst);
+                        // Wake the blocking accept loop.
+                        let _ = TcpStream::connect_timeout(&wake_addr, Duration::from_secs(1));
+                        false
+                    }
+                };
+                if !alive {
+                    return;
+                }
+            }
+            // Timeout: partial bytes (if any) stay appended in `buf`;
+            // keep reading until the newline arrives.
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol client (`fast client` and the CI loopback smoke job)
+// ---------------------------------------------------------------------------
+
+/// Outcome of a client run.
+#[derive(Debug)]
+pub struct ClientReport {
+    /// Final state digest (if `want_digest`).
+    pub digest: Option<String>,
+    /// Event lines acked by the server.
+    pub acked: u64,
+    /// `ERR busy` responses survived by retrying (backpressure).
+    pub busy_retries: u64,
+}
+
+/// Drive a `fast serve` endpoint: stream a trace's event lines in
+/// lockstep (one request line, one response line), drain, optionally
+/// fetch the state digest, optionally shut the server down. Retries
+/// the initial connect (the CI smoke job races server startup) and
+/// `ERR busy` backpressure responses.
+pub fn run_client(
+    addr: &str,
+    trace: Option<&Trace>,
+    mode: Mode,
+    want_digest: bool,
+    send_shutdown: bool,
+) -> Result<ClientReport> {
+    let stream = connect_with_retry(addr, Duration::from_secs(10))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut out = stream;
+    let mut roundtrip = |line: &str| -> Result<String> {
+        writeln!(out, "{line}").context("sending request line")?;
+        let mut reply = String::new();
+        let n = reader.read_line(&mut reply).context("reading reply")?;
+        ensure!(n > 0, "server closed the connection");
+        Ok(reply.trim_end().to_string())
+    };
+
+    let hello = roundtrip("HELLO")?;
+    ensure!(
+        hello.starts_with(&format!("OK {PROTOCOL}")),
+        "unexpected banner: {hello}"
+    );
+    if let Some(t) = trace {
+        ensure!(
+            hello.contains(&format!(" rows={} ", t.rows)) && hello.contains(&format!(" q={} ", t.q)),
+            "server shape does not match the trace ({hello}; trace {}x{})",
+            t.rows,
+            t.q
+        );
+    }
+    let mode_line = match mode {
+        Mode::Sub => "MODE SUB",
+        Mode::Cmt => "MODE CMT",
+    };
+    let reply = roundtrip(mode_line)?;
+    ensure!(reply.starts_with("OK"), "MODE failed: {reply}");
+
+    let mut acked = 0u64;
+    let mut busy_retries = 0u64;
+    if let Some(t) = trace {
+        for e in &t.events {
+            let line = e.to_json_line();
+            loop {
+                let reply = roundtrip(&line)?;
+                if reply.starts_with("OK") {
+                    acked += 1;
+                    break;
+                }
+                if reply.starts_with("ERR busy") {
+                    busy_retries += 1;
+                    ensure!(
+                        busy_retries < 1_000_000,
+                        "server stayed busy for 1M retries"
+                    );
+                    std::thread::sleep(Duration::from_micros(200));
+                    continue;
+                }
+                bail!("server rejected {line:?}: {reply}");
+            }
+        }
+        // Final barrier so the digest sees everything.
+        let reply = roundtrip("{\"t\":\"f\"}")?;
+        ensure!(reply.starts_with("OK"), "final drain failed: {reply}");
+    }
+
+    let digest = if want_digest {
+        let reply = roundtrip("DIGEST")?;
+        let hex = reply
+            .strip_prefix("OK ")
+            .ok_or_else(|| anyhow!("DIGEST failed: {reply}"))?;
+        ensure!(
+            hex.len() == 16 && hex.chars().all(|c| c.is_ascii_hexdigit()),
+            "malformed digest {hex:?}"
+        );
+        Some(hex.to_string())
+    } else {
+        None
+    };
+
+    if send_shutdown {
+        let reply = roundtrip("SHUTDOWN")?;
+        ensure!(reply.starts_with("OK"), "SHUTDOWN failed: {reply}");
+    } else {
+        let _ = roundtrip("QUIT");
+    }
+    Ok(ClientReport { digest, acked, busy_retries })
+}
+
+fn connect_with_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + budget;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("connecting to {addr}: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stats JSON
+// ---------------------------------------------------------------------------
+
+fn latency_json(l: &LatencySummary) -> String {
+    format!(
+        "{{\"count\":{},\"mean_ns\":{:.1},\"p50_ns\":{},\"p95_ns\":{},\"p99_ns\":{},\"max_ns\":{}}}",
+        l.count, l.mean_ns, l.p50_ns, l.p95_ns, l.p99_ns, l.max_ns
+    )
+}
+
+/// One-line JSON rendering of [`EngineStats`] — the `STATS` protocol
+/// reply and the `fast serve --stats-json` shutdown snapshot. Keys are
+/// stable; per-shard commit latency is reported both wall-clock and
+/// modeled (p50/p95/p99).
+pub fn stats_json(s: &EngineStats) -> String {
+    let mut shards = String::new();
+    for (i, sc) in s.shards.iter().enumerate() {
+        if i > 0 {
+            shards.push(',');
+        }
+        shards.push_str(&format!(
+            "{{\"shard\":{i},\"requests\":{},\"batches_sealed\":{},\"sealed_full\":{},\
+             \"sealed_kind_change\":{},\"sealed_deadline\":{},\"sealed_forced\":{},\
+             \"coalesce_hits\":{},\"rows_updated\":{},\"queue_depth\":{},\
+             \"queue_high_water\":{},\"commit_seq\":{},\"tickets_resolved\":{},\
+             \"commit_wall_ns\":{},\"commit_modeled_ns\":{}}}",
+            sc.requests,
+            sc.batches_sealed,
+            sc.sealed_full,
+            sc.sealed_kind_change,
+            sc.sealed_deadline,
+            sc.sealed_forced,
+            sc.coalesce_hits,
+            sc.rows_updated,
+            sc.queue_depth,
+            sc.queue_high_water,
+            sc.commit_seq,
+            sc.tickets_resolved,
+            latency_json(&sc.commit_wall),
+            latency_json(&sc.commit_modeled),
+        ));
+    }
+    format!(
+        "{{\"backend\":\"{}\",\"submitted\":{},\"completed\":{},\"rejected\":{},\
+         \"batches\":{},\"rows_updated\":{},\"rows_per_batch\":{:.2},\
+         \"modeled_ns\":{:.1},\"modeled_energy_pj\":{:.3},\"queue_depth\":{},\
+         \"tickets_resolved\":{},\"apply_wall_ns\":{},\"shards\":[{}]}}",
+        s.backend,
+        s.submitted,
+        s.completed,
+        s.rejected,
+        s.batches,
+        s.rows_updated,
+        s.rows_per_batch,
+        s.modeled_ns,
+        s.modeled_energy_pj,
+        s.queue_depth,
+        s.tickets_resolved,
+        latency_json(&s.apply_wall),
+        shards
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::trace::uniform_trace;
+    use crate::coordinator::{EngineConfig, FastBackend, ShardPlan};
+    use crate::util::json::Json;
+
+    fn engine(rows: usize, q: usize, shards: usize) -> Arc<UpdateEngine> {
+        let cfg = EngineConfig::sharded(rows, q, shards);
+        Arc::new(
+            UpdateEngine::start(cfg, |p: &ShardPlan| {
+                Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+            })
+            .unwrap(),
+        )
+    }
+
+    fn reply(s: &mut Session, line: &str) -> String {
+        match s.handle(line) {
+            Action::Reply(r) => r,
+            other => panic!("expected Reply, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn session_speaks_the_protocol() {
+        let e = engine(64, 8, 2);
+        let mut s = Session::new(Arc::clone(&e));
+        let banner = reply(&mut s, "HELLO");
+        assert!(banner.starts_with("OK fast-serve-v1 rows=64 q=8 shards=2"), "{banner}");
+
+        // CMT is the default: an update line answers with its commit.
+        let r = reply(&mut s, "{\"t\":\"u\",\"o\":\"add\",\"r\":3,\"v\":7}");
+        assert!(r.starts_with("OK shard=1 seq="), "{r}");
+        assert_eq!(reply(&mut s, "READ 3"), "OK 7");
+
+        // SUB mode acks on admission.
+        assert_eq!(reply(&mut s, "MODE SUB"), "OK mode=SUB");
+        assert_eq!(reply(&mut s, "{\"t\":\"u\",\"o\":\"add\",\"r\":3,\"v\":1}"), "OK");
+        // Barrier drains both shards and reports their seqs.
+        let r = reply(&mut s, "{\"t\":\"f\"}");
+        assert!(r.starts_with("OK drained seq="), "{r}");
+        assert_eq!(reply(&mut s, "READ 3"), "OK 8");
+
+        // Writes, waits, digests, stats.
+        assert_eq!(reply(&mut s, "{\"t\":\"w\",\"r\":0,\"v\":200}"), "OK");
+        let r = reply(&mut s, "WAIT 1 1");
+        assert!(r.starts_with("OK "), "{r}");
+        let r = reply(&mut s, "DIGEST");
+        assert!(r.len() == 3 + 16, "{r}");
+        let r = reply(&mut s, "STATS");
+        let json = Json::parse(r.strip_prefix("OK ").unwrap()).unwrap();
+        assert_eq!(json.get("backend").and_then(Json::as_str), Some("fast-behavioural"));
+
+        // Errors keep the session alive, one line per request.
+        assert!(reply(&mut s, "BOGUS").starts_with("ERR "));
+        assert!(reply(&mut s, "READ 9999").starts_with("ERR "));
+        assert!(reply(&mut s, "{\"t\":\"u\",\"o\":\"nand\",\"r\":0,\"v\":1}").starts_with("ERR "));
+        assert_eq!(reply(&mut s, "READ 3"), "OK 8");
+
+        match s.handle("QUIT") {
+            Action::Quit(r) => assert_eq!(r, "OK bye"),
+            other => panic!("{other:?}"),
+        }
+        drop(s);
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
+    }
+
+    #[test]
+    fn tcp_loopback_client_matches_reference_digest() {
+        let trace = uniform_trace(64, 8, 600, 23);
+        let want = format!("{:016x}", state_digest(&trace.reference_state()));
+
+        let cfg = EngineConfig::sharded(64, 8, 2);
+        let eng = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+        })
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || serve_tcp(eng, listener));
+
+        let report = run_client(&addr, Some(&trace), Mode::Cmt, true, true).unwrap();
+        assert_eq!(report.digest.as_deref(), Some(want.as_str()));
+        assert_eq!(report.acked, trace.events.len() as u64);
+
+        let served = server.join().unwrap().unwrap();
+        assert_eq!(served.stats.completed, trace.updates() as u64);
+        assert_eq!(served.drained_seq.len(), 2);
+        assert!(served.stats.shards.iter().any(|s| s.commit_wall.count > 0));
+    }
+
+    #[test]
+    fn tcp_sub_mode_and_second_client_shutdown() {
+        let trace = uniform_trace(32, 8, 200, 5);
+        let want = format!("{:016x}", state_digest(&trace.reference_state()));
+
+        let cfg = EngineConfig::sharded(32, 8, 1);
+        let eng = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+        })
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || serve_tcp(eng, listener));
+
+        // First client streams in SUB mode and quits without shutdown.
+        let first = run_client(&addr, Some(&trace), Mode::Sub, true, false).unwrap();
+        assert_eq!(first.digest.as_deref(), Some(want.as_str()));
+        // Second client connects afterwards and shuts the server down.
+        let second = run_client(&addr, None, Mode::Cmt, true, true).unwrap();
+        assert_eq!(second.digest.as_deref(), Some(want.as_str()));
+
+        let served = server.join().unwrap().unwrap();
+        assert_eq!(served.stats.completed, trace.updates() as u64);
+    }
+
+    #[test]
+    fn waiting_client_cannot_block_shutdown() {
+        use std::io::{BufRead, BufReader, Write};
+        let cfg = EngineConfig::sharded(32, 8, 1);
+        let eng = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+        })
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || serve_tcp(eng, listener));
+
+        // Client A parks in a WAIT for a seq that will never commit.
+        let mut a = TcpStream::connect(&addr).unwrap();
+        writeln!(a, "WAIT 0 999").unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+
+        // Client B shuts the server down; the join must not deadlock
+        // on A's blocked session thread.
+        run_client(&addr, None, Mode::Cmt, false, true).unwrap();
+        let report = server.join().unwrap().unwrap();
+        assert_eq!(report.stats.completed, 0);
+
+        // A's wait was aborted with a protocol error (or the socket
+        // closed); either way it did not hang the server.
+        let mut reply = String::new();
+        let n = BufReader::new(&mut a).read_line(&mut reply).unwrap_or(0);
+        if n > 0 {
+            assert!(reply.starts_with("ERR"), "{reply}");
+        }
+    }
+
+    #[test]
+    fn busy_classification_distinguishes_backpressure_from_terminal_errors() {
+        // Only EngineBusy (queue full) is retryable; terminal errors
+        // (bad row, shut-down engine) must NOT classify as busy, so
+        // clients fail fast instead of spinning on retries.
+        assert!(is_busy(&anyhow::Error::new(EngineBusy)));
+        let e = engine(32, 8, 1);
+        let err = e
+            .submit(crate::coordinator::UpdateRequest::add(999, 1))
+            .unwrap_err();
+        assert!(!is_busy(&err), "row-range error is terminal: {err:#}");
+        drop(Session::new(Arc::clone(&e)));
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
+    }
+
+    #[test]
+    fn stats_json_is_parseable_and_carries_commit_histograms() {
+        let e = engine(64, 8, 2);
+        let mut s = Session::new(Arc::clone(&e));
+        reply(&mut s, "{\"t\":\"u\",\"o\":\"add\",\"r\":1,\"v\":3}");
+        let text = stats_json(&e.stats());
+        let json = Json::parse(&text).unwrap();
+        assert_eq!(json.get("tickets_resolved").and_then(Json::as_usize), Some(1));
+        let shards = json.get("shards").and_then(Json::as_arr).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert!(shards[1]
+            .get("commit_wall_ns")
+            .and_then(|l| l.get("p95_ns"))
+            .and_then(Json::as_usize)
+            .is_some());
+        drop(s);
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
+    }
+}

@@ -277,7 +277,7 @@ fn backpressure_accounting_invariant() {
             accepted += 1;
         }
     }
-    engine.flush().unwrap();
+    engine.drain_shard(0).unwrap();
     let s = engine.stats();
     assert_eq!(s.submitted, 50_000);
     assert_eq!(s.completed, accepted);

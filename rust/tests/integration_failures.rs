@@ -69,15 +69,15 @@ fn backend_fault_surfaces_on_shutdown_and_stops_worker() {
         }))
     })
     .unwrap();
-    // First flush succeeds, second hits the injected fault.
+    // First drain succeeds, second hits the injected fault.
     engine.submit_blocking(UpdateRequest::add(0, 1)).unwrap();
-    engine.flush().unwrap();
+    engine.drain_shard(0).unwrap();
     engine.submit_blocking(UpdateRequest::add(1, 1)).unwrap();
     // The worker dies on the fault; subsequent API calls must error
     // (not hang), and shutdown must report the fault.
     let mut saw_error = false;
     for _ in 0..100 {
-        if engine.flush().is_err() {
+        if engine.drain_shard(0).is_err() {
             saw_error = true;
             break;
         }
@@ -96,7 +96,7 @@ fn rows_mismatch_between_config_and_backend_fails_fast() {
     // Worker detects the mismatch and exits; first interaction errors.
     let mut errored = false;
     for _ in 0..100 {
-        if engine.flush().is_err() {
+        if engine.drain_shard(0).is_err() {
             errored = true;
             break;
         }

@@ -262,7 +262,7 @@ fn engine_energy_identical_across_tiers() {
         for r in 0..rows {
             e.submit_blocking(UpdateRequest::add(r, (r as u32) | 1)).unwrap();
         }
-        e.flush().unwrap();
+        e.drain_shard(0).unwrap();
         let s = e.stats();
         e.shutdown().unwrap();
         (s.modeled_energy_pj, s.modeled_ns)

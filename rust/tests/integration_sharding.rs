@@ -86,8 +86,8 @@ fn concurrent_producers_match_sequential_reference() {
             });
         }
     });
-    engine.flush().unwrap();
-
+    // snapshot() is a barrier: each shard force-seals before reporting
+    // (there is no whole-engine flush() anymore).
     assert_eq!(engine.snapshot().unwrap(), reference);
     let s = engine.stats();
     let total = (producers * per_thread) as u64;
@@ -148,8 +148,6 @@ fn contended_hot_rows_lose_no_updates() {
             });
         }
     });
-    engine.flush().unwrap();
-
     assert_eq!(engine.snapshot().unwrap(), expected);
     let s = engine.stats();
     assert_eq!(s.completed, (producers * per_thread) as u64);
@@ -186,7 +184,6 @@ fn same_row_deltas_keep_program_order_within_shard() {
         engine.submit_blocking(req).unwrap();
         submitted += 1;
     }
-    engine.flush().unwrap();
     assert_eq!(engine.snapshot().unwrap(), reference);
     let s = engine.stats();
     assert_eq!(s.completed, submitted);
@@ -288,7 +285,9 @@ fn randomized_stress_matches_reference_across_configs() {
                 });
             }
         });
-        engine.flush().unwrap();
+        // Commit everything via the explicit barrier (per-shard drains
+        // under the hood), exercising it under the randomized configs.
+        engine.drain_all().unwrap();
 
         let ctx = format!(
             "trial {trial} (seed {seed:#x}): rows={rows} q={q} shards={shards} tier={tier}"

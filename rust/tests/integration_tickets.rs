@@ -1,0 +1,236 @@
+//! Ticket-semantics properties for the request/response pipeline
+//! (PR-4 satellite): seeded multi-producer checks that
+//!
+//!   (a) every submitted request's ticket resolves exactly once,
+//!   (b) tickets for the same shard resolve in nondecreasing
+//!       `commit_seq` order,
+//!   (c) read-your-writes holds for interleaved read/update streams,
+//!
+//! across 1/2/4/8 shards and all three fidelity tiers
+//! (phase-accurate, word-fast, bit-plane) — plus the per-shard-drain
+//! regression: a read seals only the owning shard's pending batch.
+
+use std::time::Duration;
+
+use fast_sram::coordinator::{
+    BitPlaneBackend, Commit, EngineConfig, FastBackend, UpdateEngine, UpdateOp, UpdateRequest,
+};
+use fast_sram::fastmem::Fidelity;
+use fast_sram::util::bits;
+use fast_sram::util::rng::Rng;
+
+fn engine_for(tier: Fidelity, rows: usize, q: usize, shards: usize) -> UpdateEngine {
+    let mut cfg = EngineConfig::sharded(rows, q, shards);
+    // Seals come from kind changes, reads, drains and this deadline —
+    // tickets must resolve under every seal path.
+    cfg.seal_deadline = Duration::from_micros(300);
+    match tier {
+        Fidelity::BitPlane => UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(BitPlaneBackend::with_rows(plan.rows, plan.q)))
+        })
+        .unwrap(),
+        f => UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows_fidelity(plan.rows, plan.q, f)))
+        })
+        .unwrap(),
+    }
+}
+
+fn apply_host(state: &mut u32, op: UpdateOp, operand: u32, q: usize) {
+    let m = bits::mask(q);
+    *state = match op {
+        UpdateOp::Add => bits::add_mod(*state, operand, q),
+        UpdateOp::Sub => bits::sub_mod(*state, operand, q),
+        UpdateOp::And => *state & operand & m,
+        UpdateOp::Or => (*state | operand) & m,
+        UpdateOp::Xor => (*state ^ operand) & m,
+    };
+}
+
+/// The three ticket properties under concurrent producers, across
+/// shard counts and fidelity tiers. Producers own disjoint row sets
+/// (row % producers == t), so each thread's host model is exact and
+/// read-your-writes is decidable mid-stream.
+#[test]
+fn tickets_resolve_once_in_order_with_read_your_writes() {
+    let producers = 4usize;
+    let rows = 64usize;
+    let q = 8usize;
+    for shards in [1usize, 2, 4, 8] {
+        for tier in [Fidelity::WordFast, Fidelity::BitPlane, Fidelity::PhaseAccurate] {
+            // Phase-accurate is ~100× word-fast per batch: trim load.
+            let per_thread = if tier == Fidelity::PhaseAccurate { 120 } else { 700 };
+            let engine = engine_for(tier, rows, q, shards);
+            let ops =
+                [UpdateOp::Add, UpdateOp::Sub, UpdateOp::And, UpdateOp::Or, UpdateOp::Xor];
+            let ctx = format!("shards={shards} tier={tier:?}");
+
+            // Each producer returns (its commits in submission order,
+            // its final row model).
+            let outcomes: Vec<(Vec<Commit>, Vec<(usize, u32)>)> =
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::new();
+                    for t in 0..producers {
+                        let engine = &engine;
+                        let ctx = &ctx;
+                        handles.push(scope.spawn(move || {
+                            let mut rng = Rng::new(0x71C4E7 + 131 * t as u64);
+                            let own: Vec<usize> =
+                                (0..rows).filter(|r| r % producers == t).collect();
+                            let mut model: Vec<(usize, u32)> =
+                                own.iter().map(|&r| (r, 0u32)).collect();
+                            let mut tickets = Vec::with_capacity(per_thread);
+                            for i in 0..per_thread {
+                                let slot = rng.below(own.len() as u64) as usize;
+                                let row = own[slot];
+                                if rng.chance(0.2) {
+                                    // (c) interleaved read: must see every
+                                    // update this thread already submitted.
+                                    let got = engine.read(row).unwrap();
+                                    assert_eq!(
+                                        got, model[slot].1,
+                                        "{ctx} t={t} i={i}: read-your-writes at row {row}"
+                                    );
+                                } else {
+                                    let op = ops[rng.below(ops.len() as u64) as usize];
+                                    let operand = rng.below(1 << q) as u32;
+                                    apply_host(&mut model[slot].1, op, operand, q);
+                                    tickets.push(
+                                        engine
+                                            .submit_blocking_ticketed(UpdateRequest {
+                                                row,
+                                                op,
+                                                operand,
+                                            })
+                                            .unwrap(),
+                                    );
+                                }
+                            }
+                            // Commit our shards so every ticket can resolve,
+                            // then harvest the commits in submission order.
+                            engine.drain_all().unwrap();
+                            let commits: Vec<Commit> = tickets
+                                .iter()
+                                .map(|tk| tk.wait().expect("ticket must resolve"))
+                                .collect();
+                            // (a) exactly once: resolution is terminal and
+                            // stable — a second wait sees the same commit.
+                            for (tk, c) in tickets.iter().zip(&commits) {
+                                assert!(tk.is_resolved());
+                                assert_eq!(tk.wait().unwrap(), *c, "{ctx}: commit must be stable");
+                            }
+                            (commits, model)
+                        }));
+                    }
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+
+            // (b) per-shard nondecreasing commit_seq in submission order.
+            let mut issued = 0u64;
+            for (commits, _) in &outcomes {
+                let mut last = vec![0u64; shards];
+                for c in commits {
+                    assert!(c.shard < shards, "{ctx}");
+                    assert!(
+                        c.commit_seq >= last[c.shard],
+                        "{ctx}: shard {} seq {} after {}",
+                        c.shard,
+                        c.commit_seq,
+                        last[c.shard]
+                    );
+                    last[c.shard] = c.commit_seq;
+                    assert!(c.modeled_ns > 0.0, "{ctx}: commit carries apply metadata");
+                    issued += 1;
+                }
+            }
+
+            // (a) the books: every ticket issued resolved exactly once.
+            let stats = engine.stats();
+            assert_eq!(stats.tickets_resolved, issued, "{ctx}");
+            assert_eq!(stats.completed, issued, "{ctx}: drains left nothing pending");
+            for sc in &stats.shards {
+                assert_eq!(sc.commit_wall.count, sc.tickets_resolved, "{ctx}");
+            }
+
+            // Final state equals the union of the producers' models.
+            let snap = engine.snapshot().unwrap();
+            for (_, model) in &outcomes {
+                for &(row, want) in model {
+                    assert_eq!(snap[row], want, "{ctx}: row {row}");
+                }
+            }
+            engine.shutdown().unwrap();
+        }
+    }
+}
+
+/// Regression (satellite 1): a read drains only the owning shard's
+/// pending entry — other shards' batchers stay untouched, and even the
+/// owning shard keeps its batch open when the read's row is not
+/// pending in it.
+#[test]
+fn read_drains_only_the_owning_shard() {
+    let shards = 4usize;
+    let mut cfg = EngineConfig::sharded(64, 16, shards);
+    cfg.seal_at_rows = None;
+    cfg.seal_deadline = Duration::from_secs(3600); // nothing seals by policy
+    let engine = UpdateEngine::start(cfg, |plan: &fast_sram::coordinator::ShardPlan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+    })
+    .unwrap();
+
+    // One pending update on every shard (rows 0..4 route to shards 0..4).
+    for row in 0..shards {
+        engine.submit_blocking(UpdateRequest::add(row, 10 + row as u32)).unwrap();
+    }
+
+    // A read on shard 0 of a NON-pending row (4 & 3 == 0): no seal at all.
+    assert_eq!(engine.read(4).unwrap(), 0);
+    assert_eq!(engine.stats().batches, 0, "untouched-row read must not seal");
+
+    // A read of the pending row seals shard 0 — and ONLY shard 0.
+    assert_eq!(engine.read(0).unwrap(), 10);
+    let s = engine.stats();
+    assert_eq!(s.batches, 1);
+    assert_eq!(s.shards[0].sealed_forced, 1);
+    for shard in 1..shards {
+        assert_eq!(
+            s.shards[shard].batches_sealed, 0,
+            "shard {shard}'s batcher must be undisturbed by shard 0's read"
+        );
+    }
+
+    // The other shards still hold their batches open: each drain seals
+    // exactly one batch now, with the pending value intact.
+    for shard in 1..shards {
+        assert_eq!(engine.drain_shard(shard).unwrap(), 1, "shard {shard}");
+        assert_eq!(engine.read(shard).unwrap(), 10 + shard as u32);
+    }
+    let s = engine.stats();
+    assert_eq!(s.batches, shards as u64);
+    engine.shutdown().unwrap();
+}
+
+/// Writes respect the same per-row drain: an absolute write seals the
+/// owning shard only when that shard pends an update for the same row.
+#[test]
+fn write_drains_only_when_the_row_is_pending() {
+    let mut cfg = EngineConfig::sharded(64, 16, 2);
+    cfg.seal_at_rows = None;
+    cfg.seal_deadline = Duration::from_secs(3600);
+    let engine = UpdateEngine::start(cfg, |plan: &fast_sram::coordinator::ShardPlan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+    })
+    .unwrap();
+    engine.submit_blocking(UpdateRequest::add(0, 5)).unwrap(); // shard 0 pends row 0
+    // Write to a different shard-0 row: no seal, batch stays open.
+    engine.write(2, 99).unwrap();
+    assert_eq!(engine.stats().batches, 0);
+    // Write to the pending row: the +5 lands first, then the overwrite.
+    engine.write(0, 1000).unwrap();
+    assert_eq!(engine.stats().batches, 1);
+    engine.submit_blocking(UpdateRequest::add(0, 1)).unwrap();
+    assert_eq!(engine.read(0).unwrap(), 1001);
+    assert_eq!(engine.read(2).unwrap(), 99);
+    engine.shutdown().unwrap();
+}
