@@ -41,6 +41,8 @@
 //! stores numbers as `f64`, which would silently corrupt u64 seeds
 //! above 2⁵³ and break the byte-identity of the round trip.
 
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, ensure, Context};
@@ -195,6 +197,27 @@ impl TraceEvent {
         }
     }
 
+    /// Fold this event into a host-semantics state vector — the
+    /// per-event step of [`Trace::reference_state`], shared with the
+    /// streaming verify path of [`replay_file`].
+    pub fn fold(&self, state: &mut [u32], q: usize) {
+        let m = bits::mask(q);
+        match *self {
+            TraceEvent::Update(req) => {
+                let cur = state[req.row];
+                state[req.row] = match req.op {
+                    UpdateOp::Add => bits::add_mod(cur, req.operand, q),
+                    UpdateOp::Sub => bits::sub_mod(cur, req.operand, q),
+                    UpdateOp::And => cur & req.operand & m,
+                    UpdateOp::Or => (cur | req.operand) & m,
+                    UpdateOp::Xor => (cur ^ req.operand) & m,
+                };
+            }
+            TraceEvent::Write { row, value } => state[row] = value & m,
+            TraceEvent::Flush => {}
+        }
+    }
+
     /// Canonical one-line serialization (no trailing newline) — the
     /// inverse of [`Self::parse_line`] and the per-event body of
     /// [`Trace::to_jsonl`].
@@ -211,6 +234,118 @@ impl TraceEvent {
             }
             TraceEvent::Flush => "{\"t\":\"f\"}".to_string(),
         }
+    }
+}
+
+/// Parsed trace-header metadata (the first JSONL line).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceHeader {
+    pub name: String,
+    pub rows: usize,
+    pub q: usize,
+    pub seed: u64,
+}
+
+impl TraceHeader {
+    /// Parse and validate a header line (shared by the in-memory
+    /// parser and the streaming [`TraceReader`]).
+    pub fn parse(header: &str) -> Result<TraceHeader> {
+        let h = Json::parse(header).context("trace header")?;
+        ensure!(
+            h.get("trace").and_then(Json::as_str) == Some(TRACE_FORMAT),
+            "not a {TRACE_FORMAT} trace (header {header:?})"
+        );
+        let field = |key: &str| {
+            h.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("header field {key:?} missing or not an integer"))
+        };
+        let name = h
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("header field \"name\" missing"))?;
+        ensure!(
+            !name.contains(['\n', '"', '\\']),
+            "trace name {name:?} contains forbidden characters"
+        );
+        let (rows, q) = (field("rows")?, field("q")?);
+        ensure!(rows >= 1, "header rows must be >= 1");
+        ensure!((1..=32).contains(&q), "header q {q} out of range 1..=32");
+        let seed: u64 = h
+            .get("seed")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("header field \"seed\" missing or not a decimal string"))?
+            .parse()
+            .map_err(|_| anyhow!("header seed is not a u64"))?;
+        Ok(TraceHeader { name: name.to_string(), rows, q, seed })
+    }
+}
+
+/// Streaming trace-file reader: the header parses eagerly, events
+/// parse one line at a time off a `BufReader` — a multi-million-event
+/// trace never has to fit in memory (the `fast trace replay` path and
+/// the buffered-I/O satellite of the durability PR ride this).
+pub struct TraceReader {
+    header: TraceHeader,
+    lines: std::io::Lines<BufReader<std::fs::File>>,
+    line_no: usize,
+}
+
+impl TraceReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<TraceReader> {
+        let path = path.as_ref();
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("reading trace from {}", path.display()))?;
+        let mut lines = BufReader::new(file).lines();
+        let header_line = lines
+            .next()
+            .ok_or_else(|| anyhow!("empty trace: missing header line"))?
+            .with_context(|| format!("reading trace header from {}", path.display()))?;
+        let header = TraceHeader::parse(&header_line)?;
+        Ok(TraceReader { header, lines, line_no: 1 })
+    }
+
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    pub fn name(&self) -> &str {
+        &self.header.name
+    }
+
+    pub fn rows(&self) -> usize {
+        self.header.rows
+    }
+
+    pub fn q(&self) -> usize {
+        self.header.q
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.header.seed
+    }
+
+    /// Next event, `None` at end of file. Blank lines are tolerated;
+    /// malformed lines error with their line number.
+    pub fn next_event(&mut self) -> Result<Option<TraceEvent>> {
+        loop {
+            let Some(line) = self.lines.next() else {
+                return Ok(None);
+            };
+            self.line_no += 1;
+            let line = line.context("reading trace line")?;
+            if line.is_empty() {
+                continue;
+            }
+            let event = TraceEvent::parse_line(&line, self.header.rows, self.header.q)
+                .with_context(|| format!("trace line {}", self.line_no))?;
+            return Ok(Some(event));
+        }
+    }
+
+    /// Iterator adapter over [`Self::next_event`].
+    pub fn events(&mut self) -> impl Iterator<Item = Result<TraceEvent>> + '_ {
+        std::iter::from_fn(move || self.next_event().transpose())
     }
 }
 
@@ -269,10 +404,7 @@ impl Trace {
     pub fn to_jsonl(&self) -> String {
         // ~34 bytes per event line is the dense-trace average.
         let mut out = String::with_capacity(64 + self.events.len() * 34);
-        out.push_str(&format!(
-            "{{\"trace\":\"{}\",\"name\":\"{}\",\"rows\":{},\"q\":{},\"seed\":\"{}\"}}\n",
-            TRACE_FORMAT, self.name, self.rows, self.q, self.seed
-        ));
+        out.push_str(&self.header_line());
         for e in &self.events {
             out.push_str(&e.to_json_line());
             out.push('\n');
@@ -286,56 +418,56 @@ impl Trace {
         let (_, header) = lines
             .next()
             .ok_or_else(|| anyhow!("empty trace: missing header line"))?;
-        let h = Json::parse(header).context("trace header")?;
-        ensure!(
-            h.get("trace").and_then(Json::as_str) == Some(TRACE_FORMAT),
-            "not a {TRACE_FORMAT} trace (header {header:?})"
-        );
-        let field = |key: &str| {
-            h.get(key)
-                .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("header field {key:?} missing or not an integer"))
-        };
-        let name = h
-            .get("name")
-            .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("header field \"name\" missing"))?;
-        ensure!(
-            !name.contains(['\n', '"', '\\']),
-            "trace name {name:?} contains forbidden characters"
-        );
-        let (rows, q) = (field("rows")?, field("q")?);
-        ensure!(rows >= 1, "header rows must be >= 1");
-        ensure!((1..=32).contains(&q), "header q {q} out of range 1..=32");
-        let seed: u64 = h
-            .get("seed")
-            .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("header field \"seed\" missing or not a decimal string"))?
-            .parse()
-            .map_err(|_| anyhow!("header seed is not a u64"))?;
-        let mut trace = Trace::new(name, rows, q, seed);
+        let h = TraceHeader::parse(header)?;
+        let mut trace = Trace::new(h.name, h.rows, h.q, h.seed);
         for (i, line) in lines {
             if line.is_empty() {
                 continue; // tolerate a trailing newline
             }
-            let event = TraceEvent::parse_line(line, rows, q)
+            let event = TraceEvent::parse_line(line, trace.rows, trace.q)
                 .with_context(|| format!("trace line {}", i + 1))?;
             trace.events.push(event);
         }
         Ok(trace)
     }
 
-    /// Write the trace to a file.
-    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        std::fs::write(&path, self.to_jsonl())
-            .with_context(|| format!("writing trace to {}", path.as_ref().display()))
+    /// Write the trace to a file, buffered: the header and each event
+    /// line stream through one `BufWriter` instead of materializing
+    /// the whole serialization in memory first. Byte-identical to
+    /// [`Self::to_jsonl`].
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        write!(w, "{}", self.header_line())
+            .and_then(|()| {
+                for e in &self.events {
+                    writeln!(w, "{}", e.to_json_line())?;
+                }
+                w.flush()
+            })
+            .with_context(|| format!("writing trace to {}", path.display()))
     }
 
-    /// Load a trace from a file.
-    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Trace> {
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading trace from {}", path.as_ref().display()))?;
-        Self::parse_jsonl(&text)
+    /// The canonical header line (trailing newline included).
+    fn header_line(&self) -> String {
+        format!(
+            "{{\"trace\":\"{}\",\"name\":\"{}\",\"rows\":{},\"q\":{},\"seed\":\"{}\"}}\n",
+            TRACE_FORMAT, self.name, self.rows, self.q, self.seed
+        )
+    }
+
+    /// Load a trace from a file (streamed through a `BufReader`; the
+    /// events end up in memory, but the serialized text never does —
+    /// use [`TraceReader`] directly to avoid holding the events too).
+    pub fn load(path: impl AsRef<Path>) -> Result<Trace> {
+        let mut r = TraceReader::open(path.as_ref())?;
+        let mut trace = Trace::new(r.name().to_string(), r.rows(), r.q(), r.seed());
+        while let Some(e) = r.next_event()? {
+            trace.events.push(e);
+        }
+        Ok(trace)
     }
 
     // -- replay -------------------------------------------------------------
@@ -358,47 +490,7 @@ impl Trace {
             self.rows,
             self.q
         );
-        let t0 = std::time::Instant::now();
-        let mut pending: Vec<UpdateRequest> = Vec::new();
-        let mut tickets: Vec<Ticket> = Vec::new();
-        let mut tickets_waited = 0u64;
-        for e in &self.events {
-            match *e {
-                TraceEvent::Update(req) => pending.push(req),
-                TraceEvent::Write { row, value } => {
-                    // Per-shard FIFO orders the write after the chunk.
-                    if !pending.is_empty() {
-                        tickets.extend(engine.submit_many_ticketed(std::mem::take(&mut pending))?);
-                    }
-                    engine.write(row, value)?;
-                }
-                TraceEvent::Flush => {
-                    if !pending.is_empty() {
-                        tickets.extend(engine.submit_many_ticketed(std::mem::take(&mut pending))?);
-                    }
-                    engine.drain_all()?;
-                    for t in tickets.drain(..) {
-                        t.wait()?;
-                        tickets_waited += 1;
-                    }
-                }
-            }
-        }
-        if !pending.is_empty() {
-            tickets.extend(engine.submit_many_ticketed(std::mem::take(&mut pending))?);
-        }
-        engine.drain_all()?;
-        for t in tickets.drain(..) {
-            t.wait()?;
-            tickets_waited += 1;
-        }
-        let final_state = engine.snapshot()?;
-        Ok(ReplayReport {
-            final_state,
-            stats: engine.stats(),
-            wall_us: t0.elapsed().as_secs_f64() * 1e6,
-            tickets_waited,
-        })
+        replay_stream(engine, self.events.iter().copied().map(Ok))
     }
 
     /// Convenience: build a deterministic engine for `kind`, replay,
@@ -412,26 +504,110 @@ impl Trace {
 
     /// Host-semantics oracle: fold the events over a plain vector.
     pub fn reference_state(&self) -> Vec<u32> {
-        let m = bits::mask(self.q);
         let mut state = vec![0u32; self.rows];
         for e in &self.events {
-            match *e {
-                TraceEvent::Update(req) => {
-                    let cur = state[req.row];
-                    state[req.row] = match req.op {
-                        UpdateOp::Add => bits::add_mod(cur, req.operand, self.q),
-                        UpdateOp::Sub => bits::sub_mod(cur, req.operand, self.q),
-                        UpdateOp::And => cur & req.operand & m,
-                        UpdateOp::Or => (cur | req.operand) & m,
-                        UpdateOp::Xor => (cur ^ req.operand) & m,
-                    };
-                }
-                TraceEvent::Write { row, value } => state[row] = value & m,
-                TraceEvent::Flush => {}
-            }
+            e.fold(&mut state, self.q);
         }
         state
     }
+}
+
+/// The replay engine-driving loop over any event stream — in-memory
+/// ([`Trace::replay`]) or streamed off disk ([`replay_file`]). The
+/// caller guarantees the events fit the engine's shape (parse-time
+/// validation does this for trace files).
+pub fn replay_stream(
+    engine: &UpdateEngine,
+    events: impl Iterator<Item = Result<TraceEvent>>,
+) -> Result<ReplayReport> {
+    let t0 = std::time::Instant::now();
+    let mut pending: Vec<UpdateRequest> = Vec::new();
+    let mut tickets: Vec<Ticket> = Vec::new();
+    let mut tickets_waited = 0u64;
+    for e in events {
+        match e? {
+            TraceEvent::Update(req) => pending.push(req),
+            TraceEvent::Write { row, value } => {
+                // Per-shard FIFO orders the write after the chunk.
+                if !pending.is_empty() {
+                    tickets.extend(engine.submit_many_ticketed(std::mem::take(&mut pending))?);
+                }
+                engine.write(row, value)?;
+            }
+            TraceEvent::Flush => {
+                if !pending.is_empty() {
+                    tickets.extend(engine.submit_many_ticketed(std::mem::take(&mut pending))?);
+                }
+                engine.drain_all()?;
+                for t in tickets.drain(..) {
+                    t.wait()?;
+                    tickets_waited += 1;
+                }
+            }
+        }
+    }
+    if !pending.is_empty() {
+        tickets.extend(engine.submit_many_ticketed(std::mem::take(&mut pending))?);
+    }
+    engine.drain_all()?;
+    for t in tickets.drain(..) {
+        t.wait()?;
+        tickets_waited += 1;
+    }
+    let final_state = engine.snapshot()?;
+    Ok(ReplayReport {
+        final_state,
+        stats: engine.stats(),
+        wall_us: t0.elapsed().as_secs_f64() * 1e6,
+        tickets_waited,
+    })
+}
+
+/// Outcome of a [`replay_file`] run: the trace's header metadata plus
+/// the replay report.
+#[derive(Debug)]
+pub struct FileReplay {
+    pub name: String,
+    pub rows: usize,
+    pub q: usize,
+    pub report: ReplayReport,
+}
+
+/// Replay a trace file without ever holding the whole file (or event
+/// vector) in memory: events stream off a `BufReader` straight into
+/// the engine. With `verify`, the host-semantics oracle folds
+/// incrementally alongside and the final state must match it
+/// bit-for-bit.
+pub fn replay_file(
+    path: impl AsRef<Path>,
+    kind: BackendKind,
+    shards: usize,
+    verify: bool,
+) -> Result<FileReplay> {
+    let mut reader = TraceReader::open(path.as_ref())?;
+    let (name, rows, q) = (reader.name().to_string(), reader.rows(), reader.q());
+    let engine = kind.start(rows, q, shards)?;
+    let mut reference = if verify { Some(vec![0u32; rows]) } else { None };
+    let report = {
+        let reference = &mut reference;
+        replay_stream(
+            &engine,
+            reader.events().map(|e| {
+                if let (Ok(ev), Some(state)) = (&e, reference.as_mut()) {
+                    ev.fold(state, q);
+                }
+                e
+            }),
+        )?
+    };
+    engine.shutdown()?;
+    if let Some(want) = reference {
+        ensure!(
+            report.final_state == want,
+            "replay diverged from host semantics"
+        );
+    }
+    Ok(FileReplay { name, rows, q, report })
 }
 
 /// Outcome of one replay.
@@ -624,6 +800,67 @@ mod tests {
         assert_eq!(a.stats.backend, b.stats.backend, "label and engine must agree");
         assert_eq!(a.final_state, b.final_state);
         assert_eq!(a.stats.modeled_energy_pj, b.stats.modeled_energy_pj);
+    }
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        std::env::temp_dir().join(format!(
+            "fast-trace-{tag}-{}-{nanos}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn buffered_save_and_streaming_reader_round_trip() {
+        let t = tiny_trace();
+        let path = tmpfile("roundtrip");
+        t.save(&path).unwrap();
+        // Bytes on disk are the canonical serialization.
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), t.to_jsonl());
+        // The streaming reader yields the same header + events.
+        let mut r = TraceReader::open(&path).unwrap();
+        assert_eq!(
+            r.header(),
+            &TraceHeader { name: t.name.clone(), rows: t.rows, q: t.q, seed: t.seed }
+        );
+        let events: Vec<TraceEvent> = r.events().collect::<Result<_>>().unwrap();
+        assert_eq!(events, t.events);
+        // Trace::load goes through the same reader.
+        assert_eq!(Trace::load(&path).unwrap(), t);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn streaming_reader_reports_bad_lines_with_numbers() {
+        let path = tmpfile("badline");
+        let hdr = "{\"trace\":\"fast-trace-v1\",\"name\":\"x\",\"rows\":4,\"q\":8,\"seed\":\"0\"}\n";
+        std::fs::write(&path, format!("{hdr}{{\"t\":\"w\",\"r\":0,\"v\":1}}\nnot json\n")).unwrap();
+        let mut r = TraceReader::open(&path).unwrap();
+        assert!(r.next_event().unwrap().is_some());
+        let err = r.next_event().unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_file_streams_and_verifies() {
+        let t = uniform_trace(32, 8, 400, 19);
+        let path = tmpfile("replayfile");
+        t.save(&path).unwrap();
+        let fr = replay_file(&path, BackendKind::Fast(Fidelity::WordFast), 2, true).unwrap();
+        assert_eq!(fr.rows, 32);
+        assert_eq!(fr.q, 8);
+        assert_eq!(fr.report.final_state, t.reference_state());
+        assert_eq!(fr.report.stats.completed, 400);
+        // A corrupted event value must fail verification cleanly.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"t\":\"u\",\"o\":\"nand\",\"r\":0,\"v\":1}\n");
+        std::fs::write(&path, text).unwrap();
+        assert!(replay_file(&path, BackendKind::Fast(Fidelity::WordFast), 1, true).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -196,17 +196,54 @@ system commands:
                                        (--flush-us is the deprecated spelling; kept
                                        as an alias, --seal-deadline-us wins)
                [--seal-rows N]         size seal: batch seals at N touched rows
+               [--wal-dir DIR]         durable mode: recover DIR (snapshot +
+                                       per-shard WAL tail, torn tails repaired)
+                                       BEFORE accepting connections, then log
+                                       every commit/write, one coalesced fsync
+                                       per group-commit seal
+               [--fsync always|interval|off]  when WAL records hit disk
+                                       (default interval; needs --wal-dir)
+               [--fsync-interval-us 2000]     coalescing window for interval
+               [--wal-segment-bytes 4194304]  segment rotation threshold
                run the fast-serve-v1 front-end: a line protocol speaking
                fast-trace-v1 events over TCP (multi-client) or stdio, with
                per-connection MODE SUB (fire-and-forget) / MODE CMT
                (wait-for-ticket: replies carry shard, commit_seq, seal
-               reason, modeled ns), READ/WAIT/DRAIN/DIGEST/STATS, ERR-busy
-               backpressure, and a clean per-shard drain on SHUTDOWN
+               reason, modeled ns), READ/WAIT/DRAIN/DIGEST [CRC]/STATS,
+               ERR-busy backpressure, and a clean per-shard drain on
+               SHUTDOWN; --stats-json includes WAL counters and fsync
+               latency histograms when durable
   client       --connect HOST:PORT [--in TRACE] [--mode sub|cmt]
                [--digest] [--shutdown]
                drive a running `fast serve`: stream a recorded trace through
                the protocol, print the final state digest, optionally shut
-               the server down
+               the server down; exits nonzero on any terminal (non-busy)
+               ERR or when the requested digest never arrives
+  wal          inspect --dir DIR       summarize a WAL directory (segments,
+                                       per-shard commit_seq/lsn watermarks,
+                                       snapshot, recovered-state digest)
+               verify --dir DIR [--digest-only]
+                                       read-only integrity check: exits
+                                       nonzero if records are unreachable
+                                       beyond a bad frame (a torn final
+                                       tail is a note, not an error)
+               compact --dir DIR       write a full-state snapshot, then
+                                       delete the segments (and older
+                                       snapshots) it covers (takes the
+                                       dir's single-writer lock, so a
+                                       live serve blocks it)
+               repair --dir DIR        destructive: truncate at the first
+                                       bad frame ANYWHERE and drop the
+                                       segments it strands — explicit
+                                       data-loss acceptance for mid-log
+                                       corruption a durable engine start
+                                       refuses to repair silently
+               export --dir DIR --out FILE [--name wal-export]
+                                       convert the WAL to a fast-trace-v1
+                                       trace whose replay reproduces the
+                                       recovered state bit for bit
+                                       (`fast trace replay --digest-only`
+                                       independently audits recovery)
   trace record --out FILE [--workload vgg7|uniform] [--rows 128] [--q 8]
                vgg7 (default): the train flags apply — [--epochs 2]
                  [--steps 4] [--density 1.0] [--seed 30311]

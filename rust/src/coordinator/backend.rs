@@ -69,6 +69,29 @@ pub trait Backend {
     fn read_row(&mut self, row: usize) -> Result<u32>;
     fn write_row(&mut self, row: usize, value: u32) -> Result<()>;
     fn snapshot(&mut self) -> Result<Vec<u32>>;
+
+    /// Restore recovered state before serving (durability recovery
+    /// preload). Default: conventional-port writes of the non-zero
+    /// rows. Backends with workload-modeling counters should override
+    /// with a non-counting path — recovery is not workload, and the
+    /// port/energy counters must keep modeling only what clients
+    /// actually issued ([`FastBackend`] pokes via the toggle-neutral
+    /// `BankSet::poke_row`; the bit-plane and host-state backends have
+    /// no counting write path, so the default is already neutral).
+    fn preload(&mut self, state: &[u32]) -> Result<()> {
+        anyhow::ensure!(
+            state.len() == self.rows(),
+            "preload state has {} rows, backend has {}",
+            state.len(),
+            self.rows()
+        );
+        for (row, &v) in state.iter().enumerate() {
+            if v != 0 {
+                self.write_row(row, v)?;
+            }
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -156,6 +179,23 @@ impl Backend for FastBackend {
 
     fn snapshot(&mut self) -> Result<Vec<u32>> {
         Ok(self.banks.snapshot())
+    }
+
+    fn preload(&mut self, state: &[u32]) -> Result<()> {
+        anyhow::ensure!(
+            state.len() == self.banks.rows(),
+            "preload state has {} rows, backend has {}",
+            state.len(),
+            self.banks.rows()
+        );
+        // Non-counting restore: recovery is not workload, so the port
+        // and toggle counters must not see these writes.
+        for (row, &v) in state.iter().enumerate() {
+            if v != 0 {
+                self.banks.poke_row(row, v)?;
+            }
+        }
+        Ok(())
     }
 }
 

@@ -105,6 +105,15 @@ impl BankSet {
         Ok(self.arrays[b].write_word(r, 0, value)?)
     }
 
+    /// Non-counting row write (cf. [`FastArray::poke_word`]): restores
+    /// state without touching port or toggle counters — the durability
+    /// recovery preload path.
+    pub fn poke_row(&mut self, row: usize, value: u32) -> Result<()> {
+        let (b, r) = self.locate(row);
+        anyhow::ensure!(b < self.arrays.len(), "row {row} out of range");
+        Ok(self.arrays[b].poke_word(r, 0, value)?)
+    }
+
     pub fn snapshot(&mut self) -> Vec<u32> {
         let mut v = Vec::with_capacity(self.rows());
         for a in &mut self.arrays {

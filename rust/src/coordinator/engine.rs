@@ -63,6 +63,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure};
 
+use crate::durability::{recover::recover_or_init, wal::ShardWal, DirLock, DurabilityConfig};
 use crate::metrics::{
     Counters, EnergyAccount, LatencyRecorder, LatencySummary, ShardCounters, ShardSnapshot,
 };
@@ -70,7 +71,7 @@ use crate::Result;
 
 use super::backend::Backend;
 use super::batcher::{Batch, Batcher, SealReason};
-use super::request::{ticket, Commit, Ticket, TicketNotifier, UpdateRequest};
+use super::request::{ticket, BatchKind, Commit, Ticket, TicketNotifier, UpdateRequest};
 
 /// Engine configuration. All knobs have CLI flags on `fast serve`.
 #[derive(Debug, Clone)]
@@ -97,6 +98,14 @@ pub struct EngineConfig {
     /// Bounded per-shard command-queue depth (admission control).
     /// Unit: commands. Default 4096.
     pub queue_cap: usize,
+    /// Durability knobs (CLI `fast serve --wal-dir`): when set, the
+    /// engine recovers the WAL directory BEFORE accepting work
+    /// (snapshot + per-shard tail replay, torn tails repaired), each
+    /// shard worker appends every commit and conventional-port write
+    /// to a segmented WAL aligned with the group-commit seals, and
+    /// per-shard `commit_seq` continues from the recovered watermark.
+    /// `None` (default) = volatile, the pre-durability behaviour.
+    pub durability: Option<DurabilityConfig>,
 }
 
 impl EngineConfig {
@@ -110,6 +119,7 @@ impl EngineConfig {
             seal_at_rows: Some((rows * 3 / 4).max(1)),
             seal_deadline: Duration::from_micros(100),
             queue_cap: 4096,
+            durability: None,
         }
     }
 
@@ -180,6 +190,62 @@ pub struct ShardPlan {
 pub type BackendFactory =
     dyn Fn(&ShardPlan) -> Result<Box<dyn Backend>> + Send + Sync + 'static;
 
+/// Per-shard commit hook, invoked on the shard's worker thread AFTER
+/// the backend applied a mutation and BEFORE any completion ticket
+/// resolves — so a resolved ticket implies the listener saw the
+/// commit (the durability layer rides this: ticket resolution order
+/// is unchanged, but resolution now implies the commit is logged).
+/// A listener error is fatal to the shard: the worker stops, pending
+/// tickets error out, and the committed-seq latch closes — exactly
+/// the established backend-fault path.
+pub trait CommitListener: Send {
+    /// One sealed batch committed. `operands` is the dense coalesced
+    /// operand vector (identity-filled for untouched rows).
+    fn on_commit(&mut self, commit: &Commit, kind: BatchKind, operands: &[u32]) -> Result<()>;
+
+    /// One conventional-port absolute write landed. `committed_seq`
+    /// is the shard's last committed batch seq (writes do not mint
+    /// commit seqs).
+    fn on_write(&mut self, row: usize, value: u32, committed_seq: u64) -> Result<()> {
+        let _ = (row, value, committed_seq);
+        Ok(())
+    }
+
+    /// A barrier (drain / snapshot / shutdown) passed: flush anything
+    /// buffered (the WAL fsyncs here regardless of policy).
+    fn on_barrier(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// When must buffered durability state reach the disk even if no
+    /// further traffic arrives? The shard worker forces
+    /// [`Self::on_barrier`] once this instant passes, so an interval
+    /// fsync policy bounds the persistence lag of a burst's LAST
+    /// commits too — not just the ones that happen to be followed by
+    /// another append. `None` = nothing pending (the default).
+    fn flush_due(&self) -> Option<Instant> {
+        None
+    }
+}
+
+/// Per-shard worker bootstrap: the commit listener, recovered state to
+/// preload into the backend, and the first commit seq to mint.
+struct WorkerInit {
+    listener: Option<Box<dyn CommitListener>>,
+    /// Shard-local row values to restore before going live (recovered
+    /// state; only non-zero rows are written).
+    preload: Option<Vec<u32>>,
+    /// First commit seq to assign (recovered watermark + 1; 1 on a
+    /// fresh engine).
+    first_seq: u64,
+}
+
+impl Default for WorkerInit {
+    fn default() -> Self {
+        WorkerInit { listener: None, preload: None, first_seq: 1 }
+    }
+}
+
 enum Command {
     /// One request, with an optional completion ticket.
     Submit(UpdateRequest, Option<TicketNotifier>),
@@ -236,8 +302,11 @@ pub struct EngineMetrics {
     pub energy: EnergyAccount,
     /// Wall-clock time spent applying batches (all shards).
     pub apply_wall: LatencyRecorder,
-    /// Per-shard counters (group-commit seal reasons, queue depth, …).
-    pub shards: Vec<ShardCounters>,
+    /// Per-shard counters (group-commit seal reasons, queue depth,
+    /// WAL counters, …). `Arc` so the durability appenders can record
+    /// into their shard's counters without holding the whole metrics
+    /// handle.
+    pub shards: Vec<Arc<ShardCounters>>,
     /// Modeled macro time in femtoseconds (ns × 1e6, atomically summed).
     modeled_fs: AtomicU64,
 }
@@ -245,7 +314,7 @@ pub struct EngineMetrics {
 impl EngineMetrics {
     fn new(shards: usize) -> Self {
         EngineMetrics {
-            shards: (0..shards).map(|_| ShardCounters::default()).collect(),
+            shards: (0..shards).map(|_| Arc::new(ShardCounters::default())).collect(),
             ..Default::default()
         }
     }
@@ -296,19 +365,106 @@ pub struct UpdateEngine {
     metrics: Arc<EngineMetrics>,
     backend_name: std::sync::OnceLock<&'static str>,
     cfg: EngineConfig,
+    /// Single-writer lock on the WAL directory, held for the engine's
+    /// lifetime (durable engines only; released on shutdown/drop).
+    _wal_lock: Option<DirLock>,
 }
 
 impl UpdateEngine {
     /// Start the engine: one worker thread per shard, each building its
     /// own backend via `backend_factory` (called on the worker thread
     /// with that shard's [`ShardPlan`]).
+    ///
+    /// With [`EngineConfig::durability`] set, this first recovers the
+    /// WAL directory (newest valid snapshot + per-shard tail replay,
+    /// torn tails repaired) and only then spawns workers — each
+    /// preloading its recovered rows, resuming `commit_seq` at the
+    /// recovered watermark, and appending every commit to the log.
     pub fn start<F>(cfg: EngineConfig, backend_factory: F) -> Result<Self>
     where
         F: Fn(&ShardPlan) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
         cfg.validate()?;
-        let factory: Arc<BackendFactory> = Arc::new(backend_factory);
         let metrics = Arc::new(EngineMetrics::new(cfg.shards));
+        let mut wal_lock = None;
+        let inits: Vec<WorkerInit> = match &cfg.durability {
+            None => (0..cfg.shards).map(|_| WorkerInit::default()).collect(),
+            Some(d) => {
+                // Single-writer exclusion BEFORE touching the log: a
+                // second appender on the same directory interleaves
+                // LSNs, which a later recovery reads as corruption.
+                std::fs::create_dir_all(&d.dir)
+                    .map_err(|e| anyhow!("creating WAL dir {}: {e}", d.dir.display()))?;
+                wal_lock = Some(DirLock::acquire(&d.dir)?);
+                let rec = recover_or_init(d, cfg.rows, cfg.q, cfg.shards)?;
+                (0..cfg.shards)
+                    .map(|shard| {
+                        let mark = rec.per_shard[shard];
+                        let wal = ShardWal::open(
+                            &d.dir,
+                            shard,
+                            cfg.q,
+                            mark.lsn + 1,
+                            d.fsync,
+                            d.segment_bytes,
+                            Some(Arc::clone(&metrics.shards[shard])),
+                        )?;
+                        Ok(WorkerInit {
+                            listener: Some(Box::new(wal) as Box<dyn CommitListener>),
+                            preload: Some(rec.shard_state(shard)),
+                            first_seq: mark.commit_seq + 1,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+        Self::start_inner(cfg, Arc::new(backend_factory), metrics, inits, wal_lock)
+    }
+
+    /// [`Self::start`] with an explicit per-shard [`CommitListener`]
+    /// factory — the generic form of the durability hook (replication,
+    /// change-data capture, test instrumentation). Listeners are
+    /// constructed here (the caller's thread) and moved into the
+    /// workers. Mutually exclusive with [`EngineConfig::durability`],
+    /// which installs the WAL appender on the same hook.
+    pub fn start_with_listener<F, L>(
+        cfg: EngineConfig,
+        backend_factory: F,
+        listener_factory: L,
+    ) -> Result<Self>
+    where
+        F: Fn(&ShardPlan) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+        L: Fn(&ShardPlan) -> Result<Option<Box<dyn CommitListener>>>,
+    {
+        cfg.validate()?;
+        ensure!(
+            cfg.durability.is_none(),
+            "EngineConfig::durability installs its own commit listener; \
+             use start() or clear the durability config"
+        );
+        let metrics = Arc::new(EngineMetrics::new(cfg.shards));
+        let shard_rows = cfg.rows / cfg.shards;
+        let inits = (0..cfg.shards)
+            .map(|shard| {
+                let plan =
+                    ShardPlan { shard, shards: cfg.shards, rows: shard_rows, q: cfg.q };
+                Ok(WorkerInit {
+                    listener: listener_factory(&plan)?,
+                    preload: None,
+                    first_seq: 1,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::start_inner(cfg, Arc::new(backend_factory), metrics, inits, None)
+    }
+
+    fn start_inner(
+        cfg: EngineConfig,
+        factory: Arc<BackendFactory>,
+        metrics: Arc<EngineMetrics>,
+        inits: Vec<WorkerInit>,
+        wal_lock: Option<DirLock>,
+    ) -> Result<Self> {
         let shard_rows = cfg.rows / cfg.shards;
         // Per-shard seal threshold: the config knob is expressed over
         // the logical row space.
@@ -317,7 +473,7 @@ impl UpdateEngine {
         let mut shards = Vec::with_capacity(cfg.shards);
         let mut seqs = Vec::with_capacity(cfg.shards);
         let mut name_rxs = Vec::with_capacity(cfg.shards);
-        for shard in 0..cfg.shards {
+        for (shard, init) in inits.into_iter().enumerate() {
             let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
             let (name_tx, name_rx) = mpsc::sync_channel(1);
             let plan = ShardPlan { shard, shards: cfg.shards, rows: shard_rows, q: cfg.q };
@@ -329,7 +485,16 @@ impl UpdateEngine {
             let worker = std::thread::Builder::new()
                 .name(format!("fast-shard-{shard}"))
                 .spawn(move || {
-                    worker_loop(plan, scfg, rx, worker_metrics, worker_factory, worker_seq, name_tx)
+                    worker_loop(
+                        plan,
+                        scfg,
+                        rx,
+                        worker_metrics,
+                        worker_factory,
+                        worker_seq,
+                        name_tx,
+                        init,
+                    )
                 })
                 .expect("spawning engine shard worker");
             shards.push(ShardHandle { tx, worker: Some(worker) });
@@ -344,6 +509,7 @@ impl UpdateEngine {
             metrics,
             backend_name: std::sync::OnceLock::new(),
             cfg,
+            _wal_lock: wal_lock,
         };
 
         // Collect every shard's construction outcome before going live.
@@ -719,7 +885,7 @@ impl UpdateEngine {
     pub fn stats(&self) -> EngineStats {
         let c = self.metrics.counters.snapshot();
         let shards: Vec<ShardSnapshot> =
-            self.metrics.shards.iter().map(ShardCounters::snapshot).collect();
+            self.metrics.shards.iter().map(|s| s.snapshot()).collect();
         EngineStats {
             submitted: c.requests_submitted,
             completed: c.requests_completed,
@@ -798,8 +964,13 @@ struct ShardWorker<'a> {
     batcher: Batcher,
     deadline: Option<Instant>,
     /// Next commit sequence number to assign at seal time (starts at
-    /// 1; `next_seq - 1` is the last committed seq).
+    /// 1, or at the recovered watermark + 1 on a durable engine;
+    /// `next_seq - 1` is the last committed seq).
     next_seq: u64,
+    /// Commit hook (the WAL appender on a durable engine): invoked
+    /// after every backend apply, before any ticket resolves. A
+    /// listener error kills the worker like a backend fault.
+    listener: Option<Box<dyn CommitListener>>,
 }
 
 impl ShardWorker<'_> {
@@ -838,6 +1009,13 @@ impl ShardWorker<'_> {
             cycles: applied.cycles,
             banks_active: applied.banks_active,
         };
+        // Commit hook (WAL append on a durable engine): BEFORE any
+        // ticket resolves, so a resolved ticket implies the commit is
+        // logged. An error drops the waiters (they observe the fault)
+        // and kills the worker — the established fail-stop path.
+        if let Some(listener) = &mut self.listener {
+            listener.on_commit(&commit, batch.kind, &batch.operands)?;
+        }
         let modeled_ns_u64 = applied.cost.latency_ns.max(0.0).round() as u64;
         for waiter in batch.waiters {
             sc.commit_wall
@@ -871,21 +1049,39 @@ impl ShardWorker<'_> {
         let metrics: &EngineMetrics = self.metrics;
         let shard_counters = &metrics.shards[self.plan.shard];
         loop {
-            let cmd = match self.deadline {
+            // Group-commit deadline: seal the open batch once it
+            // expires (checked every pass — timeouts `continue` here).
+            if let Some(d) = self.deadline {
+                if Instant::now() >= d {
+                    self.flush(SealReason::Deadline)?;
+                    self.deadline = None;
+                }
+            }
+            // Idle-tail persistence: an interval-fsync WAL reports
+            // when dirty bytes must hit the disk even with no further
+            // traffic; force the sync so the policy's window bounds
+            // the lag of a burst's LAST commits too.
+            if let Some(listener) = &mut self.listener {
+                if listener.flush_due().is_some_and(|due| Instant::now() >= due) {
+                    listener.on_barrier()?;
+                }
+            }
+            let wake = match (
+                self.deadline,
+                self.listener.as_ref().and_then(|l| l.flush_due()),
+            ) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            let cmd = match wake {
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
-                        self.flush(SealReason::Deadline)?;
-                        self.deadline = None;
-                        continue;
+                        continue; // expired while a command was handled
                     }
                     match rx.recv_timeout(d - now) {
                         Ok(c) => c,
-                        Err(RecvTimeoutError::Timeout) => {
-                            self.flush(SealReason::Deadline)?;
-                            self.deadline = None;
-                            continue;
-                        }
+                        Err(RecvTimeoutError::Timeout) => continue,
                         Err(RecvTimeoutError::Disconnected) => break,
                     }
                 }
@@ -952,20 +1148,49 @@ impl ShardWorker<'_> {
                         self.flush(SealReason::Forced)?;
                         self.deadline = None;
                     }
-                    let _ = reply.send(self.backend.write_row(row, value));
+                    let mut res = self.backend.write_row(row, value);
+                    let mut fatal = None;
+                    if res.is_ok() {
+                        // Log the write AFTER the backend applied it,
+                        // sequenced by the shard's WAL lsn between
+                        // batch commits. A log failure fails both the
+                        // caller and (fail-stop) this worker.
+                        if let Some(listener) = &mut self.listener {
+                            if let Err(e) = listener.on_write(row, value, self.next_seq - 1)
+                            {
+                                res = Err(anyhow!("durable log append failed: {e:#}"));
+                                fatal = Some(e);
+                            }
+                        }
+                    }
+                    let _ = reply.send(res);
+                    if let Some(e) = fatal {
+                        return Err(e);
+                    }
                 }
                 Command::Drain(reply) => {
                     self.flush(SealReason::Forced)?;
+                    // A drain is a durability barrier too: whatever
+                    // the fsync policy, a drained shard is on disk.
+                    if let Some(listener) = &mut self.listener {
+                        listener.on_barrier()?;
+                    }
                     self.deadline = None;
                     let _ = reply.send(self.next_seq - 1);
                 }
                 Command::Snapshot(reply) => {
                     self.flush(SealReason::Forced)?;
+                    if let Some(listener) = &mut self.listener {
+                        listener.on_barrier()?;
+                    }
                     self.deadline = None;
                     let _ = reply.send(self.backend.snapshot());
                 }
                 Command::Shutdown => {
                     self.flush(SealReason::Forced)?;
+                    if let Some(listener) = &mut self.listener {
+                        listener.on_barrier()?;
+                    }
                     break;
                 }
             }
@@ -983,13 +1208,43 @@ fn worker_loop(
     factory: Arc<BackendFactory>,
     seq: Arc<ShardSeq>,
     name_tx: SyncSender<Result<&'static str>>,
+    mut init: WorkerInit,
 ) -> Result<()> {
     // `&dyn Fn` is callable; `Arc<dyn Fn>` is not (no Fn impl on Arc).
     let factory = factory.as_ref();
     let backend = match factory(&plan) {
-        Ok(b) => {
-            let _ = name_tx.send(Ok(b.name()));
-            b
+        Ok(mut b) => {
+            // Restore recovered state BEFORE announcing readiness, so
+            // a preload failure surfaces as a start() error rather
+            // than a later mystery fault. Backend::preload is the
+            // non-counting path — recovery must not inflate the
+            // workload-modeling port/energy counters.
+            let preload_err = match init.preload.take() {
+                Some(state) => b.preload(&state).err(),
+                None => None,
+            };
+            match preload_err {
+                None => {
+                    // Publish the recovered watermark BEFORE announcing
+                    // readiness, so the moment start() returns,
+                    // wait_seq / committed_seq / stats all see the
+                    // pre-crash commits (no transient zero).
+                    if init.first_seq > 1 {
+                        metrics.shards[plan.shard]
+                            .commit_seq
+                            .store(init.first_seq - 1, Ordering::Relaxed);
+                        seq.publish(init.first_seq - 1);
+                    }
+                    let _ = name_tx.send(Ok(b.name()));
+                    b
+                }
+                Some(e) => {
+                    let _ = name_tx
+                        .send(Err(anyhow!("restoring recovered shard state: {e:#}")));
+                    seq.close();
+                    return Ok(());
+                }
+            }
         }
         Err(e) => {
             let _ = name_tx.send(Err(anyhow!("backend construction failed: {e:#}")));
@@ -1006,7 +1261,8 @@ fn worker_loop(
         backend,
         batcher,
         deadline: None,
-        next_seq: 1,
+        next_seq: init.first_seq,
+        listener: init.listener,
     };
 
     // Every exit path (clean shutdown, backend fault) falls through to
@@ -1403,6 +1659,102 @@ mod tests {
         assert!(t.wait().is_err(), "uncommitted ticket must error, not hang");
         assert!(e.wait_seq(0, 1).is_err(), "seq latch must close on worker death");
         let _ = e.shutdown();
+    }
+
+    #[test]
+    fn commit_listener_sees_commits_and_writes_before_tickets_resolve() {
+        use std::sync::Mutex;
+
+        #[derive(Debug, Default)]
+        struct Log {
+            commits: Vec<(u64, usize)>, // (commit_seq, non-identity ops)
+            writes: Vec<(usize, u32, u64)>,
+            barriers: u64,
+        }
+        struct Recorder(Arc<Mutex<Log>>);
+        impl CommitListener for Recorder {
+            fn on_commit(
+                &mut self,
+                commit: &Commit,
+                kind: BatchKind,
+                operands: &[u32],
+            ) -> Result<()> {
+                let ident = kind.identity(16);
+                let ops = operands.iter().filter(|&&o| o != ident).count();
+                self.0.lock().unwrap().commits.push((commit.commit_seq, ops));
+                Ok(())
+            }
+            fn on_write(&mut self, row: usize, value: u32, committed_seq: u64) -> Result<()> {
+                self.0.lock().unwrap().writes.push((row, value, committed_seq));
+                Ok(())
+            }
+            fn on_barrier(&mut self) -> Result<()> {
+                self.0.lock().unwrap().barriers += 1;
+                Ok(())
+            }
+        }
+
+        let log = Arc::new(Mutex::new(Log::default()));
+        let mut cfg = EngineConfig::new(128, 16);
+        cfg.seal_at_rows = None;
+        cfg.seal_deadline = Duration::from_secs(3600);
+        let log2 = Arc::clone(&log);
+        let e = UpdateEngine::start_with_listener(
+            cfg,
+            |p: &ShardPlan| Ok(Box::new(FastBackend::with_rows(p.rows, p.q))),
+            move |_plan| Ok(Some(Box::new(Recorder(Arc::clone(&log2))) as Box<_>)),
+        )
+        .unwrap();
+        let t = e.submit_blocking_ticketed(UpdateRequest::add(3, 7)).unwrap();
+        e.submit_blocking(UpdateRequest::add(9, 1)).unwrap();
+        assert_eq!(e.drain_shard(0).unwrap(), 1);
+        let c = t.wait().unwrap();
+        // The ticket resolved, so the listener must already have seen
+        // the commit (hook runs before resolution).
+        {
+            let g = log.lock().unwrap();
+            assert_eq!(g.commits, vec![(c.commit_seq, 2)]);
+            assert!(g.barriers >= 1, "drain is a listener barrier");
+        }
+        e.write(5, 1000).unwrap();
+        assert_eq!(log.lock().unwrap().writes, vec![(5, 1000, 1)]);
+        e.shutdown().unwrap();
+        assert!(log.lock().unwrap().barriers >= 2, "shutdown is a barrier too");
+    }
+
+    #[test]
+    fn failing_listener_fails_tickets_like_a_backend_fault() {
+        struct Failing;
+        impl CommitListener for Failing {
+            fn on_commit(&mut self, _: &Commit, _: BatchKind, _: &[u32]) -> Result<()> {
+                anyhow::bail!("injected listener fault")
+            }
+        }
+        let cfg = EngineConfig::new(128, 16);
+        let e = UpdateEngine::start_with_listener(
+            cfg,
+            |p: &ShardPlan| Ok(Box::new(FastBackend::with_rows(p.rows, p.q))),
+            |_plan| Ok(Some(Box::new(Failing) as Box<_>)),
+        )
+        .unwrap();
+        let t = e.submit_blocking_ticketed(UpdateRequest::add(0, 1)).unwrap();
+        assert!(e.drain_shard(0).is_err(), "listener fault kills the drain");
+        assert!(t.wait().is_err(), "ticket must error, not report a lost commit");
+        let _ = e.shutdown();
+    }
+
+    #[test]
+    fn durability_config_conflicts_with_explicit_listener() {
+        let mut cfg = EngineConfig::new(128, 16);
+        cfg.durability = Some(crate::durability::DurabilityConfig::new(
+            std::env::temp_dir().join("fast-never-created"),
+        ));
+        let r = UpdateEngine::start_with_listener(
+            cfg,
+            |p: &ShardPlan| Ok(Box::new(FastBackend::with_rows(p.rows, p.q))),
+            |_plan| Ok(None),
+        );
+        assert!(r.is_err());
     }
 
     #[test]

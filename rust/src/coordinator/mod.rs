@@ -29,7 +29,7 @@ pub use backend::{
 pub use bank::{BankApply, BankSet};
 pub use batcher::{Batch, Batcher, SealReason};
 pub use engine::{
-    BackendFactory, EngineBusy, EngineConfig, EngineMetrics, EngineStats, ShardPlan,
-    UpdateEngine,
+    BackendFactory, CommitListener, EngineBusy, EngineConfig, EngineMetrics, EngineStats,
+    ShardPlan, UpdateEngine,
 };
 pub use request::{ticket, BatchKind, Commit, Ticket, TicketNotifier, UpdateOp, UpdateRequest};

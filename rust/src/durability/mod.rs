@@ -1,0 +1,81 @@
+//! Durability subsystem: segmented write-ahead log, full-state
+//! snapshots, and crash recovery for the ticketed update engine.
+//!
+//! A `fast serve` process used to lose every committed batch when it
+//! died; no table/trainer workload could trust it. This layer turns
+//! the engine's existing commit machinery into persistence:
+//!
+//! - [`wal`] — the binary, CRC32-framed, size-segmented log. One
+//!   appender per shard, driven through the engine's
+//!   [`CommitListener`](crate::coordinator::CommitListener) hook so a
+//!   group-commit *seal* is exactly one buffered frame write plus at
+//!   most one coalesced fsync (per the [`FsyncPolicy`]). The per-shard
+//!   `commit_seq` from the ticket machinery is the record's identity;
+//!   a shard-local LSN orders conventional-port writes between seals.
+//! - [`segment`] — on-disk layout: per-shard directories of segments
+//!   named by first LSN, plus the `wal.json` shape manifest that stops
+//!   two differently-shaped engines from sharing a directory.
+//! - [`snapshot`] — atomic (temp-file + rename) full-state snapshots
+//!   carrying the row state, every shard's `(commit_seq, lsn)`
+//!   watermark and a verified digest; the anchor that lets compaction
+//!   retire covered segments.
+//! - [`recover`] — startup recovery: newest valid snapshot, then each
+//!   shard's WAL tail (deduped by commit_seq/LSN, torn tails truncated
+//!   at the first bad frame), digest-verified; plus offline
+//!   [`recover::compact`] and the WAL→`fast-trace-v1`
+//!   [`recover::export_trace`] interop that lets
+//!   `fast trace replay --digest-only` independently audit any
+//!   recovered state.
+//!
+//! Wiring: set [`DurabilityConfig`] on
+//! [`EngineConfig`](crate::coordinator::EngineConfig) (CLI:
+//! `fast serve --wal-dir DIR [--fsync always|interval|off]`) and the
+//! engine recovers before accepting work; `fast wal
+//! inspect|verify|compact|export` operate on the directory offline.
+
+pub mod recover;
+pub mod segment;
+pub mod snapshot;
+pub mod wal;
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+pub use recover::{
+    compact, export_trace, recover, recover_force, recover_or_init, recover_repair,
+    CompactReport, RecoverReport, TornNote,
+};
+pub use segment::{DirLock, Manifest};
+pub use snapshot::{ShardMark, Snapshot};
+pub use wal::{FsyncPolicy, SegmentReader, ShardWal, WalPayload, WalRecord};
+
+/// Default segment-rotation threshold (bytes).
+pub const DEFAULT_SEGMENT_BYTES: u64 = 4 * 1024 * 1024;
+
+/// Default fsync coalescing interval for [`FsyncPolicy::Interval`].
+pub const DEFAULT_FSYNC_INTERVAL: Duration = Duration::from_micros(2000);
+
+/// The durability knobs carried by
+/// [`EngineConfig`](crate::coordinator::EngineConfig).
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    /// WAL directory (created on first use; its `wal.json` manifest
+    /// pins the engine shape thereafter).
+    pub dir: PathBuf,
+    /// When appended records hit the disk (CLI `--fsync`).
+    pub fsync: FsyncPolicy,
+    /// Segment rotation threshold in bytes (CLI `--wal-segment-bytes`).
+    pub segment_bytes: u64,
+}
+
+impl DurabilityConfig {
+    /// Sensible defaults: interval fsync (2 ms coalescing window),
+    /// 4 MiB segments.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        DurabilityConfig {
+            dir: dir.into(),
+            fsync: FsyncPolicy::Interval(DEFAULT_FSYNC_INTERVAL),
+            segment_bytes: DEFAULT_SEGMENT_BYTES,
+        }
+    }
+}

@@ -1,0 +1,532 @@
+//! Crash recovery: rebuild the logical row state from the newest valid
+//! snapshot plus each shard's WAL tail, repair torn tails, compact
+//! covered segments, and convert a WAL into a `fast-trace-v1` trace so
+//! `fast trace replay --digest-only` can independently check any
+//! recovered state.
+//!
+//! ## Invariants
+//!
+//! - **Prefix consistency.** Recovery applies, per shard, exactly the
+//!   records of a prefix of what was appended: the scan stops at the
+//!   first bad frame, and (in repair mode) truncates the file there
+//!   and drops any later segments of that shard. No record after a gap
+//!   is ever applied.
+//! - **Dedup.** Records at or below the snapshot watermark are skipped
+//!   twice over: by LSN (which orders writes too) and, for batch
+//!   records, by `commit_seq` — replaying a WAL tail over a snapshot
+//!   can never double-apply a commit.
+//! - **Monotonicity.** LSNs must strictly increase within a shard's
+//!   scan; a non-monotone record is treated as corruption at that
+//!   offset, not applied.
+//! - **Digest verification.** A snapshot's stored digest is recomputed
+//!   on load (see `snapshot.rs`); [`RecoverReport::digest`] is the
+//!   digest of the *recovered* state, comparable against
+//!   `fast trace replay --digest-only` of the exported trace.
+//! - **Idempotence.** Recovering an already-recovered directory (even
+//!   twice in a row) yields byte-identical state and watermarks.
+
+use std::fs::{self, OpenOptions};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::apps::trace::{state_digest, Trace};
+use crate::coordinator::request::{BatchKind, UpdateOp, UpdateRequest};
+use crate::util::bits;
+use crate::Result;
+
+use super::segment::{self, Manifest, SEGMENT_HEADER_LEN};
+use super::snapshot::{self, ShardMark, Snapshot};
+use super::wal::{SegmentReader, WalPayload, WalRecord};
+use super::DurabilityConfig;
+
+/// One repaired (or repair-needing) torn tail.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TornNote {
+    pub shard: usize,
+    pub segment: PathBuf,
+    /// Byte offset of the good prefix (the truncation point).
+    pub offset: u64,
+    pub reason: String,
+    /// Later segments of the shard made unreachable by the bad frame
+    /// (0 when the tear is in the final segment — the normal crash
+    /// artifact).
+    pub dropped_segments: usize,
+}
+
+/// Outcome of a recovery pass.
+#[derive(Debug, Clone)]
+pub struct RecoverReport {
+    pub rows: usize,
+    pub q: usize,
+    pub shards: usize,
+    /// Recovered logical row state.
+    pub state: Vec<u32>,
+    /// Post-tail-replay watermark per shard.
+    pub per_shard: Vec<ShardMark>,
+    /// FNV-1a digest of `state` (the serve/trace digest function).
+    pub digest: u64,
+    /// Snapshot file the recovery started from, if any.
+    pub snapshot: Option<PathBuf>,
+    /// Segments scanned across all shards.
+    pub segments: usize,
+    /// WAL records applied on top of the snapshot.
+    pub records_replayed: u64,
+    /// Torn tails found (and, in repair mode, fixed).
+    pub torn: Vec<TornNote>,
+}
+
+impl RecoverReport {
+    /// Slice the recovered state down to one shard's local rows
+    /// (`local_row -> state[(local << log2(shards)) | shard]`).
+    pub fn shard_state(&self, shard: usize) -> Vec<u32> {
+        let bits = self.shards.trailing_zeros();
+        let shard_rows = self.rows / self.shards;
+        (0..shard_rows).map(|local| self.state[(local << bits) | shard]).collect()
+    }
+}
+
+/// What a recovery pass is allowed to do to the files it scans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Repair {
+    /// Report damage, touch nothing (`fast wal inspect|verify|export`).
+    ReadOnly,
+    /// Truncate a torn FINAL-segment tail (the normal crash artifact),
+    /// but REFUSE mid-log corruption that makes later segments
+    /// unreachable — repairing that silently would discard fsynced,
+    /// acknowledged commits. Engine startup and compaction run this.
+    TailOnly,
+    /// Truncate at the first bad frame wherever it is and delete the
+    /// unreachable segments — explicit data-loss acceptance
+    /// (`fast wal repair`).
+    Force,
+}
+
+/// Read-only recovery of an existing WAL directory (shape comes from
+/// its manifest). Torn tails are reported, not repaired; the returned
+/// state is the consistent prefix either way.
+pub fn recover(dir: &Path) -> Result<RecoverReport> {
+    scan(dir, Repair::ReadOnly, &mut |_, _| {}).map(|(rep, _)| rep)
+}
+
+/// Recovery with tail repair: a torn final-segment tail is truncated
+/// at the last good frame so a subsequent appender can extend the log
+/// in place. Corruption that strands later segments is an ERROR (run
+/// [`recover_force`] / `fast wal repair` to accept the loss). This is
+/// what a durable engine runs at startup.
+pub fn recover_repair(dir: &Path) -> Result<RecoverReport> {
+    scan(dir, Repair::TailOnly, &mut |_, _| {}).map(|(rep, _)| rep)
+}
+
+/// Destructive repair: truncate at the first bad frame wherever it
+/// sits and delete the segments it strands. Only for explicit
+/// operator use — this is how acknowledged commits get discarded.
+pub fn recover_force(dir: &Path) -> Result<RecoverReport> {
+    scan(dir, Repair::Force, &mut |_, _| {}).map(|(rep, _)| rep)
+}
+
+/// Engine-startup entry point: initialize the directory on first use
+/// (manifest + shard dirs), validate the shape against the engine
+/// config on reuse, then recover with repair.
+pub fn recover_or_init(
+    cfg: &DurabilityConfig,
+    rows: usize,
+    q: usize,
+    shards: usize,
+) -> Result<RecoverReport> {
+    fs::create_dir_all(&cfg.dir)
+        .with_context(|| format!("creating WAL dir {}", cfg.dir.display()))?;
+    if Manifest::exists(&cfg.dir) {
+        let m = Manifest::load(&cfg.dir)?;
+        ensure!(
+            m == (Manifest { rows, q, shards }),
+            "WAL dir {} belongs to a {}x{} engine with {} shard(s); \
+             this engine is {rows}x{q} with {shards} shard(s) — refusing to mix",
+            cfg.dir.display(),
+            m.rows,
+            m.q,
+            m.shards
+        );
+    } else {
+        Manifest { rows, q, shards }.write_atomic(&cfg.dir)?;
+    }
+    for shard in 0..shards {
+        fs::create_dir_all(segment::shard_dir(&cfg.dir, shard))?;
+    }
+    recover_repair(&cfg.dir)
+}
+
+/// The shared scan core: snapshot + per-shard tail replay, with every
+/// applied record also handed to `sink` (export collects them;
+/// recovery ignores them). Returns the loaded snapshot alongside the
+/// report so callers that need the pre-tail base state (export) don't
+/// re-read and re-verify the file.
+fn scan(
+    dir: &Path,
+    repair: Repair,
+    sink: &mut dyn FnMut(usize, &WalRecord),
+) -> Result<(RecoverReport, Option<Snapshot>)> {
+    let m = Manifest::load(dir)?;
+    let shard_bits = m.shards.trailing_zeros();
+    let shard_rows = m.rows / m.shards;
+    let mask = bits::mask(m.q);
+
+    let (snapshot_path, base, watermarks) = match snapshot::load_newest(dir)? {
+        Some((path, snap)) => {
+            ensure!(
+                snap.rows == m.rows && snap.q == m.q && snap.shards == m.shards,
+                "snapshot {} shape {}x{}/{} disagrees with manifest {}x{}/{}",
+                path.display(),
+                snap.rows,
+                snap.q,
+                snap.shards,
+                m.rows,
+                m.q,
+                m.shards
+            );
+            let marks = snap.per_shard.clone();
+            (Some(path), Some(snap), marks)
+        }
+        None => (None, None, vec![ShardMark::default(); m.shards]),
+    };
+    let mut state = base
+        .as_ref()
+        .map(|s| s.state.clone())
+        .unwrap_or_else(|| vec![0u32; m.rows]);
+
+    let mut per_shard = watermarks.clone();
+    let mut torn = Vec::new();
+    let mut segments = 0usize;
+    let mut records_replayed = 0u64;
+
+    for shard in 0..m.shards {
+        let wm = watermarks[shard];
+        let segs = segment::list_segments(dir, shard)?;
+        segments += segs.len();
+        // Strict-monotonicity tracker over the whole scan (skipped
+        // records count too — they still occupy LSNs).
+        let mut scan_lsn = 0u64;
+        let mut stop: Option<(usize, u64, String)> = None; // (seg idx, offset, why)
+
+        'segs: for (i, seg) in segs.iter().enumerate() {
+            let mut rd = match SegmentReader::open(&seg.path, shard) {
+                Ok(rd) => rd,
+                Err(e) => {
+                    // Headerless / foreign file: torn at byte 0.
+                    stop = Some((i, 0, format!("{e:#}")));
+                    break 'segs;
+                }
+            };
+            loop {
+                // Good-prefix length BEFORE this frame: the truncation
+                // point if the frame turns out bad (the reader's own
+                // offset only advances past frames it accepted).
+                let frame_start = rd.offset();
+                let Some(rec) = rd.next_record() else { break };
+                if rec.lsn <= scan_lsn {
+                    stop = Some((
+                        i,
+                        frame_start,
+                        format!("non-monotone lsn {} after {}", rec.lsn, scan_lsn),
+                    ));
+                    break 'segs;
+                }
+                scan_lsn = rec.lsn;
+                // A CRC-valid record addressing rows this shard does
+                // not own is corruption, not data — stop here exactly
+                // like a bad frame (never silently drop logged ops).
+                if let Some(row) = out_of_range_row(&rec, shard_rows) {
+                    stop = Some((
+                        i,
+                        frame_start,
+                        format!(
+                            "record lsn {} addresses local row {row} beyond the \
+                             shard's {shard_rows} rows",
+                            rec.lsn
+                        ),
+                    ));
+                    break 'segs;
+                }
+                // Dedup against the snapshot watermark: by LSN (orders
+                // writes) and, for batches, by commit_seq as well. The
+                // LSN watermark advances over every record seen, so a
+                // later appender can never reuse a logged LSN.
+                if rec.lsn <= wm.lsn {
+                    continue;
+                }
+                per_shard[shard].lsn = rec.lsn;
+                if let WalPayload::Batch { .. } = rec.payload {
+                    if rec.commit_seq <= wm.commit_seq {
+                        continue;
+                    }
+                }
+                apply_record(&mut state, &rec, shard, shard_bits, mask, m.q);
+                sink(shard, &rec);
+                if let WalPayload::Batch { .. } = rec.payload {
+                    per_shard[shard].commit_seq = rec.commit_seq;
+                }
+                records_replayed += 1;
+            }
+            if let Some(t) = rd.torn() {
+                stop = Some((i, t.offset, t.reason.clone()));
+                break 'segs;
+            }
+        }
+
+        if let Some((seg_idx, offset, reason)) = stop {
+            let dropped = segs.len() - seg_idx - 1;
+            match repair {
+                Repair::ReadOnly => {}
+                // Repairing past a mid-log tear would delete segments
+                // full of fsynced, acknowledged commits — refuse
+                // unless the operator explicitly forces it.
+                Repair::TailOnly if dropped > 0 => bail!(
+                    "shard {shard}: bad frame in {} at byte {offset} ({reason}) makes \
+                     {dropped} later segment(s) unreachable; refusing to repair past \
+                     acknowledged commits — run `fast wal repair --dir …` to accept \
+                     the data loss",
+                    segs[seg_idx].path.display()
+                ),
+                Repair::TailOnly | Repair::Force => {
+                    repair_tail(&segs[seg_idx].path, offset)?;
+                    for later in &segs[seg_idx + 1..] {
+                        fs::remove_file(&later.path).with_context(|| {
+                            format!("removing unreachable segment {}", later.path.display())
+                        })?;
+                    }
+                }
+            }
+            torn.push(TornNote {
+                shard,
+                segment: segs[seg_idx].path.clone(),
+                offset,
+                reason,
+                dropped_segments: dropped,
+            });
+        }
+    }
+
+    let digest = state_digest(&state);
+    let report = RecoverReport {
+        rows: m.rows,
+        q: m.q,
+        shards: m.shards,
+        state,
+        per_shard,
+        digest,
+        snapshot: snapshot_path,
+        segments,
+        records_replayed,
+        torn,
+    };
+    Ok((report, base))
+}
+
+/// The first shard-local row a record addresses that is outside the
+/// shard's row space, if any.
+fn out_of_range_row(rec: &WalRecord, shard_rows: usize) -> Option<u32> {
+    match &rec.payload {
+        WalPayload::Batch { ops, .. } => ops
+            .iter()
+            .map(|&(row, _)| row)
+            .find(|&row| row as usize >= shard_rows),
+        WalPayload::Write { row, .. } => (*row as usize >= shard_rows).then_some(*row),
+    }
+}
+
+fn apply_record(
+    state: &mut [u32],
+    rec: &WalRecord,
+    shard: usize,
+    shard_bits: u32,
+    mask: u32,
+    q: usize,
+) {
+    let logical = |local: u32| ((local as usize) << shard_bits) | shard;
+    match &rec.payload {
+        WalPayload::Batch { kind, ops, .. } => {
+            for &(local, operand) in ops {
+                let row = logical(local);
+                if row < state.len() {
+                    state[row] = kind.coalesce(state[row], operand, q);
+                }
+            }
+        }
+        WalPayload::Write { row, value } => {
+            let row = logical(*row);
+            if row < state.len() {
+                state[row] = value & mask;
+            }
+        }
+    }
+}
+
+/// Truncate a torn segment at its last good frame. A good prefix
+/// shorter than the segment header means the file never held a valid
+/// record — remove it entirely.
+fn repair_tail(path: &Path, offset: u64) -> Result<()> {
+    if offset < SEGMENT_HEADER_LEN {
+        fs::remove_file(path)
+            .with_context(|| format!("removing headerless segment {}", path.display()))?;
+        return Ok(());
+    }
+    let f = OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening {} for truncation", path.display()))?;
+    f.set_len(offset)
+        .with_context(|| format!("truncating {} to {offset} bytes", path.display()))?;
+    f.sync_data().context("fsyncing truncated segment")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Compaction
+// ---------------------------------------------------------------------------
+
+/// Outcome of a compaction pass.
+#[derive(Debug, Clone)]
+pub struct CompactReport {
+    pub snapshot: PathBuf,
+    pub digest: u64,
+    pub segments_removed: usize,
+    pub bytes_reclaimed: u64,
+    pub snapshots_removed: usize,
+}
+
+/// Compact a WAL directory: recover (with repair), write a full-state
+/// snapshot at the recovered watermarks, then delete every segment the
+/// snapshot covers (all of them — the scan replayed everything) and
+/// every older snapshot. Offline only: do not run against a directory
+/// a live `fast serve` is appending to.
+pub fn compact(dir: &Path) -> Result<CompactReport> {
+    let rep = recover_repair(dir)?;
+    let snap = Snapshot {
+        rows: rep.rows,
+        q: rep.q,
+        shards: rep.shards,
+        per_shard: rep.per_shard.clone(),
+        state: rep.state.clone(),
+    };
+    let snapshot_path = snap.write_atomic(dir)?;
+
+    let mut segments_removed = 0usize;
+    let mut bytes_reclaimed = 0u64;
+    for shard in 0..rep.shards {
+        for seg in segment::list_segments(dir, shard)? {
+            bytes_reclaimed += seg.bytes;
+            fs::remove_file(&seg.path)
+                .with_context(|| format!("removing covered segment {}", seg.path.display()))?;
+            segments_removed += 1;
+        }
+    }
+    let mut snapshots_removed = 0usize;
+    for (_, path) in snapshot::list_snapshots(dir)? {
+        if path != snapshot_path {
+            bytes_reclaimed += fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            fs::remove_file(&path)
+                .with_context(|| format!("removing superseded snapshot {}", path.display()))?;
+            snapshots_removed += 1;
+        }
+    }
+    Ok(CompactReport {
+        snapshot: snapshot_path,
+        digest: rep.digest,
+        segments_removed,
+        bytes_reclaimed,
+        snapshots_removed,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Trace interop
+// ---------------------------------------------------------------------------
+
+fn kind_op(kind: BatchKind) -> UpdateOp {
+    match kind {
+        BatchKind::Add => UpdateOp::Add,
+        BatchKind::And => UpdateOp::And,
+        BatchKind::Or => UpdateOp::Or,
+        BatchKind::Xor => UpdateOp::Xor,
+    }
+}
+
+/// Convert a WAL directory into a `fast-trace-v1` [`Trace`] whose
+/// replay reproduces the recovered state bit for bit: the snapshot
+/// state becomes absolute writes, each shard's tail records become
+/// update/write events in log order (shards own disjoint rows, so
+/// per-shard order is the only order that matters), and a final flush
+/// closes the stream. `fast trace replay --digest-only` of the export
+/// is an independent check of any recovered state.
+pub fn export_trace(dir: &Path, name: &str) -> Result<Trace> {
+    let m = Manifest::load(dir)?;
+    let shard_bits = m.shards.trailing_zeros();
+
+    // Collect the tail records per shard (read-only scan; the scan
+    // hands back the verified snapshot it loaded, so the base state
+    // is not read or checked twice).
+    let mut tails: Vec<Vec<WalRecord>> = vec![Vec::new(); m.shards];
+    let (rep, base) = scan(dir, Repair::ReadOnly, &mut |shard, rec| {
+        tails[shard].push(rec.clone())
+    })?;
+
+    let mut trace = Trace::new(name, m.rows, m.q, 0);
+    // Snapshot base state first (zeros need no event).
+    if let Some(snap) = &base {
+        for (row, &v) in snap.state.iter().enumerate() {
+            if v != 0 {
+                trace.push_write(row, v);
+            }
+        }
+    }
+    let mask = bits::mask(m.q);
+    for (shard, records) in tails.iter().enumerate() {
+        let logical = |local: u32| ((local as usize) << shard_bits) | shard;
+        for rec in records {
+            match &rec.payload {
+                WalPayload::Batch { kind, ops, .. } => {
+                    let op = kind_op(*kind);
+                    for &(local, operand) in ops {
+                        let row = logical(local);
+                        ensure!(
+                            row < m.rows && operand <= mask,
+                            "shard {shard} lsn {}: op (row {row}, operand {operand:#x}) \
+                             out of range for {}x{}",
+                            rec.lsn,
+                            m.rows,
+                            m.q
+                        );
+                        trace.push_update(UpdateRequest { row, op, operand });
+                    }
+                }
+                WalPayload::Write { row, value } => {
+                    let row = logical(*row);
+                    ensure!(
+                        row < m.rows && *value <= mask,
+                        "shard {shard} lsn {}: write (row {row}, value {value:#x}) \
+                         out of range for {}x{}",
+                        rec.lsn,
+                        m.rows,
+                        m.q
+                    );
+                    trace.push_write(row, *value);
+                }
+            }
+        }
+    }
+    trace.push_flush();
+
+    // The conversion is only correct if it reproduces the recovered
+    // state — check against the host-semantics oracle before handing
+    // the trace out.
+    let folded = trace.reference_state();
+    if state_digest(&folded) != rep.digest {
+        bail!(
+            "WAL→trace conversion diverged from the recovered state \
+             ({:016x} vs {:016x}) — this is a bug",
+            state_digest(&folded),
+            rep.digest
+        );
+    }
+    Ok(trace)
+}

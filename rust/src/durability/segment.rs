@@ -1,0 +1,330 @@
+//! WAL segment layout: per-shard directories of size-rotated segment
+//! files plus the shape manifest (`wal.json`) that pins the row space
+//! a WAL directory belongs to.
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! <wal_dir>/
+//!   wal.json                    # shape manifest {rows, q, shards}
+//!   snap-XXXXXXXXXXXXXXXX.fastsnap   # full-state snapshots (see snapshot.rs)
+//!   shard-000/
+//!     seg-XXXXXXXXXXXXXXXX.wal # segments, named by their FIRST lsn (hex)
+//!     seg-….wal
+//!   shard-001/…
+//! ```
+//!
+//! Naming segments by first LSN makes the lexicographic directory
+//! order the log order (sneldb names its WAL files the same way), and
+//! makes "is this segment fully covered by a snapshot at lsn L?"
+//! answerable from the *next* segment's name alone. Every segment
+//! starts with a 16-byte header (`magic | version | shard`) so a
+//! misplaced or foreign file is rejected before any frame is parsed.
+
+use std::fs;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Advisory writer lock file at the WAL-directory root.
+pub const LOCK_FILE: &str = "wal.lock";
+
+/// Advisory single-writer lock on a WAL directory. Two appenders on
+/// one directory interleave frames with duplicate LSNs — which a later
+/// recovery reads as corruption and truncates, silently discarding
+/// acknowledged commits — so every *mutating* entry point (a durable
+/// engine start, `fast wal compact|repair`) takes this lock first.
+///
+/// Implementation: an OS advisory file lock (`File::try_lock`, std
+/// since Rust 1.89) on `wal.lock`. The kernel releases it when the
+/// holding process dies — SIGKILL included — so there is no stale-lock
+/// state, no PID probing, and no read-then-delete reclaim race. The
+/// lock file itself is never removed (unlinking a locked path is the
+/// classic way to let a third process lock a fresh file under the same
+/// name); a leftover `wal.lock` is inert.
+#[derive(Debug)]
+pub struct DirLock {
+    /// Held open for the lock's lifetime; closing releases the lock.
+    _file: fs::File,
+}
+
+impl DirLock {
+    pub fn acquire(dir: &Path) -> Result<DirLock> {
+        let path = dir.join(LOCK_FILE);
+        let file = fs::OpenOptions::new()
+            .create(true)
+            .truncate(false)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("opening WAL lock {}", path.display()))?;
+        match file.try_lock() {
+            Ok(()) => {
+                // Stamp the holder for humans inspecting the dir; the
+                // flock, not the content, is the actual exclusion.
+                let _ = file.set_len(0);
+                let _ = std::io::Write::write_all(
+                    &mut &file,
+                    std::process::id().to_string().as_bytes(),
+                );
+                Ok(DirLock { _file: file })
+            }
+            Err(std::fs::TryLockError::WouldBlock) => bail!(
+                "WAL dir {} is locked by another live process ({}); a second \
+                 writer would corrupt the log — stop it first",
+                dir.display(),
+                path.display()
+            ),
+            Err(std::fs::TryLockError::Error(e)) => {
+                Err(e).with_context(|| format!("locking WAL dir {}", dir.display()))
+            }
+        }
+    }
+}
+
+/// Segment file magic (8 bytes) — bump `SEGMENT_VERSION` on breaking
+/// frame-format changes instead of editing this.
+pub const SEGMENT_MAGIC: &[u8; 8] = b"FASTWAL1";
+/// Frame-format version carried in every segment header.
+pub const SEGMENT_VERSION: u32 = 1;
+/// Bytes of segment header before the first frame: magic(8) +
+/// version(4) + shard(4).
+pub const SEGMENT_HEADER_LEN: u64 = 16;
+
+/// Manifest file name at the WAL-directory root.
+pub const MANIFEST_FILE: &str = "wal.json";
+/// Format tag inside the manifest; bump on breaking layout changes.
+pub const MANIFEST_FORMAT: &str = "fast-wal-v1";
+
+/// The shape manifest: which logical row space this WAL directory
+/// logs. Recovery and the appenders refuse to touch a directory whose
+/// manifest disagrees with the engine config — silently mixing WALs of
+/// different shapes is how state gets corrupted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Manifest {
+    pub rows: usize,
+    pub q: usize,
+    pub shards: usize,
+}
+
+impl Manifest {
+    /// Canonical one-line JSON rendering (fixed key order).
+    fn to_json(self) -> String {
+        format!(
+            "{{\"wal\":\"{}\",\"rows\":{},\"q\":{},\"shards\":{}}}\n",
+            MANIFEST_FORMAT, self.rows, self.q, self.shards
+        )
+    }
+
+    /// Write the manifest atomically (temp file + rename).
+    pub fn write_atomic(self, dir: &Path) -> Result<()> {
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        let fin = dir.join(MANIFEST_FILE);
+        fs::write(&tmp, self.to_json())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &fin)
+            .with_context(|| format!("renaming {} into place", fin.display()))?;
+        Ok(())
+    }
+
+    /// Load and validate the manifest of an existing WAL directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading WAL manifest {}", path.display()))?;
+        let j = Json::parse(text.trim()).context("parsing WAL manifest")?;
+        ensure!(
+            j.get("wal").and_then(Json::as_str) == Some(MANIFEST_FORMAT),
+            "{} is not a {MANIFEST_FORMAT} manifest",
+            path.display()
+        );
+        let field = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest field {key:?} missing or not an integer"))
+        };
+        let m = Manifest { rows: field("rows")?, q: field("q")?, shards: field("shards")? };
+        ensure!(m.rows >= 1, "manifest rows must be >= 1");
+        ensure!((1..=32).contains(&m.q), "manifest q {} out of range 1..=32", m.q);
+        ensure!(
+            m.shards >= 1 && m.shards.is_power_of_two(),
+            "manifest shards {} must be a positive power of two",
+            m.shards
+        );
+        ensure!(
+            m.rows % m.shards == 0,
+            "manifest rows {} not divisible by shards {}",
+            m.rows,
+            m.shards
+        );
+        Ok(m)
+    }
+
+    /// Does a manifest exist in `dir`?
+    pub fn exists(dir: &Path) -> bool {
+        dir.join(MANIFEST_FILE).is_file()
+    }
+}
+
+/// Directory holding one shard's segments.
+pub fn shard_dir(dir: &Path, shard: usize) -> PathBuf {
+    dir.join(format!("shard-{shard:03}"))
+}
+
+/// Path of the segment whose first record has `first_lsn`.
+pub fn segment_path(dir: &Path, shard: usize, first_lsn: u64) -> PathBuf {
+    shard_dir(dir, shard).join(format!("seg-{first_lsn:016x}.wal"))
+}
+
+/// One discovered segment of a shard's log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentInfo {
+    pub path: PathBuf,
+    /// First LSN the segment holds (parsed from the file name).
+    pub first_lsn: u64,
+    /// File size in bytes (header included).
+    pub bytes: u64,
+}
+
+/// List a shard's segments in log order. Files that don't match the
+/// `seg-<16 hex>.wal` pattern are ignored (a crashed rename can leave
+/// `.tmp` debris behind).
+pub fn list_segments(dir: &Path, shard: usize) -> Result<Vec<SegmentInfo>> {
+    let sdir = shard_dir(dir, shard);
+    let mut out = Vec::new();
+    if !sdir.is_dir() {
+        return Ok(out);
+    }
+    for entry in fs::read_dir(&sdir).with_context(|| format!("listing {}", sdir.display()))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(hex) = name.strip_prefix("seg-").and_then(|s| s.strip_suffix(".wal")) else {
+            continue;
+        };
+        let Ok(first_lsn) = u64::from_str_radix(hex, 16) else {
+            continue;
+        };
+        let bytes = entry.metadata()?.len();
+        out.push(SegmentInfo { path: entry.path(), first_lsn, bytes });
+    }
+    out.sort_by_key(|s| s.first_lsn);
+    Ok(out)
+}
+
+/// Encode the 16-byte segment header.
+pub fn encode_segment_header(shard: usize) -> [u8; SEGMENT_HEADER_LEN as usize] {
+    let mut h = [0u8; SEGMENT_HEADER_LEN as usize];
+    h[..8].copy_from_slice(SEGMENT_MAGIC);
+    h[8..12].copy_from_slice(&SEGMENT_VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&(shard as u32).to_le_bytes());
+    h
+}
+
+/// Read and validate a segment header, returning the shard it claims
+/// to belong to.
+pub fn read_segment_header(r: &mut impl Read, path: &Path) -> Result<u32> {
+    let mut h = [0u8; SEGMENT_HEADER_LEN as usize];
+    r.read_exact(&mut h)
+        .with_context(|| format!("{}: segment header truncated", path.display()))?;
+    ensure!(
+        &h[..8] == SEGMENT_MAGIC,
+        "{}: not a FAST WAL segment (bad magic)",
+        path.display()
+    );
+    let version = u32::from_le_bytes(h[8..12].try_into().expect("4 bytes"));
+    if version != SEGMENT_VERSION {
+        bail!(
+            "{}: unsupported segment version {version} (this build speaks {SEGMENT_VERSION})",
+            path.display()
+        );
+    }
+    Ok(u32::from_le_bytes(h[12..16].try_into().expect("4 bytes")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let d = std::env::temp_dir().join(format!(
+            "fast-seg-{tag}-{}-{nanos}",
+            std::process::id()
+        ));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn manifest_round_trips_and_validates() {
+        let d = tmpdir("manifest");
+        let m = Manifest { rows: 256, q: 8, shards: 4 };
+        assert!(!Manifest::exists(&d));
+        m.write_atomic(&d).unwrap();
+        assert!(Manifest::exists(&d));
+        assert_eq!(Manifest::load(&d).unwrap(), m);
+        // Corrupt manifests are clean errors.
+        fs::write(d.join(MANIFEST_FILE), "{\"wal\":\"other\"}").unwrap();
+        assert!(Manifest::load(&d).is_err());
+        fs::write(d.join(MANIFEST_FILE), "{\"wal\":\"fast-wal-v1\",\"rows\":100,\"q\":8,\"shards\":8}")
+            .unwrap();
+        assert!(Manifest::load(&d).is_err(), "rows % shards != 0 must be rejected");
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn segments_list_in_lsn_order() {
+        let d = tmpdir("list");
+        fs::create_dir_all(shard_dir(&d, 0)).unwrap();
+        for lsn in [7u64, 1, 300] {
+            fs::write(segment_path(&d, 0, lsn), b"x").unwrap();
+        }
+        // Debris is ignored.
+        fs::write(shard_dir(&d, 0).join("seg-zzz.wal"), b"x").unwrap();
+        fs::write(shard_dir(&d, 0).join("other.tmp"), b"x").unwrap();
+        let segs = list_segments(&d, 0).unwrap();
+        assert_eq!(segs.iter().map(|s| s.first_lsn).collect::<Vec<_>>(), vec![1, 7, 300]);
+        // A shard with no directory lists empty.
+        assert!(list_segments(&d, 3).unwrap().is_empty());
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn dir_lock_excludes_a_second_acquirer_and_releases_on_drop() {
+        let d = tmpdir("lock");
+        let lock = DirLock::acquire(&d).unwrap();
+        // Held: a second acquire (separate file handle, so a separate
+        // OS lock owner) must fail.
+        assert!(DirLock::acquire(&d).is_err());
+        drop(lock);
+        // Released on drop (the OS drops the flock with the handle —
+        // the same mechanism that releases it on SIGKILL).
+        let lock = DirLock::acquire(&d).unwrap();
+        drop(lock);
+        // Leftover lock-file debris is inert, never a stale lock.
+        assert!(d.join(LOCK_FILE).exists());
+        let lock = DirLock::acquire(&d).unwrap();
+        drop(lock);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn segment_header_round_trips() {
+        let h = encode_segment_header(5);
+        let mut r = &h[..];
+        assert_eq!(read_segment_header(&mut r, Path::new("t")).unwrap(), 5);
+        let mut bad = h;
+        bad[0] ^= 0xFF;
+        let mut r = &bad[..];
+        assert!(read_segment_header(&mut r, Path::new("t")).is_err());
+        let mut r = &h[..4]; // truncated
+        assert!(read_segment_header(&mut r, Path::new("t")).is_err());
+    }
+}

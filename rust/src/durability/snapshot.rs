@@ -1,0 +1,270 @@
+//! Full-state snapshots: the compaction anchor of the durability
+//! subsystem. A snapshot pins the whole logical row state plus every
+//! shard's `(commit_seq, lsn)` watermark; WAL segments whose records
+//! are all at or below the watermark are garbage once the snapshot is
+//! durable.
+//!
+//! ## File format (`snap-<id:016x>.fastsnap`)
+//!
+//! ```text
+//! magic:8 ("FASTSNP1") | version:u32 | rows:u32 | q:u32 | shards:u32
+//! | shards × (commit_seq:u64, lsn:u64)
+//! | rows × state:u32
+//! | digest:u64 (FNV-1a of the state, same fn as trace/serve DIGEST)
+//! | crc:u32   (CRC32 of every preceding byte)
+//! ```
+//!
+//! All integers little-endian. Snapshots are written atomically —
+//! temp file, fsync, rename — so a crash mid-write leaves only `.tmp`
+//! debris, never a half-snapshot under the real name. Loading verifies
+//! magic, CRC *and* recomputes the digest, so a corrupt snapshot is
+//! skipped (recovery falls back to the previous one plus a longer WAL
+//! tail) rather than trusted.
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context};
+
+use crate::apps::trace::state_digest;
+use crate::util::crc32::crc32;
+use crate::Result;
+
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"FASTSNP1";
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// One shard's durability watermark at snapshot time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardMark {
+    /// Last committed batch sequence number.
+    pub commit_seq: u64,
+    /// Last WAL log sequence number folded into the snapshot (covers
+    /// writes too — `commit_seq` alone cannot order them).
+    pub lsn: u64,
+}
+
+/// A decoded snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Snapshot {
+    pub rows: usize,
+    pub q: usize,
+    pub shards: usize,
+    pub per_shard: Vec<ShardMark>,
+    /// Logical row state (row-indexed across all shards).
+    pub state: Vec<u32>,
+}
+
+impl Snapshot {
+    /// FNV-1a digest of the state (the serve/trace digest function).
+    pub fn digest(&self) -> u64 {
+        state_digest(&self.state)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf =
+            Vec::with_capacity(24 + self.per_shard.len() * 16 + self.state.len() * 4 + 12);
+        buf.extend_from_slice(SNAPSHOT_MAGIC);
+        buf.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.rows as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.q as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.shards as u32).to_le_bytes());
+        for m in &self.per_shard {
+            buf.extend_from_slice(&m.commit_seq.to_le_bytes());
+            buf.extend_from_slice(&m.lsn.to_le_bytes());
+        }
+        for &w in &self.state {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        buf.extend_from_slice(&self.digest().to_le_bytes());
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
+        ensure!(bytes.len() >= 24 + 12, "snapshot too short ({} bytes)", bytes.len());
+        ensure!(&bytes[..8] == SNAPSHOT_MAGIC, "not a FAST snapshot (bad magic)");
+        let u32_at = |at: usize| u32::from_le_bytes(bytes[at..at + 4].try_into().expect("4"));
+        let u64_at = |at: usize| u64::from_le_bytes(bytes[at..at + 8].try_into().expect("8"));
+        let version = u32_at(8);
+        ensure!(
+            version == SNAPSHOT_VERSION,
+            "unsupported snapshot version {version} (this build speaks {SNAPSHOT_VERSION})"
+        );
+        let rows = u32_at(12) as usize;
+        let q = u32_at(16) as usize;
+        let shards = u32_at(20) as usize;
+        ensure!(rows >= 1 && (1..=32).contains(&q), "snapshot shape {rows}x{q} implausible");
+        ensure!(
+            shards >= 1 && shards.is_power_of_two() && rows % shards == 0,
+            "snapshot shards {shards} implausible for {rows} rows"
+        );
+        let want = 24 + shards * 16 + rows * 4 + 12;
+        ensure!(
+            bytes.len() == want,
+            "snapshot length {} != shape-implied {want}",
+            bytes.len()
+        );
+        let crc_stored = u32_at(bytes.len() - 4);
+        ensure!(crc32(&bytes[..bytes.len() - 4]) == crc_stored, "snapshot CRC mismatch");
+        let mut per_shard = Vec::with_capacity(shards);
+        for s in 0..shards {
+            per_shard.push(ShardMark {
+                commit_seq: u64_at(24 + s * 16),
+                lsn: u64_at(24 + s * 16 + 8),
+            });
+        }
+        let state_at = 24 + shards * 16;
+        let state: Vec<u32> = (0..rows).map(|r| u32_at(state_at + r * 4)).collect();
+        let digest_stored = u64_at(bytes.len() - 12);
+        let snap = Snapshot { rows, q, shards, per_shard, state };
+        ensure!(
+            snap.digest() == digest_stored,
+            "snapshot digest mismatch (stored {digest_stored:016x}, state folds to {:016x})",
+            snap.digest()
+        );
+        Ok(snap)
+    }
+
+    /// Write the snapshot atomically into `dir` under the next free
+    /// id. Returns the final path.
+    pub fn write_atomic(&self, dir: &Path) -> Result<PathBuf> {
+        let id = list_snapshots(dir)?.last().map(|&(id, _)| id + 1).unwrap_or(1);
+        let fin = dir.join(format!("snap-{id:016x}.fastsnap"));
+        let tmp = dir.join(format!("snap-{id:016x}.fastsnap.tmp"));
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&self.encode())?;
+            f.sync_data().context("fsyncing snapshot")?;
+        }
+        fs::rename(&tmp, &fin)
+            .with_context(|| format!("renaming {} into place", fin.display()))?;
+        // Make the rename itself durable where the platform allows.
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+        Ok(fin)
+    }
+}
+
+/// All snapshot files in `dir`, sorted ascending by id. Only the name
+/// pattern is checked here — decode (and its CRC/digest verification)
+/// happens on load.
+pub fn list_snapshots(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    if !dir.is_dir() {
+        return Ok(out);
+    }
+    for entry in fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(hex) = name.strip_prefix("snap-").and_then(|s| s.strip_suffix(".fastsnap"))
+        else {
+            continue;
+        };
+        if let Ok(id) = u64::from_str_radix(hex, 16) {
+            out.push((id, entry.path()));
+        }
+    }
+    out.sort_by_key(|&(id, _)| id);
+    Ok(out)
+}
+
+/// Load the newest snapshot that decodes and verifies. Corrupt or
+/// torn snapshot files are skipped (recovery prefers an older valid
+/// snapshot plus a longer WAL tail over trusting damaged state);
+/// `None` if no valid snapshot exists.
+pub fn load_newest(dir: &Path) -> Result<Option<(PathBuf, Snapshot)>> {
+    let mut snaps = list_snapshots(dir)?;
+    snaps.reverse();
+    for (_, path) in snaps {
+        let bytes = fs::read(&path)
+            .with_context(|| format!("reading snapshot {}", path.display()))?;
+        match Snapshot::decode(&bytes) {
+            Ok(snap) => return Ok(Some((path, snap))),
+            Err(_) => continue, // skip damaged snapshots
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let d = std::env::temp_dir()
+            .join(format!("fast-snap-{tag}-{}-{nanos}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn demo() -> Snapshot {
+        Snapshot {
+            rows: 8,
+            q: 8,
+            shards: 2,
+            per_shard: vec![
+                ShardMark { commit_seq: 3, lsn: 5 },
+                ShardMark { commit_seq: 1, lsn: 1 },
+            ],
+            state: vec![1, 2, 3, 4, 5, 6, 7, 255],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let s = demo();
+        assert_eq!(Snapshot::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let s = demo();
+        let good = s.encode();
+        for at in [0usize, 9, 30, good.len() - 5, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[at] ^= 0x40;
+            assert!(Snapshot::decode(&bad).is_err(), "flip at {at} must be caught");
+        }
+        assert!(Snapshot::decode(&good[..good.len() - 3]).is_err(), "truncation");
+    }
+
+    #[test]
+    fn atomic_write_and_newest_selection() {
+        let d = tmpdir("atomic");
+        let a = demo();
+        let mut b = demo();
+        b.state[0] = 99;
+        b.per_shard[0].lsn = 9;
+        let pa = a.write_atomic(&d).unwrap();
+        let pb = b.write_atomic(&d).unwrap();
+        assert_ne!(pa, pb);
+        let (path, newest) = load_newest(&d).unwrap().unwrap();
+        assert_eq!(path, pb);
+        assert_eq!(newest, b);
+        // Corrupting the newest falls back to the older one.
+        let mut bytes = fs::read(&pb).unwrap();
+        let len = bytes.len();
+        bytes[len - 2] ^= 0xFF;
+        fs::write(&pb, bytes).unwrap();
+        let (path, fallback) = load_newest(&d).unwrap().unwrap();
+        assert_eq!(path, pa);
+        assert_eq!(fallback, a);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn empty_dir_has_no_snapshot() {
+        let d = tmpdir("empty");
+        assert!(load_newest(&d).unwrap().is_none());
+        let _ = fs::remove_dir_all(&d);
+    }
+}

@@ -1,0 +1,760 @@
+//! The segmented binary write-ahead log: frame codec, torn-tail-aware
+//! segment reader, and the per-shard appender that rides the engine's
+//! group-commit seals.
+//!
+//! ## Frame format (`fast-wal-v1`)
+//!
+//! ```text
+//! frame   := len:u32 | crc:u32 | payload        (len = payload bytes,
+//!                                                crc = CRC32(payload))
+//! payload := rtype:u8 | shard:u32 | lsn:u64 | commit_seq:u64
+//!          | seal_reason:u8 | kind:u8 | nops:u32 | nops×(row:u32, val:u32)
+//! ```
+//!
+//! All integers little-endian. `rtype` 1 = sealed-batch commit (`ops`
+//! are the batch's non-identity `(local_row, operand)` pairs after
+//! coalescing), `rtype` 2 = conventional-port absolute write (`nops`
+//! = 1, `commit_seq` = the shard's last committed seq at log time —
+//! writes do not mint commit seqs). `lsn` is the shard's own log
+//! sequence number, strictly increasing across every record the shard
+//! ever logs; it is the recovery watermark (commit_seq alone cannot
+//! order writes between two batch commits).
+//!
+//! ## Group-commit alignment
+//!
+//! One engine seal = one [`ShardWal::append_batch`] = one frame encoded
+//! into a reusable buffer, ONE `write_all`, and at most one fsync
+//! (per the [`FsyncPolicy`]) — durability amortizes exactly like the
+//! group commit it rides; there is never a syscall per request.
+//!
+//! ## Torn tails
+//!
+//! [`SegmentReader`] stops at the first bad frame (short header, bogus
+//! length, CRC mismatch, undecodable payload) and reports the byte
+//! offset of the good prefix; recovery truncates there (`repair`) so
+//! the log is always a prefix of what was appended — never a
+//! reordering, never a gap.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::coordinator::batcher::SealReason;
+use crate::coordinator::engine::CommitListener;
+use crate::coordinator::request::{BatchKind, Commit};
+use crate::metrics::{Counters, ShardCounters};
+use crate::Result;
+
+use super::segment::{
+    self, encode_segment_header, read_segment_header, SEGMENT_HEADER_LEN,
+};
+
+/// Upper bound on one frame's payload (sanity cap so a corrupt length
+/// field can never trigger a giant allocation).
+pub const MAX_PAYLOAD: u32 = 1 << 26; // 64 MiB
+
+/// Fixed payload bytes before the ops array.
+const PAYLOAD_FIXED: usize = 1 + 4 + 8 + 8 + 1 + 1 + 4;
+
+/// When to fsync the shard's segment file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync after every appended record: a resolved ticket implies
+    /// the commit is on disk. Safest, slowest.
+    Always,
+    /// fsync at most once per interval (checked at append time) plus
+    /// at every barrier (drain / snapshot / shutdown). A crash can
+    /// lose up to one interval of *acknowledged* commits; recovery is
+    /// still prefix-consistent.
+    Interval(Duration),
+    /// Never fsync explicitly; the OS flushes on its own schedule.
+    /// Survives process kills (data reached the kernel), not power
+    /// loss.
+    Off,
+}
+
+impl FsyncPolicy {
+    /// Parse the CLI spelling: `always` | `interval` | `off`.
+    pub fn parse(s: &str, interval: Duration) -> Result<FsyncPolicy> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "interval" => Ok(FsyncPolicy::Interval(interval)),
+            "off" => Ok(FsyncPolicy::Off),
+            other => bail!("unknown fsync policy {other:?} (always|interval|off)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::Interval(_) => "interval",
+            FsyncPolicy::Off => "off",
+        }
+    }
+}
+
+/// What one WAL record carries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalPayload {
+    /// A sealed batch the backend applied: the commit's seal reason,
+    /// batch kind, and the non-identity `(local_row, operand)` pairs.
+    Batch {
+        seal_reason: SealReason,
+        kind: BatchKind,
+        ops: Vec<(u32, u32)>,
+    },
+    /// A conventional-port absolute write.
+    Write { row: u32, value: u32 },
+}
+
+/// One decoded WAL record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WalRecord {
+    pub shard: u32,
+    /// Shard-local log sequence number (strictly increasing).
+    pub lsn: u64,
+    /// Batch records: the minted commit seq. Write records: the
+    /// shard's last committed seq when the write was logged.
+    pub commit_seq: u64,
+    pub payload: WalPayload,
+}
+
+fn seal_to_u8(r: SealReason) -> u8 {
+    match r {
+        SealReason::Full => 0,
+        SealReason::KindChange => 1,
+        SealReason::Deadline => 2,
+        SealReason::Forced => 3,
+    }
+}
+
+fn seal_from_u8(b: u8) -> Result<SealReason> {
+    Ok(match b {
+        0 => SealReason::Full,
+        1 => SealReason::KindChange,
+        2 => SealReason::Deadline,
+        3 => SealReason::Forced,
+        other => bail!("bad seal reason byte {other}"),
+    })
+}
+
+fn kind_to_u8(k: BatchKind) -> u8 {
+    match k {
+        BatchKind::Add => 0,
+        BatchKind::And => 1,
+        BatchKind::Or => 2,
+        BatchKind::Xor => 3,
+    }
+}
+
+fn kind_from_u8(b: u8) -> Result<BatchKind> {
+    Ok(match b {
+        0 => BatchKind::Add,
+        1 => BatchKind::And,
+        2 => BatchKind::Or,
+        3 => BatchKind::Xor,
+        other => bail!("bad batch kind byte {other}"),
+    })
+}
+
+/// Encode one complete frame (len + crc + payload) into `buf` from
+/// streamed ops — the shared encoder behind [`WalRecord::encode_into`]
+/// and the appender's allocation-free hot path (the ops iterate
+/// straight out of the batch's operand vector; nothing is collected).
+/// Returns the frame length in bytes.
+#[allow(clippy::too_many_arguments)]
+fn encode_frame(
+    buf: &mut Vec<u8>,
+    shard: u32,
+    lsn: u64,
+    commit_seq: u64,
+    rtype: u8,
+    seal: u8,
+    kind: u8,
+    nops: usize,
+    ops: impl Iterator<Item = (u32, u32)>,
+) -> usize {
+    let start = buf.len();
+    let len = PAYLOAD_FIXED + nops * 8;
+    buf.reserve(8 + len);
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.extend_from_slice(&[0u8; 4]); // crc backfilled below
+    let payload_at = buf.len();
+    buf.push(rtype);
+    buf.extend_from_slice(&shard.to_le_bytes());
+    buf.extend_from_slice(&lsn.to_le_bytes());
+    buf.extend_from_slice(&commit_seq.to_le_bytes());
+    buf.push(seal);
+    buf.push(kind);
+    buf.extend_from_slice(&(nops as u32).to_le_bytes());
+    for (row, val) in ops {
+        buf.extend_from_slice(&row.to_le_bytes());
+        buf.extend_from_slice(&val.to_le_bytes());
+    }
+    debug_assert_eq!(buf.len() - payload_at, len, "nops disagrees with the ops iterator");
+    let crc = crate::util::crc32::crc32(&buf[payload_at..]);
+    buf[payload_at - 4..payload_at].copy_from_slice(&crc.to_le_bytes());
+    buf.len() - start
+}
+
+impl WalRecord {
+    /// Append this record's complete frame (len + crc + payload) to
+    /// `buf`. Returns the frame length in bytes.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) -> usize {
+        match &self.payload {
+            WalPayload::Batch { seal_reason, kind, ops } => encode_frame(
+                buf,
+                self.shard,
+                self.lsn,
+                self.commit_seq,
+                1,
+                seal_to_u8(*seal_reason),
+                kind_to_u8(*kind),
+                ops.len(),
+                ops.iter().copied(),
+            ),
+            WalPayload::Write { row, value } => encode_frame(
+                buf,
+                self.shard,
+                self.lsn,
+                self.commit_seq,
+                2,
+                0,
+                0,
+                1,
+                std::iter::once((*row, *value)),
+            ),
+        }
+    }
+
+    /// Decode one frame payload (after the CRC already verified).
+    pub fn decode(payload: &[u8]) -> Result<WalRecord> {
+        ensure!(payload.len() >= PAYLOAD_FIXED, "payload too short ({} bytes)", payload.len());
+        let u32_at = |at: usize| u32::from_le_bytes(payload[at..at + 4].try_into().expect("4"));
+        let u64_at = |at: usize| u64::from_le_bytes(payload[at..at + 8].try_into().expect("8"));
+        let rtype = payload[0];
+        let shard = u32_at(1);
+        let lsn = u64_at(5);
+        let commit_seq = u64_at(13);
+        let seal = payload[21];
+        let kind = payload[22];
+        let nops = u32_at(23) as usize;
+        ensure!(
+            payload.len() == PAYLOAD_FIXED + nops * 8,
+            "payload length {} != header-implied {}",
+            payload.len(),
+            PAYLOAD_FIXED + nops * 8
+        );
+        let pair_at =
+            |i: usize| (u32_at(PAYLOAD_FIXED + i * 8), u32_at(PAYLOAD_FIXED + i * 8 + 4));
+        let record = match rtype {
+            1 => {
+                let ops = (0..nops).map(pair_at).collect();
+                WalRecord {
+                    shard,
+                    lsn,
+                    commit_seq,
+                    payload: WalPayload::Batch {
+                        seal_reason: seal_from_u8(seal)?,
+                        kind: kind_from_u8(kind)?,
+                        ops,
+                    },
+                }
+            }
+            2 => {
+                ensure!(nops == 1, "write record must carry exactly one op, got {nops}");
+                let (row, value) = pair_at(0);
+                WalRecord { shard, lsn, commit_seq, payload: WalPayload::Write { row, value } }
+            }
+            other => bail!("bad record type byte {other}"),
+        };
+        Ok(record)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Segment reader
+// ---------------------------------------------------------------------------
+
+/// Why a segment scan stopped before end-of-file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TornTail {
+    /// Byte offset of the first bad frame — the length of the good
+    /// prefix, the offset `repair` truncates at.
+    pub offset: u64,
+    pub reason: String,
+}
+
+/// Sequential reader over one segment file. Stops (without erroring)
+/// at the first bad frame and reports it via [`Self::torn`]; a clean
+/// EOF leaves `torn` unset.
+pub struct SegmentReader {
+    r: BufReader<File>,
+    path: PathBuf,
+    shard: u32,
+    /// Bytes of validated frames consumed so far (header included).
+    offset: u64,
+    torn: Option<TornTail>,
+    done: bool,
+}
+
+impl SegmentReader {
+    /// Open a segment and validate its header. A header that is
+    /// missing, short, or foreign is an `Err` — the caller decides
+    /// whether that means "torn at byte 0" (repair removes the file)
+    /// or corruption.
+    pub fn open(path: &Path, expect_shard: usize) -> Result<SegmentReader> {
+        let file =
+            File::open(path).with_context(|| format!("opening segment {}", path.display()))?;
+        let mut r = BufReader::new(file);
+        let shard = read_segment_header(&mut r, path)?;
+        ensure!(
+            shard as usize == expect_shard,
+            "{}: segment claims shard {shard}, found in shard {expect_shard}'s directory",
+            path.display()
+        );
+        Ok(SegmentReader {
+            r,
+            path: path.to_path_buf(),
+            shard,
+            offset: SEGMENT_HEADER_LEN,
+            torn: None,
+            done: false,
+        })
+    }
+
+    /// The first bad frame, if the scan hit one.
+    pub fn torn(&self) -> Option<&TornTail> {
+        self.torn.as_ref()
+    }
+
+    /// Bytes of good frames consumed (the truncation point on repair).
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    fn mark_torn(&mut self, reason: String) {
+        self.torn = Some(TornTail { offset: self.offset, reason });
+        self.done = true;
+    }
+
+    /// Next record, or `None` at clean EOF / first bad frame.
+    pub fn next_record(&mut self) -> Option<WalRecord> {
+        if self.done {
+            return None;
+        }
+        let mut head = [0u8; 8];
+        match read_full(&mut self.r, &mut head) {
+            Ok(0) => {
+                self.done = true;
+                return None;
+            }
+            Ok(8) => {}
+            Ok(n) => {
+                self.mark_torn(format!("frame header truncated ({n} of 8 bytes)"));
+                return None;
+            }
+            Err(e) => {
+                self.mark_torn(format!("reading frame header: {e}"));
+                return None;
+            }
+        }
+        let len = u32::from_le_bytes(head[..4].try_into().expect("4"));
+        let crc = u32::from_le_bytes(head[4..].try_into().expect("4"));
+        if len < PAYLOAD_FIXED as u32 || len > MAX_PAYLOAD {
+            self.mark_torn(format!("implausible frame length {len}"));
+            return None;
+        }
+        let mut payload = vec![0u8; len as usize];
+        match read_full(&mut self.r, &mut payload) {
+            Ok(n) if n == len as usize => {}
+            Ok(n) => {
+                self.mark_torn(format!("frame payload truncated ({n} of {len} bytes)"));
+                return None;
+            }
+            Err(e) => {
+                self.mark_torn(format!("reading frame payload: {e}"));
+                return None;
+            }
+        }
+        if crate::util::crc32::crc32(&payload) != crc {
+            self.mark_torn("frame CRC mismatch".to_string());
+            return None;
+        }
+        match WalRecord::decode(&payload) {
+            Ok(rec) => {
+                if rec.shard != self.shard {
+                    self.mark_torn(format!(
+                        "record claims shard {}, segment {} belongs to shard {}",
+                        rec.shard,
+                        self.path.display(),
+                        self.shard
+                    ));
+                    return None;
+                }
+                self.offset += 8 + len as u64;
+                Some(rec)
+            }
+            Err(e) => {
+                self.mark_torn(format!("undecodable payload: {e}"));
+                None
+            }
+        }
+    }
+}
+
+/// `read_exact` that reports how many bytes it got instead of erroring
+/// on a short tail (torn tails are expected, not exceptional).
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(got)
+}
+
+// ---------------------------------------------------------------------------
+// Appender
+// ---------------------------------------------------------------------------
+
+/// The per-shard WAL appender: owned by the shard's worker thread,
+/// driven through the engine's [`CommitListener`] hook so every record
+/// lands *after* the backend apply and *before* any completion ticket
+/// resolves. Rotation, fsync policy and metrics are internal.
+pub struct ShardWal {
+    root: PathBuf,
+    shard: usize,
+    q: usize,
+    fsync: FsyncPolicy,
+    segment_bytes: u64,
+    file: File,
+    seg_bytes: u64,
+    next_lsn: u64,
+    last_sync: Instant,
+    dirty: bool,
+    /// Reusable frame-encode buffer (no allocation on the hot path).
+    buf: Vec<u8>,
+    metrics: Option<Arc<ShardCounters>>,
+}
+
+impl ShardWal {
+    /// Open (or create) the shard's log for appending at `next_lsn`.
+    /// Recovery must already have truncated any torn tail — this
+    /// appends blindly to the newest segment.
+    pub fn open(
+        root: &Path,
+        shard: usize,
+        q: usize,
+        next_lsn: u64,
+        fsync: FsyncPolicy,
+        segment_bytes: u64,
+        metrics: Option<Arc<ShardCounters>>,
+    ) -> Result<ShardWal> {
+        ensure!(next_lsn >= 1, "lsn space starts at 1");
+        ensure!(segment_bytes >= 1024, "segment_bytes must be >= 1024");
+        let sdir = segment::shard_dir(root, shard);
+        std::fs::create_dir_all(&sdir)
+            .with_context(|| format!("creating {}", sdir.display()))?;
+        let segs = segment::list_segments(root, shard)?;
+        let (file, seg_bytes) = match segs.last() {
+            Some(last) if last.bytes >= SEGMENT_HEADER_LEN => {
+                let f = OpenOptions::new()
+                    .append(true)
+                    .open(&last.path)
+                    .with_context(|| format!("opening {} for append", last.path.display()))?;
+                (f, last.bytes)
+            }
+            _ => {
+                // No segment yet (or a headerless stub recovery chose
+                // not to keep): start a fresh one at next_lsn.
+                if let Some(stub) = segs.last() {
+                    let _ = std::fs::remove_file(&stub.path);
+                }
+                Self::create_segment(root, shard, next_lsn)?
+            }
+        };
+        Ok(ShardWal {
+            root: root.to_path_buf(),
+            shard,
+            q,
+            fsync,
+            segment_bytes,
+            file,
+            seg_bytes,
+            next_lsn,
+            last_sync: Instant::now(),
+            dirty: false,
+            buf: Vec::with_capacity(4096),
+            metrics,
+        })
+    }
+
+    fn create_segment(root: &Path, shard: usize, first_lsn: u64) -> Result<(File, u64)> {
+        let path = segment::segment_path(root, shard, first_lsn);
+        let mut f = OpenOptions::new()
+            .create_new(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("creating segment {}", path.display()))?;
+        f.write_all(&encode_segment_header(shard))?;
+        Ok((f, SEGMENT_HEADER_LEN))
+    }
+
+    /// The next LSN this appender will assign.
+    pub fn next_lsn(&self) -> u64 {
+        self.next_lsn
+    }
+
+    /// Log one sealed batch: the commit metadata plus the batch's
+    /// non-identity `(row, operand)` pairs, streamed straight from the
+    /// dense operand vector into the reusable frame buffer (no
+    /// intermediate allocation). One buffered frame, one `write_all`,
+    /// at most one fsync — aligned with the group-commit seal this
+    /// rides.
+    pub fn append_batch(
+        &mut self,
+        commit: &Commit,
+        kind: BatchKind,
+        operands: &[u32],
+    ) -> Result<()> {
+        self.maybe_rotate()?;
+        let ident = kind.identity(self.q);
+        // A batch whose every coalesced operand cancelled to identity
+        // still logs (zero ops) so commit_seq stays dense in the log.
+        let nops = operands.iter().filter(|&&o| o != ident).count();
+        self.buf.clear();
+        let frame_len = encode_frame(
+            &mut self.buf,
+            self.shard as u32,
+            self.next_lsn,
+            commit.commit_seq,
+            1,
+            seal_to_u8(commit.seal_reason),
+            kind_to_u8(kind),
+            nops,
+            operands
+                .iter()
+                .enumerate()
+                .filter(|&(_, &o)| o != ident)
+                .map(|(r, &o)| (r as u32, o)),
+        );
+        self.write_frame(frame_len as u64)
+    }
+
+    /// Log one conventional-port write. `committed_seq` is the shard's
+    /// last committed seq (writes do not mint seqs; the LSN orders
+    /// them between commits).
+    pub fn append_write(&mut self, row: usize, value: u32, committed_seq: u64) -> Result<()> {
+        self.maybe_rotate()?;
+        self.buf.clear();
+        let frame_len = encode_frame(
+            &mut self.buf,
+            self.shard as u32,
+            self.next_lsn,
+            committed_seq,
+            2,
+            0,
+            0,
+            1,
+            std::iter::once((row as u32, value)),
+        );
+        self.write_frame(frame_len as u64)
+    }
+
+    /// Ship the frame sitting in `self.buf`: one `write_all`, LSN
+    /// bump, counters, and the policy-driven fsync.
+    fn write_frame(&mut self, frame_len: u64) -> Result<()> {
+        self.file
+            .write_all(&self.buf)
+            .context("appending WAL frame")?;
+        self.seg_bytes += frame_len;
+        self.next_lsn += 1;
+        self.dirty = true;
+        if let Some(m) = &self.metrics {
+            Counters::inc(&m.wal_records, 1);
+            Counters::inc(&m.wal_bytes, frame_len);
+        }
+        match self.fsync {
+            FsyncPolicy::Always => self.sync()?,
+            FsyncPolicy::Interval(iv) => {
+                if self.last_sync.elapsed() >= iv {
+                    self.sync()?;
+                }
+            }
+            FsyncPolicy::Off => {}
+        }
+        Ok(())
+    }
+
+    /// Force dirty bytes to disk (barrier semantics: drains, snapshots
+    /// and shutdown call this regardless of policy).
+    pub fn sync(&mut self) -> Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        self.file.sync_data().context("fsyncing WAL segment")?;
+        let dt = t0.elapsed().as_nanos() as u64;
+        self.dirty = false;
+        self.last_sync = Instant::now();
+        if let Some(m) = &self.metrics {
+            Counters::inc(&m.wal_fsyncs, 1);
+            m.wal_fsync.record_ns(dt);
+        }
+        Ok(())
+    }
+
+    /// Rotate to a fresh segment once the current one is full. The old
+    /// segment is synced first so rotation never leaves a dirty
+    /// immutable file behind.
+    fn maybe_rotate(&mut self) -> Result<()> {
+        if self.seg_bytes < self.segment_bytes {
+            return Ok(());
+        }
+        self.sync()?;
+        let (file, seg_bytes) = Self::create_segment(&self.root, self.shard, self.next_lsn)?;
+        self.file = file;
+        self.seg_bytes = seg_bytes;
+        if let Some(m) = &self.metrics {
+            Counters::inc(&m.wal_rotations, 1);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ShardWal {
+    fn drop(&mut self) {
+        let _ = self.sync();
+    }
+}
+
+impl CommitListener for ShardWal {
+    fn on_commit(&mut self, commit: &Commit, kind: BatchKind, operands: &[u32]) -> Result<()> {
+        self.append_batch(commit, kind, operands)
+    }
+
+    fn on_write(&mut self, row: usize, value: u32, committed_seq: u64) -> Result<()> {
+        self.append_write(row, value, committed_seq)
+    }
+
+    fn on_barrier(&mut self) -> Result<()> {
+        self.sync()
+    }
+
+    fn flush_due(&self) -> Option<Instant> {
+        // Interval policy with dirty bytes: the worker must force a
+        // sync once the window lapses, or an idle tail would sit on
+        // the OS writeback horizon instead of the promised interval.
+        match self.fsync {
+            FsyncPolicy::Interval(iv) if self.dirty => Some(self.last_sync + iv),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::{check, Gen};
+
+    fn demo_batch(lsn: u64, seq: u64, ops: Vec<(u32, u32)>) -> WalRecord {
+        WalRecord {
+            shard: 2,
+            lsn,
+            commit_seq: seq,
+            payload: WalPayload::Batch {
+                seal_reason: SealReason::Full,
+                kind: BatchKind::Add,
+                ops,
+            },
+        }
+    }
+
+    #[test]
+    fn frame_round_trips() {
+        let rec = demo_batch(7, 3, vec![(0, 5), (9, 1000)]);
+        let mut buf = Vec::new();
+        let n = rec.encode_into(&mut buf);
+        assert_eq!(n, buf.len());
+        let payload = &buf[8..];
+        assert_eq!(
+            u32::from_le_bytes(buf[4..8].try_into().unwrap()),
+            crate::util::crc32::crc32(payload)
+        );
+        assert_eq!(WalRecord::decode(payload).unwrap(), rec);
+
+        let w = WalRecord {
+            shard: 0,
+            lsn: 1,
+            commit_seq: 0,
+            payload: WalPayload::Write { row: 4, value: 0xAB },
+        };
+        let mut buf = Vec::new();
+        w.encode_into(&mut buf);
+        assert_eq!(WalRecord::decode(&buf[8..]).unwrap(), w);
+    }
+
+    #[test]
+    fn prop_records_round_trip() {
+        check("wal frame round trip", 300, |g| {
+            let rec = random_record(g);
+            let mut buf = Vec::new();
+            rec.encode_into(&mut buf);
+            WalRecord::decode(&buf[8..]).ok() == Some(rec)
+        });
+    }
+
+    fn random_record(g: &mut Gen) -> WalRecord {
+        let shard = g.u32_below(8);
+        let lsn = g.u64_any() | 1;
+        let seq = g.u64_any();
+        if g.bool() {
+            let seal = *g.choose(&[
+                SealReason::Full,
+                SealReason::KindChange,
+                SealReason::Deadline,
+                SealReason::Forced,
+            ]);
+            let kind =
+                *g.choose(&[BatchKind::Add, BatchKind::And, BatchKind::Or, BatchKind::Xor]);
+            let ops = g.vec_of(16, |g| (g.u32_below(1 << 16), g.u32_any()));
+            WalRecord {
+                shard,
+                lsn,
+                commit_seq: seq,
+                payload: WalPayload::Batch { seal_reason: seal, kind, ops },
+            }
+        } else {
+            WalRecord {
+                shard,
+                lsn,
+                commit_seq: seq,
+                payload: WalPayload::Write { row: g.u32_below(1 << 16), value: g.u32_any() },
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_payloads() {
+        assert!(WalRecord::decode(&[]).is_err());
+        assert!(WalRecord::decode(&[9; 27]).is_err(), "bad record type");
+        let rec = demo_batch(1, 1, vec![(0, 1)]);
+        let mut buf = Vec::new();
+        rec.encode_into(&mut buf);
+        // Length/ops mismatch.
+        assert!(WalRecord::decode(&buf[8..buf.len() - 1]).is_err());
+        // Bad seal byte.
+        let mut p = buf[8..].to_vec();
+        p[21] = 99;
+        assert!(WalRecord::decode(&p).is_err());
+    }
+}

@@ -378,6 +378,20 @@ impl FastArray {
         Ok(self.rows[row].write_word(seg, word)?)
     }
 
+    /// Non-counting write of word `seg` in `row`: the restore path of
+    /// durability recovery, which replays pre-crash state into the
+    /// array without pretending the workload issued conventional-port
+    /// writes — port counters and cell toggle counters stay untouched
+    /// (same contract as [`Self::peek_word`] on the read side; the
+    /// cells are overwritten via the toggle-neutral `force_word`).
+    pub fn poke_word(&mut self, row: usize, seg: usize, word: u32) -> Result<(), ArrayError> {
+        self.check_row(row)?;
+        self.check_seg(seg)?;
+        self.ensure_rows();
+        self.rows[row].force_word(seg, word);
+        Ok(())
+    }
+
     /// Non-counting read of word `seg` in `row`: a harness/verification
     /// accessor that leaves the conventional-port counters untouched,
     /// so energy accounting keeps modeling the workload rather than the
@@ -732,6 +746,24 @@ mod tests {
         a.batch_add(&[5, 7]); // applies to word 0 of each row
         assert_eq!(a.read_word(0, 0).unwrap(), 5);
         assert_eq!(a.read_word(0, 1).unwrap(), 42); // untouched
+    }
+
+    #[test]
+    fn poke_word_restores_state_without_counting() {
+        // The durability-recovery preload path: state lands, the
+        // workload-modeling port counters don't move.
+        let mut a = FastArray::new(8, 8);
+        a.write_row(0, 5);
+        let writes_before = a.port_writes();
+        a.poke_word(1, 0, 9).unwrap();
+        a.poke_word(0, 0, 6).unwrap();
+        assert_eq!(a.peek_word(1, 0).unwrap(), 9);
+        assert_eq!(a.peek_word(0, 0).unwrap(), 6);
+        assert_eq!(a.port_writes(), writes_before, "poke must not count");
+        assert!(matches!(
+            a.poke_word(8, 0, 1),
+            Err(ArrayError::RowOutOfRange(8, 8))
+        ));
     }
 
     #[test]

@@ -36,6 +36,11 @@
 //!   `fast-serve-v1` line protocol (TCP multi-client or stdio)
 //!   speaking `fast-trace-v1` events on the wire, with per-connection
 //!   SUB (fire-and-forget) / CMT (wait-for-ticket) modes.
+//! - [`durability`] — segmented CRC32-framed write-ahead log riding
+//!   the engine's group-commit seals (one coalesced fsync per seal),
+//!   atomic full-state snapshots, torn-tail-repairing crash recovery,
+//!   and WAL→trace interop (`fast serve --wal-dir`,
+//!   `fast wal inspect|verify|compact|export`).
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   functional artifacts (Layer 1/2); compiles against a clean-failing
 //!   stub unless built with `--features pjrt`.
@@ -96,6 +101,7 @@ pub mod apps;
 pub mod baseline;
 pub mod cli;
 pub mod coordinator;
+pub mod durability;
 pub mod energy;
 pub mod experiments;
 pub mod fastmem;

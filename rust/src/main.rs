@@ -9,12 +9,13 @@ use std::time::Duration;
 
 use anyhow::bail;
 
-use fast_sram::apps::trace::{state_digest, BackendKind, Trace};
+use fast_sram::apps::trace::{self, state_digest, BackendKind, Trace};
 use fast_sram::apps::trainer::{self, TrainerConfig};
 use fast_sram::cli::{usage, Args};
 use fast_sram::coordinator::{
     BitPlaneBackend, DigitalBackend, EngineConfig, FastBackend, UpdateEngine, XlaBackend,
 };
+use fast_sram::durability::{self, DurabilityConfig, FsyncPolicy};
 use fast_sram::fastmem::Fidelity;
 use fast_sram::experiments::{
     apps_bench, fig10, fig11, fig12, fig13, fig14, table1, waveforms, weight_update,
@@ -39,6 +40,7 @@ fn main() -> Result<()> {
         Some("trace") => cmd_trace(&args),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("wal") => cmd_wal(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
@@ -194,23 +196,25 @@ fn cmd_trace(args: &Args) -> Result<()> {
             let path = args
                 .get("in")
                 .ok_or_else(|| anyhow::anyhow!("trace replay needs --in FILE"))?;
-            let trace = Trace::load(path)?;
             let fidelity_str = args.get_str("fidelity", "word");
             let fidelity = Fidelity::parse(fidelity_str).ok_or_else(|| {
                 anyhow::anyhow!("unknown fidelity {fidelity_str:?} (phase|word|bitplane)")
             })?;
             let kind = BackendKind::from_flags(args.get_str("backend", "fast"), fidelity)?;
             let shards = args.get_usize("shards", 1)?;
-            let rep = trace.replay_on(kind, shards)?;
+            let verify = args.get_bool("verify");
+            // Streamed replay: events go straight from the BufReader
+            // into the engine (a multi-million-event trace never sits
+            // in memory); --verify folds the host oracle alongside and
+            // replay_file errors on divergence.
+            let fr = trace::replay_file(path, kind, shards, verify)?;
+            let rep = &fr.report;
             let s = &rep.stats;
-            let shape = format!("{} ({} rows x {} bits)", trace.name, trace.rows, trace.q);
+            let shape = format!("{} ({} rows x {} bits)", fr.name, fr.rows, fr.q);
             let digest = format!("{:016x}", state_digest(&rep.final_state));
             if args.get_bool("digest-only") {
-                // Machine-readable mode for the CI serve smoke job:
-                // verify (if asked), then print just the digest.
-                if args.get_bool("verify") && rep.final_state != trace.reference_state() {
-                    bail!("replay diverged from host semantics");
-                }
+                // Machine-readable mode for the CI smoke jobs: just
+                // the digest (verification already ran if asked).
                 println!("{digest}");
                 return Ok(());
             }
@@ -229,13 +233,11 @@ fn cmd_trace(args: &Args) -> Result<()> {
                 ("wall time".to_string(), format!("{:.2} ms", rep.wall_us / 1000.0)),
                 ("state digest".to_string(), digest),
             ];
-            if args.get_bool("verify") {
-                let want = trace.reference_state();
-                if rep.final_state != want {
-                    bail!("replay diverged from host semantics");
-                }
-                let verdict = "bit-identical to host semantics".to_string();
-                rows_txt.push(("verified".to_string(), verdict));
+            if verify {
+                rows_txt.push((
+                    "verified".to_string(),
+                    "bit-identical to host semantics".to_string(),
+                ));
             }
             print!("{}", render_table("trace replay", &rows_txt));
             Ok(())
@@ -288,6 +290,24 @@ fn build_engine(args: &Args) -> Result<UpdateEngine> {
     if backend != "fast" && fidelity != Fidelity::WordFast {
         bail!("--fidelity applies to --backend fast only");
     }
+    // Durability: --wal-dir switches the engine into durable mode
+    // (recovery runs inside UpdateEngine::start, before any traffic).
+    if let Some(dir) = args.get("wal-dir") {
+        let interval = Duration::from_micros(args.get_u64("fsync-interval-us", 2000)?);
+        let fsync = FsyncPolicy::parse(args.get_str("fsync", "interval"), interval)?;
+        let mut d = DurabilityConfig::new(dir);
+        d.fsync = fsync;
+        d.segment_bytes = args.get_u64(
+            "wal-segment-bytes",
+            fast_sram::durability::DEFAULT_SEGMENT_BYTES,
+        )?;
+        cfg.durability = Some(d);
+    } else if args.get("fsync").is_some()
+        || args.get("fsync-interval-us").is_some()
+        || args.get("wal-segment-bytes").is_some()
+    {
+        bail!("--fsync/--fsync-interval-us/--wal-segment-bytes require --wal-dir");
+    }
     let engine = match backend.as_str() {
         "fast" => match fidelity {
             // The bit-plane tier transposes the shard's whole bank set
@@ -329,6 +349,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine = build_engine(args)?;
     let cfg = engine.config().clone();
     let stats_json = args.get_bool("stats-json");
+    if let Some(d) = &cfg.durability {
+        // Recovery already ran inside UpdateEngine::start — the engine
+        // is serving the recovered state before the first connection.
+        let seqs: Vec<String> = (0..cfg.shards)
+            .map(|s| engine.committed_seq(s).map(|q| q.to_string()))
+            .collect::<Result<_>>()?;
+        eprintln!(
+            "durability: WAL at {} (fsync={}, segment {} B); recovered commit seqs [{}]",
+            d.dir.display(),
+            d.fsync.name(),
+            d.segment_bytes,
+            seqs.join(",")
+        );
+    }
 
     let report = if args.get_bool("stdio") {
         eprintln!(
@@ -413,8 +447,14 @@ fn cmd_client(args: &Args) -> Result<()> {
         want_digest,
         args.get_bool("shutdown"),
     )?;
-    if let Some(digest) = report.digest {
-        println!("{digest}");
+    match report.digest {
+        Some(digest) => println!("{digest}"),
+        // run_client already errors when DIGEST fails; this guards the
+        // contract so a half-failed stream can never exit 0 with an
+        // empty stdout under --digest (the CI loopback diff relies on
+        // a nonzero exit here).
+        None if want_digest => bail!("server never returned the requested digest"),
+        None => {}
     }
     eprintln!(
         "client done: {} event(s) acked, {} busy retr{}",
@@ -423,6 +463,150 @@ fn cmd_client(args: &Args) -> Result<()> {
         if report.busy_retries == 1 { "y" } else { "ies" }
     );
     Ok(())
+}
+
+/// `fast wal <inspect|verify|compact|repair|export>` — offline
+/// operations on a WAL directory. The mutating verbs (compact,
+/// repair) take the directory's single-writer lock, so they refuse to
+/// run while a live `fast serve` holds it.
+fn cmd_wal(args: &Args) -> Result<()> {
+    let verb = args.positional.first().map(String::as_str).ok_or_else(|| {
+        anyhow::anyhow!("usage: fast wal inspect|verify|compact|repair|export --dir DIR")
+    })?;
+    let dir = std::path::PathBuf::from(
+        args.get("dir")
+            .ok_or_else(|| anyhow::anyhow!("fast wal {verb} needs --dir DIR"))?,
+    );
+    match verb {
+        "inspect" => {
+            let rep = durability::recover(&dir)?;
+            let mut rows_txt = vec![
+                ("shape".to_string(), format!("{} rows x {} bits, {} shard(s)", rep.rows, rep.q, rep.shards)),
+                (
+                    "snapshot".to_string(),
+                    rep.snapshot
+                        .as_ref()
+                        .map(|p| p.display().to_string())
+                        .unwrap_or_else(|| "none".to_string()),
+                ),
+                ("segments".to_string(), format!("{}", rep.segments)),
+                ("tail records replayed".to_string(), format!("{}", rep.records_replayed)),
+                ("state digest".to_string(), format!("{:016x}", rep.digest)),
+            ];
+            for (shard, mark) in rep.per_shard.iter().enumerate() {
+                rows_txt.push((
+                    format!("shard {shard}"),
+                    format!("commit_seq {} | lsn {}", mark.commit_seq, mark.lsn),
+                ));
+            }
+            for t in &rep.torn {
+                rows_txt.push((
+                    format!("torn tail (shard {})", t.shard),
+                    format!("{} @ byte {} ({})", t.segment.display(), t.offset, t.reason),
+                ));
+            }
+            print!("{}", render_table("wal inspect", &rows_txt));
+            Ok(())
+        }
+        "verify" => {
+            let rep = durability::recover(&dir)?;
+            // A torn FINAL segment is the normal crash artifact —
+            // recovery repairs it on the next durable start. Records
+            // made unreachable by a mid-log tear are real corruption.
+            for t in &rep.torn {
+                if t.dropped_segments > 0 {
+                    bail!(
+                        "shard {}: bad frame in {} at byte {} makes {} later segment(s) \
+                         unreachable ({}) — the log is corrupt beyond a torn tail; a \
+                         durable engine will refuse this directory, and \
+                         `fast wal repair --dir …` accepts the data loss explicitly",
+                        t.shard,
+                        t.segment.display(),
+                        t.offset,
+                        t.dropped_segments,
+                        t.reason
+                    );
+                }
+                eprintln!(
+                    "note: shard {} has a torn tail at {} byte {} ({}) — \
+                     recovery will truncate it",
+                    t.shard,
+                    t.segment.display(),
+                    t.offset,
+                    t.reason
+                );
+            }
+            if args.get_bool("digest-only") {
+                println!("{:016x}", rep.digest);
+            } else {
+                println!(
+                    "wal ok: {} segment(s), {} tail record(s), state digest {:016x}",
+                    rep.segments, rep.records_replayed, rep.digest
+                );
+            }
+            Ok(())
+        }
+        "compact" => {
+            let _lock = durability::DirLock::acquire(&dir)?;
+            let rep = durability::compact(&dir)?;
+            println!(
+                "compacted: snapshot {} (digest {:016x}), {} segment(s) + {} old snapshot(s) \
+                 removed, {} B reclaimed",
+                rep.snapshot.display(),
+                rep.digest,
+                rep.segments_removed,
+                rep.snapshots_removed,
+                rep.bytes_reclaimed
+            );
+            Ok(())
+        }
+        "repair" => {
+            // Destructive: truncates at the first bad frame wherever
+            // it is and deletes stranded segments. This is the verb a
+            // refused engine start points at.
+            let _lock = durability::DirLock::acquire(&dir)?;
+            let rep = durability::recover_force(&dir)?;
+            if rep.torn.is_empty() {
+                println!(
+                    "nothing to repair: {} segment(s), state digest {:016x}",
+                    rep.segments, rep.digest
+                );
+            } else {
+                for t in &rep.torn {
+                    println!(
+                        "repaired shard {}: truncated {} at byte {} ({}), dropped {} \
+                         unreachable segment(s)",
+                        t.shard,
+                        t.segment.display(),
+                        t.offset,
+                        t.reason,
+                        t.dropped_segments
+                    );
+                }
+                println!(
+                    "post-repair state digest {:016x} ({} record(s) replayed)",
+                    rep.digest, rep.records_replayed
+                );
+            }
+            Ok(())
+        }
+        "export" => {
+            let out = args
+                .get("out")
+                .ok_or_else(|| anyhow::anyhow!("fast wal export needs --out FILE"))?;
+            let trace = durability::export_trace(&dir, args.get_str("name", "wal-export"))?;
+            trace.save(out)?;
+            println!(
+                "exported {} event(s) over {} rows x {} bits -> {out} \
+                 (digest-check with: fast trace replay --in {out} --digest-only)",
+                trace.events.len(),
+                trace.rows,
+                trace.q
+            );
+            Ok(())
+        }
+        other => bail!("unknown wal verb {other:?} (inspect|verify|compact|repair|export)"),
+    }
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {

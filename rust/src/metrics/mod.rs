@@ -111,6 +111,18 @@ pub struct ShardCounters {
     /// Modeled macro latency of the committing batch, one sample per
     /// resolved ticket (the modeled analogue of `commit_wall`).
     pub commit_modeled: LatencyRecorder,
+    /// WAL records appended by this shard's appender (batch commits +
+    /// conventional-port writes). Zero when durability is off.
+    pub wal_records: AtomicU64,
+    /// WAL bytes appended (frames, headers excluded).
+    pub wal_bytes: AtomicU64,
+    /// fsyncs issued (group-commit coalesced — compare against
+    /// `wal_records` to see the amortization).
+    pub wal_fsyncs: AtomicU64,
+    /// Segment rotations performed.
+    pub wal_rotations: AtomicU64,
+    /// fsync call latency histogram (one sample per fsync).
+    pub wal_fsync: LatencyRecorder,
 }
 
 impl ShardCounters {
@@ -144,6 +156,11 @@ impl ShardCounters {
             tickets_resolved: Counters::get(&self.tickets_resolved),
             commit_wall: self.commit_wall.summary(),
             commit_modeled: self.commit_modeled.summary(),
+            wal_records: Counters::get(&self.wal_records),
+            wal_bytes: Counters::get(&self.wal_bytes),
+            wal_fsyncs: Counters::get(&self.wal_fsyncs),
+            wal_rotations: Counters::get(&self.wal_rotations),
+            wal_fsync: self.wal_fsync.summary(),
         }
     }
 }
@@ -167,6 +184,16 @@ pub struct ShardSnapshot {
     pub commit_wall: LatencySummary,
     /// Modeled commit latency distribution (p50/p95/p99).
     pub commit_modeled: LatencySummary,
+    /// WAL records appended (0 when durability is off).
+    pub wal_records: u64,
+    /// WAL bytes appended.
+    pub wal_bytes: u64,
+    /// fsyncs issued (coalesced per the fsync policy).
+    pub wal_fsyncs: u64,
+    /// Segment rotations.
+    pub wal_rotations: u64,
+    /// fsync latency histogram (p50/p95/p99).
+    pub wal_fsync: LatencySummary,
 }
 
 /// Modeled energy accumulator (fJ) — fed from `energy::Cost` values.
@@ -307,6 +334,21 @@ mod tests {
         assert!(snap.commit_wall.p95_ns >= snap.commit_wall.p50_ns);
         assert!(snap.commit_wall.p99_ns >= snap.commit_wall.p95_ns);
         assert_eq!(snap.commit_modeled.count, 1);
+    }
+
+    #[test]
+    fn shard_wal_counters_snapshot() {
+        let s = ShardCounters::default();
+        Counters::inc(&s.wal_records, 3);
+        Counters::inc(&s.wal_bytes, 120);
+        Counters::inc(&s.wal_fsyncs, 1);
+        s.wal_fsync.record_ns(5_000);
+        let snap = s.snapshot();
+        assert_eq!(snap.wal_records, 3);
+        assert_eq!(snap.wal_bytes, 120);
+        assert_eq!(snap.wal_fsyncs, 1);
+        assert_eq!(snap.wal_rotations, 0);
+        assert_eq!(snap.wal_fsync.count, 1);
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! WAIT <shard> <seq>    → OK <committed>  (blocks via UpdateEngine::wait_seq)
 //! DRAIN <shard>         → OK <seq>        (per-shard drain)
 //! DIGEST                → OK <fnv64-hex of the row state snapshot>
+//! DIGEST CRC            → OK <crc32-hex of the row state bytes (LE)>
 //! STATS                 → OK <one-line JSON engine stats>
 //! QUIT                  → OK bye          (closes this connection)
 //! SHUTDOWN              → OK draining     (server drains every shard and exits)
@@ -211,7 +212,22 @@ impl Session {
             }
             "DIGEST" => {
                 let snap = self.engine.snapshot()?;
-                format!("OK {:016x}", state_digest(&snap))
+                match parts.next() {
+                    // `DIGEST CRC`: CRC32 over the state's LE bytes —
+                    // the same util::crc32 that frames the WAL, so an
+                    // external tool can cross-check either fingerprint.
+                    Some(arg) if arg.eq_ignore_ascii_case("crc") => {
+                        let crc = snap
+                            .iter()
+                            .fold(crate::util::crc32::Crc32::new(), |c, w| {
+                                c.update(&w.to_le_bytes())
+                            })
+                            .finish();
+                        format!("OK {crc:08x}")
+                    }
+                    Some(other) => bail!("DIGEST takes no argument or CRC, got {other:?}"),
+                    None => format!("OK {:016x}", state_digest(&snap)),
+                }
             }
             "STATS" => format!("OK {}", stats_json(&self.engine.stats())),
             "QUIT" => return Ok(Action::Quit("OK bye".to_string())),
@@ -551,6 +567,9 @@ pub fn run_client(
     }
 
     let digest = if want_digest {
+        // A missing or malformed digest line is a hard failure: the
+        // caller asked for a verifiable fingerprint, so a half-failed
+        // stream must exit nonzero rather than print nothing.
         let reply = roundtrip("DIGEST")?;
         let hex = reply
             .strip_prefix("OK ")
@@ -614,7 +633,8 @@ pub fn stats_json(s: &EngineStats) -> String {
              \"sealed_kind_change\":{},\"sealed_deadline\":{},\"sealed_forced\":{},\
              \"coalesce_hits\":{},\"rows_updated\":{},\"queue_depth\":{},\
              \"queue_high_water\":{},\"commit_seq\":{},\"tickets_resolved\":{},\
-             \"commit_wall_ns\":{},\"commit_modeled_ns\":{}}}",
+             \"commit_wall_ns\":{},\"commit_modeled_ns\":{},\"wal_records\":{},\
+             \"wal_bytes\":{},\"wal_fsyncs\":{},\"wal_rotations\":{},\"wal_fsync_ns\":{}}}",
             sc.requests,
             sc.batches_sealed,
             sc.sealed_full,
@@ -629,13 +649,22 @@ pub fn stats_json(s: &EngineStats) -> String {
             sc.tickets_resolved,
             latency_json(&sc.commit_wall),
             latency_json(&sc.commit_modeled),
+            sc.wal_records,
+            sc.wal_bytes,
+            sc.wal_fsyncs,
+            sc.wal_rotations,
+            latency_json(&sc.wal_fsync),
         ));
     }
+    let wal_records: u64 = s.shards.iter().map(|sc| sc.wal_records).sum();
+    let wal_bytes: u64 = s.shards.iter().map(|sc| sc.wal_bytes).sum();
+    let wal_fsyncs: u64 = s.shards.iter().map(|sc| sc.wal_fsyncs).sum();
     format!(
         "{{\"backend\":\"{}\",\"submitted\":{},\"completed\":{},\"rejected\":{},\
          \"batches\":{},\"rows_updated\":{},\"rows_per_batch\":{:.2},\
          \"modeled_ns\":{:.1},\"modeled_energy_pj\":{:.3},\"queue_depth\":{},\
-         \"tickets_resolved\":{},\"apply_wall_ns\":{},\"shards\":[{}]}}",
+         \"tickets_resolved\":{},\"wal_records\":{wal_records},\"wal_bytes\":{wal_bytes},\
+         \"wal_fsyncs\":{wal_fsyncs},\"apply_wall_ns\":{},\"shards\":[{}]}}",
         s.backend,
         s.submitted,
         s.completed,
@@ -805,6 +834,96 @@ mod tests {
     }
 
     #[test]
+    fn digest_crc_line_speaks_crc32() {
+        let e = engine(16, 8, 1);
+        let mut s = Session::new(Arc::clone(&e));
+        reply(&mut s, "{\"t\":\"w\",\"r\":0,\"v\":171}");
+        reply(&mut s, "{\"t\":\"w\",\"r\":3,\"v\":5}");
+        let r = reply(&mut s, "DIGEST CRC");
+        let hex = r.strip_prefix("OK ").unwrap();
+        assert_eq!(hex.len(), 8, "{r}");
+        // Independent computation over the LE state bytes.
+        let mut state = vec![0u32; 16];
+        state[0] = 171;
+        state[3] = 5;
+        let mut bytes = Vec::new();
+        for w in &state {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        assert_eq!(
+            u32::from_str_radix(hex, 16).unwrap(),
+            crate::util::crc32::crc32(&bytes)
+        );
+        // lowercase arg works, junk arg errors.
+        assert!(reply(&mut s, "DIGEST crc").starts_with("OK "));
+        assert!(reply(&mut s, "DIGEST nope").starts_with("ERR "));
+        drop(s);
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
+    }
+
+    /// A scripted fake server: replies `banner` to HELLO, "OK" to
+    /// MODE, and the scripted answer to everything else.
+    fn fake_server(answers: Vec<(&'static str, &'static str)>) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut out = stream;
+            let mut line = String::new();
+            while reader.read_line(&mut line).unwrap_or(0) > 0 {
+                let req = line.trim().to_string();
+                line.clear();
+                let reply = if req == "HELLO" {
+                    format!("OK {PROTOCOL} rows=8 q=8 shards=1 backend=fake")
+                } else if req.starts_with("MODE") {
+                    "OK mode".to_string()
+                } else {
+                    answers
+                        .iter()
+                        .find(|(prefix, _)| req.starts_with(prefix))
+                        .map(|(_, r)| r.to_string())
+                        .unwrap_or_else(|| "OK".to_string())
+                };
+                if writeln!(out, "{reply}").is_err() {
+                    break;
+                }
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn client_fails_hard_when_the_digest_line_is_missing() {
+        // The CI loopback job pipes the client's stdout into a diff;
+        // an ERR on DIGEST must exit nonzero, never print nothing and
+        // succeed.
+        let addr = fake_server(vec![("DIGEST", "ERR no digest for you")]);
+        let err = run_client(&addr, None, Mode::Cmt, true, false).unwrap_err();
+        assert!(format!("{err:#}").contains("DIGEST failed"), "{err:#}");
+    }
+
+    #[test]
+    fn client_fails_hard_on_terminal_err_mid_stream() {
+        // Terminal (non-busy) ERR on an event line: fail fast, do not
+        // retry, exit nonzero.
+        let addr = fake_server(vec![("{", "ERR shard 0 is down")]);
+        let trace = uniform_trace(8, 8, 10, 3);
+        let err = run_client(&addr, Some(&trace), Mode::Cmt, false, false).unwrap_err();
+        assert!(format!("{err:#}").contains("rejected"), "{err:#}");
+    }
+
+    #[test]
+    fn client_fails_hard_on_malformed_digest() {
+        let addr = fake_server(vec![("DIGEST", "OK not-a-digest!!")]);
+        let err = run_client(&addr, None, Mode::Cmt, true, false).unwrap_err();
+        assert!(format!("{err:#}").contains("malformed digest"), "{err:#}");
+    }
+
+    #[test]
     fn busy_classification_distinguishes_backpressure_from_terminal_errors() {
         // Only EngineBusy (queue full) is retryable; terminal errors
         // (bad row, shut-down engine) must NOT classify as busy, so
@@ -835,6 +954,14 @@ mod tests {
         assert!(shards[1]
             .get("commit_wall_ns")
             .and_then(|l| l.get("p95_ns"))
+            .and_then(Json::as_usize)
+            .is_some());
+        // WAL counters are always present (0 on a volatile engine).
+        assert_eq!(json.get("wal_records").and_then(Json::as_usize), Some(0));
+        assert_eq!(shards[0].get("wal_fsyncs").and_then(Json::as_usize), Some(0));
+        assert!(shards[0]
+            .get("wal_fsync_ns")
+            .and_then(|l| l.get("p99_ns"))
             .and_then(Json::as_usize)
             .is_some());
         drop(s);

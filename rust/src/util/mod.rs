@@ -2,6 +2,7 @@
 //! bit/word helpers, timing helpers.
 
 pub mod bits;
+pub mod crc32;
 pub mod json;
 pub mod quickprop;
 pub mod rng;
