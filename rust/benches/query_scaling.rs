@@ -1,0 +1,220 @@
+//! Query-scaling bench: in-array reduction throughput of the
+//! plane-wise kernels (bit-plane tier) vs the scalar reference path
+//! (word-fast tier) as the row count sweeps 128 / 1024 / 8192 — the
+//! acceptance bar for the plane-wise engine (≥ 20× the scalar path's
+//! row-reductions/s at 8192 rows, on the `sum` reduction).
+//!
+//! Before timing anything, every size runs a cross-backend equivalence
+//! check (values + canonical pass reports across phase / word /
+//! bit-plane / digital), so a kernel that got fast by getting wrong
+//! fails here, not in the plot.
+//!
+//! Run: `cargo bench --bench query_scaling`
+//! Writes: ../BENCH_query_scaling.json (relative to rust/)
+//! Env: FAST_BENCH_SMOKE=1 shrinks iteration counts for CI smoke runs
+//! (sizes are unchanged so the acceptance ratio stays meaningful).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use fast_sram::coordinator::{Backend, BitPlaneBackend, DigitalBackend, FastBackend};
+use fast_sram::fastmem::Fidelity;
+use fast_sram::query::{seeded_mask, QuerySpec, Reduction};
+use fast_sram::util::rng::Rng;
+
+const Q: usize = 16;
+const SIZES: [usize; 3] = [128, 1024, 8192];
+
+/// Identical pseudo-random row state for every backend at a size.
+fn state(rows: usize) -> Vec<u32> {
+    let mut rng = Rng::new(0x9E4B + rows as u64);
+    (0..rows).map(|_| rng.below(1 << Q) as u32).collect()
+}
+
+fn load(b: &mut dyn Backend, init: &[u32]) {
+    for (r, v) in init.iter().enumerate() {
+        b.write_row(r, *v).expect("loading bench state");
+    }
+}
+
+/// The reductions the bench times; `sum` carries the acceptance bar.
+fn specs(rows: usize) -> Vec<(&'static str, QuerySpec)> {
+    vec![
+        ("sum", QuerySpec::all(Reduction::Sum)),
+        (
+            "range+mask",
+            QuerySpec::masked(
+                Reduction::RangeCount { lo: 100, hi: 40_000 },
+                seeded_mask(11, 75, rows),
+            ),
+        ),
+    ]
+}
+
+/// Cross-backend equivalence check: every reduction must answer the
+/// same value with the same canonical pass report on all four
+/// backends before any of them gets timed.
+fn verify(rows: usize) {
+    let init = state(rows);
+    let mut backends: Vec<(&'static str, Box<dyn Backend>)> = vec![
+        (
+            "phase",
+            Box::new(FastBackend::with_rows_fidelity(rows, Q, Fidelity::PhaseAccurate)),
+        ),
+        (
+            "word",
+            Box::new(FastBackend::with_rows_fidelity(rows, Q, Fidelity::WordFast)),
+        ),
+        ("bitplane", Box::new(BitPlaneBackend::with_rows(rows, Q))),
+        ("digital", Box::new(DigitalBackend::new(rows, Q))),
+    ];
+    for (_, b) in &mut backends {
+        load(b.as_mut(), &init);
+    }
+    for (name, spec) in specs(rows) {
+        let mut outcomes = Vec::new();
+        for (label, b) in &mut backends {
+            outcomes.push((*label, b.query(&spec).expect("query")));
+        }
+        let (_, want) = &outcomes[0];
+        for (label, got) in &outcomes[1..] {
+            assert_eq!(
+                (got.value, got.report),
+                (want.value, want.report),
+                "{name} diverged on {label} at {rows} rows"
+            );
+        }
+    }
+    println!("verify {rows:>5} rows: all backends agree (values + reports)");
+}
+
+/// Timed queries per (impl, rows) — scaled so each run stays in
+/// sensible wall-clock territory while remaining measurable.
+fn queries_for(plane: bool, rows: usize, smoke: bool) -> usize {
+    let full = if plane {
+        match rows {
+            128 => 40_000,
+            1024 => 8000,
+            _ => 1600,
+        }
+    } else {
+        match rows {
+            128 => 8000,
+            1024 => 1200,
+            _ => 160,
+        }
+    };
+    if smoke { (full / 10).max(1) } else { full }
+}
+
+struct QueryResultRow {
+    rows: usize,
+    imp: &'static str,
+    reduction: &'static str,
+    queries: usize,
+    wall_ms: f64,
+    red_rows_per_sec: f64,
+}
+
+fn bench_impl(rows: usize, plane: bool, smoke: bool) -> Vec<QueryResultRow> {
+    let init = state(rows);
+    let mut backend: Box<dyn Backend> = if plane {
+        Box::new(BitPlaneBackend::with_rows(rows, Q))
+    } else {
+        Box::new(FastBackend::with_rows_fidelity(rows, Q, Fidelity::WordFast))
+    };
+    load(backend.as_mut(), &init);
+    let imp = if plane { "plane" } else { "scalar" };
+    let queries = queries_for(plane, rows, smoke);
+    let mut out = Vec::new();
+    for (reduction, spec) in specs(rows) {
+        backend.query(&spec).expect("warmup query");
+        let t0 = Instant::now();
+        let mut sink = 0u64;
+        for _ in 0..queries {
+            sink = sink.wrapping_add(backend.query(&spec).expect("query").value);
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        // Defeat dead-code elimination through the accumulated values.
+        std::hint::black_box(sink);
+        out.push(QueryResultRow {
+            rows,
+            imp,
+            reduction,
+            queries,
+            wall_ms: wall * 1e3,
+            red_rows_per_sec: (rows * queries) as f64 / wall,
+        });
+    }
+    out
+}
+
+fn main() {
+    let smoke = harness::smoke_mode();
+    harness::section(&format!(
+        "query scaling: rows {SIZES:?} x q={Q}, plane-wise vs scalar{}",
+        if smoke { " [smoke]" } else { "" }
+    ));
+
+    // Equivalence first: a fast-but-wrong kernel must fail loudly.
+    for rows in SIZES {
+        verify(rows);
+    }
+
+    let mut results: Vec<QueryResultRow> = Vec::new();
+    for rows in SIZES {
+        for plane in [false, true] {
+            for r in bench_impl(rows, plane, smoke) {
+                println!(
+                    "{:>5} rows | {:<6} | {:<10} | {:>6} queries | {:>9.2} ms | {:>14.0} red-rows/s",
+                    r.rows, r.imp, r.reduction, r.queries, r.wall_ms, r.red_rows_per_sec
+                );
+                results.push(r);
+            }
+        }
+    }
+
+    let ops = |rows: usize, imp: &str, reduction: &str| {
+        results
+            .iter()
+            .find(|r| r.rows == rows && r.imp == imp && r.reduction == reduction)
+            .expect("result present")
+            .red_rows_per_sec
+    };
+    let speedup = ops(8192, "plane", "sum") / ops(8192, "scalar", "sum");
+    let pass = speedup >= 20.0;
+    println!(
+        "\nacceptance: plane {:.0} vs scalar {:.0} red-rows/s at 8192 rows (sum) \
+         -> {:.1}x ({})",
+        ops(8192, "plane", "sum"),
+        ops(8192, "scalar", "sum"),
+        speedup,
+        if pass { "PASS" } else { "FAIL (need >= 20x)" }
+    );
+
+    let mut rows_json = String::new();
+    for r in &results {
+        if !rows_json.is_empty() {
+            rows_json.push_str(",\n");
+        }
+        rows_json.push_str(&format!(
+            "    {{\"rows\": {}, \"impl\": \"{}\", \"reduction\": \"{}\", \"queries\": {}, \"wall_ms\": {:.3}, \"red_rows_per_sec\": {:.0}}}",
+            r.rows, r.imp, r.reduction, r.queries, r.wall_ms, r.red_rows_per_sec
+        ));
+    }
+    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let json = format!(
+        "{{\n  \"bench\": \"query_scaling\",\n  \"status\": \"measured\",\n  \"mode\": \"{}\",\n  \"q\": {Q},\n  \"host_parallelism\": {host_threads},\n  \"results\": [\n{rows_json}\n  ],\n  \"acceptance\": {{\"criterion\": \"red_rows_per_sec(plane) >= 20 * red_rows_per_sec(scalar) at 8192 rows on sum\", \"speedup\": {speedup:.1}, \"pass\": {pass}}}\n}}\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_query_scaling.json");
+    std::fs::write(out_path, json).expect("writing BENCH_query_scaling.json");
+    println!("results written to {out_path}");
+
+    assert!(
+        pass,
+        "plane-wise queries must be >= 20x the scalar path at 8192 rows, got {speedup:.1}x"
+    );
+}

@@ -209,16 +209,34 @@ system commands:
                fast-trace-v1 events over TCP (multi-client) or stdio, with
                per-connection MODE SUB (fire-and-forget) / MODE CMT
                (wait-for-ticket: replies carry shard, commit_seq, seal
-               reason, modeled ns), READ/WAIT/DRAIN/DIGEST [CRC]/STATS,
+               reason, modeled ns), READ/WAIT/DRAIN/DIGEST [CRC]/QRY/STATS
+               (QRY runs an in-array reduction sequenced against the
+               commit stream — grammar under `fast query`),
                ERR-busy backpressure, and a clean per-shard drain on
                SHUTDOWN; --stats-json includes WAL counters and fsync
                latency histograms when durable
   client       --connect HOST:PORT [--in TRACE] [--mode sub|cmt]
-               [--digest] [--shutdown]
+               [--digest] [--query \"SPEC\"] [--expect N] [--shutdown]
                drive a running `fast serve`: stream a recorded trace through
                the protocol, print the final state digest, optionally shut
                the server down; exits nonzero on any terminal (non-busy)
-               ERR or when the requested digest never arrives
+               ERR or when the requested digest never arrives; --query runs
+               a QRY reduction after the stream and verifies the answer
+               against --expect (or, with --in, against a host-side scalar
+               oracle over the trace), exiting nonzero on mismatch
+  query        SPEC [--in TRACE | --updates 5000 --seed 66] [--verify]
+               [--rows 1024] [--q 16] [--banks 8] [--shards 1]
+               [--backend fast|digital|xla] [--fidelity phase|word|bitplane]
+               stream a workload into the engine, then run one in-array
+               reduction over the committed state and print its value with
+               the plane-wise cost accounting (shift cycles, cell toggles,
+               ALU evaluations, modeled energy/latency, observed per-shard
+               commit seqs); SPEC is
+                 popcount | sum | min | max | range LO HI | dot SEED
+               with an optional trailing `mask SEED PCT` row-lane mask;
+               --verify re-runs the reduction on a host-side scalar oracle
+               over the workload's reference state and exits nonzero on any
+               value or accounting divergence
   wal          inspect --dir DIR       summarize a WAL directory (segments,
                                        per-shard commit_seq/lsn watermarks,
                                        snapshot, recovered-state digest)

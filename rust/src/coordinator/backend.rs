@@ -21,8 +21,9 @@
 use anyhow::Context;
 
 use crate::baseline::DigitalEngine;
-use crate::energy::{Cost, FastModel};
+use crate::energy::{Cost, DigitalModel, FastModel};
 use crate::fastmem::{BitPlaneArray, Fidelity};
+use crate::query::{banked_cost, plane_reduce, scalar_reduce, QueryOutcome, QuerySpec};
 use crate::runtime::Runtime;
 use crate::Result;
 
@@ -69,6 +70,19 @@ pub trait Backend {
     fn read_row(&mut self, row: usize) -> Result<u32>;
     fn write_row(&mut self, row: usize, value: u32) -> Result<()>;
     fn snapshot(&mut self) -> Result<Vec<u32>>;
+
+    /// Execute one in-array reduction (see [`crate::query`] for the
+    /// grammar and the rotate-read cost closed form). Read-only: the
+    /// array state, its lifetime toggle counter and the conventional
+    /// port counters must all be untouched afterwards — the pass's
+    /// activity lives in the returned [`QueryOutcome`] only. The FAST
+    /// tiers must account identically (values, report AND modeled
+    /// cost, bit for bit); the digital baseline answers the same value
+    /// and report with its own sweep-read cost profile.
+    fn query(&mut self, spec: &QuerySpec) -> Result<QueryOutcome> {
+        let _ = spec;
+        anyhow::bail!("backend {} does not support in-array queries", self.name())
+    }
 
     /// Restore recovered state before serving (durability recovery
     /// preload). Default: conventional-port writes of the non-zero
@@ -179,6 +193,25 @@ impl Backend for FastBackend {
 
     fn snapshot(&mut self) -> Result<Vec<u32>> {
         Ok(self.banks.snapshot())
+    }
+
+    fn query(&mut self, spec: &QuerySpec) -> Result<QueryOutcome> {
+        // Scalar reference path: decoded words via the non-counting
+        // peek (queries are in-array reads, not conventional-port
+        // traffic), reduced on the host with the canonical pass
+        // accounting; cost charged per active bank exactly like the
+        // update path.
+        let values = self.banks.peek_rows();
+        let (value, report) = scalar_reduce(spec, &values, self.banks.q())?;
+        let rpb = self.banks.rows() / self.banks.banks();
+        let (banks_active, cost) = banked_cost(
+            &FastModel::default(),
+            spec,
+            self.banks.rows(),
+            rpb,
+            self.banks.q(),
+        );
+        Ok(QueryOutcome { value, report, banks_active, cost })
     }
 
     fn preload(&mut self, state: &[u32]) -> Result<()> {
@@ -315,6 +348,21 @@ impl Backend for BitPlaneBackend {
         self.plane.export_to(|r, _s, w| out[r] = w);
         Ok(out)
     }
+
+    fn query(&mut self, spec: &QuerySpec) -> Result<QueryOutcome> {
+        // Plane-wise path: the reduction evaluates straight from the
+        // bit planes; cost accounting mirrors the FAST scalar tiers
+        // term by term so the numbers are bit-identical across tiers.
+        let (value, report) = plane_reduce(&self.plane, 0, spec)?;
+        let (banks_active, cost) = banked_cost(
+            &self.model,
+            spec,
+            self.plane.rows(),
+            self.rows_per_bank,
+            self.q,
+        );
+        Ok(QueryOutcome { value, report, banks_active, cost })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -411,6 +459,18 @@ impl Backend for XlaBackend {
     fn snapshot(&mut self) -> Result<Vec<u32>> {
         Ok(self.state.clone())
     }
+
+    fn query(&mut self, spec: &QuerySpec) -> Result<QueryOutcome> {
+        // Host-side state, scalar reference semantics; cost modeled
+        // like this backend's apply (one 128-row macro pass).
+        let (value, report) = scalar_reduce(spec, &self.state, self.q)?;
+        Ok(QueryOutcome {
+            value,
+            report,
+            banks_active: self.rows.div_ceil(128),
+            cost: self.model.batch_op(self.rows.min(128), self.q),
+        })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -421,11 +481,15 @@ impl Backend for XlaBackend {
 /// (Costs come from the `DigitalEngine`'s own sweep reports.)
 pub struct DigitalBackend {
     engine: DigitalEngine,
+    model: DigitalModel,
 }
 
 impl DigitalBackend {
     pub fn new(rows: usize, q: usize) -> Self {
-        DigitalBackend { engine: DigitalEngine::new(rows, q) }
+        DigitalBackend {
+            engine: DigitalEngine::new(rows, q),
+            model: DigitalModel::default(),
+        }
     }
 }
 
@@ -465,6 +529,28 @@ impl Backend for DigitalBackend {
 
     fn snapshot(&mut self) -> Result<Vec<u32>> {
         Ok(self.engine.snapshot())
+    }
+
+    fn query(&mut self, spec: &QuerySpec) -> Result<QueryOutcome> {
+        // Same value and canonical pass report as every other backend
+        // (the report describes the reduction, not the substrate), but
+        // the digital cost is a serial read sweep: one 6T SRAM word
+        // read per enabled row, latencies summed — no row-parallel
+        // rotation to hide behind.
+        let values = self.engine.snapshot();
+        let q = self.engine.width();
+        let (value, report) = scalar_reduce(spec, &values, q)?;
+        let read = self.model.read_word_sram(self.engine.rows(), q);
+        let n = report.rows_active as f64;
+        Ok(QueryOutcome {
+            value,
+            report,
+            banks_active: 1,
+            cost: Cost {
+                energy_fj: n * read.energy_fj,
+                latency_ns: n * read.latency_ns,
+            },
+        })
     }
 
     // Note: the digital baseline has no clock gating — `batch_apply`
@@ -569,6 +655,56 @@ mod tests {
     fn digital_backend_semantics() {
         let mut b = DigitalBackend::new(64, 16);
         exercise(&mut b);
+    }
+
+    #[test]
+    fn query_identical_across_backends() {
+        use crate::query::{seeded_mask, QuerySpec, Reduction};
+        let rows = 96;
+        let q = 16;
+        let mut fast = FastBackend::new(3, 32, q);
+        let mut plane = BitPlaneBackend::new(3, 32, q);
+        let mut dig = DigitalBackend::new(rows, q);
+        let mut rng = Rng::new(77);
+        let state: Vec<u32> = (0..rows).map(|_| rng.below(1 << q) as u32).collect();
+        for (r, &v) in state.iter().enumerate() {
+            for b in [&mut fast as &mut dyn Backend, &mut plane, &mut dig] {
+                b.write_row(r, v).unwrap();
+            }
+        }
+        let specs = [
+            QuerySpec::all(Reduction::Popcount),
+            QuerySpec::all(Reduction::Sum),
+            QuerySpec::all(Reduction::Min),
+            QuerySpec::all(Reduction::Max),
+            QuerySpec::all(Reduction::RangeCount { lo: 100, hi: 40000 }),
+            QuerySpec::masked(Reduction::Sum, seeded_mask(5, 40, rows)),
+            QuerySpec::masked(
+                Reduction::Dot { vec: crate::query::broadcast_vec(9, rows, q) },
+                seeded_mask(5, 60, rows),
+            ),
+        ];
+        for spec in &specs {
+            let qf = fast.query(spec).unwrap();
+            let qp = plane.query(spec).unwrap();
+            let qd = dig.query(spec).unwrap();
+            // Values + canonical pass report identical on ALL backends.
+            assert_eq!(qf.value, qp.value, "{:?}", spec.red.name());
+            assert_eq!(qf.value, qd.value, "{:?}", spec.red.name());
+            assert_eq!(qf.report, qp.report, "{:?}", spec.red.name());
+            assert_eq!(qf.report, qd.report, "{:?}", spec.red.name());
+            // Modeled cost bit-identical across the FAST tiers; the
+            // digital sweep pays more latency for any real scan.
+            assert_eq!(qf.banks_active, qp.banks_active);
+            assert_eq!(qf.cost, qp.cost, "{:?}", spec.red.name());
+            if qd.report.rows_active > 8 {
+                assert!(qd.cost.latency_ns > qf.cost.latency_ns);
+            }
+        }
+        // Queries are read-only: state survives untouched everywhere.
+        assert_eq!(fast.snapshot().unwrap(), state);
+        assert_eq!(plane.snapshot().unwrap(), state);
+        assert_eq!(dig.snapshot().unwrap(), state);
     }
 
     #[test]

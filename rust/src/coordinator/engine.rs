@@ -64,9 +64,12 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure};
 
 use crate::durability::{recover::recover_or_init, wal::ShardWal, DirLock, DurabilityConfig};
+use crate::energy::Cost;
+use crate::fastmem::BatchReport;
 use crate::metrics::{
     Counters, EnergyAccount, LatencyRecorder, LatencySummary, ShardCounters, ShardSnapshot,
 };
+use crate::query::{shard_specs, QueryOutcome, QuerySpec, Reduction};
 use crate::Result;
 
 use super::backend::Backend;
@@ -257,6 +260,10 @@ enum Command {
     SubmitMany(Vec<UpdateRequest>, Option<TicketNotifier>),
     Read(usize, SyncSender<Result<u32>>),
     Write(usize, u32, SyncSender<Result<()>>),
+    /// One in-array reduction over this shard's (already shard-local)
+    /// spec; replies with the partial outcome plus the commit seq the
+    /// query observed.
+    Query(QuerySpec, SyncSender<Result<ShardQueryPart>>),
     /// Force-seal the open batch (per-shard drain); replies with the
     /// shard's last committed sequence number once applied.
     Drain(SyncSender<u64>),
@@ -346,9 +353,75 @@ pub struct EngineStats {
     pub queue_depth: u64,
     /// Completion tickets resolved across all shards.
     pub tickets_resolved: u64,
+    /// In-array queries answered across all shards (one engine-level
+    /// query counts once per shard it fanned out to).
+    pub queries: u64,
     /// Per-shard breakdown (seal reasons, coalesce hits, queue depth,
     /// commit sequence, submit→commit latency histograms).
     pub shards: Vec<ShardSnapshot>,
+}
+
+/// One shard's query answer (the wire format of [`Command::Query`]).
+struct ShardQueryPart {
+    outcome: QueryOutcome,
+    commit_seq: u64,
+}
+
+/// Pending engine query: one partial result per shard, combined by
+/// [`QueryTicket::wait`]. Like a completion [`Ticket`], waiting never
+/// hangs — a shard that stops before answering surfaces as an error.
+pub struct QueryTicket {
+    red: Reduction,
+    q: usize,
+    parts: Vec<Receiver<Result<ShardQueryPart>>>,
+}
+
+/// Combined engine-level query result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryResult {
+    /// The reduction's value over the whole logical row space (see
+    /// [`Reduction`] for the empty-selection conventions).
+    pub value: u64,
+    /// Combined rotate-read pass accounting: `cycles` maxed (shards
+    /// rotate concurrently), the activity fields summed.
+    pub report: BatchReport,
+    /// Banks holding at least one enabled row, across all shards.
+    pub banks_active: usize,
+    /// Modeled cost: energy summed over shards, latency maxed.
+    pub cost: Cost,
+    /// Per-shard commit sequence the query observed: the value
+    /// reflects every commit through `shard_seqs[s]` on shard `s` and
+    /// none after — read-your-writes, extended to reductions.
+    pub shard_seqs: Vec<u64>,
+}
+
+impl QueryTicket {
+    /// Block until every shard answered, then combine the partials
+    /// ([`Reduction::combine`] on values; energy summed, latency and
+    /// cycles maxed).
+    pub fn wait(self) -> Result<QueryResult> {
+        let QueryTicket { red, q, parts } = self;
+        let mut value = red.identity(q);
+        let mut report = BatchReport::default();
+        let mut banks_active = 0usize;
+        let mut cost = Cost::default();
+        let mut shard_seqs = Vec::with_capacity(parts.len());
+        for (shard, rx) in parts.into_iter().enumerate() {
+            let part = rx.recv().map_err(|_| {
+                anyhow!("engine shard {shard} stopped before answering the query")
+            })??;
+            value = red.combine(value, part.outcome.value);
+            report.cycles = report.cycles.max(part.outcome.report.cycles);
+            report.rows_active += part.outcome.report.rows_active;
+            report.cell_toggles += part.outcome.report.cell_toggles;
+            report.alu_evals += part.outcome.report.alu_evals;
+            banks_active += part.outcome.banks_active;
+            cost.energy_fj += part.outcome.cost.energy_fj;
+            cost.latency_ns = cost.latency_ns.max(part.outcome.cost.latency_ns);
+            shard_seqs.push(part.commit_seq);
+        }
+        Ok(QueryResult { value, report, banks_active, cost, shard_seqs })
+    }
 }
 
 struct ShardHandle {
@@ -737,6 +810,33 @@ impl UpdateEngine {
         rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
     }
 
+    /// Submit one in-array reduction, fanned out to every shard as a
+    /// shard-local spec ([`crate::query::shard_specs`]). Each shard
+    /// seals and applies its open batch before answering, so the
+    /// result reflects exactly the requests admitted to each shard
+    /// before the query — a query ticketed after a commit's ticket
+    /// resolved is guaranteed to observe that commit. The observed
+    /// per-shard `commit_seq`s ride the [`QueryResult`].
+    pub fn submit_query(&self, spec: &QuerySpec) -> Result<QueryTicket> {
+        spec.validate(self.cfg.rows, self.cfg.q)?;
+        let locals = shard_specs(spec, self.cfg.rows, self.cfg.shards)?;
+        let mut parts = Vec::with_capacity(self.cfg.shards);
+        for (shard, local) in locals.into_iter().enumerate() {
+            let (tx, rx) = mpsc::sync_channel(1);
+            self.shards[shard]
+                .tx
+                .send(Command::Query(local, tx))
+                .map_err(|_| anyhow!("engine is shut down"))?;
+            parts.push(rx);
+        }
+        Ok(QueryTicket { red: spec.red.clone(), q: self.cfg.q, parts })
+    }
+
+    /// [`Self::submit_query`] + [`QueryTicket::wait`] in one call.
+    pub fn query(&self, spec: &QuerySpec) -> Result<QueryResult> {
+        self.submit_query(spec)?.wait()
+    }
+
     /// Which shard owns a logical row (for targeting
     /// [`Self::drain_shard`] / [`Self::wait_seq`]).
     pub fn shard_of(&self, row: usize) -> Result<usize> {
@@ -899,6 +999,7 @@ impl UpdateEngine {
             backend: self.backend_name.get().copied().unwrap_or("unknown"),
             queue_depth: shards.iter().map(|s| s.queue_depth).sum(),
             tickets_resolved: shards.iter().map(|s| s.tickets_resolved).sum(),
+            queries: shards.iter().map(|s| s.queries).sum(),
             shards,
         }
     }
@@ -1167,6 +1268,25 @@ impl ShardWorker<'_> {
                     if let Some(e) = fatal {
                         return Err(e);
                     }
+                }
+                Command::Query(spec, reply) => {
+                    // A query is sequenced against the shard's commit
+                    // stream: seal and apply the open batch (if any)
+                    // so the answer reflects every request admitted
+                    // before it, then stamp the observed commit_seq.
+                    if self.batcher.pending_rows() > 0 {
+                        self.flush(SealReason::Forced)?;
+                        self.deadline = None;
+                    }
+                    let backend = &mut self.backend;
+                    let out = shard_counters.query_wall.time(|| backend.query(&spec));
+                    Counters::inc(&shard_counters.queries, 1);
+                    // A query error (unsupported backend, bad local
+                    // spec) fails the caller, not the shard.
+                    let _ = reply.send(out.map(|outcome| ShardQueryPart {
+                        outcome,
+                        commit_seq: self.next_seq - 1,
+                    }));
                 }
                 Command::Drain(reply) => {
                     self.flush(SealReason::Forced)?;
@@ -1801,6 +1921,76 @@ mod tests {
         assert_eq!(s.rejected, rejected);
         assert_eq!(s.submitted, 10_000);
         e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn query_observes_pending_updates_and_stamps_seqs() {
+        use crate::query::Reduction;
+        let mut cfg = EngineConfig::sharded(64, 16, 2);
+        cfg.seal_at_rows = None;
+        cfg.seal_deadline = Duration::from_secs(3600); // only forced seals
+        let e = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+        })
+        .unwrap();
+        e.submit_blocking(UpdateRequest::add(0, 5)).unwrap(); // shard 0
+        e.submit_blocking(UpdateRequest::add(1, 7)).unwrap(); // shard 1
+        let r = e.query(&QuerySpec::all(Reduction::Sum)).unwrap();
+        // The query sealed both open batches: the sum reflects both
+        // pending updates and each shard stamps commit_seq 1.
+        assert_eq!(r.value, 12);
+        assert_eq!(r.shard_seqs, vec![1, 1]);
+        assert_eq!(r.report.rows_active, 64);
+        assert!(r.cost.energy_fj > 0.0);
+        // A second identical query finds nothing new to seal.
+        let r2 = e.query(&QuerySpec::all(Reduction::Sum)).unwrap();
+        assert_eq!(r2.value, 12);
+        assert_eq!(r2.shard_seqs, vec![1, 1]);
+        let s = e.stats();
+        assert_eq!(s.queries, 4, "two engine queries × two shards");
+        assert!(s.shards.iter().all(|sc| sc.queries == 2));
+        assert!(s.shards.iter().all(|sc| sc.query_wall.count == 2));
+        // Queries mint no commits and fold nothing into the update
+        // energy account beyond the two seals they forced.
+        assert_eq!(s.batches, 2);
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn query_matches_scalar_oracle_across_shard_counts() {
+        use crate::query::{seeded_mask, Reduction};
+        let rows = 256;
+        let q = 16;
+        let mut rng = Rng::new(4242);
+        let updates: Vec<(usize, u32)> = (0..2000)
+            .map(|_| (rng.below(rows as u64) as usize, rng.below(1 << q) as u32))
+            .collect();
+        let mut expect = vec![0u32; rows];
+        for &(row, v) in &updates {
+            expect[row] = bits::add_mod(expect[row], v, q);
+        }
+        let spec = QuerySpec::masked(
+            Reduction::RangeCount { lo: 1, hi: 40_000 },
+            seeded_mask(3, 70, rows),
+        );
+        let (want, _) = crate::query::scalar_reduce(&spec, &expect, q).unwrap();
+        let mut results = Vec::new();
+        for shards in [1usize, 2, 4, 8] {
+            let e = sharded_engine(rows, q, shards);
+            for &(row, v) in &updates {
+                e.submit_blocking(UpdateRequest::add(row, v)).unwrap();
+            }
+            let r = e.query(&spec).unwrap();
+            assert_eq!(r.value, want, "shards = {shards}");
+            results.push(r);
+            e.shutdown().unwrap();
+        }
+        // Sharding must not move the combined pass accounting (the
+        // modeled cost legitimately differs: shard slices bank
+        // differently — e.g. 64-row banks at 4 shards).
+        for r in &results[1..] {
+            assert_eq!(r.report, results[0].report);
+        }
     }
 
     #[test]

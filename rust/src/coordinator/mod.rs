@@ -15,7 +15,8 @@
 //! - [`backend`] — behavioural / bit-plane / XLA-PJRT / digital-baseline
 //!   executors (fidelity tier selectable per shard)
 //! - [`engine`] — shard workers, seal policy, backpressure, commit
-//!   sequencing (`wait_seq`, `drain_shard`), stats
+//!   sequencing (`wait_seq`, `drain_shard`), in-array queries
+//!   (`submit_query`, sequenced against each shard's commits), stats
 
 pub mod backend;
 pub mod bank;
@@ -30,6 +31,6 @@ pub use bank::{BankApply, BankSet};
 pub use batcher::{Batch, Batcher, SealReason};
 pub use engine::{
     BackendFactory, CommitListener, EngineBusy, EngineConfig, EngineMetrics, EngineStats,
-    ShardPlan, UpdateEngine,
+    QueryResult, QueryTicket, ShardPlan, UpdateEngine,
 };
 pub use request::{ticket, BatchKind, Commit, Ticket, TicketNotifier, UpdateOp, UpdateRequest};

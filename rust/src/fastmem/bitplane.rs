@@ -126,6 +126,18 @@ impl BitPlaneArray {
         self.valid.clone()
     }
 
+    /// Borrow bit-plane `t` of segment `seg` (lane words, bit `j` of
+    /// lane `l` = row `64·l + j`'s bit `t`). Bits beyond the row count
+    /// in the partial last lane are always zero (every mutation masks
+    /// with the validity lanes), so plane-wise consumers — the
+    /// [`crate::query`] reduction kernels and their closed-form
+    /// rotate-read cost accounting (`cell_toggles = 2·w·Σ circular
+    /// transitions`, derived from plane popcounts; see that module's
+    /// docs) — can popcount lanes directly.
+    pub fn plane(&self, seg: usize, t: usize) -> &[u64] {
+        &self.segs[seg].planes[t]
+    }
+
     /// Total cell toggles accounted by plane batch ops.
     pub fn toggles(&self) -> u64 {
         self.toggles

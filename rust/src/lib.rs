@@ -32,6 +32,12 @@
 //!   sparse update streams into fully-concurrent FAST batch ops
 //!   without serializing them behind one worker — a request/response
 //!   pipeline, not fire-and-forget.
+//! - [`query`] — the in-array query engine: batch reductions
+//!   (`popcount`/`sum`/`min`/`max`/`range_count`/masked `dot`)
+//!   executed plane-wise on the bit-plane tier and as scalar
+//!   references on every other backend, with the same
+//!   `cell_toggles`/`alu_evals` closed-form accounting as updates and
+//!   engine-level `submit_query` sequenced against per-shard commits.
 //! - [`serve`] — the `fast serve` service front-end: the std-only
 //!   `fast-serve-v1` line protocol (TCP multi-client or stdio)
 //!   speaking `fast-trace-v1` events on the wire, with per-connection
@@ -106,6 +112,7 @@ pub mod energy;
 pub mod experiments;
 pub mod fastmem;
 pub mod metrics;
+pub mod query;
 pub mod runtime;
 pub mod serve;
 pub mod timing;

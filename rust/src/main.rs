@@ -21,6 +21,7 @@ use fast_sram::experiments::{
     apps_bench, fig10, fig11, fig12, fig13, fig14, table1, waveforms, weight_update,
 };
 use fast_sram::metrics::render_table;
+use fast_sram::query;
 use fast_sram::runtime::{default_artifact_dir, validate, Runtime};
 use fast_sram::serve;
 use fast_sram::Result;
@@ -40,6 +41,7 @@ fn main() -> Result<()> {
         Some("trace") => cmd_trace(&args),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("query") => cmd_query(&args),
         Some("wal") => cmd_wal(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
@@ -440,11 +442,24 @@ fn cmd_client(args: &Args) -> Result<()> {
         other => bail!("unknown mode {other:?} (sub|cmt)"),
     };
     let want_digest = args.get_bool("digest");
+    let query = args.get("query");
+    let expect = match args.get("expect") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--expect expects an integer, got {v:?}"))?,
+        ),
+    };
+    if expect.is_some() && query.is_none() {
+        bail!("--expect requires --query");
+    }
     let report = serve::run_client(
         &addr,
         trace.as_ref(),
         mode,
         want_digest,
+        query,
+        expect,
         args.get_bool("shutdown"),
     )?;
     match report.digest {
@@ -456,12 +471,83 @@ fn cmd_client(args: &Args) -> Result<()> {
         None if want_digest => bail!("server never returned the requested digest"),
         None => {}
     }
+    if let Some(v) = report.query_value {
+        // run_client already verified it against --expect or the trace
+        // oracle; print the answer for scripted callers.
+        eprintln!("query verified: value {v}");
+    }
     eprintln!(
         "client done: {} event(s) acked, {} busy retr{}",
         report.acked,
         report.busy_retries,
         if report.busy_retries == 1 { "y" } else { "ies" }
     );
+    Ok(())
+}
+
+/// `fast query` — stream a workload into the engine, then run one
+/// in-array reduction over the committed state and print its value
+/// with the plane-wise cost accounting. `--verify` re-runs the
+/// reduction on a host-side scalar oracle over the trace's reference
+/// state and fails on any value or accounting divergence.
+fn cmd_query(args: &Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let cfg = engine.config().clone();
+    // Workload: a recorded fast-trace-v1 file, or a seeded uniform
+    // stream over the engine's shape.
+    let trace = match args.get("in") {
+        Some(path) => Trace::load(path)?,
+        None => fast_sram::apps::trace::uniform_trace(
+            cfg.rows,
+            cfg.q,
+            args.get_usize("updates", 5000)?,
+            args.get_u64("seed", 66)?,
+        ),
+    };
+    trace.replay(&engine)?;
+
+    let tokens: Vec<&str> = args.positional.iter().map(String::as_str).collect();
+    let spec = query::parse_spec(&tokens, cfg.rows, cfg.q)?;
+    let r = engine.query(&spec)?;
+    engine.shutdown()?;
+
+    let verified = if args.get_bool("verify") {
+        let (want, report) = query::scalar_reduce(&spec, &trace.reference_state(), cfg.q)?;
+        anyhow::ensure!(
+            r.value == want,
+            "query mismatch: engine answered {}, host oracle says {want}",
+            r.value
+        );
+        anyhow::ensure!(
+            r.report == report,
+            "accounting mismatch: engine reported {:?}, host oracle derived {report:?}",
+            r.report
+        );
+        true
+    } else {
+        false
+    };
+
+    let seqs: Vec<String> = r.shard_seqs.iter().map(u64::to_string).collect();
+    let mut rows_txt = vec![
+        ("reduction".to_string(), spec.red.name().to_string()),
+        ("value".to_string(), format!("{}", r.value)),
+        ("rows reduced".to_string(), format!("{}", r.report.rows_active)),
+        ("shift cycles".to_string(), format!("{}", r.report.cycles)),
+        ("cell toggles".to_string(), format!("{}", r.report.cell_toggles)),
+        ("ALU evaluations".to_string(), format!("{}", r.report.alu_evals)),
+        ("banks active".to_string(), format!("{}", r.banks_active)),
+        ("modeled energy".to_string(), format!("{:.3} pJ", r.cost.energy_fj / 1000.0)),
+        ("modeled latency".to_string(), format!("{:.3} ns", r.cost.latency_ns)),
+        ("observed commit seqs".to_string(), seqs.join(",")),
+    ];
+    if verified {
+        rows_txt.push((
+            "verified".to_string(),
+            "value and accounting match the host scalar oracle".to_string(),
+        ));
+    }
+    print!("{}", render_table("in-array query", &rows_txt));
     Ok(())
 }
 

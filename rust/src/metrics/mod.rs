@@ -105,6 +105,10 @@ pub struct ShardCounters {
     pub commit_seq: AtomicU64,
     /// Completion tickets resolved by this shard's worker.
     pub tickets_resolved: AtomicU64,
+    /// In-array queries this shard's worker answered.
+    pub queries: AtomicU64,
+    /// Wall-clock query execution latency (one sample per query).
+    pub query_wall: LatencyRecorder,
     /// Submit→ticket-resolve latency, wall-clock (one sample per
     /// resolved ticket).
     pub commit_wall: LatencyRecorder,
@@ -154,6 +158,8 @@ impl ShardCounters {
             queue_high_water: Counters::get(&self.queue_high_water),
             commit_seq: Counters::get(&self.commit_seq),
             tickets_resolved: Counters::get(&self.tickets_resolved),
+            queries: Counters::get(&self.queries),
+            query_wall: self.query_wall.summary(),
             commit_wall: self.commit_wall.summary(),
             commit_modeled: self.commit_modeled.summary(),
             wal_records: Counters::get(&self.wal_records),
@@ -180,6 +186,10 @@ pub struct ShardSnapshot {
     pub queue_high_water: u64,
     pub commit_seq: u64,
     pub tickets_resolved: u64,
+    /// In-array queries answered by this shard.
+    pub queries: u64,
+    /// Query execution wall-clock latency (p50/p95/p99).
+    pub query_wall: LatencySummary,
     /// Submit→ticket-resolve wall-clock latency (p50/p95/p99).
     pub commit_wall: LatencySummary,
     /// Modeled commit latency distribution (p50/p95/p99).
@@ -326,9 +336,13 @@ mod tests {
         s.commit_modeled.record_ns(20);
         s.commit_seq.store(7, Ordering::Relaxed);
         Counters::inc(&s.tickets_resolved, 2);
+        Counters::inc(&s.queries, 3);
+        s.query_wall.record_ns(400);
         let snap = s.snapshot();
         assert_eq!(snap.commit_seq, 7);
         assert_eq!(snap.tickets_resolved, 2);
+        assert_eq!(snap.queries, 3);
+        assert_eq!(snap.query_wall.count, 1);
         assert_eq!(snap.commit_wall.count, 2);
         assert!(snap.commit_wall.p50_ns >= 1_000);
         assert!(snap.commit_wall.p95_ns >= snap.commit_wall.p50_ns);

@@ -1,0 +1,734 @@
+//! In-array query engine: batch reductions over the row space.
+//!
+//! The CiM literature around FAST is mostly about *computed reads* —
+//! reductions evaluated inside the array rather than row-by-row over a
+//! conventional port. This module adds that layer: `popcount`, `min`,
+//! `max`, `range_count(lo, hi)`, `sum` and a masked `dot(broadcast_vec)`
+//! over an enabled-row lane mask, each executable two ways:
+//!
+//! - **plane-wise** ([`plane_reduce`]) on the bit-plane tier: the
+//!   reduction is evaluated from the bit planes directly (`cnt(·)` is
+//!   `u64::count_ones` over lane words), touching `O(width · rows/64)`
+//!   machine words instead of `O(rows)` decoded values;
+//! - **scalar** ([`scalar_reduce`]) on the phase/word tiers and the
+//!   digital baseline: one decoded word per row through the
+//!   non-counting peek path, reduced on the host.
+//!
+//! Both paths return the same value AND the same [`BatchReport`]
+//! accounting bit for bit — the differential property the query test
+//! net (`rust/tests/integration_query.rs`) enforces across all four
+//! backends against an independent host oracle.
+//!
+//! ## Cost closed form (documented like `bitplane.rs` does for updates)
+//!
+//! A reduction is one **non-destructive rotate-read pass**: every
+//! enabled row circulates its `w`-bit segment once through the row ALU
+//! (`w` shift cycles), the sense path taps the stream, and after `w`
+//! cycles each cell holds its original bit again. Per enabled row `r`
+//! with bits `b_0..b_{w-1}`, the cell at position `j` takes the values
+//! `b_j, b_{j+1}, …` wrapping around — the full *circular* sequence —
+//! so over the pass it toggles once per unequal adjacent pair in that
+//! circular sequence: `T_r = Σ_j [b_j != b_{(j+1) mod w}]`, the same
+//! count for every one of the `w` cells. With the update model's
+//! factor 2 per toggle event (master+slave latch of the shift cell):
+//!
+//! ```text
+//! cell_toggles = 2 · w · Σ_{enabled r} T_r
+//!              = 2 · w · [ Σ_{j=0}^{w-2} cnt(V_j ⊕ V_{j+1})
+//!                          + cnt(V_{w-1} ⊕ V_0) ]          (masked)
+//! ```
+//!
+//! where `V_j` is bit-plane `j` and `cnt` the masked popcount — a
+//! closed form from plane popcounts on the bit-plane tier, and the
+//! per-row circular-transition count `T_r` on the scalar tiers, so the
+//! two paths agree exactly. The other fields:
+//!
+//! ```text
+//! cycles     = w                       (one rotation)
+//! rows_active = |enabled rows|
+//! alu_evals  = streams · w · |enabled| (streams = 2 for dot: the
+//!                                       broadcast operand is a second
+//!                                       bit stream through the ALU;
+//!                                       1 for everything else)
+//! ```
+//!
+//! Modeled energy mirrors the update path: each backend charges one
+//! `FastModel::batch_op(rows_per_bank, q)` per bank containing an
+//! enabled row (energy summed, latency maxed — banks are independent
+//! arrays), so the engine's energy story extends to analytics with the
+//! same exact cross-tier equality the update path has.
+
+use anyhow::{anyhow, bail, ensure};
+
+use crate::energy::{Cost, FastModel};
+use crate::fastmem::{BatchReport, BitPlaneArray};
+use crate::util::bits;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// One reduction over the (masked) row space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reduction {
+    /// Total set bits over the enabled rows' segments.
+    Popcount,
+    /// Sum of the enabled rows' values (mod 2^64).
+    Sum,
+    /// Minimum enabled value; `mask(w)` when no row is enabled.
+    Min,
+    /// Maximum enabled value; `0` when no row is enabled.
+    Max,
+    /// Rows whose value lies in `[lo, hi]` (inclusive).
+    RangeCount { lo: u32, hi: u32 },
+    /// `Σ value[r] · vec[r]` over enabled rows (mod 2^64). One vector
+    /// element per logical row, broadcast from outside the array.
+    Dot { vec: Vec<u32> },
+}
+
+impl Reduction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Reduction::Popcount => "popcount",
+            Reduction::Sum => "sum",
+            Reduction::Min => "min",
+            Reduction::Max => "max",
+            Reduction::RangeCount { .. } => "range",
+            Reduction::Dot { .. } => "dot",
+        }
+    }
+
+    /// Identity element for [`Self::combine`] at width `w`.
+    pub fn identity(&self, w: usize) -> u64 {
+        match self {
+            Reduction::Min => u64::from(bits::mask(w)),
+            _ => 0,
+        }
+    }
+
+    /// Associative cross-shard (and cross-bank) combination of partial
+    /// results: add for the counting/summing reductions, min/max for
+    /// the order statistics.
+    pub fn combine(&self, a: u64, b: u64) -> u64 {
+        match self {
+            Reduction::Min => a.min(b),
+            Reduction::Max => a.max(b),
+            _ => a.wrapping_add(b),
+        }
+    }
+
+    /// Bit streams through the row ALU during the pass (`alu_evals`
+    /// multiplier): 2 for dot (row + broadcast operand), 1 otherwise.
+    pub fn streams(&self) -> u64 {
+        match self {
+            Reduction::Dot { .. } => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// A query: a reduction plus an optional enabled-row lane mask
+/// (64 rows per `u64`, LSB-first — the [`BitPlaneArray`] lane layout).
+/// `mask: None` enables every row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuerySpec {
+    pub red: Reduction,
+    pub mask: Option<Vec<u64>>,
+}
+
+impl QuerySpec {
+    /// Query over every row.
+    pub fn all(red: Reduction) -> Self {
+        QuerySpec { red, mask: None }
+    }
+
+    /// Query over the rows enabled in `mask`.
+    pub fn masked(red: Reduction, mask: Vec<u64>) -> Self {
+        QuerySpec { red, mask: Some(mask) }
+    }
+
+    /// Shape/range validation against a `rows` × `w` target.
+    pub fn validate(&self, rows: usize, w: usize) -> Result<()> {
+        ensure!(rows >= 1, "query target has no rows");
+        ensure!((1..=32).contains(&w), "query width {w} out of 1..=32");
+        if let Some(m) = &self.mask {
+            ensure!(
+                m.len() == rows.div_ceil(64),
+                "mask has {} lanes, rows {} need {}",
+                m.len(),
+                rows,
+                rows.div_ceil(64)
+            );
+        }
+        match &self.red {
+            Reduction::RangeCount { lo, hi } => {
+                ensure!(lo <= hi, "range lo {lo} > hi {hi}");
+                ensure!(
+                    *hi <= bits::mask(w),
+                    "range hi {hi} exceeds {w}-bit max {}",
+                    bits::mask(w)
+                );
+            }
+            Reduction::Dot { vec } => {
+                ensure!(
+                    vec.len() == rows,
+                    "dot vector has {} elements, target has {rows} rows",
+                    vec.len()
+                );
+                for (r, &x) in vec.iter().enumerate() {
+                    ensure!(
+                        x <= bits::mask(w),
+                        "dot vector element {x} at row {r} exceeds {w}-bit max"
+                    );
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Is row `r` enabled?
+    pub fn enabled(&self, r: usize) -> bool {
+        match &self.mask {
+            None => true,
+            Some(m) => (m[r / 64] >> (r % 64)) & 1 == 1,
+        }
+    }
+
+    /// Materialized lane mask: the query mask intersected with the
+    /// `rows`-row validity mask (partial last lane zeroed).
+    pub fn lanes(&self, rows: usize) -> Vec<u64> {
+        let n = rows.div_ceil(64);
+        let mut out = vec![u64::MAX; n];
+        if rows % 64 != 0 {
+            out[n - 1] = (1u64 << (rows % 64)) - 1;
+        }
+        if let Some(m) = &self.mask {
+            for (o, &mm) in out.iter_mut().zip(m) {
+                *o &= mm;
+            }
+        }
+        out
+    }
+}
+
+/// Circular transition count of the `w`-bit value `v`: unequal
+/// adjacent pairs in `b_0 b_1 … b_{w-1} b_0` — the per-row toggle term
+/// of the query cost closed form (see module docs).
+pub fn circular_transitions(v: u32, w: usize) -> u64 {
+    let m = bits::mask(w);
+    let rot = ((v << 1) | (v >> (w - 1))) & m;
+    u64::from(((v ^ rot) & m).count_ones())
+}
+
+/// Scalar reference executor: one decoded `w`-bit word per row (from a
+/// non-counting peek path), reduced on the host with the same value
+/// semantics and the same closed-form accounting as [`plane_reduce`].
+pub fn scalar_reduce(spec: &QuerySpec, values: &[u32], w: usize) -> Result<(u64, BatchReport)> {
+    spec.validate(values.len(), w)?;
+    let mut value = spec.red.identity(w);
+    let mut enabled = 0u64;
+    let mut trans = 0u64;
+    for (r, &v) in values.iter().enumerate() {
+        if !spec.enabled(r) {
+            continue;
+        }
+        enabled += 1;
+        trans += circular_transitions(v, w);
+        let term = match &spec.red {
+            Reduction::Popcount => u64::from(v.count_ones()),
+            Reduction::Sum => u64::from(v),
+            Reduction::Min | Reduction::Max => u64::from(v),
+            Reduction::RangeCount { lo, hi } => u64::from(*lo <= v && v <= *hi),
+            Reduction::Dot { vec } => u64::from(v).wrapping_mul(u64::from(vec[r])),
+        };
+        value = spec.red.combine(value, term);
+    }
+    Ok((value, pass_report(&spec.red, w, enabled, trans)))
+}
+
+/// Plane-wise executor on a [`BitPlaneArray`] segment: values and
+/// accounting straight from the planes, no per-row decode. Read-only —
+/// the array state and its lifetime toggle counter are untouched (a
+/// rotate-read pass restores every cell; the pass's activity is
+/// reported in the returned [`BatchReport`], not accumulated).
+pub fn plane_reduce(
+    arr: &BitPlaneArray,
+    seg: usize,
+    spec: &QuerySpec,
+) -> Result<(u64, BatchReport)> {
+    let widths = arr.segment_widths();
+    ensure!(seg < widths.len(), "segment {seg} out of range");
+    let w = widths[seg];
+    spec.validate(arr.rows(), w)?;
+    let enable = spec.lanes(arr.rows());
+    let lanes = arr.lanes();
+    let cnt = |plane: &[u64]| -> u64 {
+        plane
+            .iter()
+            .zip(&enable)
+            .map(|(&p, &e)| u64::from((p & e).count_ones()))
+            .sum()
+    };
+    let enabled: u64 = enable.iter().map(|e| u64::from(e.count_ones())).sum();
+
+    let value = match &spec.red {
+        Reduction::Popcount => {
+            (0..w).map(|t| cnt(arr.plane(seg, t))).sum()
+        }
+        Reduction::Sum => (0..w).fold(0u64, |acc, t| {
+            acc.wrapping_add(cnt(arr.plane(seg, t)).wrapping_mul(1u64 << t))
+        }),
+        Reduction::Min => {
+            // MSB-first candidate filtering: keep the rows that can
+            // still be minimal; a bit of the result is 0 iff some
+            // candidate has a 0 there.
+            let mut cand = enable.clone();
+            let mut val = 0u64;
+            for t in (0..w).rev() {
+                let plane = arr.plane(seg, t);
+                let zeros: Vec<u64> =
+                    cand.iter().zip(plane).map(|(&c, &p)| c & !p).collect();
+                if zeros.iter().any(|&z| z != 0) {
+                    cand = zeros;
+                } else {
+                    val |= 1u64 << t;
+                }
+            }
+            if enabled == 0 { u64::from(bits::mask(w)) } else { val }
+        }
+        Reduction::Max => {
+            let mut cand = enable.clone();
+            let mut val = 0u64;
+            for t in (0..w).rev() {
+                let plane = arr.plane(seg, t);
+                let ones: Vec<u64> =
+                    cand.iter().zip(plane).map(|(&c, &p)| c & p).collect();
+                if ones.iter().any(|&o| o != 0) {
+                    cand = ones;
+                    val |= 1u64 << t;
+                }
+            }
+            val
+        }
+        Reduction::RangeCount { lo, hi } => {
+            let le = |bound: u32| -> u64 {
+                // Bit-serial threshold compare, MSB first: `lt` holds
+                // rows already decided `< bound`, `eq` the
+                // equal-so-far rows.
+                let mut lt = vec![0u64; lanes];
+                let mut eq = enable.clone();
+                for t in (0..w).rev() {
+                    let plane = arr.plane(seg, t);
+                    if (bound >> t) & 1 == 1 {
+                        for ((lt_l, eq_l), &p) in
+                            lt.iter_mut().zip(eq.iter_mut()).zip(plane)
+                        {
+                            *lt_l |= *eq_l & !p;
+                            *eq_l &= p;
+                        }
+                    } else {
+                        for (eq_l, &p) in eq.iter_mut().zip(plane) {
+                            *eq_l &= !p;
+                        }
+                    }
+                }
+                lt.iter()
+                    .chain(eq.iter())
+                    .map(|&x| u64::from(x.count_ones()))
+                    .sum()
+            };
+            le(*hi) - if *lo == 0 { 0 } else { le(*lo - 1) }
+        }
+        Reduction::Dot { vec } => {
+            // Transpose the broadcast vector into planes one 64-row
+            // block at a time, then cross the plane pairs:
+            // Σ_{t,u} 2^(t+u) · cnt(V_t ∧ X_u ∧ enable)  (mod 2^64).
+            let mut val = 0u64;
+            let mut block = [0u64; 64];
+            for l in 0..lanes {
+                for (j, b) in block.iter_mut().enumerate() {
+                    let r = 64 * l + j;
+                    *b = if r < vec.len() { u64::from(vec[r]) } else { 0 };
+                }
+                bits::transpose64(&mut block);
+                for t in 0..w {
+                    let v_lane = arr.plane(seg, t)[l] & enable[l];
+                    if v_lane == 0 {
+                        continue;
+                    }
+                    for (u, &x_lane) in block.iter().enumerate().take(w) {
+                        let c = u64::from((v_lane & x_lane).count_ones());
+                        val = val
+                            .wrapping_add(c.wrapping_mul(1u64.wrapping_shl((t + u) as u32)));
+                    }
+                }
+            }
+            val
+        }
+    };
+
+    // Toggle closed form from plane popcounts: circular transitions
+    // summed over enabled rows (see module docs).
+    let mut trans = 0u64;
+    for j in 0..w {
+        let a = arr.plane(seg, j);
+        let b = arr.plane(seg, (j + 1) % w);
+        trans += a
+            .iter()
+            .zip(b)
+            .zip(&enable)
+            .map(|((&x, &y), &e)| u64::from(((x ^ y) & e).count_ones()))
+            .sum::<u64>();
+    }
+    Ok((value, pass_report(&spec.red, w, enabled, trans)))
+}
+
+/// The rotate-read pass accounting shared by both executors.
+fn pass_report(red: &Reduction, w: usize, enabled: u64, trans: u64) -> BatchReport {
+    BatchReport {
+        cycles: w as u64,
+        rows_active: enabled,
+        cell_toggles: 2 * w as u64 * trans,
+        alu_evals: red.streams() * w as u64 * enabled,
+    }
+}
+
+/// Per-active-bank modeled cost, identical to the update path's
+/// accounting (`BankSet::apply` / `BitPlaneBackend::apply`): one
+/// `batch_op(rows_per_bank, q)` per bank containing an enabled row,
+/// energy summed, latency maxed. Returns `(banks_active, cost)`.
+pub fn banked_cost(
+    model: &FastModel,
+    spec: &QuerySpec,
+    rows: usize,
+    rows_per_bank: usize,
+    q: usize,
+) -> (usize, Cost) {
+    let banks = rows.div_ceil(rows_per_bank);
+    let mut banks_active = 0usize;
+    let mut cost = Cost::default();
+    for b in 0..banks {
+        let lo = b * rows_per_bank;
+        let hi = rows.min(lo + rows_per_bank);
+        if (lo..hi).any(|r| spec.enabled(r)) {
+            banks_active += 1;
+            let c = model.batch_op(rows_per_bank, q);
+            cost.energy_fj += c.energy_fj;
+            cost.latency_ns = cost.latency_ns.max(c.latency_ns);
+        }
+    }
+    (banks_active, cost)
+}
+
+/// What one backend (or one shard) answers for a query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryOutcome {
+    /// The reduction's value (see [`Reduction`] for conventions).
+    pub value: u64,
+    /// Rotate-read pass accounting (cost closed form, module docs).
+    pub report: BatchReport,
+    /// Banks that held at least one enabled row.
+    pub banks_active: usize,
+    /// Modeled cost (energy summed over banks, latency maxed).
+    pub cost: Cost,
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic wire helpers: seeded broadcast vectors and row masks,
+// shared by `fast query`, the serve `QRY` verb and `fast client` so
+// every side can regenerate the same operands from compact tokens.
+// ---------------------------------------------------------------------------
+
+/// Seeded broadcast vector for `dot`: one `q`-bit element per row.
+pub fn broadcast_vec(seed: u64, rows: usize, q: usize) -> Vec<u32> {
+    let mut rng = Rng::new(seed ^ 0xD07_B04D);
+    (0..rows).map(|_| rng.below(1u64 << q) as u32).collect()
+}
+
+/// Seeded row mask: each row enabled with probability `pct`/100.
+pub fn seeded_mask(seed: u64, pct: u32, rows: usize) -> Vec<u64> {
+    let mut rng = Rng::new(seed ^ 0x3A5_CAFE);
+    let mut mask = vec![0u64; rows.div_ceil(64)];
+    for r in 0..rows {
+        if rng.below(100) < u64::from(pct.min(100)) {
+            mask[r / 64] |= 1u64 << (r % 64);
+        }
+    }
+    mask
+}
+
+/// Parse the token grammar shared by `QRY` lines and `fast query
+/// --red`:
+///
+/// ```text
+/// popcount | sum | min | max | range <lo> <hi> | dot <seed>
+///     [mask <seed> <pct>]
+/// ```
+///
+/// `rows`/`q` size the seeded dot vector and mask.
+pub fn parse_spec(tokens: &[&str], rows: usize, q: usize) -> Result<QuerySpec> {
+    let int = |tok: &str, what: &str| -> Result<u64> {
+        tok.parse::<u64>()
+            .map_err(|_| anyhow!("{what} expects an integer, got {tok:?}"))
+    };
+    let mut it = tokens.iter();
+    let head = it
+        .next()
+        .ok_or_else(|| anyhow!("empty query (try: popcount | sum | min | max | range <lo> <hi> | dot <seed>)"))?;
+    let red = match head.to_ascii_lowercase().as_str() {
+        "popcount" => Reduction::Popcount,
+        "sum" => Reduction::Sum,
+        "min" => Reduction::Min,
+        "max" => Reduction::Max,
+        "range" => {
+            let lo = int(it.next().ok_or_else(|| anyhow!("range needs <lo> <hi>"))?, "range lo")?;
+            let hi = int(it.next().ok_or_else(|| anyhow!("range needs <lo> <hi>"))?, "range hi")?;
+            ensure!(lo <= u64::from(u32::MAX) && hi <= u64::from(u32::MAX), "range bound exceeds u32");
+            Reduction::RangeCount { lo: lo as u32, hi: hi as u32 }
+        }
+        "dot" => {
+            let seed = int(it.next().ok_or_else(|| anyhow!("dot needs <seed>"))?, "dot seed")?;
+            Reduction::Dot { vec: broadcast_vec(seed, rows, q) }
+        }
+        other => bail!("unknown reduction {other:?} (try: popcount | sum | min | max | range <lo> <hi> | dot <seed>)"),
+    };
+    let mask = match it.next() {
+        None => None,
+        Some(tok) if tok.eq_ignore_ascii_case("mask") => {
+            let seed = int(it.next().ok_or_else(|| anyhow!("mask needs <seed> <pct>"))?, "mask seed")?;
+            let pct = int(it.next().ok_or_else(|| anyhow!("mask needs <seed> <pct>"))?, "mask pct")?;
+            ensure!(pct <= 100, "mask pct {pct} exceeds 100");
+            Some(seeded_mask(seed, pct as u32, rows))
+        }
+        Some(other) => bail!("unexpected query token {other:?} (only a trailing `mask <seed> <pct>` is allowed)"),
+    };
+    match it.next() {
+        None => {}
+        Some(t) => bail!("trailing query token {t:?}"),
+    }
+    let spec = QuerySpec { red, mask };
+    spec.validate(rows, q)?;
+    Ok(spec)
+}
+
+/// Slice a logical-row spec into one local spec per shard, following
+/// the engine's route (`shard = row & (shards-1)`, `local = row >>
+/// shard_bits`). Partial results recombine with [`Reduction::combine`].
+pub fn shard_specs(spec: &QuerySpec, rows: usize, shards: usize) -> Result<Vec<QuerySpec>> {
+    ensure!(shards >= 1 && shards.is_power_of_two(), "shards must be a power of two");
+    ensure!(rows % shards == 0, "rows {rows} not divisible by shards {shards}");
+    if shards == 1 {
+        return Ok(vec![spec.clone()]);
+    }
+    let bits = shards.trailing_zeros() as usize;
+    let local_rows = rows >> bits;
+    let lanes = local_rows.div_ceil(64);
+    let mut masks = vec![vec![0u64; lanes]; shards];
+    let mut vecs: Vec<Vec<u32>> = match &spec.red {
+        Reduction::Dot { .. } => vec![vec![0u32; local_rows]; shards],
+        _ => Vec::new(),
+    };
+    for r in 0..rows {
+        let shard = r & (shards - 1);
+        let local = r >> bits;
+        if spec.enabled(r) {
+            masks[shard][local / 64] |= 1u64 << (local % 64);
+        }
+        if let Reduction::Dot { vec } = &spec.red {
+            vecs[shard][local] = vec[r];
+        }
+    }
+    Ok((0..shards)
+        .map(|s| QuerySpec {
+            red: match &spec.red {
+                Reduction::Dot { .. } => Reduction::Dot { vec: std::mem::take(&mut vecs[s]) },
+                other => other.clone(),
+            },
+            mask: Some(std::mem::take(&mut masks[s])),
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::check;
+
+    fn all_reductions(g: &mut crate::util::quickprop::Gen, rows: usize, q: usize) -> Reduction {
+        match g.usize_in(0, 5) {
+            0 => Reduction::Popcount,
+            1 => Reduction::Sum,
+            2 => Reduction::Min,
+            3 => Reduction::Max,
+            4 => {
+                let a = g.u32_any() & bits::mask(q);
+                let b = g.u32_any() & bits::mask(q);
+                Reduction::RangeCount { lo: a.min(b), hi: a.max(b) }
+            }
+            _ => Reduction::Dot { vec: broadcast_vec(g.u64_any(), rows, q) },
+        }
+    }
+
+    /// Independent oracle, written as plainly as possible.
+    fn oracle(spec: &QuerySpec, values: &[u32], w: usize) -> u64 {
+        let enabled: Vec<(usize, u32)> = values
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|&(r, _)| spec.enabled(r))
+            .collect();
+        match &spec.red {
+            Reduction::Popcount => enabled.iter().map(|&(_, v)| u64::from(v.count_ones())).sum(),
+            Reduction::Sum => enabled
+                .iter()
+                .fold(0u64, |a, &(_, v)| a.wrapping_add(u64::from(v))),
+            Reduction::Min => enabled
+                .iter()
+                .map(|&(_, v)| u64::from(v))
+                .min()
+                .unwrap_or(u64::from(bits::mask(w))),
+            Reduction::Max => enabled.iter().map(|&(_, v)| u64::from(v)).max().unwrap_or(0),
+            Reduction::RangeCount { lo, hi } => enabled
+                .iter()
+                .filter(|&&(_, v)| *lo <= v && v <= *hi)
+                .count() as u64,
+            Reduction::Dot { vec } => enabled.iter().fold(0u64, |a, &(r, v)| {
+                a.wrapping_add(u64::from(v).wrapping_mul(u64::from(vec[r])))
+            }),
+        }
+    }
+
+    /// PROPERTY: scalar and plane-wise executors agree with the plain
+    /// oracle on values and with each other on full reports, for
+    /// random rows/widths/masks — and the plane pass is read-only.
+    #[test]
+    fn prop_scalar_and_plane_agree_with_oracle() {
+        check("query executors vs oracle", 40, |g| {
+            let rows = g.usize_in(1, 170);
+            let q = *g.choose(&[1usize, 4, 8, 16, 32]);
+            let values: Vec<u32> =
+                (0..rows).map(|_| g.u32_any() & bits::mask(q)).collect();
+            let spec = if g.bool() {
+                QuerySpec::all(all_reductions(g, rows, q))
+            } else {
+                QuerySpec::masked(
+                    all_reductions(g, rows, q),
+                    seeded_mask(g.u64_any(), g.u32_below(101), rows),
+                )
+            };
+            let mut arr = BitPlaneArray::new(rows, &[q]);
+            arr.fill_from(|r, _| values[r]);
+            let toggles_before = arr.toggles();
+            let (sv, sr) = scalar_reduce(&spec, &values, q).unwrap();
+            let (pv, pr) = plane_reduce(&arr, 0, &spec).unwrap();
+            let mut ok = sv == oracle(&spec, &values, q);
+            ok &= pv == sv && pr == sr;
+            ok &= arr.toggles() == toggles_before;
+            ok &= (0..rows).all(|r| arr.read_word(r, 0) == values[r]);
+            ok
+        });
+    }
+
+    /// PROPERTY: shard-sliced specs recombine to the unsharded result
+    /// for every shard count the engine supports.
+    #[test]
+    fn prop_shard_slicing_recombines() {
+        check("shard slicing", 30, |g| {
+            let shards = *g.choose(&[1usize, 2, 4, 8]);
+            let rows = shards * g.usize_in(1, 3) * 32;
+            let q = *g.choose(&[4usize, 8, 16]);
+            let values: Vec<u32> =
+                (0..rows).map(|_| g.u32_any() & bits::mask(q)).collect();
+            let spec = QuerySpec::masked(
+                all_reductions(g, rows, q),
+                seeded_mask(g.u64_any(), g.u32_below(101), rows),
+            );
+            let (want, wr) = scalar_reduce(&spec, &values, q).unwrap();
+            let bits_n = shards.trailing_zeros() as usize;
+            let locals = shard_specs(&spec, rows, shards).unwrap();
+            let mut got = spec.red.identity(q);
+            let mut report = BatchReport::default();
+            for (s, local) in locals.iter().enumerate() {
+                let lv: Vec<u32> = (0..rows / shards)
+                    .map(|l| values[(l << bits_n) | s])
+                    .collect();
+                let (v, r) = scalar_reduce(local, &lv, q).unwrap();
+                got = spec.red.combine(got, v);
+                report.cycles = report.cycles.max(r.cycles);
+                report.rows_active += r.rows_active;
+                report.cell_toggles += r.cell_toggles;
+                report.alu_evals += r.alu_evals;
+            }
+            got == want
+                && report.rows_active == wr.rows_active
+                && report.cell_toggles == wr.cell_toggles
+                && report.alu_evals == wr.alu_evals
+        });
+    }
+
+    #[test]
+    fn parse_grammar_round_trips() {
+        let rows = 128;
+        let q = 8;
+        let s = parse_spec(&["popcount"], rows, q).unwrap();
+        assert_eq!(s.red, Reduction::Popcount);
+        assert!(s.mask.is_none());
+        let s = parse_spec(&["RANGE", "3", "9"], rows, q).unwrap();
+        assert_eq!(s.red, Reduction::RangeCount { lo: 3, hi: 9 });
+        let s = parse_spec(&["dot", "42", "mask", "7", "50"], rows, q).unwrap();
+        assert_eq!(s.red, Reduction::Dot { vec: broadcast_vec(42, rows, q) });
+        assert_eq!(s.mask, Some(seeded_mask(7, 50, rows)));
+        for bad in [
+            vec![],
+            vec!["median"],
+            vec!["range", "9"],
+            vec!["range", "9", "3"],
+            vec!["range", "3", "9999"],
+            vec!["dot"],
+            vec!["sum", "mask", "7"],
+            vec!["sum", "extra"],
+            vec!["sum", "mask", "7", "50", "extra"],
+        ] {
+            assert!(parse_spec(&bad, rows, q).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn empty_mask_conventions() {
+        let rows = 70;
+        let q = 8;
+        let values = vec![0xABu32 & bits::mask(q); rows];
+        let mask = vec![0u64; rows.div_ceil(64)];
+        for red in [Reduction::Min, Reduction::Max, Reduction::Sum, Reduction::Popcount] {
+            let spec = QuerySpec::masked(red, mask.clone());
+            let (v, r) = scalar_reduce(&spec, &values, q).unwrap();
+            let mut arr = BitPlaneArray::new(rows, &[q]);
+            arr.fill_from(|r2, _| values[r2]);
+            let (pv, pr) = plane_reduce(&arr, 0, &spec).unwrap();
+            assert_eq!(v, pv);
+            assert_eq!(r, pr);
+            assert_eq!(r.rows_active, 0);
+            assert_eq!(r.cell_toggles, 0);
+            match spec.red {
+                Reduction::Min => assert_eq!(v, u64::from(bits::mask(q))),
+                _ => assert_eq!(v, 0),
+            }
+        }
+    }
+
+    #[test]
+    fn banked_cost_matches_update_accounting() {
+        let model = FastModel::default();
+        let spec = QuerySpec::all(Reduction::Sum);
+        let (banks, cost) = banked_cost(&model, &spec, 256, 128, 16);
+        assert_eq!(banks, 2);
+        let one = model.batch_op(128, 16);
+        assert!((cost.energy_fj - 2.0 * one.energy_fj).abs() < 1e-9);
+        assert!((cost.latency_ns - one.latency_ns).abs() < 1e-12);
+        // A mask confined to bank 0 gates bank 1.
+        let mut m = vec![0u64; 4];
+        m[0] = 1;
+        let (banks, cost) = banked_cost(&model, &QuerySpec::masked(Reduction::Sum, m), 256, 128, 16);
+        assert_eq!(banks, 1);
+        assert!((cost.energy_fj - one.energy_fj).abs() < 1e-9);
+    }
+}

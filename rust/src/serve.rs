@@ -31,6 +31,17 @@
 //! DRAIN <shard>         → OK <seq>        (per-shard drain)
 //! DIGEST                → OK <fnv64-hex of the row state snapshot>
 //! DIGEST CRC            → OK <crc32-hex of the row state bytes (LE)>
+//! QRY <reduction>       → OK qry <name> value=.. rows=.. cycles=..
+//!                         toggles=.. alu=.. banks=.. energy_fj=..
+//!                         ns=.. seq=<s0,s1,..>
+//!                       in-array reduction (`popcount | sum | min |
+//!                       max | range <lo> <hi> | dot <seed>`, optional
+//!                       trailing `mask <seed> <pct>` — the
+//!                       `crate::query::parse_spec` grammar). Sequenced
+//!                       against each shard's commits: the value
+//!                       reflects exactly the updates whose acks the
+//!                       client saw before sending the QRY, and the
+//!                       observed per-shard commit seqs are reported.
 //! STATS                 → OK <one-line JSON engine stats>
 //! QUIT                  → OK bye          (closes this connection)
 //! SHUTDOWN              → OK draining     (server drains every shard and exits)
@@ -228,6 +239,31 @@ impl Session {
                     Some(other) => bail!("DIGEST takes no argument or CRC, got {other:?}"),
                     None => format!("OK {:016x}", state_digest(&snap)),
                 }
+            }
+            "QRY" => {
+                let cfg = self.engine.config();
+                let tokens: Vec<&str> = parts.collect();
+                // A malformed line fails here with a typed message and
+                // becomes a single `ERR …` reply via `handle` — the
+                // session never hangs on a bad query.
+                let spec = crate::query::parse_spec(&tokens, cfg.rows, cfg.q)?;
+                let r = self.engine.submit_query(&spec)?.wait()?;
+                let seqs: Vec<String> =
+                    r.shard_seqs.iter().map(u64::to_string).collect();
+                format!(
+                    "OK qry {} value={} rows={} cycles={} toggles={} alu={} \
+                     banks={} energy_fj={:.3} ns={:.3} seq={}",
+                    spec.red.name(),
+                    r.value,
+                    r.report.rows_active,
+                    r.report.cycles,
+                    r.report.cell_toggles,
+                    r.report.alu_evals,
+                    r.banks_active,
+                    r.cost.energy_fj,
+                    r.cost.latency_ns,
+                    seqs.join(",")
+                )
             }
             "STATS" => format!("OK {}", stats_json(&self.engine.stats())),
             "QUIT" => return Ok(Action::Quit("OK bye".to_string())),
@@ -492,18 +528,29 @@ pub struct ClientReport {
     pub acked: u64,
     /// `ERR busy` responses survived by retrying (backpressure).
     pub busy_retries: u64,
+    /// Value the server answered for the `query` spec (if one was sent).
+    pub query_value: Option<u64>,
 }
 
 /// Drive a `fast serve` endpoint: stream a trace's event lines in
 /// lockstep (one request line, one response line), drain, optionally
-/// fetch the state digest, optionally shut the server down. Retries
-/// the initial connect (the CI smoke job races server startup) and
-/// `ERR busy` backpressure responses.
+/// fetch the state digest, optionally run a `QRY` reduction and verify
+/// it, optionally shut the server down. Retries the initial connect
+/// (the CI smoke job races server startup) and `ERR busy` backpressure
+/// responses.
+///
+/// `query` is the reduction spec in CLI grammar (e.g. `"sum"`,
+/// `"range 3 900 mask 7 50"`). The answer is checked against `expect`
+/// when given, otherwise — when a trace was streamed — against a
+/// host-side scalar oracle over the trace's reference state; any
+/// mismatch is a hard error (nonzero `fast client` exit).
 pub fn run_client(
     addr: &str,
     trace: Option<&Trace>,
     mode: Mode,
     want_digest: bool,
+    query: Option<&str>,
+    expect: Option<u64>,
     send_shutdown: bool,
 ) -> Result<ClientReport> {
     let stream = connect_with_retry(addr, Duration::from_secs(10))?;
@@ -583,13 +630,46 @@ pub fn run_client(
         None
     };
 
+    let query_value = if let Some(q) = query {
+        let reply = roundtrip(&format!("QRY {q}"))?;
+        ensure!(reply.starts_with("OK qry "), "QRY failed: {reply}");
+        let value = reply
+            .split_ascii_whitespace()
+            .find_map(|tok| tok.strip_prefix("value="))
+            .ok_or_else(|| anyhow!("QRY reply has no value field: {reply}"))?
+            .parse::<u64>()
+            .with_context(|| format!("parsing QRY value from {reply:?}"))?;
+        // Oracle: an explicit expectation wins; otherwise replay the
+        // trace on the host and reduce its reference state with the
+        // scalar implementation.
+        let want = match (expect, trace) {
+            (Some(w), _) => Some(w),
+            (None, Some(t)) => {
+                let tokens: Vec<&str> = q.split_ascii_whitespace().collect();
+                let spec = crate::query::parse_spec(&tokens, t.rows, t.q)?;
+                let (w, _) = crate::query::scalar_reduce(&spec, &t.reference_state(), t.q)?;
+                Some(w)
+            }
+            (None, None) => None,
+        };
+        if let Some(w) = want {
+            ensure!(
+                value == w,
+                "query mismatch: server answered {value}, oracle says {w} (QRY {q})"
+            );
+        }
+        Some(value)
+    } else {
+        None
+    };
+
     if send_shutdown {
         let reply = roundtrip("SHUTDOWN")?;
         ensure!(reply.starts_with("OK"), "SHUTDOWN failed: {reply}");
     } else {
         let _ = roundtrip("QUIT");
     }
-    Ok(ClientReport { digest, acked, busy_retries })
+    Ok(ClientReport { digest, acked, busy_retries, query_value })
 }
 
 fn connect_with_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
@@ -633,6 +713,7 @@ pub fn stats_json(s: &EngineStats) -> String {
              \"sealed_kind_change\":{},\"sealed_deadline\":{},\"sealed_forced\":{},\
              \"coalesce_hits\":{},\"rows_updated\":{},\"queue_depth\":{},\
              \"queue_high_water\":{},\"commit_seq\":{},\"tickets_resolved\":{},\
+             \"queries\":{},\"query_wall_ns\":{},\
              \"commit_wall_ns\":{},\"commit_modeled_ns\":{},\"wal_records\":{},\
              \"wal_bytes\":{},\"wal_fsyncs\":{},\"wal_rotations\":{},\"wal_fsync_ns\":{}}}",
             sc.requests,
@@ -647,6 +728,8 @@ pub fn stats_json(s: &EngineStats) -> String {
             sc.queue_high_water,
             sc.commit_seq,
             sc.tickets_resolved,
+            sc.queries,
+            latency_json(&sc.query_wall),
             latency_json(&sc.commit_wall),
             latency_json(&sc.commit_modeled),
             sc.wal_records,
@@ -663,8 +746,9 @@ pub fn stats_json(s: &EngineStats) -> String {
         "{{\"backend\":\"{}\",\"submitted\":{},\"completed\":{},\"rejected\":{},\
          \"batches\":{},\"rows_updated\":{},\"rows_per_batch\":{:.2},\
          \"modeled_ns\":{:.1},\"modeled_energy_pj\":{:.3},\"queue_depth\":{},\
-         \"tickets_resolved\":{},\"wal_records\":{wal_records},\"wal_bytes\":{wal_bytes},\
-         \"wal_fsyncs\":{wal_fsyncs},\"apply_wall_ns\":{},\"shards\":[{}]}}",
+         \"tickets_resolved\":{},\"queries\":{},\"wal_records\":{wal_records},\
+         \"wal_bytes\":{wal_bytes},\"wal_fsyncs\":{wal_fsyncs},\
+         \"apply_wall_ns\":{},\"shards\":[{}]}}",
         s.backend,
         s.submitted,
         s.completed,
@@ -676,6 +760,7 @@ pub fn stats_json(s: &EngineStats) -> String {
         s.modeled_energy_pj,
         s.queue_depth,
         s.tickets_resolved,
+        s.queries,
         latency_json(&s.apply_wall),
         shards
     )
@@ -753,6 +838,51 @@ mod tests {
     }
 
     #[test]
+    fn qry_round_trips_and_malformed_lines_get_typed_errors() {
+        let e = engine(64, 8, 2);
+        let mut s = Session::new(Arc::clone(&e));
+        reply(&mut s, "{\"t\":\"w\",\"r\":3,\"v\":7}");
+        reply(&mut s, "{\"t\":\"w\",\"r\":10,\"v\":200}");
+
+        // One reply line per QRY; the value matches a hand computation.
+        let r = reply(&mut s, "QRY sum");
+        assert!(r.starts_with("OK qry sum value=207 "), "{r}");
+        assert!(r.contains(" rows=64 ") && r.contains(" banks="), "{r}");
+        // Two shards → two comma-joined observed commit seqs.
+        let seqs = r.split(" seq=").nth(1).unwrap();
+        assert_eq!(seqs.split(',').count(), 2, "{r}");
+
+        assert!(reply(&mut s, "QRY popcount").contains(" value=6 "));
+        assert!(reply(&mut s, "QRY max").contains(" value=200 "));
+        assert!(reply(&mut s, "QRY range 1 100").contains(" value=1 "));
+        // A 100% mask enables every row: same sum as unmasked.
+        assert!(reply(&mut s, "QRY sum mask 5 100").contains(" value=207 "));
+
+        // Malformed queries answer a single typed ERR line — the
+        // session stays alive, it never hangs or dies.
+        for bad in [
+            "QRY",
+            "QRY median",
+            "QRY range 9",
+            "QRY range a b",
+            "QRY dot",
+            "QRY sum mask 1",
+            "QRY sum mask 1 200",
+            "QRY sum trailing",
+        ] {
+            let r = reply(&mut s, bad);
+            assert!(r.starts_with("ERR "), "{bad:?} -> {r}");
+        }
+        assert_eq!(reply(&mut s, "READ 3"), "OK 7");
+
+        drop(s);
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
+    }
+
+    #[test]
     fn tcp_loopback_client_matches_reference_digest() {
         let trace = uniform_trace(64, 8, 600, 23);
         let want = format!("{:016x}", state_digest(&trace.reference_state()));
@@ -766,9 +896,22 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         let server = std::thread::spawn(move || serve_tcp(eng, listener));
 
-        let report = run_client(&addr, Some(&trace), Mode::Cmt, true, true).unwrap();
+        // The client also runs a masked reduction; `run_client` checks
+        // the answer against a host-side scalar oracle over the
+        // trace's reference state and fails hard on mismatch.
+        let report = run_client(
+            &addr,
+            Some(&trace),
+            Mode::Cmt,
+            true,
+            Some("range 1 200 mask 5 50"),
+            None,
+            true,
+        )
+        .unwrap();
         assert_eq!(report.digest.as_deref(), Some(want.as_str()));
         assert_eq!(report.acked, trace.events.len() as u64);
+        assert!(report.query_value.is_some());
 
         let served = server.join().unwrap().unwrap();
         assert_eq!(served.stats.completed, trace.updates() as u64);
@@ -791,10 +934,10 @@ mod tests {
         let server = std::thread::spawn(move || serve_tcp(eng, listener));
 
         // First client streams in SUB mode and quits without shutdown.
-        let first = run_client(&addr, Some(&trace), Mode::Sub, true, false).unwrap();
+        let first = run_client(&addr, Some(&trace), Mode::Sub, true, None, None, false).unwrap();
         assert_eq!(first.digest.as_deref(), Some(want.as_str()));
         // Second client connects afterwards and shuts the server down.
-        let second = run_client(&addr, None, Mode::Cmt, true, true).unwrap();
+        let second = run_client(&addr, None, Mode::Cmt, true, None, None, true).unwrap();
         assert_eq!(second.digest.as_deref(), Some(want.as_str()));
 
         let served = server.join().unwrap().unwrap();
@@ -820,7 +963,7 @@ mod tests {
 
         // Client B shuts the server down; the join must not deadlock
         // on A's blocked session thread.
-        run_client(&addr, None, Mode::Cmt, false, true).unwrap();
+        run_client(&addr, None, Mode::Cmt, false, None, None, true).unwrap();
         let report = server.join().unwrap().unwrap();
         assert_eq!(report.stats.completed, 0);
 
@@ -902,7 +1045,7 @@ mod tests {
         // an ERR on DIGEST must exit nonzero, never print nothing and
         // succeed.
         let addr = fake_server(vec![("DIGEST", "ERR no digest for you")]);
-        let err = run_client(&addr, None, Mode::Cmt, true, false).unwrap_err();
+        let err = run_client(&addr, None, Mode::Cmt, true, None, None, false).unwrap_err();
         assert!(format!("{err:#}").contains("DIGEST failed"), "{err:#}");
     }
 
@@ -912,15 +1055,35 @@ mod tests {
         // retry, exit nonzero.
         let addr = fake_server(vec![("{", "ERR shard 0 is down")]);
         let trace = uniform_trace(8, 8, 10, 3);
-        let err = run_client(&addr, Some(&trace), Mode::Cmt, false, false).unwrap_err();
+        let err = run_client(&addr, Some(&trace), Mode::Cmt, false, None, None, false).unwrap_err();
         assert!(format!("{err:#}").contains("rejected"), "{err:#}");
     }
 
     #[test]
     fn client_fails_hard_on_malformed_digest() {
         let addr = fake_server(vec![("DIGEST", "OK not-a-digest!!")]);
-        let err = run_client(&addr, None, Mode::Cmt, true, false).unwrap_err();
+        let err = run_client(&addr, None, Mode::Cmt, true, None, None, false).unwrap_err();
         assert!(format!("{err:#}").contains("malformed digest"), "{err:#}");
+    }
+
+    #[test]
+    fn client_fails_hard_on_query_oracle_mismatch() {
+        // A server answering the wrong reduction value must make
+        // `fast client --query … --expect …` exit nonzero.
+        let addr = fake_server(vec![(
+            "QRY",
+            "OK qry sum value=999 rows=8 cycles=8 toggles=0 alu=0 \
+             banks=1 energy_fj=0.000 ns=0.000 seq=0",
+        )]);
+        let err =
+            run_client(&addr, None, Mode::Cmt, false, Some("sum"), Some(42), false).unwrap_err();
+        assert!(format!("{err:#}").contains("query mismatch"), "{err:#}");
+
+        // An ERR reply to the QRY line is also terminal.
+        let addr = fake_server(vec![("QRY", "ERR queries are off today")]);
+        let err =
+            run_client(&addr, None, Mode::Cmt, false, Some("sum"), None, false).unwrap_err();
+        assert!(format!("{err:#}").contains("QRY failed"), "{err:#}");
     }
 
     #[test]
@@ -946,11 +1109,20 @@ mod tests {
         let e = engine(64, 8, 2);
         let mut s = Session::new(Arc::clone(&e));
         reply(&mut s, "{\"t\":\"u\",\"o\":\"add\",\"r\":1,\"v\":3}");
+        assert!(reply(&mut s, "QRY popcount").starts_with("OK qry "));
         let text = stats_json(&e.stats());
         let json = Json::parse(&text).unwrap();
         assert_eq!(json.get("tickets_resolved").and_then(Json::as_usize), Some(1));
+        // One engine query fans out to both shard workers.
+        assert_eq!(json.get("queries").and_then(Json::as_usize), Some(2));
         let shards = json.get("shards").and_then(Json::as_arr).unwrap();
         assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("queries").and_then(Json::as_usize), Some(1));
+        assert!(shards[0]
+            .get("query_wall_ns")
+            .and_then(|l| l.get("count"))
+            .and_then(Json::as_usize)
+            .is_some());
         assert!(shards[1]
             .get("commit_wall_ns")
             .and_then(|l| l.get("p95_ns"))

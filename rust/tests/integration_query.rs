@@ -1,0 +1,397 @@
+//! Differential test net for the in-array query engine (PR-6): every
+//! reduction must be bit-identical across the phase-accurate,
+//! word-fast and bit-plane tiers AND the digital baseline, and equal
+//! to an independent host-side scalar oracle — with the plane-wise
+//! activity accounting (`cell_toggles` / `alu_evals`) exactly equal
+//! across the fast tiers. Plus the ordering property: interleaved
+//! update/query streams observe read-your-writes at every shard count,
+//! the non-counting-read regression net, and a live `--stdio` server
+//! exercising the `QRY` wire verbs end to end.
+
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use fast_sram::coordinator::{
+    Backend, BitPlaneBackend, DigitalBackend, EngineConfig, FastBackend, UpdateEngine,
+    UpdateRequest,
+};
+use fast_sram::fastmem::{AluOp, BatchReport, BitPlaneArray, FastArray, Fidelity};
+use fast_sram::query::{
+    broadcast_vec, plane_reduce, scalar_reduce, seeded_mask, QuerySpec, Reduction,
+};
+use fast_sram::util::bits;
+use fast_sram::util::quickprop::{check, Gen};
+use fast_sram::util::rng::Rng;
+
+/// Independent host oracle: value and canonical pass report computed
+/// from first principles (straight iteration over the state vector),
+/// sharing no code with `scalar_reduce`/`plane_reduce`.
+fn oracle(spec: &QuerySpec, state: &[u32], q: usize) -> (u64, BatchReport) {
+    let m = bits::mask(q);
+    let enabled: Vec<usize> = (0..state.len()).filter(|&r| spec.enabled(r)).collect();
+    let mut value = match spec.red {
+        Reduction::Min => u64::from(m),
+        _ => 0u64,
+    };
+    let mut toggles = 0u64;
+    for &r in &enabled {
+        let v = state[r] & m;
+        value = match &spec.red {
+            Reduction::Popcount => value + u64::from(v.count_ones()),
+            Reduction::Sum => value.wrapping_add(u64::from(v)),
+            Reduction::Min => value.min(u64::from(v)),
+            Reduction::Max => value.max(u64::from(v)),
+            Reduction::RangeCount { lo, hi } => {
+                value + u64::from(*lo <= v && v <= *hi)
+            }
+            Reduction::Dot { vec } => value.wrapping_add(u64::from(v) * u64::from(vec[r])),
+        };
+        // One full rotate-read pass: each cell toggles twice per
+        // circular 0↔1 transition around the q-bit ring.
+        let rot = ((v << 1) | (v >> (q - 1))) & m;
+        toggles += 2 * u64::from((v ^ rot).count_ones());
+    }
+    let streams: u64 = match spec.red {
+        Reduction::Dot { .. } => 2,
+        _ => 1,
+    };
+    let report = BatchReport {
+        cycles: q as u64,
+        rows_active: enabled.len() as u64,
+        cell_toggles: q as u64 * toggles,
+        alu_evals: streams * q as u64 * enabled.len() as u64,
+    };
+    (value, report)
+}
+
+fn random_spec(g: &mut Gen, rows: usize, q: usize) -> QuerySpec {
+    let m = bits::mask(q);
+    let red = match g.usize_in(0, 5) {
+        0 => Reduction::Popcount,
+        1 => Reduction::Sum,
+        2 => Reduction::Min,
+        3 => Reduction::Max,
+        4 => {
+            let a = g.u32_any() & m;
+            let b = g.u32_any() & m;
+            Reduction::RangeCount { lo: a.min(b), hi: a.max(b) }
+        }
+        _ => Reduction::Dot { vec: broadcast_vec(g.u64_any(), rows, q) },
+    };
+    if g.bool() {
+        QuerySpec::masked(red, seeded_mask(g.u64_any(), g.u32_below(101), rows))
+    } else {
+        QuerySpec::all(red)
+    }
+}
+
+/// PROPERTY (satellite 1): every reduction, on random widths, row
+/// counts and masks, answers the same value with the same canonical
+/// pass report on all four backends — and matches the independent
+/// host oracle; the modeled cost is exactly equal across the three
+/// fast tiers (the energy story holds tier-independently).
+#[test]
+fn prop_reductions_identical_across_backends_vs_host_oracle() {
+    check("query backend equivalence", 25, |g| {
+        let rows = g.usize_in(1, 96);
+        let q = *g.choose(&[4usize, 8, 16, 32]);
+        let state: Vec<u32> = (0..rows).map(|_| g.u32_any() & bits::mask(q)).collect();
+        let mut backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(FastBackend::with_rows_fidelity(rows, q, Fidelity::PhaseAccurate)),
+            Box::new(FastBackend::with_rows_fidelity(rows, q, Fidelity::WordFast)),
+            Box::new(BitPlaneBackend::with_rows(rows, q)),
+            Box::new(DigitalBackend::new(rows, q)),
+        ];
+        for b in &mut backends {
+            for (r, v) in state.iter().enumerate() {
+                b.write_row(r, *v).unwrap();
+            }
+        }
+        let mut ok = true;
+        for _ in 0..3 {
+            let spec = random_spec(g, rows, q);
+            let (want, want_report) = oracle(&spec, &state, q);
+            let outcomes: Vec<_> =
+                backends.iter_mut().map(|b| b.query(&spec).unwrap()).collect();
+            for o in &outcomes {
+                ok &= o.value == want && o.report == want_report;
+            }
+            // Exact cost equality across the fast tiers (indices
+            // 0..3 are phase/word/bitplane).
+            ok &= outcomes[0].cost == outcomes[1].cost
+                && outcomes[1].cost == outcomes[2].cost
+                && outcomes[0].banks_active == outcomes[2].banks_active;
+            // The library scalar reference agrees with the oracle too.
+            let (sv, sr) = scalar_reduce(&spec, &state, q).unwrap();
+            ok &= sv == want && sr == want_report;
+        }
+        ok
+    });
+}
+
+/// PROPERTY (satellite 1): on multi-segment plane stacks, the
+/// plane-wise kernels agree with the scalar reference segment by
+/// segment — values and reports — for every reduction and mask.
+#[test]
+fn prop_multi_segment_plane_reduce_matches_scalar() {
+    check("segmented plane reduce", 20, |g| {
+        const LAYOUTS: [&[usize]; 3] = [&[8, 8], &[4, 12, 16], &[16]];
+        let widths: &[usize] = g.choose(&LAYOUTS);
+        let rows = g.usize_in(1, 80);
+        let mut arr = BitPlaneArray::new(rows, widths);
+        let mut rng = Rng::new(g.u64_any());
+        arr.fill_from(|_, seg| rng.below(1u64 << widths[seg]) as u32);
+        let mut ok = true;
+        for (seg, &w) in widths.iter().enumerate() {
+            let column: Vec<u32> = (0..rows).map(|r| arr.read_word(r, seg)).collect();
+            for _ in 0..2 {
+                let spec = random_spec(g, rows, w);
+                let plane = plane_reduce(&arr, seg, &spec).unwrap();
+                let scalar = scalar_reduce(&spec, &column, w).unwrap();
+                ok &= plane == scalar && plane == oracle(&spec, &column, w);
+            }
+        }
+        ok
+    });
+}
+
+fn engine_for(tier: Fidelity, rows: usize, q: usize, shards: usize) -> UpdateEngine {
+    let mut cfg = EngineConfig::sharded(rows, q, shards);
+    cfg.seal_deadline = Duration::from_micros(300);
+    match tier {
+        Fidelity::BitPlane => UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(BitPlaneBackend::with_rows(plan.rows, plan.q)))
+        })
+        .unwrap(),
+        f => UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows_fidelity(plan.rows, plan.q, f)))
+        })
+        .unwrap(),
+    }
+}
+
+/// Engine-level cross-tier equality: the same update stream followed
+/// by the same queries yields byte-for-byte identical `QueryResult`s
+/// (value, report, banks, modeled cost, observed seqs) on all three
+/// fast tiers.
+#[test]
+fn engine_query_results_identical_across_fast_tiers() {
+    let (rows, q, shards) = (128usize, 16usize, 2usize);
+    let specs = [
+        QuerySpec::all(Reduction::Popcount),
+        QuerySpec::all(Reduction::Min),
+        QuerySpec::masked(Reduction::Sum, seeded_mask(2, 60, rows)),
+        QuerySpec::masked(
+            Reduction::Dot { vec: broadcast_vec(8, rows, q) },
+            seeded_mask(3, 40, rows),
+        ),
+    ];
+    let mut per_tier = Vec::new();
+    for tier in [Fidelity::PhaseAccurate, Fidelity::WordFast, Fidelity::BitPlane] {
+        // Deterministic sealing (no deadline races): batches seal only
+        // on the explicit drain, so the observed commit seqs are
+        // identical across tiers too.
+        let mut cfg = EngineConfig::sharded(rows, q, shards);
+        cfg.seal_at_rows = None;
+        cfg.seal_deadline = Duration::from_secs(3600);
+        let engine = match tier {
+            Fidelity::BitPlane => UpdateEngine::start(cfg, move |plan| {
+                Ok(Box::new(BitPlaneBackend::with_rows(plan.rows, plan.q)))
+            })
+            .unwrap(),
+            f => UpdateEngine::start(cfg, move |plan| {
+                Ok(Box::new(FastBackend::with_rows_fidelity(plan.rows, plan.q, f)))
+            })
+            .unwrap(),
+        };
+        let mut rng = Rng::new(0xC0FFEE);
+        for _ in 0..400 {
+            let row = rng.below(rows as u64) as usize;
+            let v = rng.below(1 << q) as u32;
+            engine.submit_blocking(UpdateRequest::add(row, v)).unwrap();
+        }
+        engine.drain_all().unwrap();
+        let results: Vec<_> = specs.iter().map(|s| engine.query(s).unwrap()).collect();
+        engine.shutdown().unwrap();
+        per_tier.push((tier, results));
+    }
+    let (_, want) = &per_tier[0];
+    for (tier, got) in &per_tier[1..] {
+        assert_eq!(got, want, "tier {tier:?} diverged from phase-accurate");
+    }
+}
+
+/// PROPERTY (satellite 2): interleaved update/query streams observe
+/// read-your-writes at 1/2/4/8 shards. Producers own disjoint rows
+/// (row % producers == t); a query masked to a producer's own rows
+/// must equal its private host model exactly, and every commit whose
+/// ticket was issued before the query carries a `commit_seq` at or
+/// below the seq the query observed on that shard.
+#[test]
+fn interleaved_queries_observe_read_your_writes() {
+    let producers = 4usize;
+    let rows = 64usize;
+    let q = 8usize;
+    let tier = Fidelity::from_env_or(Fidelity::WordFast);
+    for shards in [1usize, 2, 4, 8] {
+        let engine = engine_for(tier, rows, q, shards);
+        let ctx = format!("shards={shards} tier={tier:?}");
+        std::thread::scope(|scope| {
+            for t in 0..producers {
+                let engine = &engine;
+                let ctx = &ctx;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(0x9E77E7 + 977 * t as u64);
+                    let own: Vec<usize> = (0..rows).filter(|r| r % producers == t).collect();
+                    let mut mask = vec![0u64; rows.div_ceil(64)];
+                    for &r in &own {
+                        mask[r / 64] |= 1u64 << (r % 64);
+                    }
+                    let mut model: Vec<u32> = vec![0; own.len()];
+                    let mut outstanding = Vec::new();
+                    for i in 0..250 {
+                        if rng.chance(0.25) {
+                            // Query this thread's rows: the forced
+                            // seal inside the worker makes every
+                            // prior submission visible.
+                            let spec =
+                                QuerySpec::masked(Reduction::Sum, mask.clone());
+                            let r = engine.query(&spec).unwrap();
+                            let want: u64 = model.iter().map(|&v| u64::from(v)).sum();
+                            assert_eq!(
+                                r.value, want,
+                                "{ctx} t={t} i={i}: query must reflect every \
+                                 prior update by this producer"
+                            );
+                            assert_eq!(r.report.rows_active, own.len() as u64, "{ctx}");
+                            // Ordering: tickets issued before the
+                            // query resolve at or below the seq the
+                            // query observed on their shard.
+                            for tk in outstanding.drain(..) {
+                                let c: fast_sram::coordinator::Commit =
+                                    tk.wait().expect("ticket resolves");
+                                assert!(
+                                    c.commit_seq <= r.shard_seqs[c.shard],
+                                    "{ctx} t={t} i={i}: commit seq {} on shard {} \
+                                     observed seq {}",
+                                    c.commit_seq,
+                                    c.shard,
+                                    r.shard_seqs[c.shard]
+                                );
+                            }
+                        } else {
+                            let slot = rng.below(own.len() as u64) as usize;
+                            let v = rng.below(1 << q) as u32;
+                            model[slot] = bits::add_mod(model[slot], v, q);
+                            outstanding.push(
+                                engine
+                                    .submit_blocking_ticketed(UpdateRequest::add(own[slot], v))
+                                    .unwrap(),
+                            );
+                        }
+                    }
+                });
+            }
+        });
+        let stats = engine.stats();
+        assert!(stats.queries > 0, "{ctx}: queries were exercised");
+        engine.shutdown().unwrap();
+    }
+}
+
+/// Regression (satellite 4): non-counting reads really are
+/// non-counting — `peek_rows`/`peek_word` leave the port and energy
+/// counters untouched on every tier, and a plane-wise reduction
+/// leaves the plane stack's lifetime toggle counter untouched.
+#[test]
+fn non_counting_reads_leave_counters_untouched() {
+    for tier in [Fidelity::PhaseAccurate, Fidelity::WordFast, Fidelity::BitPlane] {
+        let rows = 48usize;
+        let q = 16usize;
+        let mut a = FastArray::with_fidelity(rows, q, tier);
+        let mut rng = Rng::new(9 + tier as u64);
+        let init: Vec<u32> = (0..rows).map(|_| rng.below(1 << q) as u32).collect();
+        a.load(&init);
+        a.set_op(AluOp::Add);
+        let deltas: Vec<u32> = (0..rows).map(|_| rng.below(1 << q) as u32).collect();
+        a.batch_apply_segmented(&deltas).unwrap();
+        let _ = a.read_word(0, 0).unwrap(); // one counted read for contrast
+
+        let before = (a.port_reads(), a.port_writes(), a.batch_ops(), a.batch_cycles(), a.toggles());
+        let snap = a.peek_rows();
+        for r in 0..rows {
+            assert_eq!(a.peek_word(r, 0).unwrap(), snap[r], "{tier:?}");
+        }
+        let after = (a.port_reads(), a.port_writes(), a.batch_ops(), a.batch_cycles(), a.toggles());
+        assert_eq!(after, before, "{tier:?}: peeks must not count as port traffic");
+        assert_eq!(before.0, 1, "{tier:?}: only the explicit read_word counted");
+        assert_eq!(a.peek_rows(), snap, "{tier:?}: peeks must not disturb state");
+    }
+
+    // Plane tier: a reduction is a pure read — lifetime toggles and
+    // state are bit-for-bit unchanged.
+    let mut arr = BitPlaneArray::new(40, &[16]);
+    let mut rng = Rng::new(77);
+    arr.fill_from(|_, _| rng.below(1 << 16) as u32);
+    arr.apply(AluOp::Add, &[3u32; 40]);
+    let toggles = arr.toggles();
+    let before: Vec<u32> = (0..40).map(|r| arr.read_word(r, 0)).collect();
+    for spec in [
+        QuerySpec::all(Reduction::Popcount),
+        QuerySpec::masked(Reduction::Max, seeded_mask(1, 50, 40)),
+    ] {
+        plane_reduce(&arr, 0, &spec).unwrap();
+    }
+    assert_eq!(arr.toggles(), toggles, "plane reductions must not charge toggles");
+    let after: Vec<u32> = (0..40).map(|r| arr.read_word(r, 0)).collect();
+    assert_eq!(after, before, "plane reductions must not disturb state");
+}
+
+/// Satellite 3 (stdio leg): a live `fast serve --stdio` process
+/// answers `QRY` lines in lockstep — results round-trip, malformed
+/// lines get one typed `ERR` reply instead of a hang, and the session
+/// keeps serving afterwards.
+#[test]
+fn stdio_server_answers_and_rejects_qry_lines() {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_fast"))
+        .args(["serve", "--stdio", "--rows", "64", "--q", "16", "--shards", "2"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning fast serve --stdio");
+    let mut stdin = child.stdin.take().unwrap();
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+    let mut roundtrip = |line: &str, stdin: &mut std::process::ChildStdin| -> String {
+        writeln!(stdin, "{line}").unwrap();
+        let mut reply = String::new();
+        stdout.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "server hung up on {line:?}");
+        reply.trim_end().to_string()
+    };
+
+    let banner = roundtrip("HELLO", &mut stdin);
+    assert!(banner.starts_with("OK fast-serve-v1 rows=64 q=16 shards=2"), "{banner}");
+    assert_eq!(roundtrip("{\"t\":\"w\",\"r\":1,\"v\":5}", &mut stdin), "OK");
+    assert!(roundtrip("{\"t\":\"u\",\"o\":\"add\",\"r\":2,\"v\":9}", &mut stdin).starts_with("OK"));
+
+    let r = roundtrip("QRY sum", &mut stdin);
+    assert!(r.starts_with("OK qry sum value=14 "), "{r}");
+    let r = roundtrip("QRY max mask 4 100", &mut stdin);
+    assert!(r.contains(" value=9 "), "{r}");
+
+    // Malformed lines: one typed ERR each, never a hang or a death.
+    for bad in ["QRY", "QRY median", "QRY range 9", "QRY sum nonsense"] {
+        let r = roundtrip(bad, &mut stdin);
+        assert!(r.starts_with("ERR "), "{bad:?} -> {r}");
+    }
+    // The session is still healthy after the rejects.
+    let r = roundtrip("QRY sum", &mut stdin);
+    assert!(r.starts_with("OK qry sum value=14 "), "{r}");
+
+    // EOF is a clean shutdown.
+    drop(stdin);
+    let status = child.wait().expect("server exit");
+    assert!(status.success(), "server must exit 0 on EOF, got {status}");
+}
