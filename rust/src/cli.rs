@@ -205,6 +205,18 @@ system commands:
                                        (default interval; needs --wal-dir)
                [--fsync-interval-us 2000]     coalescing window for interval
                [--wal-segment-bytes 4194304]  segment rotation threshold
+               [--repl-listen HOST:PORT] primary role: ship sealed WAL frames
+                                       (fast-repl-v1) to any number of
+                                       followers; needs --wal-dir
+               [--follower HOST:PORT]  follower role: stream the primary's
+                                       WAL, apply through recovery onto a
+                                       live engine, serve reads at the
+                                       applied watermark, answer writes with
+                                       ERR readonly until promoted; resumes
+                                       from its own --wal-dir (required)
+                                       after a restart, reconnects with
+                                       capped backoff, and FAIL-STOPS (exit
+                                       nonzero) if digests show divergence
                run the fast-serve-v1 front-end: a line protocol speaking
                fast-trace-v1 events over TCP (multi-client) or stdio, with
                per-connection MODE SUB (fire-and-forget) / MODE CMT
@@ -217,13 +229,22 @@ system commands:
                latency histograms when durable
   client       --connect HOST:PORT [--in TRACE] [--mode sub|cmt]
                [--digest] [--query \"SPEC\"] [--expect N] [--shutdown]
+               [--retries 1000] [--backoff-us 200]
                drive a running `fast serve`: stream a recorded trace through
                the protocol, print the final state digest, optionally shut
-               the server down; exits nonzero on any terminal (non-busy)
-               ERR or when the requested digest never arrives; --query runs
-               a QRY reduction after the stream and verifies the answer
-               against --expect (or, with --in, against a host-side scalar
-               oracle over the trace), exiting nonzero on mismatch
+               the server down; ERR busy backpressure is retried up to
+               --retries times per line with jittered exponential backoff
+               from --backoff-us (capped at 100 ms); exits nonzero on any
+               terminal (non-busy) ERR — including ERR readonly from a
+               follower — or when the requested digest never arrives;
+               --query runs a QRY reduction after the stream and verifies
+               the answer against --expect (or, with --in, against a
+               host-side scalar oracle over the trace), exiting nonzero on
+               mismatch
+  promote      --connect HOST:PORT    tell a follower serve to stop
+                                       replicating, fence a new epoch, and
+                                       accept writes (failover); prints the
+                                       fenced epoch
   query        SPEC [--in TRACE | --updates 5000 --seed 66] [--verify]
                [--rows 1024] [--q 16] [--banks 8] [--shards 1]
                [--backend fast|digital|xla] [--fidelity phase|word|bitplane]

@@ -55,7 +55,7 @@
 //! `std::thread` + `mpsc::sync_channel` provide the same bounded-queue
 //! backpressure semantics.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -63,7 +63,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure};
 
-use crate::durability::{recover::recover_or_init, wal::ShardWal, DirLock, DurabilityConfig};
+use crate::durability::{
+    recover::recover_or_init,
+    wal::{ShardWal, WalPayload, WalRecord},
+    DirLock, DurabilityConfig, ShardMark,
+};
 use crate::energy::Cost;
 use crate::fastmem::BatchReport;
 use crate::metrics::{
@@ -109,6 +113,14 @@ pub struct EngineConfig {
     /// per-shard `commit_seq` continues from the recovered watermark.
     /// `None` (default) = volatile, the pre-durability behaviour.
     pub durability: Option<DurabilityConfig>,
+    /// Start in read-only (replication follower) mode: every update
+    /// submit path and the conventional-port write are rejected with a
+    /// typed [`EngineReadOnly`] error; reads, waits, queries, drains
+    /// and snapshots still work. Replicated WAL frames enter through
+    /// [`UpdateEngine::apply_replicated`], and a later
+    /// [`UpdateEngine::promote_writable`] (failover) flips the engine
+    /// to accepting writes. Default `false`.
+    pub read_only: bool,
 }
 
 impl EngineConfig {
@@ -123,6 +135,7 @@ impl EngineConfig {
             seal_deadline: Duration::from_micros(100),
             queue_cap: 4096,
             durability: None,
+            read_only: false,
         }
     }
 
@@ -173,6 +186,26 @@ impl std::fmt::Display for EngineBusy {
 }
 
 impl std::error::Error for EngineBusy {}
+
+/// Typed read-only-rejection error: the engine is running as a
+/// replication follower ([`EngineConfig::read_only`]) and refuses
+/// every mutation until promoted. Carried as the root cause of the
+/// `anyhow` error the submit/write paths return, so protocol layers
+/// can reply with a typed `ERR readonly` instead of a generic failure:
+/// `err.root_cause().downcast_ref::<EngineReadOnly>().is_some()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineReadOnly;
+
+impl std::fmt::Display for EngineReadOnly {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "engine is read-only (replication follower): writes are rejected until promotion"
+        )
+    }
+}
+
+impl std::error::Error for EngineReadOnly {}
 
 /// Identity of one engine shard, handed to the backend factory so it
 /// can size the backend to the shard's slice of the row space.
@@ -268,6 +301,12 @@ enum Command {
     /// shard's last committed sequence number once applied.
     Drain(SyncSender<u64>),
     Snapshot(SyncSender<Result<Vec<u32>>>),
+    /// Apply one replicated WAL record (follower mode): the frame's
+    /// commit_seq must be exactly the shard's next seq (batch) or its
+    /// last committed seq (write) — any mismatch is log divergence and
+    /// fail-stops the shard. Re-logged through the local WAL listener
+    /// and published to the committed-seq latch like a native commit.
+    ReplApply(WalRecord, SyncSender<Result<()>>),
     Shutdown,
 }
 
@@ -441,6 +480,13 @@ pub struct UpdateEngine {
     /// Single-writer lock on the WAL directory, held for the engine's
     /// lifetime (durable engines only; released on shutdown/drop).
     _wal_lock: Option<DirLock>,
+    /// `false` while running as a read-only replication follower;
+    /// flipped once (and only once) by [`Self::promote_writable`].
+    writable: AtomicBool,
+    /// Per-shard `(commit_seq, lsn)` watermarks recovered at start
+    /// (durable engines only) — the follower's replication cursors
+    /// resume from here.
+    recovered: Option<Vec<ShardMark>>,
 }
 
 impl UpdateEngine {
@@ -460,6 +506,7 @@ impl UpdateEngine {
         cfg.validate()?;
         let metrics = Arc::new(EngineMetrics::new(cfg.shards));
         let mut wal_lock = None;
+        let mut recovered = None;
         let inits: Vec<WorkerInit> = match &cfg.durability {
             None => (0..cfg.shards).map(|_| WorkerInit::default()).collect(),
             Some(d) => {
@@ -470,6 +517,7 @@ impl UpdateEngine {
                     .map_err(|e| anyhow!("creating WAL dir {}: {e}", d.dir.display()))?;
                 wal_lock = Some(DirLock::acquire(&d.dir)?);
                 let rec = recover_or_init(d, cfg.rows, cfg.q, cfg.shards)?;
+                recovered = Some(rec.per_shard.clone());
                 (0..cfg.shards)
                     .map(|shard| {
                         let mark = rec.per_shard[shard];
@@ -491,7 +539,7 @@ impl UpdateEngine {
                     .collect::<Result<Vec<_>>>()?
             }
         };
-        Self::start_inner(cfg, Arc::new(backend_factory), metrics, inits, wal_lock)
+        Self::start_inner(cfg, Arc::new(backend_factory), metrics, inits, wal_lock, recovered)
     }
 
     /// [`Self::start`] with an explicit per-shard [`CommitListener`]
@@ -528,7 +576,7 @@ impl UpdateEngine {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
-        Self::start_inner(cfg, Arc::new(backend_factory), metrics, inits, None)
+        Self::start_inner(cfg, Arc::new(backend_factory), metrics, inits, None, None)
     }
 
     fn start_inner(
@@ -537,6 +585,7 @@ impl UpdateEngine {
         metrics: Arc<EngineMetrics>,
         inits: Vec<WorkerInit>,
         wal_lock: Option<DirLock>,
+        recovered: Option<Vec<ShardMark>>,
     ) -> Result<Self> {
         let shard_rows = cfg.rows / cfg.shards;
         // Per-shard seal threshold: the config knob is expressed over
@@ -575,6 +624,7 @@ impl UpdateEngine {
             name_rxs.push(name_rx);
         }
 
+        let writable = AtomicBool::new(!cfg.read_only);
         let mut engine = UpdateEngine {
             shards,
             seqs,
@@ -583,6 +633,8 @@ impl UpdateEngine {
             backend_name: std::sync::OnceLock::new(),
             cfg,
             _wal_lock: wal_lock,
+            writable,
+            recovered,
         };
 
         // Collect every shard's construction outcome before going live.
@@ -653,6 +705,17 @@ impl UpdateEngine {
             .fetch_sub(n, Ordering::Relaxed);
     }
 
+    /// Mutation admission gate: a read-only (follower) engine rejects
+    /// `n` requests with the typed [`EngineReadOnly`] root cause.
+    #[inline]
+    fn check_writable(&self, n: u64) -> Result<()> {
+        if self.writable.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        Counters::inc(&self.metrics.counters.requests_rejected, n);
+        Err(anyhow::Error::new(EngineReadOnly))
+    }
+
     /// Non-blocking submit. `Err` = queue full (backpressure), row out
     /// of range, or engine shut down; the request was NOT accepted.
     pub fn submit(&self, req: UpdateRequest) -> Result<()> {
@@ -670,6 +733,7 @@ impl UpdateEngine {
     }
 
     fn submit_inner(&self, req: UpdateRequest, waiter: Option<TicketNotifier>) -> Result<()> {
+        self.check_writable(1)?;
         let (shard, local) = self.route(req.row)?;
         Counters::inc(&self.metrics.counters.requests_submitted, 1);
         let mut req = req;
@@ -709,6 +773,7 @@ impl UpdateEngine {
         req: UpdateRequest,
         waiter: Option<TicketNotifier>,
     ) -> Result<()> {
+        self.check_writable(1)?;
         let (shard, local) = self.route(req.row)?;
         Counters::inc(&self.metrics.counters.requests_submitted, 1);
         let mut req = req;
@@ -747,6 +812,7 @@ impl UpdateEngine {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
+        self.check_writable(reqs.len() as u64)?;
         let total = reqs.len() as u64;
         let mut buckets: Vec<Vec<UpdateRequest>> = Vec::new();
         buckets.resize_with(self.cfg.shards, Vec::new);
@@ -801,6 +867,7 @@ impl UpdateEngine {
     /// open batch first, but only if it pends an update to this row —
     /// program order per row is preserved, unrelated batching is not).
     pub fn write(&self, row: usize, value: u32) -> Result<()> {
+        self.check_writable(0)?;
         let (shard, local) = self.route(row)?;
         let (tx, rx) = mpsc::sync_channel(1);
         self.shards[shard]
@@ -808,6 +875,53 @@ impl UpdateEngine {
             .send(Command::Write(local, value, tx))
             .map_err(|_| anyhow!("engine is shut down"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
+    }
+
+    /// Apply one replicated WAL record (follower mode only): routes
+    /// the frame to its shard's worker, which validates the commit
+    /// sequence against its own watermark, applies it through the
+    /// backend, re-logs it through the local WAL listener, and
+    /// publishes the committed seq — exactly the native commit path
+    /// minus ticket waiters. Valid only while the engine is read-only;
+    /// after promotion the engine mints its own commits and a stale
+    /// replication stream must not interleave.
+    pub fn apply_replicated(&self, rec: WalRecord) -> Result<()> {
+        ensure!(
+            !self.writable.load(Ordering::Acquire),
+            "engine is writable: replicated applies are only valid in read-only \
+             (follower) mode"
+        );
+        let shard = rec.shard as usize;
+        ensure!(
+            shard < self.shards.len(),
+            "replicated record names shard {shard} (shards = {})",
+            self.shards.len()
+        );
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.shards[shard]
+            .tx
+            .send(Command::ReplApply(rec, tx))
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the reply"))?
+    }
+
+    /// Failover: flip a read-only follower engine to accepting writes.
+    /// Idempotent; the flag only ever goes read-only → writable.
+    pub fn promote_writable(&self) {
+        self.writable.store(true, Ordering::Release);
+    }
+
+    /// Is the engine currently accepting mutations? `false` only for a
+    /// not-yet-promoted follower.
+    pub fn is_writable(&self) -> bool {
+        self.writable.load(Ordering::Acquire)
+    }
+
+    /// The per-shard `(commit_seq, lsn)` watermarks recovered at start
+    /// (`None` on volatile engines) — replication cursors resume from
+    /// these.
+    pub fn recovered_marks(&self) -> Option<&[ShardMark]> {
+        self.recovered.as_deref()
     }
 
     /// Submit one in-array reduction, fanned out to every shard as a
@@ -1136,6 +1250,85 @@ impl ShardWorker<'_> {
         Ok(())
     }
 
+    /// Apply one replicated WAL record (follower mode). A batch frame
+    /// replays the primary's sealed commit through the normal
+    /// [`Self::apply_sealed`] path (densified back to the operand
+    /// vector the WAL filtered), so metrics, the local WAL re-log and
+    /// the committed-seq publication all behave like a native commit.
+    /// A commit_seq that disagrees with the shard's own watermark is
+    /// log divergence — fail-stop, never a silent skip.
+    fn apply_replicated_record(&mut self, rec: WalRecord) -> Result<()> {
+        ensure!(
+            self.batcher.pending_rows() == 0,
+            "replicated apply with a non-empty local batch (shard {})",
+            self.plan.shard
+        );
+        match rec.payload {
+            WalPayload::Batch { seal_reason, kind, ops } => {
+                ensure!(
+                    rec.commit_seq == self.next_seq,
+                    "shard {} lsn {}: replicated commit_seq {} != expected {} — \
+                     log divergence",
+                    self.plan.shard,
+                    rec.lsn,
+                    rec.commit_seq,
+                    self.next_seq
+                );
+                let ident = kind.identity(self.plan.q);
+                let mut operands = vec![ident; self.plan.rows];
+                let mut rows_touched = 0usize;
+                for (row, operand) in ops {
+                    let row = row as usize;
+                    ensure!(
+                        row < self.plan.rows,
+                        "shard {} lsn {}: replicated local row {row} out of range \
+                         ({} shard rows)",
+                        self.plan.shard,
+                        rec.lsn,
+                        self.plan.rows
+                    );
+                    if operands[row] == ident && operand != ident {
+                        rows_touched += 1;
+                    }
+                    operands[row] = operand;
+                }
+                let batch = Batch {
+                    kind,
+                    operands,
+                    rows_touched,
+                    requests: rows_touched,
+                    waiters: Vec::new(),
+                };
+                self.apply_sealed(batch, seal_reason)
+            }
+            WalPayload::Write { row, value } => {
+                ensure!(
+                    rec.commit_seq == self.next_seq - 1,
+                    "shard {} lsn {}: replicated write carries committed_seq {} != \
+                     local {} — log divergence",
+                    self.plan.shard,
+                    rec.lsn,
+                    rec.commit_seq,
+                    self.next_seq - 1
+                );
+                let row = row as usize;
+                ensure!(
+                    row < self.plan.rows,
+                    "shard {} lsn {}: replicated local row {row} out of range \
+                     ({} shard rows)",
+                    self.plan.shard,
+                    rec.lsn,
+                    self.plan.rows
+                );
+                self.backend.write_row(row, value)?;
+                if let Some(listener) = &mut self.listener {
+                    listener.on_write(row, value, self.next_seq - 1)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
     fn run(&mut self, rx: &Receiver<Command>) -> Result<()> {
         ensure!(
             self.backend.rows() == self.plan.rows,
@@ -1305,6 +1498,21 @@ impl ShardWorker<'_> {
                     }
                     self.deadline = None;
                     let _ = reply.send(self.backend.snapshot());
+                }
+                Command::ReplApply(rec, reply) => {
+                    // A replicated apply failure is fatal to the shard
+                    // (fail-stop): the caller gets the error AND the
+                    // worker dies, so a diverged follower can never
+                    // keep serving answers past the fault.
+                    match self.apply_replicated_record(rec) {
+                        Ok(()) => {
+                            let _ = reply.send(Ok(()));
+                        }
+                        Err(e) => {
+                            let _ = reply.send(Err(anyhow!("replicated apply failed: {e:#}")));
+                            return Err(e);
+                        }
+                    }
                 }
                 Command::Shutdown => {
                     self.flush(SealReason::Forced)?;

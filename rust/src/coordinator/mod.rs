@@ -30,7 +30,7 @@ pub use backend::{
 pub use bank::{BankApply, BankSet};
 pub use batcher::{Batch, Batcher, SealReason};
 pub use engine::{
-    BackendFactory, CommitListener, EngineBusy, EngineConfig, EngineMetrics, EngineStats,
-    QueryResult, QueryTicket, ShardPlan, UpdateEngine,
+    BackendFactory, CommitListener, EngineBusy, EngineConfig, EngineMetrics, EngineReadOnly,
+    EngineStats, QueryResult, QueryTicket, ShardPlan, UpdateEngine,
 };
 pub use request::{ticket, BatchKind, Commit, Ticket, TicketNotifier, UpdateOp, UpdateRequest};

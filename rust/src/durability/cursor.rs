@@ -1,0 +1,431 @@
+//! Read-only WAL tailing for replication: a [`WalCursor`] follows one
+//! shard's segmented log *while a live appender grows it*, yielding
+//! each fully-durable frame exactly once from a caller-chosen LSN.
+//!
+//! This is the primary-side half of WAL shipping (`fast-repl-v1`): the
+//! repl listener owns one cursor per shard per follower connection and
+//! pumps frames from the files the engine's [`ShardWal`] appenders are
+//! writing — no engine hook, no extra channel, the log *is* the
+//! replication stream.
+//!
+//! ## Live-tail safety
+//!
+//! An appender emits a frame as ONE sequential `write_all` of the
+//! complete `len | crc | payload` buffer (CRC backfilled before the
+//! write), so a reader that sees byte `k` of a frame knows bytes
+//! `0..k` are final. That yields a crisp classification at the tail:
+//!
+//! - fewer bytes than a complete frame → **pending** (an in-flight
+//!   append; retry later),
+//! - a complete frame with an implausible length, a CRC mismatch, or
+//!   an undecodable payload → **corruption** (hard error — shipping a
+//!   bad frame would replicate the damage),
+//! - a clean end-of-file with a NEWER segment present → the current
+//!   segment is **sealed** (rotation happened); the cursor reports the
+//!   boundary so the shipper can emit its segment digest, then moves
+//!   on.
+//!
+//! A torn tail left by a crash never reaches a cursor: durable engine
+//! start truncates it during recovery before any appender (and thus
+//! any shipping) resumes.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::Result;
+
+use super::segment::{list_segments, read_segment_header, SEGMENT_HEADER_LEN};
+use super::wal::{WalRecord, MAX_PAYLOAD};
+
+/// Smallest valid frame payload (the fixed fields with zero ops) —
+/// mirrors the private `PAYLOAD_FIXED` in [`super::wal`]:
+/// `rtype(1) + shard(4) + lsn(8) + commit_seq(8) + seal(1) + kind(1) +
+/// nops(4)`.
+const MIN_PAYLOAD: u32 = 27;
+
+/// What one [`WalCursor::poll`] observed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CursorEvent {
+    /// One durable frame at exactly the cursor's next LSN: the decoded
+    /// record plus the raw frame bytes (`len | crc | payload`) as they
+    /// sit on disk — ship the bytes, trust the record.
+    Frame { record: WalRecord, frame: Vec<u8> },
+    /// The segment holding everything up to `upto_lsn` is sealed
+    /// (rotation happened); the next poll continues in the successor
+    /// segment. Shippers emit their cumulative digest here.
+    SegmentSealed { upto_lsn: u64 },
+    /// Caught up with the appender — nothing durable beyond the
+    /// cursor yet. Retry after a pause.
+    Idle,
+}
+
+/// One open segment file the cursor is scanning.
+struct OpenSeg {
+    file: File,
+    path: PathBuf,
+    first_lsn: u64,
+    /// Byte offset of the next unread frame (header included).
+    offset: u64,
+}
+
+/// Read-only tailer over one shard's WAL from a starting LSN. Never
+/// takes the directory's writer lock — it only reads files the
+/// appender has already made durable.
+pub struct WalCursor {
+    dir: PathBuf,
+    shard: usize,
+    /// Next LSN to yield (frames below it are skipped on resume).
+    next_lsn: u64,
+    /// Highest LSN observed in the log so far (read or skipped) — the
+    /// durable tail as this cursor knows it; heartbeats carry it.
+    max_seen: u64,
+    seg: Option<OpenSeg>,
+    /// Path of the segment last reported sealed: re-choosing it means
+    /// the successor segment is missing or starts beyond `next_lsn` —
+    /// a log gap, not a wait state.
+    sealed_path: Option<PathBuf>,
+}
+
+impl WalCursor {
+    /// Cursor over `shard`'s log under `dir`, starting at `from_lsn`
+    /// (use recovered watermark + 1 to resume; 1 to bootstrap).
+    pub fn new(dir: &Path, shard: usize, from_lsn: u64) -> Result<WalCursor> {
+        ensure!(from_lsn >= 1, "lsn space starts at 1");
+        Ok(WalCursor {
+            dir: dir.to_path_buf(),
+            shard,
+            next_lsn: from_lsn,
+            max_seen: 0,
+            seg: None,
+            sealed_path: None,
+        })
+    }
+
+    /// The LSN the next [`CursorEvent::Frame`] will carry.
+    pub fn next_lsn(&self) -> u64 {
+        self.next_lsn
+    }
+
+    /// Highest LSN this cursor has observed on disk (0 before the
+    /// first poll touches data). Everything at or below it is durable.
+    pub fn tail_seen(&self) -> u64 {
+        self.max_seen
+    }
+
+    /// Choose and open the segment that should contain `next_lsn`.
+    /// `Ok(false)` = no segment exists yet (fresh shard) — idle.
+    fn open_current(&mut self) -> Result<bool> {
+        let segs = list_segments(&self.dir, self.shard)?;
+        let Some(info) = segs.iter().rev().find(|s| s.first_lsn <= self.next_lsn) else {
+            if let Some(oldest) = segs.first() {
+                bail!(
+                    "shard {}: lsn {} predates the oldest segment (first lsn {}) — \
+                     the primary compacted past this cursor; re-seed the follower \
+                     from a fresh copy of the primary's state",
+                    self.shard,
+                    self.next_lsn,
+                    oldest.first_lsn
+                );
+            }
+            return Ok(false);
+        };
+        if self.sealed_path.as_deref() == Some(info.path.as_path()) {
+            bail!(
+                "shard {}: segment {} is sealed at lsn {} but no successor segment \
+                 covers it — log gap",
+                self.shard,
+                info.path.display(),
+                self.next_lsn - 1
+            );
+        }
+        let mut file = File::open(&info.path)
+            .with_context(|| format!("opening segment {}", info.path.display()))?;
+        let claimed = read_segment_header(&mut file, &info.path)?;
+        ensure!(
+            claimed as usize == self.shard,
+            "{}: segment claims shard {claimed}, cursor follows shard {}",
+            info.path.display(),
+            self.shard
+        );
+        self.seg = Some(OpenSeg {
+            file,
+            path: info.path.clone(),
+            first_lsn: info.first_lsn,
+            offset: SEGMENT_HEADER_LEN,
+        });
+        Ok(true)
+    }
+
+    /// Advance by at most one event. Errors are permanent (corruption,
+    /// compaction gap); [`CursorEvent::Idle`] is the retryable state.
+    pub fn poll(&mut self) -> Result<CursorEvent> {
+        loop {
+            if self.seg.is_none() && !self.open_current()? {
+                return Ok(CursorEvent::Idle);
+            }
+            let seg = self.seg.as_mut().expect("opened above");
+            let flen = seg
+                .file
+                .metadata()
+                .with_context(|| format!("statting {}", seg.path.display()))?
+                .len();
+            match read_frame_at(&mut seg.file, &seg.path, seg.offset, flen)? {
+                Some((record, frame)) => {
+                    seg.offset += frame.len() as u64;
+                    ensure!(
+                        record.shard as usize == self.shard,
+                        "{}: record claims shard {}, cursor follows shard {}",
+                        seg.path.display(),
+                        record.shard,
+                        self.shard
+                    );
+                    self.max_seen = self.max_seen.max(record.lsn);
+                    if record.lsn < self.next_lsn {
+                        continue; // resume skip: already shipped/applied
+                    }
+                    ensure!(
+                        record.lsn == self.next_lsn,
+                        "shard {}: {} jumps to lsn {} (expected {}) — log gap",
+                        self.shard,
+                        seg.path.display(),
+                        record.lsn,
+                        self.next_lsn
+                    );
+                    self.next_lsn += 1;
+                    return Ok(CursorEvent::Frame { record, frame });
+                }
+                None => {
+                    // No complete frame at the tail. Sealed or pending?
+                    let newer = list_segments(&self.dir, self.shard)?
+                        .iter()
+                        .any(|s| s.first_lsn > seg.first_lsn);
+                    if !newer {
+                        return Ok(CursorEvent::Idle);
+                    }
+                    // Rotation happened, so this segment is immutable:
+                    // it must end exactly at a frame boundary.
+                    ensure!(
+                        seg.offset == flen,
+                        "shard {}: sealed segment {} ends mid-frame at byte {} of {}",
+                        self.shard,
+                        seg.path.display(),
+                        seg.offset,
+                        flen
+                    );
+                    let upto_lsn = self.next_lsn - 1;
+                    self.sealed_path = Some(seg.path.clone());
+                    self.seg = None;
+                    return Ok(CursorEvent::SegmentSealed { upto_lsn });
+                }
+            }
+        }
+    }
+}
+
+/// Read the frame at `offset`, given the file currently holds `flen`
+/// bytes. `Ok(None)` = the frame is not fully durable yet (pending
+/// append). `Err` = the durable bytes are wrong (corruption).
+fn read_frame_at(
+    file: &mut File,
+    path: &Path,
+    offset: u64,
+    flen: u64,
+) -> Result<Option<(WalRecord, Vec<u8>)>> {
+    if flen < offset + 8 {
+        return Ok(None); // frame header not fully durable yet
+    }
+    file.seek(SeekFrom::Start(offset))
+        .with_context(|| format!("seeking {}", path.display()))?;
+    let mut head = [0u8; 8];
+    file.read_exact(&mut head)
+        .with_context(|| format!("reading frame header in {}", path.display()))?;
+    let len = u32::from_le_bytes(head[..4].try_into().expect("4 bytes"));
+    let crc = u32::from_le_bytes(head[4..].try_into().expect("4 bytes"));
+    // The header bytes are final once visible (appends are sequential),
+    // so an implausible length is corruption, not an in-flight write.
+    ensure!(
+        (MIN_PAYLOAD..=MAX_PAYLOAD).contains(&len),
+        "{}: implausible frame length {len} at byte {offset}",
+        path.display()
+    );
+    if flen < offset + 8 + len as u64 {
+        return Ok(None); // payload still landing
+    }
+    let mut payload = vec![0u8; len as usize];
+    file.read_exact(&mut payload)
+        .with_context(|| format!("reading frame payload in {}", path.display()))?;
+    ensure!(
+        crate::util::crc32::crc32(&payload) == crc,
+        "{}: frame CRC mismatch at byte {offset}",
+        path.display()
+    );
+    let record = WalRecord::decode(&payload)
+        .with_context(|| format!("{}: undecodable frame at byte {offset}", path.display()))?;
+    let mut frame = Vec::with_capacity(8 + payload.len());
+    frame.extend_from_slice(&head);
+    frame.extend_from_slice(&payload);
+    Ok(Some((record, frame)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::BatchKind;
+    use crate::durability::segment::{encode_segment_header, segment_path, shard_dir};
+    use crate::durability::wal::WalPayload;
+    use std::io::Write;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let d = std::env::temp_dir().join(format!(
+            "fast-cursor-{tag}-{}-{nanos}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn batch_rec(lsn: u64, seq: u64, ops: Vec<(u32, u32)>) -> WalRecord {
+        WalRecord {
+            shard: 0,
+            lsn,
+            commit_seq: seq,
+            payload: WalPayload::Batch {
+                seal_reason: crate::coordinator::SealReason::Forced,
+                kind: BatchKind::Add,
+                ops,
+            },
+        }
+    }
+
+    fn new_segment(dir: &Path, first_lsn: u64) -> std::fs::File {
+        std::fs::create_dir_all(shard_dir(dir, 0)).unwrap();
+        let mut f = std::fs::File::create(segment_path(dir, 0, first_lsn)).unwrap();
+        f.write_all(&encode_segment_header(0)).unwrap();
+        f
+    }
+
+    fn append(f: &mut std::fs::File, rec: &WalRecord) -> Vec<u8> {
+        let mut buf = Vec::new();
+        rec.encode_into(&mut buf);
+        f.write_all(&buf).unwrap();
+        buf
+    }
+
+    #[test]
+    fn tails_a_growing_segment_and_ships_exact_bytes() {
+        let d = tmpdir("tail");
+        let mut cur = WalCursor::new(&d, 0, 1).unwrap();
+        // Fresh shard: no segments at all is idle, not an error.
+        assert_eq!(cur.poll().unwrap(), CursorEvent::Idle);
+        let mut f = new_segment(&d, 1);
+        assert_eq!(cur.poll().unwrap(), CursorEvent::Idle);
+        let b1 = append(&mut f, &batch_rec(1, 1, vec![(3, 7)]));
+        let b2 = append(&mut f, &batch_rec(2, 2, vec![(0, 1), (5, 2)]));
+        match cur.poll().unwrap() {
+            CursorEvent::Frame { record, frame } => {
+                assert_eq!(record.lsn, 1);
+                assert_eq!(frame, b1, "shipped bytes must be the on-disk bytes");
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        match cur.poll().unwrap() {
+            CursorEvent::Frame { record, frame } => {
+                assert_eq!(record.lsn, 2);
+                assert_eq!(frame, b2);
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        assert_eq!(cur.poll().unwrap(), CursorEvent::Idle);
+        assert_eq!(cur.tail_seen(), 2);
+        // More data arrives: the same cursor picks it up.
+        append(&mut f, &batch_rec(3, 3, vec![(1, 1)]));
+        assert!(matches!(
+            cur.poll().unwrap(),
+            CursorEvent::Frame { record: WalRecord { lsn: 3, .. }, .. }
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn partial_tail_frame_is_pending_not_corrupt() {
+        let d = tmpdir("partial");
+        let mut f = new_segment(&d, 1);
+        let full = {
+            let mut buf = Vec::new();
+            batch_rec(1, 1, vec![(2, 9)]).encode_into(&mut buf);
+            buf
+        };
+        // Write only a prefix (mid-append snapshot).
+        f.write_all(&full[..full.len() - 3]).unwrap();
+        let mut cur = WalCursor::new(&d, 0, 1).unwrap();
+        assert_eq!(cur.poll().unwrap(), CursorEvent::Idle);
+        // The rest lands: now it ships.
+        f.write_all(&full[full.len() - 3..]).unwrap();
+        assert!(matches!(cur.poll().unwrap(), CursorEvent::Frame { .. }));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn resume_skips_below_start_and_detects_rotation() {
+        let d = tmpdir("rotate");
+        let mut f1 = new_segment(&d, 1);
+        for lsn in 1..=3u64 {
+            append(&mut f1, &batch_rec(lsn, lsn, vec![(0, lsn as u32)]));
+        }
+        let mut f2 = new_segment(&d, 4);
+        append(&mut f2, &batch_rec(4, 4, vec![(1, 1)]));
+        // Resume from lsn 3: skips 1-2, ships 3, reports the seal,
+        // then continues into the successor segment.
+        let mut cur = WalCursor::new(&d, 0, 3).unwrap();
+        assert!(matches!(
+            cur.poll().unwrap(),
+            CursorEvent::Frame { record: WalRecord { lsn: 3, .. }, .. }
+        ));
+        assert_eq!(cur.poll().unwrap(), CursorEvent::SegmentSealed { upto_lsn: 3 });
+        assert!(matches!(
+            cur.poll().unwrap(),
+            CursorEvent::Frame { record: WalRecord { lsn: 4, .. }, .. }
+        ));
+        assert_eq!(cur.poll().unwrap(), CursorEvent::Idle);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corruption_is_a_permanent_error() {
+        let d = tmpdir("corrupt");
+        let mut f = new_segment(&d, 1);
+        append(&mut f, &batch_rec(1, 1, vec![(0, 5)]));
+        append(&mut f, &batch_rec(2, 2, vec![(1, 6)]));
+        drop(f);
+        // Flip a payload byte of the FIRST frame: its CRC no longer
+        // matches, and the bytes are fully durable — corruption.
+        let path = segment_path(&d, 0, 1);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = SEGMENT_HEADER_LEN as usize + 8 + 5;
+        bytes[at] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut cur = WalCursor::new(&d, 0, 1).unwrap();
+        let err = cur.poll().unwrap_err().to_string();
+        assert!(err.contains("CRC"), "unexpected error: {err}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn compacted_history_is_an_actionable_error() {
+        let d = tmpdir("gap");
+        let mut f = new_segment(&d, 10);
+        append(&mut f, &batch_rec(10, 10, vec![(0, 1)]));
+        // Asking for lsn 1 when the log starts at 10 cannot be served.
+        let mut cur = WalCursor::new(&d, 0, 1).unwrap();
+        let err = cur.poll().unwrap_err().to_string();
+        assert!(err.contains("re-seed"), "unexpected error: {err}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -26,6 +26,11 @@
 //!   [`recover::export_trace`] interop that lets
 //!   `fast trace replay --digest-only` independently audit any
 //!   recovered state.
+//! - [`cursor`] — read-only live tailing of a shard's segments for
+//!   WAL shipping ([`crate::replication`]): yields each durable frame
+//!   exactly once from a chosen LSN, distinguishing an in-flight
+//!   append (retry) from corruption (hard error) and reporting
+//!   segment-rotation boundaries for digest exchange.
 //!
 //! Wiring: set [`DurabilityConfig`] on
 //! [`EngineConfig`](crate::coordinator::EngineConfig) (CLI:
@@ -33,6 +38,7 @@
 //! engine recovers before accepting work; `fast wal
 //! inspect|verify|compact|export` operate on the directory offline.
 
+pub mod cursor;
 pub mod recover;
 pub mod segment;
 pub mod snapshot;
@@ -41,6 +47,7 @@ pub mod wal;
 use std::path::PathBuf;
 use std::time::Duration;
 
+pub use cursor::{CursorEvent, WalCursor};
 pub use recover::{
     compact, export_trace, recover, recover_force, recover_or_init, recover_repair,
     CompactReport, RecoverReport, TornNote,

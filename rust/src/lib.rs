@@ -47,6 +47,12 @@
 //!   atomic full-state snapshots, torn-tail-repairing crash recovery,
 //!   and WAL→trace interop (`fast serve --wal-dir`,
 //!   `fast wal inspect|verify|compact|export`).
+//! - [`replication`] — WAL shipping over `fast-repl-v1`: read-only
+//!   followers tail a primary's sealed frames (`fast serve
+//!   --follower`), verify them with chained FNV + CRC digests,
+//!   fail-stop on divergence, and promote to a fenced-epoch primary
+//!   on failover (`fast promote`); includes a deterministic
+//!   fault-injection proxy for tests.
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   functional artifacts (Layer 1/2); compiles against a clean-failing
 //!   stub unless built with `--features pjrt`.
@@ -113,6 +119,7 @@ pub mod experiments;
 pub mod fastmem;
 pub mod metrics;
 pub mod query;
+pub mod replication;
 pub mod runtime;
 pub mod serve;
 pub mod timing;

@@ -22,6 +22,9 @@ use fast_sram::experiments::{
 };
 use fast_sram::metrics::render_table;
 use fast_sram::query;
+use fast_sram::replication::{
+    spawn_follower, FollowerOpts, ReplListener, ReplListenerCfg, ReplStats,
+};
 use fast_sram::runtime::{default_artifact_dir, validate, Runtime};
 use fast_sram::serve;
 use fast_sram::Result;
@@ -40,6 +43,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
         Some("serve") => cmd_serve(&args),
+        Some("promote") => cmd_promote(&args),
         Some("client") => cmd_client(&args),
         Some("query") => cmd_query(&args),
         Some("wal") => cmd_wal(&args),
@@ -310,6 +314,27 @@ fn build_engine(args: &Args) -> Result<UpdateEngine> {
     {
         bail!("--fsync/--fsync-interval-us/--wal-segment-bytes require --wal-dir");
     }
+    // Replication roles: a follower starts read-only (writes answer
+    // `ERR readonly` until `fast promote`), and both roles need the WAL
+    // — it is the follower's durable cursor and the primary's shipped
+    // history.
+    if args.get("follower").is_some() {
+        anyhow::ensure!(
+            cfg.durability.is_some(),
+            "--follower requires --wal-dir (the follower's WAL is its durable \
+             replication cursor)"
+        );
+        anyhow::ensure!(
+            args.get("repl-listen").is_none(),
+            "--follower and --repl-listen are mutually exclusive roles"
+        );
+        cfg.read_only = true;
+    } else if args.get("repl-listen").is_some() {
+        anyhow::ensure!(
+            cfg.durability.is_some(),
+            "--repl-listen requires --wal-dir (followers stream the durable WAL)"
+        );
+    }
     let engine = match backend.as_str() {
         "fast" => match fidelity {
             // The bit-plane tier transposes the shard's whole bank set
@@ -348,7 +373,7 @@ fn build_engine(args: &Args) -> Result<UpdateEngine> {
 /// SHUTDOWN (TCP) or stdin closes (`--stdio`). Prints the final engine
 /// stats on shutdown (a table, or one JSON line with `--stats-json`).
 fn cmd_serve(args: &Args) -> Result<()> {
-    let engine = build_engine(args)?;
+    let engine = std::sync::Arc::new(build_engine(args)?);
     let cfg = engine.config().clone();
     let stats_json = args.get_bool("stats-json");
     if let Some(d) = &cfg.durability {
@@ -366,6 +391,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
+    // Replication role (validated by build_engine: both need --wal-dir).
+    let repl = if let Some(primary) = args.get("follower") {
+        let wal_dir = cfg.durability.as_ref().expect("follower has --wal-dir").dir.clone();
+        let fail_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let opts = FollowerOpts {
+            on_fail_stop: Some(std::sync::Arc::clone(&fail_stop)),
+            ..FollowerOpts::default()
+        };
+        let handle =
+            spawn_follower(std::sync::Arc::clone(&engine), wal_dir, primary.to_string(), opts)?;
+        eprintln!(
+            "replication: follower of {primary} (reads served at the applied watermark; \
+             writes answer ERR readonly until `fast promote`)"
+        );
+        Some(serve::ServeRepl {
+            stats: std::sync::Arc::clone(&handle.stats),
+            follower: Some(handle),
+            repl_listener: None,
+            fail_stop: Some(fail_stop),
+        })
+    } else if let Some(listen) = args.get("repl-listen") {
+        let wal_dir = cfg.durability.as_ref().expect("primary has --wal-dir").dir.clone();
+        let stats = ReplStats::new("primary", cfg.shards);
+        let listener = ReplListener::start(
+            listen,
+            ReplListenerCfg {
+                wal_dir,
+                rows: cfg.rows,
+                q: cfg.q,
+                shards: cfg.shards,
+                stats: std::sync::Arc::clone(&stats),
+            },
+        )?;
+        eprintln!(
+            "replication: shipping the WAL on {} (attach with \
+             `fast serve --follower {}`)",
+            listener.addr(),
+            listener.addr()
+        );
+        Some(serve::ServeRepl {
+            stats,
+            follower: None,
+            repl_listener: Some(listener),
+            fail_stop: None,
+        })
+    } else {
+        None
+    };
+
     let report = if args.get_bool("stdio") {
         eprintln!(
             "fast-serve-v1 on stdio: {} rows x {} bits, {} shard(s), backend {}",
@@ -374,7 +448,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg.shards,
             engine.stats().backend
         );
-        serve::serve_stdio(engine)?
+        serve::serve_stdio_with(engine, repl)?
     } else {
         let listen = args.get_str("listen", "127.0.0.1:4750").to_string();
         let listener = std::net::TcpListener::bind(&listen)
@@ -389,13 +463,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg.shards,
             engine.stats().backend
         );
-        serve::serve_tcp(engine, listener)?
+        serve::serve_tcp_with(engine, listener, repl)?
     };
 
     // Clean drain happened inside serve_*; report it.
     let s = &report.stats;
     if stats_json {
-        println!("{}", serve::stats_json(s));
+        println!("{}", serve::stats_json_with_repl(s, report.repl.as_ref()));
     } else {
         let mut rows_txt = vec![
             ("backend".to_string(), s.backend.to_string()),
@@ -422,8 +496,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 ),
             ));
         }
+        if let Some(r) = &report.repl {
+            rows_txt.push((
+                "replication".to_string(),
+                format!(
+                    "role {} | epoch {} | {} frame(s) | {} reconnect(s) | {} digest(s)",
+                    r.role, r.epoch, r.frames_applied, r.reconnects, r.digests_verified
+                ),
+            ));
+        }
         print!("{}", render_table("serve (drained)", &rows_txt));
     }
+    // A follower that fail-stopped on divergence must exit nonzero —
+    // its state can no longer be trusted to match the primary.
+    if let Some(r) = &report.repl {
+        if let Some(msg) = &r.failed {
+            bail!("replication fail-stop: {msg}");
+        }
+    }
+    Ok(())
+}
+
+/// `fast promote` — flip a replication follower into a writable
+/// primary: it stops replicating, fences a new epoch (the old primary
+/// is refused from then on), and starts accepting writes.
+fn cmd_promote(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("usage: fast promote --connect HOST:PORT"))?;
+    let epoch = serve::run_promote(addr)?;
+    println!("promoted: {addr} now accepts writes at epoch {epoch}");
     Ok(())
 }
 
@@ -453,7 +555,11 @@ fn cmd_client(args: &Args) -> Result<()> {
     if expect.is_some() && query.is_none() {
         bail!("--expect requires --query");
     }
-    let report = serve::run_client(
+    let retry = serve::ClientRetry {
+        retries: args.get_u64("retries", serve::ClientRetry::default().retries)?,
+        backoff_us: args.get_u64("backoff-us", serve::ClientRetry::default().backoff_us)?,
+    };
+    let report = serve::run_client_retry(
         &addr,
         trace.as_ref(),
         mode,
@@ -461,6 +567,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         query,
         expect,
         args.get_bool("shutdown"),
+        retry,
     )?;
     match report.digest {
         Some(digest) => println!("{digest}"),

@@ -1,0 +1,361 @@
+//! Deterministic fault injection for the replication stream: a TCP
+//! proxy that sits between a follower and its primary, parses the
+//! post-handshake `fast-repl-v1` record stream, and mangles it
+//! according to a seeded or scripted [`FaultPlan`].
+//!
+//! The proxy is protocol-aware on the primary→follower leg (faults
+//! land on whole records, so each injected failure is a *specific*
+//! failure mode, not random line noise) and a verbatim byte pipe on
+//! the follower→primary leg. The plan's state is shared across
+//! reconnects: record indices keep counting when the follower comes
+//! back, so a script like "forge record 7" fires exactly once no
+//! matter how many connections it takes to get there.
+//!
+//! Fault vocabulary and what the follower must do about each:
+//!
+//! | action        | wire effect                          | required reaction |
+//! |---------------|--------------------------------------|-------------------|
+//! | `Drop`        | frame never arrives → LSN gap        | reconnect, resume |
+//! | `Duplicate`   | frame arrives twice                  | skip the dup      |
+//! | `CorruptWire` | frame bytes flipped, CRC now wrong   | reconnect, resume |
+//! | `Truncate`    | partial record, connection dies      | reconnect, resume |
+//! | `Delay`       | frame arrives late                   | nothing (lag)     |
+//! | `Cut`         | connection dies mid-stream           | reconnect, resume |
+//! | `Swap`        | two frames reordered → LSN gap       | reconnect, resume |
+//! | `Forge`       | payload flipped, CRC *recomputed*    | **fail-stop**     |
+//!
+//! `Forge` is the divergence case: the frame is internally consistent
+//! but is not what the primary logged, which only the chained FNV can
+//! catch. Everything above it must end in transparent catch-up.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::util::crc32::crc32;
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::protocol::{
+    read_record, write_digest_record, write_frame_record, write_heartbeat, ReplRecord, GO_LINE,
+};
+
+/// What to do with one shipped frame record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Pass through untouched.
+    Deliver,
+    /// Swallow the record (follower sees an LSN gap next).
+    Drop,
+    /// Deliver the record twice back to back.
+    Duplicate,
+    /// Flip a frame byte WITHOUT fixing the CRC — detectable wire
+    /// damage; the follower must reconnect, never apply.
+    CorruptWire,
+    /// Flip a payload byte and RECOMPUTE the frame CRC — an internally
+    /// consistent forgery only the chained digest can catch. The
+    /// follower must fail-stop.
+    Forge,
+    /// Deliver a byte-truncated record, then kill the connection.
+    Truncate,
+    /// Sleep this many milliseconds, then deliver.
+    Delay(u64),
+    /// Kill the connection without delivering.
+    Cut,
+    /// Hold this record back and deliver it AFTER the next one
+    /// (reorder → LSN gap on the early frame).
+    Swap,
+}
+
+/// Seeded chaos probabilities (recoverable faults only — divergence
+/// faults are scripted so tests know exactly where they fire).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultProbs {
+    pub drop: f64,
+    pub duplicate: f64,
+    pub corrupt: f64,
+    pub cut: f64,
+    /// Probability of a delay, and how long it is.
+    pub delay: f64,
+    pub delay_ms: u64,
+}
+
+impl FaultProbs {
+    /// A mild mix of every recoverable fault.
+    pub fn mild() -> FaultProbs {
+        FaultProbs { drop: 0.04, duplicate: 0.04, corrupt: 0.03, cut: 0.02, delay: 0.05, delay_ms: 3 }
+    }
+}
+
+enum PlanKind {
+    Scripted(BTreeMap<u64, FaultAction>),
+    Chaos { rng: Rng, probs: FaultProbs },
+}
+
+/// A deterministic schedule of [`FaultAction`]s over the stream's
+/// frame records (0-indexed, counted across reconnects).
+pub struct FaultPlan {
+    kind: PlanKind,
+    next_idx: u64,
+}
+
+impl FaultPlan {
+    /// Deliver everything (control runs).
+    pub fn clean() -> FaultPlan {
+        FaultPlan::scripted([])
+    }
+
+    /// Explicit `(frame_index, action)` pairs; unlisted frames deliver.
+    pub fn scripted(actions: impl IntoIterator<Item = (u64, FaultAction)>) -> FaultPlan {
+        FaultPlan { kind: PlanKind::Scripted(actions.into_iter().collect()), next_idx: 0 }
+    }
+
+    /// Seeded recoverable chaos: same seed + probs → same schedule.
+    pub fn chaos(seed: u64, probs: FaultProbs) -> FaultPlan {
+        FaultPlan { kind: PlanKind::Chaos { rng: Rng::new(seed), probs }, next_idx: 0 }
+    }
+
+    /// The action for the next frame record (advances the index).
+    fn next_action(&mut self) -> FaultAction {
+        let idx = self.next_idx;
+        self.next_idx += 1;
+        match &mut self.kind {
+            PlanKind::Scripted(map) => map.get(&idx).copied().unwrap_or(FaultAction::Deliver),
+            PlanKind::Chaos { rng, probs } => {
+                // One RNG draw per category per frame keeps the
+                // schedule independent of which categories fire.
+                let drop = rng.chance(probs.drop);
+                let dup = rng.chance(probs.duplicate);
+                let corrupt = rng.chance(probs.corrupt);
+                let cut = rng.chance(probs.cut);
+                let delay = rng.chance(probs.delay);
+                if drop {
+                    FaultAction::Drop
+                } else if corrupt {
+                    FaultAction::CorruptWire
+                } else if dup {
+                    FaultAction::Duplicate
+                } else if cut {
+                    FaultAction::Cut
+                } else if delay {
+                    FaultAction::Delay(probs.delay_ms)
+                } else {
+                    FaultAction::Deliver
+                }
+            }
+        }
+    }
+}
+
+/// Man-in-the-middle proxy applying a [`FaultPlan`] to the
+/// primary→follower record stream. Point the follower at
+/// [`FaultProxy::addr`] instead of the primary.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    pub fn start(primary: SocketAddr, plan: FaultPlan) -> Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding fault proxy")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let plan = Arc::new(Mutex::new(plan));
+        let accept_stop = Arc::clone(&stop);
+        let accept_thread = thread::Builder::new()
+            .name("fault-proxy".into())
+            .spawn(move || {
+                while !accept_stop.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((conn, _)) => {
+                            let plan = Arc::clone(&plan);
+                            let _ = thread::Builder::new().name("fault-conn".into()).spawn(
+                                move || {
+                                    let _ = relay(conn, primary, &plan);
+                                },
+                            );
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawning fault proxy")?;
+        Ok(FaultProxy { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Where the follower should connect.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Handle one follower connection end to end.
+fn relay(follower: TcpStream, primary: SocketAddr, plan: &Mutex<FaultPlan>) -> Result<()> {
+    let upstream = TcpStream::connect(primary).context("fault proxy dialing primary")?;
+    // Follower→primary: verbatim byte pipe (handshake lines + nothing
+    // else in v1). Dies when either side closes.
+    let mut up_rx = follower.try_clone()?;
+    let mut up_tx = upstream.try_clone()?;
+    let up = thread::Builder::new().name("fault-up".into()).spawn(move || {
+        let _ = std::io::copy(&mut up_rx, &mut up_tx);
+        let _ = up_tx.shutdown(Shutdown::Write);
+    })?;
+    let res = pump_down(&upstream, &follower, plan);
+    // Ensure both directions die so the copy thread unblocks.
+    let _ = upstream.shutdown(Shutdown::Both);
+    let _ = follower.shutdown(Shutdown::Both);
+    let _ = up.join();
+    res
+}
+
+/// Primary→follower: relay the handshake verbatim, then parse records
+/// and apply the plan to frame records.
+fn pump_down(upstream: &TcpStream, follower: &TcpStream, plan: &Mutex<FaultPlan>) -> Result<()> {
+    let mut r = BufReader::new(upstream.try_clone()?);
+    let mut w = BufWriter::new(follower.try_clone()?);
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line).unwrap_or(0) == 0 {
+            return Ok(()); // primary closed during handshake
+        }
+        w.write_all(line.as_bytes())?;
+        w.flush()?;
+        let t = line.trim_end();
+        if t == GO_LINE {
+            break;
+        }
+        if t.starts_with("RERR") {
+            return Ok(());
+        }
+    }
+    // Held-back record for Swap: delivered right after the next
+    // delivered record.
+    let mut held: Option<Vec<u8>> = None;
+    loop {
+        let rec = match read_record(&mut r) {
+            Ok(rec) => rec,
+            Err(_) => return Ok(()), // primary closed / killed
+        };
+        let mut bytes = Vec::new();
+        let action = match &rec {
+            ReplRecord::Frame { chain, frame } => {
+                write_frame_record(&mut bytes, *chain, frame)?;
+                plan.lock().expect("fault plan lock").next_action()
+            }
+            ReplRecord::Digest(d) => {
+                write_digest_record(&mut bytes, d)?;
+                FaultAction::Deliver
+            }
+            ReplRecord::Heartbeat(tails) => {
+                write_heartbeat(&mut bytes, tails)?;
+                FaultAction::Deliver
+            }
+        };
+        match action {
+            FaultAction::Deliver => deliver(&mut w, bytes, &mut held)?,
+            FaultAction::Drop => {}
+            FaultAction::Duplicate => {
+                deliver(&mut w, bytes.clone(), &mut held)?;
+                deliver(&mut w, bytes, &mut held)?;
+            }
+            FaultAction::CorruptWire => {
+                // Flip the frame's final byte; the 8-byte record
+                // prefix (tag absent here: tag+len+chain = 13 bytes)
+                // stays intact so the follower reads a well-formed
+                // record whose FRAME fails its CRC check.
+                let last = bytes.len() - 1;
+                bytes[last] ^= 0xFF;
+                deliver(&mut w, bytes, &mut held)?;
+            }
+            FaultAction::Forge => {
+                // Record layout: tag(1) len(4) chain(8) | frame:
+                // flen(4) fcrc(4) payload. Flip the final payload byte
+                // and recompute fcrc so the frame stays internally
+                // consistent — only the chain can catch it.
+                let last = bytes.len() - 1;
+                bytes[last] ^= 0x01;
+                let fixed = crc32(&bytes[21..]);
+                bytes[17..21].copy_from_slice(&fixed.to_le_bytes());
+                deliver(&mut w, bytes, &mut held)?;
+            }
+            FaultAction::Truncate => {
+                let keep = bytes.len().saturating_sub(5).max(1);
+                w.write_all(&bytes[..keep])?;
+                w.flush()?;
+                return Ok(()); // connection dies mid-record
+            }
+            FaultAction::Delay(ms) => {
+                w.flush()?;
+                thread::sleep(Duration::from_millis(ms));
+                deliver(&mut w, bytes, &mut held)?;
+            }
+            FaultAction::Cut => return Ok(()),
+            FaultAction::Swap => {
+                held = Some(bytes); // rides out after the next delivery
+            }
+        }
+        w.flush()?;
+    }
+}
+
+fn deliver(w: &mut impl Write, bytes: Vec<u8>, held: &mut Option<Vec<u8>>) -> Result<()> {
+    w.write_all(&bytes)?;
+    if let Some(h) = held.take() {
+        w.write_all(&h)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_plans_fire_at_exact_indices() {
+        let mut p = FaultPlan::scripted([(1, FaultAction::Drop), (3, FaultAction::Forge)]);
+        assert_eq!(p.next_action(), FaultAction::Deliver);
+        assert_eq!(p.next_action(), FaultAction::Drop);
+        assert_eq!(p.next_action(), FaultAction::Deliver);
+        assert_eq!(p.next_action(), FaultAction::Forge);
+        assert_eq!(p.next_action(), FaultAction::Deliver);
+    }
+
+    #[test]
+    fn chaos_plans_are_seed_deterministic() {
+        let probs = FaultProbs::mild();
+        let mut a = FaultPlan::chaos(42, probs);
+        let mut b = FaultPlan::chaos(42, probs);
+        let mut c = FaultPlan::chaos(43, probs);
+        let sa: Vec<_> = (0..256).map(|_| a.next_action()).collect();
+        let sb: Vec<_> = (0..256).map(|_| b.next_action()).collect();
+        let sc: Vec<_> = (0..256).map(|_| c.next_action()).collect();
+        assert_eq!(sa, sb, "same seed, same schedule");
+        assert_ne!(sa, sc, "different seed, different schedule");
+        assert!(
+            sa.iter().any(|x| *x != FaultAction::Deliver),
+            "mild chaos over 256 frames should fire at least once"
+        );
+        // Chaos never emits the divergence fault — that is scripted only.
+        assert!(sa.iter().all(|x| *x != FaultAction::Forge));
+    }
+}

@@ -1,0 +1,261 @@
+//! Layer-5 replication: WAL shipping from a durable primary to live
+//! read-only followers, with divergence fail-stop and epoch-fenced
+//! promotion (`fast serve --follower`, `fast promote`).
+//!
+//! The design rides PR 5's durability subsystem end to end: the
+//! per-shard CRC32-framed WAL *is* the replication log. A primary
+//! tails its own segments with read-only [`WalCursor`]s
+//! ([`crate::durability::cursor`]) and ships raw frame bytes; a
+//! follower verifies each frame (CRC + chained FNV), re-logs it
+//! byte-identically through its own WAL, and applies it through the
+//! same sealed-batch path recovery uses — so a follower's directory is
+//! at all times a valid crash-recoverable WAL dir, and promotion is
+//! just "stop tailing, bump the epoch, accept writes".
+//!
+//! - [`protocol`] — `fast-repl-v1` handshake + binary record codec,
+//!   [`protocol::ShardChain`] digests, `repl.json` epoch persistence
+//! - [`primary`] — repl listener: accepts followers, pumps cursors
+//! - [`follower`] — reconnect loop with capped backoff + jitter,
+//!   verify/apply, divergence fail-stop, promotion
+//! - [`fault`] — deterministic fault-injection proxy for tests
+//!   (drop/duplicate/corrupt/truncate/delay/reorder, seeded)
+//!
+//! ## Invariants
+//!
+//! - **Cursor**: a follower requests `applied watermark + 1` per shard
+//!   on (re)connect; the primary replays from its segments, so any
+//!   retained history is resumable. Duplicates below the watermark are
+//!   skipped; gaps above it are wire errors (reconnect), never applied.
+//! - **Watermark**: a shard's applied LSN advances only after the
+//!   frame is re-logged AND applied on the follower — reads served at
+//!   the watermark are reads of replicated, durable state.
+//! - **Divergence = fail-stop**: a frame whose CRC passes but whose
+//!   chain/digest disagrees, a commit-seq mismatch, or an epoch from
+//!   the past makes the follower exit with a typed [`Divergence`]
+//!   error. A follower never serves state it cannot prove matches the
+//!   primary's log.
+
+pub mod fault;
+pub mod follower;
+pub mod primary;
+pub mod protocol;
+
+pub use fault::{FaultAction, FaultPlan, FaultProbs, FaultProxy};
+pub use follower::{spawn_follower, FollowerHandle, FollowerOpts};
+pub use primary::{ReplListener, ReplListenerCfg};
+pub use protocol::{load_epoch, store_epoch, HelloAck, SegmentDigest, ShardChain};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Typed marker for replica-state divergence: the streams disagree in
+/// a way reconnecting cannot heal (chain/digest mismatch, commit-seq
+/// mismatch, stale epoch, geometry mismatch). Followers fail-stop on
+/// it; everything else is a wire error and retries.
+#[derive(Debug)]
+pub struct Divergence(pub String);
+
+impl std::fmt::Display for Divergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "replica divergence: {}", self.0)
+    }
+}
+
+impl std::error::Error for Divergence {}
+
+/// Build a fail-stop divergence error.
+pub fn diverged(msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(Divergence(msg.into()))
+}
+
+/// True when `err`'s root cause is a [`Divergence`] (fail-stop) rather
+/// than a retryable wire problem.
+pub fn is_divergence(err: &anyhow::Error) -> bool {
+    err.root_cause().downcast_ref::<Divergence>().is_some()
+}
+
+/// Per-shard replication lag state (shared, lock-free on the hot path).
+pub struct ReplShardLag {
+    /// Highest LSN re-logged AND applied locally.
+    pub applied_lsn: AtomicU64,
+    /// Primary's durable tail LSN as last heard (frames + heartbeats).
+    pub primary_lsn: AtomicU64,
+    /// When `applied_lsn` last advanced (drives wall-clock lag).
+    last_advance: Mutex<Instant>,
+}
+
+/// Shared replication counters surfaced through `--stats-json` and the
+/// serve `STATS` verb. One instance per process role.
+pub struct ReplStats {
+    role: Mutex<&'static str>,
+    pub epoch: AtomicU64,
+    pub connected: AtomicBool,
+    pub reconnects: AtomicU64,
+    pub frames_applied: AtomicU64,
+    pub dup_frames: AtomicU64,
+    pub wire_errors: AtomicU64,
+    pub digests_verified: AtomicU64,
+    failed: Mutex<Option<String>>,
+    shards: Vec<ReplShardLag>,
+}
+
+impl ReplStats {
+    pub fn new(role: &'static str, shards: usize) -> Arc<ReplStats> {
+        Arc::new(ReplStats {
+            role: Mutex::new(role),
+            epoch: AtomicU64::new(0),
+            connected: AtomicBool::new(false),
+            reconnects: AtomicU64::new(0),
+            frames_applied: AtomicU64::new(0),
+            dup_frames: AtomicU64::new(0),
+            wire_errors: AtomicU64::new(0),
+            digests_verified: AtomicU64::new(0),
+            failed: Mutex::new(None),
+            shards: (0..shards)
+                .map(|_| ReplShardLag {
+                    applied_lsn: AtomicU64::new(0),
+                    primary_lsn: AtomicU64::new(0),
+                    last_advance: Mutex::new(Instant::now()),
+                })
+                .collect(),
+        })
+    }
+
+    pub fn role(&self) -> &'static str {
+        *self.role.lock().expect("repl role lock")
+    }
+
+    pub fn set_role(&self, role: &'static str) {
+        *self.role.lock().expect("repl role lock") = role;
+    }
+
+    pub fn record_applied(&self, shard: usize, lsn: u64) {
+        let s = &self.shards[shard];
+        s.applied_lsn.store(lsn, Ordering::Release);
+        *s.last_advance.lock().expect("lag lock") = Instant::now();
+    }
+
+    pub fn record_primary_tail(&self, shard: usize, lsn: u64) {
+        let s = &self.shards[shard];
+        s.primary_lsn.fetch_max(lsn, Ordering::AcqRel);
+    }
+
+    pub fn applied_lsn(&self, shard: usize) -> u64 {
+        self.shards[shard].applied_lsn.load(Ordering::Acquire)
+    }
+
+    /// Record a fail-stop reason (first one wins).
+    pub fn fail(&self, msg: String) {
+        let mut f = self.failed.lock().expect("repl failed lock");
+        if f.is_none() {
+            *f = Some(msg);
+        }
+    }
+
+    pub fn failed(&self) -> Option<String> {
+        self.failed.lock().expect("repl failed lock").clone()
+    }
+
+    pub fn snapshot(&self) -> ReplSnapshot {
+        let now = Instant::now();
+        ReplSnapshot {
+            role: self.role(),
+            epoch: self.epoch.load(Ordering::Acquire),
+            connected: self.connected.load(Ordering::Acquire),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            frames_applied: self.frames_applied.load(Ordering::Relaxed),
+            dup_frames: self.dup_frames.load(Ordering::Relaxed),
+            wire_errors: self.wire_errors.load(Ordering::Relaxed),
+            digests_verified: self.digests_verified.load(Ordering::Relaxed),
+            failed: self.failed(),
+            shards: self
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(shard, s)| {
+                    let applied = s.applied_lsn.load(Ordering::Acquire);
+                    let primary = s.primary_lsn.load(Ordering::Acquire);
+                    let lag_wall_ms = if primary > applied {
+                        now.duration_since(*s.last_advance.lock().expect("lag lock"))
+                            .as_millis() as u64
+                    } else {
+                        0
+                    };
+                    ReplShardLagSnap {
+                        shard,
+                        applied_lsn: applied,
+                        primary_lsn: primary,
+                        lag_lsn: primary.saturating_sub(applied),
+                        lag_wall_ms,
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time view of one shard's lag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplShardLagSnap {
+    pub shard: usize,
+    pub applied_lsn: u64,
+    pub primary_lsn: u64,
+    /// `primary_lsn - applied_lsn` (0 when caught up).
+    pub lag_lsn: u64,
+    /// Milliseconds since the applied watermark last advanced, 0 when
+    /// caught up.
+    pub lag_wall_ms: u64,
+}
+
+/// Point-in-time view of the whole replication state, serialized into
+/// `--stats-json` under the `"repl"` key.
+#[derive(Debug, Clone)]
+pub struct ReplSnapshot {
+    pub role: &'static str,
+    pub epoch: u64,
+    pub connected: bool,
+    pub reconnects: u64,
+    pub frames_applied: u64,
+    pub dup_frames: u64,
+    pub wire_errors: u64,
+    pub digests_verified: u64,
+    /// Fail-stop reason, if the follower stopped on divergence.
+    pub failed: Option<String>,
+    pub shards: Vec<ReplShardLagSnap>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divergence_classification_survives_context() {
+        use anyhow::Context;
+        let e = diverged("chain mismatch at lsn 9");
+        assert!(is_divergence(&e));
+        let wrapped = Err::<(), _>(e).context("while applying shard 2").unwrap_err();
+        assert!(is_divergence(&wrapped), "downcast must see through context layers");
+        assert!(!is_divergence(&anyhow::anyhow!("connection reset")));
+    }
+
+    #[test]
+    fn lag_snapshot_tracks_watermarks() {
+        let stats = ReplStats::new("follower", 2);
+        stats.record_primary_tail(0, 10);
+        stats.record_applied(0, 7);
+        stats.record_primary_tail(1, 4);
+        stats.record_applied(1, 4);
+        // fetch_max never regresses the tail.
+        stats.record_primary_tail(0, 9);
+        let snap = stats.snapshot();
+        assert_eq!(snap.shards[0].lag_lsn, 3);
+        assert_eq!(snap.shards[0].primary_lsn, 10);
+        assert_eq!(snap.shards[1].lag_lsn, 0);
+        assert_eq!(snap.shards[1].lag_wall_ms, 0, "caught up means zero wall lag");
+        assert_eq!(snap.role, "follower");
+        stats.fail("boom".into());
+        stats.fail("later".into());
+        assert_eq!(stats.failed().as_deref(), Some("boom"), "first fail-stop reason wins");
+    }
+}

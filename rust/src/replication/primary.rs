@@ -1,0 +1,236 @@
+//! Primary side of WAL shipping: a listener that accepts follower
+//! connections, replays history from the shard segments with
+//! read-only [`WalCursor`]s, and live-tails new frames as the engine
+//! appends them.
+//!
+//! The listener never touches the engine: the durable log is the
+//! source of truth, so a frame is shipped if and only if it is on
+//! disk — a follower can never get ahead of what a primary crash
+//! would preserve. Each connection runs its own cursors and
+//! [`ShardChain`]s seeded from the follower's requested LSNs, pumps
+//! shards round-robin (bounded burst per shard per round so one hot
+//! shard cannot starve the rest), emits a `'D'` digest at every
+//! segment boundary, and heartbeats durable tail LSNs while idle.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::durability::cursor::{CursorEvent, WalCursor};
+use crate::durability::segment::list_segments;
+use crate::Result;
+
+use super::protocol::{
+    err_line, load_epoch, ok_line, parse_hello, parse_start, write_digest_record,
+    write_frame_record, write_heartbeat, GO_LINE,
+};
+use super::{ReplStats, ShardChain};
+
+/// Max frames pumped per shard per round-robin pass.
+const BURST: usize = 64;
+/// Idle poll interval when fully caught up.
+const IDLE_POLL: Duration = Duration::from_millis(20);
+/// Heartbeat every N idle polls (~100 ms at the default interval).
+const HEARTBEAT_EVERY: u32 = 5;
+
+/// What a connection needs to serve a follower.
+#[derive(Clone)]
+pub struct ReplListenerCfg {
+    pub wal_dir: PathBuf,
+    pub rows: usize,
+    pub q: usize,
+    pub shards: usize,
+    pub stats: Arc<ReplStats>,
+}
+
+/// The primary's replication listener (`fast serve --repl-listen`).
+/// Dropping it stops the accept loop; in-flight connections notice the
+/// stop flag within one idle poll.
+pub struct ReplListener {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl ReplListener {
+    pub fn start(listen: &str, cfg: ReplListenerCfg) -> Result<ReplListener> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding repl listener on {listen}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let conns = Arc::new(AtomicU64::new(0));
+        let accept_thread = thread::Builder::new()
+            .name("repl-listen".into())
+            .spawn(move || {
+                while !accept_stop.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((conn, peer)) => {
+                            let cfg = cfg.clone();
+                            let stop = Arc::clone(&accept_stop);
+                            let conns = Arc::clone(&conns);
+                            let _ = thread::Builder::new().name("repl-conn".into()).spawn(
+                                move || {
+                                    conns.fetch_add(1, Ordering::AcqRel);
+                                    cfg.stats.connected.store(true, Ordering::Release);
+                                    if let Err(e) = serve_follower(conn, &cfg, &stop) {
+                                        eprintln!(
+                                            "fast serve: repl connection from {peer} ended: {e:#}"
+                                        );
+                                    }
+                                    if conns.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                        cfg.stats.connected.store(false, Ordering::Release);
+                                    }
+                                },
+                            );
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(IDLE_POLL);
+                        }
+                        Err(e) => {
+                            eprintln!("fast serve: repl accept failed: {e}");
+                            break;
+                        }
+                    }
+                }
+            })
+            .context("spawning repl listener")?;
+        Ok(ReplListener { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (useful with port 0 in tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for ReplListener {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Handshake + pump loop for one follower connection.
+fn serve_follower(conn: TcpStream, cfg: &ReplListenerCfg, stop: &AtomicBool) -> Result<()> {
+    conn.set_nodelay(true)?;
+    let mut r = BufReader::new(conn.try_clone()?);
+    let mut w = BufWriter::new(conn);
+
+    let mut line = String::new();
+    r.read_line(&mut line).context("reading RHELLO")?;
+    let follower_epoch = match parse_hello(line.trim_end()) {
+        Ok(e) => e,
+        Err(e) => {
+            writeln!(w, "{}", err_line(&format!("{e:#}")))?;
+            w.flush()?;
+            return Err(e);
+        }
+    };
+    let my_epoch = load_epoch(&cfg.wal_dir)?;
+    cfg.stats.epoch.store(my_epoch, Ordering::Release);
+    if follower_epoch > my_epoch {
+        let msg = format!(
+            "follower epoch {follower_epoch} is ahead of this primary's epoch {my_epoch} — \
+             this primary is stale (a follower was promoted past it); do not replicate from it"
+        );
+        writeln!(w, "{}", err_line(&msg))?;
+        w.flush()?;
+        anyhow::bail!("{msg}");
+    }
+    writeln!(w, "{}", ok_line(cfg.rows, cfg.q, cfg.shards, my_epoch))?;
+    w.flush()?;
+
+    line.clear();
+    r.read_line(&mut line).context("reading RSTART")?;
+    let (echo_epoch, lsns) = match parse_start(line.trim_end()) {
+        Ok(v) => v,
+        Err(e) => {
+            writeln!(w, "{}", err_line(&format!("{e:#}")))?;
+            w.flush()?;
+            return Err(e);
+        }
+    };
+    if echo_epoch != my_epoch || lsns.len() != cfg.shards {
+        let msg = if echo_epoch != my_epoch {
+            format!("RSTART echoes epoch {echo_epoch}, primary is at {my_epoch}")
+        } else {
+            format!("RSTART carries {} lsns for {} shards", lsns.len(), cfg.shards)
+        };
+        writeln!(w, "{}", err_line(&msg))?;
+        w.flush()?;
+        anyhow::bail!("{msg}");
+    }
+    // Pre-validate coverage so a compacted-away cursor is an
+    // actionable handshake refusal, not a mid-stream hangup.
+    for (shard, &lsn) in lsns.iter().enumerate() {
+        let segs = list_segments(&cfg.wal_dir, shard)?;
+        if let Some(oldest) = segs.first() {
+            if lsn < oldest.first_lsn {
+                let msg = format!(
+                    "shard {shard}: lsn {lsn} was compacted away (oldest retained {}) — \
+                     re-seed the follower from a fresh copy of the primary's WAL dir",
+                    oldest.first_lsn
+                );
+                writeln!(w, "{}", err_line(&msg))?;
+                w.flush()?;
+                anyhow::bail!("{msg}");
+            }
+        }
+    }
+    writeln!(w, "{GO_LINE}")?;
+    w.flush()?;
+
+    let mut cursors = Vec::with_capacity(cfg.shards);
+    let mut chains = Vec::with_capacity(cfg.shards);
+    for (shard, &lsn) in lsns.iter().enumerate() {
+        cursors.push(WalCursor::new(&cfg.wal_dir, shard, lsn)?);
+        chains.push(ShardChain::new(shard as u32, lsn));
+    }
+
+    let mut idle_polls: u32 = 0;
+    while !stop.load(Ordering::Acquire) {
+        let mut shipped = false;
+        for shard in 0..cfg.shards {
+            for _ in 0..BURST {
+                match cursors[shard].poll()? {
+                    CursorEvent::Frame { record: _, frame } => {
+                        let chain = chains[shard].absorb(&frame);
+                        write_frame_record(&mut w, chain, &frame)?;
+                        cfg.stats.frames_applied.fetch_add(1, Ordering::Relaxed);
+                        shipped = true;
+                    }
+                    CursorEvent::SegmentSealed { upto_lsn } => {
+                        write_digest_record(&mut w, &chains[shard].digest(shard as u32, upto_lsn))?;
+                        cfg.stats.digests_verified.fetch_add(1, Ordering::Relaxed);
+                        shipped = true;
+                    }
+                    CursorEvent::Idle => break,
+                }
+            }
+            cfg.stats.record_primary_tail(shard, cursors[shard].tail_seen());
+        }
+        w.flush()?;
+        if shipped {
+            idle_polls = 0;
+            continue;
+        }
+        idle_polls += 1;
+        if idle_polls % HEARTBEAT_EVERY == 0 {
+            let tails: Vec<u64> = cursors.iter().map(WalCursor::tail_seen).collect();
+            write_heartbeat(&mut w, &tails)?;
+            w.flush()?;
+        }
+        thread::sleep(IDLE_POLL);
+    }
+    Ok(())
+}

@@ -1,0 +1,471 @@
+//! `fast-repl-v1` wire protocol: the frame-shipping stream between a
+//! WAL-bearing primary and a read-only follower, plus the epoch file
+//! that fences promoted followers against a returning old primary.
+//!
+//! ## Handshake (text, one line each, `\n`-terminated)
+//!
+//! ```text
+//! F→P  RHELLO fast-repl-v1 epoch=<E>
+//! P→F  ROK fast-repl-v1 rows=<R> q=<Q> shards=<S> epoch=<E>     (or RERR <msg>)
+//! F→P  RSTART epoch=<E> lsns=<l0>,<l1>,...                      (one per shard,
+//!                                                                first lsn wanted)
+//! P→F  RGO                                                      (or RERR <msg>)
+//! ```
+//!
+//! The follower echoes the primary's epoch in `RSTART` so both sides
+//! agree on which history they are shipping before a single frame
+//! moves. After `RGO` the stream switches to binary records, P→F only:
+//!
+//! ```text
+//! 'F' | len:u32 | chain:u64 | frame[len]     one WAL frame (len|crc|payload
+//!                                            exactly as on the primary's disk),
+//!                                            chain = primary's running FNV after
+//!                                            absorbing this frame
+//! 'D' | shard:u32 | upto_lsn:u64 | frames:u64 | crc:u32 | fnv:u64
+//!                                            segment-boundary digest: cumulative
+//!                                            over every frame shipped for the
+//!                                            shard on THIS connection
+//! 'H' | nshards:u32 | nshards × tail:u64     heartbeat: primary's durable tail
+//!                                            lsn per shard (lag measurement)
+//! ```
+//!
+//! All integers little-endian. The per-frame `chain` value lets the
+//! follower detect divergence on the very frame where histories split
+//! (not just at the next segment boundary); the `'D'` digest
+//! cross-checks the CRC32 accumulation as well, riding the same CRC
+//! the `wal verify` machinery trusts.
+//!
+//! ## Epoch fencing (`repl.json`)
+//!
+//! A WAL dir carries a replication epoch (missing file = epoch 0).
+//! `fast promote` bumps it durably before the engine accepts writes;
+//! a primary refuses followers from a *newer* epoch (it has been
+//! promoted past), and a follower fail-stops on a primary from an
+//! *older* epoch (stale pre-failover primary came back).
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::durability::wal::MAX_PAYLOAD;
+use crate::util::crc32::Crc32;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Protocol / epoch-file format tag.
+pub const REPL_FORMAT: &str = "fast-repl-v1";
+/// Epoch file name inside a WAL dir.
+pub const REPL_FILE: &str = "repl.json";
+/// The go-ahead line ending the handshake.
+pub const GO_LINE: &str = "RGO";
+
+/// Smallest shippable frame: 8-byte frame header + the WAL's fixed
+/// payload fields.
+const MIN_FRAME: u32 = 8 + 27;
+/// Heartbeats size sanity cap (shard counts are small powers of two).
+const MAX_HEARTBEAT_SHARDS: u32 = 4096;
+
+// ---------------------------------------------------------------------------
+// Epoch file
+
+/// Read the replication epoch from `dir` (missing file = epoch 0).
+pub fn load_epoch(dir: &Path) -> Result<u64> {
+    let path = dir.join(REPL_FILE);
+    if !path.exists() {
+        return Ok(0);
+    }
+    let text = fs::read_to_string(&path)
+        .with_context(|| format!("reading epoch file {}", path.display()))?;
+    let j = Json::parse(text.trim()).context("parsing epoch file")?;
+    ensure!(
+        j.get("repl").and_then(Json::as_str) == Some(REPL_FORMAT),
+        "{} is not a {REPL_FORMAT} epoch file",
+        path.display()
+    );
+    let epoch = j
+        .get("epoch")
+        .and_then(Json::as_usize)
+        .with_context(|| format!("{}: missing/invalid \"epoch\"", path.display()))?;
+    Ok(epoch as u64)
+}
+
+/// Durably persist `epoch` into `dir` (write-temp + rename + dir
+/// fsync, same discipline as the WAL manifest).
+pub fn store_epoch(dir: &Path, epoch: u64) -> Result<()> {
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(REPL_FILE);
+    let tmp = dir.join(format!("{REPL_FILE}.tmp"));
+    let body = format!("{{\"repl\":\"{REPL_FORMAT}\",\"epoch\":{epoch}}}\n");
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(body.as_bytes())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming epoch file into {}", path.display()))?;
+    if let Ok(d) = fs::File::open(dir) {
+        let _ = d.sync_all(); // best-effort directory fsync (POSIX)
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Handshake lines
+
+/// Geometry + epoch the primary advertises in `ROK`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HelloAck {
+    pub rows: usize,
+    pub q: usize,
+    pub shards: usize,
+    pub epoch: u64,
+}
+
+pub fn hello_line(epoch: u64) -> String {
+    format!("RHELLO {REPL_FORMAT} epoch={epoch}")
+}
+
+pub fn parse_hello(line: &str) -> Result<u64> {
+    let mut t = line.split_whitespace();
+    ensure!(t.next() == Some("RHELLO"), "expected RHELLO, got {line:?}");
+    ensure!(
+        t.next() == Some(REPL_FORMAT),
+        "unsupported repl protocol in {line:?} (this side speaks {REPL_FORMAT})"
+    );
+    let epoch = kv(t.next(), "epoch", line)?;
+    Ok(epoch)
+}
+
+pub fn ok_line(rows: usize, q: usize, shards: usize, epoch: u64) -> String {
+    format!("ROK {REPL_FORMAT} rows={rows} q={q} shards={shards} epoch={epoch}")
+}
+
+pub fn parse_ok(line: &str) -> Result<HelloAck> {
+    if let Some(msg) = line.strip_prefix("RERR ") {
+        bail!("primary refused the handshake: {msg}");
+    }
+    let mut t = line.split_whitespace();
+    ensure!(t.next() == Some("ROK"), "expected ROK, got {line:?}");
+    ensure!(
+        t.next() == Some(REPL_FORMAT),
+        "primary speaks a different repl protocol: {line:?}"
+    );
+    Ok(HelloAck {
+        rows: kv(t.next(), "rows", line)? as usize,
+        q: kv(t.next(), "q", line)? as usize,
+        shards: kv(t.next(), "shards", line)? as usize,
+        epoch: kv(t.next(), "epoch", line)?,
+    })
+}
+
+pub fn start_line(epoch: u64, lsns: &[u64]) -> String {
+    let lsns = lsns.iter().map(u64::to_string).collect::<Vec<_>>().join(",");
+    format!("RSTART epoch={epoch} lsns={lsns}")
+}
+
+pub fn parse_start(line: &str) -> Result<(u64, Vec<u64>)> {
+    let mut t = line.split_whitespace();
+    ensure!(t.next() == Some("RSTART"), "expected RSTART, got {line:?}");
+    let epoch = kv(t.next(), "epoch", line)?;
+    let lsns_tok = t
+        .next()
+        .and_then(|s| s.strip_prefix("lsns="))
+        .with_context(|| format!("missing lsns= in {line:?}"))?;
+    let mut lsns = Vec::new();
+    for part in lsns_tok.split(',') {
+        let lsn: u64 = part
+            .parse()
+            .with_context(|| format!("bad lsn {part:?} in {line:?}"))?;
+        ensure!(lsn >= 1, "lsn space starts at 1 (got {lsn} in {line:?})");
+        lsns.push(lsn);
+    }
+    Ok((epoch, lsns))
+}
+
+pub fn err_line(msg: &str) -> String {
+    // Keep the reply single-line whatever the error chain contains.
+    format!("RERR {}", msg.replace('\n', "; "))
+}
+
+fn kv(tok: Option<&str>, key: &str, line: &str) -> Result<u64> {
+    let tok = tok.with_context(|| format!("missing {key}= in {line:?}"))?;
+    let val = tok
+        .strip_prefix(key)
+        .and_then(|s| s.strip_prefix('='))
+        .with_context(|| format!("expected {key}=<n>, got {tok:?} in {line:?}"))?;
+    val.parse::<u64>()
+        .with_context(|| format!("bad {key} value {val:?} in {line:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Binary stream records
+
+/// Cumulative digest of every frame shipped for one shard on one
+/// connection, emitted at segment boundaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentDigest {
+    pub shard: u32,
+    /// Highest LSN covered by this digest.
+    pub upto_lsn: u64,
+    /// Frames absorbed since the connection's start LSN.
+    pub frames: u64,
+    /// CRC32 over the concatenated frame bytes.
+    pub crc: u32,
+    /// FNV-1a chain value (seeded from shard + start LSN).
+    pub fnv: u64,
+}
+
+/// One decoded post-handshake record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplRecord {
+    /// A WAL frame plus the shipper's chain value after absorbing it.
+    Frame { chain: u64, frame: Vec<u8> },
+    /// Segment-boundary digest for one shard.
+    Digest(SegmentDigest),
+    /// Primary's durable tail LSN per shard.
+    Heartbeat(Vec<u64>),
+}
+
+pub fn write_frame_record(w: &mut impl Write, chain: u64, frame: &[u8]) -> Result<()> {
+    ensure!(
+        frame.len() >= MIN_FRAME as usize && frame.len() <= 8 + MAX_PAYLOAD as usize,
+        "refusing to ship an implausible {}-byte frame",
+        frame.len()
+    );
+    w.write_all(&[b'F'])?;
+    w.write_all(&(frame.len() as u32).to_le_bytes())?;
+    w.write_all(&chain.to_le_bytes())?;
+    w.write_all(frame)?;
+    Ok(())
+}
+
+pub fn write_digest_record(w: &mut impl Write, d: &SegmentDigest) -> Result<()> {
+    w.write_all(&[b'D'])?;
+    w.write_all(&d.shard.to_le_bytes())?;
+    w.write_all(&d.upto_lsn.to_le_bytes())?;
+    w.write_all(&d.frames.to_le_bytes())?;
+    w.write_all(&d.crc.to_le_bytes())?;
+    w.write_all(&d.fnv.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn write_heartbeat(w: &mut impl Write, tails: &[u64]) -> Result<()> {
+    ensure!(
+        tails.len() <= MAX_HEARTBEAT_SHARDS as usize,
+        "heartbeat for {} shards exceeds the sanity cap",
+        tails.len()
+    );
+    w.write_all(&[b'H'])?;
+    w.write_all(&(tails.len() as u32).to_le_bytes())?;
+    for t in tails {
+        w.write_all(&t.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read one post-handshake record. Errors distinguish a clean read
+/// failure (caller maps to a reconnect) from garbage tags/lengths
+/// (unrecoverable stream corruption).
+pub fn read_record(r: &mut impl Read) -> Result<ReplRecord> {
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag).context("reading repl record tag")?;
+    match tag[0] {
+        b'F' => {
+            let len = read_u32(r)?;
+            ensure!(
+                (MIN_FRAME..=8 + MAX_PAYLOAD).contains(&len),
+                "implausible shipped-frame length {len}"
+            );
+            let chain = read_u64(r)?;
+            let mut frame = vec![0u8; len as usize];
+            r.read_exact(&mut frame).context("reading shipped frame")?;
+            Ok(ReplRecord::Frame { chain, frame })
+        }
+        b'D' => Ok(ReplRecord::Digest(SegmentDigest {
+            shard: read_u32(r)?,
+            upto_lsn: read_u64(r)?,
+            frames: read_u64(r)?,
+            crc: read_u32(r)?,
+            fnv: read_u64(r)?,
+        })),
+        b'H' => {
+            let n = read_u32(r)?;
+            ensure!(
+                n <= MAX_HEARTBEAT_SHARDS,
+                "heartbeat claims {n} shards — stream corrupt"
+            );
+            let mut tails = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                tails.push(read_u64(r)?);
+            }
+            Ok(ReplRecord::Heartbeat(tails))
+        }
+        t => bail!("unknown repl record tag 0x{t:02x} — stream corrupt"),
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("reading repl record field")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("reading repl record field")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+// ---------------------------------------------------------------------------
+// Shard chain digest
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Running digest over the exact frame bytes shipped for one shard.
+/// Primary and follower each run one per shard per connection; the
+/// FNV value travels with every frame, the CRC32 is cross-checked at
+/// segment boundaries. Seeded from `(shard, start_lsn)` so resuming
+/// from different cursors never aliases.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardChain {
+    fnv: u64,
+    crc: Crc32,
+    frames: u64,
+}
+
+impl ShardChain {
+    pub fn new(shard: u32, start_lsn: u64) -> ShardChain {
+        let mut fnv = FNV_OFFSET;
+        for b in shard
+            .to_le_bytes()
+            .into_iter()
+            .chain(start_lsn.to_le_bytes())
+        {
+            fnv = (fnv ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        ShardChain { fnv, crc: Crc32::new(), frames: 0 }
+    }
+
+    /// Fold one frame's bytes in; returns the new chain value.
+    pub fn absorb(&mut self, frame: &[u8]) -> u64 {
+        for &b in frame {
+            self.fnv = (self.fnv ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        self.crc = self.crc.update(frame);
+        self.frames += 1;
+        self.fnv
+    }
+
+    pub fn fnv(&self) -> u64 {
+        self.fnv
+    }
+
+    pub fn crc(&self) -> u32 {
+        self.crc.finish()
+    }
+
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    /// Package the running state as a segment-boundary digest.
+    pub fn digest(&self, shard: u32, upto_lsn: u64) -> SegmentDigest {
+        SegmentDigest {
+            shard,
+            upto_lsn,
+            frames: self.frames,
+            crc: self.crc(),
+            fnv: self.fnv,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handshake_lines_round_trip() {
+        assert_eq!(parse_hello(&hello_line(7)).unwrap(), 7);
+        let ack = parse_ok(&ok_line(1024, 8, 4, 3)).unwrap();
+        assert_eq!(ack, HelloAck { rows: 1024, q: 8, shards: 4, epoch: 3 });
+        let (epoch, lsns) = parse_start(&start_line(3, &[1, 17, 9])).unwrap();
+        assert_eq!((epoch, lsns), (3, vec![1, 17, 9]));
+        assert!(parse_ok(&err_line("no\nsuch luck")).unwrap_err().to_string().contains("no; such luck"));
+        assert!(parse_hello("RHELLO fast-repl-v2 epoch=0").is_err());
+        assert!(parse_start("RSTART epoch=0 lsns=0").is_err(), "lsn 0 is invalid");
+    }
+
+    #[test]
+    fn binary_records_round_trip() {
+        let frame = vec![0xAA; MIN_FRAME as usize];
+        let digest =
+            SegmentDigest { shard: 2, upto_lsn: 99, frames: 40, crc: 0xDEAD_BEEF, fnv: 12345 };
+        let mut buf = Vec::new();
+        write_frame_record(&mut buf, 777, &frame).unwrap();
+        write_digest_record(&mut buf, &digest).unwrap();
+        write_heartbeat(&mut buf, &[5, 6, 7]).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(
+            read_record(&mut r).unwrap(),
+            ReplRecord::Frame { chain: 777, frame: frame.clone() }
+        );
+        assert_eq!(read_record(&mut r).unwrap(), ReplRecord::Digest(digest));
+        assert_eq!(read_record(&mut r).unwrap(), ReplRecord::Heartbeat(vec![5, 6, 7]));
+        assert!(r.is_empty());
+        // A garbage tag is corruption, not EOF.
+        let mut junk: &[u8] = &[0x42];
+        assert!(read_record(&mut junk).unwrap_err().to_string().contains("tag"));
+    }
+
+    #[test]
+    fn chains_are_deterministic_and_seed_sensitive() {
+        let frames: Vec<Vec<u8>> = (0..4u8).map(|i| vec![i; 64]).collect();
+        let mut a = ShardChain::new(1, 5);
+        let mut b = ShardChain::new(1, 5);
+        for f in &frames {
+            let va = a.absorb(f);
+            let vb = b.absorb(f);
+            assert_eq!(va, vb);
+        }
+        assert_eq!(a.crc(), b.crc());
+        assert_eq!(a.frames(), 4);
+        // Same frames from a different start lsn or shard: different chain.
+        let mut c = ShardChain::new(1, 6);
+        let mut d = ShardChain::new(2, 5);
+        for f in &frames {
+            c.absorb(f);
+            d.absorb(f);
+        }
+        assert_ne!(a.fnv(), c.fnv());
+        assert_ne!(a.fnv(), d.fnv());
+        // CRC ignores the seed by construction — that's WHY both travel.
+        assert_eq!(a.crc(), c.crc());
+        let dg = a.digest(1, 42);
+        assert_eq!(dg.frames, 4);
+        assert_eq!(dg.upto_lsn, 42);
+        assert_eq!(dg.fnv, a.fnv());
+    }
+
+    #[test]
+    fn epoch_file_round_trips_and_defaults_to_zero() {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let d = std::env::temp_dir().join(format!("fast-epoch-{}-{nanos}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        assert_eq!(load_epoch(&d).unwrap(), 0, "missing file means epoch 0");
+        store_epoch(&d, 9).unwrap();
+        assert_eq!(load_epoch(&d).unwrap(), 9);
+        store_epoch(&d, 10).unwrap();
+        assert_eq!(load_epoch(&d).unwrap(), 10);
+        std::fs::write(d.join(REPL_FILE), "{\"repl\":\"other\",\"epoch\":1}\n").unwrap();
+        assert!(load_epoch(&d).is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -43,6 +43,8 @@
 //!                       client saw before sending the QRY, and the
 //!                       observed per-shard commit seqs are reported.
 //! STATS                 → OK <one-line JSON engine stats>
+//! PROMOTE               → OK promoted epoch=<E>  (follower only: stop
+//!                         replicating, fence a new epoch, accept writes)
 //! QUIT                  → OK bye          (closes this connection)
 //! SHUTDOWN              → OK draining     (server drains every shard and exits)
 //! ```
@@ -51,7 +53,12 @@
 //! queue is full, the update line answers `ERR busy …` and the client
 //! retries — the server never buffers unboundedly on behalf of a
 //! client. Engine errors (bad row, shut-down engine) answer `ERR …`
-//! on the offending line; the connection stays usable.
+//! on the offending line; the connection stays usable. Two more typed
+//! `ERR` classes let clients react without string-matching prose: a
+//! replication follower answers every update/write line with
+//! `ERR readonly …` until promoted, and a blocked `WAIT`/CMT aborted
+//! by server shutdown answers `ERR shutdown …` within one wait-poll
+//! interval of the stop flag rising.
 //!
 //! Shutdown is a clean drain: new connections stop being accepted,
 //! open sessions wind down, every shard is drained (per-shard — the
@@ -68,14 +75,23 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, ensure, Context};
 
 use crate::apps::trace::{state_digest, Trace, TraceEvent};
-use crate::coordinator::{EngineBusy, EngineStats, SealReason, UpdateEngine};
+use crate::coordinator::{EngineBusy, EngineReadOnly, EngineStats, SealReason, UpdateEngine};
 use crate::metrics::LatencySummary;
+use crate::replication::{FollowerHandle, ReplListener, ReplSnapshot, ReplStats};
+use crate::util::rng::Rng;
 use crate::Result;
 
 /// Is this submit error transient backpressure (retry) rather than a
 /// terminal engine failure?
 fn is_busy(e: &anyhow::Error) -> bool {
     e.root_cause().downcast_ref::<EngineBusy>().is_some()
+}
+
+/// Is this a read-only (replication follower) rejection? Typed on the
+/// wire as `ERR readonly …` so clients know the server exists and is
+/// healthy — they should redirect writes to the primary, not retry.
+fn is_readonly(e: &anyhow::Error) -> bool {
+    e.root_cause().downcast_ref::<EngineReadOnly>().is_some()
 }
 
 /// How often blocked protocol waits (`WAIT`, CMT commits) re-check the
@@ -122,6 +138,15 @@ fn seal_reason_name(r: SealReason) -> &'static str {
     }
 }
 
+/// Replication context a session may carry: the follower handle (for
+/// `PROMOTE`) and the shared counters (for `STATS`). Present on both
+/// roles — a primary has stats but no follower handle.
+#[derive(Clone)]
+pub struct SessionRepl {
+    pub follower: Option<Arc<FollowerHandle>>,
+    pub stats: Arc<ReplStats>,
+}
+
 /// One protocol session (per connection). Pure request→response logic;
 /// transports (TCP, stdio, tests) feed it lines.
 pub struct Session {
@@ -133,25 +158,37 @@ pub struct Session {
     /// instead capped at [`LONE_SESSION_WAIT_CAP`] (lockstep transport
     /// — later input cannot satisfy a blocked wait).
     stop: Option<Arc<AtomicBool>>,
+    /// Replication context (`--follower` / `--repl-listen` serves).
+    repl: Option<SessionRepl>,
 }
 
 impl Session {
     pub fn new(engine: Arc<UpdateEngine>) -> Self {
-        Session { engine, mode: Mode::Cmt, stop: None }
+        Session { engine, mode: Mode::Cmt, stop: None, repl: None }
     }
 
     /// A session that aborts blocked waits once `stop` is set.
     pub fn with_stop(engine: Arc<UpdateEngine>, stop: Arc<AtomicBool>) -> Self {
-        Session { engine, mode: Mode::Cmt, stop: Some(stop) }
+        Session { engine, mode: Mode::Cmt, stop: Some(stop), repl: None }
+    }
+
+    /// Attach replication context (builder style).
+    pub fn with_repl(mut self, repl: Option<SessionRepl>) -> Self {
+        self.repl = repl;
+        self
     }
 
     /// Abort a blocked wait when the server is shutting down (TCP), or
-    /// when a stop-less session has waited past the lockstep cap.
+    /// when a stop-less session has waited past the lockstep cap. The
+    /// shutdown abort is TYPED: the reply line starts `ERR shutdown`
+    /// so a client parked in WAIT/CMT on a dead shard gets a
+    /// machine-readable abort within one [`WAIT_POLL`] of the stop
+    /// flag, instead of riding out the lockstep cap.
     fn check_wait(&self, started: Instant, what: &str) -> Result<()> {
         match &self.stop {
             Some(stop) => ensure!(
                 !stop.load(Ordering::SeqCst),
-                "server shutting down before {what}"
+                "shutdown: server is draining; aborted the wait for {what}"
             ),
             None => ensure!(
                 started.elapsed() < LONE_SESSION_WAIT_CAP,
@@ -265,7 +302,20 @@ impl Session {
                     seqs.join(",")
                 )
             }
-            "STATS" => format!("OK {}", stats_json(&self.engine.stats())),
+            "STATS" => {
+                let repl = self.repl.as_ref().map(|r| r.stats.snapshot());
+                format!("OK {}", stats_json_with_repl(&self.engine.stats(), repl.as_ref()))
+            }
+            "PROMOTE" => match &self.repl {
+                Some(SessionRepl { follower: Some(f), .. }) => {
+                    let epoch = f.promote().context("promoting this follower")?;
+                    format!("OK promoted epoch={epoch}")
+                }
+                _ => bail!(
+                    "PROMOTE only applies to a replication follower \
+                     (start with `fast serve --follower <primary-addr>`)"
+                ),
+            },
             "QUIT" => return Ok(Action::Quit("OK bye".to_string())),
             "SHUTDOWN" => return Ok(Action::Shutdown("OK draining".to_string())),
             other => bail!("unknown command {other:?} (try HELLO)"),
@@ -286,6 +336,9 @@ impl Session {
                     Ok(()) => "OK".to_string(),
                     Err(e) if is_busy(&e) => {
                         format!("ERR busy {}", one_line(&format!("{e:#}")))
+                    }
+                    Err(e) if is_readonly(&e) => {
+                        format!("ERR readonly {}", one_line(&format!("{e:#}")))
                     }
                     Err(e) => return Err(e),
                 },
@@ -309,13 +362,19 @@ impl Session {
                     Err(e) if is_busy(&e) => {
                         format!("ERR busy {}", one_line(&format!("{e:#}")))
                     }
+                    Err(e) if is_readonly(&e) => {
+                        format!("ERR readonly {}", one_line(&format!("{e:#}")))
+                    }
                     Err(e) => return Err(e),
                 },
             },
-            TraceEvent::Write { row, value } => {
-                self.engine.write(row, value)?;
-                "OK".to_string()
-            }
+            TraceEvent::Write { row, value } => match self.engine.write(row, value) {
+                Ok(()) => "OK".to_string(),
+                Err(e) if is_readonly(&e) => {
+                    format!("ERR readonly {}", one_line(&format!("{e:#}")))
+                }
+                Err(e) => return Err(e),
+            },
             TraceEvent::Flush => {
                 // Barrier: the engine's explicit whole-engine barrier,
                 // built from per-shard drains.
@@ -345,6 +404,41 @@ pub struct ServeReport {
     pub stats: EngineStats,
     /// Last committed seq per shard after the shutdown drain.
     pub drained_seq: Vec<u64>,
+    /// Final replication snapshot (follower or repl-listening primary).
+    pub repl: Option<ReplSnapshot>,
+}
+
+/// Everything a replicated serve owns on top of the engine: the shared
+/// stats, the follower loop (follower role), and the repl listener
+/// (primary role). The transport stops/drops all of it before the
+/// final engine drain — component order matters, see [`serve_tcp_with`].
+pub struct ServeRepl {
+    pub stats: Arc<ReplStats>,
+    pub follower: Option<Arc<FollowerHandle>>,
+    pub repl_listener: Option<ReplListener>,
+    /// Shared with the follower loop's `on_fail_stop`: when divergence
+    /// fail-stops the follower, this flag shuts the whole serve down
+    /// (a follower that cannot trust its state must stop serving it).
+    pub fail_stop: Option<Arc<AtomicBool>>,
+}
+
+impl ServeRepl {
+    fn session(&self) -> SessionRepl {
+        SessionRepl { follower: self.follower.clone(), stats: Arc::clone(&self.stats) }
+    }
+
+    /// Stop the moving parts and return the last snapshot. Consumes
+    /// self so the follower's engine Arc is dropped before the
+    /// transport's final `finish` (which requires sole ownership).
+    fn wind_down(self) -> ReplSnapshot {
+        if let Some(f) = &self.follower {
+            f.stop();
+        }
+        drop(self.repl_listener);
+        let snap = self.stats.snapshot();
+        drop(self.follower);
+        snap
+    }
 }
 
 /// Drain every shard, collect stats, shut the engine down. Errors here
@@ -358,13 +452,21 @@ fn finish(engine: Arc<UpdateEngine>) -> Result<ServeReport> {
         .context("draining the shards at shutdown")?;
     let stats = engine.stats();
     engine.shutdown()?;
-    Ok(ServeReport { stats, drained_seq })
+    Ok(ServeReport { stats, drained_seq, repl: None })
 }
 
 /// Serve one session over stdin/stdout (EOF = clean shutdown).
 pub fn serve_stdio(engine: UpdateEngine) -> Result<ServeReport> {
-    let engine = Arc::new(engine);
-    let mut session = Session::new(Arc::clone(&engine));
+    serve_stdio_with(Arc::new(engine), None)
+}
+
+/// [`serve_stdio`] with replication context (follower/primary roles).
+/// Takes the engine as an `Arc` because a follower's replication loop
+/// shares it; [`finish`] still requires every other clone dropped by
+/// shutdown, which [`ServeRepl::wind_down`] guarantees.
+pub fn serve_stdio_with(engine: Arc<UpdateEngine>, repl: Option<ServeRepl>) -> Result<ServeReport> {
+    let mut session =
+        Session::new(Arc::clone(&engine)).with_repl(repl.as_ref().map(ServeRepl::session));
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     for line in stdin.lock().lines() {
@@ -387,7 +489,10 @@ pub fn serve_stdio(engine: UpdateEngine) -> Result<ServeReport> {
         }
     }
     drop(session);
-    finish(engine)
+    let repl_snap = repl.map(ServeRepl::wind_down);
+    let mut report = finish(engine)?;
+    report.repl = repl_snap;
+    Ok(report)
 }
 
 /// Serve the protocol on an already-bound listener until a client
@@ -395,7 +500,19 @@ pub fn serve_stdio(engine: UpdateEngine) -> Result<ServeReport> {
 /// (thread per connection; the engine's shard workers are the
 /// concurrency bottleneck by design, not the session threads).
 pub fn serve_tcp(engine: UpdateEngine, listener: TcpListener) -> Result<ServeReport> {
-    let engine = Arc::new(engine);
+    serve_tcp_with(Arc::new(engine), listener, None)
+}
+
+/// [`serve_tcp`] with replication context (the `Arc` is shared with a
+/// follower's replication loop). Wind-down order at shutdown: join the
+/// session threads, stop the follower loop / repl listener (dropping
+/// their engine references), snapshot the repl counters, then drain +
+/// shut down the engine.
+pub fn serve_tcp_with(
+    engine: Arc<UpdateEngine>,
+    listener: TcpListener,
+    repl: Option<ServeRepl>,
+) -> Result<ServeReport> {
     let addr = listener.local_addr().context("listener address")?;
     // Address the SHUTDOWN handler can actually reach to wake the
     // blocking accept below: an unspecified bind (0.0.0.0 / ::) is not
@@ -412,9 +529,34 @@ pub fn serve_tcp(engine: UpdateEngine, listener: TcpListener) -> Result<ServeRep
         };
         SocketAddr::new(ip, addr.port())
     };
-    let stop = Arc::new(AtomicBool::new(false));
+    // A replicated serve shares its stop flag with the follower loop's
+    // fail-stop hook, and polls the accept with a short timeout so a
+    // divergence fail-stop (which has no client connection to wake the
+    // accept with) still brings the server down promptly.
+    let stop = repl
+        .as_ref()
+        .and_then(|r| r.fail_stop.clone())
+        .unwrap_or_else(|| Arc::new(AtomicBool::new(false)));
+    if repl.is_some() {
+        listener.set_nonblocking(true).context("repl serve accept polling")?;
+    }
     let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    for conn in listener.incoming() {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+            Err(_) => continue,
+        };
+        // The wake-up connection a SHUTDOWN handler makes lands here.
         if stop.load(Ordering::SeqCst) {
             break;
         }
@@ -432,22 +574,20 @@ pub fn serve_tcp(engine: UpdateEngine, listener: TcpListener) -> Result<ServeRep
                 }
             })
             .collect();
-        let stream = match conn {
-            Ok(s) => s,
-            Err(_) => continue,
-        };
-        // The wake-up connection a SHUTDOWN handler makes lands here.
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
         let engine = Arc::clone(&engine);
         let stop = Arc::clone(&stop);
-        handles.push(std::thread::spawn(move || serve_conn(stream, engine, stop, wake_addr)));
+        let session_repl = repl.as_ref().map(ServeRepl::session);
+        handles.push(std::thread::spawn(move || {
+            serve_conn(stream, engine, stop, wake_addr, session_repl)
+        }));
     }
     for h in handles {
         let _ = h.join();
     }
-    finish(engine)
+    let repl_snap = repl.map(ServeRepl::wind_down);
+    let mut report = finish(engine)?;
+    report.repl = repl_snap;
+    Ok(report)
 }
 
 /// One TCP connection: read lines, answer lines. A short read timeout
@@ -459,7 +599,11 @@ fn serve_conn(
     engine: Arc<UpdateEngine>,
     stop: Arc<AtomicBool>,
     wake_addr: SocketAddr,
+    repl: Option<SessionRepl>,
 ) {
+    // Accepted sockets can inherit the listener's nonblocking mode on
+    // some platforms; force blocking so the read timeout governs.
+    let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
     let _ = stream.set_nodelay(true);
     let reader = match stream.try_clone() {
@@ -468,7 +612,7 @@ fn serve_conn(
     };
     let mut reader = BufReader::new(reader);
     let mut out = stream;
-    let mut session = Session::with_stop(engine, Arc::clone(&stop));
+    let mut session = Session::with_stop(engine, Arc::clone(&stop)).with_repl(repl);
     let mut buf = String::new();
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -532,12 +676,34 @@ pub struct ClientReport {
     pub query_value: Option<u64>,
 }
 
+/// Client-side handling of `ERR busy` backpressure (`fast client
+/// --retries --backoff-us`): bounded attempts per event line, with
+/// exponential backoff and uniform jitter between them. Terminal ERRs
+/// (bad line, dead shard, `ERR readonly`) never retry.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientRetry {
+    /// Max `ERR busy` retries per event line before failing hard.
+    pub retries: u64,
+    /// Base backoff; attempt `n` sleeps `backoff_us << min(n, 10)` µs
+    /// (capped at 100 ms) plus uniform jitter of up to half that.
+    pub backoff_us: u64,
+}
+
+impl Default for ClientRetry {
+    fn default() -> ClientRetry {
+        ClientRetry { retries: 1000, backoff_us: 200 }
+    }
+}
+
+/// Longest single backoff sleep, whatever the doubling says.
+const CLIENT_BACKOFF_CAP_US: u64 = 100_000;
+
 /// Drive a `fast serve` endpoint: stream a trace's event lines in
 /// lockstep (one request line, one response line), drain, optionally
 /// fetch the state digest, optionally run a `QRY` reduction and verify
 /// it, optionally shut the server down. Retries the initial connect
-/// (the CI smoke job races server startup) and `ERR busy` backpressure
-/// responses.
+/// (the CI smoke job races server startup) and — boundedly, with
+/// jittered exponential backoff — `ERR busy` backpressure responses.
 ///
 /// `query` is the reduction spec in CLI grammar (e.g. `"sum"`,
 /// `"range 3 900 mask 7 50"`). The answer is checked against `expect`
@@ -552,6 +718,30 @@ pub fn run_client(
     query: Option<&str>,
     expect: Option<u64>,
     send_shutdown: bool,
+) -> Result<ClientReport> {
+    run_client_retry(
+        addr,
+        trace,
+        mode,
+        want_digest,
+        query,
+        expect,
+        send_shutdown,
+        ClientRetry::default(),
+    )
+}
+
+/// [`run_client`] with explicit backpressure-retry tuning.
+#[allow(clippy::too_many_arguments)]
+pub fn run_client_retry(
+    addr: &str,
+    trace: Option<&Trace>,
+    mode: Mode,
+    want_digest: bool,
+    query: Option<&str>,
+    expect: Option<u64>,
+    send_shutdown: bool,
+    retry: ClientRetry,
 ) -> Result<ClientReport> {
     let stream = connect_with_retry(addr, Duration::from_secs(10))?;
     let _ = stream.set_nodelay(true);
@@ -587,9 +777,14 @@ pub fn run_client(
 
     let mut acked = 0u64;
     let mut busy_retries = 0u64;
+    // Deterministic jitter source (this is a test/CI-facing client; a
+    // fixed seed keeps runs reproducible while still decorrelating the
+    // retry storms of concurrent clients via their distinct schedules).
+    let mut jitter = Rng::new(0xC11E_17);
     if let Some(t) = trace {
         for e in &t.events {
             let line = e.to_json_line();
+            let mut attempt = 0u64;
             loop {
                 let reply = roundtrip(&line)?;
                 if reply.starts_with("OK") {
@@ -598,11 +793,21 @@ pub fn run_client(
                 }
                 if reply.starts_with("ERR busy") {
                     busy_retries += 1;
+                    attempt += 1;
                     ensure!(
-                        busy_retries < 1_000_000,
-                        "server stayed busy for 1M retries"
+                        attempt <= retry.retries,
+                        "server still busy after {attempt} retries for one line \
+                         (raise --retries / --backoff-us or slow the stream): {reply}"
                     );
-                    std::thread::sleep(Duration::from_micros(200));
+                    // Exponential backoff with uniform jitter: base
+                    // doubles per attempt, capped so a long busy spell
+                    // polls at ~10 Hz instead of stalling for seconds.
+                    let base = retry
+                        .backoff_us
+                        .saturating_mul(1u64 << attempt.min(10))
+                        .min(CLIENT_BACKOFF_CAP_US);
+                    let sleep_us = base + jitter.below(base / 2 + 1);
+                    std::thread::sleep(Duration::from_micros(sleep_us));
                     continue;
                 }
                 bail!("server rejected {line:?}: {reply}");
@@ -670,6 +875,29 @@ pub fn run_client(
         let _ = roundtrip("QUIT");
     }
     Ok(ClientReport { digest, acked, busy_retries, query_value })
+}
+
+/// `fast promote --connect <addr>`: ask a follower serve to stop
+/// replicating, fence a new epoch, and start accepting writes. Returns
+/// the fenced epoch. Any `ERR …` reply (not a follower, promote
+/// failed) is a hard error.
+pub fn run_promote(addr: &str) -> Result<u64> {
+    let stream = connect_with_retry(addr, Duration::from_secs(10))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut out = stream;
+    writeln!(out, "PROMOTE").context("sending PROMOTE")?;
+    let mut reply = String::new();
+    let n = reader.read_line(&mut reply).context("reading PROMOTE reply")?;
+    ensure!(n > 0, "server closed the connection before answering PROMOTE");
+    let reply = reply.trim_end();
+    let epoch = reply
+        .strip_prefix("OK promoted epoch=")
+        .ok_or_else(|| anyhow!("PROMOTE failed: {reply}"))?
+        .parse::<u64>()
+        .with_context(|| format!("parsing promoted epoch from {reply:?}"))?;
+    let _ = writeln!(out, "QUIT");
+    Ok(epoch)
 }
 
 fn connect_with_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
@@ -764,6 +992,55 @@ pub fn stats_json(s: &EngineStats) -> String {
         latency_json(&s.apply_wall),
         shards
     )
+}
+
+/// JSON rendering of a [`ReplSnapshot`] — the `"repl"` object spliced
+/// into the stats JSON on replicated serves (follower or repl-serving
+/// primary). Per-shard lag is both logical (`lag_lsn` = primary tail −
+/// applied) and wall-clock (`lag_wall_ms` since the last local apply).
+fn repl_json(r: &ReplSnapshot) -> String {
+    let mut shards = String::new();
+    for (i, sh) in r.shards.iter().enumerate() {
+        if i > 0 {
+            shards.push(',');
+        }
+        shards.push_str(&format!(
+            "{{\"shard\":{},\"applied_lsn\":{},\"primary_lsn\":{},\
+             \"lag_lsn\":{},\"lag_wall_ms\":{}}}",
+            sh.shard, sh.applied_lsn, sh.primary_lsn, sh.lag_lsn, sh.lag_wall_ms
+        ));
+    }
+    let failed = match &r.failed {
+        Some(msg) => format!("\"{}\"", one_line(msg).replace('\\', "\\\\").replace('"', "\\\"")),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"epoch\":{},\"connected\":{},\"reconnects\":{},\"frames_applied\":{},\
+         \"dup_frames\":{},\"wire_errors\":{},\"digests_verified\":{},\
+         \"failed\":{failed},\"shards\":[{shards}]}}",
+        r.epoch,
+        r.connected,
+        r.reconnects,
+        r.frames_applied,
+        r.dup_frames,
+        r.wire_errors,
+        r.digests_verified,
+    )
+}
+
+/// [`stats_json`] plus — when the serve carries a replication role —
+/// a `"role"` key (`"follower"` or `"primary"`) and the `"repl"`
+/// counters object. Every pre-existing key is untouched, so anything
+/// parsing the non-replicated schema keeps working.
+pub fn stats_json_with_repl(s: &EngineStats, repl: Option<&ReplSnapshot>) -> String {
+    let base = stats_json(s);
+    match repl {
+        None => base,
+        Some(r) => {
+            let body = base.strip_suffix('}').unwrap_or(&base);
+            format!("{body},\"role\":\"{}\",\"repl\":{}}}", r.role, repl_json(r))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -967,13 +1244,46 @@ mod tests {
         let report = server.join().unwrap().unwrap();
         assert_eq!(report.stats.completed, 0);
 
-        // A's wait was aborted with a protocol error (or the socket
-        // closed); either way it did not hang the server.
+        // A's wait was aborted with the TYPED shutdown error (or the
+        // socket closed); either way it did not hang the server, and
+        // any reply A got is machine-classifiable as a shutdown abort.
         let mut reply = String::new();
         let n = BufReader::new(&mut a).read_line(&mut reply).unwrap_or(0);
         if n > 0 {
-            assert!(reply.starts_with("ERR"), "{reply}");
+            assert!(reply.starts_with("ERR shutdown"), "{reply}");
         }
+    }
+
+    #[test]
+    fn blocked_wait_aborts_typed_and_fast_when_the_stop_flag_rises() {
+        // Regression: SHUTDOWN during an in-flight WAIT/CMT used to
+        // ride out the 30 s lone-session cap. With a server stop flag
+        // the abort must be typed (`ERR shutdown …`) and land within a
+        // few WAIT_POLL intervals, not the cap.
+        let e = engine(32, 8, 1);
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut s = Session::with_stop(Arc::clone(&e), Arc::clone(&stop));
+        let flipper = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(100));
+                stop.store(true, Ordering::SeqCst);
+            })
+        };
+        let started = Instant::now();
+        let r = reply(&mut s, "WAIT 0 999");
+        let waited = started.elapsed();
+        flipper.join().unwrap();
+        assert!(r.starts_with("ERR shutdown"), "{r}");
+        assert!(
+            waited < Duration::from_secs(5),
+            "typed shutdown abort took {waited:?} (should be ~one WAIT_POLL)"
+        );
+        drop(s);
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
     }
 
     #[test]
@@ -1084,6 +1394,135 @@ mod tests {
         let err =
             run_client(&addr, None, Mode::Cmt, false, Some("sum"), None, false).unwrap_err();
         assert!(format!("{err:#}").contains("QRY failed"), "{err:#}");
+    }
+
+    /// A fake server that answers the first `busy_count` event lines
+    /// with `ERR busy …` and everything after with OK — the stateful
+    /// counterpart of [`fake_server`] for retry-policy tests.
+    fn busy_then_ok_server(busy_count: usize) -> String {
+        use std::sync::atomic::AtomicUsize;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut out = stream;
+            let busy_left = AtomicUsize::new(busy_count);
+            let mut line = String::new();
+            while reader.read_line(&mut line).unwrap_or(0) > 0 {
+                let req = line.trim().to_string();
+                line.clear();
+                let reply = if req == "HELLO" {
+                    format!("OK {PROTOCOL} rows=8 q=8 shards=1 backend=fake")
+                } else if req.starts_with('{')
+                    && busy_left
+                        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+                        .is_ok()
+                {
+                    "ERR busy queue full on shard 0".to_string()
+                } else {
+                    "OK".to_string()
+                };
+                if writeln!(out, "{reply}").is_err() {
+                    break;
+                }
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn client_retries_busy_with_bounded_backoff_then_succeeds() {
+        // Three ERR busy replies, then OK: the default policy retries
+        // through them and reports exactly three backpressure retries.
+        let addr = busy_then_ok_server(3);
+        let trace = uniform_trace(8, 8, 2, 11);
+        let retry = ClientRetry { retries: 10, backoff_us: 50 };
+        let report =
+            run_client_retry(&addr, Some(&trace), Mode::Sub, false, None, None, false, retry)
+                .unwrap();
+        assert_eq!(report.busy_retries, 3);
+        assert_eq!(report.acked, trace.events.len() as u64);
+    }
+
+    #[test]
+    fn client_busy_retry_budget_is_a_hard_bound() {
+        // More consecutive busys than the budget: fail hard with an
+        // actionable message instead of spinning for a million tries.
+        let addr = busy_then_ok_server(usize::MAX);
+        let trace = uniform_trace(8, 8, 2, 11);
+        let retry = ClientRetry { retries: 2, backoff_us: 50 };
+        let err =
+            run_client_retry(&addr, Some(&trace), Mode::Sub, false, None, None, false, retry)
+                .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("still busy after 2 retries"), "{msg}");
+        assert!(msg.contains("--retries"), "{msg}");
+    }
+
+    #[test]
+    fn readonly_engine_answers_typed_err_readonly_and_promote_needs_a_follower() {
+        // A read-only engine (the state a follower serves in) rejects
+        // every mutation line with a typed `ERR readonly …`, keeps
+        // serving reads, and refuses PROMOTE when no follower handle
+        // is attached (a primary, or a bare read-only engine).
+        let mut cfg = EngineConfig::sharded(32, 8, 1);
+        cfg.read_only = true;
+        let e = Arc::new(
+            UpdateEngine::start(cfg, |p: &ShardPlan| {
+                Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+            })
+            .unwrap(),
+        );
+        let mut s = Session::new(Arc::clone(&e));
+        for (line, label) in [
+            ("{\"t\":\"u\",\"o\":\"add\",\"r\":3,\"v\":7}", "CMT update"),
+            ("{\"t\":\"w\",\"r\":0,\"v\":17}", "write"),
+        ] {
+            let r = reply(&mut s, line);
+            assert!(r.starts_with("ERR readonly"), "{label}: {r}");
+        }
+        assert_eq!(reply(&mut s, "MODE SUB"), "OK mode=SUB");
+        let r = reply(&mut s, "{\"t\":\"u\",\"o\":\"add\",\"r\":3,\"v\":7}");
+        assert!(r.starts_with("ERR readonly"), "SUB update: {r}");
+        assert_eq!(reply(&mut s, "READ 3"), "OK 0");
+        let r = reply(&mut s, "PROMOTE");
+        assert!(r.starts_with("ERR ") && r.contains("--follower"), "{r}");
+        drop(s);
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
+    }
+
+    #[test]
+    fn stats_json_with_repl_splices_role_and_lag_without_breaking_the_schema() {
+        use crate::replication::ReplStats;
+        let e = engine(32, 8, 2);
+        let stats = ReplStats::new("follower", 2);
+        stats.record_applied(0, 5);
+        stats.record_primary_tail(0, 9);
+        let snap = stats.snapshot();
+        let text = stats_json_with_repl(&e.stats(), Some(&snap));
+        let json = Json::parse(&text).unwrap();
+        // Pre-existing keys survive the splice…
+        assert!(json.get("tickets_resolved").and_then(Json::as_usize).is_some());
+        assert!(json.get("wal_records").and_then(Json::as_usize).is_some());
+        // …and the replication block parses with per-shard lag.
+        assert_eq!(json.get("role").and_then(Json::as_str), Some("follower"));
+        let repl = json.get("repl").unwrap();
+        assert_eq!(repl.get("epoch").and_then(Json::as_usize), Some(0));
+        let shards = repl.get("shards").and_then(Json::as_arr).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("applied_lsn").and_then(Json::as_usize), Some(5));
+        assert_eq!(shards[0].get("lag_lsn").and_then(Json::as_usize), Some(4));
+        // Without a repl role the output is byte-identical to the
+        // legacy schema.
+        assert_eq!(stats_json_with_repl(&e.stats(), None), stats_json(&e.stats()));
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
     }
 
     #[test]

@@ -1,0 +1,481 @@
+//! Replication integration tests: WAL shipping through a seeded
+//! fault-injection proxy must end in one of exactly two states —
+//! a follower bit-identical to the primary, or an explicit fail-stop.
+//!
+//! - *Chaos matrix*: seeded drop/duplicate/corrupt/cut/delay plans at
+//!   1/2/4/8 shards × phase/word/bitplane; after reconnects and
+//!   catch-up the follower's state digest equals the trace's host
+//!   reference digest (the same oracle `fast trace replay
+//!   --digest-only` prints).
+//! - *Scripted single faults*: each fault class at a pinned record
+//!   index, with the counters (reconnects, dup skips, wire errors)
+//!   proving the follower took the intended recovery path.
+//! - *Forgery*: an internally-consistent forged frame (CRC fixed up)
+//!   must fail-stop via the FNV chain — never apply, never serve a
+//!   wrong answer.
+//! - *Failover*: primary dies mid-trace, the follower promotes under
+//!   a fenced epoch, serves the rest, and the final digest matches a
+//!   full-trace replay; the fenced-off old primary then refuses a
+//!   newer-epoch follower.
+//! - *Restart resume*: a follower restarted from its own WAL resumes
+//!   shipping at `recovered watermark + 1` with no side-channel state.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fast_sram::apps::trace::{state_digest, uniform_trace, TraceEvent};
+use fast_sram::coordinator::{
+    Backend, BitPlaneBackend, EngineConfig, FastBackend, ShardPlan, UpdateEngine,
+};
+use fast_sram::durability::{DurabilityConfig, FsyncPolicy};
+use fast_sram::fastmem::Fidelity;
+use fast_sram::replication::{
+    load_epoch, spawn_follower, store_epoch, FaultAction, FaultPlan, FaultProbs, FaultProxy,
+    FollowerHandle, FollowerOpts, ReplListener, ReplListenerCfg, ReplStats,
+};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let d = std::env::temp_dir().join(format!("fast-repl-{tag}-{}-{nanos}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic durable config: only explicit drains seal, every
+/// record fsynced, tiny segments so rotation (and therefore the 'D'
+/// digest exchange) happens even on short traces.
+fn durable_cfg(rows: usize, q: usize, shards: usize, dir: &Path, read_only: bool) -> EngineConfig {
+    let mut cfg = EngineConfig::sharded(rows, q, shards);
+    cfg.seal_at_rows = None;
+    cfg.seal_deadline = Duration::from_secs(3600);
+    cfg.read_only = read_only;
+    let mut d = DurabilityConfig::new(dir.to_path_buf());
+    d.fsync = FsyncPolicy::Always;
+    d.segment_bytes = 2048;
+    cfg.durability = Some(d);
+    cfg
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Tier {
+    Phase,
+    Word,
+    BitPlane,
+}
+
+fn start_tier(cfg: EngineConfig, tier: Tier) -> UpdateEngine {
+    match tier {
+        Tier::Phase => UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows_fidelity(p.rows, p.q, Fidelity::PhaseAccurate))
+                as Box<dyn Backend>)
+        }),
+        Tier::Word => UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)) as Box<dyn Backend>)
+        }),
+        Tier::BitPlane => UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(BitPlaneBackend::with_rows(p.rows, p.q)) as Box<dyn Backend>)
+        }),
+    }
+    .unwrap()
+}
+
+/// Apply a slice of trace events and drain (drain = group-commit seal
+/// = durable WAL frames the primary's cursors can ship).
+fn apply_events(engine: &UpdateEngine, events: &[TraceEvent]) {
+    for e in events {
+        match e {
+            TraceEvent::Update(req) => engine.submit_blocking(*req).unwrap(),
+            TraceEvent::Write { row, value } => engine.write(*row, *value).unwrap(),
+            TraceEvent::Flush => {
+                engine.drain_all().unwrap();
+            }
+        }
+    }
+    engine.drain_all().unwrap();
+}
+
+fn digest_of(engine: &UpdateEngine) -> u64 {
+    state_digest(&engine.snapshot().unwrap())
+}
+
+/// Poll until the engine's state digest matches, or the deadline
+/// passes. Recovery from dropped tails rides the heartbeat stall
+/// detector, so convergence needs no extra traffic — just time.
+fn wait_digest(engine: &UpdateEngine, want: u64, deadline: Duration) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if digest_of(engine) == want {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    false
+}
+
+fn wait_failed(handle: &FollowerHandle, deadline: Duration) -> Option<String> {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if let Some(msg) = handle.failed() {
+            return Some(msg);
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    None
+}
+
+fn fast_opts() -> FollowerOpts {
+    FollowerOpts {
+        backoff_min: Duration::from_millis(10),
+        backoff_max: Duration::from_millis(200),
+        ..FollowerOpts::default()
+    }
+}
+
+/// Everything one primary/follower pair needs, wired through a fault
+/// proxy. The follower engine is shared (`Arc`) with the handle.
+struct Pair {
+    primary: UpdateEngine,
+    follower: Arc<UpdateEngine>,
+    handle: Arc<FollowerHandle>,
+    _listener: ReplListener,
+    _proxy: FaultProxy,
+    fdir: PathBuf,
+}
+
+/// `backlog` is applied to the primary BEFORE the follower attaches,
+/// so those frames ship from a cold cursor over existing segments
+/// rather than a live tail.
+fn start_pair(
+    rows: usize,
+    q: usize,
+    shards: usize,
+    tier: Tier,
+    tag: &str,
+    plan: FaultPlan,
+    backlog: &[TraceEvent],
+) -> Pair {
+    let pdir = tmpdir(&format!("{tag}-p"));
+    let fdir = tmpdir(&format!("{tag}-f"));
+    let primary = start_tier(durable_cfg(rows, q, shards, &pdir, false), tier);
+    if !backlog.is_empty() {
+        apply_events(&primary, backlog);
+    }
+    let stats = ReplStats::new("primary", shards);
+    let listener = ReplListener::start(
+        "127.0.0.1:0",
+        ReplListenerCfg { wal_dir: pdir, rows, q, shards, stats },
+    )
+    .unwrap();
+    let proxy = FaultProxy::start(listener.addr(), plan).unwrap();
+    let follower = Arc::new(start_tier(durable_cfg(rows, q, shards, &fdir, true), tier));
+    let handle = spawn_follower(
+        Arc::clone(&follower),
+        fdir.clone(),
+        proxy.addr().to_string(),
+        fast_opts(),
+    )
+    .unwrap();
+    Pair { primary, follower, handle, _listener: listener, _proxy: proxy, fdir }
+}
+
+impl Pair {
+    /// Stop replication and shut both engines down cleanly.
+    fn teardown(self) {
+        self.handle.stop();
+        let Pair { primary, follower, handle, _listener, _proxy, .. } = self;
+        drop(_proxy);
+        drop(_listener);
+        drop(handle);
+        Arc::try_unwrap(follower)
+            .unwrap_or_else(|_| panic!("follower engine still shared"))
+            .shutdown()
+            .unwrap();
+        primary.shutdown().unwrap();
+    }
+}
+
+const CATCH_UP: Duration = Duration::from_secs(30);
+
+// -------------------------------------------------------------------------
+// Chaos matrix: seeded recoverable faults × shards × fidelity tiers
+// -------------------------------------------------------------------------
+
+#[test]
+fn chaos_faults_always_end_in_bit_identical_catch_up() {
+    let mut digest_exchanges = 0u64;
+    for (i, &shards) in [1usize, 2, 4, 8].iter().enumerate() {
+        for (j, tier) in [Tier::Phase, Tier::Word, Tier::BitPlane].iter().enumerate() {
+            let seed = 0xFA57_0000 + (i as u64) * 16 + j as u64;
+            let trace = uniform_trace(64, 8, 240, seed);
+            let want = state_digest(&trace.reference_state());
+            let half = trace.events.len() / 2;
+
+            // Half the trace is backlog (shipped from cold cursors),
+            // half arrives while the follower live-tails.
+            let pair = start_pair(
+                64,
+                8,
+                shards,
+                *tier,
+                &format!("chaos-s{shards}t{j}"),
+                FaultPlan::chaos(seed, FaultProbs::mild()),
+                &trace.events[..half],
+            );
+            apply_events(&pair.primary, &trace.events[half..]);
+            assert_eq!(digest_of(&pair.primary), want, "primary itself must match the oracle");
+
+            assert!(
+                wait_digest(&pair.follower, want, CATCH_UP),
+                "shards={shards} tier={tier:?} seed={seed:#x}: follower digest {:016x} never \
+                 reached {want:016x} (applied={:?}, failed={:?})",
+                digest_of(&pair.follower),
+                pair.handle.applied_lsns(),
+                pair.handle.failed()
+            );
+            assert!(
+                pair.handle.failed().is_none(),
+                "recoverable chaos must never fail-stop: {:?}",
+                pair.handle.failed()
+            );
+            let snap = pair.handle.stats.snapshot();
+            digest_exchanges += snap.digests_verified;
+            pair.teardown();
+        }
+    }
+    // 2 KiB segments over 12 runs: segment boundaries must have
+    // produced (and verified) at least some 'D' digest exchanges.
+    assert!(digest_exchanges > 0, "no segment digest was ever exchanged");
+}
+
+// -------------------------------------------------------------------------
+// Scripted single-fault plans: each class takes its intended path
+// -------------------------------------------------------------------------
+
+#[test]
+fn each_scripted_fault_class_recovers_to_the_same_digest() {
+    let cases: &[(&str, FaultAction, u64)] = &[
+        ("drop", FaultAction::Drop, 2),
+        ("dup", FaultAction::Duplicate, 2),
+        ("corrupt", FaultAction::CorruptWire, 1),
+        ("swap", FaultAction::Swap, 1),
+        ("truncate", FaultAction::Truncate, 2),
+        ("cut", FaultAction::Cut, 0),
+        ("delay", FaultAction::Delay(30), 1),
+    ];
+    for &(name, action, idx) in cases {
+        let trace = uniform_trace(48, 8, 160, 0xD00D);
+        let want = state_digest(&trace.reference_state());
+        let pair =
+            start_pair(48, 8, 1, Tier::Word, name, FaultPlan::scripted([(idx, action)]), &[]);
+        // Four separate seals guarantee at least four shipped frames,
+        // so every scripted index lands on a real record.
+        for chunk in trace.events.chunks(40) {
+            apply_events(&pair.primary, chunk);
+        }
+        assert!(
+            wait_digest(&pair.follower, want, CATCH_UP),
+            "{name}: follower stuck at {:016x}, want {want:016x} (failed={:?})",
+            digest_of(&pair.follower),
+            pair.handle.failed()
+        );
+        assert!(pair.handle.failed().is_none(), "{name} must be recoverable");
+        let snap = pair.handle.stats.snapshot();
+        match action {
+            FaultAction::Duplicate => {
+                assert!(snap.dup_frames >= 1, "{name}: dup skip counter never moved")
+            }
+            FaultAction::Delay(_) => {}
+            _ => assert!(
+                snap.wire_errors >= 1 && snap.reconnects >= 1,
+                "{name}: expected a reconnect, saw wire_errors={} reconnects={}",
+                snap.wire_errors,
+                snap.reconnects
+            ),
+        }
+        pair.teardown();
+    }
+}
+
+// -------------------------------------------------------------------------
+// Forgery: internally-consistent wrong bytes must fail-stop
+// -------------------------------------------------------------------------
+
+#[test]
+fn forged_frame_fail_stops_instead_of_serving_wrong_state() {
+    let trace = uniform_trace(48, 8, 160, 0xBAD);
+    let pair = start_pair(
+        48,
+        8,
+        1,
+        Tier::Word,
+        "forge",
+        FaultPlan::scripted([(2, FaultAction::Forge)]),
+        &[],
+    );
+    for chunk in trace.events.chunks(40) {
+        apply_events(&pair.primary, chunk);
+    }
+    let msg = wait_failed(&pair.handle, CATCH_UP).expect("a forged frame must fail-stop");
+    assert!(
+        msg.contains("fork") || msg.contains("divergence") || msg.contains("chain"),
+        "fail-stop reason should name the chain divergence: {msg}"
+    );
+    // The stats snapshot carries the same reason (what --stats-json
+    // reports), and the engine still answers reads — it fail-stopped,
+    // it did not crash or serve the forged bytes.
+    let snap = pair.handle.stats.snapshot();
+    assert_eq!(snap.failed.as_deref(), Some(msg.as_str()));
+    assert!(!pair.follower.is_writable());
+    let state = pair.follower.snapshot().unwrap();
+    // Everything applied before the fail-stop is a true prefix of the
+    // primary's history: replaying the trace up to any watermark can
+    // only produce row values the primary also held. Cheap proxy for
+    // "never a wrong answer": the follower applied at most the frames
+    // before the forgery.
+    assert_eq!(state.len(), 48);
+    pair.teardown();
+}
+
+// -------------------------------------------------------------------------
+// Failover: promote mid-trace, finish on the new primary
+// -------------------------------------------------------------------------
+
+#[test]
+fn promoted_follower_finishes_the_trace_bit_identically() {
+    let trace = uniform_trace(64, 8, 200, 0xF01);
+    let want_full = state_digest(&trace.reference_state());
+    let half = trace.events.len() / 2;
+
+    let pair = start_pair(64, 8, 2, Tier::Word, "failover", FaultPlan::clean(), &[]);
+    apply_events(&pair.primary, &trace.events[..half]);
+    let want_half = digest_of(&pair.primary);
+    assert!(
+        wait_digest(&pair.follower, want_half, CATCH_UP),
+        "follower never caught up to the pre-failover watermark"
+    );
+
+    // "SIGKILL" the primary: sever the stream, discard the engine.
+    let Pair { primary, follower, handle, _listener, _proxy, fdir } = pair;
+    drop(_proxy);
+    drop(_listener);
+    primary.shutdown().unwrap();
+
+    // Promote: epoch 0 → 1, persisted BEFORE writes open, idempotent.
+    let epoch = handle.promote().unwrap();
+    assert_eq!(epoch, 1);
+    assert_eq!(load_epoch(&fdir).unwrap(), 1, "the fenced epoch must be durable");
+    assert_eq!(handle.promote().unwrap(), 1, "re-promoting is a no-op");
+    assert!(follower.is_writable());
+    assert_eq!(handle.stats.role(), "primary");
+
+    // The promoted primary serves the remainder of the trace.
+    apply_events(&follower, &trace.events[half..]);
+    assert_eq!(
+        digest_of(&follower),
+        want_full,
+        "post-failover state must equal a full-trace replay"
+    );
+
+    // (The old primary refusing newer-epoch followers is covered by
+    // `stale_primary_refuses_a_newer_epoch_follower` below.)
+    drop(handle);
+    let follower = Arc::try_unwrap(follower).unwrap_or_else(|_| panic!("shared"));
+    follower.shutdown().unwrap();
+}
+
+#[test]
+fn stale_primary_refuses_a_newer_epoch_follower() {
+    let trace = uniform_trace(32, 8, 60, 0xE0);
+    let pdir = tmpdir("stale-p");
+    let fdir = tmpdir("stale-f");
+    let primary = start_tier(durable_cfg(32, 8, 1, &pdir, false), Tier::Word);
+    apply_events(&primary, &trace.events);
+    let stats = ReplStats::new("primary", 1);
+    let listener = ReplListener::start(
+        "127.0.0.1:0",
+        ReplListenerCfg { wal_dir: pdir, rows: 32, q: 8, shards: 1, stats },
+    )
+    .unwrap();
+
+    // The follower carries epoch 3 (it lived through promotions the
+    // old primary never saw). The handshake must be refused and the
+    // refusal must fail-stop — replicating from a fenced primary
+    // would silently fork history.
+    store_epoch(&fdir, 3).unwrap();
+    let follower = Arc::new(start_tier(durable_cfg(32, 8, 1, &fdir, true), Tier::Word));
+    let handle = spawn_follower(
+        Arc::clone(&follower),
+        fdir,
+        listener.addr().to_string(),
+        fast_opts(),
+    )
+    .unwrap();
+    let msg = wait_failed(&handle, CATCH_UP).expect("stale primary must cause a fail-stop");
+    assert!(msg.contains("refused") || msg.contains("stale"), "{msg}");
+    assert_eq!(digest_of(&follower), state_digest(&[0u32; 32]), "nothing was replicated");
+
+    handle.stop();
+    drop(handle);
+    drop(listener);
+    Arc::try_unwrap(follower).unwrap_or_else(|_| panic!("shared")).shutdown().unwrap();
+    primary.shutdown().unwrap();
+}
+
+// -------------------------------------------------------------------------
+// Restart: the follower's WAL is its cursor
+// -------------------------------------------------------------------------
+
+#[test]
+fn follower_restart_resumes_from_its_recovered_watermark() {
+    let trace = uniform_trace(48, 8, 180, 0x5E);
+    let want_full = state_digest(&trace.reference_state());
+    let third = trace.events.len() / 3;
+
+    let pair = start_pair(48, 8, 1, Tier::Word, "restart", FaultPlan::clean(), &[]);
+    apply_events(&pair.primary, &trace.events[..third]);
+    let want_third = digest_of(&pair.primary);
+    assert!(wait_digest(&pair.follower, want_third, CATCH_UP));
+
+    // Stop and fully discard the follower (process death).
+    let Pair { primary, follower, handle, _listener, _proxy, fdir } = pair;
+    handle.stop();
+    let frames_before = handle.stats.snapshot().frames_applied;
+    assert!(frames_before > 0);
+    drop(handle);
+    Arc::try_unwrap(follower).unwrap_or_else(|_| panic!("shared")).shutdown().unwrap();
+
+    // More history lands while the follower is down.
+    apply_events(&primary, &trace.events[third..]);
+
+    // Restart: recovery replays the follower's own WAL bit-identically
+    // and replication resumes at the recovered watermark — the dup
+    // counter staying 0 proves the primary resumed exactly past what
+    // the follower already had, rather than re-shipping from LSN 1.
+    let follower = Arc::new(start_tier(durable_cfg(48, 8, 1, &fdir, true), Tier::Word));
+    assert_eq!(digest_of(&follower), want_third, "recovery must reproduce the pre-kill state");
+    let handle = spawn_follower(
+        Arc::clone(&follower),
+        fdir,
+        _proxy.addr().to_string(),
+        fast_opts(),
+    )
+    .unwrap();
+    assert!(
+        wait_digest(&follower, want_full, CATCH_UP),
+        "restarted follower never caught up (failed={:?})",
+        handle.failed()
+    );
+    assert_eq!(handle.stats.snapshot().dup_frames, 0, "resume must not re-ship applied frames");
+    assert!(handle.failed().is_none());
+
+    handle.stop();
+    drop(handle);
+    drop(_proxy);
+    drop(_listener);
+    Arc::try_unwrap(follower).unwrap_or_else(|_| panic!("shared")).shutdown().unwrap();
+    primary.shutdown().unwrap();
+}
