@@ -151,13 +151,86 @@ pub enum TraceEvent {
     Flush,
 }
 
+/// Typed unknown/malformed-field error for `fast-trace-v1` event
+/// lines. Historically extra fields were silently ignored, which made
+/// typos (and new fields like `tenant` sent to an old server) succeed
+/// while doing the wrong thing; now every key outside an event's
+/// grammar is rejected with this root cause, which the serve protocol
+/// answers as `ERR badfield …` (the connection survives — unlike
+/// terminal `ERR`s the client can correct and resend). Detect with
+/// `err.root_cause().downcast_ref::<BadField>().is_some()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BadField {
+    pub field: String,
+}
+
+impl std::fmt::Display for BadField {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown or malformed field {:?} in fast-trace-v1 event \
+             (grammar: u={{t,o,r,v[,tenant]}}, w={{t,r,v[,tenant]}}, f={{t[,tenant]}})",
+            self.field
+        )
+    }
+}
+
+impl std::error::Error for BadField {}
+
 impl TraceEvent {
     /// Parse one canonical `fast-trace-v1` event line, validating the
     /// row against `rows` and the operand/value against `q` bits.
-    /// Shared by [`Trace::parse_jsonl`] and the `fast serve` protocol
-    /// (`crate::serve`), which speaks exactly these lines on the wire.
+    /// Shared by [`Trace::parse_jsonl`] and the single-tenant `fast
+    /// serve` protocol (`crate::serve`), which speaks exactly these
+    /// lines on the wire. Unknown fields — including `tenant`, which
+    /// only the multi-tenant routed parser accepts — answer a typed
+    /// [`BadField`] root cause instead of being silently ignored.
     pub fn parse_line(line: &str, rows: usize, q: usize) -> Result<TraceEvent> {
+        let (_, event) = Self::parse_line_routed(line, &|tenant| match tenant {
+            None => Ok((rows, q)),
+            Some(_) => Err(anyhow::Error::new(BadField { field: "tenant".to_string() })),
+        })?;
+        Ok(event)
+    }
+
+    /// Parse one event line in a multi-tenant context: an optional
+    /// `"tenant":"<name>"` field routes the event, and the caller's
+    /// `shape` lookup maps the (optional) tenant name to the `(rows,
+    /// q)` the row/value validation runs against — so a 4-bit tenant's
+    /// values are checked against *its* mask, not a global one. Every
+    /// key outside the event grammar is a typed [`BadField`].
+    pub fn parse_line_routed(
+        line: &str,
+        shape: &dyn Fn(Option<&str>) -> Result<(usize, usize)>,
+    ) -> Result<(Option<String>, TraceEvent)> {
         let v = Json::parse(line).context("trace event")?;
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow!("trace event is not a JSON object"))?;
+        let kind = v
+            .get("t")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_default();
+        let allowed: &[&str] = match kind.as_str() {
+            "u" => &["t", "o", "r", "v", "tenant"],
+            "w" => &["t", "r", "v", "tenant"],
+            "f" => &["t", "tenant"],
+            other => bail!("unknown event type {other:?}"),
+        };
+        for key in obj.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(anyhow::Error::new(BadField { field: key.clone() }));
+            }
+        }
+        let tenant = match obj.get("tenant") {
+            None => None,
+            Some(Json::Str(name)) => Some(name.clone()),
+            Some(_) => {
+                return Err(anyhow::Error::new(BadField { field: "tenant".to_string() }))
+            }
+        };
+        let (rows, q) = shape(tenant.as_deref())?;
         let word = |v: &Json| -> Result<u32> {
             let n = v
                 .get("v")
@@ -178,23 +251,23 @@ impl TraceEvent {
             ensure!(r < rows, "row {r} out of range {rows}");
             Ok(r)
         };
-        match v.get("t").and_then(Json::as_str) {
-            Some("u") => {
+        let event = match kind.as_str() {
+            "u" => {
                 let op = v
                     .get("o")
                     .and_then(Json::as_str)
                     .and_then(UpdateOp::parse)
                     .ok_or_else(|| anyhow!("bad or missing op"))?;
-                Ok(TraceEvent::Update(UpdateRequest {
+                TraceEvent::Update(UpdateRequest {
                     row: row_of(&v)?,
                     op,
                     operand: word(&v)?,
-                }))
+                })
             }
-            Some("w") => Ok(TraceEvent::Write { row: row_of(&v)?, value: word(&v)? }),
-            Some("f") => Ok(TraceEvent::Flush),
-            other => bail!("unknown event type {other:?}"),
-        }
+            "w" => TraceEvent::Write { row: row_of(&v)?, value: word(&v)? },
+            _ => TraceEvent::Flush,
+        };
+        Ok((tenant, event))
     }
 
     /// Fold this event into a host-semantics state vector — the
@@ -718,6 +791,63 @@ mod tests {
         assert!(TraceEvent::parse_line("{\"t\":\"w\",\"r\":99,\"v\":0}", 8, 8).is_err());
         assert!(TraceEvent::parse_line("{\"t\":\"u\",\"o\":\"add\",\"r\":0,\"v\":256}", 8, 8).is_err());
         assert!(TraceEvent::parse_line("not json", 8, 8).is_err());
+    }
+
+    #[test]
+    fn unknown_fields_are_typed_badfield_not_silently_ignored() {
+        // Typos and future fields used to parse fine with the extra key
+        // dropped; they must now carry a BadField root cause.
+        for (line, field) in [
+            ("{\"t\":\"u\",\"o\":\"add\",\"r\":0,\"v\":1,\"row\":3}", "row"),
+            ("{\"t\":\"w\",\"r\":0,\"v\":1,\"o\":\"add\"}", "o"),
+            ("{\"t\":\"f\",\"seq\":9}", "seq"),
+            // The tenant field is reserved for the routed (multi-tenant)
+            // parser — on the single-tenant path it is unknown.
+            ("{\"t\":\"f\",\"tenant\":\"a\"}", "tenant"),
+            // A non-string tenant is malformed even on the routed path.
+            ("{\"t\":\"f\",\"tenant\":7}", "tenant"),
+        ] {
+            let e = TraceEvent::parse_line(line, 8, 8).unwrap_err();
+            let bad = e.root_cause().downcast_ref::<BadField>();
+            assert_eq!(bad, Some(&BadField { field: field.to_string() }), "{line}: {e:#}");
+        }
+        // Non-object events are errors, not panics.
+        assert!(TraceEvent::parse_line("[1,2]", 8, 8).is_err());
+        // parse_jsonl inherits the strictness.
+        let hdr = "{\"trace\":\"fast-trace-v1\",\"name\":\"x\",\"rows\":4,\"q\":8,\"seed\":\"0\"}\n";
+        assert!(Trace::parse_jsonl(&format!("{hdr}{{\"t\":\"f\",\"extra\":1}}\n")).is_err());
+    }
+
+    #[test]
+    fn routed_parse_validates_against_the_tenant_shape() {
+        let shape = |tenant: Option<&str>| -> crate::Result<(usize, usize)> {
+            match tenant {
+                None => Ok((8, 8)),
+                Some("narrow") => Ok((4, 4)),
+                Some(other) => anyhow::bail!("unknown tenant {other:?}"),
+            }
+        };
+        // No tenant field → default shape, no routing.
+        let (t, e) =
+            TraceEvent::parse_line_routed("{\"t\":\"w\",\"r\":7,\"v\":255}", &shape).unwrap();
+        assert_eq!(t, None);
+        assert_eq!(e, TraceEvent::Write { row: 7, value: 255 });
+        // Routed events validate row and value against *their* tenant's
+        // rows and q, not the default's.
+        let (t, e) = TraceEvent::parse_line_routed(
+            "{\"t\":\"u\",\"o\":\"add\",\"r\":3,\"v\":15,\"tenant\":\"narrow\"}",
+            &shape,
+        )
+        .unwrap();
+        assert_eq!(t.as_deref(), Some("narrow"));
+        assert_eq!(e, TraceEvent::Update(UpdateRequest::add(3, 15)));
+        for bad in [
+            "{\"t\":\"w\",\"r\":4,\"v\":0,\"tenant\":\"narrow\"}", // row ok globally, over for narrow
+            "{\"t\":\"w\",\"r\":0,\"v\":16,\"tenant\":\"narrow\"}", // value over q=4 bits
+            "{\"t\":\"f\",\"tenant\":\"ghost\"}",                   // shape lookup fails
+        ] {
+            assert!(TraceEvent::parse_line_routed(bad, &shape).is_err(), "{bad}");
+        }
     }
 
     #[test]

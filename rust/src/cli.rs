@@ -192,6 +192,23 @@ system commands:
                                        word-fast (default), or bit-plane (bit-sliced,
                                        64 rows per machine word)
                [--shards 1]            worker shards (power of two; rows % shards == 0)
+               [--tenants]             multi-tenant mode: host any number of
+                                       named tenants (column families), each an
+                                       isolated row space with its own
+                                       precision q in {4,8,16}, row quota,
+                                       engine, and — durable mode — WAL
+                                       subdirectory <wal-dir>/tenants/<name>/
+                                       (the registry manifest tenants.json
+                                       lives in the root; every tenant is
+                                       recovered before connections). Sessions
+                                       administer and bind with TENANT
+                                       CREATE/USE/DROP/LIST, event lines may
+                                       route via a "tenant" field, QRY scopes
+                                       with tenant=<name>, over-quota rows
+                                       answer retryable ERR quota, unknown
+                                       event fields answer ERR badfield, and
+                                       --stats-json reports per-tenant
+                                       counters and latency histograms
                [--seal-deadline-us 100] group-commit deadline for open batches
                                        (--flush-us is the deprecated spelling; kept
                                        as an alias, --seal-deadline-us wins)
@@ -228,6 +245,9 @@ system commands:
                SHUTDOWN; --stats-json includes WAL counters and fsync
                latency histograms when durable
   client       --connect HOST:PORT [--in TRACE] [--mode sub|cmt]
+               [--tenant NAME]         bind the session to a tenant of a
+                                       --tenants serve before streaming (the
+                                       trace, digest and query are scoped to it)
                [--digest] [--query \"SPEC\"] [--expect N] [--shutdown]
                [--retries 1000] [--backoff-us 200]
                drive a running `fast serve`: stream a recorded trace through
@@ -241,6 +261,15 @@ system commands:
                the answer against --expect (or, with --in, against a
                host-side scalar oracle over the trace), exiting nonzero on
                mismatch
+  tenant       create NAME [--rows 128] [--q 8] [--quota ROWS]
+               drop NAME | list
+               with --connect HOST:PORT: administer a live
+               `fast serve --tenants` over the wire; with --wal-dir DIR:
+               operate offline on a registry root (the engine flags above
+               apply; offline mode takes each tenant's single-writer lock,
+               so a live serve on the same root blocks it); drop deletes
+               the tenant's WAL subdirectory — drop + create is the
+               resize/reprecision path
   promote      --connect HOST:PORT    tell a follower serve to stop
                                        replicating, fence a new epoch, and
                                        accept writes (failover); prints the

@@ -37,6 +37,16 @@
 //! `fast serve --wal-dir DIR [--fsync always|interval|off]`) and the
 //! engine recovers before accepting work; `fast wal
 //! inspect|verify|compact|export` operate on the directory offline.
+//!
+//! Multi-tenant serves compose with this layer unchanged: a
+//! [`crate::tenant::TenantRegistry`] rooted at `--wal-dir` keeps its
+//! `tenants.json` manifest in the root and gives **each tenant** a
+//! standard durable engine directory at `<root>/tenants/<name>/` —
+//! its own per-shard segments, snapshots (the per-tenant snapshot
+//! watermark), single-writer lock and torn-tail repair — so every
+//! offline `fast wal` verb works on a tenant by pointing `--dir` at
+//! its subdirectory, and recovery of one tenant never reads another's
+//! log.
 
 pub mod cursor;
 pub mod recover;

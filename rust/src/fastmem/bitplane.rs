@@ -121,6 +121,24 @@ impl BitPlaneArray {
         self.segs.len()
     }
 
+    /// Total bitplanes across all segments (Σ widths). For the
+    /// single-segment q-bit arrays the multi-tenant registry builds
+    /// this is exactly `q` — the depth knob a narrow-precision tenant
+    /// turns down (see [`crate::tenant`]): batches sweep
+    /// [`Self::plane_words`] u64 lanes, so a 4-bit tenant pays half
+    /// the plane traffic of an 8-bit one for the same row count.
+    pub fn plane_count(&self) -> usize {
+        self.segs.iter().map(|s| s.width).sum()
+    }
+
+    /// u64 plane words one full batch sweeps: `plane_count · lanes`
+    /// (`q · ceil(rows/64)` for a single q-bit segment) — the
+    /// O(q·rows/64) closed form behind the per-tenant cost accounting
+    /// in [`crate::tenant`].
+    pub fn plane_words(&self) -> usize {
+        self.plane_count() * self.lanes
+    }
+
     /// Lane mask with every row enabled (the full-batch case).
     pub fn full_mask(&self) -> Vec<u64> {
         self.valid.clone()
@@ -388,6 +406,21 @@ mod tests {
                 assert_eq!(a.read_word(r, 0), want, "rows={rows} r={r}");
             }
         }
+    }
+
+    #[test]
+    fn plane_count_and_words_follow_the_per_q_closed_form() {
+        // The tenant-facing cost surface: q planes, q·ceil(rows/64)
+        // lane words for a single q-bit segment.
+        for (rows, q) in [(64usize, 4usize), (128, 8), (130, 16)] {
+            let a = BitPlaneArray::new(rows, &[q]);
+            assert_eq!(a.plane_count(), q);
+            assert_eq!(a.plane_words(), q * rows.div_ceil(64));
+        }
+        // Multi-segment arrays sum across segments.
+        let a = BitPlaneArray::new(100, &[8, 8]);
+        assert_eq!(a.plane_count(), 16);
+        assert_eq!(a.plane_words(), 16 * 2);
     }
 
     #[test]

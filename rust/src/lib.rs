@@ -122,6 +122,7 @@ pub mod query;
 pub mod replication;
 pub mod runtime;
 pub mod serve;
+pub mod tenant;
 pub mod timing;
 pub mod util;
 

@@ -5,6 +5,7 @@
 //! AOT-compiled XLA artifacts) and validate artifacts against host
 //! semantics. See `fast help`.
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::bail;
@@ -27,6 +28,7 @@ use fast_sram::replication::{
 };
 use fast_sram::runtime::{default_artifact_dir, validate, Runtime};
 use fast_sram::serve;
+use fast_sram::tenant::{tenant_dir, TenantRegistry, TenantSpec};
 use fast_sram::Result;
 
 fn main() -> Result<()> {
@@ -45,6 +47,7 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("promote") => cmd_promote(&args),
         Some("client") => cmd_client(&args),
+        Some("tenant") => cmd_tenant(&args),
         Some("query") => cmd_query(&args),
         Some("wal") => cmd_wal(&args),
         Some("validate") => cmd_validate(&args),
@@ -252,75 +255,157 @@ fn cmd_trace(args: &Args) -> Result<()> {
     }
 }
 
+/// Engine policy shared by every engine one `fast` process starts —
+/// the backend/fidelity/seal/fsync flags, parsed once and **owned**,
+/// so both `build_engine` (one engine) and the tenant factory of a
+/// `--tenants` serve (a `'static` closure that outlives `args` and
+/// builds one engine per tenant shape) start engines under an
+/// identical policy.
+struct EnginePolicy {
+    shards: usize,
+    backend: String,
+    artifact_dir: String,
+    fidelity: Fidelity,
+    seal_deadline: Duration,
+    seal_at_rows: Option<usize>,
+    fsync: FsyncPolicy,
+    segment_bytes: u64,
+}
+
+impl EnginePolicy {
+    fn parse(args: &Args) -> Result<EnginePolicy> {
+        let backend = args.get_str("backend", "fast").to_string();
+        // `--flush-us` is the deprecated spelling of `--seal-deadline-us`
+        // (kept as an alias; the new spelling wins when both are given).
+        let (deadline_str, renamed) = args.get_renamed("seal-deadline-us", "flush-us");
+        if renamed.deprecated() {
+            eprintln!(
+                "warning: --flush-us is deprecated; use --seal-deadline-us \
+                 (legacy alias honoured{})",
+                if deadline_str == args.get("flush-us") {
+                    ""
+                } else {
+                    " — --seal-deadline-us takes precedence"
+                }
+            );
+        }
+        let deadline_us: u64 = match deadline_str {
+            None => 100,
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--seal-deadline-us expects an integer, got {v:?}"))?,
+        };
+        let seal_at_rows = match args.get("seal-rows") {
+            None => None,
+            Some(n) => Some(
+                n.parse()
+                    .map_err(|_| anyhow::anyhow!("--seal-rows expects an integer, got {n:?}"))?,
+            ),
+        };
+        let fidelity_str = args.get_str("fidelity", "word").to_string();
+        let fidelity = Fidelity::parse(&fidelity_str).ok_or_else(|| {
+            anyhow::anyhow!("unknown fidelity {fidelity_str:?} (phase|word|bitplane)")
+        })?;
+        if backend != "fast" && fidelity != Fidelity::WordFast {
+            bail!("--fidelity applies to --backend fast only");
+        }
+        if args.get("wal-dir").is_none()
+            && (args.get("fsync").is_some()
+                || args.get("fsync-interval-us").is_some()
+                || args.get("wal-segment-bytes").is_some())
+        {
+            bail!("--fsync/--fsync-interval-us/--wal-segment-bytes require --wal-dir");
+        }
+        let interval = Duration::from_micros(args.get_u64("fsync-interval-us", 2000)?);
+        Ok(EnginePolicy {
+            shards: args.get_usize("shards", 1)?,
+            backend,
+            artifact_dir: args.get_str("artifacts", "").to_string(),
+            fidelity,
+            seal_deadline: Duration::from_micros(deadline_us),
+            seal_at_rows,
+            fsync: FsyncPolicy::parse(args.get_str("fsync", "interval"), interval)?,
+            segment_bytes: args.get_u64(
+                "wal-segment-bytes",
+                fast_sram::durability::DEFAULT_SEGMENT_BYTES,
+            )?,
+        })
+    }
+
+    /// Start one engine of the given shape under this policy. With a
+    /// WAL directory the engine recovers it inside
+    /// `UpdateEngine::start`, before any traffic.
+    fn start(
+        &self,
+        rows: usize,
+        q: usize,
+        wal_dir: Option<PathBuf>,
+        read_only: bool,
+    ) -> Result<UpdateEngine> {
+        let mut cfg = EngineConfig::sharded(rows, q, self.shards);
+        cfg.seal_deadline = self.seal_deadline;
+        if self.seal_at_rows.is_some() {
+            cfg.seal_at_rows = self.seal_at_rows;
+        }
+        cfg.read_only = read_only;
+        if let Some(dir) = wal_dir {
+            let mut d = DurabilityConfig::new(dir);
+            d.fsync = self.fsync.clone();
+            d.segment_bytes = self.segment_bytes;
+            cfg.durability = Some(d);
+        }
+        let engine = match self.backend.as_str() {
+            "fast" => match self.fidelity {
+                // The bit-plane tier transposes the shard's whole bank
+                // set into one plane stack — the dedicated backend.
+                Fidelity::BitPlane => UpdateEngine::start(cfg, move |plan| {
+                    Ok(Box::new(BitPlaneBackend::with_rows(plan.rows, plan.q)))
+                })?,
+                f => UpdateEngine::start(cfg, move |plan| {
+                    Ok(Box::new(FastBackend::with_rows_fidelity(plan.rows, plan.q, f)))
+                })?,
+            },
+            "digital" => UpdateEngine::start(cfg, move |plan| {
+                Ok(Box::new(DigitalBackend::new(plan.rows, plan.q)))
+            })?,
+            "xla" => {
+                // AOT artifacts exist only for whole arrays (128/1024
+                // rows) — sharding would need per-shard artifact
+                // families.
+                if self.shards > 1 {
+                    bail!("--backend xla supports --shards 1 only (artifact shapes are fixed)");
+                }
+                let dir = if self.artifact_dir.is_empty() {
+                    default_artifact_dir()
+                } else {
+                    PathBuf::from(&self.artifact_dir)
+                };
+                UpdateEngine::start(cfg, move |plan| {
+                    Ok(Box::new(XlaBackend::new(&dir, plan.rows, plan.q)?))
+                })?
+            }
+            other => bail!("unknown backend {other:?} (fast|digital|xla)"),
+        };
+        Ok(engine)
+    }
+}
+
 /// Build the update engine `fast serve` fronts, from the shared CLI
 /// flags (`--rows/--q/--shards/--backend/--fidelity/--seal-*`).
 fn build_engine(args: &Args) -> Result<UpdateEngine> {
     let banks = args.get_usize("banks", 8)?;
     let rows = args.get_usize("rows", banks * 128)?;
     let q = args.get_usize("q", 16)?;
-    let shards = args.get_usize("shards", 1)?;
-    let backend = args.get_str("backend", "fast").to_string();
-    let artifact_dir = args.get_str("artifacts", "").to_string();
-
-    let mut cfg = EngineConfig::sharded(rows, q, shards);
-    // `--flush-us` is the deprecated spelling of `--seal-deadline-us`
-    // (kept as an alias; the new spelling wins when both are given).
-    let (deadline_str, renamed) = args.get_renamed("seal-deadline-us", "flush-us");
-    if renamed.deprecated() {
-        eprintln!(
-            "warning: --flush-us is deprecated; use --seal-deadline-us \
-             (legacy alias honoured{})",
-            if deadline_str == args.get("flush-us") {
-                ""
-            } else {
-                " — --seal-deadline-us takes precedence"
-            }
-        );
-    }
-    let deadline_us: u64 = match deadline_str {
-        None => 100,
-        Some(v) => v
-            .parse()
-            .map_err(|_| anyhow::anyhow!("--seal-deadline-us expects an integer, got {v:?}"))?,
-    };
-    cfg.seal_deadline = Duration::from_micros(deadline_us);
-    if let Some(n) = args.get("seal-rows") {
-        cfg.seal_at_rows = Some(
-            n.parse()
-                .map_err(|_| anyhow::anyhow!("--seal-rows expects an integer, got {n:?}"))?,
-        );
-    }
-    let fidelity_str = args.get_str("fidelity", "word").to_string();
-    let fidelity = Fidelity::parse(&fidelity_str)
-        .ok_or_else(|| anyhow::anyhow!("unknown fidelity {fidelity_str:?} (phase|word|bitplane)"))?;
-    if backend != "fast" && fidelity != Fidelity::WordFast {
-        bail!("--fidelity applies to --backend fast only");
-    }
-    // Durability: --wal-dir switches the engine into durable mode
-    // (recovery runs inside UpdateEngine::start, before any traffic).
-    if let Some(dir) = args.get("wal-dir") {
-        let interval = Duration::from_micros(args.get_u64("fsync-interval-us", 2000)?);
-        let fsync = FsyncPolicy::parse(args.get_str("fsync", "interval"), interval)?;
-        let mut d = DurabilityConfig::new(dir);
-        d.fsync = fsync;
-        d.segment_bytes = args.get_u64(
-            "wal-segment-bytes",
-            fast_sram::durability::DEFAULT_SEGMENT_BYTES,
-        )?;
-        cfg.durability = Some(d);
-    } else if args.get("fsync").is_some()
-        || args.get("fsync-interval-us").is_some()
-        || args.get("wal-segment-bytes").is_some()
-    {
-        bail!("--fsync/--fsync-interval-us/--wal-segment-bytes require --wal-dir");
-    }
+    let policy = EnginePolicy::parse(args)?;
+    let wal_dir = args.get("wal-dir").map(PathBuf::from);
     // Replication roles: a follower starts read-only (writes answer
     // `ERR readonly` until `fast promote`), and both roles need the WAL
     // — it is the follower's durable cursor and the primary's shipped
     // history.
+    let mut read_only = false;
     if args.get("follower").is_some() {
         anyhow::ensure!(
-            cfg.durability.is_some(),
+            wal_dir.is_some(),
             "--follower requires --wal-dir (the follower's WAL is its durable \
              replication cursor)"
         );
@@ -328,51 +413,23 @@ fn build_engine(args: &Args) -> Result<UpdateEngine> {
             args.get("repl-listen").is_none(),
             "--follower and --repl-listen are mutually exclusive roles"
         );
-        cfg.read_only = true;
+        read_only = true;
     } else if args.get("repl-listen").is_some() {
         anyhow::ensure!(
-            cfg.durability.is_some(),
+            wal_dir.is_some(),
             "--repl-listen requires --wal-dir (followers stream the durable WAL)"
         );
     }
-    let engine = match backend.as_str() {
-        "fast" => match fidelity {
-            // The bit-plane tier transposes the shard's whole bank set
-            // into one plane stack — the dedicated backend.
-            Fidelity::BitPlane => UpdateEngine::start(cfg, move |plan| {
-                Ok(Box::new(BitPlaneBackend::with_rows(plan.rows, plan.q)))
-            })?,
-            f => UpdateEngine::start(cfg, move |plan| {
-                Ok(Box::new(FastBackend::with_rows_fidelity(plan.rows, plan.q, f)))
-            })?,
-        },
-        "digital" => UpdateEngine::start(cfg, move |plan| {
-            Ok(Box::new(DigitalBackend::new(plan.rows, plan.q)))
-        })?,
-        "xla" => {
-            // AOT artifacts exist only for whole arrays (128/1024 rows)
-            // — sharding would need per-shard artifact families.
-            if shards > 1 {
-                bail!("--backend xla supports --shards 1 only (artifact shapes are fixed)");
-            }
-            let dir = if artifact_dir.is_empty() {
-                default_artifact_dir()
-            } else {
-                artifact_dir.into()
-            };
-            UpdateEngine::start(cfg, move |plan| {
-                Ok(Box::new(XlaBackend::new(&dir, plan.rows, plan.q)?))
-            })?
-        }
-        other => bail!("unknown backend {other:?} (fast|digital|xla)"),
-    };
-    Ok(engine)
+    policy.start(rows, q, wal_dir, read_only)
 }
 
 /// `fast serve` — run the fast-serve-v1 front-end until a client sends
 /// SHUTDOWN (TCP) or stdin closes (`--stdio`). Prints the final engine
 /// stats on shutdown (a table, or one JSON line with `--stats-json`).
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.get_bool("tenants") {
+        return cmd_serve_tenants(args);
+    }
     let engine = std::sync::Arc::new(build_engine(args)?);
     let cfg = engine.config().clone();
     let stats_json = args.get_bool("stats-json");
@@ -517,6 +574,162 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build a tenant registry from the shared CLI flags: `--wal-dir`
+/// becomes the registry root (manifest + per-tenant WAL
+/// subdirectories at `<root>/tenants/<name>/`), and every tenant's
+/// engine is started by the same owned [`EnginePolicy`].
+fn build_registry(args: &Args) -> Result<TenantRegistry> {
+    let policy = EnginePolicy::parse(args)?;
+    match args.get("wal-dir") {
+        Some(root) => {
+            let root = PathBuf::from(root);
+            let durable_root = root.clone();
+            TenantRegistry::open(root, move |spec: &TenantSpec| {
+                policy.start(
+                    spec.rows,
+                    spec.q,
+                    Some(tenant_dir(&durable_root, &spec.name)),
+                    false,
+                )
+            })
+        }
+        None => Ok(TenantRegistry::volatile(move |spec: &TenantSpec| {
+            policy.start(spec.rows, spec.q, None, false)
+        })),
+    }
+}
+
+/// `fast serve --tenants` — the multi-tenant front-end: one registry
+/// of named tenants, each with its own engine, precision q, quota and
+/// (durable mode) WAL subdirectory. Sessions bind with `TENANT USE`
+/// or route per line via the `"tenant"` event field; SHUTDOWN drains
+/// every tenant.
+fn cmd_serve_tenants(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        args.get("follower").is_none() && args.get("repl-listen").is_none(),
+        "--tenants and replication roles are mutually exclusive \
+         (replicate a tenant's WAL subdirectory with a dedicated serve instead)"
+    );
+    let stats_json = args.get_bool("stats-json");
+    let reg = std::sync::Arc::new(build_registry(args)?);
+    if let Some(root) = reg.root() {
+        eprintln!(
+            "tenant registry at {} ({} tenant(s) recovered before accepting connections)",
+            root.display(),
+            reg.len()
+        );
+    }
+    let report = if args.get_bool("stdio") {
+        eprintln!(
+            "fast-serve-v1 (tenants) on stdio: {} tenant(s); bind with TENANT USE",
+            reg.len()
+        );
+        serve::serve_stdio_tenants(reg)?
+    } else {
+        let listen = args.get_str("listen", "127.0.0.1:4750").to_string();
+        let listener = std::net::TcpListener::bind(&listen)
+            .map_err(|e| anyhow::anyhow!("binding {listen}: {e}"))?;
+        eprintln!(
+            "fast-serve-v1 (tenants) listening on {} — {} tenant(s); \
+             TENANT CREATE/USE/DROP/LIST administer the registry \
+             (or `fast tenant … --connect {listen}`); SHUTDOWN drains every tenant",
+            listener.local_addr()?,
+            reg.len()
+        );
+        serve::serve_tcp_tenants(reg, listener)?
+    };
+    if stats_json {
+        println!("{}", serve::stats_json_tenants(&report.tenants));
+    } else {
+        let mut rows_txt = Vec::new();
+        for (spec, s) in &report.tenants {
+            rows_txt.push((
+                format!("tenant {}", spec.name),
+                format!(
+                    "{} rows x {} bits (quota {}) | {} submitted | {} completed | \
+                     {} batches | apply p99 {} ns",
+                    spec.rows,
+                    spec.q,
+                    spec.quota_rows,
+                    s.submitted,
+                    s.completed,
+                    s.batches,
+                    s.apply_wall.p99_ns
+                ),
+            ));
+        }
+        if rows_txt.is_empty() {
+            rows_txt.push(("tenants".to_string(), "none".to_string()));
+        }
+        print!("{}", render_table("serve (drained)", &rows_txt));
+    }
+    Ok(())
+}
+
+/// `fast tenant create|drop|list` — tenant administration, over the
+/// wire against a live `fast serve --tenants` (`--connect`) or
+/// offline against a registry root (`--wal-dir`; takes each tenant's
+/// single-writer lock, so a live serve on the same root blocks it).
+fn cmd_tenant(args: &Args) -> Result<()> {
+    let verb = args.positional.first().map(String::as_str).ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: fast tenant create NAME [--rows N] [--q 4|8|16] [--quota N] | \
+             fast tenant drop NAME | fast tenant list \
+             (--connect HOST:PORT or --wal-dir DIR)"
+        )
+    })?;
+    let name = || {
+        args.positional
+            .get(1)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow::anyhow!("fast tenant {verb} needs a tenant NAME"))
+    };
+    let rows = args.get_usize("rows", 128)?;
+    let q = args.get_usize("q", 8)?;
+    let quota = args.get_usize("quota", rows)?;
+    if let Some(addr) = args.get("connect") {
+        let line = match verb {
+            "create" => format!("TENANT CREATE {} {rows} {q} {quota}", name()?),
+            "drop" => format!("TENANT DROP {}", name()?),
+            "list" => "TENANT LIST".to_string(),
+            other => bail!("unknown tenant verb {other:?} (create|drop|list)"),
+        };
+        println!("{}", serve::run_tenant_cmd(addr, &line)?);
+        return Ok(());
+    }
+    anyhow::ensure!(
+        args.get("wal-dir").is_some(),
+        "fast tenant needs --connect HOST:PORT (live serve) or --wal-dir DIR (offline)"
+    );
+    let reg = build_registry(args)?;
+    match verb {
+        "create" => {
+            let spec = TenantSpec::with_quota(name()?, rows, q, quota)?;
+            reg.create(spec.clone())?;
+            println!(
+                "created tenant {:?}: {} rows x {} bits, quota {}",
+                spec.name, spec.rows, spec.q, spec.quota_rows
+            );
+        }
+        "drop" => {
+            let n = name()?;
+            reg.drop_tenant(n)?;
+            println!("dropped tenant {n:?}");
+        }
+        "list" => {
+            if reg.is_empty() {
+                println!("(no tenants)");
+            }
+            for s in reg.list() {
+                println!("{} rows={} q={} quota={}", s.name, s.rows, s.q, s.quota_rows);
+            }
+        }
+        other => bail!("unknown tenant verb {other:?} (create|drop|list)"),
+    }
+    reg.shutdown()?;
+    Ok(())
+}
+
 /// `fast promote` — flip a replication follower into a writable
 /// primary: it stops replicating, fences a new epoch (the old primary
 /// is refused from then on), and starts accepting writes.
@@ -561,6 +774,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     };
     let report = serve::run_client_retry(
         &addr,
+        args.get("tenant"),
         trace.as_ref(),
         mode,
         want_digest,

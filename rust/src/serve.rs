@@ -49,16 +49,41 @@
 //! SHUTDOWN              → OK draining     (server drains every shard and exits)
 //! ```
 //!
+//! ## Multi-tenant serves (`fast serve --tenants`)
+//!
+//! A multi-tenant serve hosts a [`TenantRegistry`] instead of a single
+//! engine (see `crate::tenant`). Four more control verbs manage it:
+//!
+//! ```text
+//! TENANT USE <name>                       → OK tenant=<n> rows=R q=Q quota=K
+//!                                           (binds this session; HELLO/READ/
+//!                                           DIGEST/QRY/STATS now act on it)
+//! TENANT CREATE <name> <rows> <q> [quota] → OK created tenant=…
+//! TENANT DROP <name>                      → OK dropped tenant=…
+//! TENANT LIST                             → OK tenants=N name:rows:q:quota …
+//! ```
+//!
+//! Event lines may carry an explicit `"tenant":"<name>"` field that
+//! overrides the session binding per line (parsed by
+//! [`TraceEvent::parse_line_routed`], with row/value validated against
+//! *that tenant's* rows and q). `STATS` with no tenant bound answers
+//! the registry-wide JSON: every tenant's spec plus its full engine
+//! stats object (per-tenant counters and latency histograms).
+//!
 //! Backpressure maps to protocol errors: when a shard's admission
 //! queue is full, the update line answers `ERR busy …` and the client
 //! retries — the server never buffers unboundedly on behalf of a
 //! client. Engine errors (bad row, shut-down engine) answer `ERR …`
-//! on the offending line; the connection stays usable. Two more typed
+//! on the offending line; the connection stays usable. More typed
 //! `ERR` classes let clients react without string-matching prose: a
 //! replication follower answers every update/write line with
-//! `ERR readonly …` until promoted, and a blocked `WAIT`/CMT aborted
+//! `ERR readonly …` until promoted; a blocked `WAIT`/CMT aborted
 //! by server shutdown answers `ERR shutdown …` within one wait-poll
-//! interval of the stop flag rising.
+//! interval of the stop flag rising; a row over its tenant's admission
+//! quota answers `ERR quota …`; and an event line carrying a field
+//! outside the `fast-trace-v1` grammar answers `ERR badfield …`
+//! instead of silently ignoring the field (which is what makes the
+//! `tenant` field safe to introduce: an old server rejects it loudly).
 //!
 //! Shutdown is a clean drain: new connections stop being accepted,
 //! open sessions wind down, every shard is drained (per-shard — the
@@ -74,10 +99,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context};
 
-use crate::apps::trace::{state_digest, Trace, TraceEvent};
-use crate::coordinator::{EngineBusy, EngineReadOnly, EngineStats, SealReason, UpdateEngine};
+use crate::apps::trace::{state_digest, BadField, Trace, TraceEvent};
+use crate::coordinator::{
+    EngineBusy, EngineReadOnly, EngineStats, SealReason, Ticket, UpdateEngine, UpdateRequest,
+};
 use crate::metrics::LatencySummary;
 use crate::replication::{FollowerHandle, ReplListener, ReplSnapshot, ReplStats};
+use crate::tenant::{QuotaExceeded, TenantHandle, TenantRegistry, TenantSpec};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -92,6 +120,22 @@ fn is_busy(e: &anyhow::Error) -> bool {
 /// healthy — they should redirect writes to the primary, not retry.
 fn is_readonly(e: &anyhow::Error) -> bool {
     e.root_cause().downcast_ref::<EngineReadOnly>().is_some()
+}
+
+/// Is this a tenant over-admission rejection? Typed as `ERR quota …`:
+/// the connection stays usable (like `ERR busy`, unlike terminal
+/// `ERR`s), but blind retries of the same row will keep failing — the
+/// remedy is a larger quota or a different row.
+fn is_quota(e: &anyhow::Error) -> bool {
+    e.root_cause().downcast_ref::<QuotaExceeded>().is_some()
+}
+
+/// Is this an unknown/malformed-field parse rejection? Typed as
+/// `ERR badfield …` so a client that sent a field this server does not
+/// understand (e.g. `tenant` to a single-tenant serve) learns so
+/// explicitly instead of having the field silently ignored.
+fn is_badfield(e: &anyhow::Error) -> bool {
+    e.root_cause().downcast_ref::<BadField>().is_some()
 }
 
 /// How often blocked protocol waits (`WAIT`, CMT commits) re-check the
@@ -147,11 +191,62 @@ pub struct SessionRepl {
     pub stats: Arc<ReplStats>,
 }
 
+/// What a serve fronts: one engine (the classic shape) or a registry
+/// of named tenants, each with its own engine. Cloned per connection.
+#[derive(Clone)]
+pub enum ServeTarget {
+    /// Single-engine serve: every line acts on this engine.
+    Engine(Arc<UpdateEngine>),
+    /// Multi-tenant serve: lines route by session binding
+    /// (`TENANT USE`) or per-line `"tenant"` field.
+    Tenants(Arc<TenantRegistry>),
+}
+
+/// A resolved routing decision: the single engine, or one tenant's
+/// handle. Mutations on the tenant arm go through the handle so the
+/// admission quota applies; read-side verbs use [`Self::engine`].
+enum RouteTarget {
+    Single(Arc<UpdateEngine>),
+    Tenant(Arc<TenantHandle>),
+}
+
+impl RouteTarget {
+    fn engine(&self) -> &UpdateEngine {
+        match self {
+            RouteTarget::Single(e) => e,
+            RouteTarget::Tenant(h) => h.engine(),
+        }
+    }
+
+    fn submit(&self, req: UpdateRequest) -> Result<()> {
+        match self {
+            RouteTarget::Single(e) => e.submit(req),
+            RouteTarget::Tenant(h) => h.submit(req),
+        }
+    }
+
+    fn submit_ticketed(&self, req: UpdateRequest) -> Result<Ticket> {
+        match self {
+            RouteTarget::Single(e) => e.submit_ticketed(req),
+            RouteTarget::Tenant(h) => h.submit_ticketed(req),
+        }
+    }
+
+    fn write(&self, row: usize, value: u32) -> Result<()> {
+        match self {
+            RouteTarget::Single(e) => e.write(row, value),
+            RouteTarget::Tenant(h) => h.write(row, value),
+        }
+    }
+}
+
 /// One protocol session (per connection). Pure request→response logic;
 /// transports (TCP, stdio, tests) feed it lines.
 pub struct Session {
-    engine: Arc<UpdateEngine>,
+    target: ServeTarget,
     mode: Mode,
+    /// Active tenant bound by `TENANT USE` (multi-tenant serves only).
+    tenant: Option<String>,
     /// Server-wide shutdown flag (TCP sessions): blocked waits poll it
     /// so a client parked in `WAIT`/CMT cannot deadlock the shutdown
     /// join. `None` for stdio/test sessions, whose blocked waits are
@@ -164,18 +259,42 @@ pub struct Session {
 
 impl Session {
     pub fn new(engine: Arc<UpdateEngine>) -> Self {
-        Session { engine, mode: Mode::Cmt, stop: None, repl: None }
+        Self::new_with(ServeTarget::Engine(engine))
+    }
+
+    /// A session over any serve target (single engine or tenants).
+    pub fn new_with(target: ServeTarget) -> Self {
+        Session { target, mode: Mode::Cmt, tenant: None, stop: None, repl: None }
     }
 
     /// A session that aborts blocked waits once `stop` is set.
     pub fn with_stop(engine: Arc<UpdateEngine>, stop: Arc<AtomicBool>) -> Self {
-        Session { engine, mode: Mode::Cmt, stop: Some(stop), repl: None }
+        Self::with_stop_target(ServeTarget::Engine(engine), stop)
+    }
+
+    /// [`Self::with_stop`] over any serve target.
+    pub fn with_stop_target(target: ServeTarget, stop: Arc<AtomicBool>) -> Self {
+        Session { target, mode: Mode::Cmt, tenant: None, stop: Some(stop), repl: None }
     }
 
     /// Attach replication context (builder style).
     pub fn with_repl(mut self, repl: Option<SessionRepl>) -> Self {
         self.repl = repl;
         self
+    }
+
+    /// Resolve the engine the control-plane verbs act on: the single
+    /// engine, or the session's active tenant.
+    fn active(&self) -> Result<RouteTarget> {
+        match &self.target {
+            ServeTarget::Engine(e) => Ok(RouteTarget::Single(Arc::clone(e))),
+            ServeTarget::Tenants(reg) => {
+                let name = self.tenant.as_deref().ok_or_else(|| {
+                    anyhow!("no tenant bound to this session (TENANT USE <name>)")
+                })?;
+                Ok(RouteTarget::Tenant(reg.get(name)?))
+            }
+        }
     }
 
     /// Abort a blocked wait when the server is shutting down (TCP), or
@@ -204,6 +323,16 @@ impl Session {
     pub fn handle(&mut self, line: &str) -> Action {
         match self.dispatch(line.trim()) {
             Ok(action) => action,
+            // Typed, retryable rejections keep a machine-readable
+            // prefix (like `ERR busy` / `ERR readonly`): over-quota
+            // rows and out-of-grammar fields are client-correctable,
+            // not server failures.
+            Err(e) if is_quota(&e) => {
+                Action::Reply(format!("ERR quota {}", one_line(&format!("{e:#}"))))
+            }
+            Err(e) if is_badfield(&e) => {
+                Action::Reply(format!("ERR badfield {}", one_line(&format!("{e:#}"))))
+            }
             // One response line per request line: flatten the error.
             Err(e) => Action::Reply(format!("ERR {}", one_line(&format!("{e:#}")))),
         }
@@ -216,15 +345,80 @@ impl Session {
         let mut parts = line.split_whitespace();
         let cmd = parts.next().unwrap_or("");
         let reply = match cmd {
-            "HELLO" => {
-                let cfg = self.engine.config();
-                format!(
-                    "OK {PROTOCOL} rows={} q={} shards={} backend={}",
-                    cfg.rows,
-                    cfg.q,
-                    cfg.shards,
-                    self.engine.stats().backend
-                )
+            "HELLO" => match (&self.target, &self.tenant) {
+                // Unbound multi-tenant session: announce the registry.
+                (ServeTarget::Tenants(reg), None) => {
+                    format!("OK {PROTOCOL} tenants={} bind=TENANT-USE", reg.len())
+                }
+                _ => {
+                    let t = self.active()?;
+                    let cfg = t.engine().config();
+                    let backend = t.engine().stats().backend;
+                    let tenant = match &self.tenant {
+                        Some(n) => format!(" tenant={n}"),
+                        None => String::new(),
+                    };
+                    format!(
+                        "OK {PROTOCOL} rows={} q={} shards={} backend={backend}{tenant}",
+                        cfg.rows, cfg.q, cfg.shards
+                    )
+                }
+            },
+            "TENANT" => {
+                let ServeTarget::Tenants(reg) = &self.target else {
+                    bail!(
+                        "TENANT verbs need a multi-tenant serve \
+                         (start with `fast serve --tenants`)"
+                    )
+                };
+                match parts.next() {
+                    Some("USE") => {
+                        let name =
+                            parts.next().ok_or_else(|| anyhow!("usage: TENANT USE <name>"))?;
+                        let h = reg.get(name)?;
+                        let s = h.spec().clone();
+                        self.tenant = Some(s.name.clone());
+                        format!(
+                            "OK tenant={} rows={} q={} quota={}",
+                            s.name, s.rows, s.q, s.quota_rows
+                        )
+                    }
+                    Some("CREATE") => {
+                        let usage = "TENANT CREATE <name> <rows> <q> [quota]";
+                        let name = parts.next().ok_or_else(|| anyhow!("usage: {usage}"))?;
+                        let rows = int_arg(parts.next(), usage)?;
+                        let q = int_arg(parts.next(), usage)?;
+                        let quota = match parts.next() {
+                            Some(tok) => {
+                                tok.parse().map_err(|_| anyhow!("usage: {usage}"))?
+                            }
+                            None => rows,
+                        };
+                        reg.create(TenantSpec::with_quota(name, rows, q, quota)?)?;
+                        format!("OK created tenant={name} rows={rows} q={q} quota={quota}")
+                    }
+                    Some("DROP") => {
+                        let name =
+                            parts.next().ok_or_else(|| anyhow!("usage: TENANT DROP <name>"))?;
+                        reg.drop_tenant(name)?;
+                        if self.tenant.as_deref() == Some(name) {
+                            self.tenant = None;
+                        }
+                        format!("OK dropped tenant={name}")
+                    }
+                    Some("LIST") => {
+                        let specs = reg.list();
+                        let mut line = format!("OK tenants={}", specs.len());
+                        for s in &specs {
+                            line.push_str(&format!(
+                                " {}:{}:{}:{}",
+                                s.name, s.rows, s.q, s.quota_rows
+                            ));
+                        }
+                        line
+                    }
+                    other => bail!("TENANT expects USE|CREATE|DROP|LIST, got {other:?}"),
+                }
             }
             "MODE" => match parts.next() {
                 Some("SUB") => {
@@ -239,15 +433,16 @@ impl Session {
             },
             "READ" => {
                 let row = int_arg(parts.next(), "READ <row>")?;
-                format!("OK {}", self.engine.read(row)?)
+                format!("OK {}", self.active()?.engine().read(row)?)
             }
             "WAIT" => {
                 let shard = int_arg(parts.next(), "WAIT <shard> <seq>")?;
                 let seq = int_arg(parts.next(), "WAIT <shard> <seq>")? as u64;
+                let t = self.active()?;
                 let started = Instant::now();
                 loop {
                     if let Some(committed) =
-                        self.engine.wait_seq_timeout(shard, seq, WAIT_POLL)?
+                        t.engine().wait_seq_timeout(shard, seq, WAIT_POLL)?
                     {
                         break format!("OK {committed}");
                     }
@@ -256,10 +451,10 @@ impl Session {
             }
             "DRAIN" => {
                 let shard = int_arg(parts.next(), "DRAIN <shard>")?;
-                format!("OK {}", self.engine.drain_shard(shard)?)
+                format!("OK {}", self.active()?.engine().drain_shard(shard)?)
             }
             "DIGEST" => {
-                let snap = self.engine.snapshot()?;
+                let snap = self.active()?.engine().snapshot()?;
                 match parts.next() {
                     // `DIGEST CRC`: CRC32 over the state's LE bytes —
                     // the same util::crc32 that frames the WAL, so an
@@ -278,13 +473,30 @@ impl Session {
                 }
             }
             "QRY" => {
-                let cfg = self.engine.config();
-                let tokens: Vec<&str> = parts.collect();
+                let mut tokens: Vec<&str> = parts.collect();
+                // Optional leading `tenant=<name>` token scopes the
+                // reduction to that tenant's rows, overriding the
+                // session binding.
+                let t = match tokens.first().and_then(|tok| tok.strip_prefix("tenant=")) {
+                    Some(name) => {
+                        let ServeTarget::Tenants(reg) = &self.target else {
+                            bail!(
+                                "QRY tenant= scoping needs a multi-tenant serve \
+                                 (start with `fast serve --tenants`)"
+                            )
+                        };
+                        let h = reg.get(name)?;
+                        tokens.remove(0);
+                        RouteTarget::Tenant(h)
+                    }
+                    None => self.active()?,
+                };
+                let cfg = t.engine().config();
                 // A malformed line fails here with a typed message and
                 // becomes a single `ERR …` reply via `handle` — the
                 // session never hangs on a bad query.
                 let spec = crate::query::parse_spec(&tokens, cfg.rows, cfg.q)?;
-                let r = self.engine.submit_query(&spec)?.wait()?;
+                let r = t.engine().submit_query(&spec)?.wait()?;
                 let seqs: Vec<String> =
                     r.shard_seqs.iter().map(u64::to_string).collect();
                 format!(
@@ -302,10 +514,18 @@ impl Session {
                     seqs.join(",")
                 )
             }
-            "STATS" => {
-                let repl = self.repl.as_ref().map(|r| r.stats.snapshot());
-                format!("OK {}", stats_json_with_repl(&self.engine.stats(), repl.as_ref()))
-            }
+            "STATS" => match (&self.target, &self.tenant) {
+                // Unbound multi-tenant session: the registry-wide view
+                // (every tenant's spec + full per-engine stats).
+                (ServeTarget::Tenants(reg), None) => {
+                    format!("OK {}", stats_json_tenants(&reg.stats()))
+                }
+                _ => {
+                    let t = self.active()?;
+                    let repl = self.repl.as_ref().map(|r| r.stats.snapshot());
+                    format!("OK {}", stats_json_with_repl(&t.engine().stats(), repl.as_ref()))
+                }
+            },
             "PROMOTE" => match &self.repl {
                 Some(SessionRepl { follower: Some(f), .. }) => {
                     let epoch = f.promote().context("promoting this follower")?;
@@ -324,15 +544,43 @@ impl Session {
     }
 
     fn handle_event(&mut self, line: &str) -> Result<Action> {
-        let cfg = self.engine.config();
-        let (rows, q) = (cfg.rows, cfg.q);
-        let reply = match TraceEvent::parse_line(line, rows, q)? {
+        // Parse AND route in one step: on a multi-tenant serve the
+        // row/value validation must use the routed tenant's shape
+        // (per-line "tenant" field wins over the session binding), and
+        // mutations go through the tenant handle so quotas apply.
+        let (target, event) = match &self.target {
+            ServeTarget::Engine(e) => {
+                let cfg = e.config();
+                let event = TraceEvent::parse_line(line, cfg.rows, cfg.q)?;
+                (RouteTarget::Single(Arc::clone(e)), event)
+            }
+            ServeTarget::Tenants(reg) => {
+                let bound = self.tenant.clone();
+                let resolve = |t: Option<&str>| -> Result<Arc<TenantHandle>> {
+                    let name = t.or(bound.as_deref()).ok_or_else(|| {
+                        anyhow!(
+                            "no tenant for this event line (TENANT USE <name>, or \
+                             add a \"tenant\" field)"
+                        )
+                    })?;
+                    reg.get(name)
+                };
+                let (tenant, event) = TraceEvent::parse_line_routed(line, &|t| {
+                    let cfg = resolve(t)?.engine().config();
+                    Ok((cfg.rows, cfg.q))
+                })?;
+                (RouteTarget::Tenant(resolve(tenant.as_deref())?), event)
+            }
+        };
+        let reply = match event {
             TraceEvent::Update(req) => match self.mode {
                 // Backpressure (queue full) is a retryable protocol
                 // error; anything else (engine shut down, dead shard)
                 // is terminal and reported as a plain ERR so clients
-                // fail fast instead of retrying.
-                Mode::Sub => match self.engine.submit(req) {
+                // fail fast instead of retrying. (Over-quota rows
+                // propagate as errors and get their typed `ERR quota`
+                // prefix in `handle`.)
+                Mode::Sub => match target.submit(req) {
                     Ok(()) => "OK".to_string(),
                     Err(e) if is_busy(&e) => {
                         format!("ERR busy {}", one_line(&format!("{e:#}")))
@@ -342,7 +590,7 @@ impl Session {
                     }
                     Err(e) => return Err(e),
                 },
-                Mode::Cmt => match self.engine.submit_ticketed(req) {
+                Mode::Cmt => match target.submit_ticketed(req) {
                     Ok(ticket) => {
                         let started = Instant::now();
                         loop {
@@ -368,7 +616,7 @@ impl Session {
                     Err(e) => return Err(e),
                 },
             },
-            TraceEvent::Write { row, value } => match self.engine.write(row, value) {
+            TraceEvent::Write { row, value } => match target.write(row, value) {
                 Ok(()) => "OK".to_string(),
                 Err(e) if is_readonly(&e) => {
                     format!("ERR readonly {}", one_line(&format!("{e:#}")))
@@ -376,10 +624,12 @@ impl Session {
                 Err(e) => return Err(e),
             },
             TraceEvent::Flush => {
-                // Barrier: the engine's explicit whole-engine barrier,
-                // built from per-shard drains.
+                // Barrier: the routed engine's explicit whole-engine
+                // barrier, built from per-shard drains. Scoped to one
+                // tenant on a multi-tenant serve — tenants are
+                // isolated, so there is no cross-tenant barrier.
                 let seqs: Vec<String> =
-                    self.engine.drain_all()?.iter().map(u64::to_string).collect();
+                    target.engine().drain_all()?.iter().map(u64::to_string).collect();
                 format!("OK drained seq={}", seqs.join(","))
             }
         };
@@ -441,6 +691,13 @@ impl ServeRepl {
     }
 }
 
+/// Outcome of a multi-tenant serve run: every tenant's spec and final
+/// engine stats (name-sorted), collected after the per-tenant drains.
+#[derive(Debug)]
+pub struct TenantServeReport {
+    pub tenants: Vec<(TenantSpec, EngineStats)>,
+}
+
 /// Drain every shard, collect stats, shut the engine down. Errors here
 /// (a shard worker died, a drain failed) propagate to the caller so
 /// `fast serve` exits nonzero on an unclean drain.
@@ -455,18 +712,25 @@ fn finish(engine: Arc<UpdateEngine>) -> Result<ServeReport> {
     Ok(ServeReport { stats, drained_seq, repl: None })
 }
 
+/// The multi-tenant [`finish`]: drain every tenant, snapshot its
+/// stats, shut every engine down cleanly (WAL barriers included).
+fn finish_tenants(reg: Arc<TenantRegistry>) -> Result<TenantServeReport> {
+    let reg = Arc::try_unwrap(reg)
+        .map_err(|_| anyhow!("connection threads still hold the tenant registry at shutdown"))?;
+    reg.drain_all().context("draining the tenants at shutdown")?;
+    let tenants = reg.stats();
+    reg.shutdown()?;
+    Ok(TenantServeReport { tenants })
+}
+
 /// Serve one session over stdin/stdout (EOF = clean shutdown).
 pub fn serve_stdio(engine: UpdateEngine) -> Result<ServeReport> {
     serve_stdio_with(Arc::new(engine), None)
 }
 
-/// [`serve_stdio`] with replication context (follower/primary roles).
-/// Takes the engine as an `Arc` because a follower's replication loop
-/// shares it; [`finish`] still requires every other clone dropped by
-/// shutdown, which [`ServeRepl::wind_down`] guarantees.
-pub fn serve_stdio_with(engine: Arc<UpdateEngine>, repl: Option<ServeRepl>) -> Result<ServeReport> {
-    let mut session =
-        Session::new(Arc::clone(&engine)).with_repl(repl.as_ref().map(ServeRepl::session));
+/// Feed stdin lines to one session until EOF/QUIT/SHUTDOWN — the
+/// transport shared by the single-engine and tenant stdio serves.
+fn stdio_loop(session: &mut Session) -> Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     for line in stdin.lock().lines() {
@@ -488,11 +752,31 @@ pub fn serve_stdio_with(engine: Arc<UpdateEngine>, repl: Option<ServeRepl>) -> R
             }
         }
     }
+    Ok(())
+}
+
+/// [`serve_stdio`] with replication context (follower/primary roles).
+/// Takes the engine as an `Arc` because a follower's replication loop
+/// shares it; [`finish`] still requires every other clone dropped by
+/// shutdown, which [`ServeRepl::wind_down`] guarantees.
+pub fn serve_stdio_with(engine: Arc<UpdateEngine>, repl: Option<ServeRepl>) -> Result<ServeReport> {
+    let mut session =
+        Session::new(Arc::clone(&engine)).with_repl(repl.as_ref().map(ServeRepl::session));
+    stdio_loop(&mut session)?;
     drop(session);
     let repl_snap = repl.map(ServeRepl::wind_down);
     let mut report = finish(engine)?;
     report.repl = repl_snap;
     Ok(report)
+}
+
+/// [`serve_stdio`] over a tenant registry (`fast serve --tenants
+/// --stdio`): one session, EOF = clean shutdown of every tenant.
+pub fn serve_stdio_tenants(reg: Arc<TenantRegistry>) -> Result<TenantServeReport> {
+    let mut session = Session::new_with(ServeTarget::Tenants(Arc::clone(&reg)));
+    stdio_loop(&mut session)?;
+    drop(session);
+    finish_tenants(reg)
 }
 
 /// Serve the protocol on an already-bound listener until a client
@@ -501,6 +785,17 @@ pub fn serve_stdio_with(engine: Arc<UpdateEngine>, repl: Option<ServeRepl>) -> R
 /// concurrency bottleneck by design, not the session threads).
 pub fn serve_tcp(engine: UpdateEngine, listener: TcpListener) -> Result<ServeReport> {
     serve_tcp_with(Arc::new(engine), listener, None)
+}
+
+/// [`serve_tcp`] over a tenant registry (`fast serve --tenants`):
+/// sessions bind tenants with `TENANT USE` (or per-line `"tenant"`
+/// fields) and the shutdown drain covers every tenant.
+pub fn serve_tcp_tenants(
+    reg: Arc<TenantRegistry>,
+    listener: TcpListener,
+) -> Result<TenantServeReport> {
+    accept_loop(ServeTarget::Tenants(Arc::clone(&reg)), &listener, None)?;
+    finish_tenants(reg)
 }
 
 /// [`serve_tcp`] with replication context (the `Arc` is shared with a
@@ -513,6 +808,21 @@ pub fn serve_tcp_with(
     listener: TcpListener,
     repl: Option<ServeRepl>,
 ) -> Result<ServeReport> {
+    accept_loop(ServeTarget::Engine(Arc::clone(&engine)), &listener, repl.as_ref())?;
+    let repl_snap = repl.map(ServeRepl::wind_down);
+    let mut report = finish(engine)?;
+    report.repl = repl_snap;
+    Ok(report)
+}
+
+/// The shared TCP accept loop: accept connections, spawn a session
+/// thread per connection, stop when the server-wide stop flag rises
+/// (SHUTDOWN or a replication fail-stop), join every session thread.
+fn accept_loop(
+    target: ServeTarget,
+    listener: &TcpListener,
+    repl: Option<&ServeRepl>,
+) -> Result<()> {
     let addr = listener.local_addr().context("listener address")?;
     // Address the SHUTDOWN handler can actually reach to wake the
     // blocking accept below: an unspecified bind (0.0.0.0 / ::) is not
@@ -534,7 +844,6 @@ pub fn serve_tcp_with(
     // divergence fail-stop (which has no client connection to wake the
     // accept with) still brings the server down promptly.
     let stop = repl
-        .as_ref()
         .and_then(|r| r.fail_stop.clone())
         .unwrap_or_else(|| Arc::new(AtomicBool::new(false)));
     if repl.is_some() {
@@ -574,20 +883,17 @@ pub fn serve_tcp_with(
                 }
             })
             .collect();
-        let engine = Arc::clone(&engine);
+        let target = target.clone();
         let stop = Arc::clone(&stop);
-        let session_repl = repl.as_ref().map(ServeRepl::session);
+        let session_repl = repl.map(ServeRepl::session);
         handles.push(std::thread::spawn(move || {
-            serve_conn(stream, engine, stop, wake_addr, session_repl)
+            serve_conn(stream, target, stop, wake_addr, session_repl)
         }));
     }
     for h in handles {
         let _ = h.join();
     }
-    let repl_snap = repl.map(ServeRepl::wind_down);
-    let mut report = finish(engine)?;
-    report.repl = repl_snap;
-    Ok(report)
+    Ok(())
 }
 
 /// One TCP connection: read lines, answer lines. A short read timeout
@@ -596,7 +902,7 @@ pub fn serve_tcp_with(
 /// blocking accept loop after SHUTDOWN.
 fn serve_conn(
     stream: TcpStream,
-    engine: Arc<UpdateEngine>,
+    target: ServeTarget,
     stop: Arc<AtomicBool>,
     wake_addr: SocketAddr,
     repl: Option<SessionRepl>,
@@ -612,7 +918,7 @@ fn serve_conn(
     };
     let mut reader = BufReader::new(reader);
     let mut out = stream;
-    let mut session = Session::with_stop(engine, Arc::clone(&stop)).with_repl(repl);
+    let mut session = Session::with_stop_target(target, Arc::clone(&stop)).with_repl(repl);
     let mut buf = String::new();
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -721,6 +1027,7 @@ pub fn run_client(
 ) -> Result<ClientReport> {
     run_client_retry(
         addr,
+        None,
         trace,
         mode,
         want_digest,
@@ -731,10 +1038,14 @@ pub fn run_client(
     )
 }
 
-/// [`run_client`] with explicit backpressure-retry tuning.
+/// [`run_client`] with explicit backpressure-retry tuning and an
+/// optional tenant binding (`fast client --tenant <name>`): the
+/// session sends `TENANT USE` *before* `HELLO`, so the banner's
+/// rows/q shape check validates against the tenant's shape.
 #[allow(clippy::too_many_arguments)]
 pub fn run_client_retry(
     addr: &str,
+    tenant: Option<&str>,
     trace: Option<&Trace>,
     mode: Mode,
     want_digest: bool,
@@ -755,6 +1066,10 @@ pub fn run_client_retry(
         Ok(reply.trim_end().to_string())
     };
 
+    if let Some(name) = tenant {
+        let reply = roundtrip(&format!("TENANT USE {name}"))?;
+        ensure!(reply.starts_with("OK"), "TENANT USE {name} failed: {reply}");
+    }
     let hello = roundtrip("HELLO")?;
     ensure!(
         hello.starts_with(&format!("OK {PROTOCOL}")),
@@ -900,6 +1215,24 @@ pub fn run_promote(addr: &str) -> Result<u64> {
     Ok(epoch)
 }
 
+/// `fast tenant create|drop|list --connect <addr>`: run one `TENANT …`
+/// control line against a live multi-tenant serve and return the
+/// server's `OK …` reply line. Any `ERR …` reply is a hard error.
+pub fn run_tenant_cmd(addr: &str, line: &str) -> Result<String> {
+    let stream = connect_with_retry(addr, Duration::from_secs(10))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut out = stream;
+    writeln!(out, "{line}").context("sending TENANT line")?;
+    let mut reply = String::new();
+    let n = reader.read_line(&mut reply).context("reading TENANT reply")?;
+    ensure!(n > 0, "server closed the connection before answering {line:?}");
+    let reply = reply.trim_end().to_string();
+    ensure!(reply.starts_with("OK"), "{line:?} failed: {reply}");
+    let _ = writeln!(out, "QUIT");
+    Ok(reply)
+}
+
 fn connect_with_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
     let deadline = Instant::now() + budget;
     loop {
@@ -1026,6 +1359,31 @@ fn repl_json(r: &ReplSnapshot) -> String {
         r.wire_errors,
         r.digests_verified,
     )
+}
+
+/// Registry-wide stats JSON for a multi-tenant serve: every tenant's
+/// spec plus its full [`stats_json`] object, name-sorted — the `STATS`
+/// reply on an unbound tenant session and the `fast serve --tenants
+/// --stats-json` shutdown snapshot. Per-tenant counters and latency
+/// histograms come from each tenant's own engine, so the schema inside
+/// `"stats"` is exactly the single-engine schema.
+pub fn stats_json_tenants(stats: &[(TenantSpec, EngineStats)]) -> String {
+    let mut body = String::from("{\"tenants\":[");
+    for (i, (spec, s)) in stats.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&format!(
+            "{{\"name\":\"{}\",\"rows\":{},\"q\":{},\"quota\":{},\"stats\":{}}}",
+            spec.name,
+            spec.rows,
+            spec.q,
+            spec.quota_rows,
+            stats_json(s)
+        ));
+    }
+    body.push_str("]}");
+    body
 }
 
 /// [`stats_json`] plus — when the serve carries a replication role —
@@ -1439,7 +1797,7 @@ mod tests {
         let trace = uniform_trace(8, 8, 2, 11);
         let retry = ClientRetry { retries: 10, backoff_us: 50 };
         let report =
-            run_client_retry(&addr, Some(&trace), Mode::Sub, false, None, None, false, retry)
+            run_client_retry(&addr, None, Some(&trace), Mode::Sub, false, None, None, false, retry)
                 .unwrap();
         assert_eq!(report.busy_retries, 3);
         assert_eq!(report.acked, trace.events.len() as u64);
@@ -1453,7 +1811,7 @@ mod tests {
         let trace = uniform_trace(8, 8, 2, 11);
         let retry = ClientRetry { retries: 2, backoff_us: 50 };
         let err =
-            run_client_retry(&addr, Some(&trace), Mode::Sub, false, None, None, false, retry)
+            run_client_retry(&addr, None, Some(&trace), Mode::Sub, false, None, None, false, retry)
                 .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("still busy after 2 retries"), "{msg}");
@@ -1580,5 +1938,176 @@ mod tests {
             .unwrap_or_else(|_| panic!("sole owner"))
             .shutdown()
             .unwrap();
+    }
+
+    fn registry(specs: &[(&str, usize, usize)]) -> Arc<TenantRegistry> {
+        let reg = TenantRegistry::volatile(|spec: &TenantSpec| {
+            let cfg = EngineConfig::new(spec.rows, spec.q);
+            UpdateEngine::start(cfg, |p: &ShardPlan| {
+                Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+            })
+        });
+        for (name, rows, q) in specs {
+            reg.create(TenantSpec::new(name, *rows, *q).unwrap()).unwrap();
+        }
+        Arc::new(reg)
+    }
+
+    fn shutdown_registry(reg: Arc<TenantRegistry>) {
+        Arc::try_unwrap(reg)
+            .unwrap_or_else(|_| panic!("sole registry owner"))
+            .shutdown()
+            .unwrap();
+    }
+
+    #[test]
+    fn tenant_sessions_create_use_route_and_drop_over_the_protocol() {
+        let reg = registry(&[]);
+        let mut s = Session::new_with(ServeTarget::Tenants(Arc::clone(&reg)));
+
+        // Unbound session: banner announces the registry; engine verbs
+        // need a binding first.
+        assert_eq!(reply(&mut s, "HELLO"), "OK fast-serve-v1 tenants=0 bind=TENANT-USE");
+        assert!(reply(&mut s, "READ 0").contains("TENANT USE"), "unbound READ must say how");
+
+        // Create two tenants of different precision over the wire.
+        assert_eq!(
+            reply(&mut s, "TENANT CREATE db 64 4"),
+            "OK created tenant=db rows=64 q=4 quota=64"
+        );
+        assert_eq!(
+            reply(&mut s, "TENANT CREATE nn 32 16 8"),
+            "OK created tenant=nn rows=32 q=16 quota=8"
+        );
+        assert_eq!(reply(&mut s, "TENANT LIST"), "OK tenants=2 db:64:4:64 nn:32:16:8");
+        assert!(reply(&mut s, "TENANT CREATE db 8 8").starts_with("ERR "), "dup name");
+        assert!(reply(&mut s, "TENANT CREATE x 8 5").starts_with("ERR "), "bad q");
+
+        // Bind and speak the normal protocol against the tenant.
+        assert_eq!(reply(&mut s, "TENANT USE db"), "OK tenant=db rows=64 q=4 quota=64");
+        let banner = reply(&mut s, "HELLO");
+        assert!(banner.starts_with("OK fast-serve-v1 rows=64 q=4 "), "{banner}");
+        assert!(banner.ends_with(" tenant=db"), "{banner}");
+        let r = reply(&mut s, "{\"t\":\"u\",\"o\":\"add\",\"r\":3,\"v\":7}");
+        assert!(r.starts_with("OK shard="), "{r}");
+        assert_eq!(reply(&mut s, "READ 3"), "OK 7");
+        // Value validation uses the bound tenant's q (4 bits), not a
+        // global default.
+        assert!(reply(&mut s, "{\"t\":\"w\",\"r\":0,\"v\":16}").starts_with("ERR "), "q=4 mask");
+
+        // A per-line tenant field overrides the binding — and its
+        // value validates against THAT tenant's q (16 bits).
+        let r = reply(&mut s, "{\"t\":\"w\",\"r\":3,\"v\":60000,\"tenant\":\"nn\"}");
+        assert_eq!(r, "OK");
+        assert_eq!(reply(&mut s, "READ 3"), "OK 7", "db row untouched by nn write");
+        assert!(reply(&mut s, "QRY tenant=nn sum").contains(" value=60000 "), "scoped QRY");
+        assert!(reply(&mut s, "QRY sum").contains(" value=7 "), "bound QRY");
+
+        // Per-tenant digests differ; both are well-formed.
+        let d_db = reply(&mut s, "DIGEST");
+        assert_eq!(d_db.len(), 3 + 16, "{d_db}");
+
+        // Unbound STATS answers the registry-wide JSON.
+        s.tenant = None;
+        let r = reply(&mut s, "STATS");
+        let json = Json::parse(r.strip_prefix("OK ").unwrap()).unwrap();
+        let tenants = json.get("tenants").and_then(Json::as_arr).unwrap();
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0].get("name").and_then(Json::as_str), Some("db"));
+        assert_eq!(tenants[0].get("q").and_then(Json::as_usize), Some(4));
+        assert!(tenants[0].get("stats").and_then(|s| s.get("submitted")).is_some());
+
+        // Dropping the bound tenant clears the binding; the survivor
+        // keeps its state.
+        assert_eq!(reply(&mut s, "TENANT USE db"), "OK tenant=db rows=64 q=4 quota=64");
+        assert_eq!(reply(&mut s, "TENANT DROP db"), "OK dropped tenant=db");
+        assert!(reply(&mut s, "READ 0").contains("TENANT USE"), "binding cleared");
+        assert_eq!(reply(&mut s, "TENANT USE nn"), "OK tenant=nn rows=32 q=16 quota=8");
+        assert_eq!(reply(&mut s, "READ 3"), "OK 60000");
+
+        drop(s);
+        shutdown_registry(reg);
+    }
+
+    #[test]
+    fn quota_and_badfield_are_typed_and_keep_the_session_alive() {
+        let reg = registry(&[]);
+        let mut s = Session::new_with(ServeTarget::Tenants(Arc::clone(&reg)));
+        assert_eq!(
+            reply(&mut s, "TENANT CREATE t 64 8 16"),
+            "OK created tenant=t rows=64 q=8 quota=16"
+        );
+        assert_eq!(reply(&mut s, "TENANT USE t"), "OK tenant=t rows=64 q=8 quota=16");
+
+        // In-quota rows work in both modes; over-quota rows answer the
+        // typed `ERR quota` prefix and the session stays usable.
+        let r = reply(&mut s, "{\"t\":\"u\",\"o\":\"add\",\"r\":15,\"v\":1}");
+        assert!(r.starts_with("OK shard="), "{r}");
+        for line in [
+            "{\"t\":\"u\",\"o\":\"add\",\"r\":16,\"v\":1}",
+            "{\"t\":\"w\",\"r\":63,\"v\":1}",
+        ] {
+            let r = reply(&mut s, line);
+            assert!(r.starts_with("ERR quota "), "{line} -> {r}");
+        }
+        assert_eq!(reply(&mut s, "MODE SUB"), "OK mode=SUB");
+        let r = reply(&mut s, "{\"t\":\"u\",\"o\":\"add\",\"r\":40,\"v\":1}");
+        assert!(r.starts_with("ERR quota "), "SUB over-quota: {r}");
+        assert_eq!(reply(&mut s, "READ 15"), "OK 1", "session survives quota rejections");
+
+        // Unknown fields answer the typed `ERR badfield` prefix.
+        let r = reply(&mut s, "{\"t\":\"u\",\"o\":\"add\",\"r\":0,\"v\":1,\"nonce\":9}");
+        assert!(r.starts_with("ERR badfield "), "{r}");
+        drop(s);
+        shutdown_registry(reg);
+
+        // On a single-engine serve the `tenant` field itself is out of
+        // grammar — the forward-compatibility contract: an old server
+        // rejects it loudly instead of applying the line to the wrong
+        // row space.
+        let e = engine(16, 8, 1);
+        let mut s = Session::new(Arc::clone(&e));
+        let r = reply(&mut s, "{\"t\":\"w\",\"r\":0,\"v\":1,\"tenant\":\"a\"}");
+        assert!(r.starts_with("ERR badfield "), "{r}");
+        assert!(r.contains("tenant"), "{r}");
+        assert!(reply(&mut s, "TENANT LIST").contains("--tenants"), "typed TENANT refusal");
+        assert_eq!(reply(&mut s, "READ 0"), "OK 0", "row 0 untouched");
+        drop(s);
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
+    }
+
+    #[test]
+    fn tcp_tenant_clients_stream_disjoint_traces_and_digests_match() {
+        let trace_a = uniform_trace(64, 8, 300, 31);
+        let trace_b = uniform_trace(32, 8, 200, 32);
+        let want_a = format!("{:016x}", state_digest(&trace_a.reference_state()));
+        let want_b = format!("{:016x}", state_digest(&trace_b.reference_state()));
+
+        let reg = registry(&[("a", 64, 8), ("b", 32, 8)]);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || serve_tcp_tenants(reg, listener));
+
+        let retry = ClientRetry::default();
+        let ra = run_client_retry(
+            &addr, Some("a"), Some(&trace_a), Mode::Cmt, true, Some("sum"), None, false, retry,
+        )
+        .unwrap();
+        assert_eq!(ra.digest.as_deref(), Some(want_a.as_str()));
+        let rb = run_client_retry(
+            &addr, Some("b"), Some(&trace_b), Mode::Sub, true, None, None, true, retry,
+        )
+        .unwrap();
+        assert_eq!(rb.digest.as_deref(), Some(want_b.as_str()));
+
+        let report = server.join().unwrap().unwrap();
+        assert_eq!(report.tenants.len(), 2);
+        assert_eq!(report.tenants[0].0.name, "a");
+        assert_eq!(report.tenants[0].1.completed, trace_a.updates() as u64);
+        assert_eq!(report.tenants[1].0.name, "b");
+        assert_eq!(report.tenants[1].1.completed, trace_b.updates() as u64);
     }
 }

@@ -1,0 +1,248 @@
+//! Multi-tenant namespaces (column families) over the update engine.
+//!
+//! One `fast serve --tenants` process hosts any number of **named
+//! tenants**, each an isolated row space with its own bit-precision
+//! `q ∈ {4, 8, 16}` — the reconfigurable-precision CiM knob: a 4-bit
+//! tenant's plane stack is 4 bitplanes deep, so its batches execute in
+//! O(4·rows/64) word ops on the bitplane tier where an 8-bit tenant
+//! pays O(8·rows/64) and a 16-bit one O(16·rows/64).
+//!
+//! ## Architecture
+//!
+//! A [`TenantRegistry`] maps tenant name → [`TenantHandle`], and each
+//! handle owns a full `UpdateEngine` built by a caller-supplied
+//! factory (the CLI's backend/fidelity/seal flags apply uniformly;
+//! rows and q come from the tenant's [`TenantSpec`]). Isolation and
+//! fairness are therefore **structural**, not scheduled: every tenant
+//! has its own shard workers, bounded admission queues, plane stacks,
+//! commit sequences, and WAL subdirectory — a hot tenant saturating
+//! its queues backpressures *its own* producers (`ERR busy`) while a
+//! cold tenant's tickets keep resolving within its own seal deadline.
+//! The fairness bound is exactly the engine's group-commit bound: a
+//! cold tenant's commit latency is independent of any other tenant's
+//! backlog (asserted by `rust/tests/integration_tenants.rs`).
+//!
+//! ## Row quotas (`ERR quota`)
+//!
+//! A tenant's row space is `spec.rows`, but admission is capped at
+//! `spec.quota_rows <= rows`: any update/write addressing a row at or
+//! beyond the quota is rejected with a typed [`QuotaExceeded`] root
+//! cause *before* it reaches the engine, which the serve protocol
+//! answers as `ERR quota …`. Like `ERR busy` — and unlike terminal
+//! `ERR`s — it is retryable: an operator can recreate the tenant with
+//! a larger quota without restarting the server, and clients keep the
+//! connection.
+//!
+//! ## Durability layout
+//!
+//! With a WAL root, the registry persists `tenants.json` (atomic
+//! temp+rename manifest of every tenant's spec) in the root and gives
+//! each tenant the standard durable engine directory at
+//! `<root>/tenants/<name>/` — per-shard segmented WAL, snapshots,
+//! single-writer lock, torn-tail repair all ride the existing
+//! `durability` machinery unchanged. Opening the registry on a root
+//! recovers **every** manifest tenant before any traffic (each
+//! engine's recovery runs inside its `UpdateEngine::start`).
+//!
+//! ## Per-tenant cost closed forms
+//!
+//! All accounting stays per tenant because the engines are disjoint.
+//! For a tenant of precision `q` (one `q`-bit segment per row), the
+//! bitplane tier's update closed form (see `fastmem::bitplane`)
+//! specializes to:
+//!
+//! ```text
+//! plane count  = q                      (bitplanes per segment)
+//! plane words  = q · ceil(rows/64)      (u64 lanes touched per batch)
+//! cycles       = q                      (max segment width)
+//! alu_evals    = q · enabled_rows
+//! cell_toggles = 2·[ Σ_{j<q-1} (j+1)·cnt(V_j⊕V_{j+1})
+//!                  + q·cnt(V_{q-1}⊕R_0)
+//!                  + Σ_{k<q-1} (q-1-k)·cnt(R_k⊕R_{k+1}) ]
+//! ```
+//!
+//! so a 4-bit tenant's modeled batch cycles are exactly 4/8 of an
+//! 8-bit tenant's and 4/16 of a 16-bit tenant's for the same row set
+//! — the "measurably below" acceptance bar is a closed-form identity,
+//! asserted per tenant by the integration net.
+
+mod registry;
+
+pub use registry::{tenant_dir, TenantHandle, TenantRegistry};
+
+use anyhow::{bail, ensure};
+
+use crate::Result;
+
+/// The bit precisions a tenant may choose (the reconfigurable-
+/// precision knob). Narrower q ⇒ proportionally shallower plane
+/// stacks ⇒ proportionally faster plane-wise batches.
+pub const ALLOWED_Q: [usize; 3] = [4, 8, 16];
+
+/// Longest tenant name the registry accepts (names become directory
+/// components under `<root>/tenants/`).
+pub const MAX_NAME_LEN: usize = 32;
+
+/// One tenant's identity and shape. Immutable once created; `drop` +
+/// `create` is the resize path (the WAL subdirectory is removed with
+/// the tenant).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSpec {
+    /// Registry key and WAL subdirectory name
+    /// (`[a-z0-9_-]`, starts alphanumeric, at most [`MAX_NAME_LEN`]).
+    pub name: String,
+    /// Row-space size (the engine's `rows`; must divide by the
+    /// registry's shard count).
+    pub rows: usize,
+    /// Bit precision, one of [`ALLOWED_Q`].
+    pub q: usize,
+    /// Admission quota: rows `>= quota_rows` answer typed
+    /// [`QuotaExceeded`] (`ERR quota` on the wire). Defaults to
+    /// `rows` (the whole slice is admissible).
+    pub quota_rows: usize,
+}
+
+impl TenantSpec {
+    /// A spec with the quota covering the whole row space.
+    pub fn new(name: &str, rows: usize, q: usize) -> Result<TenantSpec> {
+        Self::with_quota(name, rows, q, rows)
+    }
+
+    /// A spec with an explicit admission quota (`quota_rows <= rows`).
+    pub fn with_quota(name: &str, rows: usize, q: usize, quota_rows: usize) -> Result<TenantSpec> {
+        let spec = TenantSpec { name: name.to_string(), rows, q, quota_rows };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Validate every field (names double as directory components, so
+    /// the character set is strict).
+    pub fn validate(&self) -> Result<()> {
+        validate_name(&self.name)?;
+        ensure!(self.rows >= 1, "tenant {:?}: rows must be >= 1", self.name);
+        ensure!(
+            ALLOWED_Q.contains(&self.q),
+            "tenant {:?}: q {} is not one of the reconfigurable precisions {:?}",
+            self.name,
+            self.q,
+            ALLOWED_Q
+        );
+        ensure!(
+            self.quota_rows >= 1 && self.quota_rows <= self.rows,
+            "tenant {:?}: quota_rows {} must be in 1..={}",
+            self.name,
+            self.quota_rows,
+            self.rows
+        );
+        Ok(())
+    }
+
+    /// Bitplanes a batch touches on the bitplane tier (one segment of
+    /// width q per row ⇒ q planes).
+    pub fn plane_count(&self) -> usize {
+        self.q
+    }
+
+    /// u64 plane words one batch sweeps on the bitplane tier:
+    /// `q · ceil(rows/64)` — the O(q·rows/64) closed form narrow
+    /// tenants win by.
+    pub fn plane_words(&self) -> usize {
+        self.q * self.rows.div_ceil(64)
+    }
+}
+
+/// Is `name` a valid tenant name? Strict because names become wire
+/// tokens, JSON values, and directory components.
+pub fn validate_name(name: &str) -> Result<()> {
+    ensure!(!name.is_empty(), "tenant name must not be empty");
+    ensure!(
+        name.len() <= MAX_NAME_LEN,
+        "tenant name {name:?} exceeds {MAX_NAME_LEN} characters"
+    );
+    let mut chars = name.chars();
+    let first = chars.next().expect("non-empty");
+    ensure!(
+        first.is_ascii_lowercase() || first.is_ascii_digit(),
+        "tenant name {name:?} must start with [a-z0-9]"
+    );
+    for c in name.chars() {
+        if !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-') {
+            bail!("tenant name {name:?} contains {c:?} (allowed: [a-z0-9_-])");
+        }
+    }
+    Ok(())
+}
+
+/// Typed over-admission error: a request addressed a row at or beyond
+/// the tenant's `quota_rows`. Carried as the root cause of the
+/// `anyhow` error the tenant submit paths return, so the serve
+/// protocol can answer a retryable `ERR quota …` (like `ERR busy`,
+/// unlike terminal errors):
+/// `err.root_cause().downcast_ref::<QuotaExceeded>().is_some()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuotaExceeded {
+    pub tenant: String,
+    pub row: usize,
+    pub quota_rows: usize,
+}
+
+impl std::fmt::Display for QuotaExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tenant {:?}: row {} is over the admission quota of {} row(s) \
+             (retryable: recreate the tenant with a larger quota)",
+            self.tenant, self.row, self.quota_rows
+        )
+    }
+}
+
+impl std::error::Error for QuotaExceeded {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validation_accepts_the_documented_shapes() {
+        for q in ALLOWED_Q {
+            let s = TenantSpec::new("t0", 128, q).unwrap();
+            assert_eq!(s.quota_rows, 128);
+            assert_eq!(s.plane_count(), q);
+            assert_eq!(s.plane_words(), q * 2);
+        }
+        let s = TenantSpec::with_quota("a-b_9", 64, 8, 10).unwrap();
+        assert_eq!(s.quota_rows, 10);
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_shapes() {
+        assert!(TenantSpec::new("t", 128, 5).is_err(), "q not in {ALLOWED_Q:?}");
+        assert!(TenantSpec::new("t", 0, 8).is_err(), "zero rows");
+        assert!(TenantSpec::with_quota("t", 64, 8, 0).is_err(), "zero quota");
+        assert!(TenantSpec::with_quota("t", 64, 8, 65).is_err(), "quota > rows");
+    }
+
+    #[test]
+    fn name_validation_is_strict() {
+        for ok in ["a", "db_2024", "nn-weights", "0x", &"a".repeat(MAX_NAME_LEN)] {
+            assert!(validate_name(ok).is_ok(), "{ok:?}");
+        }
+        for bad in ["", "A", "has space", "..", "a/b", "-leading", "_leading", "é", &"a".repeat(MAX_NAME_LEN + 1)]
+        {
+            assert!(validate_name(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn quota_error_is_a_typed_root_cause() {
+        let e = anyhow::Error::new(QuotaExceeded {
+            tenant: "t".into(),
+            row: 99,
+            quota_rows: 64,
+        });
+        assert!(e.root_cause().downcast_ref::<QuotaExceeded>().is_some());
+        let msg = format!("{e:#}");
+        assert!(msg.contains("quota") && msg.contains("99"), "{msg}");
+    }
+}

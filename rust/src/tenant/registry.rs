@@ -1,0 +1,435 @@
+//! The tenant registry: name → engine routing, quota admission, the
+//! persistent `tenants.json` manifest, and per-tenant WAL
+//! subdirectories. See the module docs of [`crate::tenant`] for the
+//! architecture and the isolation/fairness argument.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context};
+
+use super::{QuotaExceeded, TenantSpec};
+use crate::apps::trace::state_digest;
+use crate::coordinator::{EngineStats, Ticket, UpdateEngine, UpdateRequest};
+use crate::util::json::Json;
+use crate::Result;
+
+/// Builds one engine per tenant, from the tenant's shape (rows, q)
+/// plus whatever backend/fidelity/seal/durability policy the caller
+/// closed over. Invoked under the registry lock, so creation is
+/// atomic with manifest persistence.
+pub type TenantFactory = dyn Fn(&TenantSpec) -> Result<UpdateEngine> + Send + Sync;
+
+/// Manifest file name, kept directly in the registry root (next to
+/// the `tenants/` subdirectory tree).
+const MANIFEST: &str = "tenants.json";
+
+/// How long [`TenantRegistry::drop_tenant`] waits for in-flight
+/// protocol sessions to release their handle clones before giving up.
+const DROP_HANDLE_WAIT: Duration = Duration::from_secs(5);
+
+/// One live tenant: its spec and its private engine. Mutating entry
+/// points go through the quota-checked wrappers; read-side entry
+/// points ([`Self::engine`]) hit the engine directly.
+pub struct TenantHandle {
+    spec: TenantSpec,
+    engine: UpdateEngine,
+}
+
+impl TenantHandle {
+    pub fn spec(&self) -> &TenantSpec {
+        &self.spec
+    }
+
+    /// The tenant's engine, for read-side verbs (READ/WAIT/DRAIN/
+    /// DIGEST/QRY/STATS) and tests. Updates and writes should go
+    /// through [`Self::submit`]/[`Self::submit_ticketed`]/
+    /// [`Self::write`] so the admission quota applies.
+    pub fn engine(&self) -> &UpdateEngine {
+        &self.engine
+    }
+
+    /// Typed quota gate: rows at or beyond `quota_rows` never reach
+    /// the engine.
+    fn admit(&self, row: usize) -> Result<()> {
+        if row >= self.spec.quota_rows {
+            return Err(anyhow::Error::new(QuotaExceeded {
+                tenant: self.spec.name.clone(),
+                row,
+                quota_rows: self.spec.quota_rows,
+            }));
+        }
+        Ok(())
+    }
+
+    /// Quota-checked fire-and-forget submit.
+    pub fn submit(&self, req: UpdateRequest) -> Result<()> {
+        self.admit(req.row)?;
+        self.engine.submit(req)
+    }
+
+    /// Quota-checked ticketed submit.
+    pub fn submit_ticketed(&self, req: UpdateRequest) -> Result<Ticket> {
+        self.admit(req.row)?;
+        self.engine.submit_ticketed(req)
+    }
+
+    /// Quota-checked conventional-port write.
+    pub fn write(&self, row: usize, value: u32) -> Result<()> {
+        self.admit(row)?;
+        self.engine.write(row, value)
+    }
+
+    /// FNV-1a fingerprint of this tenant's row state (the per-tenant
+    /// `DIGEST`).
+    pub fn digest(&self) -> Result<u64> {
+        Ok(state_digest(&self.engine.snapshot()?))
+    }
+
+    fn into_engine(self) -> UpdateEngine {
+        self.engine
+    }
+}
+
+/// Name → tenant map plus the construction/persistence policy. Shared
+/// across protocol sessions as `Arc<TenantRegistry>`; every method is
+/// `&self`.
+pub struct TenantRegistry {
+    tenants: Mutex<BTreeMap<String, Arc<TenantHandle>>>,
+    factory: Box<TenantFactory>,
+    root: Option<PathBuf>,
+}
+
+impl TenantRegistry {
+    /// A volatile registry (no manifest, no WAL subdirectories) — the
+    /// factory still decides each engine's backend and seal policy.
+    pub fn volatile(
+        factory: impl Fn(&TenantSpec) -> Result<UpdateEngine> + Send + Sync + 'static,
+    ) -> TenantRegistry {
+        TenantRegistry { tenants: Mutex::new(BTreeMap::new()), factory: Box::new(factory), root: None }
+    }
+
+    /// Open (or initialize) a durable registry rooted at `root`:
+    /// every tenant in the manifest is rebuilt through the factory —
+    /// whose engines, given a durability config at
+    /// [`tenant_dir`]`(root, name)`, recover their WAL subdirectory
+    /// before accepting work — so a restart restores every tenant.
+    pub fn open(
+        root: impl Into<PathBuf>,
+        factory: impl Fn(&TenantSpec) -> Result<UpdateEngine> + Send + Sync + 'static,
+    ) -> Result<TenantRegistry> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating tenant registry root {}", root.display()))?;
+        let specs = load_manifest(&root.join(MANIFEST))?;
+        let reg = TenantRegistry {
+            tenants: Mutex::new(BTreeMap::new()),
+            factory: Box::new(factory),
+            root: Some(root),
+        };
+        {
+            let mut map = reg.tenants.lock().expect("registry lock");
+            for spec in specs {
+                let engine = (reg.factory)(&spec)
+                    .with_context(|| format!("recovering tenant {:?}", spec.name))?;
+                map.insert(spec.name.clone(), Arc::new(TenantHandle { spec, engine }));
+            }
+        }
+        Ok(reg)
+    }
+
+    /// The manifest/WAL root (`None` for a volatile registry).
+    pub fn root(&self) -> Option<&Path> {
+        self.root.as_deref()
+    }
+
+    /// Create a tenant: validates the spec, builds its engine, and
+    /// (durable registries) persists the manifest atomically. Fails
+    /// without side effects if the name exists.
+    pub fn create(&self, spec: TenantSpec) -> Result<Arc<TenantHandle>> {
+        spec.validate()?;
+        let mut map = self.tenants.lock().expect("registry lock");
+        ensure!(
+            !map.contains_key(&spec.name),
+            "tenant {:?} already exists (drop it first to reshape)",
+            spec.name
+        );
+        let engine = (self.factory)(&spec)
+            .with_context(|| format!("creating tenant {:?}", spec.name))?;
+        let handle = Arc::new(TenantHandle { spec: spec.clone(), engine });
+        map.insert(spec.name.clone(), Arc::clone(&handle));
+        if let Err(e) = self.save_manifest(&map) {
+            // Keep create atomic: roll the in-memory insert back so the
+            // map never disagrees with the durable manifest.
+            let h = map.remove(&spec.name).expect("just inserted");
+            drop(map);
+            let _ = shutdown_handle(h);
+            return Err(e);
+        }
+        Ok(handle)
+    }
+
+    /// Drop a tenant: removed from the map and manifest first (no new
+    /// routing), then its engine is drained and shut down, then its
+    /// WAL subdirectory is deleted (destructive — `drop` + `create`
+    /// is the resize path). Other tenants' engines are untouched.
+    pub fn drop_tenant(&self, name: &str) -> Result<()> {
+        let handle = {
+            let mut map = self.tenants.lock().expect("registry lock");
+            let handle = map
+                .remove(name)
+                .ok_or_else(|| anyhow!("unknown tenant {name:?}"))?;
+            if let Err(e) = self.save_manifest(&map) {
+                map.insert(name.to_string(), handle);
+                return Err(e);
+            }
+            handle
+        };
+        shutdown_handle(handle).with_context(|| format!("shutting down tenant {name:?}"))?;
+        if let Some(root) = &self.root {
+            let dir = tenant_dir(root, name);
+            if dir.exists() {
+                std::fs::remove_dir_all(&dir)
+                    .with_context(|| format!("removing tenant WAL dir {}", dir.display()))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Look a tenant up by name.
+    pub fn get(&self, name: &str) -> Result<Arc<TenantHandle>> {
+        self.tenants
+            .lock()
+            .expect("registry lock")
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown tenant {name:?} (TENANT LIST shows the registry)"))
+    }
+
+    /// Every tenant's spec, name-sorted.
+    pub fn list(&self) -> Vec<TenantSpec> {
+        self.tenants
+            .lock()
+            .expect("registry lock")
+            .values()
+            .map(|h| h.spec.clone())
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.lock().expect("registry lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Point-in-time stats for every tenant (the `--stats-json`
+    /// per-tenant counters and latency histograms), name-sorted.
+    pub fn stats(&self) -> Vec<(TenantSpec, EngineStats)> {
+        let handles: Vec<Arc<TenantHandle>> =
+            self.tenants.lock().expect("registry lock").values().cloned().collect();
+        handles.iter().map(|h| (h.spec.clone(), h.engine.stats())).collect()
+    }
+
+    /// Barrier over every tenant: drain all shards of all engines.
+    pub fn drain_all(&self) -> Result<()> {
+        let handles: Vec<Arc<TenantHandle>> =
+            self.tenants.lock().expect("registry lock").values().cloned().collect();
+        for h in handles {
+            h.engine
+                .drain_all()
+                .with_context(|| format!("draining tenant {:?}", h.spec.name))?;
+        }
+        Ok(())
+    }
+
+    /// Clean shutdown of every tenant engine (WAL barriers included).
+    /// Requires sole ownership of every handle, like
+    /// `UpdateEngine::shutdown` requires sole ownership of the engine.
+    pub fn shutdown(self) -> Result<()> {
+        let map = self.tenants.into_inner().expect("registry lock");
+        for (name, handle) in map {
+            shutdown_handle(handle)
+                .with_context(|| format!("shutting down tenant {name:?}"))?;
+        }
+        Ok(())
+    }
+
+    /// Atomic (temp + rename) manifest write, called under the map
+    /// lock so the file always reflects a consistent registry state.
+    fn save_manifest(&self, map: &BTreeMap<String, Arc<TenantHandle>>) -> Result<()> {
+        let Some(root) = &self.root else { return Ok(()) };
+        let mut body = String::from("{\"tenants\":[");
+        for (i, h) in map.values().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            let s = &h.spec;
+            body.push_str(&format!(
+                "{{\"name\":\"{}\",\"rows\":{},\"q\":{},\"quota\":{}}}",
+                s.name, s.rows, s.q, s.quota_rows
+            ));
+        }
+        body.push_str("]}\n");
+        let path = root.join(MANIFEST);
+        let tmp = root.join(format!("{MANIFEST}.tmp"));
+        std::fs::write(&tmp, body)
+            .with_context(|| format!("writing tenant manifest {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing tenant manifest {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// A tenant's durable directory: `<root>/tenants/<name>/` — a
+/// standard `durability` engine directory (per-shard WAL segments,
+/// snapshots, single-writer lock).
+pub fn tenant_dir(root: &Path, name: &str) -> PathBuf {
+    root.join("tenants").join(name)
+}
+
+/// Wait (boundedly) for protocol sessions to release their clones of
+/// the handle, then consume the engine and shut it down cleanly.
+fn shutdown_handle(mut handle: Arc<TenantHandle>) -> Result<()> {
+    let deadline = Instant::now() + DROP_HANDLE_WAIT;
+    loop {
+        match Arc::try_unwrap(handle) {
+            Ok(inner) => return inner.into_engine().shutdown(),
+            Err(back) => {
+                ensure!(
+                    Instant::now() < deadline,
+                    "sessions still hold the tenant handle after {DROP_HANDLE_WAIT:?}"
+                );
+                handle = back;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+/// Parse `tenants.json`. A missing file is an empty registry; a
+/// malformed one is a hard error (refuse to guess at durable state).
+fn load_manifest(path: &Path) -> Result<Vec<TenantSpec>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(anyhow!("reading tenant manifest {}: {e}", path.display())),
+    };
+    let v = Json::parse(&text)
+        .with_context(|| format!("parsing tenant manifest {}", path.display()))?;
+    let arr = v
+        .get("tenants")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tenant manifest {}: missing \"tenants\" array", path.display()))?;
+    let mut specs = Vec::with_capacity(arr.len());
+    for t in arr {
+        let name = t
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tenant manifest entry missing \"name\""))?;
+        let field = |key: &str| {
+            t.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("tenant {name:?}: manifest field {key:?} missing or not an integer"))
+        };
+        let spec = TenantSpec::with_quota(name, field("rows")?, field("q")?, field("quota")?)?;
+        specs.push(spec);
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineConfig, FastBackend};
+
+    fn volatile_registry() -> TenantRegistry {
+        TenantRegistry::volatile(|spec: &TenantSpec| {
+            let cfg = EngineConfig::new(spec.rows, spec.q);
+            UpdateEngine::start(cfg, |p| Ok(Box::new(FastBackend::with_rows(p.rows, p.q))))
+        })
+    }
+
+    #[test]
+    fn create_route_drop_lifecycle() {
+        let reg = volatile_registry();
+        assert!(reg.is_empty());
+        reg.create(TenantSpec::new("a", 64, 4).unwrap()).unwrap();
+        reg.create(TenantSpec::new("b", 32, 16).unwrap()).unwrap();
+        assert_eq!(reg.len(), 2);
+        // Duplicate names refuse.
+        let err = reg.create(TenantSpec::new("a", 16, 8).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("already exists"), "{err:#}");
+
+        let a = reg.get("a").unwrap();
+        a.write(3, 9).unwrap();
+        a.engine().drain_all().unwrap();
+        assert_eq!(a.engine().read(3).unwrap(), 9);
+        // Tenants are disjoint row spaces.
+        assert_eq!(reg.get("b").unwrap().engine().read(3).unwrap(), 0);
+
+        drop(a);
+        reg.drop_tenant("a").unwrap();
+        assert!(reg.get("a").is_err());
+        // The name is immediately reusable, fresh.
+        let a2 = reg.create(TenantSpec::new("a", 64, 4).unwrap()).unwrap();
+        assert_eq!(a2.engine().read(3).unwrap(), 0);
+        drop(a2);
+        reg.shutdown().unwrap();
+    }
+
+    #[test]
+    fn quota_rejections_are_typed_and_precede_the_engine() {
+        let reg = volatile_registry();
+        let t = reg
+            .create(TenantSpec::with_quota("q", 64, 8, 16).unwrap())
+            .unwrap();
+        t.submit(UpdateRequest::add(15, 1)).unwrap();
+        for res in [
+            t.submit(UpdateRequest::add(16, 1)).map(|_| ()),
+            t.submit_ticketed(UpdateRequest::add(40, 1)).map(|_| ()),
+            t.write(63, 5),
+        ] {
+            let e = res.unwrap_err();
+            assert!(
+                e.root_cause().downcast_ref::<QuotaExceeded>().is_some(),
+                "{e:#}"
+            );
+        }
+        // Nothing over-quota reached the engine.
+        t.engine().drain_all().unwrap();
+        assert_eq!(t.engine().read(16).unwrap(), 0);
+        assert_eq!(t.engine().stats().submitted, 1);
+        drop(t);
+        reg.shutdown().unwrap();
+    }
+
+    #[test]
+    fn manifest_round_trips_and_reopen_restores_every_tenant() {
+        let root = std::env::temp_dir().join(format!("fast-tenant-reg-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let factory = |spec: &TenantSpec| {
+            let cfg = EngineConfig::new(spec.rows, spec.q);
+            UpdateEngine::start(cfg, |p| Ok(Box::new(FastBackend::with_rows(p.rows, p.q))))
+        };
+        let reg = TenantRegistry::open(&root, factory).unwrap();
+        reg.create(TenantSpec::new("a", 64, 4).unwrap()).unwrap();
+        reg.create(TenantSpec::with_quota("b", 32, 16, 8).unwrap()).unwrap();
+        let listed = reg.list();
+        reg.shutdown().unwrap();
+
+        let reopened = TenantRegistry::open(&root, factory).unwrap();
+        assert_eq!(reopened.list(), listed);
+        reopened.drop_tenant("a").unwrap();
+        reopened.shutdown().unwrap();
+
+        let again = TenantRegistry::open(&root, factory).unwrap();
+        assert_eq!(again.list().len(), 1);
+        assert_eq!(again.list()[0].name, "b");
+        again.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

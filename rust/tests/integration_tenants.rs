@@ -1,0 +1,538 @@
+//! Cross-tenant differential net (PR-8 tentpole): a multi-tenant
+//! registry must be *indistinguishable* — in state AND in energy
+//! accounting — from N independent single-tenant engines.
+//!
+//! - *Differential equivalence*: N mixed-precision tenants (q = 4, 8,
+//!   16) driven by interleaved producers are bit-identical to N
+//!   reference engines fed the same per-tenant streams, over 1/2/4/8
+//!   shards × the fidelity tier from `FAST_TEST_FIDELITY`
+//!   (phase|word|bitplane; default word) — snapshots, digests,
+//!   modeled time/energy (compared at the bit level), per-shard
+//!   commit seqs, and per-tenant query results.
+//! - *Crash recovery*: a durable registry reopened after a
+//!   SIGKILL-style torn append in EVERY tenant's WAL subdirectory
+//!   restores every tenant bit-identically, and each tenant's
+//!   WAL→trace export replays to the same state (the q=16 tenant
+//!   carries >8-bit values to prove width survives the round trip).
+//! - *Isolation/fairness*: a hot tenant saturating its own queues
+//!   cannot stall a cold tenant's ticketed commits beyond a bounded
+//!   factor; quota overflow is a typed, retryable rejection that
+//!   never reaches the engine; dropping a tenant never perturbs the
+//!   survivors' digests.
+//! - *Precision closed forms*: 4- and 16-bit plane stacks report
+//!   `cycles == q`, `alu_evals == q·rows` and the exact telescoped
+//!   `cell_toggles` sum; on the bitplane tier a 4-bit tenant's
+//!   modeled batch time is measurably below an 8-bit tenant's for the
+//!   same workload (the paper's q-cycle batch law, per tenant).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use fast_sram::apps::trace::state_digest;
+use fast_sram::coordinator::{
+    BitPlaneBackend, EngineConfig, FastBackend, UpdateEngine, UpdateRequest,
+};
+use fast_sram::durability::{self, segment, DurabilityConfig, FsyncPolicy};
+use fast_sram::fastmem::{AluOp, BitPlaneArray, Fidelity};
+use fast_sram::query::{QuerySpec, Reduction};
+use fast_sram::tenant::{tenant_dir, QuotaExceeded, TenantRegistry, TenantSpec};
+use fast_sram::util::bits;
+use fast_sram::util::rng::Rng;
+use fast_sram::Result;
+
+/// The mixed-precision tenant set every test drives: one tenant per
+/// allowed q, rows divisible by the largest shard count (8).
+const SPECS: [(&str, usize, usize); 3] = [("a4", 64, 4), ("b8", 64, 8), ("c16", 32, 16)];
+
+fn fidelity() -> Fidelity {
+    Fidelity::from_env_or(Fidelity::WordFast)
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let d = std::env::temp_dir().join(format!("fast-tenants-{tag}-{}-{nanos}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic engine: only explicit drains seal, so the N-tenant
+/// and single-tenant sides see identical batch boundaries and the
+/// energy accounting can be compared bit for bit.
+fn quiet_cfg(rows: usize, q: usize, shards: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::sharded(rows, q, shards);
+    cfg.seal_at_rows = None;
+    cfg.seal_deadline = Duration::from_secs(3600);
+    cfg.queue_cap = 4096;
+    cfg
+}
+
+fn start_tier(cfg: EngineConfig, tier: Fidelity) -> Result<UpdateEngine> {
+    match tier {
+        Fidelity::BitPlane => UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(BitPlaneBackend::with_rows(plan.rows, plan.q)))
+        }),
+        f => UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(FastBackend::with_rows_fidelity(plan.rows, plan.q, f)))
+        }),
+    }
+}
+
+/// One tenant's producer: a seeded update/write/read mix with drains
+/// at fixed points, applied identically to the registry handle and
+/// (when given) a reference engine. Returns the host row model.
+fn drive(
+    tier: Fidelity,
+    handle: &fast_sram::tenant::TenantHandle,
+    reference: Option<&UpdateEngine>,
+    rows: usize,
+    q: usize,
+    seed: u64,
+    ctx: &str,
+) -> Vec<u32> {
+    let per = if tier == Fidelity::PhaseAccurate { 80 } else { 350 };
+    let mut rng = Rng::new(seed);
+    let mut model = vec![0u32; rows];
+    for i in 0..per {
+        let row = rng.below(rows as u64) as usize;
+        let v = rng.below(bits::mask(q) as u64 + 1) as u32;
+        if rng.chance(0.08) {
+            // Read-your-writes, per tenant: a single producer owns the
+            // whole tenant, so every read must see its own stream.
+            let got = handle.engine().read(row).unwrap();
+            assert_eq!(got, model[row], "{ctx} i={i}: read-your-writes at row {row}");
+            if let Some(r) = reference {
+                assert_eq!(r.read(row).unwrap(), got, "{ctx} i={i}: reference diverged");
+            }
+        } else if rng.chance(0.1) {
+            handle.write(row, v).unwrap();
+            if let Some(r) = reference {
+                r.write(row, v).unwrap();
+            }
+            model[row] = v;
+        } else if rng.chance(0.3) {
+            handle.submit(UpdateRequest::sub(row, v)).unwrap();
+            if let Some(r) = reference {
+                r.submit(UpdateRequest::sub(row, v)).unwrap();
+            }
+            model[row] = bits::sub_mod(model[row], v, q);
+        } else {
+            handle.submit(UpdateRequest::add(row, v)).unwrap();
+            if let Some(r) = reference {
+                r.submit(UpdateRequest::add(row, v)).unwrap();
+            }
+            model[row] = bits::add_mod(model[row], v, q);
+        }
+        if (i + 1) % 40 == 0 {
+            handle.engine().drain_all().unwrap();
+            if let Some(r) = reference {
+                r.drain_all().unwrap();
+            }
+        }
+    }
+    handle.engine().drain_all().unwrap();
+    if let Some(r) = reference {
+        r.drain_all().unwrap();
+    }
+    model
+}
+
+/// The tentpole property: N tenants on one registry are bit-identical
+/// — state AND accounting — to N independent single-tenant engines,
+/// across shard counts, at the fidelity tier under test.
+#[test]
+fn n_tenants_are_bit_identical_to_n_single_tenant_engines() {
+    let tier = fidelity();
+    for shards in [1usize, 2, 4, 8] {
+        let reg = TenantRegistry::volatile(move |spec: &TenantSpec| {
+            start_tier(quiet_cfg(spec.rows, spec.q, shards), tier)
+        });
+        let refs: Vec<UpdateEngine> = SPECS
+            .iter()
+            .map(|&(_, rows, q)| start_tier(quiet_cfg(rows, q, shards), tier).unwrap())
+            .collect();
+        for &(name, rows, q) in &SPECS {
+            reg.create(TenantSpec::new(name, rows, q).unwrap()).unwrap();
+        }
+
+        // Interleaved producers: one thread per tenant, all live on
+        // the registry concurrently; each thread replays its stream
+        // onto its private reference engine at the same points.
+        let models: Vec<Vec<u32>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (i, &(name, rows, q)) in SPECS.iter().enumerate() {
+                let tenant = reg.get(name).unwrap();
+                let reference = &refs[i];
+                let ctx = format!("shards={shards} tier={tier:?} tenant={name}");
+                handles.push(scope.spawn(move || {
+                    drive(tier, &tenant, Some(reference), rows, q, 0xFA57 + 131 * i as u64, &ctx)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        for (i, &(name, rows, _q)) in SPECS.iter().enumerate() {
+            let tenant = reg.get(name).unwrap();
+            let ctx = format!("shards={shards} tier={tier:?} tenant={name}");
+
+            // State: registry == reference == host model, bit for bit.
+            let snap_reg = tenant.engine().snapshot().unwrap();
+            let snap_ref = refs[i].snapshot().unwrap();
+            assert_eq!(snap_reg.len(), rows, "{ctx}");
+            assert_eq!(snap_reg, snap_ref, "{ctx}: state diverged");
+            assert_eq!(snap_reg, models[i], "{ctx}: state != host model");
+            assert_eq!(tenant.digest().unwrap(), state_digest(&snap_ref), "{ctx}: digest");
+
+            // Energy/time accounting: identical batch structure must
+            // yield identical books, down to the last float bit.
+            let s_reg = tenant.engine().stats();
+            let s_ref = refs[i].stats();
+            assert_eq!(s_reg.submitted, s_ref.submitted, "{ctx}: submitted");
+            assert_eq!(s_reg.completed, s_ref.completed, "{ctx}: completed");
+            assert_eq!(s_reg.batches, s_ref.batches, "{ctx}: batches");
+            assert_eq!(s_reg.rows_updated, s_ref.rows_updated, "{ctx}: rows_updated");
+            assert_eq!(
+                s_reg.modeled_ns.to_bits(),
+                s_ref.modeled_ns.to_bits(),
+                "{ctx}: modeled time must be bit-identical ({} vs {})",
+                s_reg.modeled_ns,
+                s_ref.modeled_ns
+            );
+            assert_eq!(
+                s_reg.modeled_energy_pj.to_bits(),
+                s_ref.modeled_energy_pj.to_bits(),
+                "{ctx}: modeled energy must be bit-identical ({} vs {})",
+                s_reg.modeled_energy_pj,
+                s_ref.modeled_energy_pj
+            );
+            for (sh, (a, b)) in s_reg.shards.iter().zip(&s_ref.shards).enumerate() {
+                assert_eq!(a.commit_seq, b.commit_seq, "{ctx}: shard {sh} commit_seq");
+            }
+
+            // Per-tenant scoped query: same value, same plane-wise
+            // accounting, and the value matches the host model.
+            let spec = QuerySpec::all(Reduction::Sum);
+            let r_reg = tenant.engine().query(&spec).unwrap();
+            let r_ref = refs[i].query(&spec).unwrap();
+            assert_eq!(r_reg, r_ref, "{ctx}: query result diverged");
+            let want: u64 = models[i].iter().map(|&v| u64::from(v)).sum();
+            assert_eq!(r_reg.value, want, "{ctx}: query read-your-writes");
+        }
+
+        for r in refs {
+            r.shutdown().unwrap();
+        }
+        reg.shutdown().unwrap();
+    }
+}
+
+/// Crash recovery: reopen a durable registry after a SIGKILL-style
+/// torn append in EVERY tenant's WAL subdirectory — each tenant must
+/// come back bit-identical, its WAL→trace export must replay to the
+/// same state (q=16 values included), and a drop must survive the
+/// next reopen.
+#[test]
+fn recovery_restores_every_tenant_and_repairs_per_tenant_torn_tails() {
+    let tier = fidelity();
+    let root = tmpdir("crash");
+    let mk_factory = |root: PathBuf| {
+        move |spec: &TenantSpec| {
+            let mut cfg = quiet_cfg(spec.rows, spec.q, 2);
+            let mut d = DurabilityConfig::new(tenant_dir(&root, &spec.name));
+            // Every record durable: the torn garbage below is the only
+            // unacknowledged suffix, so recovery must change nothing.
+            d.fsync = FsyncPolicy::Always;
+            cfg.durability = Some(d);
+            start_tier(cfg, tier)
+        }
+    };
+
+    // Phase 1: create the mixed-q tenants, stream traffic, remember
+    // every digest and snapshot, shut down cleanly.
+    let mut recorded: Vec<(&str, usize, usize, u64, Vec<u32>)> = Vec::new();
+    {
+        let reg = TenantRegistry::open(root.clone(), mk_factory(root.clone())).unwrap();
+        for (i, &(name, rows, q)) in SPECS.iter().enumerate() {
+            let tenant = reg.create(TenantSpec::new(name, rows, q).unwrap()).unwrap();
+            let ctx = format!("crash tier={tier:?} tenant={name}");
+            drive(tier, &tenant, None, rows, q, 0xC2A5 + 131 * i as u64, &ctx);
+            if q == 16 {
+                // Width witness: a value no 8-bit tenant could hold
+                // must survive WAL → recovery → trace export → replay.
+                tenant.write(0, 0xBEE5).unwrap();
+            }
+            let snap = tenant.engine().snapshot().unwrap();
+            recorded.push((name, rows, q, state_digest(&snap), snap));
+        }
+        reg.shutdown().unwrap();
+    }
+    let wide = recorded.iter().find(|r| r.2 == 16).unwrap();
+    assert!(
+        wide.4.iter().any(|&v| v > 0xFF),
+        "the q=16 tenant must carry >8-bit values for the width round trip"
+    );
+
+    // SIGKILL emulation: every tenant's newest shard-0 segment gets a
+    // torn (partial, never-acknowledged) append.
+    for &(name, ..) in &SPECS {
+        let dir = tenant_dir(&root, name);
+        let segs = segment::list_segments(&dir, 0).unwrap();
+        let seg = segs.last().unwrap_or_else(|| panic!("tenant {name} wrote no shard-0 segment"));
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&seg.path).unwrap();
+        f.write_all(&[0xA5u8; 41]).unwrap();
+    }
+
+    // Phase 2: reopen — recovery runs per tenant inside the factory,
+    // truncating each torn tail; acknowledged state is untouched.
+    let reg = TenantRegistry::open(root.clone(), mk_factory(root.clone())).unwrap();
+    assert_eq!(reg.len(), SPECS.len());
+    for &(name, rows, q, digest, ref snap) in &recorded {
+        let tenant = reg.get(name).unwrap();
+        assert_eq!(tenant.spec().rows, rows, "tenant {name}: spec rows");
+        assert_eq!(tenant.spec().q, q, "tenant {name}: spec q");
+        assert_eq!(tenant.digest().unwrap(), digest, "tenant {name}: digest after recovery");
+        assert_eq!(&tenant.engine().snapshot().unwrap(), snap, "tenant {name}: state");
+
+        // Independent audit: the tenant's WAL exports to a trace whose
+        // replay reproduces the recovered state bit for bit.
+        let trace = durability::export_trace(&tenant_dir(&root, name), name).unwrap();
+        assert_eq!((trace.rows, trace.q), (rows, q), "tenant {name}: export shape");
+        let e = start_tier(quiet_cfg(rows, q, 1), tier).unwrap();
+        let rep = trace.replay(&e).unwrap();
+        assert_eq!(&rep.final_state, snap, "tenant {name}: export→replay round trip");
+        assert_eq!(state_digest(&rep.final_state), digest, "tenant {name}");
+        e.shutdown().unwrap();
+    }
+
+    // Phase 3: drop one tenant; the removal must survive a reopen and
+    // the survivors must still be bit-identical.
+    reg.drop_tenant("a4").unwrap();
+    assert!(!tenant_dir(&root, "a4").exists(), "drop must delete the WAL subdirectory");
+    reg.shutdown().unwrap();
+    let reg = TenantRegistry::open(root.clone(), mk_factory(root.clone())).unwrap();
+    assert_eq!(reg.len(), SPECS.len() - 1);
+    assert!(reg.get("a4").is_err());
+    for &(name, _, _, digest, _) in recorded.iter().filter(|r| r.0 != "a4") {
+        assert_eq!(reg.get(name).unwrap().digest().unwrap(), digest, "survivor {name}");
+    }
+    reg.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Fairness: isolation is structural, so a hot tenant flooding its own
+/// bounded queues (and eating `ERR busy`) cannot delay a cold tenant's
+/// ticketed commits beyond a bounded factor of its seal deadline.
+#[test]
+fn a_hot_tenant_cannot_starve_a_cold_tenants_ticketed_commits() {
+    let tier = fidelity();
+    let reg = TenantRegistry::volatile(move |spec: &TenantSpec| {
+        let mut cfg = EngineConfig::sharded(spec.rows, spec.q, 2);
+        // Small queues + a live deadline: the hot tenant saturates
+        // fast, the cold tenant's commits ride the group-commit seal.
+        cfg.queue_cap = 256;
+        cfg.seal_deadline = Duration::from_micros(300);
+        start_tier(cfg, tier)
+    });
+    let hot = reg.create(TenantSpec::new("hot", 64, 8).unwrap()).unwrap();
+    let cold = reg.create(TenantSpec::new("cold", 64, 8).unwrap()).unwrap();
+
+    let stop = AtomicBool::new(false);
+    let (attempts, worst) = std::thread::scope(|scope| {
+        let flood = scope.spawn(|| {
+            let mut rng = Rng::new(0x407);
+            let mut attempts = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                // Saturate: ignore busy — that is the hot tenant's own
+                // backpressure, not anyone else's problem.
+                let _ = hot.submit(UpdateRequest::add(rng.below(64) as usize, 1));
+                attempts += 1;
+            }
+            attempts
+        });
+
+        let mut worst = Duration::ZERO;
+        for k in 0..20usize {
+            let t0 = Instant::now();
+            let ticket = cold.submit_ticketed(UpdateRequest::add(k % 64, 1)).unwrap();
+            let commit = ticket.wait().unwrap();
+            worst = worst.max(t0.elapsed());
+            assert!(commit.commit_seq >= 1);
+        }
+        stop.store(true, Ordering::Relaxed);
+        (flood.join().unwrap(), worst)
+    });
+
+    // Bounded-factor bar: a 300 µs group-commit deadline must not
+    // stretch into seconds just because a sibling tenant is molten.
+    assert!(
+        worst < Duration::from_secs(2),
+        "cold tenant commit stalled {worst:?} behind a hot tenant"
+    );
+    assert!(attempts > 256, "the hot tenant never actually saturated ({attempts} attempts)");
+
+    cold.engine().drain_all().unwrap();
+    // 20 ticketed adds of +1 landed on rows 0..20, one each — the cold
+    // tenant's state is exactly its own stream, untouched by the flood.
+    for k in 0..20usize {
+        assert_eq!(cold.engine().read(k).unwrap(), 1, "cold row {k}");
+    }
+    drop(hot);
+    drop(cold);
+    reg.shutdown().unwrap();
+}
+
+/// Quota overflow is typed and retryable (the handle keeps working),
+/// never reaches the engine, and dropping a tenant perturbs no
+/// survivor's digest — the name is immediately reusable, fresh.
+#[test]
+fn quota_is_typed_retryable_and_drop_never_perturbs_survivors() {
+    let tier = fidelity();
+    let reg = TenantRegistry::volatile(move |spec: &TenantSpec| {
+        start_tier(quiet_cfg(spec.rows, spec.q, 2), tier)
+    });
+    let a = reg.create(TenantSpec::with_quota("a4", 64, 4, 32).unwrap()).unwrap();
+    let b = reg.create(TenantSpec::new("b8", 64, 8).unwrap()).unwrap();
+    let c = reg.create(TenantSpec::new("c16", 32, 16).unwrap()).unwrap();
+    for (h, rows, q, seed) in [(&a, 32usize, 4usize, 1u64), (&b, 64, 8, 2), (&c, 32, 16, 3)] {
+        let mut rng = Rng::new(seed);
+        for _ in 0..60 {
+            h.submit(UpdateRequest::add(
+                rng.below(rows as u64) as usize,
+                rng.below(bits::mask(q) as u64 + 1) as u32,
+            ))
+            .unwrap();
+        }
+        h.engine().drain_all().unwrap();
+    }
+
+    // Typed, pre-engine, retryable.
+    let before = a.engine().stats().submitted;
+    for row in [32usize, 48, 63] {
+        let e = a.submit(UpdateRequest::add(row, 1)).unwrap_err();
+        assert!(
+            e.root_cause().downcast_ref::<QuotaExceeded>().is_some(),
+            "row {row}: {e:#}"
+        );
+    }
+    assert_eq!(a.engine().stats().submitted, before, "rejections must not reach the engine");
+    a.submit(UpdateRequest::add(31, 1)).unwrap(); // retryable: handle still live
+    a.engine().drain_all().unwrap();
+
+    // Drop b8: survivors' digests must not move.
+    let da = a.digest().unwrap();
+    let dc = c.digest().unwrap();
+    drop(b);
+    reg.drop_tenant("b8").unwrap();
+    assert!(reg.get("b8").is_err());
+    assert_eq!(a.digest().unwrap(), da, "a4 perturbed by dropping b8");
+    assert_eq!(c.digest().unwrap(), dc, "c16 perturbed by dropping b8");
+
+    // The name is reusable immediately — with a different shape — and
+    // comes back empty.
+    let b2 = reg.create(TenantSpec::new("b8", 32, 16).unwrap()).unwrap();
+    assert_eq!(b2.engine().snapshot().unwrap(), vec![0u32; 32]);
+    // Survivors still accept traffic after the drop.
+    a.submit(UpdateRequest::add(0, 1)).unwrap();
+    c.submit(UpdateRequest::add(0, 1)).unwrap();
+    drop((a, b2, c));
+    reg.shutdown().unwrap();
+}
+
+/// Host oracle for one row's shift-register toggles: q cycles of
+/// `w' = (w >> 1) | (out_t << (q-1))`, 2·popcount(w' ⊕ w) per cycle —
+/// the word-level form the bitplane tier's telescoped closed form
+/// (module docs of `fastmem::bitplane`) must reproduce exactly.
+fn host_shift_toggles(pre: u32, post: u32, q: usize) -> u64 {
+    let mut w = pre;
+    let mut toggles = 0u64;
+    for t in 0..q {
+        let next = (w >> 1) | (((post >> t) & 1) << (q - 1));
+        toggles += 2 * u64::from((next ^ w).count_ones());
+        w = next;
+    }
+    assert_eq!(w, post, "the rotation must land on the result word");
+    toggles
+}
+
+/// Precision round trip, satellite 3a: a 4-bit and a 16-bit tenant's
+/// plane stacks report exactly the per-q closed form — plane count,
+/// plane words, cycles, alu_evals, cell_toggles.
+#[test]
+fn per_q_closed_form_accounting_is_exact_for_narrow_and_wide_tenants() {
+    for q in [4usize, 16] {
+        let rows = 96usize;
+        let mut a = BitPlaneArray::new(rows, &[q]);
+        let mut rng = Rng::new(0xACC7 + q as u64);
+        let mut pre = vec![0u32; rows];
+        for (r, p) in pre.iter_mut().enumerate() {
+            *p = rng.below(1u64 << q) as u32;
+            a.write_word(r, 0, *p);
+        }
+        let operands: Vec<u32> = (0..rows).map(|_| rng.below(1u64 << q) as u32).collect();
+        let report = a.apply(AluOp::Add, &operands);
+        let post: Vec<u32> = (0..rows).map(|r| a.read_word(r, 0)).collect();
+        for r in 0..rows {
+            assert_eq!(post[r], bits::add_mod(pre[r], operands[r], q), "q={q} row {r}");
+        }
+        assert_eq!(report.cycles, q as u64, "q={q}: q-cycle batch law");
+        assert_eq!(report.rows_active, rows as u64, "q={q}");
+        assert_eq!(report.alu_evals, (q * rows) as u64, "q={q}: alu_evals == q·rows");
+        let want: u64 = (0..rows).map(|r| host_shift_toggles(pre[r], post[r], q)).sum();
+        assert_eq!(report.cell_toggles, want, "q={q}: telescoped toggle closed form");
+        assert_eq!(a.plane_count(), q, "q={q}");
+        assert_eq!(a.plane_words(), q * rows.div_ceil(64), "q={q}: O(q·rows/64)");
+    }
+}
+
+/// Satellite 3b (the acceptance bar): on the bitplane tier, a 4-bit
+/// tenant's modeled batch time is measurably below an 8-bit tenant's
+/// (and 8 below 16) for the same workload — narrower plane stacks,
+/// fewer shift cycles.
+#[test]
+fn narrow_precision_tenants_pay_fewer_modeled_cycles_on_the_bitplane_tier() {
+    let reg = TenantRegistry::volatile(|spec: &TenantSpec| {
+        let cfg = quiet_cfg(spec.rows, spec.q, 2);
+        UpdateEngine::start(cfg, move |plan| {
+            Ok(Box::new(BitPlaneBackend::with_rows(plan.rows, plan.q)))
+        })
+    });
+    // Same rows, same stream (operands fit the narrowest q), drains at
+    // the same points → identical batch structure, different q.
+    for q in [4usize, 8, 16] {
+        let t = reg.create(TenantSpec::new(&format!("t{q}"), 128, q).unwrap()).unwrap();
+        let mut rng = Rng::new(0x9C7);
+        for i in 0..200 {
+            t.submit(UpdateRequest::add(
+                rng.below(128) as usize,
+                rng.below(bits::mask(4) as u64 + 1) as u32,
+            ))
+            .unwrap();
+            if (i + 1) % 40 == 0 {
+                t.engine().drain_all().unwrap();
+            }
+        }
+        t.engine().drain_all().unwrap();
+    }
+    let s4 = reg.get("t4").unwrap().engine().stats();
+    let s8 = reg.get("t8").unwrap().engine().stats();
+    let s16 = reg.get("t16").unwrap().engine().stats();
+    assert_eq!(s4.batches, s8.batches, "identical batch structure is the premise");
+    assert_eq!(s8.batches, s16.batches, "identical batch structure is the premise");
+    assert!(
+        s4.modeled_ns < 0.75 * s8.modeled_ns,
+        "4-bit batches must be measurably cheaper: {} vs {} ns",
+        s4.modeled_ns,
+        s8.modeled_ns
+    );
+    assert!(
+        s8.modeled_ns < 0.75 * s16.modeled_ns,
+        "8-bit batches must be measurably cheaper than 16: {} vs {} ns",
+        s8.modeled_ns,
+        s16.modeled_ns
+    );
+    reg.shutdown().unwrap();
+}
