@@ -1,155 +1,43 @@
-//! Shard-scaling bench: end-to-end engine throughput as the worker
-//! shard count sweeps 1/2/4/8 on a fixed offered load — the
-//! no-concurrency-collapse acceptance bar for the sharded coordinator
-//! (4-shard throughput must not fall below 1-shard).
+//! Shard-scaling bench: thin wrapper over the library's measured-
+//! performance harness (`fast_sram::bench`) — the same grid `fast
+//! bench engine` runs, so `cargo bench --bench shard_scaling` and the
+//! CLI produce one `BENCH_shard_scaling.json` schema between them.
 //!
-//! A fixed pool of producer threads submits the same total update
-//! stream for every configuration, so the only variable is the number
-//! of engine worker shards batching and applying updates.
-//!
-//! Run: `cargo bench --bench shard_scaling`
+//! Run: `cargo bench --bench shard_scaling`  (or `fast bench engine`)
 //! Writes: ../BENCH_shard_scaling.json (relative to rust/)
 //! Env: FAST_BENCH_SMOKE=1 shrinks the offered load for CI smoke runs.
 
 #[path = "harness.rs"]
 mod harness;
 
-use std::time::{Duration, Instant};
-
-use fast_sram::coordinator::{EngineConfig, FastBackend, UpdateEngine, UpdateRequest};
-use fast_sram::util::rng::Rng;
-
-const ROWS: usize = 1024;
-const Q: usize = 16;
-const PRODUCERS: usize = 4;
-const CHUNK: usize = 2048;
-
-fn updates_per_producer() -> usize {
-    if harness::smoke_mode() { 20_000 } else { 100_000 }
-}
-
-struct RunResult {
-    shards: usize,
-    wall_ms: f64,
-    ops_per_sec: f64,
-    batches: u64,
-    rows_per_batch: f64,
-    sealed_full: u64,
-    sealed_deadline: u64,
-    coalesce_hits: u64,
-}
-
-fn run(shards: usize) -> RunResult {
-    let mut cfg = EngineConfig::sharded(ROWS, Q, shards);
-    cfg.seal_deadline = Duration::from_micros(200);
-    cfg.queue_cap = 16_384;
-    let engine = UpdateEngine::start(cfg, move |plan| {
-        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
-    })
-    .unwrap();
-
-    // Pre-generate identical streams so every configuration sees the
-    // same offered load.
-    let updates = updates_per_producer();
-    let streams: Vec<Vec<UpdateRequest>> = (0..PRODUCERS)
-        .map(|t| {
-            let mut rng = Rng::new(7700 + t as u64);
-            (0..updates)
-                .map(|_| UpdateRequest::add(rng.below(ROWS as u64) as usize, 1 + rng.below(99) as u32))
-                .collect()
-        })
-        .collect();
-
-    let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for stream in &streams {
-            let engine = &engine;
-            scope.spawn(move || {
-                for chunk in stream.chunks(CHUNK) {
-                    engine.submit_many(chunk.to_vec()).unwrap();
-                }
-            });
-        }
-    });
-    engine.drain_all().unwrap();
-    let wall = t0.elapsed();
-
-    let s = engine.stats();
-    let total = (PRODUCERS * updates) as u64;
-    assert_eq!(s.completed, total, "no request may be dropped");
-    let out = RunResult {
-        shards,
-        wall_ms: wall.as_secs_f64() * 1e3,
-        ops_per_sec: total as f64 / wall.as_secs_f64(),
-        batches: s.batches,
-        rows_per_batch: s.rows_per_batch,
-        sealed_full: s.shards.iter().map(|sc| sc.sealed_full).sum(),
-        sealed_deadline: s.shards.iter().map(|sc| sc.sealed_deadline).sum(),
-        coalesce_hits: s.shards.iter().map(|sc| sc.coalesce_hits).sum(),
-    };
-    engine.shutdown().unwrap();
-    out
-}
+use fast_sram::bench::{run_engine_grid, GridConfig};
 
 fn main() {
-    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let updates = updates_per_producer();
+    let cfg = GridConfig::standard();
     harness::section(&format!(
-        "shard scaling: {ROWS} rows x {Q} bits, {PRODUCERS} producers x {updates} updates (host parallelism {host_threads})"
+        "shard scaling grid: {} rows x {} bits, {} updates/producer{}",
+        cfg.rows,
+        cfg.q,
+        cfg.updates_per_producer,
+        if cfg.smoke { " [smoke]" } else { "" }
     ));
+    let report = run_engine_grid(&cfg).expect("engine grid");
+    print!("{}", report.render_text());
 
-    let mut results = Vec::new();
-    for shards in [1usize, 2, 4, 8] {
-        // Warm-up run to stabilize allocator/thread caches, then the
-        // measured run.
-        let _ = run(shards);
-        let r = run(shards);
-        println!(
-            "shards {shards}: {:>8.1} ms | {:>10.0} ops/s | {:>6} batches | {:>6.1} rows/batch | seals full/deadline {}/{}",
-            r.wall_ms, r.ops_per_sec, r.batches, r.rows_per_batch, r.sealed_full, r.sealed_deadline
-        );
-        results.push(r);
-    }
-
-    let ops1 = results.iter().find(|r| r.shards == 1).unwrap().ops_per_sec;
-    let ops4 = results.iter().find(|r| r.shards == 4).unwrap().ops_per_sec;
-    let pass = ops4 >= ops1;
-    println!(
-        "\nacceptance: 4-shard {:.0} ops/s vs 1-shard {:.0} ops/s -> {}",
-        ops4,
-        ops1,
-        if pass { "PASS (no concurrency collapse)" } else { "FAIL" }
-    );
-
-    let mut rows_json = String::new();
-    for r in &results {
-        if !rows_json.is_empty() {
-            rows_json.push_str(",\n");
-        }
-        rows_json.push_str(&format!(
-            "    {{\"shards\": {}, \"wall_ms\": {:.3}, \"ops_per_sec\": {:.0}, \"batches\": {}, \"rows_per_batch\": {:.2}, \"sealed_full\": {}, \"sealed_deadline\": {}, \"coalesce_hits\": {}}}",
-            r.shards, r.wall_ms, r.ops_per_sec, r.batches, r.rows_per_batch, r.sealed_full, r.sealed_deadline, r.coalesce_hits
-        ));
-    }
-    let json = format!(
-        "{{\n  \"bench\": \"shard_scaling\",\n  \"status\": \"measured\",\n  \"mode\": \"{}\",\n  \"rows\": {ROWS},\n  \"q\": {Q},\n  \"producers\": {PRODUCERS},\n  \"updates_total\": {},\n  \"host_parallelism\": {host_threads},\n  \"results\": [\n{rows_json}\n  ],\n  \"acceptance\": {{\"criterion\": \"ops_per_sec(shards=4) >= ops_per_sec(shards=1)\", \"pass\": {pass}}}\n}}\n",
-        if harness::smoke_mode() { "smoke" } else { "full" },
-        PRODUCERS * updates
-    );
     let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_shard_scaling.json");
-    std::fs::write(out_path, json).expect("writing BENCH_shard_scaling.json");
+    report
+        .write_json(std::path::Path::new(out_path))
+        .expect("writing BENCH_shard_scaling.json");
     println!("results written to {out_path}");
 
-    // On a multi-core host the sharded engine must not collapse; a
-    // single-core host cannot exhibit worker parallelism, so the bar
-    // is only enforced where it is meaningful. The hard assert allows
-    // 10% scheduler noise (shared CI runners) — "collapse" means
-    // dramatically worse, not a jitter loss; the JSON records the
-    // strict comparison either way.
-    if host_threads >= 2 {
+    // Where the question is meaningful (full mode, >= 8-way host), a
+    // collapse is a hard failure; the 3x target itself is recorded in
+    // the JSON — measured, not asserted.
+    if report.acceptance_judgeable() {
+        let ratio = report.scaling_ratio().expect("judgeable implies ratio");
         assert!(
-            ops4 >= 0.9 * ops1,
-            "concurrency collapse: 4-shard {ops4:.0} ops/s vs 1-shard {ops1:.0} ops/s"
+            ratio >= 0.9,
+            "concurrency collapse: 8-shard/1-shard ratio {ratio:.2} at 8 producers"
         );
     }
 }

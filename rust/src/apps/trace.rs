@@ -193,6 +193,76 @@ impl TraceEvent {
         Ok(event)
     }
 
+    /// Zero-allocation parse of one *canonical* `fast-trace-v1` event
+    /// line — exactly the bytes [`Self::to_json_line`] emits, which is
+    /// what every well-behaved client (and our own tools) sends. The
+    /// scanner walks the line once, builds the event straight from the
+    /// byte slice, and never allocates. Any deviation — reordered
+    /// keys, whitespace, unknown fields, out-of-range row/value, a
+    /// `tenant` field — falls back to [`Self::parse_line`], so the
+    /// full grammar is still accepted and every error (including typed
+    /// [`BadField`]) is byte-identical to the slow path's: errors are
+    /// always produced by the one canonical error source.
+    pub fn parse_line_fast(line: &str, rows: usize, q: usize) -> Result<TraceEvent> {
+        match Self::scan_canonical(line.as_bytes(), rows, q) {
+            Some(event) => Ok(event),
+            None => Self::parse_line(line, rows, q),
+        }
+    }
+
+    /// The canonical-form scanner behind [`Self::parse_line_fast`].
+    /// `None` means "not canonical or not in range" — never an error
+    /// by itself.
+    fn scan_canonical(b: &[u8], rows: usize, q: usize) -> Option<TraceEvent> {
+        fn digits(b: &[u8]) -> Option<(u64, &[u8])> {
+            let end = b.iter().position(|c| !c.is_ascii_digit()).unwrap_or(b.len());
+            // No digits, or a leading zero on a multi-digit number
+            // (non-canonical spelling): defer to the slow path.
+            if end == 0 || end > 19 || (end > 1 && b[0] == b'0') {
+                return None;
+            }
+            let mut n = 0u64;
+            for &c in &b[..end] {
+                n = n * 10 + u64::from(c - b'0');
+            }
+            Some((n, &b[end..]))
+        }
+        let row_val = |rest: &[u8]| -> Option<(usize, u32)> {
+            let rest = rest.strip_prefix(b"\"r\":")?;
+            let (row, rest) = digits(rest)?;
+            let rest = rest.strip_prefix(b",\"v\":")?;
+            let (val, rest) = digits(rest)?;
+            if rest != b"}" || row >= rows as u64 || val > u64::from(bits::mask(q)) {
+                return None;
+            }
+            Some((row as usize, val as u32))
+        };
+        let rest = b.strip_prefix(b"{\"t\":\"")?;
+        match rest {
+            b"f\"}" => Some(TraceEvent::Flush),
+            _ => {
+                if let Some(rest) = rest.strip_prefix(b"u\",\"o\":\"") {
+                    let quote = rest.iter().position(|&c| c == b'"')?;
+                    let op = match &rest[..quote] {
+                        b"add" => UpdateOp::Add,
+                        b"sub" => UpdateOp::Sub,
+                        b"and" => UpdateOp::And,
+                        b"or" => UpdateOp::Or,
+                        b"xor" => UpdateOp::Xor,
+                        _ => return None,
+                    };
+                    let (row, operand) = row_val(rest[quote + 1..].strip_prefix(b",")?)?;
+                    Some(TraceEvent::Update(UpdateRequest { row, op, operand }))
+                } else if let Some(rest) = rest.strip_prefix(b"w\",") {
+                    let (row, value) = row_val(rest)?;
+                    Some(TraceEvent::Write { row, value })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
     /// Parse one event line in a multi-tenant context: an optional
     /// `"tenant":"<name>"` field routes the event, and the caller's
     /// `shape` lookup maps the (optional) tenant name to the `(rows,
@@ -410,7 +480,7 @@ impl TraceReader {
             if line.is_empty() {
                 continue;
             }
-            let event = TraceEvent::parse_line(&line, self.header.rows, self.header.q)
+            let event = TraceEvent::parse_line_fast(&line, self.header.rows, self.header.q)
                 .with_context(|| format!("trace line {}", self.line_no))?;
             return Ok(Some(event));
         }
@@ -733,6 +803,78 @@ pub fn uniform_trace(rows: usize, q: usize, updates: usize, seed: u64) -> Trace 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fast_parse_agrees_with_slow_parse_on_canonical_lines() {
+        use crate::util::quickprop::check;
+        check("parse_line_fast == parse_line (canonical)", 400, |g| {
+            let rows = 1 + g.u32_below(512) as usize;
+            let q = 1 + g.u32_below(32) as usize;
+            let event = match g.u32_below(3) {
+                0 => TraceEvent::Update(UpdateRequest {
+                    row: g.u32_below(rows as u32) as usize,
+                    op: *g.choose(&[
+                        UpdateOp::Add,
+                        UpdateOp::Sub,
+                        UpdateOp::And,
+                        UpdateOp::Or,
+                        UpdateOp::Xor,
+                    ]),
+                    operand: g.u32_any() & bits::mask(q),
+                }),
+                1 => TraceEvent::Write {
+                    row: g.u32_below(rows as u32) as usize,
+                    value: g.u32_any() & bits::mask(q),
+                },
+                _ => TraceEvent::Flush,
+            };
+            let line = event.to_json_line();
+            // The fast path must take the scanner (not the fallback)
+            // on canonical in-range lines, and agree with the slow
+            // parser bit for bit.
+            TraceEvent::scan_canonical(line.as_bytes(), rows, q) == Some(event)
+                && TraceEvent::parse_line(&line, rows, q).ok() == Some(event)
+        });
+    }
+
+    #[test]
+    fn fast_parse_falls_back_with_identical_errors() {
+        // Structurally canonical but out of range: the scanner bows
+        // out and the slow path's message comes through verbatim.
+        let cases = [
+            ("{\"t\":\"u\",\"o\":\"add\",\"r\":99,\"v\":1}", "row 99 out of range 8"),
+            ("{\"t\":\"u\",\"o\":\"add\",\"r\":1,\"v\":256}", "value 256 exceeds q=8"),
+            ("{\"t\":\"w\",\"r\":1,\"v\":999}", "value 999 exceeds q=8"),
+            ("{\"t\":\"u\",\"o\":\"nand\",\"r\":1,\"v\":1}", "bad or missing op"),
+            ("{\"t\":\"x\"}", "unknown event type"),
+        ];
+        for (line, want) in cases {
+            let fast = TraceEvent::parse_line_fast(line, 8, 8).unwrap_err();
+            let slow = TraceEvent::parse_line(line, 8, 8).unwrap_err();
+            assert_eq!(format!("{fast:#}"), format!("{slow:#}"), "line {line:?}");
+            assert!(format!("{fast:#}").contains(want), "line {line:?}: {fast:#}");
+        }
+        // Non-canonical spellings still parse (via the fallback) to
+        // the same events.
+        for (loose, canon) in [
+            ("{ \"t\": \"f\" }", "{\"t\":\"f\"}"),
+            ("{\"r\":3,\"v\":7,\"t\":\"w\"}", "{\"t\":\"w\",\"r\":3,\"v\":7}"),
+            ("{\"t\":\"u\",\"r\":2,\"o\":\"xor\",\"v\":1}", "{\"t\":\"u\",\"o\":\"xor\",\"r\":2,\"v\":1}"),
+        ] {
+            assert_eq!(
+                TraceEvent::parse_line_fast(loose.trim(), 8, 8).unwrap(),
+                TraceEvent::parse_line_fast(canon, 8, 8).unwrap(),
+                "loose spelling {loose:?}"
+            );
+        }
+        // A tenant field is still a typed BadField through the fast
+        // entry point.
+        let err = TraceEvent::parse_line_fast(
+            "{\"t\":\"f\",\"tenant\":\"db\"}", 8, 8,
+        )
+        .unwrap_err();
+        assert!(err.root_cause().downcast_ref::<BadField>().is_some());
+    }
 
     fn tiny_trace() -> Trace {
         let mut t = Trace::new("tiny", 8, 8, 1);

@@ -1,0 +1,393 @@
+//! Measured-performance harness behind `fast bench engine` and the
+//! `cargo bench --bench shard_scaling` target — one implementation,
+//! two entry points, one `BENCH_shard_scaling.json` schema.
+//!
+//! ## What it measures
+//!
+//! A seeded open-loop producer grid: every (producers × shards) cell
+//! starts a fresh engine, replays pre-generated per-producer update
+//! streams through `submit_many` chunks, and reports
+//!
+//! - end-to-end throughput (ops/s over the submit+drain wall),
+//! - submit-path wall latency per chunk (p50/p95/p99 — the number the
+//!   lock-free admission ring is supposed to move),
+//! - the engine's contention counters (`submit_spins`, `park_events`,
+//!   wake-batch histogram) so a regression shows up in the JSON
+//!   without a profiler.
+//!
+//! Streams are pre-generated from a fixed seed, so every cell sees an
+//! identical offered load and run-to-run diffs are measurement noise,
+//! not workload noise.
+//!
+//! ## The contract
+//!
+//! `BENCH_shard_scaling.json` at the repo root says
+//! `"status": "measured"` only when this harness actually ran — the
+//! committed placeholder says `pending-measurement`, and CI's
+//! perf-smoke job fails if it still does after running the harness.
+//! The scaling acceptance (8-shard ≥ 3× 1-shard throughput at 8
+//! producers) is *recorded*, and only judged on hosts with enough
+//! parallelism for the question to be meaningful.
+
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{EngineConfig, FastBackend, UpdateEngine, UpdateRequest};
+use crate::metrics::LatencySummary;
+use crate::util::rng::Rng;
+use crate::util::stats::LatencyHistogram;
+use crate::Result;
+
+/// Grid shape and offered load for one harness run.
+#[derive(Debug, Clone)]
+pub struct GridConfig {
+    pub rows: usize,
+    pub q: usize,
+    /// Producer-thread counts to sweep (outer grid axis).
+    pub producer_counts: Vec<usize>,
+    /// Engine shard counts to sweep (inner grid axis).
+    pub shard_counts: Vec<usize>,
+    /// Updates each producer submits per cell.
+    pub updates_per_producer: usize,
+    /// `submit_many` chunk size (one submit-wall sample per chunk).
+    pub chunk: usize,
+    /// Seed for the pre-generated streams.
+    pub seed: u64,
+    /// Smoke mode (reduced load, `FAST_BENCH_SMOKE=1`).
+    pub smoke: bool,
+}
+
+impl GridConfig {
+    /// The standard 1/2/4/8 × 1/2/4/8 grid; `FAST_BENCH_SMOKE=1` (any
+    /// value but "0") shrinks the offered load for CI smoke runs.
+    pub fn standard() -> GridConfig {
+        let smoke = std::env::var("FAST_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+        GridConfig {
+            rows: 1024,
+            q: 16,
+            producer_counts: vec![1, 2, 4, 8],
+            shard_counts: vec![1, 2, 4, 8],
+            updates_per_producer: if smoke { 5_000 } else { 50_000 },
+            chunk: 512,
+            seed: 7700,
+            smoke,
+        }
+    }
+}
+
+/// One (producers × shards) cell's measurements.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub producers: usize,
+    pub shards: usize,
+    pub wall_ms: f64,
+    pub ops_per_sec: f64,
+    pub batches: u64,
+    pub rows_per_batch: f64,
+    /// Per-chunk `submit_many` wall latency.
+    pub submit_wall: LatencySummary,
+    pub submit_spins: u64,
+    pub park_events: u64,
+    /// Wake-batch histogram: count = seals that woke ≥ 1 ticket,
+    /// mean = waiters woken per such seal.
+    pub wake_batch_count: u64,
+    pub wake_batch_mean: f64,
+    pub rejected: u64,
+}
+
+/// A full grid run plus the environment it ran in.
+#[derive(Debug, Clone)]
+pub struct GridReport {
+    pub cfg: GridConfig,
+    pub host_parallelism: usize,
+    pub cells: Vec<CellResult>,
+}
+
+/// Run one cell: fresh engine, pre-generated streams, blocking
+/// `submit_many` chunks with one submit-wall sample per chunk.
+fn run_cell(cfg: &GridConfig, producers: usize, shards: usize) -> Result<CellResult> {
+    let mut ecfg = EngineConfig::sharded(cfg.rows, cfg.q, shards);
+    ecfg.seal_deadline = Duration::from_micros(200);
+    ecfg.queue_cap = 16_384;
+    let engine = UpdateEngine::start(ecfg, |plan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+    })?;
+
+    let streams: Vec<Vec<UpdateRequest>> = (0..producers)
+        .map(|t| {
+            let mut rng = Rng::new(cfg.seed + t as u64);
+            (0..cfg.updates_per_producer)
+                .map(|_| {
+                    UpdateRequest::add(
+                        rng.below(cfg.rows as u64) as usize,
+                        1 + rng.below(99) as u32,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+
+    let submit_hist = Mutex::new(LatencyHistogram::new());
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for stream in &streams {
+            let engine = &engine;
+            let submit_hist = &submit_hist;
+            scope.spawn(move || {
+                let mut local = LatencyHistogram::new();
+                for chunk in stream.chunks(cfg.chunk) {
+                    let c0 = Instant::now();
+                    engine.submit_many(chunk.to_vec()).expect("bench submit");
+                    local.record(c0.elapsed().as_nanos() as u64);
+                }
+                submit_hist.lock().expect("bench hist").merge(&local);
+            });
+        }
+    });
+    engine.drain_all()?;
+    let wall = t0.elapsed();
+
+    let s = engine.stats();
+    let total = (producers * cfg.updates_per_producer) as u64;
+    anyhow::ensure!(s.completed == total, "offered {total}, completed {}", s.completed);
+    let hist = submit_hist.into_inner().expect("bench hist");
+    let wake_count: u64 = s.shards.iter().map(|sc| sc.wake_batch.count).sum();
+    let wake_sum: f64 = s
+        .shards
+        .iter()
+        .map(|sc| sc.wake_batch.mean_ns * sc.wake_batch.count as f64)
+        .sum();
+    let out = CellResult {
+        producers,
+        shards,
+        wall_ms: wall.as_secs_f64() * 1e3,
+        ops_per_sec: total as f64 / wall.as_secs_f64(),
+        batches: s.batches,
+        rows_per_batch: s.rows_per_batch,
+        submit_wall: LatencySummary {
+            count: hist.count(),
+            mean_ns: hist.mean_ns(),
+            p50_ns: hist.percentile_ns(50.0),
+            p95_ns: hist.percentile_ns(95.0),
+            p99_ns: hist.percentile_ns(99.0),
+            max_ns: hist.max_ns(),
+        },
+        submit_spins: s.submit_spins,
+        park_events: s.park_events,
+        wake_batch_count: wake_count,
+        wake_batch_mean: if wake_count > 0 { wake_sum / wake_count as f64 } else { 0.0 },
+        rejected: s.rejected,
+    };
+    engine.shutdown()?;
+    Ok(out)
+}
+
+/// Run the full grid. Each cell gets one unmeasured warm-up pass in
+/// full mode (skipped in smoke mode — CI wants the wall clock, not the
+/// precision).
+pub fn run_engine_grid(cfg: &GridConfig) -> Result<GridReport> {
+    let host_parallelism =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut cells = Vec::new();
+    for &producers in &cfg.producer_counts {
+        for &shards in &cfg.shard_counts {
+            if !cfg.smoke {
+                let _ = run_cell(cfg, producers, shards)?;
+            }
+            cells.push(run_cell(cfg, producers, shards)?);
+        }
+    }
+    Ok(GridReport { cfg: cfg.clone(), host_parallelism, cells })
+}
+
+impl GridReport {
+    fn cell(&self, producers: usize, shards: usize) -> Option<&CellResult> {
+        self.cells.iter().find(|c| c.producers == producers && c.shards == shards)
+    }
+
+    /// The scaling acceptance: at 8 producers, 8-shard throughput /
+    /// 1-shard throughput. `None` when the grid lacks those cells.
+    pub fn scaling_ratio(&self) -> Option<f64> {
+        let one = self.cell(8, 1)?.ops_per_sec;
+        let eight = self.cell(8, 8)?.ops_per_sec;
+        (one > 0.0).then(|| eight / one)
+    }
+
+    /// Whether the acceptance is judgeable here: a smoke run measures
+    /// wiring (not performance), and a host without 8-way parallelism
+    /// cannot exhibit 8-shard scaling.
+    pub fn acceptance_judgeable(&self) -> bool {
+        !self.cfg.smoke && self.host_parallelism >= 8 && self.scaling_ratio().is_some()
+    }
+
+    /// Human-readable table, one line per cell.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "engine grid: {} rows x {} bits, {} updates/producer, chunk {}, seed {} \
+             (host parallelism {}{})\n",
+            self.cfg.rows,
+            self.cfg.q,
+            self.cfg.updates_per_producer,
+            self.cfg.chunk,
+            self.cfg.seed,
+            self.host_parallelism,
+            if self.cfg.smoke { ", smoke" } else { "" },
+        ));
+        for c in &self.cells {
+            out.push_str(&format!(
+                "p{} x s{}: {:>9.1} ms | {:>11.0} ops/s | submit p50/p95/p99 \
+                 {}/{}/{} ns | spins {} parks {} | wake-batch {:.1} avg\n",
+                c.producers,
+                c.shards,
+                c.wall_ms,
+                c.ops_per_sec,
+                c.submit_wall.p50_ns,
+                c.submit_wall.p95_ns,
+                c.submit_wall.p99_ns,
+                c.submit_spins,
+                c.park_events,
+                c.wake_batch_mean,
+            ));
+        }
+        match (self.scaling_ratio(), self.acceptance_judgeable()) {
+            (Some(r), true) => out.push_str(&format!(
+                "acceptance: 8-shard/1-shard at 8 producers = {r:.2}x (target >= 3x) -> {}\n",
+                if r >= 3.0 { "PASS" } else { "FAIL" }
+            )),
+            (Some(r), false) => out.push_str(&format!(
+                "acceptance: ratio {r:.2}x recorded, not judged \
+                 (smoke mode or < 8-way host)\n"
+            )),
+            (None, _) => out.push_str("acceptance: grid lacks the 8x1 / 8x8 cells\n"),
+        }
+        out
+    }
+
+    /// The `BENCH_shard_scaling.json` document. `"status": "measured"`
+    /// is the contract CI greps for — only a real run produces it.
+    pub fn render_json(&self) -> String {
+        let mut cells = String::new();
+        for c in &self.cells {
+            if !cells.is_empty() {
+                cells.push_str(",\n");
+            }
+            cells.push_str(&format!(
+                "    {{\"producers\": {}, \"shards\": {}, \"wall_ms\": {:.3}, \
+                 \"ops_per_sec\": {:.0}, \"batches\": {}, \"rows_per_batch\": {:.2}, \
+                 \"submit_wall_ns\": {{\"count\": {}, \"mean\": {:.1}, \"p50\": {}, \
+                 \"p95\": {}, \"p99\": {}, \"max\": {}}}, \
+                 \"submit_spins\": {}, \"park_events\": {}, \
+                 \"wake_batch\": {{\"count\": {}, \"mean_waiters\": {:.2}}}, \
+                 \"rejected\": {}}}",
+                c.producers,
+                c.shards,
+                c.wall_ms,
+                c.ops_per_sec,
+                c.batches,
+                c.rows_per_batch,
+                c.submit_wall.count,
+                c.submit_wall.mean_ns,
+                c.submit_wall.p50_ns,
+                c.submit_wall.p95_ns,
+                c.submit_wall.p99_ns,
+                c.submit_wall.max_ns,
+                c.submit_spins,
+                c.park_events,
+                c.wake_batch_count,
+                c.wake_batch_mean,
+                c.rejected,
+            ));
+        }
+        let (ratio, pass) = match (self.scaling_ratio(), self.acceptance_judgeable()) {
+            (Some(r), true) => (format!("{r:.3}"), (r >= 3.0).to_string()),
+            (Some(r), false) => (format!("{r:.3}"), "null".to_string()),
+            (None, _) => ("null".to_string(), "null".to_string()),
+        };
+        format!(
+            "{{\n  \"bench\": \"shard_scaling\",\n  \"status\": \"measured\",\n  \
+             \"mode\": \"{}\",\n  \"rows\": {},\n  \"q\": {},\n  \
+             \"updates_per_producer\": {},\n  \"chunk\": {},\n  \"seed\": {},\n  \
+             \"host_parallelism\": {},\n  \"cells\": [\n{cells}\n  ],\n  \
+             \"acceptance\": {{\"criterion\": \"ops_per_sec(8 producers, 8 shards) >= \
+             3x ops_per_sec(8 producers, 1 shard)\", \"ratio\": {ratio}, \
+             \"pass\": {pass}}}\n}}\n",
+            if self.cfg.smoke { "smoke" } else { "full" },
+            self.cfg.rows,
+            self.cfg.q,
+            self.cfg.updates_per_producer,
+            self.cfg.chunk,
+            self.cfg.seed,
+            self.host_parallelism,
+        )
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        use anyhow::Context;
+        std::fs::write(path, self.render_json())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> GridConfig {
+        GridConfig {
+            rows: 64,
+            q: 8,
+            producer_counts: vec![1, 2],
+            shard_counts: vec![1, 2],
+            updates_per_producer: 400,
+            chunk: 64,
+            seed: 9,
+            smoke: true,
+        }
+    }
+
+    #[test]
+    fn grid_runs_and_reports_every_cell() {
+        let rep = run_engine_grid(&tiny_cfg()).unwrap();
+        assert_eq!(rep.cells.len(), 4);
+        for c in &rep.cells {
+            assert!(c.ops_per_sec > 0.0);
+            assert_eq!(c.rejected, 0, "blocking submits never reject");
+            assert!(c.submit_wall.count > 0);
+            assert!(c.submit_wall.p99_ns >= c.submit_wall.p50_ns);
+        }
+    }
+
+    #[test]
+    fn json_carries_the_measured_contract_and_percentiles() {
+        use crate::util::json::Json;
+        let rep = run_engine_grid(&tiny_cfg()).unwrap();
+        let text = rep.render_json();
+        assert!(
+            text.contains("\"status\": \"measured\""),
+            "the exact status spelling is the CI grep contract"
+        );
+        let j = Json::parse(&text).unwrap();
+        let cells = j.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 4);
+        for c in cells {
+            for key in ["producers", "shards", "submit_spins", "park_events"] {
+                assert!(c.get(key).and_then(Json::as_usize).is_some(), "missing {key}");
+            }
+            let sw = c.get("submit_wall_ns").unwrap();
+            for key in ["p50", "p95", "p99"] {
+                assert!(sw.get(key).and_then(Json::as_usize).is_some(), "missing {key}");
+            }
+            assert!(c.get("ops_per_sec").and_then(Json::as_f64).is_some());
+        }
+        // Small grid: acceptance must be recorded as unjudgeable, not
+        // silently passed.
+        let acc = j.get("acceptance").unwrap();
+        assert!(acc.get("ratio").is_some());
+        // Deterministic seed: two renders of the same report agree.
+        assert_eq!(text, rep.render_json());
+    }
+}

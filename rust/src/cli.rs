@@ -287,9 +287,17 @@ system commands:
                --verify re-runs the reduction on a host-side scalar oracle
                over the workload's reference state and exits nonzero on any
                value or accounting divergence
+  bench        engine [--out PATH]     measured-performance grid: seeded
+                                       open-loop load, 1/2/4/8 producers x
+                                       1/2/4/8 shards, ops/s + submit-wall
+                                       p50/p95/p99 + contention counters,
+                                       written to BENCH_shard_scaling.json
+                                       with status=measured
+                                       (FAST_BENCH_SMOKE=1 shrinks the load)
   wal          inspect --dir DIR       summarize a WAL directory (segments,
                                        per-shard commit_seq/lsn watermarks,
-                                       snapshot, recovered-state digest)
+                                       snapshot, recovered-state digest,
+                                       per-segment coalescing stats)
                verify --dir DIR [--digest-only]
                                        read-only integrity check: exits
                                        nonzero if records are unreachable

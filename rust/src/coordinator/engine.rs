@@ -51,13 +51,26 @@
 //! worker per shard; each worker *constructs its backend inside the
 //! thread* (PJRT executables are not `Send`).
 //!
-//! Tokio is not in the offline vendor set (DESIGN.md §7) —
-//! `std::thread` + `mpsc::sync_channel` provide the same bounded-queue
-//! backpressure semantics.
+//! ## Hot-path de-locking
+//!
+//! Tokio is not in the offline vendor set (DESIGN.md §7); admission
+//! rides `std::thread` plus a bounded **lock-free MPSC ring**
+//! ([`crate::util::ring`]) per shard — `mpsc::sync_channel` took a
+//! mutex on every send/recv, serializing producers on the queue lock
+//! before they ever reached the worker. Queue depth and the
+//! high-water mark are now derived from the ring's own head/tail
+//! distance, which is capped at `queue_cap` by construction (the old
+//! raise-before-send gauge could transiently overcount past the cap
+//! when a rejected submit raced an admitted one). Ticket resolution
+//! is batch-wake: each shard publishes its commit epoch on one shared
+//! [`WaitHub`] (`publish` + a single `notify_all` per seal) instead of
+//! taking a `Mutex+Condvar` per ticket. Contention is observable
+//! without a profiler via the `submit_spins` / `park_events` /
+//! `wake_batch` shard counters.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -74,11 +87,14 @@ use crate::metrics::{
     Counters, EnergyAccount, LatencyRecorder, LatencySummary, ShardCounters, ShardSnapshot,
 };
 use crate::query::{shard_specs, QueryOutcome, QuerySpec, Reduction};
+use crate::util::ring::{self, RingReceiver, RingSender};
 use crate::Result;
 
 use super::backend::Backend;
 use super::batcher::{Batch, Batcher, SealReason};
-use super::request::{ticket, BatchKind, Commit, Ticket, TicketNotifier, UpdateRequest};
+use super::request::{
+    ticket_on, BatchKind, Commit, SeqWait, Ticket, TicketNotifier, UpdateRequest, WaitHub,
+};
 
 /// Engine configuration. All knobs have CLI flags on `fast serve`.
 #[derive(Debug, Clone)]
@@ -262,6 +278,17 @@ pub trait CommitListener: Send {
     fn flush_due(&self) -> Option<Instant> {
         None
     }
+
+    /// The shard worker is about to block waiting for work (its
+    /// command queue is empty): flush anything opportunistically
+    /// buffered. The WAL's cross-seal write coalescing rides this —
+    /// frames staged during a burst are written out the moment the
+    /// burst ends, so staging never extends the durability lag beyond
+    /// the active burst (fsync timing is still governed by the policy
+    /// / [`Self::flush_due`]). Default: nothing to do.
+    fn on_quiescent(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Per-shard worker bootstrap: the commit listener, recovered state to
@@ -310,36 +337,12 @@ enum Command {
     Shutdown,
 }
 
-/// Per-shard committed-sequence latch: workers publish after every
-/// apply, `wait_seq` blocks on it, shutdown closes it so waiters can
-/// never hang on a sequence that will no longer arrive.
-#[derive(Debug, Default)]
-struct ShardSeq {
-    state: Mutex<SeqState>,
-    cv: Condvar,
-}
-
-#[derive(Debug, Default)]
-struct SeqState {
-    committed: u64,
-    closed: bool,
-}
-
-impl ShardSeq {
-    fn publish(&self, seq: u64) {
-        if let Ok(mut g) = self.state.lock() {
-            g.committed = g.committed.max(seq);
-        }
-        self.cv.notify_all();
-    }
-
-    fn close(&self) {
-        if let Ok(mut g) = self.state.lock() {
-            g.closed = true;
-        }
-        self.cv.notify_all();
-    }
-}
+// Per-shard committed-sequence latch: the [`WaitHub`] from
+// `coordinator::request`. Workers publish after every apply (one
+// `notify_all` that wakes sequence waiters AND the seal's ticket
+// waiters — the batch-wake path), `wait_seq` blocks on it, shutdown
+// closes it so waiters can never hang on a sequence that will no
+// longer arrive.
 
 /// Shared metrics handle.
 #[derive(Debug, Default)]
@@ -395,6 +398,16 @@ pub struct EngineStats {
     /// In-array queries answered across all shards (one engine-level
     /// query counts once per shard it fanned out to).
     pub queries: u64,
+    /// Spin-loop probes blocking submits burned on full rings, all
+    /// shards (admission contention gauge).
+    pub submit_spins: u64,
+    /// Times a blocking submit gave up spinning and parked, all
+    /// shards.
+    pub park_events: u64,
+    /// WAL writes that carried ≥ 2 coalesced frames, all shards.
+    pub wal_coalesced_writes: u64,
+    /// Frames delivered by those coalesced writes, all shards.
+    pub wal_coalesced_frames: u64,
     /// Per-shard breakdown (seal reasons, coalesce hits, queue depth,
     /// commit sequence, submit→commit latency histograms).
     pub shards: Vec<ShardSnapshot>,
@@ -464,7 +477,7 @@ impl QueryTicket {
 }
 
 struct ShardHandle {
-    tx: SyncSender<Command>,
+    tx: RingSender<Command>,
     worker: Option<JoinHandle<Result<()>>>,
 }
 
@@ -472,7 +485,7 @@ struct ShardHandle {
 /// threads (`Arc<UpdateEngine>`): every submit path is `&self`.
 pub struct UpdateEngine {
     shards: Vec<ShardHandle>,
-    seqs: Vec<Arc<ShardSeq>>,
+    seqs: Vec<Arc<WaitHub>>,
     shard_bits: u32,
     metrics: Arc<EngineMetrics>,
     backend_name: std::sync::OnceLock<&'static str>,
@@ -596,11 +609,11 @@ impl UpdateEngine {
         let mut seqs = Vec::with_capacity(cfg.shards);
         let mut name_rxs = Vec::with_capacity(cfg.shards);
         for (shard, init) in inits.into_iter().enumerate() {
-            let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
+            let (tx, rx) = ring::channel(cfg.queue_cap);
             let (name_tx, name_rx) = mpsc::sync_channel(1);
             let plan = ShardPlan { shard, shards: cfg.shards, rows: shard_rows, q: cfg.q };
             let scfg = ShardConfig { seal_at_rows, seal_deadline: cfg.seal_deadline };
-            let seq = Arc::new(ShardSeq::default());
+            let seq = Arc::new(WaitHub::new());
             let worker_seq = Arc::clone(&seq);
             let worker_metrics = Arc::clone(&metrics);
             let worker_factory = Arc::clone(&factory);
@@ -677,32 +690,38 @@ impl UpdateEngine {
         Ok((row & (self.cfg.shards - 1), row >> self.shard_bits))
     }
 
-    /// Raise the queue gauge BEFORE sending, so the worker's decrement
-    /// (which may race ahead of us) can never underflow the counter.
-    /// Returns the raised depth; record it as a high-water mark only
-    /// once the send is admitted (rejected requests must not inflate
-    /// the mark past `queue_cap`).
+    /// Account an admitted send. The queue gauges are derived from the
+    /// ring's own occupancy (`tail - head`), which the admission CAS
+    /// bounds at `queue_cap` — so the high-water mark can never exceed
+    /// the cap, even while rejected submits race admitted ones (the
+    /// old raise-before-send counter could transiently overcount).
     #[inline]
-    fn gauge_add(&self, shard: usize, n: u64) -> u64 {
-        self.metrics.shards[shard]
-            .queue_depth
-            .fetch_add(n, Ordering::Relaxed)
-            + n
-    }
-
-    #[inline]
-    fn note_admitted(&self, shard: usize, n: u64, depth: u64) {
+    fn note_admitted(&self, shard: usize, n: u64) {
         let sc = &self.metrics.shards[shard];
-        sc.queue_high_water.fetch_max(depth, Ordering::Relaxed);
+        // An admitted send proves occupancy was >= 1 an instant ago,
+        // even if the worker already drained it by this sample.
+        sc.queue_high_water
+            .fetch_max((self.shards[shard].tx.len() as u64).max(1), Ordering::Relaxed);
         Counters::inc(&sc.requests, n);
     }
 
-    /// Roll the gauge back after a failed send.
+    /// Account the slow-path work a blocking send reported.
     #[inline]
-    fn gauge_sub(&self, shard: usize, n: u64) {
-        self.metrics.shards[shard]
-            .queue_depth
-            .fetch_sub(n, Ordering::Relaxed);
+    fn note_contention(&self, shard: usize, report: ring::SendReport) {
+        if report.spins > 0 || report.parks > 0 {
+            let sc = &self.metrics.shards[shard];
+            Counters::inc(&sc.submit_spins, report.spins);
+            Counters::inc(&sc.park_events, report.parks);
+        }
+    }
+
+    /// Refresh each shard's depth gauge from its ring occupancy (a
+    /// dead shard's leftover commands are unreachable — report 0).
+    fn refresh_queue_gauges(&self) {
+        for (h, sc) in self.shards.iter().zip(&self.metrics.shards) {
+            let depth = if h.tx.is_disconnected() { 0 } else { h.tx.len() as u64 };
+            sc.queue_depth.store(depth, Ordering::Relaxed);
+        }
     }
 
     /// Mutation admission gate: a read-only (follower) engine rejects
@@ -719,7 +738,7 @@ impl UpdateEngine {
     /// Non-blocking submit. `Err` = queue full (backpressure), row out
     /// of range, or engine shut down; the request was NOT accepted.
     pub fn submit(&self, req: UpdateRequest) -> Result<()> {
-        self.submit_inner(req, None).map(|_| ())
+        self.submit_inner(req, false).map(|_| ())
     }
 
     /// Non-blocking submit returning a completion [`Ticket`]. Same
@@ -727,64 +746,70 @@ impl UpdateEngine {
     /// was NOT accepted (backpressure maps to an error, never to an
     /// unresolved ticket).
     pub fn submit_ticketed(&self, req: UpdateRequest) -> Result<Ticket> {
-        let (t, n) = ticket();
-        self.submit_inner(req, Some(n))?;
-        Ok(t)
+        Ok(self
+            .submit_inner(req, true)?
+            .expect("ticketed submit returns a ticket"))
     }
 
-    fn submit_inner(&self, req: UpdateRequest, waiter: Option<TicketNotifier>) -> Result<()> {
+    fn submit_inner(&self, req: UpdateRequest, ticketed: bool) -> Result<Option<Ticket>> {
         self.check_writable(1)?;
         let (shard, local) = self.route(req.row)?;
         Counters::inc(&self.metrics.counters.requests_submitted, 1);
         let mut req = req;
         req.row = local;
-        let depth = self.gauge_add(shard, 1);
+        // Tickets ride the shard's wait hub so one publish per seal
+        // wakes the whole waiter batch.
+        let (ticket, waiter) = if ticketed {
+            let (t, w) = ticket_on(Arc::clone(&self.seqs[shard]));
+            (Some(t), Some(w))
+        } else {
+            (None, None)
+        };
         match self.shards[shard].tx.try_send(Command::Submit(req, waiter)) {
             Ok(()) => {
-                self.note_admitted(shard, 1, depth);
-                Ok(())
+                self.note_admitted(shard, 1);
+                Ok(ticket)
             }
-            Err(TrySendError::Full(_)) => {
-                self.gauge_sub(shard, 1);
+            Err(ring::TrySendError::Full(_)) => {
                 Counters::inc(&self.metrics.counters.requests_rejected, 1);
                 Err(anyhow::Error::new(EngineBusy))
             }
-            Err(TrySendError::Disconnected(_)) => {
-                self.gauge_sub(shard, 1);
-                Err(anyhow!("engine is shut down"))
-            }
+            Err(ring::TrySendError::Disconnected(_)) => Err(anyhow!("engine is shut down")),
         }
     }
 
     /// Blocking submit: waits for queue space (no rejection).
     pub fn submit_blocking(&self, req: UpdateRequest) -> Result<()> {
-        self.submit_blocking_inner(req, None).map(|_| ())
+        self.submit_blocking_inner(req, false).map(|_| ())
     }
 
     /// Blocking submit returning a completion [`Ticket`].
     pub fn submit_blocking_ticketed(&self, req: UpdateRequest) -> Result<Ticket> {
-        let (t, n) = ticket();
-        self.submit_blocking_inner(req, Some(n))?;
-        Ok(t)
+        Ok(self
+            .submit_blocking_inner(req, true)?
+            .expect("ticketed submit returns a ticket"))
     }
 
-    fn submit_blocking_inner(
-        &self,
-        req: UpdateRequest,
-        waiter: Option<TicketNotifier>,
-    ) -> Result<()> {
+    fn submit_blocking_inner(&self, req: UpdateRequest, ticketed: bool) -> Result<Option<Ticket>> {
         self.check_writable(1)?;
         let (shard, local) = self.route(req.row)?;
         Counters::inc(&self.metrics.counters.requests_submitted, 1);
         let mut req = req;
         req.row = local;
-        let depth = self.gauge_add(shard, 1);
-        if self.shards[shard].tx.send(Command::Submit(req, waiter)).is_err() {
-            self.gauge_sub(shard, 1);
-            return Err(anyhow!("engine is shut down"));
+        let (ticket, waiter) = if ticketed {
+            let (t, w) = ticket_on(Arc::clone(&self.seqs[shard]));
+            (Some(t), Some(w))
+        } else {
+            (None, None)
+        };
+        match self.shards[shard].tx.send(Command::Submit(req, waiter)) {
+            Ok(report) => {
+                self.note_contention(shard, report);
+                self.note_admitted(shard, 1);
+                Ok(ticket)
+            }
+            Err(_) => Err(anyhow!("engine is shut down")),
         }
-        self.note_admitted(shard, 1, depth);
-        Ok(())
     }
 
     /// Bulk blocking submit: requests are partitioned by shard and sent
@@ -829,21 +854,24 @@ impl UpdateEngine {
             }
             let n = bucket.len() as u64;
             let waiter = if ticketed {
-                let (t, w) = ticket();
+                let (t, w) = ticket_on(Arc::clone(&self.seqs[shard]));
                 tickets.push(t);
                 Some(w)
             } else {
                 None
             };
-            let depth = self.gauge_add(shard, n);
-            if self.shards[shard].tx.send(Command::SubmitMany(bucket, waiter)).is_err() {
-                self.gauge_sub(shard, n);
-                return Err(anyhow!(
-                    "engine shard {shard} is down (earlier chunks of this bulk \
-                     submit may already be admitted — do not retry the batch)"
-                ));
+            match self.shards[shard].tx.send(Command::SubmitMany(bucket, waiter)) {
+                Ok(report) => {
+                    self.note_contention(shard, report);
+                    self.note_admitted(shard, n);
+                }
+                Err(_) => {
+                    return Err(anyhow!(
+                        "engine shard {shard} is down (earlier chunks of this bulk \
+                         submit may already be admitted — do not retry the batch)"
+                    ));
+                }
             }
-            self.note_admitted(shard, n, depth);
         }
         Ok(tickets)
     }
@@ -1026,33 +1054,12 @@ impl UpdateEngine {
             "shard {shard} out of range (shards = {})",
             self.seqs.len()
         );
-        let s = &self.seqs[shard];
-        let mut g = s.state.lock().map_err(|_| anyhow!("seq state poisoned"))?;
-        loop {
-            if g.committed >= seq {
-                return Ok(Some(g.committed));
-            }
-            ensure!(
-                !g.closed,
-                "engine shard {shard} stopped at commit_seq {} (< requested {seq})",
-                g.committed
-            );
-            match deadline {
-                None => {
-                    g = s.cv.wait(g).map_err(|_| anyhow!("seq state poisoned"))?;
-                }
-                Some(d) => {
-                    let now = Instant::now();
-                    if now >= d {
-                        return Ok(None);
-                    }
-                    let (guard, _timed_out) = s
-                        .cv
-                        .wait_timeout(g, d - now)
-                        .map_err(|_| anyhow!("seq state poisoned"))?;
-                    g = guard;
-                }
-            }
+        match self.seqs[shard].wait_seq_until(seq, deadline) {
+            SeqWait::Reached(committed) => Ok(Some(committed)),
+            SeqWait::TimedOut => Ok(None),
+            SeqWait::Closed(committed) => Err(anyhow!(
+                "engine shard {shard} stopped at commit_seq {committed} (< requested {seq})"
+            )),
         }
     }
 
@@ -1063,11 +1070,7 @@ impl UpdateEngine {
             "shard {shard} out of range (shards = {})",
             self.seqs.len()
         );
-        let g = self.seqs[shard]
-            .state
-            .lock()
-            .map_err(|_| anyhow!("seq state poisoned"))?;
-        Ok(g.committed)
+        Ok(self.seqs[shard].committed())
     }
 
     /// Consistent snapshot of all rows. This is one of the two
@@ -1098,6 +1101,7 @@ impl UpdateEngine {
 
     pub fn stats(&self) -> EngineStats {
         let c = self.metrics.counters.snapshot();
+        self.refresh_queue_gauges();
         let shards: Vec<ShardSnapshot> =
             self.metrics.shards.iter().map(|s| s.snapshot()).collect();
         EngineStats {
@@ -1114,6 +1118,10 @@ impl UpdateEngine {
             queue_depth: shards.iter().map(|s| s.queue_depth).sum(),
             tickets_resolved: shards.iter().map(|s| s.tickets_resolved).sum(),
             queries: shards.iter().map(|s| s.queries).sum(),
+            submit_spins: shards.iter().map(|s| s.submit_spins).sum(),
+            park_events: shards.iter().map(|s| s.park_events).sum(),
+            wal_coalesced_writes: shards.iter().map(|s| s.wal_coalesced_writes).sum(),
+            wal_coalesced_frames: shards.iter().map(|s| s.wal_coalesced_frames).sum(),
             shards,
         }
     }
@@ -1141,9 +1149,9 @@ impl UpdateEngine {
             }
         }
         // All workers are joined and `&mut self` excludes concurrent
-        // producers, so any depth left over from the worker-death race
-        // (a send landing between a dead worker's drain and its
-        // receiver drop) is now provably stale — zero the gauges.
+        // producers: any command still in a ring (a send that landed
+        // between the worker's post-death drain and its receiver
+        // drop) is unreachable — zero the depth gauges.
         for sc in &self.metrics.shards {
             sc.queue_depth.store(0, Ordering::Relaxed);
         }
@@ -1174,7 +1182,7 @@ struct ShardWorker<'a> {
     plan: ShardPlan,
     cfg: ShardConfig,
     metrics: &'a EngineMetrics,
-    seq: &'a ShardSeq,
+    seq: &'a WaitHub,
     backend: Box<dyn Backend>,
     batcher: Batcher,
     deadline: Option<Instant>,
@@ -1232,12 +1240,21 @@ impl ShardWorker<'_> {
             listener.on_commit(&commit, batch.kind, &batch.operands)?;
         }
         let modeled_ns_u64 = applied.cost.latency_ns.max(0.0).round() as u64;
-        for waiter in batch.waiters {
+        // Batch-wake: store every waiter's commit with plain atomics
+        // (`resolve_quiet`), then let the ONE `publish` below issue the
+        // seal's single notify_all — the waiters share this shard's
+        // wait hub, so sequence waiters and ticket waiters wake
+        // together instead of paying O(waiters) lock/notify cycles.
+        let waiters = batch.waiters.len() as u64;
+        for mut waiter in batch.waiters {
             sc.commit_wall
                 .record_ns(waiter.submitted_at().elapsed().as_nanos() as u64);
             sc.commit_modeled.record_ns(modeled_ns_u64);
             Counters::inc(&sc.tickets_resolved, 1);
-            waiter.resolve(commit);
+            waiter.resolve_quiet(commit);
+        }
+        if waiters > 0 {
+            sc.wake_batch.record_ns(waiters);
         }
         self.seq.publish(commit_seq);
         Ok(())
@@ -1329,7 +1346,7 @@ impl ShardWorker<'_> {
         }
     }
 
-    fn run(&mut self, rx: &Receiver<Command>) -> Result<()> {
+    fn run(&mut self, rx: &RingReceiver<Command>) -> Result<()> {
         ensure!(
             self.backend.rows() == self.plan.rows,
             "backend rows {} != shard rows {} (shard {} of {})",
@@ -1360,6 +1377,15 @@ impl ShardWorker<'_> {
                     listener.on_barrier()?;
                 }
             }
+            // Burst boundary: about to wait for work with an empty
+            // queue — let the listener flush anything it staged
+            // opportunistically (the WAL's coalesced write buffer), so
+            // cross-seal coalescing never holds frames past the burst.
+            if rx.is_empty() {
+                if let Some(listener) = &mut self.listener {
+                    listener.on_quiescent()?;
+                }
+            }
             let wake = match (
                 self.deadline,
                 self.listener.as_ref().and_then(|l| l.flush_due()),
@@ -1375,8 +1401,8 @@ impl ShardWorker<'_> {
                     }
                     match rx.recv_timeout(d - now) {
                         Ok(c) => c,
-                        Err(RecvTimeoutError::Timeout) => continue,
-                        Err(RecvTimeoutError::Disconnected) => break,
+                        Err(ring::RecvTimeoutError::Timeout) => continue,
+                        Err(ring::RecvTimeoutError::Disconnected) => break,
                     }
                 }
                 None => match rx.recv() {
@@ -1387,7 +1413,6 @@ impl ShardWorker<'_> {
 
             match cmd {
                 Command::Submit(req, waiter) => {
-                    shard_counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
                     if self.batcher.pending_rows() == 0 {
                         self.deadline = Some(Instant::now() + self.cfg.seal_deadline);
                     }
@@ -1401,9 +1426,6 @@ impl ShardWorker<'_> {
                     }
                 }
                 Command::SubmitMany(reqs, mut waiter) => {
-                    shard_counters
-                        .queue_depth
-                        .fetch_sub(reqs.len() as u64, Ordering::Relaxed);
                     let last = reqs.len().saturating_sub(1);
                     for (i, req) in reqs.into_iter().enumerate() {
                         // The chunk waiter acks the LAST request.
@@ -1531,10 +1553,10 @@ impl ShardWorker<'_> {
 fn worker_loop(
     plan: ShardPlan,
     cfg: ShardConfig,
-    rx: Receiver<Command>,
+    rx: RingReceiver<Command>,
     metrics: Arc<EngineMetrics>,
     factory: Arc<BackendFactory>,
-    seq: Arc<ShardSeq>,
+    seq: Arc<WaitHub>,
     name_tx: SyncSender<Result<&'static str>>,
     mut init: WorkerInit,
 ) -> Result<()> {
@@ -1600,28 +1622,13 @@ fn worker_loop(
     // Wake any `wait_seq` caller: no further commits will arrive.
     seq.close();
 
-    // Narrow the depth-gauge error window when the worker dies early
-    // (backend fault, rows mismatch): decrement for every queued
-    // submit this worker will never process. Producers whose send
-    // fails after the receiver drops roll their own increment back; a
-    // send that lands between this drain and the receiver drop leaks
-    // transiently and is zeroed by `shutdown_inner` after joins.
-    // Dropped Submit commands drop their ticket notifiers, which wakes
-    // the waiters with an error.
-    let shard_counters = &metrics.shards[plan.shard];
-    while let Ok(cmd) = rx.try_recv() {
-        match cmd {
-            Command::Submit(_, _) => {
-                shard_counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
-            }
-            Command::SubmitMany(reqs, _) => {
-                shard_counters
-                    .queue_depth
-                    .fetch_sub(reqs.len() as u64, Ordering::Relaxed);
-            }
-            _ => {}
-        }
-    }
+    // Drain whatever was queued when the worker died (backend fault,
+    // rows mismatch): dropping a Submit/SubmitMany here drops its
+    // ticket notifier, which wakes the waiter with an error, and
+    // dropping a reply sender fails its caller's recv — nothing
+    // hangs. The depth gauge is derived from ring occupancy, so the
+    // drain itself brings it back to zero.
+    while rx.try_recv().is_ok() {}
     result
 }
 
@@ -2212,6 +2219,141 @@ mod tests {
         // Engine still healthy.
         e.submit_blocking(UpdateRequest::add(255, 2)).unwrap();
         assert_eq!(e.read(255).unwrap(), 2);
+        e.shutdown().unwrap();
+    }
+
+    /// A [`FastBackend`] whose applies sleep, so admission queues
+    /// reliably fill under test load.
+    struct SlowBackend {
+        inner: FastBackend,
+        apply_delay: Duration,
+    }
+
+    impl crate::coordinator::Backend for SlowBackend {
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+        fn rows(&self) -> usize {
+            self.inner.rows()
+        }
+        fn q(&self) -> usize {
+            self.inner.q()
+        }
+        fn apply(
+            &mut self,
+            kind: BatchKind,
+            operands: &[u32],
+        ) -> Result<crate::coordinator::AppliedBatch> {
+            std::thread::sleep(self.apply_delay);
+            self.inner.apply(kind, operands)
+        }
+        fn read_row(&mut self, row: usize) -> Result<u32> {
+            self.inner.read_row(row)
+        }
+        fn write_row(&mut self, row: usize, value: u32) -> Result<()> {
+            self.inner.write_row(row, value)
+        }
+        fn snapshot(&mut self) -> Result<Vec<u32>> {
+            self.inner.snapshot()
+        }
+    }
+
+    /// Regression for the queue-gauge overcount race: the old gauge
+    /// was raised BEFORE the send, so a rejected non-blocking submit
+    /// racing an admitted one could push `queue_high_water` past
+    /// `queue_cap`. The gauge is now derived from ring occupancy,
+    /// which the admission CAS bounds at the cap — hammer the queue
+    /// with racing producers and pin `high_water <= queue_cap`.
+    #[test]
+    fn queue_high_water_never_exceeds_cap() {
+        let mut cfg = EngineConfig::new(128, 16);
+        cfg.queue_cap = 4;
+        cfg.seal_at_rows = Some(1); // every request seals → slow applies back up the queue
+        let e = Arc::new(
+            UpdateEngine::start(cfg, |p: &ShardPlan| {
+                Ok(Box::new(SlowBackend {
+                    inner: FastBackend::with_rows(p.rows, p.q),
+                    apply_delay: Duration::from_micros(200),
+                }) as Box<dyn Backend>)
+            })
+            .unwrap(),
+        );
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let e = Arc::clone(&e);
+                std::thread::spawn(move || {
+                    let mut rejected = 0u64;
+                    for i in 0..500usize {
+                        if e.submit(UpdateRequest::add((p * 31 + i) % 128, 1)).is_err() {
+                            rejected += 1;
+                        }
+                    }
+                    rejected
+                })
+            })
+            .collect();
+        let rejected: u64 = producers.into_iter().map(|h| h.join().unwrap()).sum();
+        let s = e.stats();
+        for sc in &s.shards {
+            assert!(
+                sc.queue_high_water <= 4,
+                "high_water {} exceeded queue_cap 4",
+                sc.queue_high_water
+            );
+        }
+        // With a 4-deep queue and 200 µs applies, rejections are
+        // effectively certain; the accounting must agree either way.
+        assert_eq!(s.rejected, rejected);
+        Arc::try_unwrap(e).ok().expect("sole owner").shutdown().unwrap();
+    }
+
+    /// Blocking submits against a full ring must do observable
+    /// slow-path work (spin and/or park) and report it through the
+    /// contention counters.
+    #[test]
+    fn blocking_submit_records_contention_counters() {
+        let mut cfg = EngineConfig::new(128, 16);
+        cfg.queue_cap = 1;
+        cfg.seal_at_rows = Some(1);
+        let e = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(SlowBackend {
+                inner: FastBackend::with_rows(p.rows, p.q),
+                apply_delay: Duration::from_millis(1),
+            }) as Box<dyn Backend>)
+        })
+        .unwrap();
+        for i in 0..20usize {
+            e.submit_blocking(UpdateRequest::add(i % 128, 1)).unwrap();
+        }
+        let s = e.stats();
+        assert!(
+            s.submit_spins + s.park_events > 0,
+            "a 1-deep ring with 1 ms applies must force spins or parks"
+        );
+        e.shutdown().unwrap();
+    }
+
+    /// The wake-batch histogram records how many ticket waiters each
+    /// seal resolved with its single notify_all.
+    #[test]
+    fn wake_batch_histogram_counts_waiters_per_seal() {
+        let mut cfg = EngineConfig::new(128, 16);
+        cfg.seal_at_rows = None;
+        cfg.seal_deadline = Duration::from_secs(3600);
+        let e = UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)) as Box<dyn Backend>)
+        })
+        .unwrap();
+        let tickets: Vec<_> = (0..4)
+            .map(|r| e.submit_blocking_ticketed(UpdateRequest::add(r, 1)).unwrap())
+            .collect();
+        e.drain_shard(0).unwrap();
+        for t in &tickets {
+            t.wait().unwrap();
+        }
+        let s = e.stats();
+        assert_eq!(s.shards[0].wake_batch.count, 1, "one seal, one wake batch");
+        assert_eq!(s.shards[0].wake_batch.max_ns, 4, "the seal woke all 4 waiters");
         e.shutdown().unwrap();
     }
 }

@@ -21,7 +21,26 @@
 //!   batch; the shard worker resolves it after the backend apply.
 //!   Dropping an unresolved notifier (worker death, rejected command)
 //!   wakes the waiter with an error — a ticket can never hang.
+//!
+//! ## Batch-wake via a shared epoch hub
+//!
+//! Tickets used to own a private `Mutex+Condvar` pair each, so a seal
+//! resolving N waiters paid N lock/notify cycles. Now a ticket is a
+//! lock-free `(state: AtomicU8, commit: UnsafeCell<Commit>)` cell
+//! whose *wake medium* is a shared [`WaitHub`] — the same per-shard
+//! hub that publishes the commit epoch (`commit_seq` watermark). The
+//! worker resolves all of a seal's waiters with plain atomic stores
+//! ([`TicketNotifier::resolve_quiet`]) and then issues **one**
+//! `publish + notify_all` on the hub, waking sequence waiters and
+//! ticket waiters together. Hot-path waits don't touch the hub mutex
+//! at all: `wait`/`wait_timeout` first poll the ticket's atomic state
+//! and only park on the hub condvar when the commit hasn't landed. A
+//! standalone [`ticket`] pair (no engine involved) carries its own
+//! private hub, so the public API is unchanged.
 
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -187,19 +206,147 @@ pub struct Commit {
     pub banks_active: usize,
 }
 
-#[derive(Debug)]
-enum TicketSlot {
-    Pending,
-    Done(Commit),
-    /// The notifier was dropped without resolving: the batch (or the
-    /// command carrying the request) died before the backend applied.
-    Dropped,
+/// Outcome of a [`WaitHub::wait_seq_until`] sequence wait.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SeqWait {
+    /// The watermark reached the requested sequence; carries the
+    /// watermark observed.
+    Reached(u64),
+    /// The deadline elapsed first.
+    TimedOut,
+    /// The hub closed (worker exited) below the requested sequence;
+    /// carries the final watermark.
+    Closed(u64),
 }
+
+/// Per-shard commit-epoch hub: one `(AtomicU64, Condvar)` shared by
+/// every waiter attached to the shard — commit-sequence waiters
+/// (`wait_seq`, drains, read-your-writes) and ticket waiters alike.
+/// The shard worker publishes each seal's `commit_seq` here with a
+/// single `notify_all`, amortizing the wake across the whole waiter
+/// batch.
+///
+/// Ordering guarantee: the worker stores every ticket state
+/// (`Release`) *before* `publish`, and `publish` bumps the epoch and
+/// brackets `notify_all` with the hub mutex. A waiter that re-checks
+/// its predicate under the hub mutex therefore either sees the new
+/// state or is registered on the condvar before the notify — a wake
+/// can never be lost between the poll and the park.
+#[derive(Debug)]
+pub(crate) struct WaitHub {
+    /// Highest published commit sequence (the shard's commit epoch).
+    committed: AtomicU64,
+    /// Set when the shard worker exits; waiters below the final
+    /// watermark must error instead of waiting forever.
+    closed: AtomicBool,
+    m: Mutex<()>,
+    cv: Condvar,
+}
+
+impl WaitHub {
+    pub(crate) fn new() -> Self {
+        WaitHub {
+            committed: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+            m: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Highest commit sequence published so far.
+    pub(crate) fn committed(&self) -> u64 {
+        self.committed.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Publish a new watermark and wake every waiter once. Sequences
+    /// only move forward (`fetch_max`), so late publishes can't
+    /// regress the epoch.
+    pub(crate) fn publish(&self, seq: u64) {
+        self.committed.fetch_max(seq, Ordering::AcqRel);
+        self.wake_all();
+    }
+
+    /// Mark the hub closed (worker exit) and release every waiter.
+    pub(crate) fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.wake_all();
+    }
+
+    /// Wake all parked waiters without changing any state — used by
+    /// ticket resolution/drop so state stores published before this
+    /// call become visible to woken waiters.
+    pub(crate) fn wake_all(&self) {
+        // The empty lock/unlock bracket orders this notify against a
+        // waiter that checked its predicate but hasn't parked yet.
+        drop(self.m.lock().expect("wait hub mutex poisoned"));
+        self.cv.notify_all();
+    }
+
+    /// Block until the watermark reaches `seq`, the deadline passes,
+    /// or the hub closes.
+    pub(crate) fn wait_seq_until(&self, seq: u64, deadline: Option<Instant>) -> SeqWait {
+        loop {
+            let c = self.committed();
+            if c >= seq {
+                return SeqWait::Reached(c);
+            }
+            if self.is_closed() {
+                return SeqWait::Closed(c);
+            }
+            let guard = self.m.lock().expect("wait hub mutex poisoned");
+            // Re-check under the hub mutex (see the ordering note on
+            // the type).
+            let c = self.committed();
+            if c >= seq {
+                return SeqWait::Reached(c);
+            }
+            if self.is_closed() {
+                return SeqWait::Closed(c);
+            }
+            match deadline {
+                None => drop(self.cv.wait(guard).expect("wait hub mutex poisoned")),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return SeqWait::TimedOut;
+                    }
+                    drop(self.cv.wait_timeout(guard, d - now).expect("wait hub mutex poisoned"));
+                }
+            }
+        }
+    }
+}
+
+const TICKET_PENDING: u8 = 0;
+const TICKET_DONE: u8 = 1;
+/// The notifier was dropped without resolving: the batch (or the
+/// command carrying the request) died before the backend applied.
+const TICKET_DROPPED: u8 = 2;
 
 #[derive(Debug)]
 struct TicketShared {
-    slot: Mutex<TicketSlot>,
-    cv: Condvar,
+    /// TICKET_PENDING → TICKET_DONE | TICKET_DROPPED, written once by
+    /// the single notifier owner with Release; readers load Acquire
+    /// and only touch `commit` after observing TICKET_DONE.
+    state: AtomicU8,
+    commit: UnsafeCell<MaybeUninit<Commit>>,
+    hub: Arc<WaitHub>,
+}
+
+// The commit cell is written exactly once (by the notifier, before
+// its Release store of TICKET_DONE) and read only after an Acquire
+// load observes TICKET_DONE — classic one-shot publication.
+unsafe impl Send for TicketShared {}
+unsafe impl Sync for TicketShared {}
+
+impl TicketShared {
+    fn read_commit(&self) -> Commit {
+        unsafe { (*self.commit.get()).assume_init() }
+    }
 }
 
 /// Waiter half of a completion ticket (see the module docs).
@@ -227,39 +374,44 @@ impl Ticket {
     }
 
     /// Shared wait loop: `deadline = None` blocks until resolution.
+    /// Polls the ticket's atomic state first; parks on the shared hub
+    /// condvar only while still pending.
     fn wait_until(&self, deadline: Option<Instant>) -> Result<Option<Commit>> {
-        let mut slot = self
-            .shared
-            .slot
-            .lock()
-            .map_err(|_| anyhow!("ticket state poisoned"))?;
         loop {
-            match *slot {
-                TicketSlot::Done(c) => return Ok(Some(c)),
-                TicketSlot::Dropped => {
+            match self.shared.state.load(Ordering::Acquire) {
+                TICKET_DONE => return Ok(Some(self.shared.read_commit())),
+                TICKET_DROPPED => {
                     bail!("ticket dropped: the engine never committed the request's batch")
                 }
-                TicketSlot::Pending => match deadline {
-                    None => {
-                        slot = self
-                            .shared
-                            .cv
-                            .wait(slot)
-                            .map_err(|_| anyhow!("ticket state poisoned"))?;
+                _ => {}
+            }
+            let hub = &self.shared.hub;
+            let guard = hub.m.lock().map_err(|_| anyhow!("ticket state poisoned"))?;
+            // Re-check under the hub mutex: a resolver that stored
+            // state before our lock is seen here; one that stores
+            // after will take the mutex before notifying.
+            match self.shared.state.load(Ordering::Acquire) {
+                TICKET_DONE => return Ok(Some(self.shared.read_commit())),
+                TICKET_DROPPED => {
+                    bail!("ticket dropped: the engine never committed the request's batch")
+                }
+                _ => {}
+            }
+            match deadline {
+                None => {
+                    drop(hub.cv.wait(guard).map_err(|_| anyhow!("ticket state poisoned"))?);
+                }
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Ok(None);
                     }
-                    Some(d) => {
-                        let now = Instant::now();
-                        if now >= d {
-                            return Ok(None);
-                        }
-                        let (guard, _timed_out) = self
-                            .shared
-                            .cv
-                            .wait_timeout(slot, d - now)
-                            .map_err(|_| anyhow!("ticket state poisoned"))?;
-                        slot = guard;
-                    }
-                },
+                    drop(
+                        hub.cv
+                            .wait_timeout(guard, d - now)
+                            .map_err(|_| anyhow!("ticket state poisoned"))?,
+                    );
+                }
             }
         }
     }
@@ -267,19 +419,15 @@ impl Ticket {
     /// Non-blocking probe: `Some(commit)` once resolved, `None` while
     /// the batch is still open or in flight.
     pub fn try_get(&self) -> Option<Commit> {
-        match *self.shared.slot.lock().ok()? {
-            TicketSlot::Done(c) => Some(c),
+        match self.shared.state.load(Ordering::Acquire) {
+            TICKET_DONE => Some(self.shared.read_commit()),
             _ => None,
         }
     }
 
     /// Has the ticket reached a terminal state (committed or dropped)?
     pub fn is_resolved(&self) -> bool {
-        self.shared
-            .slot
-            .lock()
-            .map(|s| !matches!(*s, TicketSlot::Pending))
-            .unwrap_or(true)
+        self.shared.state.load(Ordering::Acquire) != TICKET_PENDING
     }
 }
 
@@ -303,11 +451,20 @@ impl TicketNotifier {
     /// Resolve the ticket with its batch's commit metadata. Consumes
     /// the notifier, so a ticket resolves exactly once.
     pub fn resolve(mut self, commit: Commit) {
-        if let Ok(mut slot) = self.shared.slot.lock() {
-            *slot = TicketSlot::Done(commit);
+        self.resolve_quiet(commit);
+        self.shared.hub.wake_all();
+    }
+
+    /// Store the commit without waking anybody — the shard worker's
+    /// batch-wake path: resolve every waiter of a seal quietly, then
+    /// wake the shared hub once via [`WaitHub::publish`].
+    pub(crate) fn resolve_quiet(&mut self, commit: Commit) {
+        if self.resolved {
+            return;
         }
+        unsafe { (*self.shared.commit.get()).write(commit) };
+        self.shared.state.store(TICKET_DONE, Ordering::Release);
         self.resolved = true;
-        self.shared.cv.notify_all();
     }
 }
 
@@ -316,21 +473,24 @@ impl Drop for TicketNotifier {
         if self.resolved {
             return;
         }
-        if let Ok(mut slot) = self.shared.slot.lock() {
-            if matches!(*slot, TicketSlot::Pending) {
-                *slot = TicketSlot::Dropped;
-            }
-        }
-        self.shared.cv.notify_all();
+        self.shared.state.store(TICKET_DROPPED, Ordering::Release);
+        self.shared.hub.wake_all();
     }
 }
 
-/// Create a connected (waiter, resolver) ticket pair. The submit
-/// timestamp is taken now.
+/// Create a connected (waiter, resolver) ticket pair with a private
+/// wake hub. The submit timestamp is taken now.
 pub fn ticket() -> (Ticket, TicketNotifier) {
+    ticket_on(Arc::new(WaitHub::new()))
+}
+
+/// [`ticket`] attached to an existing hub — the engine passes each
+/// shard's hub so one seal's `publish` wakes the whole waiter batch.
+pub(crate) fn ticket_on(hub: Arc<WaitHub>) -> (Ticket, TicketNotifier) {
     let shared = Arc::new(TicketShared {
-        slot: Mutex::new(TicketSlot::Pending),
-        cv: Condvar::new(),
+        state: AtomicU8::new(TICKET_PENDING),
+        commit: UnsafeCell::new(MaybeUninit::uninit()),
+        hub,
     });
     (
         Ticket { shared: Arc::clone(&shared) },
@@ -432,6 +592,52 @@ mod tests {
         });
         assert_eq!(t.wait().unwrap().commit_seq, 3);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn batch_wake_resolves_many_tickets_with_one_publish() {
+        // The worker path: resolve_quiet every waiter, then one
+        // hub.publish — every waiter must observe its commit.
+        let hub = Arc::new(WaitHub::new());
+        let pairs: Vec<_> = (0..16).map(|_| ticket_on(Arc::clone(&hub))).collect();
+        let mut notifiers = Vec::new();
+        let mut tickets = Vec::new();
+        for (t, n) in pairs {
+            tickets.push(t);
+            notifiers.push(n);
+        }
+        let waiters: Vec<_> = tickets
+            .into_iter()
+            .map(|t| std::thread::spawn(move || t.wait().map(|c| c.commit_seq)))
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        for mut n in notifiers {
+            n.resolve_quiet(demo_commit(11));
+        }
+        hub.publish(11);
+        for w in waiters {
+            assert_eq!(w.join().unwrap().unwrap(), 11);
+        }
+        assert_eq!(hub.committed(), 11);
+    }
+
+    #[test]
+    fn wait_hub_sequence_waits() {
+        let hub = Arc::new(WaitHub::new());
+        assert_eq!(
+            hub.wait_seq_until(1, Some(Instant::now() + std::time::Duration::from_millis(5))),
+            SeqWait::TimedOut
+        );
+        hub.publish(3);
+        assert_eq!(hub.wait_seq_until(2, None), SeqWait::Reached(3));
+        // Publishes never regress the epoch.
+        hub.publish(1);
+        assert_eq!(hub.committed(), 3);
+        let h2 = Arc::clone(&hub);
+        let waiter = std::thread::spawn(move || h2.wait_seq_until(10, None));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        hub.close();
+        assert_eq!(waiter.join().unwrap(), SeqWait::Closed(3));
     }
 
     #[test]

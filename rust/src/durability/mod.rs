@@ -64,7 +64,10 @@ pub use recover::{
 };
 pub use segment::{DirLock, Manifest};
 pub use snapshot::{ShardMark, Snapshot};
-pub use wal::{FsyncPolicy, SegmentReader, ShardWal, WalPayload, WalRecord};
+pub use wal::{
+    load_segment_stats, FsyncPolicy, SegmentReader, SegmentWriteStats, ShardWal, WalPayload,
+    WalRecord,
+};
 
 /// Default segment-rotation threshold (bytes).
 pub const DEFAULT_SEGMENT_BYTES: u64 = 4 * 1024 * 1024;

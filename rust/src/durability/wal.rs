@@ -20,12 +20,23 @@
 //! ever logs; it is the recovery watermark (commit_seq alone cannot
 //! order writes between two batch commits).
 //!
-//! ## Group-commit alignment
+//! ## Group-commit alignment and cross-seal coalescing
 //!
 //! One engine seal = one [`ShardWal::append_batch`] = one frame encoded
-//! into a reusable buffer, ONE `write_all`, and at most one fsync
-//! (per the [`FsyncPolicy`]) — durability amortizes exactly like the
-//! group commit it rides; there is never a syscall per request.
+//! into a reusable buffer and at most one fsync (per the
+//! [`FsyncPolicy`]) — durability amortizes exactly like the group
+//! commit it rides; there is never a syscall per request.
+//!
+//! Under the `interval` and `off` policies the appender goes further
+//! and coalesces *across* seals: frames accumulate in a staging buffer
+//! and ship in ONE `write_all` when the buffer hits
+//! [`COALESCE_MAX_BYTES`] / [`COALESCE_MAX_FRAMES`], when the worker
+//! goes quiescent (its queue drained), at every barrier / rotation /
+//! fsync, and on drop. The bytes that reach the file are identical to
+//! the unstaged stream — same frames, same order — so recovery is
+//! unchanged; only the syscall count drops. The `always` policy
+//! bypasses staging entirely: its contract is "frame on disk before
+//! the ticket resolves", which leaves nothing to coalesce with.
 //!
 //! ## Torn tails
 //!
@@ -60,6 +71,12 @@ pub const MAX_PAYLOAD: u32 = 1 << 26; // 64 MiB
 /// Fixed payload bytes before the ops array.
 const PAYLOAD_FIXED: usize = 1 + 4 + 8 + 8 + 1 + 1 + 4;
 
+/// Staged bytes that force a coalesced `write_all` (cross-seal
+/// coalescing under the `interval` / `off` fsync policies).
+pub const COALESCE_MAX_BYTES: usize = 256 * 1024;
+/// Staged frames that force a coalesced `write_all`.
+pub const COALESCE_MAX_FRAMES: u64 = 64;
+
 /// When to fsync the shard's segment file.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FsyncPolicy {
@@ -72,8 +89,12 @@ pub enum FsyncPolicy {
     /// still prefix-consistent.
     Interval(Duration),
     /// Never fsync explicitly; the OS flushes on its own schedule.
-    /// Survives process kills (data reached the kernel), not power
-    /// loss.
+    /// Frames reach the kernel at the coalescing window's edge (caps,
+    /// quiescence, barriers) rather than per record, so a process kill
+    /// can additionally lose the staged window — at most
+    /// [`COALESCE_MAX_FRAMES`] frames / [`COALESCE_MAX_BYTES`] bytes
+    /// of the active burst. Recovery stays prefix-consistent either
+    /// way. Does not survive power loss.
     Off,
 }
 
@@ -426,10 +447,82 @@ fn read_full(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<usize> {
 // Appender
 // ---------------------------------------------------------------------------
 
+/// Per-segment write statistics kept in the shard directory's sidecar
+/// (`coalesce.json`) so `fast wal inspect` can report the coalescing
+/// ratio (frames/write, bytes/write) long after the appender is gone.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentWriteStats {
+    /// `write_all` calls that landed in this segment.
+    pub writes: u64,
+    /// Frames those writes delivered.
+    pub frames: u64,
+    /// Bytes those writes delivered (frame bytes, header excluded).
+    pub bytes: u64,
+    /// Writes that carried ≥ 2 coalesced frames.
+    pub coalesced_writes: u64,
+    /// Frames delivered by those coalesced writes.
+    pub coalesced_frames: u64,
+}
+
+/// Sidecar file name inside each shard directory. Deliberately not
+/// `seg-*.wal`, so [`segment::list_segments`] (and therefore recovery)
+/// never sees it.
+pub const STATS_FILE: &str = "coalesce.json";
+
+fn stats_path(root: &Path, shard: usize) -> PathBuf {
+    segment::shard_dir(root, shard).join(STATS_FILE)
+}
+
+/// Load the per-segment write-stats sidecar. A missing file is an
+/// empty map (older logs have none); a corrupt one is an error the
+/// caller may treat as advisory — the sidecar is diagnostics, never
+/// recovery input.
+pub fn load_segment_stats(
+    root: &Path,
+    shard: usize,
+) -> Result<std::collections::BTreeMap<u64, SegmentWriteStats>> {
+    use crate::util::json::Json;
+    let path = stats_path(root, shard);
+    let mut out = std::collections::BTreeMap::new();
+    if !path.is_file() {
+        return Ok(out);
+    }
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(text.trim())
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    ensure!(
+        j.get("wal_stats").and_then(Json::as_str) == Some("fast-wal-v1"),
+        "{} is not a fast-wal-v1 stats sidecar",
+        path.display()
+    );
+    let Some(segs) = j.get("segments").and_then(Json::as_obj) else {
+        bail!("{}: no segments object", path.display());
+    };
+    for (hex, v) in segs {
+        let Ok(first_lsn) = u64::from_str_radix(hex, 16) else {
+            continue;
+        };
+        let field = |k: &str| v.get(k).and_then(Json::as_usize).unwrap_or(0) as u64;
+        out.insert(
+            first_lsn,
+            SegmentWriteStats {
+                writes: field("writes"),
+                frames: field("frames"),
+                bytes: field("bytes"),
+                coalesced_writes: field("coalesced_writes"),
+                coalesced_frames: field("coalesced_frames"),
+            },
+        );
+    }
+    Ok(out)
+}
+
 /// The per-shard WAL appender: owned by the shard's worker thread,
 /// driven through the engine's [`CommitListener`] hook so every record
 /// lands *after* the backend apply and *before* any completion ticket
-/// resolves. Rotation, fsync policy and metrics are internal.
+/// resolves. Rotation, fsync policy, cross-seal coalescing and metrics
+/// are internal.
 pub struct ShardWal {
     root: PathBuf,
     shard: usize,
@@ -437,12 +530,22 @@ pub struct ShardWal {
     fsync: FsyncPolicy,
     segment_bytes: u64,
     file: File,
+    /// Bytes accounted to the current segment, staged frames included
+    /// (staging changes when bytes hit the file, not which file).
     seg_bytes: u64,
     next_lsn: u64,
     last_sync: Instant,
     dirty: bool,
     /// Reusable frame-encode buffer (no allocation on the hot path).
     buf: Vec<u8>,
+    /// Cross-seal staging buffer: encoded frames waiting for one
+    /// coalesced `write_all`. Always empty under `FsyncPolicy::Always`.
+    staged: Vec<u8>,
+    staged_frames: u64,
+    /// First LSN of the current segment (its sidecar stats key).
+    seg_first_lsn: u64,
+    seg_stats: SegmentWriteStats,
+    stats_map: std::collections::BTreeMap<u64, SegmentWriteStats>,
     metrics: Option<Arc<ShardCounters>>,
 }
 
@@ -465,13 +568,13 @@ impl ShardWal {
         std::fs::create_dir_all(&sdir)
             .with_context(|| format!("creating {}", sdir.display()))?;
         let segs = segment::list_segments(root, shard)?;
-        let (file, seg_bytes) = match segs.last() {
+        let (file, seg_bytes, seg_first_lsn) = match segs.last() {
             Some(last) if last.bytes >= SEGMENT_HEADER_LEN => {
                 let f = OpenOptions::new()
                     .append(true)
                     .open(&last.path)
                     .with_context(|| format!("opening {} for append", last.path.display()))?;
-                (f, last.bytes)
+                (f, last.bytes, last.first_lsn)
             }
             _ => {
                 // No segment yet (or a headerless stub recovery chose
@@ -479,9 +582,14 @@ impl ShardWal {
                 if let Some(stub) = segs.last() {
                     let _ = std::fs::remove_file(&stub.path);
                 }
-                Self::create_segment(root, shard, next_lsn)?
+                let (f, b) = Self::create_segment(root, shard, next_lsn)?;
+                (f, b, next_lsn)
             }
         };
+        // The sidecar is diagnostics; a corrupt one must never block a
+        // durable start — start its stats over instead.
+        let stats_map = load_segment_stats(root, shard).unwrap_or_default();
+        let seg_stats = stats_map.get(&seg_first_lsn).copied().unwrap_or_default();
         Ok(ShardWal {
             root: root.to_path_buf(),
             shard,
@@ -494,6 +602,11 @@ impl ShardWal {
             last_sync: Instant::now(),
             dirty: false,
             buf: Vec::with_capacity(4096),
+            staged: Vec::new(),
+            staged_frames: 0,
+            seg_first_lsn,
+            seg_stats,
+            stats_map,
             metrics,
         })
     }
@@ -570,12 +683,11 @@ impl ShardWal {
         self.write_frame(frame_len as u64)
     }
 
-    /// Ship the frame sitting in `self.buf`: one `write_all`, LSN
-    /// bump, counters, and the policy-driven fsync.
+    /// Ship (or stage) the frame sitting in `self.buf`: LSN bump and
+    /// counters happen here — staging changes when bytes hit the file,
+    /// never their content or order — then the policy decides between
+    /// a direct `write_all` (+fsync) and the coalescing buffer.
     fn write_frame(&mut self, frame_len: u64) -> Result<()> {
-        self.file
-            .write_all(&self.buf)
-            .context("appending WAL frame")?;
         self.seg_bytes += frame_len;
         self.next_lsn += 1;
         self.dirty = true;
@@ -584,20 +696,74 @@ impl ShardWal {
             Counters::inc(&m.wal_bytes, frame_len);
         }
         match self.fsync {
-            FsyncPolicy::Always => self.sync()?,
+            FsyncPolicy::Always => {
+                // Per-record fsync leaves nothing to coalesce with:
+                // staging would only delay the promised sync.
+                self.file
+                    .write_all(&self.buf)
+                    .context("appending WAL frame")?;
+                self.note_write(1, frame_len);
+                self.sync()?;
+            }
             FsyncPolicy::Interval(iv) => {
+                self.stage_frame()?;
                 if self.last_sync.elapsed() >= iv {
                     self.sync()?;
                 }
             }
-            FsyncPolicy::Off => {}
+            FsyncPolicy::Off => self.stage_frame()?,
         }
         Ok(())
     }
 
+    /// Move the encoded frame into the staging buffer; flush it as one
+    /// coalesced `write_all` once either cap trips.
+    fn stage_frame(&mut self) -> Result<()> {
+        self.staged.extend_from_slice(&self.buf);
+        self.staged_frames += 1;
+        if self.staged.len() >= COALESCE_MAX_BYTES || self.staged_frames >= COALESCE_MAX_FRAMES {
+            self.flush_staged()?;
+        }
+        Ok(())
+    }
+
+    /// Ship every staged frame in one `write_all`. No-op when nothing
+    /// is staged.
+    pub fn flush_staged(&mut self) -> Result<()> {
+        if self.staged_frames == 0 {
+            return Ok(());
+        }
+        self.file
+            .write_all(&self.staged)
+            .context("appending coalesced WAL frames")?;
+        let frames = self.staged_frames;
+        let bytes = self.staged.len() as u64;
+        self.staged.clear();
+        self.staged_frames = 0;
+        self.note_write(frames, bytes);
+        if frames >= 2 {
+            self.seg_stats.coalesced_writes += 1;
+            self.seg_stats.coalesced_frames += frames;
+            if let Some(m) = &self.metrics {
+                Counters::inc(&m.wal_coalesced_writes, 1);
+                Counters::inc(&m.wal_coalesced_frames, frames);
+            }
+        }
+        Ok(())
+    }
+
+    fn note_write(&mut self, frames: u64, bytes: u64) {
+        self.seg_stats.writes += 1;
+        self.seg_stats.frames += frames;
+        self.seg_stats.bytes += bytes;
+    }
+
     /// Force dirty bytes to disk (barrier semantics: drains, snapshots
-    /// and shutdown call this regardless of policy).
+    /// and shutdown call this regardless of policy). Staged frames are
+    /// flushed first — an fsync of a file the frames never reached
+    /// would be a durability lie.
     pub fn sync(&mut self) -> Result<()> {
+        self.flush_staged()?;
         if !self.dirty {
             return Ok(());
         }
@@ -614,19 +780,48 @@ impl ShardWal {
     }
 
     /// Rotate to a fresh segment once the current one is full. The old
-    /// segment is synced first so rotation never leaves a dirty
-    /// immutable file behind.
+    /// segment is synced first (which also flushes staged frames into
+    /// it — they carry LSNs the old segment's name range owns) so
+    /// rotation never leaves a dirty immutable file behind, and its
+    /// sidecar stats entry is finalized.
     fn maybe_rotate(&mut self) -> Result<()> {
         if self.seg_bytes < self.segment_bytes {
             return Ok(());
         }
         self.sync()?;
+        self.persist_stats()?;
         let (file, seg_bytes) = Self::create_segment(&self.root, self.shard, self.next_lsn)?;
         self.file = file;
         self.seg_bytes = seg_bytes;
+        self.seg_first_lsn = self.next_lsn;
+        self.seg_stats = SegmentWriteStats::default();
         if let Some(m) = &self.metrics {
             Counters::inc(&m.wal_rotations, 1);
         }
+        Ok(())
+    }
+
+    /// Write the per-segment stats sidecar atomically (temp + rename).
+    /// Called at rotation, barriers and drop — not per append.
+    fn persist_stats(&mut self) -> Result<()> {
+        self.stats_map.insert(self.seg_first_lsn, self.seg_stats);
+        let path = stats_path(&self.root, self.shard);
+        let tmp = path.with_extension("json.tmp");
+        let mut s = String::from("{\"wal_stats\":\"fast-wal-v1\",\"segments\":{");
+        for (i, (first_lsn, st)) in self.stats_map.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\"{first_lsn:016x}\":{{\"writes\":{},\"frames\":{},\"bytes\":{},\
+                 \"coalesced_writes\":{},\"coalesced_frames\":{}}}",
+                st.writes, st.frames, st.bytes, st.coalesced_writes, st.coalesced_frames
+            ));
+        }
+        s.push_str("}}\n");
+        std::fs::write(&tmp, s).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {} into place", path.display()))?;
         Ok(())
     }
 }
@@ -634,6 +829,7 @@ impl ShardWal {
 impl Drop for ShardWal {
     fn drop(&mut self) {
         let _ = self.sync();
+        let _ = self.persist_stats();
     }
 }
 
@@ -647,7 +843,15 @@ impl CommitListener for ShardWal {
     }
 
     fn on_barrier(&mut self) -> Result<()> {
-        self.sync()
+        self.sync()?;
+        self.persist_stats()
+    }
+
+    fn on_quiescent(&mut self) -> Result<()> {
+        // The worker's queue just drained: ship the staged frames so
+        // the coalescing window is bounded by the active burst, not by
+        // idle time. fsync pacing stays with the policy.
+        self.flush_staged()
     }
 
     fn flush_due(&self) -> Option<Instant> {
@@ -741,6 +945,171 @@ mod tests {
                 payload: WalPayload::Write { row: g.u32_below(1 << 16), value: g.u32_any() },
             }
         }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let d = std::env::temp_dir()
+            .join(format!("fast-wal-{tag}-{}-{nanos}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn demo_commit(seq: u64) -> Commit {
+        Commit {
+            shard: 0,
+            commit_seq: seq,
+            seal_reason: SealReason::Forced,
+            rows: 1,
+            requests: 1,
+            rows_active: 1,
+            modeled_ns: 0.0,
+            cycles: 0,
+            banks_active: 1,
+        }
+    }
+
+    /// Read every record of shard 0's log back, in order.
+    fn read_all(dir: &Path) -> Vec<WalRecord> {
+        let mut out = Vec::new();
+        for seg in segment::list_segments(dir, 0).unwrap() {
+            let mut r = SegmentReader::open(&seg.path, 0).unwrap();
+            while let Some(rec) = r.next_record() {
+                out.push(rec);
+            }
+            assert!(r.torn().is_none(), "clean log must scan cleanly");
+        }
+        out
+    }
+
+    #[test]
+    fn off_policy_coalesces_frames_and_recovery_sees_them_all() {
+        let dir = tmpdir("coalesce");
+        let m = Arc::new(ShardCounters::default());
+        let mut wal = ShardWal::open(
+            &dir,
+            0,
+            8,
+            1,
+            FsyncPolicy::Off,
+            1 << 20,
+            Some(Arc::clone(&m)),
+        )
+        .unwrap();
+        let n = 10u64;
+        for i in 0..n {
+            wal.append_batch(&demo_commit(i + 1), BatchKind::Add, &[3]).unwrap();
+        }
+        // All frames staged, none on disk yet — the segment is still
+        // just its header.
+        let segs = segment::list_segments(&dir, 0).unwrap();
+        assert_eq!(segs[0].bytes, SEGMENT_HEADER_LEN, "frames must be staged, not written");
+        // A barrier ships them as ONE coalesced write.
+        wal.sync().unwrap();
+        let snap = m.snapshot();
+        assert_eq!(snap.wal_records, n);
+        assert_eq!(snap.wal_coalesced_writes, 1);
+        assert_eq!(snap.wal_coalesced_frames, n);
+        drop(wal);
+        let recs = read_all(&dir);
+        assert_eq!(recs.len(), n as usize, "recovery must see every staged frame");
+        assert_eq!(
+            recs.iter().map(|r| r.lsn).collect::<Vec<_>>(),
+            (1..=n).collect::<Vec<_>>(),
+            "coalescing must not reorder or gap the LSN stream"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn frame_cap_forces_a_flush_mid_burst() {
+        let dir = tmpdir("cap");
+        let m = Arc::new(ShardCounters::default());
+        let mut wal = ShardWal::open(
+            &dir,
+            0,
+            8,
+            1,
+            FsyncPolicy::Off,
+            1 << 20,
+            Some(Arc::clone(&m)),
+        )
+        .unwrap();
+        let n = COALESCE_MAX_FRAMES + 6;
+        for i in 0..n {
+            wal.append_batch(&demo_commit(i + 1), BatchKind::Add, &[3]).unwrap();
+        }
+        // The cap tripped once: exactly COALESCE_MAX_FRAMES frames hit
+        // the file in one write; the remainder are still staged.
+        let snap = m.snapshot();
+        assert_eq!(snap.wal_coalesced_writes, 1);
+        assert_eq!(snap.wal_coalesced_frames, COALESCE_MAX_FRAMES);
+        drop(wal); // drop flushes the tail
+        assert_eq!(read_all(&dir).len(), n as usize);
+        let snap = m.snapshot();
+        assert_eq!(snap.wal_coalesced_writes, 2);
+        assert_eq!(snap.wal_coalesced_frames, n);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn always_policy_never_stages() {
+        let dir = tmpdir("always");
+        let m = Arc::new(ShardCounters::default());
+        let mut wal = ShardWal::open(
+            &dir,
+            0,
+            8,
+            1,
+            FsyncPolicy::Always,
+            1 << 20,
+            Some(Arc::clone(&m)),
+        )
+        .unwrap();
+        for i in 0..5u64 {
+            wal.append_batch(&demo_commit(i + 1), BatchKind::Add, &[3]).unwrap();
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.wal_coalesced_writes, 0, "always-policy frames ship one by one");
+        assert_eq!(snap.wal_fsyncs, 5, "one fsync per record");
+        drop(wal);
+        assert_eq!(read_all(&dir).len(), 5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sidecar_stats_round_trip_and_survive_reopen() {
+        let dir = tmpdir("sidecar");
+        let mut wal =
+            ShardWal::open(&dir, 0, 8, 1, FsyncPolicy::Off, 1 << 20, None).unwrap();
+        for i in 0..4u64 {
+            wal.append_batch(&demo_commit(i + 1), BatchKind::Add, &[3]).unwrap();
+        }
+        let next = wal.next_lsn();
+        drop(wal);
+        let stats = load_segment_stats(&dir, 0).unwrap();
+        let seg = stats.get(&1).copied().unwrap();
+        assert_eq!(seg.frames, 4);
+        assert_eq!(seg.writes, 1, "one coalesced write shipped the burst");
+        assert_eq!(seg.coalesced_writes, 1);
+        assert_eq!(seg.coalesced_frames, 4);
+        assert!(seg.bytes > 0);
+        // Reopen and append more: the same segment's entry accumulates
+        // instead of resetting.
+        let mut wal =
+            ShardWal::open(&dir, 0, 8, next, FsyncPolicy::Off, 1 << 20, None).unwrap();
+        wal.append_batch(&demo_commit(5), BatchKind::Add, &[3]).unwrap();
+        drop(wal);
+        let stats = load_segment_stats(&dir, 0).unwrap();
+        let seg = stats.get(&1).copied().unwrap();
+        assert_eq!(seg.frames, 5);
+        assert_eq!(seg.writes, 2);
+        // The sidecar never pollutes the segment listing.
+        assert_eq!(segment::list_segments(&dir, 0).unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

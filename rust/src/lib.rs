@@ -111,6 +111,7 @@
 pub mod analog;
 pub mod apps;
 pub mod baseline;
+pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod durability;

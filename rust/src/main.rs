@@ -12,6 +12,7 @@ use anyhow::bail;
 
 use fast_sram::apps::trace::{self, state_digest, BackendKind, Trace};
 use fast_sram::apps::trainer::{self, TrainerConfig};
+use fast_sram::bench;
 use fast_sram::cli::{usage, Args};
 use fast_sram::coordinator::{
     BitPlaneBackend, DigitalBackend, EngineConfig, FastBackend, UpdateEngine, XlaBackend,
@@ -49,6 +50,7 @@ fn main() -> Result<()> {
         Some("client") => cmd_client(&args),
         Some("tenant") => cmd_tenant(&args),
         Some("query") => cmd_query(&args),
+        Some("bench") => cmd_bench(&args),
         Some("wal") => cmd_wal(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
@@ -872,6 +874,33 @@ fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fast bench engine [--out PATH]` — the measured-performance
+/// harness: the same `fast_sram::bench` producers × shards grid as
+/// `cargo bench --bench shard_scaling`, writing one
+/// `BENCH_shard_scaling.json` schema from either entry point.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let what = args.positional.first().map(String::as_str).unwrap_or("engine");
+    match what {
+        "engine" => {
+            let cfg = bench::GridConfig::standard();
+            let report = bench::run_engine_grid(&cfg)?;
+            print!("{}", report.render_text());
+            let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+                // Repo root, resolved at compile time — the measured
+                // JSON replaces the committed placeholder in place.
+                PathBuf::from(concat!(
+                    env!("CARGO_MANIFEST_DIR"),
+                    "/../BENCH_shard_scaling.json"
+                ))
+            });
+            report.write_json(&out)?;
+            println!("results written to {}", out.display());
+            Ok(())
+        }
+        other => bail!("unknown bench target {other:?} (try: fast bench engine [--out PATH])"),
+    }
+}
+
 /// `fast wal <inspect|verify|compact|repair|export>` — offline
 /// operations on a WAL directory. The mutating verbs (compact,
 /// repair) take the directory's single-writer lock, so they refuse to
@@ -911,6 +940,28 @@ fn cmd_wal(args: &Args) -> Result<()> {
                     format!("torn tail (shard {})", t.shard),
                     format!("{} @ byte {} ({})", t.segment.display(), t.offset, t.reason),
                 ));
+            }
+            // Per-segment write-coalescing stats from each shard's
+            // sidecar (absent for logs written by older builds).
+            for shard in 0..rep.shards {
+                let stats = durability::load_segment_stats(&dir, shard).unwrap_or_default();
+                for (first_lsn, st) in &stats {
+                    if st.writes == 0 {
+                        continue;
+                    }
+                    rows_txt.push((
+                        format!("shard {shard} seg-{first_lsn:016x}"),
+                        format!(
+                            "{} writes | {:.1} frames/write | {:.0} bytes/write | \
+                             {} coalesced ({} frames)",
+                            st.writes,
+                            st.frames as f64 / st.writes as f64,
+                            st.bytes as f64 / st.writes as f64,
+                            st.coalesced_writes,
+                            st.coalesced_frames,
+                        ),
+                    ));
+                }
             }
             print!("{}", render_table("wal inspect", &rows_txt));
             Ok(())

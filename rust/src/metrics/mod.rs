@@ -107,6 +107,17 @@ pub struct ShardCounters {
     pub tickets_resolved: AtomicU64,
     /// In-array queries this shard's worker answered.
     pub queries: AtomicU64,
+    /// Spin-loop probes blocking submits burned while this shard's
+    /// ring was full (admission contention, cheap path).
+    pub submit_spins: AtomicU64,
+    /// Times a blocking submit exhausted its spin budget and parked
+    /// on the shard's eventcount (admission contention, slow path).
+    pub park_events: AtomicU64,
+    /// Ticket waiters woken per seal (a count histogram riding the
+    /// latency-recorder machinery: "ns" fields hold waiter counts).
+    /// One sample per seal that resolved at least one ticket — the
+    /// mean is the batch-wake amortization factor.
+    pub wake_batch: LatencyRecorder,
     /// Wall-clock query execution latency (one sample per query).
     pub query_wall: LatencyRecorder,
     /// Submit→ticket-resolve latency, wall-clock (one sample per
@@ -127,6 +138,13 @@ pub struct ShardCounters {
     pub wal_rotations: AtomicU64,
     /// fsync call latency histogram (one sample per fsync).
     pub wal_fsync: LatencyRecorder,
+    /// `write_all` calls that delivered ≥ 2 coalesced WAL frames
+    /// (cross-seal write coalescing; zero when durability is off or
+    /// the fsync policy is `always`).
+    pub wal_coalesced_writes: AtomicU64,
+    /// Frames delivered by those coalesced writes (compare against
+    /// `wal_records` for the coalescing ratio).
+    pub wal_coalesced_frames: AtomicU64,
 }
 
 impl ShardCounters {
@@ -159,6 +177,9 @@ impl ShardCounters {
             commit_seq: Counters::get(&self.commit_seq),
             tickets_resolved: Counters::get(&self.tickets_resolved),
             queries: Counters::get(&self.queries),
+            submit_spins: Counters::get(&self.submit_spins),
+            park_events: Counters::get(&self.park_events),
+            wake_batch: self.wake_batch.summary(),
             query_wall: self.query_wall.summary(),
             commit_wall: self.commit_wall.summary(),
             commit_modeled: self.commit_modeled.summary(),
@@ -167,6 +188,8 @@ impl ShardCounters {
             wal_fsyncs: Counters::get(&self.wal_fsyncs),
             wal_rotations: Counters::get(&self.wal_rotations),
             wal_fsync: self.wal_fsync.summary(),
+            wal_coalesced_writes: Counters::get(&self.wal_coalesced_writes),
+            wal_coalesced_frames: Counters::get(&self.wal_coalesced_frames),
         }
     }
 }
@@ -188,6 +211,12 @@ pub struct ShardSnapshot {
     pub tickets_resolved: u64,
     /// In-array queries answered by this shard.
     pub queries: u64,
+    /// Spin probes burned by blocking submits while the ring was full.
+    pub submit_spins: u64,
+    /// Blocking submits that parked after exhausting the spin budget.
+    pub park_events: u64,
+    /// Waiters woken per seal (count histogram: "ns" = waiter counts).
+    pub wake_batch: LatencySummary,
     /// Query execution wall-clock latency (p50/p95/p99).
     pub query_wall: LatencySummary,
     /// Submit→ticket-resolve wall-clock latency (p50/p95/p99).
@@ -204,6 +233,10 @@ pub struct ShardSnapshot {
     pub wal_rotations: u64,
     /// fsync latency histogram (p50/p95/p99).
     pub wal_fsync: LatencySummary,
+    /// `write_all` calls carrying ≥ 2 coalesced WAL frames.
+    pub wal_coalesced_writes: u64,
+    /// Frames delivered by those coalesced writes.
+    pub wal_coalesced_frames: u64,
 }
 
 /// Modeled energy accumulator (fJ) — fed from `energy::Cost` values.

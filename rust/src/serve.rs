@@ -551,7 +551,9 @@ impl Session {
         let (target, event) = match &self.target {
             ServeTarget::Engine(e) => {
                 let cfg = e.config();
-                let event = TraceEvent::parse_line(line, cfg.rows, cfg.q)?;
+                // Canonical lines parse allocation-free; anything else
+                // falls back to the full grammar with identical errors.
+                let event = TraceEvent::parse_line_fast(line, cfg.rows, cfg.q)?;
                 (RouteTarget::Single(Arc::clone(e)), event)
             }
             ServeTarget::Tenants(reg) => {
@@ -1274,9 +1276,11 @@ pub fn stats_json(s: &EngineStats) -> String {
              \"sealed_kind_change\":{},\"sealed_deadline\":{},\"sealed_forced\":{},\
              \"coalesce_hits\":{},\"rows_updated\":{},\"queue_depth\":{},\
              \"queue_high_water\":{},\"commit_seq\":{},\"tickets_resolved\":{},\
-             \"queries\":{},\"query_wall_ns\":{},\
+             \"queries\":{},\"submit_spins\":{},\"park_events\":{},\"wake_batch\":{},\
+             \"query_wall_ns\":{},\
              \"commit_wall_ns\":{},\"commit_modeled_ns\":{},\"wal_records\":{},\
-             \"wal_bytes\":{},\"wal_fsyncs\":{},\"wal_rotations\":{},\"wal_fsync_ns\":{}}}",
+             \"wal_bytes\":{},\"wal_fsyncs\":{},\"wal_rotations\":{},\"wal_fsync_ns\":{},\
+             \"wal_coalesced_writes\":{},\"wal_coalesced_frames\":{}}}",
             sc.requests,
             sc.batches_sealed,
             sc.sealed_full,
@@ -1290,6 +1294,9 @@ pub fn stats_json(s: &EngineStats) -> String {
             sc.commit_seq,
             sc.tickets_resolved,
             sc.queries,
+            sc.submit_spins,
+            sc.park_events,
+            latency_json(&sc.wake_batch),
             latency_json(&sc.query_wall),
             latency_json(&sc.commit_wall),
             latency_json(&sc.commit_modeled),
@@ -1298,6 +1305,8 @@ pub fn stats_json(s: &EngineStats) -> String {
             sc.wal_fsyncs,
             sc.wal_rotations,
             latency_json(&sc.wal_fsync),
+            sc.wal_coalesced_writes,
+            sc.wal_coalesced_frames,
         ));
     }
     let wal_records: u64 = s.shards.iter().map(|sc| sc.wal_records).sum();
@@ -1307,8 +1316,11 @@ pub fn stats_json(s: &EngineStats) -> String {
         "{{\"backend\":\"{}\",\"submitted\":{},\"completed\":{},\"rejected\":{},\
          \"batches\":{},\"rows_updated\":{},\"rows_per_batch\":{:.2},\
          \"modeled_ns\":{:.1},\"modeled_energy_pj\":{:.3},\"queue_depth\":{},\
-         \"tickets_resolved\":{},\"queries\":{},\"wal_records\":{wal_records},\
+         \"tickets_resolved\":{},\"queries\":{},\
+         \"submit_spins\":{},\"park_events\":{},\
+         \"wal_records\":{wal_records},\
          \"wal_bytes\":{wal_bytes},\"wal_fsyncs\":{wal_fsyncs},\
+         \"wal_coalesced_writes\":{},\"wal_coalesced_frames\":{},\
          \"apply_wall_ns\":{},\"shards\":[{}]}}",
         s.backend,
         s.submitted,
@@ -1322,6 +1334,10 @@ pub fn stats_json(s: &EngineStats) -> String {
         s.queue_depth,
         s.tickets_resolved,
         s.queries,
+        s.submit_spins,
+        s.park_events,
+        s.wal_coalesced_writes,
+        s.wal_coalesced_frames,
         latency_json(&s.apply_wall),
         shards
     )
@@ -1933,6 +1949,25 @@ mod tests {
             .and_then(|l| l.get("p99_ns"))
             .and_then(Json::as_usize)
             .is_some());
+        // Contention and coalescing counters: the CI perf-smoke job
+        // greps these keys, so their presence IS the contract.
+        for key in ["submit_spins", "park_events", "wal_coalesced_writes", "wal_coalesced_frames"]
+        {
+            assert!(json.get(key).and_then(Json::as_usize).is_some(), "missing {key}");
+            assert!(shards[0].get(key).and_then(Json::as_usize).is_some(), "missing shard {key}");
+        }
+        // One ticketed commit resolved → exactly one wake-batch sample
+        // somewhere; the histogram's "ns" fields carry waiter counts.
+        let wakes: usize = shards
+            .iter()
+            .map(|sc| {
+                sc.get("wake_batch")
+                    .and_then(|l| l.get("count"))
+                    .and_then(Json::as_usize)
+                    .expect("wake_batch histogram present")
+            })
+            .sum();
+        assert_eq!(wakes, 1);
         drop(s);
         Arc::try_unwrap(e)
             .unwrap_or_else(|_| panic!("sole owner"))

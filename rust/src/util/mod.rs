@@ -5,5 +5,6 @@ pub mod bits;
 pub mod crc32;
 pub mod json;
 pub mod quickprop;
+pub mod ring;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,607 @@
+//! Bounded lock-free MPSC ring — the shard admission queue.
+//!
+//! Replaces the `std::sync::mpsc::sync_channel` each engine shard used
+//! for admission. `sync_channel` takes a mutex on every send *and*
+//! every recv, so under multi-producer load the producers serialize on
+//! the queue lock before they ever reach the shard worker — exactly
+//! the futex-wait pileup the ROADMAP's profiling notes describe. This
+//! ring keeps the hot path to a handful of atomics:
+//!
+//! - **Slot sequence numbers** (Vyukov's bounded-queue scheme): slot
+//!   `i` starts with `seq == i`; a producer that claimed position `t`
+//!   publishes by storing `seq = t + 1`, and the consumer at position
+//!   `h` consumes when it reads `seq == h + 1`, releasing the slot for
+//!   the next lap with `seq = h + buf_len`. The sequence is both the
+//!   "is this slot ready" flag and the ABA guard.
+//! - **Claim by CAS on `tail`**, admission-checked first: a producer
+//!   loads `tail` then `head` and refuses (`Full`) when
+//!   `tail - head >= cap`. The CAS serializes claims and a stale
+//!   `head` can only *underestimate* free space, so occupancy never
+//!   exceeds `cap` — `len()` is therefore a safe source for the
+//!   engine's queue-depth / high-water gauges (the old raise-before-
+//!   send gauge could transiently overcount past `cap` on a rejected
+//!   submit).
+//! - **Spin-then-park** blocking: `send`/`recv` spin a short budget of
+//!   `spin_loop` hints, then register as a sleeper on an eventcount
+//!   (sleeper counter + `Mutex<()>` + `Condvar`, touched only on the
+//!   slow path) and wait. The waker checks the sleeper count *after*
+//!   its publish and brackets `notify_all` with the mutex, which —
+//!   with SeqCst on the sleeper counter — makes lost wakeups
+//!   impossible; a bounded `wait_timeout` backstops the reasoning
+//!   anyway. `send` reports how many spins/parks it took so the
+//!   engine can export contention counters (`submit_spins`,
+//!   `park_events`) without a profiler.
+//!
+//! Disconnect semantics mirror `mpsc`: when every `RingSender` is
+//! dropped, `recv` drains what's buffered and then reports
+//! `Disconnected`; when the `RingReceiver` is dropped, sends fail
+//! (parked producers are woken) and buffered items are dropped with
+//! the shared state.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Spins a producer/consumer burns before parking. Small: if the
+/// queue stays full/empty for longer than a few dozen probes, the
+/// other side is busy for a "long" time (an apply, an fsync) and
+/// sleeping is cheaper than burning the core.
+const SPIN_LIMIT: u32 = 64;
+
+/// Parked waits are bounded so a (theoretical) missed wake degrades
+/// to a poll, never a hang.
+const PARK_BACKSTOP: Duration = Duration::from_millis(5);
+
+/// How much slow-path work a blocking `send` performed, for the
+/// engine's contention counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SendReport {
+    /// `spin_loop` probes taken while the ring was full.
+    pub spins: u64,
+    /// Times the producer gave up spinning and parked on the
+    /// eventcount.
+    pub parks: u64,
+}
+
+/// `try_send` failure: the value is handed back in both cases.
+#[derive(Debug)]
+pub enum TrySendError<T> {
+    /// Ring at capacity — the caller's typed-backpressure case.
+    Full(T),
+    /// Receiver dropped; the value can never be consumed.
+    Disconnected(T),
+}
+
+/// Blocking `send` failure: receiver gone.
+#[derive(Debug)]
+pub struct SendError<T>(pub T);
+
+/// `try_recv` failure.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    Empty,
+    Disconnected,
+}
+
+/// `recv_timeout` failure.
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    Timeout,
+    Disconnected,
+}
+
+/// `recv` failure: all senders gone and the ring is drained.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+struct Slot<T> {
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// One side of the eventcount: sleeper count + mutex/condvar used
+/// only when somebody actually has to sleep.
+struct Park {
+    sleepers: AtomicUsize,
+    m: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Park {
+    fn new() -> Self {
+        Park { sleepers: AtomicUsize::new(0), m: Mutex::new(()), cv: Condvar::new() }
+    }
+
+    /// Wake all sleepers if there are any. The empty lock/unlock
+    /// bracket orders the notify against a sleeper that has
+    /// registered but not yet started waiting.
+    fn wake(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            drop(self.m.lock().expect("ring park mutex poisoned"));
+            self.cv.notify_all();
+        }
+    }
+}
+
+struct Shared<T> {
+    buf: Box<[Slot<T>]>,
+    mask: usize,
+    cap: usize,
+    /// Next position a producer will claim. Producers CAS this.
+    tail: AtomicUsize,
+    /// Next position the consumer will take. Consumer-only writes.
+    head: AtomicUsize,
+    senders: AtomicUsize,
+    rx_alive: AtomicBool,
+    /// Producers park here when the ring is full.
+    not_full: Park,
+    /// The consumer parks here when the ring is empty.
+    not_empty: Park,
+}
+
+// Slots hold `UnsafeCell`s but access is disciplined by the sequence
+// protocol: a slot's value is written by exactly the producer that
+// claimed its position and read by the consumer only after the
+// producer's Release store of the matching sequence.
+unsafe impl<T: Send> Send for Shared<T> {}
+unsafe impl<T: Send> Sync for Shared<T> {}
+
+impl<T> Shared<T> {
+    fn len(&self) -> usize {
+        // Loading head after tail can only shrink the answer; the
+        // admission check keeps tail - head <= cap, so the result is
+        // in [0, cap] whenever the loads are close in time.
+        let tail = self.tail.load(Ordering::Acquire);
+        let head = self.head.load(Ordering::Acquire);
+        tail.wrapping_sub(head).min(self.cap)
+    }
+
+    fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
+        if !self.rx_alive.load(Ordering::Acquire) {
+            return Err(TrySendError::Disconnected(v));
+        }
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            if tail.wrapping_sub(head) >= self.cap {
+                // A racing consumer may free a slot right after this
+                // load — that's fine: Full is allowed to be
+                // conservative, overshooting cap is not.
+                return Err(TrySendError::Full(v));
+            }
+            match self.tail.compare_exchange_weak(
+                tail,
+                tail.wrapping_add(1),
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    let slot = &self.buf[tail & self.mask];
+                    unsafe { (*slot.val.get()).write(v) };
+                    slot.seq.store(tail.wrapping_add(1), Ordering::Release);
+                    self.not_empty.wake();
+                    return Ok(());
+                }
+                Err(now) => tail = now,
+            }
+        }
+    }
+
+    /// Consumer-only. Returns `Empty` both when the ring is truly
+    /// empty and when the head slot is claimed but not yet published
+    /// (the producer is between its CAS and its seq store).
+    fn try_recv(&self) -> Result<T, TryRecvError> {
+        let head = self.head.load(Ordering::Relaxed);
+        let slot = &self.buf[head & self.mask];
+        if slot.seq.load(Ordering::Acquire) == head.wrapping_add(1) {
+            let v = unsafe { (*slot.val.get()).assume_init_read() };
+            // Release the slot for the producers' next lap…
+            slot.seq.store(head.wrapping_add(self.buf.len()), Ordering::Release);
+            // …and the position for the admission check.
+            self.head.store(head.wrapping_add(1), Ordering::Release);
+            self.not_full.wake();
+            return Ok(v);
+        }
+        if self.senders.load(Ordering::SeqCst) == 0
+            && self.tail.load(Ordering::Acquire) == head
+        {
+            return Err(TryRecvError::Disconnected);
+        }
+        Err(TryRecvError::Empty)
+    }
+}
+
+impl<T> Drop for Shared<T> {
+    fn drop(&mut self) {
+        // Both sides are gone: every claimed slot is also published
+        // (no producer can be mid-push), so drop what was buffered.
+        let head = *self.head.get_mut();
+        let tail = *self.tail.get_mut();
+        let mut pos = head;
+        while pos != tail {
+            let slot = &mut self.buf[pos & self.mask];
+            if *slot.seq.get_mut() == pos.wrapping_add(1) {
+                unsafe { (*slot.val.get()).assume_init_drop() };
+            }
+            pos = pos.wrapping_add(1);
+        }
+    }
+}
+
+/// Cloneable producer handle.
+pub struct RingSender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Single-consumer handle (not cloneable).
+pub struct RingReceiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a bounded MPSC ring admitting at most `cap` items
+/// (`cap >= 1`; the backing buffer is the next power of two).
+pub fn channel<T>(cap: usize) -> (RingSender<T>, RingReceiver<T>) {
+    assert!(cap >= 1, "ring capacity must be at least 1");
+    let buf_len = cap.next_power_of_two();
+    let buf: Box<[Slot<T>]> = (0..buf_len)
+        .map(|i| Slot { seq: AtomicUsize::new(i), val: UnsafeCell::new(MaybeUninit::uninit()) })
+        .collect();
+    let shared = Arc::new(Shared {
+        buf,
+        mask: buf_len - 1,
+        cap,
+        tail: AtomicUsize::new(0),
+        head: AtomicUsize::new(0),
+        senders: AtomicUsize::new(1),
+        rx_alive: AtomicBool::new(true),
+        not_full: Park::new(),
+        not_empty: Park::new(),
+    });
+    (RingSender { shared: Arc::clone(&shared) }, RingReceiver { shared })
+}
+
+impl<T> Clone for RingSender<T> {
+    fn clone(&self) -> Self {
+        self.shared.senders.fetch_add(1, Ordering::SeqCst);
+        RingSender { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T> Drop for RingSender<T> {
+    fn drop(&mut self) {
+        if self.shared.senders.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Last sender: a blocked consumer must wake to observe
+            // the disconnect.
+            self.shared.not_empty.wake();
+        }
+    }
+}
+
+impl<T> Drop for RingReceiver<T> {
+    fn drop(&mut self) {
+        self.shared.rx_alive.store(false, Ordering::Release);
+        // Parked producers must wake to observe the disconnect.
+        self.shared.not_full.wake();
+    }
+}
+
+impl<T> RingSender<T> {
+    /// Non-blocking send — the engine's typed-backpressure path.
+    pub fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
+        self.shared.try_send(v)
+    }
+
+    /// Blocking send: spin a short budget, then park until the
+    /// consumer frees a slot. Reports the slow-path work done so the
+    /// caller can account contention.
+    pub fn send(&self, v: T) -> Result<SendReport, SendError<T>> {
+        let mut report = SendReport::default();
+        let mut pending = v;
+        let mut spin_budget = SPIN_LIMIT;
+        loop {
+            match self.shared.try_send(pending) {
+                Ok(()) => return Ok(report),
+                Err(TrySendError::Disconnected(v)) => return Err(SendError(v)),
+                Err(TrySendError::Full(v)) => {
+                    pending = v;
+                    if spin_budget > 0 {
+                        spin_budget -= 1;
+                        report.spins += 1;
+                        std::hint::spin_loop();
+                        continue;
+                    }
+                    report.parks += 1;
+                    let s = &self.shared;
+                    let guard = s.not_full.m.lock().expect("ring park mutex poisoned");
+                    s.not_full.sleepers.fetch_add(1, Ordering::SeqCst);
+                    // Re-check under sleeper registration: a consumer
+                    // that freed a slot before seeing us registered
+                    // is caught here instead of being waited on.
+                    let still_full = s.len() >= s.cap && s.rx_alive.load(Ordering::Acquire);
+                    if still_full {
+                        let (guard, _) = s
+                            .not_full
+                            .cv
+                            .wait_timeout(guard, PARK_BACKSTOP)
+                            .expect("ring park mutex poisoned");
+                        drop(guard);
+                    } else {
+                        drop(guard);
+                    }
+                    s.not_full.sleepers.fetch_sub(1, Ordering::SeqCst);
+                    spin_budget = SPIN_LIMIT;
+                }
+            }
+        }
+    }
+
+    /// Items currently admitted (≤ `cap` by construction) — the
+    /// engine's queue-depth gauge source.
+    pub fn len(&self) -> usize {
+        self.shared.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shared.cap
+    }
+
+    /// True once the receiver is gone (the worker exited).
+    pub fn is_disconnected(&self) -> bool {
+        !self.shared.rx_alive.load(Ordering::Acquire)
+    }
+}
+
+impl<T> RingReceiver<T> {
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        self.shared.try_recv()
+    }
+
+    /// Blocking receive; `Err(RecvError)` once every sender is gone
+    /// and the buffer is drained.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        loop {
+            match self.recv_deadline(None) {
+                Ok(v) => return Ok(v),
+                Err(RecvTimeoutError::Disconnected) => return Err(RecvError),
+                Err(RecvTimeoutError::Timeout) => unreachable!("no deadline"),
+            }
+        }
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        self.recv_deadline(Some(Instant::now() + timeout))
+    }
+
+    fn recv_deadline(&self, deadline: Option<Instant>) -> Result<T, RecvTimeoutError> {
+        let s = &self.shared;
+        let mut spin_budget = SPIN_LIMIT;
+        loop {
+            match s.try_recv() {
+                Ok(v) => return Ok(v),
+                Err(TryRecvError::Disconnected) => return Err(RecvTimeoutError::Disconnected),
+                Err(TryRecvError::Empty) => {}
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Err(RecvTimeoutError::Timeout);
+                }
+            }
+            if spin_budget > 0 {
+                spin_budget -= 1;
+                std::hint::spin_loop();
+                continue;
+            }
+            let guard = s.not_empty.m.lock().expect("ring park mutex poisoned");
+            s.not_empty.sleepers.fetch_add(1, Ordering::SeqCst);
+            let empty = s.tail.load(Ordering::Acquire) == s.head.load(Ordering::Acquire)
+                && s.senders.load(Ordering::SeqCst) > 0;
+            if empty {
+                let wait = match deadline {
+                    Some(d) => d.saturating_duration_since(Instant::now()).min(PARK_BACKSTOP),
+                    None => PARK_BACKSTOP,
+                };
+                let (guard, _) = s
+                    .not_empty
+                    .cv
+                    .wait_timeout(guard, wait)
+                    .expect("ring park mutex poisoned");
+                drop(guard);
+            } else {
+                drop(guard);
+            }
+            s.not_empty.sleepers.fetch_sub(1, Ordering::SeqCst);
+            spin_budget = SPIN_LIMIT;
+        }
+    }
+
+    /// Items currently buffered.
+    pub fn len(&self) -> usize {
+        self.shared.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::atomic::AtomicU64;
+    use std::thread;
+
+    #[test]
+    fn fifo_single_producer() {
+        let (tx, rx) = channel::<u32>(4);
+        for i in 0..4 {
+            tx.try_send(i).unwrap();
+        }
+        assert!(matches!(tx.try_send(99), Err(TrySendError::Full(99))));
+        assert_eq!(tx.len(), 4);
+        for i in 0..4 {
+            assert_eq!(rx.try_recv().unwrap(), i);
+        }
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        assert_eq!(tx.len(), 0);
+    }
+
+    #[test]
+    fn capacity_is_exact_not_power_of_two() {
+        // cap 5 rides an 8-slot buffer but must admit exactly 5.
+        let (tx, rx) = channel::<u32>(5);
+        for i in 0..5 {
+            tx.try_send(i).unwrap();
+        }
+        assert!(matches!(tx.try_send(5), Err(TrySendError::Full(5))));
+        rx.try_recv().unwrap();
+        tx.try_send(5).unwrap();
+        assert_eq!(tx.len(), 5);
+    }
+
+    #[test]
+    fn wraps_many_laps() {
+        let (tx, rx) = channel::<usize>(3);
+        for i in 0..1000 {
+            tx.try_send(i).unwrap();
+            assert_eq!(rx.try_recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn recv_disconnects_after_drain() {
+        let (tx, rx) = channel::<u32>(4);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.try_recv().unwrap(), 1);
+        assert_eq!(rx.try_recv().unwrap(), 2);
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn send_fails_after_receiver_drop() {
+        let (tx, rx) = channel::<u32>(4);
+        drop(rx);
+        assert!(matches!(tx.try_send(7), Err(TrySendError::Disconnected(7))));
+        assert!(matches!(tx.send(8), Err(SendError(8))));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let (tx, rx) = channel::<u32>(4);
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(5)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        tx.try_send(42).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(100)).unwrap(), 42);
+    }
+
+    #[test]
+    fn blocking_send_parks_until_consumer_frees_a_slot() {
+        let (tx, rx) = channel::<u32>(1);
+        tx.try_send(0).unwrap();
+        let t = thread::spawn(move || {
+            let report = tx.send(1).unwrap();
+            (tx, report)
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.try_recv().unwrap(), 0);
+        let (_tx, report) = t.join().unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)).unwrap(), 1);
+        // Full for ~20ms: the producer must have done slow-path work.
+        assert!(report.spins + report.parks > 0);
+    }
+
+    #[test]
+    fn drops_buffered_items_exactly_once() {
+        static DROPS: AtomicU64 = AtomicU64::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let (tx, rx) = channel::<D>(8);
+        for _ in 0..5 {
+            tx.try_send(D).unwrap();
+        }
+        drop(rx.try_recv().unwrap()); // 1 consumed drop
+        drop(tx);
+        drop(rx); // 4 buffered drops
+        assert_eq!(DROPS.load(Ordering::SeqCst), 5);
+    }
+
+    /// Multi-producer stress: per-producer FIFO, no loss, no
+    /// duplication, across repeated full/empty transitions.
+    #[test]
+    fn multi_producer_fifo_no_loss_no_dup() {
+        for &producers in &[1usize, 2, 4, 8] {
+            let per = 2000usize;
+            let (tx, rx) = channel::<(usize, usize)>(8); // tiny: forces full/empty churn
+            let handles: Vec<_> = (0..producers)
+                .map(|p| {
+                    let tx = tx.clone();
+                    thread::spawn(move || {
+                        let mut rng = Rng::new(0x5eed ^ p as u64);
+                        for i in 0..per {
+                            tx.send((p, i)).unwrap();
+                            if rng.next_u64() % 7 == 0 {
+                                thread::yield_now();
+                            }
+                        }
+                    })
+                })
+                .collect();
+            drop(tx);
+            let mut next = vec![0usize; producers];
+            let mut total = 0usize;
+            loop {
+                match rx.recv() {
+                    Ok((p, i)) => {
+                        assert_eq!(i, next[p], "producer {p} out of order");
+                        next[p] += 1;
+                        total += 1;
+                    }
+                    Err(RecvError) => break,
+                }
+            }
+            assert_eq!(total, producers * per);
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+    }
+
+    /// Parked producers racing a receiver drop must all disconnect,
+    /// never hang.
+    #[test]
+    fn parked_producers_survive_racing_shutdown() {
+        for trial in 0..20u64 {
+            let (tx, rx) = channel::<u64>(1);
+            tx.try_send(0).unwrap(); // full: all senders will park
+            let handles: Vec<_> = (0..4)
+                .map(|p| {
+                    let tx = tx.clone();
+                    thread::spawn(move || tx.send(trial * 10 + p))
+                })
+                .collect();
+            thread::sleep(Duration::from_micros(50 * (trial % 5)));
+            drop(rx);
+            for h in handles {
+                // Each blocked sender either slipped in before the
+                // drop (impossible here: cap 1, never drained) or
+                // gets its value back.
+                assert!(h.join().unwrap().is_err());
+            }
+        }
+    }
+}

@@ -164,6 +164,92 @@ fn tickets_resolve_once_in_order_with_read_your_writes() {
     }
 }
 
+/// Epoch-waiter exactly-once property (PR-9): tickets are sequence
+/// waiters on a shared per-shard commit-epoch hub, resolved by one
+/// publish + wake per seal. Hammer `wait_timeout` polling loops
+/// against racing batch-wakes: every ticket must yield exactly one
+/// commit — never zero (lost wake), never a second distinct one
+/// (double resolve) — and timeouts that fire mid-race must be
+/// harmless retries. Also pins the wake-batch histogram: one drain of
+/// N pending tickets is one histogram sample of N waiters.
+#[test]
+fn epoch_waiters_resolve_exactly_once_under_timeout_races() {
+    let rows = 64usize;
+    let q = 8usize;
+    let shards = 4usize;
+    for trial in 0..20u64 {
+        let mut cfg = EngineConfig::sharded(rows, q, shards);
+        // Only explicit drains seal, so the drainer thread fully
+        // controls when the batch-wake fires.
+        cfg.seal_at_rows = None;
+        cfg.seal_deadline = Duration::from_secs(3600);
+        let engine = UpdateEngine::start(cfg, |plan: &fast_sram::coordinator::ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+        })
+        .unwrap();
+
+        // A burst of tickets on every shard (rows 0..16 cover all 4).
+        let per_burst = 16usize;
+        let tickets: Vec<_> = (0..per_burst)
+            .map(|i| {
+                engine
+                    .submit_blocking_ticketed(UpdateRequest::add(i, 1 + (i as u32 & 3)))
+                    .unwrap()
+            })
+            .collect();
+
+        std::thread::scope(|scope| {
+            // One waiter per ticket, spinning on short timeouts — the
+            // worst case for a lost-wake bug: waiters constantly
+            // leaving and re-entering the hub's wait queue while the
+            // single publish lands.
+            let mut waiters = Vec::new();
+            for (i, tk) in tickets.iter().enumerate() {
+                let mut rng = Rng::new(0xE70C4 + trial * 131 + i as u64);
+                waiters.push(scope.spawn(move || {
+                    let mut resolutions = Vec::new();
+                    loop {
+                        let timeout = Duration::from_micros(rng.below(200));
+                        match tk.wait_timeout(timeout).unwrap() {
+                            Some(commit) => {
+                                resolutions.push(commit);
+                                break;
+                            }
+                            None => continue,
+                        }
+                    }
+                    // Terminal and stable: later waits agree.
+                    assert!(tk.is_resolved());
+                    assert_eq!(tk.wait().unwrap(), resolutions[0]);
+                    assert_eq!(tk.wait_timeout(Duration::ZERO).unwrap(), Some(resolutions[0]));
+                    resolutions[0]
+                }));
+            }
+            // Let the waiters pile onto the hub, then fire the wakes.
+            std::thread::sleep(Duration::from_micros(200 * (trial % 4)));
+            engine.drain_all().unwrap();
+            for w in waiters {
+                w.join().unwrap();
+            }
+        });
+
+        let s = engine.stats();
+        assert_eq!(s.tickets_resolved, per_burst as u64, "trial {trial}");
+        let mut wake_samples = 0u64;
+        let mut wake_waiters = 0u64;
+        for sc in &s.shards {
+            wake_samples += sc.wake_batch.count;
+            wake_waiters += (sc.wake_batch.mean_ns * sc.wake_batch.count as f64).round() as u64;
+        }
+        // One drain, 4 shards, each resolving its 4 tickets in one
+        // seal: exactly one wake-batch sample per shard, and the
+        // histogram's waiter total equals the tickets resolved.
+        assert_eq!(wake_samples, shards as u64, "trial {trial}");
+        assert_eq!(wake_waiters, per_burst as u64, "trial {trial}");
+        engine.shutdown().unwrap();
+    }
+}
+
 /// Regression (satellite 1): a read drains only the owning shard's
 /// pending entry — other shards' batchers stay untouched, and even the
 /// owning shard keeps its batch open when the read's row is not
