@@ -1,6 +1,8 @@
-//! Measured-performance harness behind `fast bench engine` and the
-//! `cargo bench --bench shard_scaling` target — one implementation,
-//! two entry points, one `BENCH_shard_scaling.json` schema.
+//! Measured-performance harnesses behind `fast bench`: the shard
+//! scaling grid (`fast bench engine` / `cargo bench --bench
+//! shard_scaling` → `BENCH_shard_scaling.json`) and the telemetry
+//! overhead A/B (`fast bench telemetry` →
+//! `BENCH_telemetry_overhead.json`).
 //!
 //! ## What it measures
 //!
@@ -332,6 +334,255 @@ impl GridReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Telemetry overhead: the always-on claim, measured
+// ---------------------------------------------------------------------------
+
+/// Shape and load for the telemetry-overhead A/B run
+/// (`fast bench telemetry` → `BENCH_telemetry_overhead.json`): one
+/// representative contended cell run twice — telemetry on at the
+/// default sample rate, then hard-disabled — under the identical
+/// seeded offered load.
+#[derive(Debug, Clone)]
+pub struct OverheadConfig {
+    pub rows: usize,
+    pub q: usize,
+    pub producers: usize,
+    pub shards: usize,
+    pub updates_per_producer: usize,
+    pub chunk: usize,
+    pub seed: u64,
+    /// Sample rate for the tracing-on leg (power of two).
+    pub sample_rate: u64,
+    pub smoke: bool,
+}
+
+impl OverheadConfig {
+    /// The shipped A/B cell: 4 producers × 4 shards — enough
+    /// contention that a lock or allocation on the submit path would
+    /// show up — at the default 1-in-64 sample rate.
+    /// `FAST_BENCH_SMOKE=1` shrinks the load for CI smoke runs.
+    pub fn standard() -> OverheadConfig {
+        let smoke = std::env::var("FAST_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+        OverheadConfig {
+            rows: 1024,
+            q: 16,
+            producers: 4,
+            shards: 4,
+            updates_per_producer: if smoke { 10_000 } else { 200_000 },
+            chunk: 512,
+            seed: 7701,
+            sample_rate: 64,
+            smoke,
+        }
+    }
+}
+
+/// One leg (tracing on or off) of the A/B run.
+#[derive(Debug, Clone)]
+pub struct OverheadLeg {
+    pub enabled: bool,
+    pub wall_ms: f64,
+    pub ops_per_sec: f64,
+    /// Per-chunk `submit_many` wall latency.
+    pub submit_wall: LatencySummary,
+    pub spans_sampled: u64,
+    pub spans_dropped: u64,
+}
+
+/// The A/B result: identical offered load, telemetry on vs off.
+#[derive(Debug, Clone)]
+pub struct OverheadReport {
+    pub cfg: OverheadConfig,
+    pub host_parallelism: usize,
+    pub on: OverheadLeg,
+    pub off: OverheadLeg,
+}
+
+fn run_overhead_leg(cfg: &OverheadConfig, enabled: bool) -> Result<OverheadLeg> {
+    let mut ecfg = EngineConfig::sharded(cfg.rows, cfg.q, cfg.shards);
+    ecfg.seal_deadline = Duration::from_micros(200);
+    ecfg.queue_cap = 16_384;
+    ecfg.telemetry.enabled = enabled;
+    ecfg.telemetry.sample_rate = cfg.sample_rate;
+    let engine = UpdateEngine::start(ecfg, |plan| {
+        Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+    })?;
+
+    let streams: Vec<Vec<UpdateRequest>> = (0..cfg.producers)
+        .map(|t| {
+            let mut rng = Rng::new(cfg.seed + t as u64);
+            (0..cfg.updates_per_producer)
+                .map(|_| {
+                    UpdateRequest::add(
+                        rng.below(cfg.rows as u64) as usize,
+                        1 + rng.below(99) as u32,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+
+    let submit_hist = Mutex::new(LatencyHistogram::new());
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for stream in &streams {
+            let engine = &engine;
+            let submit_hist = &submit_hist;
+            scope.spawn(move || {
+                let mut local = LatencyHistogram::new();
+                for chunk in stream.chunks(cfg.chunk) {
+                    let c0 = Instant::now();
+                    engine.submit_many(chunk.to_vec()).expect("bench submit");
+                    local.record(c0.elapsed().as_nanos() as u64);
+                }
+                submit_hist.lock().expect("bench hist").merge(&local);
+            });
+        }
+    });
+    engine.drain_all()?;
+    let wall = t0.elapsed();
+
+    let s = engine.stats();
+    let total = (cfg.producers * cfg.updates_per_producer) as u64;
+    anyhow::ensure!(s.completed == total, "offered {total}, completed {}", s.completed);
+    let tel = engine.telemetry().snapshot();
+    let hist = submit_hist.into_inner().expect("bench hist");
+    let out = OverheadLeg {
+        enabled,
+        wall_ms: wall.as_secs_f64() * 1e3,
+        ops_per_sec: total as f64 / wall.as_secs_f64(),
+        submit_wall: LatencySummary {
+            count: hist.count(),
+            mean_ns: hist.mean_ns(),
+            p50_ns: hist.percentile_ns(50.0),
+            p95_ns: hist.percentile_ns(95.0),
+            p99_ns: hist.percentile_ns(99.0),
+            max_ns: hist.max_ns(),
+        },
+        spans_sampled: tel.spans_sampled,
+        spans_dropped: tel.spans_dropped,
+    };
+    engine.shutdown()?;
+    Ok(out)
+}
+
+/// Run the A/B: tracing-on first, then tracing-off, identical streams.
+/// Full mode gives each leg one unmeasured warm-up pass.
+pub fn run_telemetry_overhead(cfg: &OverheadConfig) -> Result<OverheadReport> {
+    let host_parallelism =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if !cfg.smoke {
+        let _ = run_overhead_leg(cfg, true)?;
+        let _ = run_overhead_leg(cfg, false)?;
+    }
+    let on = run_overhead_leg(cfg, true)?;
+    let off = run_overhead_leg(cfg, false)?;
+    Ok(OverheadReport { cfg: cfg.clone(), host_parallelism, on, off })
+}
+
+impl OverheadReport {
+    /// Tracing-on throughput as a fraction of tracing-off: 1.0 = free,
+    /// 0.95 = tracing costs 5% of throughput.
+    pub fn on_off_ratio(&self) -> f64 {
+        if self.off.ops_per_sec > 0.0 { self.on.ops_per_sec / self.off.ops_per_sec } else { 0.0 }
+    }
+
+    /// Whether the ≤ budget claim is judgeable here (a smoke run
+    /// measures wiring, not performance).
+    pub fn judgeable(&self) -> bool {
+        !self.cfg.smoke && self.host_parallelism >= self.cfg.producers + self.cfg.shards
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "telemetry overhead: {} producers x {} shards, {} updates/producer, \
+             sample 1/{} (host parallelism {}{})\n",
+            self.cfg.producers,
+            self.cfg.shards,
+            self.cfg.updates_per_producer,
+            self.cfg.sample_rate,
+            self.host_parallelism,
+            if self.cfg.smoke { ", smoke" } else { "" },
+        ));
+        for leg in [&self.on, &self.off] {
+            out.push_str(&format!(
+                "tracing {}: {:>9.1} ms | {:>11.0} ops/s | submit p50/p99 {}/{} ns \
+                 | {} span(s) sampled, {} dropped\n",
+                if leg.enabled { "on " } else { "off" },
+                leg.wall_ms,
+                leg.ops_per_sec,
+                leg.submit_wall.p50_ns,
+                leg.submit_wall.p99_ns,
+                leg.spans_sampled,
+                leg.spans_dropped,
+            ));
+        }
+        out.push_str(&format!(
+            "on/off throughput ratio: {:.3}{}\n",
+            self.on_off_ratio(),
+            if self.judgeable() { "" } else { " (recorded, not judged: smoke or small host)" }
+        ));
+        out
+    }
+
+    /// The `BENCH_telemetry_overhead.json` document. `"status":
+    /// "measured"` is the CI grep contract — only a real run says it.
+    pub fn render_json(&self) -> String {
+        let leg = |l: &OverheadLeg| {
+            format!(
+                "{{\"enabled\": {}, \"wall_ms\": {:.3}, \"ops_per_sec\": {:.0}, \
+                 \"submit_wall_ns\": {{\"count\": {}, \"mean\": {:.1}, \"p50\": {}, \
+                 \"p95\": {}, \"p99\": {}, \"max\": {}}}, \
+                 \"spans_sampled\": {}, \"spans_dropped\": {}}}",
+                l.enabled,
+                l.wall_ms,
+                l.ops_per_sec,
+                l.submit_wall.count,
+                l.submit_wall.mean_ns,
+                l.submit_wall.p50_ns,
+                l.submit_wall.p95_ns,
+                l.submit_wall.p99_ns,
+                l.submit_wall.max_ns,
+                l.spans_sampled,
+                l.spans_dropped,
+            )
+        };
+        format!(
+            "{{\n  \"bench\": \"telemetry_overhead\",\n  \"status\": \"measured\",\n  \
+             \"mode\": \"{}\",\n  \"rows\": {},\n  \"q\": {},\n  \"producers\": {},\n  \
+             \"shards\": {},\n  \"updates_per_producer\": {},\n  \"chunk\": {},\n  \
+             \"seed\": {},\n  \"sample_rate\": {},\n  \"host_parallelism\": {},\n  \
+             \"tracing_on\": {},\n  \"tracing_off\": {},\n  \
+             \"acceptance\": {{\"criterion\": \"ops_per_sec(tracing on) >= \
+             0.95x ops_per_sec(tracing off)\", \"on_off_ratio\": {:.4}, \"pass\": {}}}\n}}\n",
+            if self.cfg.smoke { "smoke" } else { "full" },
+            self.cfg.rows,
+            self.cfg.q,
+            self.cfg.producers,
+            self.cfg.shards,
+            self.cfg.updates_per_producer,
+            self.cfg.chunk,
+            self.cfg.seed,
+            self.cfg.sample_rate,
+            self.host_parallelism,
+            leg(&self.on),
+            leg(&self.off),
+            self.on_off_ratio(),
+            if self.judgeable() { (self.on_off_ratio() >= 0.95).to_string() } else { "null".to_string() },
+        )
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        use anyhow::Context;
+        std::fs::write(path, self.render_json())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,5 +640,56 @@ mod tests {
         assert!(acc.get("ratio").is_some());
         // Deterministic seed: two renders of the same report agree.
         assert_eq!(text, rep.render_json());
+    }
+
+    fn tiny_overhead_cfg() -> OverheadConfig {
+        OverheadConfig {
+            rows: 64,
+            q: 8,
+            producers: 2,
+            shards: 2,
+            updates_per_producer: 400,
+            chunk: 64,
+            seed: 11,
+            sample_rate: 4,
+            smoke: true,
+        }
+    }
+
+    #[test]
+    fn overhead_ab_runs_both_legs_under_identical_load() {
+        let rep = run_telemetry_overhead(&tiny_overhead_cfg()).unwrap();
+        assert!(rep.on.enabled && !rep.off.enabled);
+        assert!(rep.on.ops_per_sec > 0.0 && rep.off.ops_per_sec > 0.0);
+        assert!(rep.on.spans_sampled > 0, "rate 1/4 over 800 updates must sample spans");
+        assert_eq!(rep.off.spans_sampled, 0, "the off leg must not sample at all");
+        assert!(rep.on_off_ratio() > 0.0);
+        assert!(!rep.judgeable(), "smoke mode is never judgeable");
+    }
+
+    #[test]
+    fn overhead_json_carries_the_measured_contract() {
+        use crate::util::json::Json;
+        let rep = run_telemetry_overhead(&tiny_overhead_cfg()).unwrap();
+        let text = rep.render_json();
+        assert!(
+            text.contains("\"status\": \"measured\""),
+            "the exact status spelling is the CI grep contract"
+        );
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("telemetry_overhead"));
+        for key in ["tracing_on", "tracing_off"] {
+            let leg = j.get(key).unwrap();
+            assert!(leg.get("ops_per_sec").and_then(Json::as_f64).is_some());
+            assert!(leg.get("spans_sampled").and_then(Json::as_usize).is_some());
+            assert!(
+                leg.get("submit_wall_ns").and_then(|s| s.get("p99")).is_some(),
+                "submit percentiles must survive serialization"
+            );
+        }
+        let acc = j.get("acceptance").unwrap();
+        assert!(acc.get("on_off_ratio").and_then(Json::as_f64).is_some());
+        // Smoke runs record the ratio but never judge it.
+        assert!(acc.get("pass").is_some());
     }
 }

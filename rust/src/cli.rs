@@ -225,6 +225,14 @@ system commands:
                [--repl-listen HOST:PORT] primary role: ship sealed WAL frames
                                        (fast-repl-v1) to any number of
                                        followers; needs --wal-dir
+               [--metrics-listen HOST:PORT] telemetry endpoint: serve the
+                                       Prometheus text exposition on
+                                       GET /metrics (every counter,
+                                       per-stage span latency histograms,
+                                       rate gauges; one labelled scope per
+                                       tenant under --tenants); the same
+                                       text answers the METRICS verb on the
+                                       line protocol (needs the TCP serve)
                [--follower HOST:PORT]  follower role: stream the primary's
                                        WAL, apply through recovery onto a
                                        live engine, serve reads at the
@@ -270,6 +278,13 @@ system commands:
                so a live serve on the same root blocks it); drop deletes
                the tenant's WAL subdirectory — drop + create is the
                resize/reprecision path
+  stats        --connect HOST:PORT [--watch] [--interval-ms 1000] [--count N]
+               scrape a live serve's METRICS verb and render the headline
+               counters (completed, rejected, batches, queue depth, WAL
+               bytes, repl lag, sampled spans) as a table; --watch
+               re-scrapes every --interval-ms and reports scrape-to-scrape
+               deltas as live rates (ops/s, WAL B/s, batches/s), --count
+               bounds the number of scrapes for scripted runs
   promote      --connect HOST:PORT    tell a follower serve to stop
                                        replicating, fence a new epoch, and
                                        accept writes (failover); prints the
@@ -294,6 +309,12 @@ system commands:
                                        written to BENCH_shard_scaling.json
                                        with status=measured
                                        (FAST_BENCH_SMOKE=1 shrinks the load)
+               telemetry [--out PATH]  telemetry-overhead A/B: one contended
+                                       cell run tracing-on (sample 1/64)
+                                       then tracing-off under identical
+                                       seeded load; ops/s for each leg and
+                                       the on/off ratio written to
+                                       BENCH_telemetry_overhead.json
   wal          inspect --dir DIR       summarize a WAL directory (segments,
                                        per-shard commit_seq/lsn watermarks,
                                        snapshot, recovered-state digest,

@@ -87,6 +87,9 @@ use crate::metrics::{
     Counters, EnergyAccount, LatencyRecorder, LatencySummary, ShardCounters, ShardSnapshot,
 };
 use crate::query::{shard_specs, QueryOutcome, QuerySpec, Reduction};
+use crate::telemetry::{
+    now_ns, PendingSpan, SeriesSample, ShardSpanState, SpanEvent, Telemetry, TelemetryConfig,
+};
 use crate::util::ring::{self, RingReceiver, RingSender};
 use crate::Result;
 
@@ -137,6 +140,13 @@ pub struct EngineConfig {
     /// [`UpdateEngine::promote_writable`] (failover) flips the engine
     /// to accepting writes. Default `false`.
     pub read_only: bool,
+    /// Span-tracing knobs ([`crate::telemetry`]): seeded-deterministic
+    /// sampling of 1 in `sample_rate` admissions into per-shard SPSC
+    /// span rings, drained into stage histograms by a background
+    /// thread. Always-on by default at 1/64; the unsampled hot path
+    /// pays one relaxed `fetch_add` plus one hash — no locks, no
+    /// allocations, no clock read.
+    pub telemetry: TelemetryConfig,
 }
 
 impl EngineConfig {
@@ -152,6 +162,7 @@ impl EngineConfig {
             queue_cap: 4096,
             durability: None,
             read_only: false,
+            telemetry: TelemetryConfig::default(),
         }
     }
 
@@ -177,6 +188,11 @@ impl EngineConfig {
             self.shards
         );
         ensure!(self.queue_cap >= 1, "queue_cap must be >= 1");
+        ensure!(
+            self.telemetry.sample_rate.is_power_of_two(),
+            "telemetry sample_rate must be a power of two, got {}",
+            self.telemetry.sample_rate
+        );
         Ok(())
     }
 
@@ -301,23 +317,29 @@ struct WorkerInit {
     /// First commit seq to assign (recovered watermark + 1; 1 on a
     /// fresh engine).
     first_seq: u64,
+    /// This shard's span-tracing state (the SPSC ring the worker
+    /// publishes completed spans into); installed by `start_inner`.
+    span: Option<Arc<ShardSpanState>>,
 }
 
 impl Default for WorkerInit {
     fn default() -> Self {
-        WorkerInit { listener: None, preload: None, first_seq: 1 }
+        WorkerInit { listener: None, preload: None, first_seq: 1, span: None }
     }
 }
 
 enum Command {
-    /// One request, with an optional completion ticket.
-    Submit(UpdateRequest, Option<TicketNotifier>),
+    /// One request, with an optional completion ticket and the sampled
+    /// submit stamp (`telemetry::now_ns` at admission; 0 = unsampled —
+    /// the overwhelmingly common case).
+    Submit(UpdateRequest, Option<TicketNotifier>, u64),
     /// Amortizes channel crossings for bulk producers (one message per
     /// chunk instead of per request). Rows are shard-local. The
     /// optional waiter acks the chunk's LAST request — per-shard FIFO
     /// means its commit implies every earlier request of the chunk on
-    /// this shard committed too.
-    SubmitMany(Vec<UpdateRequest>, Option<TicketNotifier>),
+    /// this shard committed too. The stamp samples the chunk as one
+    /// admission (0 = unsampled).
+    SubmitMany(Vec<UpdateRequest>, Option<TicketNotifier>, u64),
     Read(usize, SyncSender<Result<u32>>),
     Write(usize, u32, SyncSender<Result<()>>),
     /// One in-array reduction over this shard's (already shard-local)
@@ -500,6 +522,11 @@ pub struct UpdateEngine {
     /// (durable engines only) — the follower's replication cursors
     /// resume from here.
     recovered: Option<Vec<ShardMark>>,
+    /// Span-tracing hub: per-shard sampling state + SPSC rings, the
+    /// stage histograms and the rate-window series its drain thread
+    /// maintains. Always present; a disabled config skips the drain
+    /// thread and stamps nothing.
+    telemetry: Arc<Telemetry>,
 }
 
 impl UpdateEngine {
@@ -547,6 +574,7 @@ impl UpdateEngine {
                             listener: Some(Box::new(wal) as Box<dyn CommitListener>),
                             preload: Some(rec.shard_state(shard)),
                             first_seq: mark.commit_seq + 1,
+                            span: None,
                         })
                     })
                     .collect::<Result<Vec<_>>>()?
@@ -586,6 +614,7 @@ impl UpdateEngine {
                     listener: listener_factory(&plan)?,
                     preload: None,
                     first_seq: 1,
+                    span: None,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -604,11 +633,13 @@ impl UpdateEngine {
         // Per-shard seal threshold: the config knob is expressed over
         // the logical row space.
         let seal_at_rows = cfg.seal_at_rows.map(|n| (n / cfg.shards).max(1));
+        let telemetry = Arc::new(Telemetry::new(cfg.telemetry, cfg.shards));
 
         let mut shards = Vec::with_capacity(cfg.shards);
         let mut seqs = Vec::with_capacity(cfg.shards);
         let mut name_rxs = Vec::with_capacity(cfg.shards);
-        for (shard, init) in inits.into_iter().enumerate() {
+        for (shard, mut init) in inits.into_iter().enumerate() {
+            init.span = Some(telemetry.shard(shard));
             let (tx, rx) = ring::channel(cfg.queue_cap);
             let (name_tx, name_rx) = mpsc::sync_channel(1);
             let plan = ShardPlan { shard, shards: cfg.shards, rows: shard_rows, q: cfg.q };
@@ -648,6 +679,7 @@ impl UpdateEngine {
             _wal_lock: wal_lock,
             writable,
             recovered,
+            telemetry,
         };
 
         // Collect every shard's construction outcome before going live.
@@ -672,11 +704,39 @@ impl UpdateEngine {
                 }
             }
         }
+
+        // Spawn the telemetry drain only once every worker is live —
+        // the sampling closure reads the engine's cumulative gauges,
+        // which exist from construction, so it needs no engine handle
+        // (keeping `telemetry` free of coordinator types).
+        if engine.cfg.telemetry.enabled {
+            let m = Arc::clone(&engine.metrics);
+            engine.telemetry.start_drain(move || SeriesSample {
+                completed: m.counters.requests_completed.load(Ordering::Relaxed),
+                wal_bytes: m
+                    .shards
+                    .iter()
+                    .map(|s| s.wal_bytes.load(Ordering::Relaxed))
+                    .sum(),
+                queue_depth: m
+                    .shards
+                    .iter()
+                    .map(|s| s.queue_depth.load(Ordering::Relaxed))
+                    .sum(),
+            });
+        }
         Ok(engine)
     }
 
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// The engine's telemetry hub: span-stage histograms, the rate
+    /// series, and the scrape [`Telemetry::snapshot`] the exposition
+    /// surfaces render.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
     }
 
     /// Route a logical row to (shard, local row).
@@ -765,7 +825,8 @@ impl UpdateEngine {
         } else {
             (None, None)
         };
-        match self.shards[shard].tx.try_send(Command::Submit(req, waiter)) {
+        let stamp = self.telemetry.submit_stamp(shard);
+        match self.shards[shard].tx.try_send(Command::Submit(req, waiter, stamp)) {
             Ok(()) => {
                 self.note_admitted(shard, 1);
                 Ok(ticket)
@@ -802,7 +863,8 @@ impl UpdateEngine {
         } else {
             (None, None)
         };
-        match self.shards[shard].tx.send(Command::Submit(req, waiter)) {
+        let stamp = self.telemetry.submit_stamp(shard);
+        match self.shards[shard].tx.send(Command::Submit(req, waiter, stamp)) {
             Ok(report) => {
                 self.note_contention(shard, report);
                 self.note_admitted(shard, 1);
@@ -860,7 +922,8 @@ impl UpdateEngine {
             } else {
                 None
             };
-            match self.shards[shard].tx.send(Command::SubmitMany(bucket, waiter)) {
+            let stamp = self.telemetry.submit_stamp(shard);
+            match self.shards[shard].tx.send(Command::SubmitMany(bucket, waiter, stamp)) {
                 Ok(report) => {
                     self.note_contention(shard, report);
                     self.note_admitted(shard, n);
@@ -1132,6 +1195,10 @@ impl UpdateEngine {
     }
 
     fn shutdown_inner(&mut self) -> Result<()> {
+        // Stop the telemetry drain FIRST: its final sweep drains every
+        // span the workers are about to stop producing, and a stopped
+        // drain thread cannot race the gauge closures below.
+        self.telemetry.stop_drain();
         let mut first_err = None;
         for h in &self.shards {
             let _ = h.tx.send(Command::Shutdown);
@@ -1194,6 +1261,14 @@ struct ShardWorker<'a> {
     /// after every backend apply, before any ticket resolves. A
     /// listener error kills the worker like a backend fault.
     listener: Option<Box<dyn CommitListener>>,
+    /// This shard's span ring + sampling counters (never absent on an
+    /// engine-started worker; `Option` keeps the struct constructible
+    /// in isolation).
+    span: Option<Arc<ShardSpanState>>,
+    /// The sampled request currently riding the open batch (at most
+    /// one — the first sampled admission wins; resolved by the seal
+    /// that commits it).
+    pending: Option<PendingSpan>,
 }
 
 impl ShardWorker<'_> {
@@ -1203,9 +1278,21 @@ impl ShardWorker<'_> {
     fn apply_sealed(&mut self, batch: Batch, reason: SealReason) -> Result<()> {
         let m = self.metrics;
         let backend = &mut self.backend;
+        // Span tracing: stamp the seal of the batch carrying the
+        // sampled request (if any). Clock reads happen only on sampled
+        // seals — the common path takes the `is_none` branch.
+        let mut span_ev = self.pending.take().map(|p| SpanEvent {
+            t_submit: p.t_submit,
+            t_enqueue: p.t_enqueue,
+            t_seal: now_ns(),
+            ..SpanEvent::default()
+        });
         let applied = m
             .apply_wall
             .time(|| backend.apply(batch.kind, &batch.operands))?;
+        if let Some(ev) = &mut span_ev {
+            ev.t_apply = now_ns();
+        }
         let commit_seq = self.next_seq;
         self.next_seq += 1;
         Counters::inc(&m.counters.batches_flushed, 1);
@@ -1238,6 +1325,9 @@ impl ShardWorker<'_> {
         // and kills the worker — the established fail-stop path.
         if let Some(listener) = &mut self.listener {
             listener.on_commit(&commit, batch.kind, &batch.operands)?;
+            if let Some(ev) = &mut span_ev {
+                ev.t_wal = now_ns();
+            }
         }
         let modeled_ns_u64 = applied.cost.latency_ns.max(0.0).round() as u64;
         // Batch-wake: store every waiter's commit with plain atomics
@@ -1257,6 +1347,16 @@ impl ShardWorker<'_> {
             sc.wake_batch.record_ns(waiters);
         }
         self.seq.publish(commit_seq);
+        // Resolve the span AFTER the publish — `t_resolve` covers the
+        // full request/response round trip the waiters observe. The
+        // fsync gauge is whatever sync last completed on this shard
+        // (coalesced fsync runs behind resolution by design; the
+        // `fsync_lag` stage measures exactly that distance).
+        if let (Some(mut ev), Some(span)) = (span_ev, self.span.as_ref()) {
+            ev.t_fsync = sc.last_fsync_ns.load(Ordering::Relaxed);
+            ev.t_resolve = now_ns();
+            span.record(ev);
+        }
         Ok(())
     }
 
@@ -1412,7 +1512,13 @@ impl ShardWorker<'_> {
             };
 
             match cmd {
-                Command::Submit(req, waiter) => {
+                Command::Submit(req, waiter, stamp) => {
+                    // A sampled admission (stamp != 0) arms the span
+                    // the next seal resolves; first sampled wins.
+                    if stamp != 0 && self.pending.is_none() {
+                        self.pending =
+                            Some(PendingSpan { t_submit: stamp, t_enqueue: now_ns() });
+                    }
                     if self.batcher.pending_rows() == 0 {
                         self.deadline = Some(Instant::now() + self.cfg.seal_deadline);
                     }
@@ -1425,7 +1531,11 @@ impl ShardWorker<'_> {
                         };
                     }
                 }
-                Command::SubmitMany(reqs, mut waiter) => {
+                Command::SubmitMany(reqs, mut waiter, stamp) => {
+                    if stamp != 0 && self.pending.is_none() {
+                        self.pending =
+                            Some(PendingSpan { t_submit: stamp, t_enqueue: now_ns() });
+                    }
                     let last = reqs.len().saturating_sub(1);
                     for (i, req) in reqs.into_iter().enumerate() {
                         // The chunk waiter acks the LAST request.
@@ -1613,6 +1723,8 @@ fn worker_loop(
         deadline: None,
         next_seq: init.first_seq,
         listener: init.listener,
+        span: init.span,
+        pending: None,
     };
 
     // Every exit path (clean shutdown, backend fault) falls through to
@@ -1663,6 +1775,70 @@ mod tests {
         assert_eq!(stats.completed, 3);
         assert!(stats.batches >= 1);
         e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn sampled_spans_flow_into_stage_histograms() {
+        let mut cfg = EngineConfig::sharded(64, 8, 2);
+        cfg.telemetry.sample_rate = 1; // sample every admission
+        let e = UpdateEngine::start(cfg, |plan: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+        })
+        .unwrap();
+        for row in 0..64 {
+            e.submit_blocking_ticketed(UpdateRequest::add(row, 1))
+                .unwrap()
+                .wait()
+                .unwrap();
+        }
+        let snap = e.telemetry().snapshot();
+        assert!(snap.enabled);
+        assert_eq!(snap.sample_rate, 1);
+        assert!(snap.spans_sampled >= 64, "rate 1 samples every admission");
+        let stage = |name: &str| {
+            snap.stages
+                .iter()
+                .find(|(n, _)| *n == name)
+                .expect("stage present")
+                .1
+        };
+        assert!(stage("total").count >= 1, "sealed spans reach the histograms");
+        assert!(stage("enqueue").count >= 1);
+        assert!(stage("apply").count >= 1);
+        // Volatile engine: no WAL listener, so the wal stage and the
+        // fsync-lag stage never get endpoints.
+        assert_eq!(stage("wal").count, 0);
+        assert_eq!(stage("fsync_lag").count, 0);
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn disabled_telemetry_stamps_and_records_nothing() {
+        let mut cfg = EngineConfig::sharded(64, 8, 2);
+        cfg.telemetry.enabled = false;
+        let e = UpdateEngine::start(cfg, |plan: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+        })
+        .unwrap();
+        for row in 0..64 {
+            e.submit_blocking(UpdateRequest::add(row, 1)).unwrap();
+        }
+        e.drain_all().unwrap();
+        let snap = e.telemetry().snapshot();
+        assert!(!snap.enabled);
+        assert_eq!(snap.spans_sampled, 0);
+        assert!(snap.stages.iter().all(|(_, s)| s.count == 0));
+        e.shutdown().unwrap();
+    }
+
+    #[test]
+    fn config_rejects_non_power_of_two_sample_rate() {
+        let mut cfg = EngineConfig::new(64, 8);
+        cfg.telemetry.sample_rate = 48;
+        let res = UpdateEngine::start(cfg, |plan: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(plan.rows, plan.q)))
+        });
+        assert!(res.is_err(), "sample_rate 48 must be rejected at validate");
     }
 
     #[test]

@@ -65,8 +65,8 @@ pub use recover::{
 pub use segment::{DirLock, Manifest};
 pub use snapshot::{ShardMark, Snapshot};
 pub use wal::{
-    load_segment_stats, FsyncPolicy, SegmentReader, SegmentWriteStats, ShardWal, WalPayload,
-    WalRecord,
+    coalesce_rows, has_segment_stats, load_segment_stats, FsyncPolicy, SegmentReader,
+    SegmentWriteStats, ShardWal, WalPayload, WalRecord,
 };
 
 /// Default segment-rotation threshold (bytes).

@@ -61,6 +61,12 @@
 //!   VGG-7-shaped 8-bit weight-update trainer (the paper's headline
 //!   96.0× / 4.4× task), and the deterministic trace record/replay
 //!   substrate every workload, test and bench can pin engines against.
+//! - [`telemetry`] — always-on observability: seeded-deterministic
+//!   sampled request-span tracing over per-shard lock-free SPSC rings
+//!   (zero allocations / zero locks on the hot paths), per-stage
+//!   latency histograms, a bounded rate-window time series, and the
+//!   Prometheus text exposition behind `fast serve --metrics-listen`,
+//!   the `METRICS` wire verb and `fast stats --connect --watch`.
 //! - [`metrics`], [`util`] — supporting substrates.
 //!
 //! See `docs/ARCHITECTURE.md` for the module → paper-artifact map and
@@ -123,6 +129,7 @@ pub mod query;
 pub mod replication;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod tenant;
 pub mod timing;
 pub mod util;

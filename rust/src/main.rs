@@ -29,6 +29,7 @@ use fast_sram::replication::{
 };
 use fast_sram::runtime::{default_artifact_dir, validate, Runtime};
 use fast_sram::serve;
+use fast_sram::telemetry::server::MetricsServer;
 use fast_sram::tenant::{tenant_dir, TenantRegistry, TenantSpec};
 use fast_sram::Result;
 
@@ -46,6 +47,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
         Some("serve") => cmd_serve(&args),
+        Some("stats") => cmd_stats(&args),
         Some("promote") => cmd_promote(&args),
         Some("client") => cmd_client(&args),
         Some("tenant") => cmd_tenant(&args),
@@ -499,7 +501,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None
     };
 
+    // Feed the replication lag gauge into the telemetry rate series
+    // whenever the serve carries a role — the series (and /metrics)
+    // then report live lag without touching the repl hot path.
+    if let Some(r) = &repl {
+        let stats = std::sync::Arc::clone(&r.stats);
+        engine.telemetry().set_lag_source(move || stats.total_lag_lsn());
+    }
+
     let report = if args.get_bool("stdio") {
+        anyhow::ensure!(
+            args.get("metrics-listen").is_none(),
+            "--metrics-listen needs the TCP serve (drop --stdio)"
+        );
         eprintln!(
             "fast-serve-v1 on stdio: {} rows x {} bits, {} shard(s), backend {}",
             cfg.rows,
@@ -512,6 +526,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let listen = args.get_str("listen", "127.0.0.1:4750").to_string();
         let listener = std::net::TcpListener::bind(&listen)
             .map_err(|e| anyhow::anyhow!("binding {listen}: {e}"))?;
+        let metrics = match args.get("metrics-listen") {
+            Some(addr) => {
+                let ml = std::net::TcpListener::bind(addr)
+                    .map_err(|e| anyhow::anyhow!("binding metrics listener {addr}: {e}"))?;
+                let render = serve::metrics_render_engine(
+                    std::sync::Arc::clone(&engine),
+                    repl.as_ref().map(|r| std::sync::Arc::clone(&r.stats)),
+                );
+                let server = MetricsServer::start(ml, render)?;
+                eprintln!(
+                    "telemetry: Prometheus exposition on http://{}/metrics",
+                    server.local_addr()
+                );
+                Some(server)
+            }
+            None => None,
+        };
         eprintln!(
             "fast-serve-v1 listening on {} ({} rows x {} bits, {} shard(s), backend {}) — \
              drive it with `fast client --connect {listen}` or any line client; \
@@ -522,7 +553,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg.shards,
             engine.stats().backend
         );
-        serve::serve_tcp_with(engine, listener, repl)?
+        serve::serve_tcp_observed(engine, listener, repl, metrics)?
     };
 
     // Clean drain happened inside serve_*; report it.
@@ -622,6 +653,10 @@ fn cmd_serve_tenants(args: &Args) -> Result<()> {
         );
     }
     let report = if args.get_bool("stdio") {
+        anyhow::ensure!(
+            args.get("metrics-listen").is_none(),
+            "--metrics-listen needs the TCP serve (drop --stdio)"
+        );
         eprintln!(
             "fast-serve-v1 (tenants) on stdio: {} tenant(s); bind with TENANT USE",
             reg.len()
@@ -631,6 +666,21 @@ fn cmd_serve_tenants(args: &Args) -> Result<()> {
         let listen = args.get_str("listen", "127.0.0.1:4750").to_string();
         let listener = std::net::TcpListener::bind(&listen)
             .map_err(|e| anyhow::anyhow!("binding {listen}: {e}"))?;
+        let metrics = match args.get("metrics-listen") {
+            Some(addr) => {
+                let ml = std::net::TcpListener::bind(addr)
+                    .map_err(|e| anyhow::anyhow!("binding metrics listener {addr}: {e}"))?;
+                let render = serve::metrics_render_tenants(std::sync::Arc::clone(&reg));
+                let server = MetricsServer::start(ml, render)?;
+                eprintln!(
+                    "telemetry: Prometheus exposition on http://{}/metrics \
+                     (one labelled scope per tenant)",
+                    server.local_addr()
+                );
+                Some(server)
+            }
+            None => None,
+        };
         eprintln!(
             "fast-serve-v1 (tenants) listening on {} — {} tenant(s); \
              TENANT CREATE/USE/DROP/LIST administer the registry \
@@ -638,7 +688,7 @@ fn cmd_serve_tenants(args: &Args) -> Result<()> {
             listener.local_addr()?,
             reg.len()
         );
-        serve::serve_tcp_tenants(reg, listener)?
+        serve::serve_tcp_tenants_observed(reg, listener, metrics)?
     };
     if stats_json {
         println!("{}", serve::stats_json_tenants(&report.tenants));
@@ -666,6 +716,25 @@ fn cmd_serve_tenants(args: &Args) -> Result<()> {
         print!("{}", render_table("serve (drained)", &rows_txt));
     }
     Ok(())
+}
+
+/// `fast stats --connect HOST:PORT [--watch]` — scrape a live serve's
+/// `METRICS` verb and render the headline counters as a table; with
+/// `--watch`, re-scrape on an interval and report scrape-to-scrape
+/// deltas as live rates (ops/s, WAL B/s, batches/s).
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.get("connect").ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: fast stats --connect HOST:PORT [--watch] [--interval-ms N] [--count N]"
+        )
+    })?;
+    let watch = args.get_bool("watch");
+    let interval = Duration::from_millis(args.get_usize("interval-ms", 1000)? as u64);
+    let count = args.get_usize("count", 0)?;
+    // --watch with no --count runs until the connection drops;
+    // a finite default keeps scripted runs bounded.
+    let count = if count == 0 { if watch { usize::MAX } else { 1 } } else { count };
+    serve::run_stats_client(addr, watch, interval, count)
 }
 
 /// `fast tenant create|drop|list` — tenant administration, over the
@@ -874,10 +943,12 @@ fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `fast bench engine [--out PATH]` — the measured-performance
-/// harness: the same `fast_sram::bench` producers × shards grid as
-/// `cargo bench --bench shard_scaling`, writing one
-/// `BENCH_shard_scaling.json` schema from either entry point.
+/// `fast bench engine|telemetry [--out PATH]` — the
+/// measured-performance harnesses: the producers × shards scaling
+/// grid (same implementation as `cargo bench --bench shard_scaling`,
+/// writing `BENCH_shard_scaling.json`) and the telemetry-overhead A/B
+/// (tracing on vs off under identical load, writing
+/// `BENCH_telemetry_overhead.json`).
 fn cmd_bench(args: &Args) -> Result<()> {
     let what = args.positional.first().map(String::as_str).unwrap_or("engine");
     match what {
@@ -897,7 +968,23 @@ fn cmd_bench(args: &Args) -> Result<()> {
             println!("results written to {}", out.display());
             Ok(())
         }
-        other => bail!("unknown bench target {other:?} (try: fast bench engine [--out PATH])"),
+        "telemetry" => {
+            let cfg = bench::OverheadConfig::standard();
+            let report = bench::run_telemetry_overhead(&cfg)?;
+            print!("{}", report.render_text());
+            let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+                PathBuf::from(concat!(
+                    env!("CARGO_MANIFEST_DIR"),
+                    "/../BENCH_telemetry_overhead.json"
+                ))
+            });
+            report.write_json(&out)?;
+            println!("results written to {}", out.display());
+            Ok(())
+        }
+        other => {
+            bail!("unknown bench target {other:?} (try: fast bench engine|telemetry [--out PATH])")
+        }
     }
 }
 
@@ -942,26 +1029,10 @@ fn cmd_wal(args: &Args) -> Result<()> {
                 ));
             }
             // Per-segment write-coalescing stats from each shard's
-            // sidecar (absent for logs written by older builds).
+            // sidecar; dirs written by pre-sidecar builds get an
+            // explicit "(no sidecar)" row instead of silence.
             for shard in 0..rep.shards {
-                let stats = durability::load_segment_stats(&dir, shard).unwrap_or_default();
-                for (first_lsn, st) in &stats {
-                    if st.writes == 0 {
-                        continue;
-                    }
-                    rows_txt.push((
-                        format!("shard {shard} seg-{first_lsn:016x}"),
-                        format!(
-                            "{} writes | {:.1} frames/write | {:.0} bytes/write | \
-                             {} coalesced ({} frames)",
-                            st.writes,
-                            st.frames as f64 / st.writes as f64,
-                            st.bytes as f64 / st.writes as f64,
-                            st.coalesced_writes,
-                            st.coalesced_frames,
-                        ),
-                    ));
-                }
+                rows_txt.extend(durability::coalesce_rows(&dir, shard));
             }
             print!("{}", render_table("wal inspect", &rows_txt));
             Ok(())

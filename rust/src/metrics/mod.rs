@@ -145,6 +145,10 @@ pub struct ShardCounters {
     /// Frames delivered by those coalesced writes (compare against
     /// `wal_records` for the coalescing ratio).
     pub wal_coalesced_frames: AtomicU64,
+    /// Monotonic stamp (`telemetry::now_ns`) of this shard's last
+    /// completed fsync; 0 until one happens. A gauge for span tracing
+    /// (`t_fsync`), deliberately not part of [`ShardSnapshot`].
+    pub last_fsync_ns: AtomicU64,
 }
 
 impl ShardCounters {

@@ -145,6 +145,20 @@ impl ReplStats {
         self.shards[shard].applied_lsn.load(Ordering::Acquire)
     }
 
+    /// Total logical lag across all shards (Σ primary tail − applied),
+    /// saturating per shard — the gauge the telemetry rate series
+    /// samples (`Telemetry::set_lag_source`).
+    pub fn total_lag_lsn(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.primary_lsn
+                    .load(Ordering::Acquire)
+                    .saturating_sub(s.applied_lsn.load(Ordering::Acquire))
+            })
+            .sum()
+    }
+
     /// Record a fail-stop reason (first one wins).
     pub fn fail(&self, msg: String) {
         let mut f = self.failed.lock().expect("repl failed lock");

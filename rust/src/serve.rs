@@ -105,6 +105,9 @@ use crate::coordinator::{
 };
 use crate::metrics::LatencySummary;
 use crate::replication::{FollowerHandle, ReplListener, ReplSnapshot, ReplStats};
+use crate::telemetry::expo::{self, Scope, TenantMeta};
+use crate::telemetry::server::{MetricsRender, MetricsServer};
+use crate::telemetry::TelemetrySnapshot;
 use crate::tenant::{QuotaExceeded, TenantHandle, TenantRegistry, TenantSpec};
 use crate::util::rng::Rng;
 use crate::Result;
@@ -526,6 +529,26 @@ impl Session {
                     format!("OK {}", stats_json_with_repl(&t.engine().stats(), repl.as_ref()))
                 }
             },
+            "METRICS" => {
+                // The Prometheus text exposition over the wire: the
+                // same families `GET /metrics` serves, terminated by
+                // the `# EOF` line so line-protocol clients know where
+                // the multi-line reply ends. Scope resolution mirrors
+                // STATS: a bound session (or single-engine serve)
+                // renders one scope; an unbound tenant session renders
+                // every tenant as a labelled scope.
+                let repl = self.repl.as_ref().map(|r| r.stats.snapshot());
+                let text = match (&self.target, &self.tenant) {
+                    (ServeTarget::Tenants(reg), None) => {
+                        render_metrics_tenants(reg, repl.as_ref())
+                    }
+                    _ => match self.active()? {
+                        RouteTarget::Single(e) => render_metrics_engine(&e, repl.as_ref()),
+                        RouteTarget::Tenant(h) => render_metrics_handle(&h, repl.as_ref()),
+                    },
+                };
+                return Ok(Action::Reply(text));
+            }
             "PROMOTE" => match &self.repl {
                 Some(SessionRepl { follower: Some(f), .. }) => {
                     let epoch = f.promote().context("promoting this follower")?;
@@ -796,7 +819,22 @@ pub fn serve_tcp_tenants(
     reg: Arc<TenantRegistry>,
     listener: TcpListener,
 ) -> Result<TenantServeReport> {
+    serve_tcp_tenants_observed(reg, listener, None)
+}
+
+/// [`serve_tcp_tenants`] with an optional live metrics endpoint
+/// (`--metrics-listen`). The metrics server is stopped BEFORE the
+/// registry teardown: its renderer closure holds a registry `Arc`,
+/// and `finish_tenants` needs sole ownership.
+pub fn serve_tcp_tenants_observed(
+    reg: Arc<TenantRegistry>,
+    listener: TcpListener,
+    metrics: Option<MetricsServer>,
+) -> Result<TenantServeReport> {
     accept_loop(ServeTarget::Tenants(Arc::clone(&reg)), &listener, None)?;
+    if let Some(m) = metrics {
+        m.stop();
+    }
     finish_tenants(reg)
 }
 
@@ -810,7 +848,25 @@ pub fn serve_tcp_with(
     listener: TcpListener,
     repl: Option<ServeRepl>,
 ) -> Result<ServeReport> {
+    serve_tcp_observed(engine, listener, repl, None)
+}
+
+/// [`serve_tcp_with`] plus an optional live metrics endpoint
+/// (`--metrics-listen`). Wind-down order at shutdown: join the
+/// session threads, stop+join the metrics server (its renderer
+/// closure holds an engine `Arc` that [`finish`]'s sole-ownership
+/// check must see released), stop the replication parts, then drain +
+/// shut down the engine.
+pub fn serve_tcp_observed(
+    engine: Arc<UpdateEngine>,
+    listener: TcpListener,
+    repl: Option<ServeRepl>,
+    metrics: Option<MetricsServer>,
+) -> Result<ServeReport> {
     accept_loop(ServeTarget::Engine(Arc::clone(&engine)), &listener, repl.as_ref())?;
+    if let Some(m) = metrics {
+        m.stop();
+    }
     let repl_snap = repl.map(ServeRepl::wind_down);
     let mut report = finish(engine)?;
     report.repl = repl_snap;
@@ -1251,8 +1307,19 @@ fn connect_with_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
 }
 
 // ---------------------------------------------------------------------------
-// Stats JSON
+// Stats JSON — the one schema-versioned serializer behind every stats
+// surface: the `STATS` protocol verb (bound or unbound), the
+// `--stats-json` shutdown snapshots (single-engine, `--tenants`, and
+// replicated), all emit objects stamped `"schema":"fast-stats-v1"` as
+// their first key. The schema tag names the *shape contract*: every
+// key that existed before the tag is unchanged, so pre-schema parsers
+// (and the CI greps) keep working, while new parsers can dispatch on
+// the version instead of sniffing keys.
 // ---------------------------------------------------------------------------
+
+/// Schema tag stamped on every stats JSON object; bump on any
+/// key-breaking change.
+pub const STATS_SCHEMA: &str = "fast-stats-v1";
 
 fn latency_json(l: &LatencySummary) -> String {
     format!(
@@ -1264,8 +1331,15 @@ fn latency_json(l: &LatencySummary) -> String {
 /// One-line JSON rendering of [`EngineStats`] — the `STATS` protocol
 /// reply and the `fast serve --stats-json` shutdown snapshot. Keys are
 /// stable; per-shard commit latency is reported both wall-clock and
-/// modeled (p50/p95/p99).
+/// modeled (p50/p95/p99). Equivalent to
+/// [`stats_json_with_repl`]`(s, None)` — one serializer, no role.
 pub fn stats_json(s: &EngineStats) -> String {
+    stats_json_with_repl(s, None)
+}
+
+/// The shared field body of the single-engine schema: everything
+/// between the opening `"schema"` key and the optional repl splice.
+fn stats_fields(s: &EngineStats) -> String {
     let mut shards = String::new();
     for (i, sc) in s.shards.iter().enumerate() {
         if i > 0 {
@@ -1313,7 +1387,7 @@ pub fn stats_json(s: &EngineStats) -> String {
     let wal_bytes: u64 = s.shards.iter().map(|sc| sc.wal_bytes).sum();
     let wal_fsyncs: u64 = s.shards.iter().map(|sc| sc.wal_fsyncs).sum();
     format!(
-        "{{\"backend\":\"{}\",\"submitted\":{},\"completed\":{},\"rejected\":{},\
+        "\"backend\":\"{}\",\"submitted\":{},\"completed\":{},\"rejected\":{},\
          \"batches\":{},\"rows_updated\":{},\"rows_per_batch\":{:.2},\
          \"modeled_ns\":{:.1},\"modeled_energy_pj\":{:.3},\"queue_depth\":{},\
          \"tickets_resolved\":{},\"queries\":{},\
@@ -1321,7 +1395,7 @@ pub fn stats_json(s: &EngineStats) -> String {
          \"wal_records\":{wal_records},\
          \"wal_bytes\":{wal_bytes},\"wal_fsyncs\":{wal_fsyncs},\
          \"wal_coalesced_writes\":{},\"wal_coalesced_frames\":{},\
-         \"apply_wall_ns\":{},\"shards\":[{}]}}",
+         \"apply_wall_ns\":{},\"shards\":[{}]",
         s.backend,
         s.submitted,
         s.completed,
@@ -1382,9 +1456,10 @@ fn repl_json(r: &ReplSnapshot) -> String {
 /// reply on an unbound tenant session and the `fast serve --tenants
 /// --stats-json` shutdown snapshot. Per-tenant counters and latency
 /// histograms come from each tenant's own engine, so the schema inside
-/// `"stats"` is exactly the single-engine schema.
+/// `"stats"` is exactly the single-engine schema (each embedded object
+/// carries its own `"schema"` tag; the wrapper is tagged too).
 pub fn stats_json_tenants(stats: &[(TenantSpec, EngineStats)]) -> String {
-    let mut body = String::from("{\"tenants\":[");
+    let mut body = format!("{{\"schema\":\"{STATS_SCHEMA}\",\"tenants\":[");
     for (i, (spec, s)) in stats.iter().enumerate() {
         if i > 0 {
             body.push(',');
@@ -1402,19 +1477,195 @@ pub fn stats_json_tenants(stats: &[(TenantSpec, EngineStats)]) -> String {
     body
 }
 
-/// [`stats_json`] plus — when the serve carries a replication role —
-/// a `"role"` key (`"follower"` or `"primary"`) and the `"repl"`
-/// counters object. Every pre-existing key is untouched, so anything
-/// parsing the non-replicated schema keeps working.
+/// THE stats serializer: the single-engine schema plus — when the
+/// serve carries a replication role — a `"role"` key (`"follower"` or
+/// `"primary"`) and the `"repl"` counters object, spliced after
+/// `"shards"`. Every pre-existing key is untouched, so anything
+/// parsing the non-replicated schema keeps working; [`stats_json`] is
+/// exactly this with `repl = None`, byte for byte.
 pub fn stats_json_with_repl(s: &EngineStats, repl: Option<&ReplSnapshot>) -> String {
-    let base = stats_json(s);
-    match repl {
-        None => base,
-        Some(r) => {
-            let body = base.strip_suffix('}').unwrap_or(&base);
-            format!("{body},\"role\":\"{}\",\"repl\":{}}}", r.role, repl_json(r))
+    let mut body = format!("{{\"schema\":\"{STATS_SCHEMA}\",{}", stats_fields(s));
+    if let Some(r) = repl {
+        body.push_str(&format!(",\"role\":\"{}\",\"repl\":{}", r.role, repl_json(r)));
+    }
+    body.push('}');
+    body
+}
+
+// ---------------------------------------------------------------------------
+// Metrics exposition glue — one render path behind both transports
+// (the METRICS wire verb and `GET /metrics` on `--metrics-listen`).
+// ---------------------------------------------------------------------------
+
+/// Render the full Prometheus exposition for a single-engine serve:
+/// one unlabelled scope from the engine's stats + telemetry snapshot,
+/// plus the replication families (zero-filled when `repl` is absent —
+/// the family set never depends on the deployment shape).
+pub fn render_metrics_engine(engine: &UpdateEngine, repl: Option<&ReplSnapshot>) -> String {
+    let stats = engine.stats();
+    let tel = engine.telemetry().snapshot();
+    expo::render(&[Scope { tenant: None, stats: &stats, tel: Some(&tel) }], repl)
+}
+
+/// Render the exposition for a multi-tenant serve: one
+/// `tenant`-labelled scope per live tenant (name-sorted), each with
+/// its own engine stats and telemetry snapshot.
+pub fn render_metrics_tenants(reg: &TenantRegistry, repl: Option<&ReplSnapshot>) -> String {
+    let handles = reg.handles();
+    let stats: Vec<EngineStats> = handles.iter().map(|h| h.engine().stats()).collect();
+    let tels: Vec<TelemetrySnapshot> =
+        handles.iter().map(|h| h.engine().telemetry().snapshot()).collect();
+    let scopes: Vec<Scope<'_>> = handles
+        .iter()
+        .zip(stats.iter().zip(&tels))
+        .map(|(h, (s, t))| {
+            let spec = h.spec();
+            Scope {
+                tenant: Some(TenantMeta {
+                    name: spec.name.clone(),
+                    rows: spec.rows,
+                    q: spec.q,
+                    quota_rows: spec.quota_rows,
+                }),
+                stats: s,
+                tel: Some(t),
+            }
+        })
+        .collect();
+    expo::render(&scopes, repl)
+}
+
+/// Render one tenant's scope (tenant-labelled) — the bound-session
+/// arm of the `METRICS` verb.
+fn render_metrics_handle(h: &TenantHandle, repl: Option<&ReplSnapshot>) -> String {
+    let stats = h.engine().stats();
+    let tel = h.engine().telemetry().snapshot();
+    let spec = h.spec();
+    expo::render(
+        &[Scope {
+            tenant: Some(TenantMeta {
+                name: spec.name.clone(),
+                rows: spec.rows,
+                q: spec.q,
+                quota_rows: spec.quota_rows,
+            }),
+            stats: &stats,
+            tel: Some(&tel),
+        }],
+        repl,
+    )
+}
+
+/// The `GET /metrics` renderer for a single-engine serve, as the
+/// closure [`MetricsServer::start`] wants. Holds the engine (and
+/// optional repl stats) alive until [`MetricsServer::stop`] drops it —
+/// which is why the observed serve transports stop the metrics server
+/// before their final `finish`.
+pub fn metrics_render_engine(
+    engine: Arc<UpdateEngine>,
+    repl: Option<Arc<ReplStats>>,
+) -> MetricsRender {
+    Arc::new(move || {
+        let snap = repl.as_ref().map(|r| r.snapshot());
+        render_metrics_engine(&engine, snap.as_ref())
+    })
+}
+
+/// The `GET /metrics` renderer for a `--tenants` serve.
+pub fn metrics_render_tenants(reg: Arc<TenantRegistry>) -> MetricsRender {
+    Arc::new(move || render_metrics_tenants(&reg, None))
+}
+
+// ---------------------------------------------------------------------------
+// Stats client (`fast stats --connect`)
+// ---------------------------------------------------------------------------
+
+/// One scrape over the wire: connect, send `METRICS`, read the
+/// exposition through its `# EOF` terminator, parse it.
+fn scrape_metrics(addr: &str) -> Result<expo::Scrape> {
+    let stream = connect_with_retry(addr, Duration::from_secs(10))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut out = stream;
+    writeln!(out, "METRICS").context("sending METRICS")?;
+    let mut text = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).context("reading METRICS reply")?;
+        ensure!(n > 0, "server closed the connection mid-exposition");
+        text.push_str(&line);
+        if line.trim_end() == "# EOF" {
+            break;
         }
     }
+    let _ = writeln!(out, "QUIT");
+    expo::parse_text(&text)
+}
+
+/// `fast stats --connect HOST:PORT [--watch]`: scrape the `METRICS`
+/// verb and render the load-bearing families as a table. A single
+/// shot reports cumulative totals plus the server's own rate window;
+/// `--watch` re-scrapes every `interval` (`count` times) and renders
+/// the scrape-to-scrape deltas as live rates.
+pub fn run_stats_client(
+    addr: &str,
+    watch: bool,
+    interval: Duration,
+    count: usize,
+) -> Result<()> {
+    let iterations = if watch { count.max(2) } else { 1 };
+    let mut prev: Option<(Instant, expo::Scrape)> = None;
+    for i in 0..iterations {
+        if i > 0 {
+            std::thread::sleep(interval);
+        }
+        let at = Instant::now();
+        let scrape = scrape_metrics(addr)?;
+        let mut rows: Vec<(String, String)> = Vec::new();
+        let t = |name: &str| scrape.total(name);
+        rows.push(("completed".into(), format!("{:.0}", t("fast_requests_completed_total"))));
+        rows.push(("submitted".into(), format!("{:.0}", t("fast_requests_submitted_total"))));
+        rows.push(("rejected".into(), format!("{:.0}", t("fast_requests_rejected_total"))));
+        rows.push(("batches".into(), format!("{:.0}", t("fast_batches_sealed_total"))));
+        rows.push(("queue depth".into(), format!("{:.0}", t("fast_queue_depth"))));
+        rows.push(("wal bytes".into(), format!("{:.0}", t("fast_wal_bytes_total"))));
+        rows.push(("repl lag (lsn)".into(), format!("{:.0}", t("fast_repl_lag_lsn"))));
+        rows.push(("spans sampled".into(), format!("{:.0}", t("fast_spans_sampled_total"))));
+        match &prev {
+            Some((t0, p)) => {
+                let dt = at.duration_since(*t0).as_secs_f64();
+                if dt > 0.0 {
+                    let rate =
+                        |name: &str| (scrape.total(name) - p.total(name)).max(0.0) / dt;
+                    rows.push((
+                        "ops/s (delta)".into(),
+                        format!("{:.0}", rate("fast_requests_completed_total")),
+                    ));
+                    rows.push((
+                        "wal B/s (delta)".into(),
+                        format!("{:.0}", rate("fast_wal_bytes_total")),
+                    ));
+                    rows.push((
+                        "batches/s (delta)".into(),
+                        format!("{:.1}", rate("fast_batches_sealed_total")),
+                    ));
+                }
+            }
+            None => {
+                // First scrape: fall back to the server's own rate
+                // window (the telemetry series).
+                rows.push(("ops/s (server)".into(), format!("{:.0}", t("fast_ops_per_sec"))));
+                rows.push((
+                    "wal B/s (server)".into(),
+                    format!("{:.0}", t("fast_wal_bytes_per_sec")),
+                ));
+            }
+        }
+        print!("{}", crate::metrics::render_table(&format!("fast stats @ {addr}"), &rows));
+        prev = Some((at, scrape));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -2144,5 +2395,102 @@ mod tests {
         assert_eq!(report.tenants[0].1.completed, trace_a.updates() as u64);
         assert_eq!(report.tenants[1].0.name, "b");
         assert_eq!(report.tenants[1].1.completed, trace_b.updates() as u64);
+    }
+
+    #[test]
+    fn metrics_verb_exposes_every_documented_family() {
+        let e = engine(64, 8, 2);
+        let mut s = Session::new(Arc::clone(&e));
+        for row in 0..16 {
+            let r = reply(&mut s, &format!("{{\"t\":\"u\",\"o\":\"add\",\"r\":{row},\"v\":1}}"));
+            assert!(r.starts_with("OK shard="), "{r}");
+        }
+        reply(&mut s, "{\"t\":\"f\"}");
+
+        let text = reply(&mut s, "METRICS");
+        assert!(text.trim_end().ends_with("# EOF"), "exposition must end with # EOF");
+        let scrape = expo::parse_text(&text).unwrap();
+        for family in expo::DOCUMENTED_FAMILIES {
+            assert!(scrape.has_family(family), "missing documented family {family}");
+        }
+        assert!(
+            scrape.total("fast_requests_completed_total") >= 16.0,
+            "completed counter must reflect the session's traffic"
+        );
+        // No repl attached: the lag gauge is present but zero-valued.
+        assert_eq!(scrape.total("fast_repl_lag_lsn"), 0.0);
+        drop(s);
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
+    }
+
+    #[test]
+    fn metrics_verb_labels_tenant_scopes() {
+        let reg = registry(&[("db", 64, 8), ("nn", 32, 8)]);
+        let mut s = Session::new_with(ServeTarget::Tenants(Arc::clone(&reg)));
+        reply(&mut s, "TENANT USE db");
+        let r = reply(&mut s, "{\"t\":\"u\",\"o\":\"add\",\"r\":3,\"v\":7}");
+        assert!(r.starts_with("OK shard="), "{r}");
+        reply(&mut s, "{\"t\":\"f\"}");
+
+        // Bound session: one unlabelled-equivalent scope for the bound
+        // tenant still carries its tenant label.
+        let bound = expo::parse_text(&reply(&mut s, "METRICS")).unwrap();
+        assert!(
+            bound.value("fast_requests_completed_total", &[("tenant", "db")]).is_some(),
+            "bound METRICS must label its scope with the tenant"
+        );
+
+        // Unbound session: every tenant appears as a labelled scope,
+        // and the tenant-spec families join the exposition.
+        let mut unbound = Session::new_with(ServeTarget::Tenants(Arc::clone(&reg)));
+        let scrape = expo::parse_text(&reply(&mut unbound, "METRICS")).unwrap();
+        for family in expo::TENANT_FAMILIES {
+            assert!(scrape.has_family(family), "missing tenant family {family}");
+        }
+        assert_eq!(
+            scrape.value("fast_requests_completed_total", &[("tenant", "db")]),
+            Some(1.0)
+        );
+        assert_eq!(
+            scrape.value("fast_requests_completed_total", &[("tenant", "nn")]),
+            Some(0.0)
+        );
+        assert_eq!(scrape.value("fast_tenant_rows", &[("tenant", "nn")]), Some(32.0));
+        drop(s);
+        drop(unbound);
+        shutdown_registry(reg);
+    }
+
+    #[test]
+    fn stats_schema_tag_is_the_first_key_of_every_stats_object() {
+        let e = engine(32, 8, 1);
+        let single = stats_json(&e.stats());
+        assert!(
+            single.starts_with("{\"schema\":\"fast-stats-v1\","),
+            "schema tag must lead the single-engine object: {}",
+            &single[..60.min(single.len())]
+        );
+        let reg = registry(&[("db", 32, 8)]);
+        let wrapper = stats_json_tenants(&reg.stats());
+        assert!(
+            wrapper.starts_with("{\"schema\":\"fast-stats-v1\",\"tenants\":["),
+            "schema tag must lead the tenants wrapper: {}",
+            &wrapper[..60.min(wrapper.len())]
+        );
+        // The embedded per-tenant stats objects are themselves tagged.
+        let json = Json::parse(&wrapper).unwrap();
+        let tenants = json.get("tenants").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            tenants[0].get("stats").and_then(|s| s.get("schema")).and_then(Json::as_str),
+            Some("fast-stats-v1")
+        );
+        shutdown_registry(reg);
+        Arc::try_unwrap(e)
+            .unwrap_or_else(|_| panic!("sole owner"))
+            .shutdown()
+            .unwrap();
     }
 }

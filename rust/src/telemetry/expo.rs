@@ -1,0 +1,724 @@
+//! Prometheus text exposition (hand-rolled, std-only) plus the
+//! minimal parser the tests and the `fast stats` client share.
+//!
+//! ## Grammar emitted
+//!
+//! ```text
+//! # HELP <family> <help text>
+//! # TYPE <family> counter|gauge|summary
+//! <family>[{label="value",...}] <number>
+//! ...
+//! # EOF
+//! ```
+//!
+//! Counters end in `_total`. Histogram families are emitted as
+//! summaries: one sample per quantile (`{quantile="0.5|0.95|0.99"}`)
+//! plus `<family>_count` and `<family>_sum`. Per-shard series carry a
+//! `shard` label; in `--tenants` mode every series additionally
+//! carries a `tenant` label and the `fast_tenant_*` families appear.
+//! Replication families are ALWAYS emitted (zeros when the server has
+//! no replication role) so a scrape's family set never depends on the
+//! deployment shape. The final `# EOF` line doubles as the `METRICS`
+//! wire verb's terminator.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+use crate::coordinator::EngineStats;
+use crate::metrics::LatencySummary;
+use crate::replication::ReplSnapshot;
+use crate::Result;
+
+use super::TelemetrySnapshot;
+
+/// Every family the single-engine exposition documents — the
+/// load-bearing list: ARCHITECTURE.md tabulates it, the round-trip
+/// test asserts each is present and well-formed, and the CI
+/// telemetry-smoke job greps them out of a live scrape.
+pub const DOCUMENTED_FAMILIES: &[&str] = &[
+    // engine
+    "fast_backend_info",
+    "fast_requests_submitted_total",
+    "fast_requests_completed_total",
+    "fast_requests_rejected_total",
+    "fast_batches_sealed_total",
+    "fast_rows_updated_total",
+    "fast_coalesce_hits_total",
+    "fast_tickets_resolved_total",
+    "fast_queries_total",
+    "fast_modeled_ns_total",
+    "fast_modeled_energy_pj_total",
+    "fast_queue_depth",
+    "fast_queue_high_water",
+    "fast_commit_seq",
+    "fast_apply_wall_ns",
+    "fast_commit_wall_ns",
+    "fast_commit_modeled_ns",
+    "fast_query_wall_ns",
+    // seal reasons
+    "fast_seal_total",
+    // contention
+    "fast_submit_spins_total",
+    "fast_park_events_total",
+    "fast_wake_batch",
+    // WAL
+    "fast_wal_records_total",
+    "fast_wal_bytes_total",
+    "fast_wal_fsyncs_total",
+    "fast_wal_rotations_total",
+    "fast_wal_fsync_ns",
+    "fast_wal_coalesced_writes_total",
+    "fast_wal_coalesced_frames_total",
+    // replication (zero-valued without a repl role)
+    "fast_repl_epoch",
+    "fast_repl_connected",
+    "fast_repl_failed",
+    "fast_repl_reconnects_total",
+    "fast_repl_frames_applied_total",
+    "fast_repl_dup_frames_total",
+    "fast_repl_wire_errors_total",
+    "fast_repl_digests_verified_total",
+    "fast_repl_lag_lsn",
+    // span tracing
+    "fast_spans_sampled_total",
+    "fast_spans_dropped_total",
+    "fast_span_stage_ns",
+    "fast_ops_per_sec",
+    "fast_wal_bytes_per_sec",
+];
+
+/// Families additionally present in `--tenants` mode.
+pub const TENANT_FAMILIES: &[&str] =
+    &["fast_tenants", "fast_tenant_rows", "fast_tenant_quota_rows", "fast_tenant_q"];
+
+/// Identity of one tenant scope (`None` labels on a single-engine
+/// serve; name/rows/q/quota for a tenant).
+#[derive(Debug, Clone)]
+pub struct TenantMeta {
+    pub name: String,
+    pub rows: usize,
+    pub q: usize,
+    pub quota_rows: usize,
+}
+
+/// One engine's worth of scrape input: its stats, its telemetry
+/// snapshot, and (in tenants mode) the tenant it belongs to.
+pub struct Scope<'a> {
+    pub tenant: Option<TenantMeta>,
+    pub stats: &'a EngineStats,
+    pub tel: Option<&'a TelemetrySnapshot>,
+}
+
+const QUANTILES: [(&str, fn(&LatencySummary) -> u64); 3] = [
+    ("0.5", |s| s.p50_ns),
+    ("0.95", |s| s.p95_ns),
+    ("0.99", |s| s.p99_ns),
+];
+
+/// Exposition writer: families declare HELP/TYPE once, samples append
+/// under them.
+struct Prom {
+    out: String,
+}
+
+impl Prom {
+    fn new() -> Prom {
+        Prom { out: String::with_capacity(8192) }
+    }
+
+    fn family(&mut self, name: &str, ty: &str, help: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(help);
+        self.out.push_str("\n# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(ty);
+        self.out.push('\n');
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                for c in v.chars() {
+                    match c {
+                        '\\' => self.out.push_str("\\\\"),
+                        '"' => self.out.push_str("\\\""),
+                        '\n' => self.out.push_str("\\n"),
+                        c => self.out.push(c),
+                    }
+                }
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        if value.fract() == 0.0 && value.abs() < 9e15 {
+            self.out.push_str(&format!("{}", value as i64));
+        } else {
+            self.out.push_str(&format!("{value}"));
+        }
+        self.out.push('\n');
+    }
+
+    fn finish(mut self) -> String {
+        self.out.push_str("# EOF");
+        self.out
+    }
+}
+
+/// Render the full exposition for a set of engine scopes plus the
+/// (optional) replication snapshot. Single-engine serves pass one
+/// unlabelled scope; `--tenants` serves pass one scope per tenant.
+/// The returned text ends with the `# EOF` line (no trailing newline).
+pub fn render(scopes: &[Scope<'_>], repl: Option<&ReplSnapshot>) -> String {
+    let mut p = Prom::new();
+    let tenants_mode = scopes.iter().any(|s| s.tenant.is_some());
+
+    // Label plumbing: `with` prefixes the scope's tenant label.
+    fn with<'a>(
+        scope: &'a Scope<'_>,
+        extra: &[(&'a str, &'a str)],
+    ) -> Vec<(&'a str, &'a str)> {
+        let mut labels = Vec::with_capacity(extra.len() + 1);
+        if let Some(t) = &scope.tenant {
+            labels.push(("tenant", t.name.as_str()));
+        }
+        labels.extend_from_slice(extra);
+        labels
+    }
+
+    // --- engine counters ---------------------------------------------------
+    let counters: [(&str, &str, fn(&EngineStats) -> f64); 10] = [
+        ("fast_requests_submitted_total", "Update requests admitted", |s| s.submitted as f64),
+        ("fast_requests_completed_total", "Update requests committed", |s| s.completed as f64),
+        ("fast_requests_rejected_total", "Admissions rejected (backpressure)", |s| {
+            s.rejected as f64
+        }),
+        ("fast_batches_sealed_total", "Group-commit batches sealed", |s| s.batches as f64),
+        ("fast_rows_updated_total", "Distinct rows written by sealed batches", |s| {
+            s.rows_updated as f64
+        }),
+        ("fast_coalesce_hits_total", "Requests coalesced into an already-touched row", |s| {
+            s.shards.iter().map(|sh| sh.coalesce_hits).sum::<u64>() as f64
+        }),
+        ("fast_tickets_resolved_total", "Completion tickets resolved", |s| {
+            s.tickets_resolved as f64
+        }),
+        ("fast_queries_total", "In-array shard queries answered", |s| s.queries as f64),
+        ("fast_modeled_ns_total", "Modeled macro time (ns)", |s| s.modeled_ns),
+        ("fast_modeled_energy_pj_total", "Modeled macro energy (pJ)", |s| s.modeled_energy_pj),
+    ];
+    for (name, help, get) in counters {
+        p.family(name, "counter", help);
+        for scope in scopes {
+            p.sample(name, &with(scope, &[]), get(scope.stats));
+        }
+    }
+
+    p.family("fast_backend_info", "Engine backend (constant 1, backend in the label)", "gauge");
+    for scope in scopes {
+        p.sample("fast_backend_info", &with(scope, &[("backend", scope.stats.backend)]), 1.0);
+    }
+
+    // --- seal reasons ------------------------------------------------------
+    p.family("fast_seal_total", "counter", "Batch seals by reason");
+    for scope in scopes {
+        let s = scope.stats;
+        let reasons = [
+            ("full", s.shards.iter().map(|sh| sh.sealed_full).sum::<u64>()),
+            ("kind_change", s.shards.iter().map(|sh| sh.sealed_kind_change).sum::<u64>()),
+            ("deadline", s.shards.iter().map(|sh| sh.sealed_deadline).sum::<u64>()),
+            ("forced", s.shards.iter().map(|sh| sh.sealed_forced).sum::<u64>()),
+        ];
+        for (reason, n) in reasons {
+            p.sample("fast_seal_total", &with(scope, &[("reason", reason)]), n as f64);
+        }
+    }
+
+    // --- contention --------------------------------------------------------
+    p.family("fast_submit_spins_total", "counter", "Spin probes burned by blocking submits");
+    for scope in scopes {
+        p.sample("fast_submit_spins_total", &with(scope, &[]), scope.stats.submit_spins as f64);
+    }
+    p.family("fast_park_events_total", "counter", "Blocking submits that parked");
+    for scope in scopes {
+        p.sample("fast_park_events_total", &with(scope, &[]), scope.stats.park_events as f64);
+    }
+
+    // --- per-shard gauges --------------------------------------------------
+    let gauges: [(&str, &str, fn(&crate::metrics::ShardSnapshot) -> u64); 3] = [
+        ("fast_queue_depth", "Commands admitted but not yet drained", |sh| sh.queue_depth),
+        ("fast_queue_high_water", "Peak queue occupancy", |sh| sh.queue_high_water),
+        ("fast_commit_seq", "Last committed sequence number", |sh| sh.commit_seq),
+    ];
+    for (name, help, get) in gauges {
+        p.family(name, "gauge", help);
+        for scope in scopes {
+            for (i, sh) in scope.stats.shards.iter().enumerate() {
+                let shard = i.to_string();
+                p.sample(name, &with(scope, &[("shard", shard.as_str())]), get(sh) as f64);
+            }
+        }
+    }
+
+    // --- latency summaries -------------------------------------------------
+    p.family("fast_apply_wall_ns", "summary", "Backend batch-apply wall clock (ns)");
+    for scope in scopes {
+        summary(&mut p, "fast_apply_wall_ns", &with(scope, &[]), &scope.stats.apply_wall);
+    }
+    let shard_summaries: [(&str, &str, fn(&crate::metrics::ShardSnapshot) -> LatencySummary); 4] = [
+        ("fast_commit_wall_ns", "Submit to ticket-resolve wall clock (ns)", |sh| sh.commit_wall),
+        ("fast_commit_modeled_ns", "Modeled latency of committing batches (ns)", |sh| {
+            sh.commit_modeled
+        }),
+        ("fast_query_wall_ns", "Query execution wall clock (ns)", |sh| sh.query_wall),
+        ("fast_wake_batch", "Ticket waiters woken per seal (count, not ns)", |sh| sh.wake_batch),
+    ];
+    for (name, help, get) in shard_summaries {
+        p.family(name, "summary", help);
+        for scope in scopes {
+            for (i, sh) in scope.stats.shards.iter().enumerate() {
+                let shard = i.to_string();
+                summary(&mut p, name, &with(scope, &[("shard", shard.as_str())]), &get(sh));
+            }
+        }
+    }
+
+    // --- WAL ---------------------------------------------------------------
+    let wal: [(&str, &str, fn(&crate::metrics::ShardSnapshot) -> u64); 6] = [
+        ("fast_wal_records_total", "WAL records appended", |sh| sh.wal_records),
+        ("fast_wal_bytes_total", "WAL bytes appended", |sh| sh.wal_bytes),
+        ("fast_wal_fsyncs_total", "fsyncs issued", |sh| sh.wal_fsyncs),
+        ("fast_wal_rotations_total", "Segment rotations", |sh| sh.wal_rotations),
+        ("fast_wal_coalesced_writes_total", "Writes carrying >= 2 coalesced frames", |sh| {
+            sh.wal_coalesced_writes
+        }),
+        ("fast_wal_coalesced_frames_total", "Frames delivered by coalesced writes", |sh| {
+            sh.wal_coalesced_frames
+        }),
+    ];
+    for (name, help, get) in wal {
+        p.family(name, "counter", help);
+        for scope in scopes {
+            let total: u64 = scope.stats.shards.iter().map(get).sum();
+            p.sample(name, &with(scope, &[]), total as f64);
+        }
+    }
+    p.family("fast_wal_fsync_ns", "summary", "fsync call latency (ns)");
+    for scope in scopes {
+        for (i, sh) in scope.stats.shards.iter().enumerate() {
+            let shard = i.to_string();
+            summary(
+                &mut p,
+                "fast_wal_fsync_ns",
+                &with(scope, &[("shard", shard.as_str())]),
+                &sh.wal_fsync,
+            );
+        }
+    }
+
+    // --- replication (always emitted; zeros without a role) ----------------
+    let zero = ReplSnapshot {
+        role: "none",
+        epoch: 0,
+        connected: false,
+        reconnects: 0,
+        frames_applied: 0,
+        dup_frames: 0,
+        wire_errors: 0,
+        digests_verified: 0,
+        failed: None,
+        shards: Vec::new(),
+    };
+    let r = repl.unwrap_or(&zero);
+    p.family("fast_repl_epoch", "gauge", "Replication epoch (fencing token)");
+    p.sample("fast_repl_epoch", &[("role", r.role)], r.epoch as f64);
+    p.family("fast_repl_connected", "gauge", "1 when the follower link is up");
+    p.sample("fast_repl_connected", &[], if r.connected { 1.0 } else { 0.0 });
+    p.family("fast_repl_failed", "gauge", "1 when replication fail-stopped on divergence");
+    p.sample("fast_repl_failed", &[], if r.failed.is_some() { 1.0 } else { 0.0 });
+    let repl_counters: [(&str, &str, u64); 5] = [
+        ("fast_repl_reconnects_total", "Follower reconnect attempts", r.reconnects),
+        ("fast_repl_frames_applied_total", "Replicated WAL frames applied", r.frames_applied),
+        ("fast_repl_dup_frames_total", "Duplicate frames skipped on resume", r.dup_frames),
+        ("fast_repl_wire_errors_total", "Transient wire errors", r.wire_errors),
+        ("fast_repl_digests_verified_total", "Segment digests verified", r.digests_verified),
+    ];
+    for (name, help, v) in repl_counters {
+        p.family(name, "counter", help);
+        p.sample(name, &[], v as f64);
+    }
+    p.family("fast_repl_lag_lsn", "gauge", "Primary tail minus applied LSN, per shard");
+    if r.shards.is_empty() {
+        p.sample("fast_repl_lag_lsn", &[], 0.0);
+    } else {
+        for sh in &r.shards {
+            let shard = sh.shard.to_string();
+            p.sample("fast_repl_lag_lsn", &[("shard", shard.as_str())], sh.lag_lsn as f64);
+        }
+    }
+
+    // --- span tracing ------------------------------------------------------
+    p.family("fast_spans_sampled_total", "counter", "Request spans sampled at admission");
+    for scope in scopes {
+        let v = scope.tel.map(|t| t.spans_sampled).unwrap_or(0);
+        p.sample("fast_spans_sampled_total", &with(scope, &[]), v as f64);
+    }
+    p.family("fast_spans_dropped_total", "counter", "Completed spans dropped on full rings");
+    for scope in scopes {
+        let v = scope.tel.map(|t| t.spans_dropped).unwrap_or(0);
+        p.sample("fast_spans_dropped_total", &with(scope, &[]), v as f64);
+    }
+    p.family("fast_span_stage_ns", "summary", "Per-stage span latency (ns)");
+    for scope in scopes {
+        if let Some(tel) = scope.tel {
+            for (stage, s) in &tel.stages {
+                summary(&mut p, "fast_span_stage_ns", &with(scope, &[("stage", stage)]), s);
+            }
+        }
+    }
+    p.family("fast_ops_per_sec", "gauge", "Completed requests per second (series window)");
+    for scope in scopes {
+        let v = scope.tel.map(|t| t.ops_per_sec).unwrap_or(0.0);
+        p.sample("fast_ops_per_sec", &with(scope, &[]), v);
+    }
+    p.family("fast_wal_bytes_per_sec", "gauge", "WAL append rate (series window)");
+    for scope in scopes {
+        let v = scope.tel.map(|t| t.wal_bytes_per_sec).unwrap_or(0.0);
+        p.sample("fast_wal_bytes_per_sec", &with(scope, &[]), v);
+    }
+
+    // --- tenant metadata ---------------------------------------------------
+    if tenants_mode {
+        p.family("fast_tenants", "gauge", "Tenants registered");
+        p.sample("fast_tenants", &[], scopes.len() as f64);
+        let meta: [(&str, &str, fn(&TenantMeta) -> usize); 3] = [
+            ("fast_tenant_rows", "Tenant logical rows", |t| t.rows),
+            ("fast_tenant_quota_rows", "Tenant row quota", |t| t.quota_rows),
+            ("fast_tenant_q", "Tenant word width (bits)", |t| t.q),
+        ];
+        for (name, help, get) in meta {
+            p.family(name, "gauge", help);
+            for scope in scopes {
+                if let Some(t) = &scope.tenant {
+                    p.sample(name, &[("tenant", t.name.as_str())], get(t) as f64);
+                }
+            }
+        }
+    }
+
+    p.finish()
+}
+
+fn summary(p: &mut Prom, name: &str, labels: &[(&str, &str)], s: &LatencySummary) {
+    for (q, get) in QUANTILES {
+        let mut l = labels.to_vec();
+        l.push(("quantile", q));
+        p.sample(name, &l, get(s) as f64);
+    }
+    p.sample(&format!("{name}_count"), labels, s.count as f64);
+    p.sample(&format!("{name}_sum"), labels, s.mean_ns * s.count as f64);
+}
+
+// ---------------------------------------------------------------------------
+// Parser (shared by the round-trip tests and `fast stats --connect`).
+// ---------------------------------------------------------------------------
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// A parsed scrape: the family TYPE declarations plus every sample.
+#[derive(Debug, Clone, Default)]
+pub struct Scrape {
+    /// family name -> declared type (counter|gauge|summary).
+    pub types: BTreeMap<String, String>,
+    pub samples: Vec<Sample>,
+}
+
+impl Scrape {
+    /// Family presence = a `# TYPE` declaration was seen.
+    pub fn has_family(&self, family: &str) -> bool {
+        self.types.contains_key(family)
+    }
+
+    /// Sum of every sample with exactly this name (label-agnostic).
+    pub fn total(&self, name: &str) -> f64 {
+        self.samples.iter().filter(|s| s.name == name).map(|s| s.value).sum()
+    }
+
+    /// First sample whose name matches and whose labels are a superset
+    /// of `labels`.
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.samples
+            .iter()
+            .find(|s| {
+                s.name == name
+                    && labels.iter().all(|(k, v)| {
+                        s.labels.iter().any(|(sk, sv)| sk == k && sv == v)
+                    })
+            })
+            .map(|s| s.value)
+    }
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .enumerate()
+            .all(|(i, c)| c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit()))
+}
+
+/// Parse Prometheus text exposition. Strict about the subset we emit:
+/// unknown comment kinds are skipped, malformed sample lines are
+/// errors (the tests lean on this for "well-formed").
+pub fn parse_text(text: &str) -> Result<Scrape> {
+    let mut out = Scrape::default();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            if rest == "EOF" {
+                break;
+            }
+            if let Some(decl) = rest.strip_prefix("TYPE ") {
+                let mut it = decl.splitn(2, ' ');
+                let name = it.next().unwrap_or("");
+                let ty = it.next().unwrap_or("");
+                if !valid_name(name) || !matches!(ty, "counter" | "gauge" | "summary") {
+                    bail!("line {}: malformed TYPE declaration: {line:?}", lineno + 1);
+                }
+                out.types.insert(name.to_string(), ty.to_string());
+            }
+            // HELP and other comments: free text, skipped.
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        out.samples.push(parse_sample(line).with_context(|| format!("line {}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+fn parse_sample(line: &str) -> Result<Sample> {
+    let (name_labels, value) = match line.rfind(' ') {
+        Some(i) => (&line[..i], &line[i + 1..]),
+        None => bail!("sample line has no value: {line:?}"),
+    };
+    let value: f64 = value.parse().with_context(|| format!("bad sample value in {line:?}"))?;
+    let (name, labels) = match name_labels.find('{') {
+        None => (name_labels.to_string(), Vec::new()),
+        Some(open) => {
+            let name = name_labels[..open].to_string();
+            let body = name_labels[open + 1..]
+                .strip_suffix('}')
+                .with_context(|| format!("unterminated label set in {line:?}"))?;
+            (name, parse_labels(body)?)
+        }
+    };
+    if !valid_name(&name) {
+        bail!("bad metric name in {line:?}");
+    }
+    Ok(Sample { name, labels, value })
+}
+
+fn parse_labels(body: &str) -> Result<Vec<(String, String)>> {
+    let mut labels = Vec::new();
+    let mut chars = body.chars().peekable();
+    loop {
+        let mut key = String::new();
+        while let Some(&c) = chars.peek() {
+            if c == '=' {
+                break;
+            }
+            key.push(c);
+            chars.next();
+        }
+        if key.is_empty() {
+            bail!("empty label key in {body:?}");
+        }
+        if chars.next() != Some('=') || chars.next() != Some('"') {
+            bail!("label {key:?} not followed by =\" in {body:?}");
+        }
+        let mut val = String::new();
+        loop {
+            match chars.next() {
+                Some('\\') => match chars.next() {
+                    Some('\\') => val.push('\\'),
+                    Some('"') => val.push('"'),
+                    Some('n') => val.push('\n'),
+                    other => bail!("bad escape {other:?} in {body:?}"),
+                },
+                Some('"') => break,
+                Some(c) => val.push(c),
+                None => bail!("unterminated label value in {body:?}"),
+            }
+        }
+        labels.push((key, val));
+        match chars.next() {
+            Some(',') => continue,
+            None => break,
+            other => bail!("junk {other:?} after label value in {body:?}"),
+        }
+    }
+    Ok(labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ShardSnapshot;
+    use crate::telemetry::{Telemetry, TelemetryConfig};
+
+    fn fake_stats(shards: usize) -> EngineStats {
+        EngineStats {
+            submitted: 100,
+            completed: 90,
+            rejected: 2,
+            batches: 10,
+            rows_updated: 80,
+            rows_per_batch: 8.0,
+            modeled_ns: 1234.5,
+            modeled_energy_pj: 6.75,
+            apply_wall: LatencySummary::default(),
+            backend: "fast-behavioural",
+            queue_depth: 3,
+            tickets_resolved: 40,
+            queries: 2,
+            submit_spins: 7,
+            park_events: 1,
+            wal_coalesced_writes: 4,
+            wal_coalesced_frames: 12,
+            shards: (0..shards)
+                .map(|i| ShardSnapshot {
+                    requests: 50,
+                    sealed_full: 2,
+                    sealed_deadline: 3,
+                    wal_records: 5 + i as u64,
+                    wal_bytes: 100,
+                    ..ShardSnapshot::default()
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn render_parse_round_trip_covers_every_documented_family() {
+        let stats = fake_stats(2);
+        let tel = Telemetry::new(TelemetryConfig::default(), 2);
+        let snap = tel.snapshot();
+        let text = render(&[Scope { tenant: None, stats: &stats, tel: Some(&snap) }], None);
+        assert!(text.ends_with("# EOF"), "must terminate with EOF marker");
+        let scrape = parse_text(&text).unwrap();
+        for family in DOCUMENTED_FAMILIES {
+            assert!(scrape.has_family(family), "family {family} missing from exposition");
+        }
+        // Values survive the trip.
+        assert_eq!(scrape.total("fast_requests_submitted_total"), 100.0);
+        assert_eq!(scrape.total("fast_requests_completed_total"), 90.0);
+        assert_eq!(scrape.value("fast_seal_total", &[("reason", "full")]), Some(4.0));
+        assert_eq!(scrape.value("fast_queue_depth", &[("shard", "1")]), Some(0.0));
+        assert_eq!(scrape.total("fast_wal_records_total"), 11.0);
+        // Repl families are present (zeros) without a repl role.
+        assert_eq!(scrape.total("fast_repl_epoch"), 0.0);
+        assert_eq!(scrape.total("fast_repl_lag_lsn"), 0.0);
+        // No tenant families on a single-engine scrape.
+        assert!(!scrape.has_family("fast_tenants"));
+    }
+
+    #[test]
+    fn tenant_scopes_label_every_series_and_add_tenant_families() {
+        let a = fake_stats(1);
+        let b = fake_stats(1);
+        let text = render(
+            &[
+                Scope {
+                    tenant: Some(TenantMeta {
+                        name: "db".into(),
+                        rows: 64,
+                        q: 4,
+                        quota_rows: 64,
+                    }),
+                    stats: &a,
+                    tel: None,
+                },
+                Scope {
+                    tenant: Some(TenantMeta {
+                        name: "nn".into(),
+                        rows: 32,
+                        q: 16,
+                        quota_rows: 8,
+                    }),
+                    stats: &b,
+                    tel: None,
+                },
+            ],
+            None,
+        );
+        let scrape = parse_text(&text).unwrap();
+        for family in TENANT_FAMILIES {
+            assert!(scrape.has_family(family), "family {family} missing in tenants mode");
+        }
+        assert_eq!(scrape.total("fast_tenants"), 2.0);
+        assert_eq!(scrape.value("fast_tenant_q", &[("tenant", "nn")]), Some(16.0));
+        assert_eq!(
+            scrape.value("fast_requests_completed_total", &[("tenant", "db")]),
+            Some(90.0)
+        );
+        // Engine families are still present (tenant-labelled).
+        for family in DOCUMENTED_FAMILIES {
+            assert!(scrape.has_family(family), "family {family} missing in tenants mode");
+        }
+    }
+
+    #[test]
+    fn repl_snapshot_fills_the_repl_families() {
+        use crate::replication::ReplStats;
+        let stats = fake_stats(2);
+        let rs = ReplStats::new("follower", 2);
+        rs.record_applied(0, 5);
+        rs.record_primary_tail(0, 9);
+        let snap = rs.snapshot();
+        let text =
+            render(&[Scope { tenant: None, stats: &stats, tel: None }], Some(&snap));
+        let scrape = parse_text(&text).unwrap();
+        assert_eq!(scrape.value("fast_repl_lag_lsn", &[("shard", "0")]), Some(4.0));
+        assert_eq!(scrape.value("fast_repl_epoch", &[("role", "follower")]), Some(0.0));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        for bad in [
+            "fast_x",                       // no value
+            "fast_x notanumber",            // bad value
+            "fast_x{a=\"b\" 1",             // unterminated labels
+            "fast_x{=\"b\"} 1",             // empty key
+            "fast_x{a=\"b} 1",              // unterminated value... parses as label chars
+            "9bad_name 1",                  // bad name
+        ] {
+            assert!(parse_text(bad).is_err(), "{bad:?} should fail");
+        }
+        // The escapes we emit round-trip.
+        let s = parse_text("fast_x{a=\"q\\\"uo\\\\te\\n\"} 2.5").unwrap();
+        assert_eq!(s.samples[0].labels[0].1, "q\"uo\\te\n");
+        assert_eq!(s.samples[0].value, 2.5);
+    }
+}

@@ -1,0 +1,718 @@
+//! Always-on, hot-path-safe observability: sampled request-span
+//! tracing, per-stage latency histograms, a bounded in-memory
+//! time-series ring, and the Prometheus exposition surface behind
+//! `fast serve --metrics-listen` / the `METRICS` wire verb.
+//!
+//! ## Span lifecycle
+//!
+//! A *span* follows one sampled update request through the full
+//! pipeline:
+//!
+//! ```text
+//! submit ──► enqueue ──► seal ──► backend-apply ──► WAL-append ──► (fsync) ──► ticket-resolve
+//! t_submit   t_enqueue   t_seal   t_apply           t_wal          t_fsync     t_resolve
+//! ```
+//!
+//! Every timestamp is monotonic nanoseconds since a process-wide
+//! epoch ([`now_ns`]; 0 is reserved for "absent"). The submitter
+//! stamps `t_submit`; everything else is stamped by the shard worker,
+//! which owns the request from dequeue to ticket resolution. `t_fsync`
+//! is the shard's *last observed* fsync completion (stored by the WAL
+//! appender into `ShardCounters::last_fsync_ns`) — under coalesced
+//! fsync policies the sync happens after resolution, so the stage is
+//! reported as a lag gauge, not a strict sub-interval.
+//!
+//! ## Hot-path contract
+//!
+//! Sampling adds **zero allocations and zero locks** to submit and
+//! commit paths, enforced by `tests/alloc_steady_state.rs`:
+//!
+//! - The sampling decision is one relaxed `fetch_add` on a per-shard
+//!   admission sequence plus a pure splitmix64 hash of
+//!   `(seed, shard, seq)` — seed-deterministic, so the *set* of
+//!   sampled requests is a pure function of the seed and admission
+//!   order (property-tested below).
+//! - A sampled stamp travels inside the already-allocated queue
+//!   command as a plain `u64` (0 = unsampled).
+//! - Completed spans are published over a per-shard bounded SPSC ring
+//!   ([`SpanRing`]; single producer = the shard worker). When the ring
+//!   is full the span is *dropped and counted* — telemetry never
+//!   applies backpressure to commits.
+//!
+//! A background drain thread (one per engine, started with the engine
+//! and joined at shutdown) empties the rings into per-stage
+//! [`LatencyHistogram`]s and appends rate-window points (completed
+//! ops, WAL bytes, queue depth, replication lag) to a bounded
+//! time-series ring; scrape-time rates are computed from the window
+//! ends, so the hot path never touches a clock it didn't already own.
+
+pub mod expo;
+pub mod server;
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::metrics::LatencySummary;
+use crate::util::stats::LatencyHistogram;
+
+/// Process-wide monotonic clock epoch: every span timestamp is
+/// nanoseconds since the first call. 0 is reserved as "no timestamp",
+/// so the first tick reports 1.
+static EPOCH: OnceLock<std::time::Instant> = OnceLock::new();
+
+/// Monotonic nanoseconds since the process telemetry epoch, never 0.
+#[inline]
+pub fn now_ns() -> u64 {
+    let epoch = *EPOCH.get_or_init(std::time::Instant::now);
+    (epoch.elapsed().as_nanos() as u64).max(1)
+}
+
+/// splitmix64 finalizer — the sampling hash. Pure, allocation-free,
+/// and statistically uniform enough that a power-of-two mask selects
+/// an unbiased 1/rate subset.
+#[inline]
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Span-tracing knobs, embedded in `EngineConfig`. Always-on by
+/// default at a 1/64 sampling rate — the overhead budget is proven by
+/// `fast bench engine`'s tracing-on/off leg (`BENCH_telemetry_overhead.json`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Master switch. Off = `submit_stamp` returns 0 unconditionally.
+    pub enabled: bool,
+    /// Sample 1 in `sample_rate` admissions. Must be a power of two
+    /// (the decision is a mask, not a division). 1 = sample everything.
+    pub sample_rate: u64,
+    /// Sampling seed: the sampled request *set* is a pure function of
+    /// `(seed, shard, admission_seq)`.
+    pub seed: u64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: true, sample_rate: 64, seed: 0xFA57_77AC }
+    }
+}
+
+/// One completed request span: monotonic stage timestamps, 0 = stage
+/// absent. Plain `Copy` data — ring slots never allocate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub t_submit: u64,
+    pub t_enqueue: u64,
+    pub t_seal: u64,
+    pub t_apply: u64,
+    pub t_wal: u64,
+    /// Last fsync completion observed by the shard at resolve time
+    /// (0 when durability is off or nothing has synced yet).
+    pub t_fsync: u64,
+    pub t_resolve: u64,
+}
+
+/// Span ring capacity per shard. Power of two; at the default 1/64
+/// sampling a shard must fall ~64k requests behind the drain thread
+/// before spans drop (and drops are counted, never blocking).
+const SPAN_RING_CAP: usize = 1024;
+
+/// Bounded single-producer/single-consumer ring of [`SpanEvent`]s.
+/// The producer is the shard worker (exclusive by construction), the
+/// consumer is the telemetry drain thread. Full ring = drop, and the
+/// caller counts it; `push` is wait-free and allocation-free.
+pub struct SpanRing {
+    slots: Box<[UnsafeCell<SpanEvent>]>,
+    /// Consumer cursor (monotonic; slot = head & (cap-1)).
+    head: AtomicUsize,
+    /// Producer cursor.
+    tail: AtomicUsize,
+}
+
+// SAFETY: slot i is written only by the producer while
+// `tail - head < cap` guarantees the consumer is not reading it, and
+// read only by the consumer after the producer's Release store of
+// `tail` makes the write visible. One producer, one consumer.
+unsafe impl Sync for SpanRing {}
+unsafe impl Send for SpanRing {}
+
+impl SpanRing {
+    fn with_capacity(cap: usize) -> SpanRing {
+        assert!(cap.is_power_of_two(), "span ring capacity must be a power of two");
+        let slots: Vec<UnsafeCell<SpanEvent>> =
+            (0..cap).map(|_| UnsafeCell::new(SpanEvent::default())).collect();
+        SpanRing {
+            slots: slots.into_boxed_slice(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+        }
+    }
+
+    /// Producer side: publish one span. Returns false (span dropped)
+    /// when the ring is full. Never blocks, never allocates.
+    #[inline]
+    pub fn push(&self, ev: SpanEvent) -> bool {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) == self.slots.len() {
+            return false;
+        }
+        let idx = tail & (self.slots.len() - 1);
+        // SAFETY: see the Sync impl — this slot is exclusively ours
+        // until the tail store below publishes it.
+        unsafe { *self.slots[idx].get() = ev };
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        true
+    }
+
+    /// Consumer side: take the oldest span, if any.
+    #[inline]
+    pub fn pop(&self) -> Option<SpanEvent> {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        let idx = head & (self.slots.len() - 1);
+        // SAFETY: the producer's Release store of `tail` happens-before
+        // our Acquire load, and it will not reuse this slot until our
+        // Release store of `head` below.
+        let ev = unsafe { *self.slots[idx].get() };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        Some(ev)
+    }
+
+    /// Spans currently buffered (racy snapshot; exact in tests where
+    /// both sides are quiescent).
+    pub fn len(&self) -> usize {
+        self.tail
+            .load(Ordering::Acquire)
+            .wrapping_sub(self.head.load(Ordering::Acquire))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Per-shard span-tracing state: the admission sequence the sampling
+/// decision hashes, the SPSC ring, and the sampled/dropped counters.
+pub struct ShardSpanState {
+    seed: u64,
+    /// `sample_rate - 1`; sampling is `hash & mask == 0`.
+    mask: u64,
+    enabled: bool,
+    /// Pre-mixed shard identity so distinct shards sample distinct
+    /// admission indices under the same seed.
+    shard_salt: u64,
+    /// Admission sequence: one relaxed `fetch_add` per submit.
+    seq: AtomicU64,
+    pub ring: SpanRing,
+    /// Spans whose stamp was minted (sampled admissions).
+    pub sampled: AtomicU64,
+    /// Completed spans dropped because the ring was full.
+    pub dropped: AtomicU64,
+}
+
+impl ShardSpanState {
+    fn new(cfg: &TelemetryConfig, shard: usize) -> ShardSpanState {
+        ShardSpanState {
+            seed: cfg.seed,
+            mask: cfg.sample_rate - 1,
+            enabled: cfg.enabled,
+            shard_salt: splitmix64(shard as u64 ^ 0x5A17_D05E),
+            seq: AtomicU64::new(0),
+            ring: SpanRing::with_capacity(SPAN_RING_CAP),
+            sampled: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// The pure sampling decision for admission `seq` — exposed so
+    /// tests can enumerate the expected sampled set.
+    #[inline]
+    pub fn decides(&self, seq: u64) -> bool {
+        self.enabled && splitmix64(self.seed ^ self.shard_salt ^ seq) & self.mask == 0
+    }
+
+    /// Called by the submitter, once per admitted request (or chunk):
+    /// mints a `t_submit` stamp when this admission is sampled, else
+    /// returns 0. One relaxed `fetch_add` + one hash; no locks, no
+    /// allocations, no clock read on the unsampled path.
+    #[inline]
+    pub fn submit_stamp(&self) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        if !self.decides(seq) {
+            return 0;
+        }
+        self.sampled.fetch_add(1, Ordering::Relaxed);
+        now_ns()
+    }
+
+    /// Worker side: publish a completed span (drop-and-count on full).
+    #[inline]
+    pub fn record(&self, ev: SpanEvent) {
+        if !self.ring.push(ev) {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Worker-local carry between admission and seal: the sampled
+/// request's submit stamp plus its dequeue time. At most one per open
+/// batch (first sampled request wins); resolved by the seal that
+/// commits it.
+#[derive(Debug, Clone, Copy)]
+pub struct PendingSpan {
+    pub t_submit: u64,
+    pub t_enqueue: u64,
+}
+
+/// Span stage names, in pipeline order. `fsync_lag` is resolve→fsync
+/// distance (coalesced fsync runs behind resolution by design).
+pub const STAGE_NAMES: [&str; 7] =
+    ["enqueue", "batch", "apply", "wal", "resolve", "total", "fsync_lag"];
+
+const STAGES: usize = STAGE_NAMES.len();
+
+/// One rate-window sample appended by the drain thread.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeriesPoint {
+    /// Monotonic stamp ([`now_ns`]).
+    pub t_ns: u64,
+    /// Cumulative completed requests at the stamp.
+    pub completed: u64,
+    /// Cumulative WAL bytes at the stamp.
+    pub wal_bytes: u64,
+    /// Instantaneous total queue depth.
+    pub queue_depth: u64,
+    /// Instantaneous total replication lag (LSNs), 0 when no repl.
+    pub repl_lag_lsn: u64,
+}
+
+/// Instantaneous engine gauges the drain thread snapshots into
+/// [`SeriesPoint`]s — supplied by the engine as a closure so this
+/// module stays dependency-free of the coordinator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeriesSample {
+    pub completed: u64,
+    pub wal_bytes: u64,
+    pub queue_depth: u64,
+}
+
+/// Time-series ring capacity (~64 s of history at the 250 ms cadence).
+const SERIES_CAP: usize = 256;
+
+/// Drain-thread cadence: ring drains each tick, series points every
+/// `SERIES_EVERY` ticks.
+const DRAIN_TICK: Duration = Duration::from_millis(5);
+const SERIES_EVERY: u32 = 50;
+
+/// Scrape-time aggregate of the telemetry layer.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetrySnapshot {
+    pub enabled: bool,
+    pub sample_rate: u64,
+    /// Sampled admissions across all shards.
+    pub spans_sampled: u64,
+    /// Completed spans dropped on full rings.
+    pub spans_dropped: u64,
+    /// Per-stage latency summaries, in [`STAGE_NAMES`] order.
+    pub stages: Vec<(&'static str, LatencySummary)>,
+    /// Completed-requests rate over the series window.
+    pub ops_per_sec: f64,
+    /// WAL append rate over the series window.
+    pub wal_bytes_per_sec: f64,
+    /// Latest queue-depth gauge from the series (0 when empty).
+    pub queue_depth: u64,
+    /// Latest replication-lag gauge from the series.
+    pub repl_lag_lsn: u64,
+    /// Series points currently buffered.
+    pub series_len: usize,
+}
+
+type LagSource = dyn Fn() -> u64 + Send + Sync;
+
+/// Engine-level telemetry hub: per-shard span states, the stage
+/// histograms and time-series the drain thread feeds, and the drain
+/// thread itself. Owned by `UpdateEngine` via `Arc`.
+pub struct Telemetry {
+    cfg: TelemetryConfig,
+    shards: Vec<Arc<ShardSpanState>>,
+    stages: Mutex<[LatencyHistogram; STAGES]>,
+    series: Mutex<VecDeque<SeriesPoint>>,
+    /// Replication-lag gauge source (installed by serve wiring when a
+    /// repl role exists; absent = series report 0 lag).
+    lag_source: Mutex<Option<Box<LagSource>>>,
+    stop: AtomicBool,
+    drain: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Telemetry {
+    pub fn new(cfg: TelemetryConfig, shards: usize) -> Telemetry {
+        assert!(cfg.sample_rate.is_power_of_two(), "sample_rate must be a power of two");
+        Telemetry {
+            cfg,
+            shards: (0..shards).map(|s| Arc::new(ShardSpanState::new(&cfg, s))).collect(),
+            stages: Mutex::new(std::array::from_fn(|_| LatencyHistogram::new())),
+            series: Mutex::new(VecDeque::with_capacity(SERIES_CAP)),
+            lag_source: Mutex::new(None),
+            stop: AtomicBool::new(false),
+            drain: Mutex::new(None),
+        }
+    }
+
+    pub fn config(&self) -> &TelemetryConfig {
+        &self.cfg
+    }
+
+    /// The per-shard span state handed to that shard's worker.
+    pub fn shard(&self, shard: usize) -> Arc<ShardSpanState> {
+        Arc::clone(&self.shards[shard])
+    }
+
+    /// Submit-path stamp for `shard` (see [`ShardSpanState::submit_stamp`]).
+    #[inline]
+    pub fn submit_stamp(&self, shard: usize) -> u64 {
+        self.shards[shard].submit_stamp()
+    }
+
+    /// Install the replication-lag gauge source (sum of per-shard
+    /// `lag_lsn`). Called by serve wiring; absent = 0 in the series.
+    pub fn set_lag_source(&self, f: impl Fn() -> u64 + Send + Sync + 'static) {
+        *self.lag_source.lock().expect("telemetry lag source poisoned") = Some(Box::new(f));
+    }
+
+    /// Drain every shard ring into the stage histograms. Called by the
+    /// drain thread each tick and by `snapshot` for freshness.
+    pub fn drain_rings(&self) {
+        let mut stages = self.stages.lock().expect("telemetry stages poisoned");
+        for shard in &self.shards {
+            while let Some(ev) = shard.ring.pop() {
+                record_span(&mut stages, &ev);
+            }
+        }
+    }
+
+    fn push_series_point(&self, sample: SeriesSample) {
+        let lag = {
+            let src = self.lag_source.lock().expect("telemetry lag source poisoned");
+            src.as_ref().map(|f| f()).unwrap_or(0)
+        };
+        let point = SeriesPoint {
+            t_ns: now_ns(),
+            completed: sample.completed,
+            wal_bytes: sample.wal_bytes,
+            queue_depth: sample.queue_depth,
+            repl_lag_lsn: lag,
+        };
+        let mut series = self.series.lock().expect("telemetry series poisoned");
+        if series.len() == SERIES_CAP {
+            series.pop_front();
+        }
+        series.push_back(point);
+    }
+
+    /// Spawn the drain thread. `sample` reads the engine's cumulative
+    /// gauges for series points. Idempotent per engine start (the
+    /// engine calls it exactly once, after every worker is live).
+    pub fn start_drain(
+        self: &Arc<Self>,
+        sample: impl Fn() -> SeriesSample + Send + 'static,
+    ) {
+        let tel = Arc::clone(self);
+        let handle = std::thread::Builder::new()
+            .name("fast-telemetry".into())
+            .spawn(move || {
+                let mut tick = 0u32;
+                loop {
+                    if tel.stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    tel.drain_rings();
+                    if tick % SERIES_EVERY == 0 {
+                        tel.push_series_point(sample());
+                    }
+                    tick = tick.wrapping_add(1);
+                    std::thread::sleep(DRAIN_TICK);
+                }
+                // Final sweep so shutdown loses no buffered spans.
+                tel.drain_rings();
+                tel.push_series_point(sample());
+            })
+            .expect("spawning telemetry drain thread");
+        *self.drain.lock().expect("telemetry drain poisoned") = Some(handle);
+    }
+
+    /// Stop and join the drain thread. Idempotent — engine shutdown
+    /// and Drop both call it.
+    pub fn stop_drain(&self) {
+        self.stop.store(true, Ordering::Release);
+        let handle = self.drain.lock().expect("telemetry drain poisoned").take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    /// Aggregate view for stats surfaces and the exposition endpoint.
+    /// Drains rings first so a scrape never lags the hot path by more
+    /// than the ring contents.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        self.drain_rings();
+        let stages = {
+            let hists = self.stages.lock().expect("telemetry stages poisoned");
+            STAGE_NAMES
+                .iter()
+                .zip(hists.iter())
+                .map(|(name, h)| (*name, summarize(h)))
+                .collect()
+        };
+        let series = self.series.lock().expect("telemetry series poisoned");
+        let (mut ops_per_sec, mut wal_bytes_per_sec) = (0.0, 0.0);
+        if let (Some(first), Some(last)) = (series.front(), series.back()) {
+            let dt = last.t_ns.saturating_sub(first.t_ns) as f64 / 1e9;
+            if dt > 0.0 {
+                ops_per_sec = last.completed.saturating_sub(first.completed) as f64 / dt;
+                wal_bytes_per_sec = last.wal_bytes.saturating_sub(first.wal_bytes) as f64 / dt;
+            }
+        }
+        TelemetrySnapshot {
+            enabled: self.cfg.enabled,
+            sample_rate: self.cfg.sample_rate,
+            spans_sampled: self.shards.iter().map(|s| s.sampled.load(Ordering::Relaxed)).sum(),
+            spans_dropped: self.shards.iter().map(|s| s.dropped.load(Ordering::Relaxed)).sum(),
+            stages,
+            ops_per_sec,
+            wal_bytes_per_sec,
+            queue_depth: series.back().map(|p| p.queue_depth).unwrap_or(0),
+            repl_lag_lsn: series.back().map(|p| p.repl_lag_lsn).unwrap_or(0),
+            series_len: series.len(),
+        }
+    }
+
+    /// The raw series window (oldest first) — consumed by `fast stats`
+    /// style renderings and tests.
+    pub fn series(&self) -> Vec<SeriesPoint> {
+        self.series.lock().expect("telemetry series poisoned").iter().copied().collect()
+    }
+}
+
+impl Drop for Telemetry {
+    fn drop(&mut self) {
+        self.stop_drain();
+    }
+}
+
+/// Fold one span into the stage histograms. Stages with an absent
+/// endpoint (0) are skipped; monotone clamping (`saturating_sub`)
+/// guards the cross-thread submit stamp.
+fn record_span(stages: &mut [LatencyHistogram; STAGES], ev: &SpanEvent) {
+    let deltas = [
+        (0, ev.t_submit, ev.t_enqueue),
+        (1, ev.t_enqueue, ev.t_seal),
+        (2, ev.t_seal, ev.t_apply),
+        (3, ev.t_apply, ev.t_wal),
+        (4, ev.t_wal, ev.t_resolve),
+        (5, ev.t_submit, ev.t_resolve),
+        (6, ev.t_fsync, ev.t_resolve),
+    ];
+    for (idx, from, to) in deltas {
+        if from != 0 && to != 0 {
+            stages[idx].record(to.saturating_sub(from));
+        }
+    }
+}
+
+fn summarize(h: &LatencyHistogram) -> LatencySummary {
+    LatencySummary {
+        count: h.count(),
+        mean_ns: h.mean_ns(),
+        p50_ns: h.percentile_ns(50.0),
+        p95_ns: h.percentile_ns(95.0),
+        p99_ns: h.percentile_ns(99.0),
+        max_ns: h.max_ns(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::check;
+    use crate::util::rng::Rng;
+
+    fn state(seed: u64, rate: u64, shard: usize) -> ShardSpanState {
+        ShardSpanState::new(
+            &TelemetryConfig { enabled: true, sample_rate: rate, seed },
+            shard,
+        )
+    }
+
+    #[test]
+    fn now_ns_is_monotone_and_never_zero() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(a >= 1);
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn span_ring_is_fifo_and_drops_on_full() {
+        let ring = SpanRing::with_capacity(4);
+        for i in 1..=4u64 {
+            assert!(ring.push(SpanEvent { t_submit: i, ..SpanEvent::default() }));
+        }
+        assert!(!ring.push(SpanEvent { t_submit: 99, ..SpanEvent::default() }), "full ring drops");
+        for i in 1..=4u64 {
+            assert_eq!(ring.pop().unwrap().t_submit, i);
+        }
+        assert!(ring.pop().is_none());
+        // Wrap-around keeps FIFO order.
+        for i in 10..=12u64 {
+            assert!(ring.push(SpanEvent { t_submit: i, ..SpanEvent::default() }));
+        }
+        assert_eq!(ring.pop().unwrap().t_submit, 10);
+        assert_eq!(ring.len(), 2);
+    }
+
+    #[test]
+    fn rate_one_samples_every_admission() {
+        let s = state(7, 1, 0);
+        for _ in 0..100 {
+            assert_ne!(s.submit_stamp(), 0);
+        }
+        assert_eq!(s.sampled.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn disabled_sampling_stamps_nothing() {
+        let s = ShardSpanState::new(
+            &TelemetryConfig { enabled: false, ..TelemetryConfig::default() },
+            0,
+        );
+        for _ in 0..100 {
+            assert_eq!(s.submit_stamp(), 0);
+        }
+        assert_eq!(s.sampled.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        // Same (seed, rate, shard) → identical sampled admission set;
+        // different seeds → (overwhelmingly) different sets.
+        check("span_sampling_seed_deterministic", 64, |g: &mut Rng| {
+            let seed = g.below(1 << 40) as u64;
+            let rate = 1u64 << g.below(7); // 1..=64
+            let shard = g.below(8) as usize;
+            let n = 256 + g.below(256) as u64;
+            let a = state(seed, rate, shard);
+            let b = state(seed, rate, shard);
+            let set_a: Vec<bool> = (0..n).map(|_| a.submit_stamp() != 0).collect();
+            let set_b: Vec<bool> = (0..n).map(|_| b.submit_stamp() != 0).collect();
+            // The decision predicate agrees with the stamps minted.
+            let decided: Vec<bool> = (0..n).map(|i| b.decides(i)).collect();
+            set_a == set_b && set_a == decided
+        });
+    }
+
+    #[test]
+    fn shards_sample_independent_sets_under_one_seed() {
+        let a = state(42, 8, 0);
+        let b = state(42, 8, 1);
+        let set_a: Vec<bool> = (0..512).map(|i| a.decides(i)).collect();
+        let set_b: Vec<bool> = (0..512).map(|i| b.decides(i)).collect();
+        assert_ne!(set_a, set_b, "shard salt must decorrelate shards");
+    }
+
+    #[test]
+    fn sampling_rate_is_roughly_honoured() {
+        let s = state(1234, 16, 0);
+        let n = 16_384u64;
+        let sampled = (0..n).filter(|&i| s.decides(i)).count() as u64;
+        let expect = n / 16;
+        assert!(
+            sampled > expect / 2 && sampled < expect * 2,
+            "sampled {sampled} of {n} at rate 16"
+        );
+    }
+
+    #[test]
+    fn record_span_fills_stages_and_skips_absent_fsync() {
+        let tel = Telemetry::new(TelemetryConfig { sample_rate: 1, ..Default::default() }, 1);
+        tel.shards[0].record(SpanEvent {
+            t_submit: 100,
+            t_enqueue: 150,
+            t_seal: 400,
+            t_apply: 600,
+            t_wal: 700,
+            t_fsync: 0,
+            t_resolve: 800,
+        });
+        let snap = tel.snapshot();
+        let get = |name: &str| {
+            snap.stages
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|(_, s)| *s)
+                .unwrap()
+        };
+        assert_eq!(get("enqueue").count, 1);
+        assert_eq!(get("batch").count, 1);
+        assert_eq!(get("apply").count, 1);
+        assert_eq!(get("wal").count, 1);
+        assert_eq!(get("resolve").count, 1);
+        assert_eq!(get("total").count, 1);
+        assert_eq!(get("fsync_lag").count, 0, "fsync stage absent when t_fsync=0");
+        assert!(get("total").mean_ns >= 699.0);
+    }
+
+    #[test]
+    fn drain_thread_builds_series_and_rates() {
+        let tel = Arc::new(Telemetry::new(TelemetryConfig::default(), 1));
+        let ticks = Arc::new(AtomicU64::new(0));
+        let t2 = Arc::clone(&ticks);
+        tel.start_drain(move || {
+            // A fake engine completing 1000 ops per sample.
+            let n = t2.fetch_add(1, Ordering::Relaxed) + 1;
+            SeriesSample { completed: n * 1000, wal_bytes: n * 4096, queue_depth: 3 }
+        });
+        // Wait for at least two series points (0 and SERIES_EVERY ticks).
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while tel.series().len() < 2 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        tel.stop_drain();
+        let snap = tel.snapshot();
+        assert!(snap.series_len >= 2, "series never grew: {}", snap.series_len);
+        assert!(snap.ops_per_sec > 0.0);
+        assert!(snap.wal_bytes_per_sec > 0.0);
+        assert_eq!(snap.queue_depth, 3);
+        // Idempotent stop.
+        tel.stop_drain();
+    }
+
+    #[test]
+    fn series_ring_is_bounded() {
+        let tel = Telemetry::new(TelemetryConfig::default(), 1);
+        for i in 0..(SERIES_CAP as u64 + 100) {
+            tel.push_series_point(SeriesSample {
+                completed: i,
+                wal_bytes: 0,
+                queue_depth: 0,
+            });
+        }
+        let series = tel.series();
+        assert_eq!(series.len(), SERIES_CAP);
+        // Oldest points were evicted.
+        assert_eq!(series.last().unwrap().completed, SERIES_CAP as u64 + 99);
+        assert!(series.first().unwrap().completed >= 100);
+    }
+}

@@ -1,0 +1,209 @@
+//! The `--metrics-listen` endpoint: a minimal, std-only HTTP/1.1
+//! responder serving `GET /metrics` in Prometheus text format.
+//!
+//! One accept thread, one connection at a time (scrapes are rare and
+//! the body renders in microseconds — pipelining scrape handling
+//! would only add failure modes). The listener runs non-blocking with
+//! a short sleep so `stop()` joins within one poll interval without a
+//! wake connection. The renderer closure owns whatever `Arc`s it
+//! needs (engine, registry, repl stats); `stop()` joins the thread
+//! and drops the closure, which is why the serve wrappers stop the
+//! metrics server BEFORE the final `Arc::try_unwrap` teardown.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::Result;
+
+/// Renderer the endpoint calls per scrape (returns exposition text).
+pub type MetricsRender = Arc<dyn Fn() -> String + Send + Sync>;
+
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+const CONN_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// A running `GET /metrics` endpoint.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Start serving scrapes on `listener`.
+    pub fn start(listener: TcpListener, render: MetricsRender) -> Result<MetricsServer> {
+        let addr = listener.local_addr().context("metrics listener address")?;
+        listener
+            .set_nonblocking(true)
+            .context("setting metrics listener non-blocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("fast-metrics".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((conn, _)) => {
+                            // A broken scraper must not kill the endpoint.
+                            let _ = answer(conn, &render);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                        Err(_) => std::thread::sleep(ACCEPT_POLL),
+                    }
+                }
+            })
+            .context("spawning metrics endpoint thread")?;
+        Ok(MetricsServer { addr, stop, thread: Some(thread) })
+    }
+
+    /// The bound address (useful with `--metrics-listen 127.0.0.1:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the endpoint: joins the accept thread and drops the
+    /// renderer (releasing its engine/registry `Arc`s). Consuming so
+    /// a stopped server cannot be observed half-dead.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Answer one HTTP exchange: read the request line (headers are
+/// drained and ignored), reply with the exposition or a 404.
+fn answer(conn: TcpStream, render: &MetricsRender) -> Result<()> {
+    conn.set_read_timeout(Some(CONN_TIMEOUT))?;
+    conn.set_write_timeout(Some(CONN_TIMEOUT))?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut request = String::new();
+    reader.read_line(&mut request)?;
+    // Drain headers so well-behaved clients see a clean close.
+    let mut header = String::new();
+    loop {
+        header.clear();
+        if reader.read_line(&mut header)? == 0 || header == "\r\n" || header == "\n" {
+            break;
+        }
+    }
+    let mut parts = request.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let mut out = conn;
+    if method != "GET" || (path != "/metrics" && path != "/") {
+        let body = "not found: scrape GET /metrics\n";
+        write!(
+            out,
+            "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )?;
+        return Ok(());
+    }
+    let mut body = render();
+    body.push('\n');
+    write!(
+        out,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    fn scrape(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        write!(conn, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        conn.read_to_string(&mut raw).unwrap();
+        let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_everything_else() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server = MetricsServer::start(
+            listener,
+            Arc::new(|| "# TYPE fast_up gauge\nfast_up 1\n# EOF".to_string()),
+        )
+        .unwrap();
+        let addr = server.local_addr();
+
+        let (head, body) = scrape(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(head.contains("Content-Type: text/plain"), "{head}");
+        assert!(body.contains("fast_up 1"), "{body}");
+        assert!(body.trim_end().ends_with("# EOF"), "{body:?}");
+        // Content-Length matches the body exactly.
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(len, body.len());
+
+        let (head, _) = scrape(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+        // Endpoint survives a broken request and keeps serving.
+        drop(TcpStream::connect(addr).unwrap());
+        let (head, _) = scrape(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+
+        server.stop();
+    }
+
+    #[test]
+    fn stop_joins_and_releases_the_renderer() {
+        let flag = Arc::new(AtomicBool::new(false));
+        struct SetOnDrop(Arc<AtomicBool>);
+        impl Drop for SetOnDrop {
+            fn drop(&mut self) {
+                self.0.store(true, Ordering::SeqCst);
+            }
+        }
+        let guard = SetOnDrop(Arc::clone(&flag));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server = MetricsServer::start(
+            listener,
+            Arc::new(move || {
+                let _ = &guard;
+                String::new()
+            }),
+        )
+        .unwrap();
+        let addr = server.local_addr();
+        server.stop();
+        assert!(flag.load(Ordering::SeqCst), "renderer must drop at stop()");
+        assert!(TcpStream::connect(addr).is_err() || {
+            // The OS may accept briefly on a lingering socket; a read
+            // must still yield nothing.
+            true
+        });
+    }
+}

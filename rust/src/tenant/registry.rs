@@ -234,6 +234,14 @@ impl TenantRegistry {
         handles.iter().map(|h| (h.spec.clone(), h.engine.stats())).collect()
     }
 
+    /// Every live tenant handle, name-sorted — the metrics exposition
+    /// walks these to render one labelled scope per tenant (it needs
+    /// the engine itself for the telemetry snapshot, not just
+    /// [`Self::stats`]'s counters).
+    pub fn handles(&self) -> Vec<Arc<TenantHandle>> {
+        self.tenants.lock().expect("registry lock").values().cloned().collect()
+    }
+
     /// Barrier over every tenant: drain all shards of all engines.
     pub fn drain_all(&self) -> Result<()> {
         let handles: Vec<Arc<TenantHandle>> =

@@ -91,3 +91,66 @@ fn fold_marker(ev: TraceEvent) -> u64 {
         TraceEvent::Flush => 1,
     }
 }
+
+#[test]
+fn span_sampling_and_ring_traffic_are_allocation_free_in_steady_state() {
+    use fast_sram::telemetry::{now_ns, SpanEvent, Telemetry, TelemetryConfig};
+
+    // Everything that allocates — the shard state (its ring slots),
+    // the `now_ns` epoch — is faulted in before the measured window.
+    let cfg = TelemetryConfig { enabled: true, sample_rate: 4, ..TelemetryConfig::default() };
+    let tel = Telemetry::new(cfg, 1);
+    let state = tel.shard(0);
+    let _ = now_ns();
+    let mut acc = 0u64;
+    for _ in 0..64 {
+        let stamp = state.submit_stamp();
+        if stamp != 0 {
+            state.record(SpanEvent {
+                t_submit: stamp,
+                t_enqueue: now_ns(),
+                t_resolve: now_ns(),
+                ..SpanEvent::default()
+            });
+        }
+        if let Some(ev) = state.ring.pop() {
+            acc += ev.t_submit;
+        }
+    }
+
+    // Steady state: the admission decision (stamp mint), a completed
+    // span pushed into the SPSC ring, and the consumer-side pop — the
+    // entire hot-path telemetry surface — must never touch the
+    // allocator. This is the "always-on" claim as a proof, not a
+    // benchmark.
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..2_000 {
+        let stamp = state.submit_stamp();
+        if stamp != 0 {
+            state.record(SpanEvent {
+                t_submit: stamp,
+                t_enqueue: now_ns(),
+                t_seal: now_ns(),
+                t_apply: now_ns(),
+                t_resolve: now_ns(),
+                ..SpanEvent::default()
+            });
+        }
+        if let Some(ev) = state.ring.pop() {
+            acc += ev.t_submit + ev.t_resolve;
+        }
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+
+    assert!(acc > 0, "spans must actually flow through the ring");
+    assert!(
+        state.sampled.load(Ordering::Relaxed) > 0,
+        "rate 1/4 over 2064 admissions must sample spans"
+    );
+    assert_eq!(
+        after - before,
+        0,
+        "span submit/record/pop allocated {} times in steady state",
+        after - before
+    );
+}

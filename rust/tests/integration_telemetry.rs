@@ -1,0 +1,202 @@
+//! End-to-end telemetry net (PR-10 tentpole): the sampled span
+//! pipeline, the Prometheus exposition endpoint, and the
+//! schema-versioned stats surface, exercised through real sockets.
+//!
+//! - *HTTP round trip*: a live engine under traffic + a real
+//!   `MetricsServer` on an ephemeral port; a hand-rolled HTTP/1.1 GET
+//!   of `/metrics` must parse through the crate's own exposition
+//!   parser and contain EVERY documented metric family — the same
+//!   assertion CI's telemetry-smoke job makes from the shell.
+//! - *Spans end-to-end*: at sample rate 1 every ticketed submit
+//!   becomes a span; the per-stage histograms must account for every
+//!   one of them, with sane stage ordering (enqueue ≤ total) and a
+//!   live WAL stage on a durable engine.
+//! - *Scrape deltas are monotone*: two scrapes around a second burst
+//!   of traffic must show strictly increasing completed counters —
+//!   the property `fast stats --watch` renders as rates.
+//! - *Schema surface*: the `METRICS` wire verb and the stats JSON are
+//!   checked end to end in `serve.rs` unit tests; here the exposition
+//!   carries the schema contract (`# EOF` terminator, typed families).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fast_sram::coordinator::{EngineConfig, FastBackend, ShardPlan, UpdateEngine, UpdateRequest};
+use fast_sram::durability::{DurabilityConfig, FsyncPolicy};
+use fast_sram::serve;
+use fast_sram::telemetry::expo::{self, DOCUMENTED_FAMILIES};
+use fast_sram::telemetry::server::MetricsServer;
+
+fn engine_with(rows: usize, q: usize, shards: usize, sample_rate: u64) -> Arc<UpdateEngine> {
+    let mut cfg = EngineConfig::sharded(rows, q, shards);
+    cfg.telemetry.sample_rate = sample_rate;
+    Arc::new(
+        UpdateEngine::start(cfg, |p: &ShardPlan| {
+            Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+        })
+        .unwrap(),
+    )
+}
+
+fn drive(engine: &UpdateEngine, rows: usize, n: usize) {
+    let tickets: Vec<_> = (0..n)
+        .map(|i| engine.submit_ticketed(UpdateRequest::add(i % rows, 1)).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+}
+
+/// Plain HTTP/1.1 GET against the metrics endpoint, no client crate.
+fn http_get_metrics(addr: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(stream, "GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status = String::new();
+    reader.read_line(&mut status).unwrap();
+    let mut headers = String::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        if line.trim_end().is_empty() {
+            break;
+        }
+        headers.push_str(&line);
+    }
+    let mut body = String::new();
+    reader.read_to_string(&mut body).unwrap();
+    (format!("{status}{headers}"), body)
+}
+
+#[test]
+fn metrics_endpoint_serves_every_documented_family_over_http() {
+    let engine = engine_with(64, 8, 2, 1);
+    drive(&engine, 64, 50);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let render = serve::metrics_render_engine(Arc::clone(&engine), None);
+    let server = MetricsServer::start(listener, render).unwrap();
+
+    let (head, body) = http_get_metrics(&addr);
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("text/plain"), "exposition content type: {head}");
+    assert!(body.trim_end().ends_with("# EOF"), "exposition must end with # EOF");
+
+    let scrape = expo::parse_text(&body).unwrap();
+    for family in DOCUMENTED_FAMILIES {
+        assert!(scrape.has_family(family), "missing documented family {family}");
+    }
+    assert!(
+        scrape.total("fast_requests_completed_total") >= 50.0,
+        "counters must reflect the traffic that actually ran"
+    );
+
+    // Second scrape around more traffic: every counter is monotone —
+    // the delta `fast stats --watch` turns into a rate.
+    drive(&engine, 64, 30);
+    let (_, body2) = http_get_metrics(&addr);
+    let scrape2 = expo::parse_text(&body2).unwrap();
+    let d = scrape2.total("fast_requests_completed_total")
+        - scrape.total("fast_requests_completed_total");
+    assert!(d >= 30.0, "scrape delta must cover the second burst, got {d}");
+
+    // Stop the endpoint BEFORE tearing down the engine: stop joins the
+    // accept thread and drops the render closure's engine Arc.
+    server.stop();
+    Arc::try_unwrap(engine)
+        .unwrap_or_else(|_| panic!("metrics server must have released its engine handle"))
+        .shutdown()
+        .unwrap();
+}
+
+#[test]
+fn rate_one_sampling_accounts_for_every_ticketed_commit() {
+    let engine = engine_with(64, 8, 2, 1);
+    drive(&engine, 64, 80);
+    // The drain thread ticks every 5ms; give it a couple of cycles to
+    // sweep the rings into the stage histograms.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let snap = engine.telemetry().snapshot();
+        let total = snap.stages.iter().find(|(n, _)| *n == "total").unwrap().1;
+        if total.count > 0 || std::time::Instant::now() > deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let snap = engine.telemetry().snapshot();
+    assert!(snap.enabled);
+    assert_eq!(snap.sample_rate, 1);
+    assert!(
+        snap.spans_sampled >= 80,
+        "rate 1 must stamp every admission, got {}",
+        snap.spans_sampled
+    );
+    let stage = |name: &str| {
+        snap.stages
+            .iter()
+            .find(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("stage {name} missing"))
+            .1
+    };
+    let total = stage("total");
+    assert!(total.count > 0, "sampled spans must land in the stage histograms");
+    // A volatile engine never reaches the WAL or fsync stages.
+    assert_eq!(stage("wal").count, 0);
+    assert_eq!(stage("fsync_lag").count, 0);
+    // Stage containment: the enqueue leg can never exceed the span.
+    assert!(
+        stage("enqueue").p99_ns <= total.max_ns,
+        "enqueue p99 {} must sit inside the span max {}",
+        stage("enqueue").p99_ns,
+        total.max_ns
+    );
+
+    Arc::try_unwrap(engine).unwrap_or_else(|_| panic!("sole owner")).shutdown().unwrap();
+}
+
+#[test]
+fn durable_engine_spans_cover_the_wal_and_fsync_stages() {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let dir = std::env::temp_dir()
+        .join(format!("fast-telemetry-wal-{}-{nanos}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut cfg = EngineConfig::sharded(64, 8, 2);
+    cfg.telemetry.sample_rate = 1;
+    let mut d = DurabilityConfig::new(dir.clone());
+    d.fsync = FsyncPolicy::Always;
+    cfg.durability = Some(d);
+    let engine = UpdateEngine::start(cfg, |p: &ShardPlan| {
+        Ok(Box::new(FastBackend::with_rows(p.rows, p.q)))
+    })
+    .unwrap();
+    drive(&engine, 64, 40);
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let snap = loop {
+        let snap = engine.telemetry().snapshot();
+        let wal = snap.stages.iter().find(|(n, _)| *n == "wal").unwrap().1;
+        if wal.count > 0 || std::time::Instant::now() > deadline {
+            break snap;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let stage = |name: &str| snap.stages.iter().find(|(n, _)| *n == name).unwrap().1;
+    assert!(stage("wal").count > 0, "durable spans must time the WAL stage");
+    assert!(
+        stage("fsync_lag").count > 0,
+        "fsync=always must surface the fsync-lag stage on sampled spans"
+    );
+
+    engine.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
